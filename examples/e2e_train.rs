@@ -1,0 +1,68 @@
+//! E10: the end-to-end driver — every layer composed on a real workload.
+//!
+//! Trains the FEMNIST CNN (L2 JAX model + L1 Pallas compress/vote kernels,
+//! AOT-lowered to HLO and executed through the PJRT C API) across 20
+//! simulated clients coordinated by the FediAC protocol over the
+//! programmable-switch + M/G/1 network simulation. A few hundred local
+//! SGD steps total (rounds × E × clients), loss curve and traffic logged;
+//! the run is recorded in EXPERIMENTS.md §E10.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example e2e_train -- [rounds] [dataset]
+//! ```
+
+use fediac::configx::{AlgorithmKind, BackendKind, DatasetKind, ExperimentConfig, Partition};
+use fediac::experiments::{run, RunOptions};
+use fediac::runtime::artifacts_available;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rounds: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(60);
+    let dataset = args
+        .get(1)
+        .and_then(|a| DatasetKind::parse(a))
+        .unwrap_or(DatasetKind::SynthFemnist);
+
+    anyhow::ensure!(
+        artifacts_available("artifacts"),
+        "no AOT bundle — run `make artifacts` first"
+    );
+
+    let partition =
+        if dataset == DatasetKind::SynthFemnist { Partition::Natural } else { Partition::Iid };
+    let mut cfg = ExperimentConfig::preset(dataset, partition);
+    cfg.algorithm = AlgorithmKind::FediAc;
+    cfg.backend = BackendKind::Pjrt;
+    cfg.num_clients = 20;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 200;
+
+    let total_steps = cfg.rounds * cfg.local_iters;
+    eprintln!(
+        "e2e: {} | PJRT backend | {} clients | {} rounds × E={} = {} local steps/client",
+        cfg.label(),
+        cfg.num_clients,
+        cfg.rounds,
+        cfg.local_iters,
+        total_steps
+    );
+
+    let t0 = std::time::Instant::now();
+    let rec = run(&cfg, &RunOptions { eval_every: 4, verbose: true, ..Default::default() })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("{}", rec.to_csv());
+    rec.write_csv(&format!("results/e2e_{}.csv", cfg.label()))?;
+    eprintln!(
+        "\ne2e summary: best_acc={:.4} | final train loss={:.4} | sim_time={:.1}s | \
+         traffic={:.2} MB | wall={:.1}s ({:.2} s/round)",
+        rec.best_accuracy().unwrap_or(0.0),
+        rec.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+        rec.final_time(),
+        rec.total_traffic().total_mb(),
+        wall,
+        wall / rec.records.len().max(1) as f64
+    );
+    Ok(())
+}

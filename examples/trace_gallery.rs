@@ -1,0 +1,48 @@
+//! Inspect the synthetic cellular traces that drive client upload rates
+//! (DESIGN.md §2 substitution 2): population statistics and one trace's
+//! regime structure.
+//!
+//! ```bash
+//! cargo run --release --example trace_gallery
+//! ```
+
+use fediac::net::trace::{client_rates, CellularTrace, MAX_RATE, MIN_RATE};
+use fediac::util::stats::percentile;
+use fediac::util::Rng;
+
+fn main() {
+    let n = 200;
+    let rates = client_rates(n, 7);
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = rates.iter().cloned().fold(0.0, f64::max);
+    println!("population of {n} clients (paper range {MIN_RATE}–{MAX_RATE} pkts/s):");
+    println!(
+        "  min={min:.0}  p25={:.0}  median={:.0}  p75={:.0}  max={max:.0} pkts/s",
+        percentile(&rates, 25.0),
+        percentile(&rates, 50.0),
+        percentile(&rates, 75.0)
+    );
+
+    // Histogram.
+    let buckets = 10;
+    let mut hist = vec![0usize; buckets];
+    for &r in &rates {
+        let b = (((r - MIN_RATE) / (MAX_RATE - MIN_RATE)) * buckets as f64) as usize;
+        hist[b.min(buckets - 1)] += 1;
+    }
+    println!("\nrate histogram:");
+    for (i, count) in hist.iter().enumerate() {
+        let lo = MIN_RATE + (MAX_RATE - MIN_RATE) * i as f64 / buckets as f64;
+        println!("  {:>5.0}+ pkts/s | {}", lo, "#".repeat(*count));
+    }
+
+    // One trace's time structure.
+    let mut rng = Rng::new(3);
+    let trace = CellularTrace::generate(&mut rng, 120.0, 15.0);
+    println!("\none subway ride (120 s, mean {:.0} pkts/s):", trace.mean_rate());
+    for t in (0..120).step_by(10) {
+        let r = trace.rate_at(t as f64);
+        let bar = ((r - MIN_RATE) / (MAX_RATE - MIN_RATE) * 50.0) as usize;
+        println!("  t={t:>3}s {:>5.0} pkts/s | {}", r, "█".repeat(bar.max(1)));
+    }
+}

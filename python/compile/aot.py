@@ -1,0 +1,148 @@
+"""AOT compiler: lower every L2/L1 entry point to HLO text artifacts.
+
+This is the single build-time python entry point (``make artifacts``).
+For each model variant it emits four artifacts the rust coordinator
+loads via ``HloModuleProto::from_text_file``:
+
+* ``train_<model>.hlo.txt``    — E local SGD iterations (Algorithm 1 l.3)
+* ``eval_<model>.hlo.txt``     — test-set batch evaluation
+* ``compress_<model>.hlo.txt`` — fused Pallas quantise+sparsify+residual
+* ``vote_<model>.hlo.txt``     — Pallas Gumbel vote scores
+* ``init_<model>.hlo.txt``     — deterministic w₁ initialisation
+
+plus ``manifest.json`` describing shapes/layout so rust can validate.
+
+HLO **text** (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and DESIGN.md §1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.compress_kernel import compress_with_seed
+from compile.kernels.vote_kernel import vote_scores_with_seed
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_model(spec: M.ModelSpec):
+    """Lower all four entry points for one model variant.
+
+    Returns {artifact_stem: hlo_text}.
+    """
+    d = M.param_count(spec)
+    e, b, eb = spec.local_iters, spec.train_batch, spec.eval_batch
+    ishape = spec.input_shape
+
+    train = jax.jit(M.make_train_step(spec))
+    eval_ = jax.jit(M.make_eval_step(spec))
+
+    def compress(updates, gia, f, seed):
+        return compress_with_seed(updates, gia, f, seed)
+
+    def vote(updates, seed):
+        return (vote_scores_with_seed(updates, seed),)
+
+    def init():
+        return (M.init_params(spec, seed=0),)
+
+    out = {}
+    out[f"init_{spec.name}"] = to_hlo_text(jax.jit(init).lower())
+    out[f"train_{spec.name}"] = to_hlo_text(
+        train.lower(_f32(d), _f32(e, b, *ishape), _i32(e, b), _f32())
+    )
+    out[f"eval_{spec.name}"] = to_hlo_text(
+        eval_.lower(_f32(d), _f32(eb, *ishape), _i32(eb))
+    )
+    out[f"compress_{spec.name}"] = to_hlo_text(
+        jax.jit(compress).lower(_f32(d), _f32(d), _f32(), _i32())
+    )
+    out[f"vote_{spec.name}"] = to_hlo_text(jax.jit(vote).lower(_f32(d), _i32()))
+    return out
+
+
+def manifest_entry(spec: M.ModelSpec) -> dict:
+    return {
+        "name": spec.name,
+        "d": M.param_count(spec),
+        "input_shape": list(spec.input_shape),
+        "num_classes": spec.num_classes,
+        "train_batch": spec.train_batch,
+        "eval_batch": spec.eval_batch,
+        "local_iters": spec.local_iters,
+        "layout": [
+            {"tensor": name, "shape": list(shape)}
+            for name, shape in M.param_shapes(spec)
+        ],
+        "init_params_seed": 0,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny,femnist,cifar10,cifar100",
+        help="comma-separated subset of: " + ",".join(M.MODEL_SPECS),
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        spec = M.MODEL_SPECS[name]
+        print(f"[aot] lowering {name} (d={M.param_count(spec)}) ...", flush=True)
+        artifacts = lower_model(spec)
+        entry = manifest_entry(spec)
+        entry["artifacts"] = {}
+        for stem, text in artifacts.items():
+            path = os.path.join(args.out_dir, f"{stem}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            entry["artifacts"][stem.split("_")[0]] = f"{stem}.hlo.txt"
+            print(
+                f"[aot]   {stem}.hlo.txt  {len(text)} chars  "
+                f"sha1={hashlib.sha1(text.encode()).hexdigest()[:12]}",
+                flush=True,
+            )
+        manifest["models"][name] = entry
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"[aot] wrote {os.path.join(args.out_dir, 'manifest.json')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

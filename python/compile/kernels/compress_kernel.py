@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: fused stochastic-quantise + GIA-sparsify + residual.
+
+This is the client-side compression hot spot of FediAC (§IV step 3 /
+Algorithm 1 lines 8–9). One streaming sweep over the d-length update
+vector performs:
+
+    amplified = f · U
+    θ(amplified)  — unbiased stochastic rounding, Eq. (1)
+    Π(·)          — multiply by the 0/1 GIA mask
+    e             — residual (f·U − Π(Θ(f·U)))/f
+
+fused into a single HBM→VMEM→HBM pass. On a real TPU the BlockSpec
+below tiles the vector into VMEM-resident blocks of ``BLOCK`` lanes;
+each block reads 3 f32 inputs and writes 1 i32 + 1 f32 output, so the
+kernel is memory-bandwidth-bound (no MXU work) and the roofline is a
+single round trip over 5·4·d bytes. ``interpret=True`` is mandatory on
+the CPU PJRT backend (real lowering emits a Mosaic custom-call the CPU
+plugin cannot execute) — see DESIGN.md §Hardware-Adaptation.
+
+The uniform rounding noise is drawn in L2 (threefry) and passed in, so
+the kernel is a pure function and bit-identical to ``ref.py`` given the
+same noise — that identity is what ``python/tests/test_kernel.py``
+asserts over hypothesis-swept shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4 KiB of f32 lanes per block: small enough that (3 in + 2 out) blocks fit
+# comfortably in a ~16 MiB VMEM budget even with double buffering, large
+# enough to amortise grid overhead. d is padded to a multiple of this.
+BLOCK = 1024
+
+
+def _compress_block_kernel(u_ref, gia_ref, noise_ref, f_ref, q_ref, res_ref):
+    """Per-block body: fused amplify → stochastic round → mask → residual."""
+    f = f_ref[0]
+    amplified = u_ref[...] * f
+    low = jnp.floor(amplified)
+    frac = amplified - low
+    rounded = low + (noise_ref[...] < frac).astype(amplified.dtype)
+    q = rounded * gia_ref[...]
+    q_ref[...] = q.astype(jnp.int32)
+    res_ref[...] = (amplified - q) / f
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def compress_pallas(updates, gia, f, noise, *, block=BLOCK):
+    """Fused Π(Θ(f·U)) + residual via a tiled Pallas kernel.
+
+    Args:
+      updates: f32[d] local updates (with residual folded in by the caller).
+      gia: f32[d] consensus mask of 0.0/1.0 from the PS.
+      f: f32 scalar amplification factor.
+      noise: f32[d] uniform(0,1) stochastic-rounding noise.
+      block: VMEM tile width in lanes.
+
+    Returns:
+      (q i32[d], residual f32[d]).
+    """
+    d = updates.shape[0]
+    padded = pl.cdiv(d, block) * block
+    pad = padded - d
+    u_p = jnp.pad(updates, (0, pad))
+    gia_p = jnp.pad(gia, (0, pad))
+    # Pad noise with 1.0 so padded lanes never round up (frac < 1 always).
+    noise_p = jnp.pad(noise, (0, pad), constant_values=1.0)
+    f_arr = jnp.reshape(f.astype(jnp.float32) if hasattr(f, "astype") else jnp.float32(f), (1,))
+
+    grid = padded // block
+    q, res = pl.pallas_call(
+        _compress_block_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # The scalar factor is broadcast to every block.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=True,
+    )(u_p, gia_p, noise_p, f_arr)
+    return q[:d], res[:d]
+
+
+def compress_with_seed(updates, gia, f, seed):
+    """Seed-driven wrapper used by the AOT entry point.
+
+    Draws the uniform rounding noise from a threefry key derived from
+    ``seed`` (i32 scalar) and invokes the fused kernel. This is the exact
+    computation the rust coordinator executes per client per round via the
+    ``compress_<model>.hlo.txt`` artifact.
+    """
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32) if hasattr(seed, "astype") else seed)
+    noise = jax.random.uniform(key, updates.shape, dtype=jnp.float32)
+    return compress_pallas(updates, gia, f, noise)

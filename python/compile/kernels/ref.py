@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+These implementations are deliberately written in the most direct jnp
+style so that they can be audited against the paper's equations:
+
+* :func:`ref_quantize_sparsify` — Eq. (1) unbiased stochastic integer
+  quantisation composed with the GIA sparsification Π, plus the
+  residual-error update e = (fU − Π(Θ(fU)))/f from Algorithm 1 line 9.
+* :func:`ref_vote_scores` — the Gumbel perturbation whose top-k equals
+  sampling k elements without replacement with probability proportional
+  to the update magnitude (the paper's "odds proportional to its
+  magnitude" vote, §IV step 1).
+
+The Pallas kernels in ``compress_kernel.py`` / ``vote_kernel.py`` must
+match these bit-for-bit given the same pre-drawn noise.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Small epsilon so that log|u| is finite for exactly-zero updates. A zero
+# update gets a score of log(EPS) + gumbel — astronomically unlikely to be
+# voted, matching the paper (zero-magnitude updates carry no information).
+VOTE_EPS = 1e-30
+
+
+def ref_quantize_sparsify(updates, gia, f, noise):
+    """Reference Π(Θ(f·U)) and residual.
+
+    Args:
+      updates: f32[d] local model updates U (residual already folded in).
+      gia: f32[d] global index array of 0.0/1.0 (the consensus mask).
+      f: scalar amplification factor f = (2^{b-1} − N)/(N·m).
+      noise: f32[d] uniform(0,1) noise that drives the stochastic rounding.
+
+    Returns:
+      (q, residual): q = i32[d] quantised+sparsified integers,
+      residual = f32[d] with e = (f·U − Π(Θ(f·U)))/f.
+    """
+    amplified = updates * f
+    low = jnp.floor(amplified)
+    frac = amplified - low
+    # Round up with probability equal to the fractional part: E[θ(x)] = x.
+    rounded = low + (noise < frac).astype(amplified.dtype)
+    q = (rounded * gia).astype(jnp.int32)
+    residual = (amplified - q.astype(amplified.dtype)) / f
+    return q, residual
+
+
+def ref_vote_scores(updates, noise):
+    """Reference Gumbel vote scores.
+
+    top_k(scores) realises Plackett–Luce sampling of k indices without
+    replacement with probability ∝ |U_l| (Gumbel-top-k identity).
+
+    Args:
+      updates: f32[d] local model updates.
+      noise: f32[d] uniform(0,1) noise.
+
+    Returns:
+      f32[d] perturbed log-magnitude scores.
+    """
+    gumbel = -jnp.log(-jnp.log(noise))
+    return jnp.log(jnp.abs(updates) + VOTE_EPS) + gumbel
+
+
+def ref_quantize_dense(updates, f, noise):
+    """Dense unbiased quantisation used by the SwitchML baseline model.
+
+    Identical to :func:`ref_quantize_sparsify` with an all-ones mask.
+    """
+    ones = jnp.ones_like(updates)
+    return ref_quantize_sparsify(updates, ones, f, noise)

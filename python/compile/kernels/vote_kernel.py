@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: Gumbel vote-score computation (§IV step 1).
+
+FediAC clients "vote k elements using odds proportional to their
+magnitude" (Algorithm 1 line 5). Sampling k indices without replacement
+with probability ∝ |U_l| is exactly the Gumbel-top-k construction:
+
+    score_l = log|U_l| + Gumbel_l,   vote = top-k(score)
+
+This kernel computes the perturbed scores in one streaming pass; the
+coordinator (rust L3) performs the top-k selection so that k stays a
+runtime parameter instead of being baked into the artifact. Like the
+compress kernel this is elementwise and bandwidth-bound: 2 f32 reads +
+1 f32 write per lane, tiled into VMEM blocks via BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import VOTE_EPS
+
+BLOCK = 1024
+
+
+def _vote_block_kernel(u_ref, noise_ref, score_ref):
+    gumbel = -jnp.log(-jnp.log(noise_ref[...]))
+    score_ref[...] = jnp.log(jnp.abs(u_ref[...]) + VOTE_EPS) + gumbel
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vote_scores_pallas(updates, noise, *, block=BLOCK):
+    """Perturbed log-magnitude scores; top-k of the result is the vote.
+
+    Args:
+      updates: f32[d] local updates.
+      noise: f32[d] uniform(0,1) noise (open interval enforced by caller).
+      block: VMEM tile width in lanes.
+
+    Returns:
+      f32[d] scores.
+    """
+    d = updates.shape[0]
+    padded = pl.cdiv(d, block) * block
+    pad = padded - d
+    u_p = jnp.pad(updates, (0, pad))
+    # 0.5 keeps the padded-lane double log finite; the lanes are sliced off.
+    noise_p = jnp.pad(noise, (0, pad), constant_values=0.5)
+    grid = padded // block
+    scores = pl.pallas_call(
+        _vote_block_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=True,
+    )(u_p, noise_p)
+    return scores[:d]
+
+
+def vote_scores_with_seed(updates, seed):
+    """Seed-driven wrapper for the AOT ``vote_<model>`` artifact."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32) if hasattr(seed, "astype") else seed)
+    # Clamp into the open interval so -log(-log(u)) is finite.
+    noise = jax.random.uniform(
+        key, updates.shape, dtype=jnp.float32, minval=1e-7, maxval=1.0 - 1e-7
+    )
+    return vote_scores_pallas(updates, noise)

@@ -1,0 +1,249 @@
+"""L2: JAX model definitions and FL training/eval steps (build-time only).
+
+Every computation the rust coordinator executes per round is defined
+here and AOT-lowered by ``aot.py`` to HLO text. Parameters travel as a
+single flat ``f32[d]`` vector so the rust side can treat the model as an
+opaque dense state vector — exactly what the FediAC compression pipeline
+operates on (the paper's U_t^i is the flat update vector).
+
+Models (see DESIGN.md §2 for the CIFAR/FEMNIST substitutions):
+
+* ``tiny``     — 2-layer MLP on 32 synthetic features, 10 classes.
+                 Used by fast tests and the quickstart example.
+* ``femnist``  — the paper's FEMNIST CNN: 2×(conv → relu → maxpool)
+                 followed by 3 fully-connected layers, 28×28×1 input,
+                 62 classes (§V-A1). BatchNorm is omitted (stateless
+                 flat-parameter contract); documented in DESIGN.md.
+* ``cifar10``  — CNN stand-in for ResNet-18 at reduced resolution
+                 (16×16×3, 10 classes).
+* ``cifar100`` — same trunk, 100-class head.
+
+The local-training step runs the paper's E batch-SGD iterations inside a
+``lax.fori_loop`` so one PJRT execution performs a full local round
+(Algorithm 1 line 3) with no host round-trips.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant used across the AOT bundle."""
+
+    name: str
+    input_shape: tuple  # per-sample shape, e.g. (28, 28, 1) or (32,)
+    num_classes: int
+    train_batch: int
+    eval_batch: int
+    local_iters: int  # E in the paper
+    conv_channels: tuple = ()  # empty → MLP
+    fc_widths: tuple = (64,)
+
+    @property
+    def is_conv(self) -> bool:
+        return len(self.conv_channels) > 0
+
+
+# Registry of the model variants shipped in the artifact bundle. E=5
+# matches §V-A2; batch sizes are scaled to the single-core CPU testbed.
+MODEL_SPECS = {
+    "tiny": ModelSpec(
+        name="tiny",
+        input_shape=(32,),
+        num_classes=10,
+        train_batch=32,
+        eval_batch=128,
+        local_iters=5,
+        fc_widths=(64,),
+    ),
+    "femnist": ModelSpec(
+        name="femnist",
+        input_shape=(28, 28, 1),
+        num_classes=62,
+        train_batch=16,
+        eval_batch=64,
+        local_iters=5,
+        conv_channels=(8, 16),
+        fc_widths=(128, 64),
+    ),
+    "cifar10": ModelSpec(
+        name="cifar10",
+        input_shape=(16, 16, 3),
+        num_classes=10,
+        train_batch=16,
+        eval_batch=64,
+        local_iters=5,
+        conv_channels=(16, 32),
+        fc_widths=(256, 128),
+    ),
+    "cifar100": ModelSpec(
+        name="cifar100",
+        input_shape=(16, 16, 3),
+        num_classes=100,
+        train_batch=16,
+        eval_batch=64,
+        local_iters=5,
+        conv_channels=(16, 32),
+        fc_widths=(256, 128),
+    ),
+}
+
+
+def param_shapes(spec: ModelSpec):
+    """Ordered list of (name, shape) pairs defining the flat layout.
+
+    The rust side reads this layout from manifest.json; the flat vector is
+    the concatenation of each tensor's row-major elements in this order.
+    """
+    shapes = []
+    if spec.is_conv:
+        h, w, c_in = spec.input_shape
+        c_prev = c_in
+        for idx, c_out in enumerate(spec.conv_channels):
+            shapes.append((f"conv{idx}_w", (3, 3, c_prev, c_out)))
+            shapes.append((f"conv{idx}_b", (c_out,)))
+            c_prev = c_out
+            h, w = h // 2, w // 2  # each conv block ends in 2×2 maxpool
+        feat = h * w * c_prev
+    else:
+        (feat,) = spec.input_shape
+    widths = list(spec.fc_widths) + [spec.num_classes]
+    prev = feat
+    for idx, width in enumerate(widths):
+        shapes.append((f"fc{idx}_w", (prev, width)))
+        shapes.append((f"fc{idx}_b", (width,)))
+        prev = width
+    return shapes
+
+
+def param_count(spec: ModelSpec) -> int:
+    """Total flat dimension d of the model."""
+    total = 0
+    for _, shape in param_shapes(spec):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def unpack_params(spec: ModelSpec, flat):
+    """Split the flat f32[d] vector into the per-tensor pytree."""
+    tensors = {}
+    offset = 0
+    for name, shape in param_shapes(spec):
+        n = 1
+        for s in shape:
+            n *= s
+        tensors[name] = lax.dynamic_slice(flat, (offset,), (n,)).reshape(shape)
+        offset += n
+    return tensors
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    """He-style initialisation, returned as the flat f32[d] vector.
+
+    The classification head (last fc layer) is zero-initialised so the
+    initial logits are exactly 0 and the loss starts at ln C with healthy
+    gradients — with random-head init the conv stack's maxpool-inflated
+    activations saturate the softmax and SGD stalls at chance.
+    """
+    key = jax.random.PRNGKey(seed)
+    head = f"fc{len(spec.fc_widths)}_w"
+    parts = []
+    for name, shape in param_shapes(spec):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b") or name == head:
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            scale = jnp.sqrt(2.0 / fan_in)
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * scale).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+def apply_model(spec: ModelSpec, flat, images):
+    """Forward pass: images f32[B, *input_shape] → logits f32[B, C]."""
+    p = unpack_params(spec, flat)
+    x = images
+    if spec.is_conv:
+        for idx, _ in enumerate(spec.conv_channels):
+            x = lax.conv_general_dilated(
+                x,
+                p[f"conv{idx}_w"],
+                window_strides=(1, 1),
+                padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            x = x + p[f"conv{idx}_b"]
+            x = jax.nn.relu(x)
+            x = lax.reduce_window(
+                x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        x = x.reshape(x.shape[0], -1)
+    n_fc = len(spec.fc_widths) + 1
+    for idx in range(n_fc):
+        x = x @ p[f"fc{idx}_w"] + p[f"fc{idx}_b"]
+        if idx < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy over the batch."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def loss_fn(spec: ModelSpec, flat, images, labels):
+    return cross_entropy(apply_model(spec, flat, images), labels)
+
+
+def make_train_step(spec: ModelSpec):
+    """Build the AOT ``train`` entry: E local SGD iterations in one call.
+
+    Signature: (params f32[d], images f32[E,B,…], labels i32[E,B], lr f32[])
+    → (new params f32[d], mean local loss f32[]).
+    """
+
+    grad_fn = jax.value_and_grad(functools.partial(loss_fn, spec))
+
+    def train_step(params, images, labels, lr):
+        def body(j, state):
+            p, loss_sum = state
+            loss, grads = grad_fn(p, images[j], labels[j])
+            return (p - lr * grads, loss_sum + loss)
+
+        p_end, loss_sum = lax.fori_loop(
+            0, spec.local_iters, body, (params, jnp.float32(0.0))
+        )
+        return (p_end, loss_sum / spec.local_iters)
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec):
+    """Build the AOT ``eval`` entry.
+
+    Signature: (params f32[d], images f32[B,…], labels i32[B])
+    → (correct i32[], mean loss f32[]).
+    """
+
+    def eval_step(params, images, labels):
+        logits = apply_model(spec, params, images)
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+        return (correct, cross_entropy(logits, labels))
+
+    return eval_step

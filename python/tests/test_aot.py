@@ -1,0 +1,64 @@
+"""AOT bundle sanity: lowering emits parseable HLO text + a correct manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_tiny_lowering_emits_hlo_text():
+    artifacts = aot.lower_model(M.MODEL_SPECS["tiny"])
+    assert set(artifacts) == {
+        "train_tiny",
+        "eval_tiny",
+        "compress_tiny",
+        "vote_tiny",
+        "init_tiny",
+    }
+    for stem, text in artifacts.items():
+        assert text.startswith("HloModule"), f"{stem} does not look like HLO text"
+        assert "ENTRY" in text
+        # jax ≥ 0.5 protos are rejected by xla_extension 0.5.1; text must be
+        # the interchange — make sure nobody switched to .serialize().
+        assert isinstance(text, str)
+
+
+def test_manifest_entry_layout():
+    spec = M.MODEL_SPECS["femnist"]
+    entry = aot.manifest_entry(spec)
+    assert entry["d"] == M.param_count(spec)
+    total = 0
+    for item in entry["layout"]:
+        n = 1
+        for s in item["shape"]:
+            n *= s
+        total += n
+    assert total == entry["d"]
+    assert entry["num_classes"] == 62
+    assert entry["local_iters"] == 5
+
+
+def test_artifact_dir_written(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "artifacts"
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--models", "tiny"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert "tiny" in manifest["models"]
+    for stem in ["train_tiny", "eval_tiny", "compress_tiny", "vote_tiny", "init_tiny"]:
+        p = out / f"{stem}.hlo.txt"
+        assert p.exists() and p.stat().st_size > 100

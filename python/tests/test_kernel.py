@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle in ref.py.
+
+This is the core correctness signal for the compression hot path:
+hypothesis sweeps shapes (block-boundary adjacent), factors and seeds,
+and asserts the fused Pallas kernel is bit-identical to the reference
+given the same noise, plus the paper-level invariants:
+
+* unbiasedness  E[θ(fU)] = fU                       (Eq. 1)
+* bounded error E[θ(x) − x]² − x² ≤ 0.25            (Appendix A, Eq. 8)
+* residual identity f·U = Π(Θ(f·U)) + f·e           (Algorithm 1 l.9)
+* Gumbel vote frequencies ∝ |U|                     (§IV step 1)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.compress_kernel import compress_pallas, compress_with_seed
+from compile.kernels.vote_kernel import vote_scores_pallas, vote_scores_with_seed
+
+
+def _updates(d, seed, scale=0.05):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, d).astype(np.float32))
+
+
+def _mask(d, seed, p=0.3):
+    rng = np.random.default_rng(seed + 1)
+    return jnp.asarray((rng.random(d) < p).astype(np.float32))
+
+
+def _noise(d, seed):
+    rng = np.random.default_rng(seed + 2)
+    return jnp.asarray(rng.random(d).astype(np.float32))
+
+
+# Shapes straddling the pallas BLOCK=1024 boundary plus small odd sizes.
+dims = st.sampled_from([1, 3, 17, 256, 1023, 1024, 1025, 3000, 4096])
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=dims, seed=st.integers(0, 2**16), f=st.floats(8.0, 4096.0))
+def test_compress_matches_ref(d, seed, f):
+    """Fused Pallas kernel ≡ ref.py bit-for-bit given identical noise."""
+    u, gia, noise = _updates(d, seed), _mask(d, seed), _noise(d, seed)
+    f = jnp.float32(f)
+    q_k, r_k = compress_pallas(u, gia, f, noise)
+    q_r, r_r = ref.ref_quantize_sparsify(u, gia, f, noise)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r), rtol=0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=dims, seed=st.integers(0, 2**16))
+def test_vote_matches_ref(d, seed):
+    u, noise = _updates(d, seed), _noise(d, seed)
+    noise = jnp.clip(noise, 1e-7, 1.0 - 1e-7)
+    s_k = vote_scores_pallas(u, noise)
+    s_r = ref.ref_vote_scores(u, noise)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([64, 1000, 1025]),
+    seed=st.integers(0, 2**16),
+    block=st.sampled_from([16, 64, 1024]),
+)
+def test_compress_block_size_invariance(d, seed, block):
+    """Tiling must not change the numbers: any block size gives the same q."""
+    u, gia, noise = _updates(d, seed), _mask(d, seed), _noise(d, seed)
+    f = jnp.float32(512.0)
+    q_a, r_a = compress_pallas(u, gia, f, noise, block=block)
+    q_b, r_b = compress_pallas(u, gia, f, noise, block=1024)
+    np.testing.assert_array_equal(np.asarray(q_a), np.asarray(q_b))
+    np.testing.assert_allclose(np.asarray(r_a), np.asarray(r_b))
+
+
+def test_quantization_unbiased_monte_carlo():
+    """Across many seeds, mean of θ(fU) approaches fU (Eq. 1 unbiasedness)."""
+    d = 256
+    u = _updates(d, 7)
+    gia = jnp.ones(d, jnp.float32)
+    f = jnp.float32(333.0)
+    total = np.zeros(d, np.float64)
+    trials = 400
+    for s in range(trials):
+        q, _ = compress_with_seed(u, gia, f, jnp.int32(s))
+        total += np.asarray(q, np.float64)
+    mean_q = total / trials
+    target = np.asarray(u) * float(f)
+    # Std of a single stochastic round is ≤ 0.5 ⇒ CI ≈ 4·0.5/sqrt(trials).
+    np.testing.assert_allclose(mean_q, target, atol=4 * 0.5 / np.sqrt(trials))
+
+
+def test_residual_identity_exact():
+    """f·U = q + f·e wherever the mask is 1; e = U where the mask is 0."""
+    d = 2048
+    u, gia, noise = _updates(d, 11), _mask(d, 11, p=0.5), _noise(d, 11)
+    f = jnp.float32(1024.0)
+    q, res = compress_pallas(u, gia, f, noise)
+    q = np.asarray(q, np.float64)
+    res = np.asarray(res, np.float64)
+    un = np.asarray(u, np.float64)
+    np.testing.assert_allclose(q + float(f) * res, float(f) * un, rtol=1e-5, atol=1e-3)
+    off = np.asarray(gia) == 0.0
+    assert np.all(q[off] == 0.0)
+    np.testing.assert_allclose(res[off], un[off], rtol=1e-6, atol=1e-8)
+
+
+def test_quantization_error_bound():
+    """Per-element squared rounding error never exceeds 0.25 + x² (Eq. 8)."""
+    d = 4096
+    u, noise = _updates(d, 13, scale=0.1), _noise(d, 13)
+    gia = jnp.ones(d, jnp.float32)
+    f = jnp.float32(777.0)
+    q, _ = compress_pallas(u, gia, f, noise)
+    err = np.asarray(q, np.float64) - np.asarray(u, np.float64) * float(f)
+    assert np.max(np.abs(err)) <= 1.0 + 1e-6  # stochastic round moves < 1 ulp-int
+
+
+def test_masked_lanes_transmit_nothing():
+    """Π must zero every unvoted dimension regardless of magnitude."""
+    d = 512
+    u = jnp.asarray(np.full(d, 123.456, np.float32))
+    gia = jnp.zeros(d, jnp.float32)
+    q, res = compress_with_seed(u, gia, jnp.float32(100.0), jnp.int32(3))
+    assert np.all(np.asarray(q) == 0)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(u), rtol=1e-6)
+
+
+def test_vote_frequencies_track_magnitude():
+    """Top-k of the Gumbel scores selects large-|U| dims far more often."""
+    d = 200
+    k = 20
+    mags = np.ones(d, np.float32) * 0.001
+    mags[:10] = 10.0  # ten dominant dimensions
+    u = jnp.asarray(mags)
+    hits = np.zeros(d)
+    trials = 200
+    for s in range(trials):
+        scores = vote_scores_with_seed(u, jnp.int32(s))
+        top = np.argsort(-np.asarray(scores))[:k]
+        hits[top] += 1
+    # The dominant dims should be voted essentially always, the rest rarely.
+    assert hits[:10].min() >= 0.95 * trials
+    assert hits[10:].mean() <= 0.2 * trials
+
+
+def test_vote_deterministic_per_seed():
+    u = _updates(1024, 21)
+    a = vote_scores_with_seed(u, jnp.int32(5))
+    b = vote_scores_with_seed(u, jnp.int32(5))
+    c = vote_scores_with_seed(u, jnp.int32(6))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_compress_seed_determinism():
+    d = 1500
+    u, gia = _updates(d, 31), _mask(d, 31)
+    f = jnp.float32(256.0)
+    q1, r1 = compress_with_seed(u, gia, f, jnp.int32(9))
+    q2, r2 = compress_with_seed(u, gia, f, jnp.int32(9))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))

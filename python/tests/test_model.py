@@ -1,0 +1,123 @@
+"""L2 correctness: model shapes, flat-parameter layout, learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_SPECS))
+def test_param_count_matches_layout(name):
+    spec = M.MODEL_SPECS[name]
+    total = sum(int(np.prod(s)) for _, s in M.param_shapes(spec))
+    assert total == M.param_count(spec)
+    flat = M.init_params(spec)
+    assert flat.shape == (total,)
+    assert flat.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_SPECS))
+def test_forward_shapes(name):
+    spec = M.MODEL_SPECS[name]
+    flat = M.init_params(spec)
+    b = 4
+    images = jnp.zeros((b, *spec.input_shape), jnp.float32)
+    logits = M.apply_model(spec, flat, images)
+    assert logits.shape == (b, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def _synthetic_batch(spec, rng, batch):
+    """Linearly separable class-conditional Gaussian batch."""
+    labels = rng.integers(0, spec.num_classes, batch)
+    feat_shape = spec.input_shape
+    templates = np.stack(
+        [
+            np.random.default_rng(100 + c).normal(0, 1, feat_shape)
+            for c in range(spec.num_classes)
+        ]
+    )
+    images = templates[labels] + rng.normal(0, 0.3, (batch, *feat_shape))
+    return (
+        jnp.asarray(images.astype(np.float32)),
+        jnp.asarray(labels.astype(np.int32)),
+    )
+
+
+@pytest.mark.parametrize("name", ["tiny", "femnist"])
+def test_train_step_reduces_loss(name):
+    spec = M.MODEL_SPECS[name]
+    train = jax.jit(M.make_train_step(spec))
+    rng = np.random.default_rng(0)
+    flat = M.init_params(spec)
+    e, b = spec.local_iters, spec.train_batch
+    losses = []
+    for step in range(6):
+        imgs, labels = _synthetic_batch(spec, rng, e * b)
+        imgs = imgs.reshape(e, b, *spec.input_shape)
+        labels = labels.reshape(e, b)
+        flat, loss = train(flat, imgs, labels, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], f"no learning signal: {losses}"
+
+
+def test_eval_step_counts_correct():
+    spec = M.MODEL_SPECS["tiny"]
+    eval_ = jax.jit(M.make_eval_step(spec))
+    flat = M.init_params(spec)
+    rng = np.random.default_rng(1)
+    imgs, labels = _synthetic_batch(spec, rng, spec.eval_batch)
+    correct, loss = eval_(flat, imgs, labels)
+    assert 0 <= int(correct) <= spec.eval_batch
+    assert np.isfinite(float(loss))
+
+
+def test_eval_perfect_on_trained_tiny():
+    """After enough steps the tiny MLP must fit an easy synthetic task."""
+    spec = M.MODEL_SPECS["tiny"]
+    train = jax.jit(M.make_train_step(spec))
+    eval_ = jax.jit(M.make_eval_step(spec))
+    rng = np.random.default_rng(2)
+    flat = M.init_params(spec)
+    e, b = spec.local_iters, spec.train_batch
+    for _ in range(30):
+        imgs, labels = _synthetic_batch(spec, rng, e * b)
+        flat, _ = train(
+            flat,
+            imgs.reshape(e, b, *spec.input_shape),
+            labels.reshape(e, b),
+            jnp.float32(0.05),
+        )
+    imgs, labels = _synthetic_batch(spec, rng, spec.eval_batch)
+    correct, _ = eval_(flat, imgs, labels)
+    assert int(correct) >= 0.9 * spec.eval_batch
+
+
+def test_unpack_roundtrip():
+    spec = M.MODEL_SPECS["femnist"]
+    flat = M.init_params(spec, seed=3)
+    tensors = M.unpack_params(spec, flat)
+    rebuilt = jnp.concatenate([tensors[n].reshape(-1) for n, _ in M.param_shapes(spec)])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+
+def test_update_vector_is_flat_difference():
+    """U = w_0 − w_E: the quantity FediAC compresses is well-defined."""
+    spec = M.MODEL_SPECS["tiny"]
+    train = jax.jit(M.make_train_step(spec))
+    rng = np.random.default_rng(4)
+    flat0 = M.init_params(spec)
+    e, b = spec.local_iters, spec.train_batch
+    imgs, labels = _synthetic_batch(spec, rng, e * b)
+    flat1, _ = train(
+        flat0,
+        imgs.reshape(e, b, *spec.input_shape),
+        labels.reshape(e, b),
+        jnp.float32(0.05),
+    )
+    u = np.asarray(flat0) - np.asarray(flat1)
+    assert u.shape == (M.param_count(spec),)
+    assert np.abs(u).max() > 0.0

@@ -1,0 +1,97 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * consensus threshold a (a=1 ⇒ union/no-consensus … a=N ⇒ intersection)
+//! * quantisation bits b (vs the Corollary-1 auto choice)
+//! * phase-1 RLE on/off (§IV-D)
+//! * uplink loss rate (end-host retransmission cost)
+//!
+//! Each row reports final accuracy, total traffic and simulated time at
+//! a fixed round budget so the knobs are directly comparable.
+
+mod harness;
+
+use fediac::configx::{AlgorithmKind, DatasetKind, ExperimentConfig, Partition};
+use fediac::experiments::{run, RunOptions, Scale};
+use harness::time_once;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(DatasetKind::SynthCifar10, Partition::Iid);
+    let scale = Scale {
+        rounds: std::env::var("FEDIAC_BENCH_ROUNDS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(14),
+        num_clients: 10,
+        samples_per_client: 80,
+        ..Scale::quick()
+    };
+    scale.apply(&mut cfg);
+    cfg.algorithm = AlgorithmKind::FediAc;
+    cfg
+}
+
+fn report(label: &str, cfg: &ExperimentConfig) {
+    let rec = time_once(label, || run(cfg, &RunOptions::default()).unwrap());
+    println!(
+        "  {:<28} acc={:.4} traffic={:>8.2} MB sim_time={:>8.2} s (vote share {:.1}%)",
+        label,
+        rec.best_accuracy().unwrap_or(0.0),
+        rec.total_traffic().total_mb(),
+        rec.final_time(),
+        100.0 * (rec.total_traffic().vote_up_bytes + rec.total_traffic().vote_down_bytes)
+            as f64
+            / rec.total_traffic().total().max(1) as f64,
+    );
+}
+
+fn main() {
+    println!("# bench_ablation — FediAC design-choice ablations\n");
+
+    println!("## consensus threshold a (N=10; a=1 ⇒ no consensus, union)");
+    for a in [1usize, 2, 3, 5, 8] {
+        let mut cfg = base_cfg();
+        cfg.fediac.threshold_a = a;
+        report(&format!("a={a}"), &cfg);
+    }
+
+    println!("\n## quantisation bits b (auto = Corollary 1)");
+    {
+        let cfg = base_cfg();
+        report("b=auto(cor.1)", &cfg);
+    }
+    for b in [8usize, 10, 12, 16] {
+        let mut cfg = base_cfg();
+        cfg.fediac.bits_b = Some(b);
+        report(&format!("b={b}"), &cfg);
+    }
+
+    println!("\n## phase-1 run-length encoding (§IV-D)");
+    for (rle, label) in [(false, "rle=off"), (true, "rle=on")] {
+        let mut cfg = base_cfg();
+        cfg.fediac.rle_phase1 = rle;
+        cfg.fediac.k_frac = 0.02; // sparse votes where RLE pays off
+        report(label, &cfg);
+    }
+
+    println!("\n## uplink loss rate (retransmission cost)");
+    for loss in [0.0, 0.01, 0.05, 0.2] {
+        let mut cfg = base_cfg();
+        cfg.loss_rate = loss;
+        report(&format!("loss={loss}"), &cfg);
+    }
+
+    println!("\n## multiple collaborative PSes (§VI future work; low-perf PS)");
+    for s in [1usize, 2, 4] {
+        let mut cfg = base_cfg();
+        cfg.ps = fediac::configx::PsProfile::low();
+        cfg.num_switches = s;
+        report(&format!("switches={s}"), &cfg);
+    }
+
+    println!("\n## vote budget k (fraction of d)");
+    for k_frac in [0.01, 0.05, 0.15] {
+        let mut cfg = base_cfg();
+        cfg.fediac.k_frac = k_frac;
+        report(&format!("k={:.0}%d", k_frac * 100.0), &cfg);
+    }
+}

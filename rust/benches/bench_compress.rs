@@ -1,0 +1,72 @@
+//! E8 + client-side hot-path micro-benchmarks: quantise/sparsify, vote
+//! scoring, top-k selection and the §IV-D phase-1 RLE study.
+
+mod harness;
+
+use fediac::compress::{self, rle};
+use fediac::util::{BitVec, Rng};
+use harness::{bench, black_box};
+
+fn main() {
+    println!("# bench_compress — client compression hot path + E8 RLE study");
+    let d = 200_000;
+    let mut rng = Rng::new(3);
+    let updates: Vec<f32> = (0..d).map(|_| (rng.gaussian() * 0.05) as f32).collect();
+    let mask: Vec<f32> = (0..d).map(|i| if i % 7 == 0 { 1.0 } else { 0.0 }).collect();
+    let f = compress::scale_factor(12, 20, compress::max_abs(&updates));
+
+    let mut qrng = Rng::new(4);
+    let s = bench("quantize_sparsify (d=200k)", 5, 60, || {
+        black_box(compress::quantize_sparsify(&updates, &mask, f, &mut qrng));
+    });
+    s.print_throughput(d as f64, "elems");
+
+    let mut vrng = Rng::new(5);
+    let s = bench("vote_scores_native (d=200k)", 5, 60, || {
+        black_box(compress::vote_scores_native(&updates, &mut vrng));
+    });
+    s.print_throughput(d as f64, "elems");
+
+    let scores = compress::vote_scores_native(&updates, &mut vrng);
+    let s = bench("top_k_indices (d=200k, k=10k)", 5, 60, || {
+        black_box(compress::top_k_indices(&scores, 10_000));
+    });
+    s.print_throughput(d as f64, "elems");
+
+    let s = bench("topk_mask (d=200k, k=2k)", 5, 60, || {
+        black_box(compress::topk_mask(&updates, 2_000));
+    });
+    s.print_throughput(d as f64, "elems");
+
+    // E8: phase-1 index-array sizes, raw bitmap vs RLE vs Golomb–Rice.
+    println!("\n# E8 (§IV-D): phase-1 index-array bytes by coding scheme");
+    println!("density\traw_bytes\trle_bytes\tgolomb_bytes\tbest");
+    for density_pct in [1usize, 5, 10, 25, 50] {
+        let k = d * density_pct / 100;
+        let mut idx: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut idx);
+        let bv = BitVec::from_indices(d, &idx[..k]);
+        let raw = bv.payload_bytes();
+        let enc = rle::encoded_bytes(&bv);
+        let gol = fediac::compress::golomb::encoded_bytes(&bv);
+        let best = if raw <= enc && raw <= gol {
+            "raw"
+        } else if gol <= enc {
+            "golomb"
+        } else {
+            "rle"
+        };
+        println!("{density_pct}%\t{raw}\t{enc}\t{gol}\t{best}");
+    }
+    let sparse =
+        BitVec::from_indices(d, &(0..d / 100).map(|i| i * 97 % d).collect::<Vec<_>>());
+    let s = bench("rle::encode (d=200k, 1% density)", 10, 100, || {
+        black_box(rle::encode(&sparse));
+    });
+    s.print_throughput(d as f64, "bits");
+    let encoded = rle::encode(&sparse);
+    let s = bench("rle::decode (same)", 10, 100, || {
+        black_box(rle::decode(&encoded));
+    });
+    s.print_throughput(d as f64, "bits");
+}

@@ -1,0 +1,51 @@
+//! E1 regenerator: Fig. 2 (accuracy vs wall-clock, all algorithms) at
+//! bench scale. Override via env: FEDIAC_BENCH_ROUNDS, FEDIAC_BENCH_N.
+
+mod harness;
+
+use fediac::configx::{DatasetKind, Partition, PsProfile};
+use fediac::experiments::{fig2, RunOptions, Scale};
+use harness::time_once;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = Scale {
+        rounds: env_usize("FEDIAC_BENCH_ROUNDS", 16),
+        num_clients: env_usize("FEDIAC_BENCH_N", 10),
+        samples_per_client: 80,
+        eval_every: 2,
+        ..Scale::quick()
+    };
+    let opts = RunOptions { verbose: false, ..Default::default() };
+    println!("# bench_fig2 — E1 regenerator (scaled; see EXPERIMENTS.md)");
+    for (dataset, partition) in [
+        (DatasetKind::SynthCifar10, Partition::Iid),
+        (DatasetKind::SynthCifar10, Partition::Dirichlet(0.5)),
+        (DatasetKind::SynthFemnist, Partition::Natural),
+    ] {
+        for ps in [PsProfile::high(), PsProfile::low()] {
+            let label = format!(
+                "fig2 {} {} {}ps",
+                dataset.name(),
+                partition.name(),
+                ps.name
+            );
+            let panel = time_once(&label, || {
+                fig2::run_panel(dataset, partition, ps.clone(), &scale, &opts).unwrap()
+            });
+            for (alg, acc) in fig2::final_accuracies(&panel) {
+                let rec = &panel.runs.iter().find(|(a, _)| *a == alg).unwrap().1;
+                println!(
+                    "  {:<12} final_acc={:.4} sim_time={:>8.2}s traffic={:>8.2} MB",
+                    alg.name(),
+                    acc,
+                    rec.final_time(),
+                    rec.total_traffic().total_mb()
+                );
+            }
+        }
+    }
+}

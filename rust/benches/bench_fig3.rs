@@ -1,0 +1,29 @@
+//! E4 regenerator: Fig. 3 (accuracy vs Dirichlet β, FediAC vs libra)
+//! at bench scale.
+
+mod harness;
+
+use fediac::configx::PsProfile;
+use fediac::experiments::{fig3, RunOptions, Scale};
+use harness::time_once;
+
+fn main() {
+    let scale = Scale {
+        rounds: std::env::var("FEDIAC_BENCH_ROUNDS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(16),
+        num_clients: 10,
+        samples_per_client: 80,
+        eval_every: 2,
+        ..Scale::quick()
+    };
+    let opts = RunOptions::default();
+    println!("# bench_fig3 — E4 regenerator: non-IID robustness sweep");
+    for ps in [PsProfile::high(), PsProfile::low()] {
+        let res = time_once(&format!("fig3 {}ps", ps.name), || {
+            fig3::run_sweep(ps.clone(), &scale, &opts, &fig3::BETAS).unwrap()
+        });
+        println!("{}", fig3::render(&res, &ps.name));
+    }
+}

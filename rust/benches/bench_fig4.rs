@@ -1,0 +1,31 @@
+//! E5 regenerator: Fig. 4 (FediAC accuracy vs voting threshold a across
+//! system scales) at bench scale.
+
+mod harness;
+
+use fediac::configx::Partition;
+use fediac::experiments::{fig4, RunOptions, Scale};
+use harness::time_once;
+
+fn main() {
+    let scale = Scale {
+        rounds: std::env::var("FEDIAC_BENCH_ROUNDS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(12),
+        samples_per_client: 80,
+        eval_every: 3,
+        ..Scale::quick()
+    };
+    let opts = RunOptions::default();
+    let clients = [8usize, 12, 16];
+    println!("# bench_fig4 — E5 regenerator: voting-threshold sweep");
+    for (partition, label) in
+        [(Partition::Iid, "iid"), (Partition::Dirichlet(0.5), "non-iid")]
+    {
+        let res = time_once(&format!("fig4 {label}"), || {
+            fig4::run_sweep(partition, &clients, &scale, &opts).unwrap()
+        });
+        println!("{}", fig4::render(&res, label));
+    }
+}

@@ -1,0 +1,59 @@
+//! End-to-end round timing: the L3 wall-clock cost of one FediAC global
+//! iteration (native backend) broken down by stage. This is the primary
+//! before/after probe for the §Perf optimisation pass.
+
+mod harness;
+
+use fediac::algorithms::make_algorithm;
+use fediac::configx::{AlgorithmKind, DatasetKind, ExperimentConfig, Partition};
+use fediac::experiments::{build_env, RunOptions};
+use fediac::fl::ModelBackend;
+use harness::{bench, black_box};
+
+fn main() {
+    println!("# bench_round — wall-clock cost of one global iteration (native)");
+    let mut cfg = ExperimentConfig::preset(DatasetKind::SynthCifar10, Partition::Iid);
+    cfg.algorithm = AlgorithmKind::FediAc;
+    cfg.num_clients = 10;
+    cfg.rounds = 4;
+    cfg.samples_per_client = 100;
+    let opts = RunOptions { native_hidden: 64, ..Default::default() };
+    let mut env = build_env(&cfg, &opts).unwrap();
+    let d = env.d();
+    println!("model d = {d}, N = {}", cfg.num_clients);
+
+    // Stage: one client's local training (E=5 SGD iterations).
+    let params = env.backend.init_params();
+    let s = bench("local_train (1 client, E=5, B=16)", 2, 30, || {
+        black_box(env.backend.local_train(&params, 0, 1, 0.05));
+    });
+    s.print_throughput((5 * 16 * d) as f64, "param-samples");
+
+    // Stage: full-test-set evaluation.
+    bench("evaluate (512 test samples)", 1, 10, || {
+        black_box(env.backend.evaluate(&params));
+    });
+
+    // Stage: full FediAC round (training + vote + GIA + compress + sim).
+    let mut env2 = build_env(&cfg, &opts).unwrap();
+    let mut alg = make_algorithm(&cfg, env2.d());
+    alg.run_round(&mut env2, 0).unwrap(); // bootstrap outside the timer
+    let mut round = 1usize;
+    bench("fediac full round (N=10)", 1, 12, || {
+        black_box(alg.run_round(&mut env2, round).unwrap());
+        round += 1;
+    });
+
+    // Stage: switchml full round for comparison (dense path).
+    let mut env3 = build_env(
+        &ExperimentConfig { algorithm: AlgorithmKind::SwitchMl, ..cfg.clone() },
+        &opts,
+    )
+    .unwrap();
+    let mut alg3 = make_algorithm(&env3.cfg.clone(), env3.d());
+    let mut round3 = 0usize;
+    bench("switchml full round (N=10)", 1, 12, || {
+        black_box(alg3.run_round(&mut env3, round3).unwrap());
+        round3 += 1;
+    });
+}

@@ -1,0 +1,108 @@
+//! E9: programmable-switch micro-benchmarks — the L3 hot path.
+//!
+//! Measures the data-plane primitives every round exercises: vote-bit
+//! accumulation, i32 lane accumulation, GIA thresholding and the M/G/1
+//! service loop. Throughputs here bound the simulated switch's packets/s;
+//! see EXPERIMENTS.md §Perf.
+
+mod harness;
+
+use fediac::configx::PsProfile;
+use fediac::switch::{alu, ProgrammableSwitch, RegisterFile, UpdateAggregator, VoteAggregator};
+use fediac::util::{BitVec, Rng};
+use harness::{bench, black_box};
+
+fn main() {
+    println!("# bench_switch — PS data-plane micro-benchmarks (E9)");
+    let payload = 1438usize;
+
+    // Vote-bit accumulation: one packet's worth of bits into u16 counters.
+    let epb = payload * 8;
+    let mut counters = vec![0u16; epb];
+    let mut rng = Rng::new(1);
+    let mut bits = vec![0u8; payload];
+    bits.iter_mut().for_each(|b| *b = (rng.next_u32() & 0xFF) as u8);
+    let s = bench("alu::add_vote_bits (1 pkt, 11504 dims)", 50, 400, || {
+        alu::add_vote_bits(black_box(&mut counters), black_box(&bits));
+    });
+    s.print_throughput(epb as f64, "dims");
+
+    // i32 lane accumulation: one packet of 359 int lanes.
+    let lanes = payload / 4;
+    let mut acc = vec![0i32; lanes];
+    let payload_ints: Vec<i32> = (0..lanes).map(|i| i as i32 - 100).collect();
+    let s = bench("alu::add_i32_sat (1 pkt, 359 lanes)", 200, 2000, || {
+        black_box(alu::add_i32_sat(black_box(&mut acc), black_box(&payload_ints)));
+    });
+    s.print_throughput(lanes as f64, "lanes");
+
+    // GIA threshold over a full model's counters.
+    let d = 200_000;
+    let mut big_counters = vec![0u16; d];
+    for (i, c) in big_counters.iter_mut().enumerate() {
+        *c = (i % 7) as u16;
+    }
+    let mut gia_bytes = vec![0u8; d.div_ceil(8)];
+    let s = bench("alu::threshold_votes (d=200k)", 10, 200, || {
+        alu::threshold_votes(black_box(&big_counters), 3, black_box(&mut gia_bytes));
+    });
+    s.print_throughput(d as f64, "dims");
+
+    // Full VoteAggregator round: N=20 clients × full bitmap.
+    let d = 100_000;
+    let n = 20;
+    let votes: Vec<Vec<u8>> = (0..n)
+        .map(|i| {
+            let mut r = Rng::new(100 + i as u64);
+            let mut idx: Vec<usize> = (0..d).collect();
+            r.shuffle(&mut idx);
+            BitVec::from_indices(d, &idx[..d / 20]).to_bytes()
+        })
+        .collect();
+    let n_blocks = d.div_ceil(epb);
+    let s = bench("VoteAggregator full round (d=100k, N=20)", 3, 30, || {
+        let mut rf = RegisterFile::new(d * 2);
+        let mut agg = VoteAggregator::new(&mut rf, d, n, 3, epb).unwrap();
+        for (client, bytes) in votes.iter().enumerate() {
+            for block in 0..n_blocks {
+                let lo = block * payload;
+                let hi = ((block + 1) * payload).min(bytes.len());
+                agg.ingest(client, block, &bytes[lo..hi]);
+            }
+        }
+        black_box(agg.gia());
+        agg.release(&mut rf);
+    });
+    s.print_throughput((n * d) as f64, "votes");
+
+    // Full UpdateAggregator round: N=20 clients × k_s ints.
+    let k_s: usize = 20_000;
+    let epb_upd = payload * 8 / 12;
+    let q: Vec<i32> = (0..k_s).map(|i| (i as i32 % 401) - 200).collect();
+    let blocks = k_s.div_ceil(epb_upd);
+    let s = bench("UpdateAggregator full round (k_s=20k, N=20)", 5, 50, || {
+        let mut rf = RegisterFile::new(k_s * 4);
+        let mut agg = UpdateAggregator::new(&mut rf, k_s, n, epb_upd).unwrap();
+        for client in 0..n {
+            for block in 0..blocks {
+                let lo = block * epb_upd;
+                let hi = ((block + 1) * epb_upd).min(k_s);
+                agg.ingest(client, block, &q[lo..hi]);
+            }
+        }
+        black_box(agg.aggregate()[0]);
+        agg.release(&mut rf);
+    });
+    s.print_throughput((n * k_s) as f64, "ints");
+
+    // Service loop: 10k packets through the M/G/1 queue.
+    let s = bench("ProgrammableSwitch::service_packet ×10k", 3, 50, || {
+        let mut sw = ProgrammableSwitch::new(PsProfile::high(), 7);
+        let mut t = 0.0;
+        for i in 0..10_000 {
+            t = sw.service_packet(i as f64 * 1e-6);
+        }
+        black_box(t);
+    });
+    s.print_throughput(10_000.0, "pkts");
+}

@@ -1,0 +1,32 @@
+//! E3 regenerator: Table II (traffic to target accuracy, low-perf PS)
+//! at bench scale.
+
+mod harness;
+
+use fediac::configx::PsProfile;
+use fediac::experiments::{tables, RunOptions, Scale};
+use harness::time_once;
+
+fn main() {
+    let scale = Scale {
+        rounds: std::env::var("FEDIAC_BENCH_ROUNDS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(24),
+        num_clients: 10,
+        samples_per_client: 80,
+        eval_every: 2,
+        ..Scale::quick()
+    };
+    let opts = RunOptions::default();
+    println!("# bench_table2 — E3 regenerator: Table II, low-performance PS");
+    let mut rows = Vec::new();
+    for (dataset, partition, target) in tables::scenarios() {
+        let label = format!("table2 {}_{}", dataset.name(), partition.name());
+        rows.push(time_once(&label, || {
+            tables::run_row(dataset, partition, target, PsProfile::low(), &scale, &opts)
+                .unwrap()
+        }));
+    }
+    println!("{}", tables::render(&rows, "low"));
+}

@@ -1,0 +1,90 @@
+//! Shared timing harness for the bench binaries (criterion is not in the
+//! offline vendor set). Measures wall time over warmup + measured
+//! iterations and reports min/median/mean/p95 like criterion's summary.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} median {:>10}  mean {:>10}  min {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        );
+    }
+
+    /// Derived throughput given items processed per iteration.
+    pub fn print_throughput(&self, items_per_iter: f64, unit: &str) {
+        let per_sec = items_per_iter / (self.median_ns / 1e9);
+        println!(
+            "{:<44} {:>14.3e} {unit}/s (median)",
+            format!("{} [throughput]", self.name),
+            per_sec
+        );
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        min_ns: samples[0],
+        median_ns: samples[samples.len() / 2],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    };
+    stats.print();
+    stats
+}
+
+/// Time a single long-running closure (for end-to-end regenerators).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("{:<44} completed in {:.2} s", name, t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,175 @@
+//! Shared protocol building blocks: local-training fan-out, remote
+//! parameter-server path timing, and small helpers every algorithm uses.
+
+use crate::fl::FlEnv;
+use crate::net::{Mg1Queue, PoissonProcess};
+use crate::sim::SimTime;
+
+/// All clients' local updates for one round, plus bookkeeping.
+pub struct LocalRound {
+    /// U_t^i per client (with residual folded in by the caller if any).
+    pub updates: Vec<Vec<f32>>,
+    pub mean_loss: f64,
+    /// Per-client local-training completion time (relative to round start).
+    pub ready: Vec<SimTime>,
+}
+
+/// Run local training for every client from the current global model.
+/// `residuals`, when provided, are added to the raw update (Algorithm 1
+/// line 4: U = w_{t,0} − w_{t,E} + e_{t−1}).
+pub fn local_training(
+    env: &mut FlEnv,
+    round: usize,
+    lr: f32,
+    residuals: Option<&[Vec<f32>]>,
+) -> LocalRound {
+    let n = env.cfg.num_clients;
+    let params = env.params.clone();
+    let mut updates = Vec::with_capacity(n);
+    let mut loss_sum = 0.0f64;
+    for i in 0..n {
+        let out = env.backend.local_train(&params, i, round, lr);
+        let mut u: Vec<f32> =
+            params.iter().zip(&out.new_params).map(|(w0, we)| w0 - we).collect();
+        if let Some(res) = residuals {
+            for (uv, &rv) in u.iter_mut().zip(&res[i]) {
+                *uv += rv;
+            }
+        }
+        updates.push(u);
+        loss_sum += out.mean_loss as f64;
+    }
+    let ready = env.local_train_ready(0.0);
+    LocalRound { updates, mean_loss: loss_sum / n as f64, ready }
+}
+
+/// Global max-|U| across clients — the m in f = (2^{b−1} − N)/(N·m).
+/// On the wire this is one 4-byte scalar per client folded into the first
+/// upload packet (the PS takes the max, an operation Tofino supports).
+pub fn global_max_abs(updates: &[Vec<f32>]) -> f32 {
+    updates
+        .iter()
+        .map(|u| crate::compress::max_abs(u))
+        .fold(f32::MIN_POSITIVE, f32::max)
+}
+
+/// Timing of a remote parameter-server exchange (libra cold path, FedAvg):
+/// per-client Poisson packet streams, one RTT each way, M/G/1 service at
+/// the server with the configured per-packet time.
+pub fn server_path(
+    env: &mut FlEnv,
+    ready: &[SimTime],
+    pkts: &[usize],
+) -> SimTime {
+    let rtt = env.cfg.baselines.server_rtt_s;
+    let service = env.cfg.baselines.server_packet_time_s * env.cfg.net_scale;
+    let mut queue = Mg1Queue::new();
+    let mut arrivals: Vec<SimTime> = Vec::new();
+    for i in 0..ready.len() {
+        if pkts[i] == 0 {
+            continue;
+        }
+        let mut proc = PoissonProcess::new(env.rates[i], ready[i]);
+        for _ in 0..pkts[i] {
+            arrivals.push(proc.next(&mut env.rng) + rtt / 2.0);
+        }
+    }
+    if arrivals.is_empty() {
+        return ready.iter().cloned().fold(0.0, f64::max);
+    }
+    arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut end: SimTime = 0.0;
+    for &a in &arrivals {
+        let jitter = 1.0 + 0.1 * (env.rng.f64() - 0.5);
+        end = queue.serve(a, service * jitter);
+    }
+    end + rtt / 2.0
+}
+
+/// Apply the aggregated float delta to the global model:
+/// w_{t+1} = w_t − delta (delta already scaled by 1/(N·f)).
+pub fn apply_dense_delta(params: &mut [f32], delta: &[f32]) {
+    for (p, &d) in params.iter_mut().zip(delta) {
+        *p -= d;
+    }
+}
+
+/// Scatter-apply a sparse aggregate at `indices`.
+pub fn apply_sparse_delta(params: &mut [f32], indices: &[usize], delta: &[f32]) {
+    debug_assert_eq!(indices.len(), delta.len());
+    for (&i, &d) in indices.iter().zip(delta) {
+        params[i] -= d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, ExperimentConfig, Partition};
+    use crate::data::synth;
+    use crate::fl::NativeBackend;
+
+    fn env() -> FlEnv {
+        let cfg = ExperimentConfig {
+            num_clients: 3,
+            ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+        };
+        let fd = synth::generate(cfg.dataset, cfg.partition, 3, 30, cfg.seed);
+        let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+        let mut e = FlEnv::new(cfg, backend);
+        e.init_model();
+        e
+    }
+
+    #[test]
+    fn local_training_produces_updates() {
+        let mut e = env();
+        let lr = LocalRound { ..local_training(&mut e, 0, 0.1, None) };
+        assert_eq!(lr.updates.len(), 3);
+        assert!(lr.updates.iter().all(|u| u.len() == e.d()));
+        assert!(lr.mean_loss.is_finite());
+        assert!(lr.updates[0].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn residuals_fold_into_updates() {
+        let mut e = env();
+        let d = e.d();
+        let res = vec![vec![1.0f32; d]; 3];
+        let with = local_training(&mut e, 0, 0.1, Some(&res));
+        let mut e2 = env();
+        let without = local_training(&mut e2, 0, 0.1, None);
+        for (a, b) in with.updates[0].iter().zip(&without.updates[0]) {
+            assert!((a - b - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn server_path_slower_with_more_packets() {
+        let mut e = env();
+        let ready = vec![0.0; 3];
+        let t1 = server_path(&mut e, &ready, &[5, 5, 5]);
+        let mut e2 = env();
+        let t2 = server_path(&mut e2, &ready, &[500, 500, 500]);
+        assert!(t2 > t1);
+        // At least one RTT even when empty.
+        let mut e3 = env();
+        let t0 = server_path(&mut e3, &ready, &[0, 0, 0]);
+        assert!(t0 >= 0.0);
+    }
+
+    #[test]
+    fn delta_application() {
+        let mut p = vec![1.0f32, 2.0, 3.0];
+        apply_dense_delta(&mut p, &[0.5, 0.0, -1.0]);
+        assert_eq!(p, vec![0.5, 2.0, 4.0]);
+        apply_sparse_delta(&mut p, &[2], &[1.0]);
+        assert_eq!(p, vec![0.5, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn global_max_abs_over_clients() {
+        let updates = vec![vec![0.5f32, -0.1], vec![-0.9, 0.2]];
+        assert!((global_max_abs(&updates) - 0.9).abs() < 1e-7);
+    }
+}

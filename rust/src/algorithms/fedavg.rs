@@ -1,0 +1,131 @@
+//! FedAvg over a remote parameter server [8] — the uncompressed reference.
+//!
+//! Full-precision f32 updates travel to a conventional server (no PS on
+//! the path), are averaged, and the dense global delta is broadcast. Used
+//! as the convergence upper bound and the traffic/latency anchor the
+//! in-network algorithms are compared against.
+
+use anyhow::Result;
+
+use crate::algorithms::{common, Algorithm, RoundReport};
+use crate::configx::{AlgorithmKind, ExperimentConfig};
+use crate::fl::FlEnv;
+use crate::metrics::TrafficMeter;
+
+pub struct FedAvg;
+
+impl FedAvg {
+    pub fn new(_cfg: &ExperimentConfig) -> Self {
+        FedAvg
+    }
+}
+
+impl Algorithm for FedAvg {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::FedAvg
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv, round: usize) -> Result<RoundReport> {
+        let lr = env.cfg.lr.at(round) as f32;
+        let d = env.d();
+        let n = env.cfg.num_clients;
+        let mut traffic = TrafficMeter::default();
+
+        let local = common::local_training(env, round, lr, None);
+
+        let bits_up = d * 32;
+        let pkts: Vec<usize> = vec![env.packets_for_bits(bits_up); n];
+        for _ in 0..n {
+            env.charge_upload(bits_up / 8, pkts[0], &mut traffic, false);
+        }
+        let upload_end = common::server_path(env, &local.ready, &pkts);
+        let t_done = env.broadcast(upload_end, d * 4, &mut traffic, false);
+
+        let mut delta = vec![0.0f32; d];
+        for u in &local.updates {
+            for (acc, &v) in delta.iter_mut().zip(u) {
+                *acc += v;
+            }
+        }
+        delta.iter_mut().for_each(|v| *v /= n as f32);
+        common::apply_dense_delta(&mut env.params, &delta);
+
+        env.traffic_total.add(&traffic);
+        Ok(RoundReport {
+            round,
+            duration_s: t_done,
+            train_loss: local.mean_loss,
+            traffic,
+            agg_ops: 0,
+            uploaded_elems: d as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, Partition};
+    use crate::data::synth;
+    use crate::fl::NativeBackend;
+
+    fn make_env(n: usize) -> FlEnv {
+        let cfg = ExperimentConfig {
+            num_clients: n,
+            ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+        };
+        let fd = synth::generate(cfg.dataset, cfg.partition, n, 40, cfg.seed);
+        let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+        let mut env = FlEnv::new(cfg, backend);
+        env.init_model();
+        env
+    }
+
+    #[test]
+    fn converges_fast_per_round() {
+        let mut env = make_env(4);
+        let mut alg = FedAvg::new(&env.cfg);
+        let mut first = None;
+        let mut last = 0.0;
+        for round in 0..8 {
+            let r = alg.run_round(&mut env, round).unwrap();
+            assert_eq!(r.agg_ops, 0, "fedavg must not touch the switch");
+            if round == 0 {
+                first = Some(r.train_loss);
+            }
+            last = r.train_loss;
+        }
+        assert!(last < first.unwrap());
+    }
+
+    #[test]
+    fn traffic_is_full_precision() {
+        let mut env = make_env(2);
+        let mut alg = FedAvg::new(&env.cfg);
+        let r = alg.run_round(&mut env, 0).unwrap();
+        let d = env.d();
+        let payload = env.cfg.packet_payload();
+        let pkts = (d * 4).div_ceil(payload);
+        let expect = 2 * (d * 4 + pkts * env.cfg.packet_header);
+        assert_eq!(r.traffic.up_bytes, expect as u64);
+    }
+
+    #[test]
+    fn slower_than_in_network_on_same_payload() {
+        // The premise of the paper: a server round takes longer than a
+        // switch round for the same dense payload (server per-packet time
+        // + RTT dominate).
+        use crate::algorithms::switchml::SwitchMl;
+        let mut env_s = make_env(4);
+        let t_sml = SwitchMl::new(&env_s.cfg)
+            .run_round(&mut env_s, 0)
+            .unwrap()
+            .duration_s;
+        let mut env_f = make_env(4);
+        let t_avg = FedAvg::new(&env_f.cfg).run_round(&mut env_f, 0).unwrap().duration_s;
+        assert!(
+            t_avg > t_sml,
+            "fedavg {t_avg:.4}s should exceed switchml {t_sml:.4}s"
+        );
+    }
+}

@@ -1,0 +1,371 @@
+//! FediAC: two-phase voting-based consensus compression (§IV, Algorithm 1).
+//!
+//! Round t:
+//!  1. clients run E local SGD iterations and fold in the residual error;
+//!  2. **phase 1 — client voting**: each client Gumbel-votes k = 5%·d
+//!     dimensions ∝ magnitude and streams a d-bit 0-1 array to the PS,
+//!     which adds the arrays into u16 counters and thresholds with `a`
+//!     into the GIA, multicast back;
+//!  3. **phase 2 — model aggregation**: clients quantise (Eq. 1, factor
+//!     f = (2^{b−1} − N)/(N·m)), sparsify by the GIA, upload b-bit
+//!     integers in GIA order (indices implicitly aligned), and the PS adds
+//!     aligned payloads in i32 registers; the aggregate is multicast and
+//!     applied as w_{t+1} = w_t − Σq/(N·f).
+//!
+//! Round 1 is server-assisted (§IV-D): clients report raw updates to a
+//! plain parameter server which fits the power law, derives b from
+//! Corollary 1, aggregates uncompressed, then withdraws.
+
+use anyhow::Result;
+
+use crate::algorithms::{common, Algorithm, RoundReport};
+use crate::compress::{self, rle};
+use crate::configx::{AlgorithmKind, ExperimentConfig};
+use crate::fl::FlEnv;
+use crate::metrics::TrafficMeter;
+use crate::switch::{waves_needed, RegisterFile, UpdateAggregator, VoteAggregator};
+use crate::theory::{fit_power_law, min_bits, PowerLaw};
+use crate::util::BitVec;
+
+/// FediAC protocol state.
+pub struct FediAc {
+    /// Residual error e_t^i per client.
+    residuals: Vec<Vec<f32>>,
+    /// Votes per client k (resolved from k_frac at construction).
+    k: usize,
+    /// Quantisation bits; resolved in round 1 when the config leaves it to
+    /// Corollary 1.
+    bits_b: Option<usize>,
+    /// Power law fitted in round 1 (kept for diagnostics / theory checks).
+    pub fitted_law: Option<PowerLaw>,
+    threshold_a: usize,
+    rle_phase1: bool,
+}
+
+impl FediAc {
+    pub fn new(cfg: &ExperimentConfig, d: usize) -> Self {
+        FediAc {
+            residuals: vec![vec![0.0; d]; cfg.num_clients],
+            k: ((cfg.fediac.k_frac * d as f64).round() as usize).clamp(1, d),
+            bits_b: cfg.fediac.bits_b,
+            fitted_law: None,
+            threshold_a: cfg.fediac.threshold_a,
+            rle_phase1: cfg.fediac.rle_phase1,
+        }
+    }
+
+    pub fn bits(&self) -> Option<usize> {
+        self.bits_b
+    }
+
+    /// §IV-D server-assisted first iteration: raw updates to a parameter
+    /// server, power-law fit, b from Corollary 1, uncompressed aggregate.
+    fn bootstrap_round(&mut self, env: &mut FlEnv, round: usize) -> Result<RoundReport> {
+        let lr = env.cfg.lr.at(round) as f32;
+        let local = common::local_training(env, round, lr, None);
+        let d = env.d();
+        let n = env.cfg.num_clients;
+        let mut traffic = TrafficMeter::default();
+
+        // Fit the power law on client 0's updates (any client works — the
+        // paper assumes a uniform bound across clients, Definition 1).
+        let law = fit_power_law(&local.updates[0])
+            .unwrap_or(PowerLaw { phi: 0.01, alpha: -0.5 });
+        if self.bits_b.is_none() {
+            self.bits_b = Some(min_bits(d, n, self.k, self.threshold_a, &law).max(8));
+        }
+        self.fitted_law = Some(law);
+
+        // Raw f32 updates to the server, aggregated mean broadcast back.
+        let bits_up = d * 32;
+        let pkts: Vec<usize> = vec![env.packets_for_bits(bits_up); n];
+        for _ in 0..n {
+            env.charge_upload(bits_up / 8, pkts[0], &mut traffic, false);
+        }
+        let upload_end = common::server_path(env, &local.ready, &pkts);
+        let down_end = env.broadcast(upload_end, d * 4, &mut traffic, false);
+
+        // w₂ = w₁ − mean(U).
+        let mut delta = vec![0.0f32; d];
+        for u in &local.updates {
+            for (acc, &v) in delta.iter_mut().zip(u) {
+                *acc += v;
+            }
+        }
+        delta.iter_mut().for_each(|v| *v /= n as f32);
+        common::apply_dense_delta(&mut env.params, &delta);
+
+        Ok(RoundReport {
+            round,
+            duration_s: down_end,
+            train_loss: local.mean_loss,
+            traffic,
+            agg_ops: 0, // server round: no PS aggregation
+            uploaded_elems: d as f64,
+        })
+    }
+}
+
+impl Algorithm for FediAc {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::FediAc
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv, round: usize) -> Result<RoundReport> {
+        if round == 0 {
+            return self.bootstrap_round(env, round);
+        }
+        let bits_b = self.bits_b.expect("bootstrap sets b");
+        let lr = env.cfg.lr.at(round) as f32;
+        let d = env.d();
+        let n = env.cfg.num_clients;
+        let payload = env.cfg.packet_payload();
+        let agg_ops_before = env.switch.stats().agg_ops;
+        env.switch.reset_queue();
+        let mut traffic = TrafficMeter::default();
+
+        // --- local training + residual fold-in (Algorithm 1 lines 3–4).
+        let local = common::local_training(env, round, lr, Some(&self.residuals));
+
+        // --- phase 1: voting (lines 5–7).
+        let votes: Vec<BitVec> = (0..n)
+            .map(|i| {
+                let seed = (round as i64) << 24 | i as i64;
+                let scores = env.backend.vote_scores(&local.updates[i], seed);
+                compress::vote_bitmap_from_scores(&scores, self.k)
+            })
+            .collect();
+
+        // Wire size of one client's phase-1 payload (RLE optional, §IV-D).
+        let vote_bytes: Vec<usize> = votes
+            .iter()
+            .map(|v| {
+                if self.rle_phase1 {
+                    rle::encoded_bytes(v).min(v.payload_bytes())
+                } else {
+                    v.payload_bytes()
+                }
+            })
+            .collect();
+        let vote_pkts: Vec<usize> =
+            vote_bytes.iter().map(|&b| b.div_ceil(payload).max(1)).collect();
+        for i in 0..n {
+            env.charge_upload(vote_bytes[i], vote_pkts[i], &mut traffic, true);
+        }
+
+        // Switch-side phase-1 content: counters over all d dims.
+        let epb_vote = payload * 8; // one bit per dimension
+        let mem = env.switch.profile().memory_bytes;
+        let window1 = (mem / (epb_vote * 2)).max(1);
+        let n_blocks1 = d.div_ceil(epb_vote);
+        let waves1 = waves_needed(n_blocks1, window1);
+        let mut vote_file = RegisterFile::new(d * 2);
+        let mut vote_agg =
+            VoteAggregator::new(&mut vote_file, d, n, self.threshold_a, epb_vote)
+                .expect("virtual vote registers");
+        for (i, v) in votes.iter().enumerate() {
+            let bytes = v.to_bytes();
+            for block in 0..n_blocks1 {
+                let lo = block * payload;
+                let hi = ((block + 1) * payload).min(bytes.len());
+                vote_agg.ingest(i, block, &bytes[lo..hi]);
+            }
+        }
+        debug_assert!(vote_agg.all_complete());
+        let gia = vote_agg.gia();
+        vote_agg.release(&mut vote_file);
+
+        let t_vote = env.upload_phase(&local.ready, &vote_pkts, waves1);
+        env.charge_retransmissions(&t_vote, &mut traffic);
+
+        // GIA multicast (d bits, or RLE when enabled).
+        let gia_bytes = if self.rle_phase1 {
+            rle::encoded_bytes(&gia).min(gia.payload_bytes())
+        } else {
+            gia.payload_bytes()
+        };
+        let t_gia = env.broadcast(t_vote.end, gia_bytes, &mut traffic, true);
+
+        // --- phase 2: quantise + sparsify + aligned aggregation (8–12).
+        let m = common::global_max_abs(&local.updates);
+        let f = compress::scale_factor(bits_b, n, m);
+        let gia_mask = gia.to_f32_mask();
+        let gia_indices: Vec<usize> = gia.iter_ones().collect();
+        let k_s = gia_indices.len();
+
+        let epb_upd = (payload * 8 / bits_b).max(1);
+        let n_blocks2 = k_s.div_ceil(epb_upd).max(1);
+        let window2 = (mem / (epb_upd * 4)).max(1);
+        let waves2 = waves_needed(if k_s == 0 { 0 } else { n_blocks2 }, window2);
+        env.switch
+            .note_memory_demand((d * 2).max(k_s * 4).min(mem), (d * 2).max(k_s * 4));
+
+        let mut upd_file = RegisterFile::new((k_s * 4).max(4));
+        let mut upd_agg = (k_s > 0)
+            .then(|| UpdateAggregator::new(&mut upd_file, k_s, n, epb_upd).unwrap());
+
+        let bits2 = k_s * bits_b;
+        let pkts2: Vec<usize> = vec![env.packets_for_bits(bits2); n];
+        let mut selected = vec![0i32; k_s];
+        for i in 0..n {
+            let seed = 0x5EED_0000 | (round as i64) << 8 | i as i64;
+            let (q, new_residual) =
+                env.backend.compress(&local.updates[i], &gia_mask, f, seed);
+            self.residuals[i] = new_residual;
+            if let Some(agg) = upd_agg.as_mut() {
+                for (slot, &gi) in gia_indices.iter().enumerate() {
+                    selected[slot] = q[gi];
+                }
+                for block in 0..n_blocks2 {
+                    let lo = block * epb_upd;
+                    let hi = ((block + 1) * epb_upd).min(k_s);
+                    agg.ingest(i, block, &selected[lo..hi]);
+                }
+            }
+            env.charge_upload(bits2.div_ceil(8), pkts2[i], &mut traffic, false);
+        }
+
+        let ready2 = vec![t_gia; n];
+        let t_upload2 = env.upload_phase(&ready2, &pkts2, waves2);
+        env.charge_retransmissions(&t_upload2, &mut traffic);
+
+        // Aggregate multicast: 32-bit lanes (sums reach N·2^{b−1}).
+        let t_done = env.broadcast(t_upload2.end, k_s * 4, &mut traffic, false);
+
+        // --- apply w_{t+1} = w_t − Σq/(N·f) (line 12).
+        if let Some(agg) = upd_agg.take() {
+            debug_assert!(agg.all_complete());
+            let overflow = agg.overflow_lanes();
+            if overflow > 0 {
+                env.switch.note_overflow(overflow);
+            }
+            let delta = compress::dequantize_aggregate(agg.aggregate(), n, f);
+            common::apply_sparse_delta(&mut env.params, &gia_indices, &delta);
+            agg.release(&mut upd_file);
+        }
+
+        env.traffic_total.add(&traffic);
+        Ok(RoundReport {
+            round,
+            duration_s: t_done,
+            train_loss: local.mean_loss,
+            traffic,
+            agg_ops: env.switch.stats().agg_ops - agg_ops_before,
+            uploaded_elems: k_s as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, Partition};
+    use crate::data::synth;
+    use crate::fl::NativeBackend;
+
+    fn make_env(n: usize) -> FlEnv {
+        let cfg = ExperimentConfig {
+            num_clients: n,
+            ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+        };
+        let fd = synth::generate(cfg.dataset, cfg.partition, n, 40, cfg.seed);
+        let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+        let mut env = FlEnv::new(cfg, backend);
+        env.init_model();
+        env
+    }
+
+    #[test]
+    fn bootstrap_then_compressed_rounds() {
+        let mut env = make_env(4);
+        let mut alg = FediAc::new(&env.cfg, env.d());
+        assert!(alg.bits().is_none());
+        let r0 = alg.run_round(&mut env, 0).unwrap();
+        assert!(alg.bits().is_some(), "corollary-1 b not set");
+        assert_eq!(r0.agg_ops, 0, "bootstrap must not touch the PS");
+        let r1 = alg.run_round(&mut env, 1).unwrap();
+        assert!(r1.agg_ops > 0, "phase 1+2 must aggregate on the PS");
+        assert!(r1.uploaded_elems < env.d() as f64, "no compression happened");
+        assert!(r1.traffic.vote_up_bytes > 0);
+        assert!(r1.duration_s > 0.0);
+    }
+
+    #[test]
+    fn loss_decreases_over_rounds() {
+        let mut env = make_env(4);
+        let mut alg = FediAc::new(&env.cfg, env.d());
+        let mut first = None;
+        let mut last = 0.0;
+        for round in 0..8 {
+            let r = alg.run_round(&mut env, round).unwrap();
+            if round == 1 {
+                first = Some(r.train_loss);
+            }
+            last = r.train_loss;
+        }
+        assert!(last < first.unwrap(), "no convergence: {first:?} → {last}");
+    }
+
+    #[test]
+    fn phase1_traffic_is_one_bit_per_dim() {
+        let mut env = make_env(4);
+        let mut alg = FediAc::new(&env.cfg, env.d());
+        alg.run_round(&mut env, 0).unwrap();
+        let r = alg.run_round(&mut env, 1).unwrap();
+        let d = env.d();
+        let n = env.cfg.num_clients;
+        // Upload share of phase 1: n · (ceil(d/8) + header) bytes.
+        let payload = env.cfg.packet_payload();
+        let pkts = d.div_ceil(8).div_ceil(payload);
+        let expect = n * (d.div_ceil(8) + pkts * env.cfg.packet_header);
+        assert_eq!(r.traffic.vote_up_bytes, expect as u64);
+    }
+
+    #[test]
+    fn residuals_carry_masked_updates() {
+        let mut env = make_env(3);
+        let mut alg = FediAc::new(&env.cfg, env.d());
+        alg.run_round(&mut env, 0).unwrap();
+        alg.run_round(&mut env, 1).unwrap();
+        // After a compressed round, at least one client has non-zero
+        // residual (unvoted dimensions keep their full update).
+        let any = alg.residuals.iter().any(|r| r.iter().any(|&x| x != 0.0));
+        assert!(any, "residual feedback inactive");
+    }
+
+    #[test]
+    fn higher_threshold_uploads_fewer_elems() {
+        let run_with_a = |a: usize| {
+            let mut env = make_env(6);
+            env.cfg.fediac.threshold_a = a;
+            let mut alg = FediAc::new(&env.cfg, env.d());
+            alg.run_round(&mut env, 0).unwrap();
+            alg.run_round(&mut env, 1).unwrap().uploaded_elems
+        };
+        let loose = run_with_a(1);
+        let strict = run_with_a(5);
+        assert!(strict < loose, "a=5 {strict} !< a=1 {loose}");
+    }
+
+    #[test]
+    fn rle_reduces_phase1_bytes_for_sparse_votes() {
+        let mut env = make_env(4);
+        env.cfg.fediac.rle_phase1 = true;
+        env.cfg.fediac.k_frac = 0.01; // very sparse votes
+        let mut alg = FediAc::new(&env.cfg, env.d());
+        alg.run_round(&mut env, 0).unwrap();
+        let r_rle = alg.run_round(&mut env, 1).unwrap();
+
+        let mut env2 = make_env(4);
+        env2.cfg.fediac.k_frac = 0.01;
+        let mut alg2 = FediAc::new(&env2.cfg, env2.d());
+        alg2.run_round(&mut env2, 0).unwrap();
+        let r_raw = alg2.run_round(&mut env2, 1).unwrap();
+        assert!(
+            r_rle.traffic.vote_up_bytes < r_raw.traffic.vote_up_bytes,
+            "rle {} !< raw {}",
+            r_rle.traffic.vote_up_bytes,
+            r_raw.traffic.vote_up_bytes
+        );
+    }
+}

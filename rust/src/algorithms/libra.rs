@@ -1,0 +1,258 @@
+//! libra baseline [9]: hot/cold parameter split.
+//!
+//! "libra divides model parameters into hot and cold types, representing
+//! parameters that will be updated frequently and rarely. The switch is
+//! only responsible for the aggregation of hot parameters. Cold parameters
+//! are redirected to a remote server for aggregation." (§V-A3; Topk with
+//! the paper-tuned k = 1%·d.)
+//!
+//! The hot set is global switch state installed ahead of the round; we
+//! maintain it as an EMA of per-dimension selection frequency (standing in
+//! for libra's offline pretraining predictor — the paper excludes that
+//! pretraining overhead from its measurements, and so do we).
+
+use anyhow::Result;
+
+use crate::algorithms::{common, Algorithm, RoundReport};
+use crate::compress::{self, topk};
+use crate::configx::{AlgorithmKind, ExperimentConfig};
+use crate::fl::FlEnv;
+use crate::metrics::TrafficMeter;
+use crate::switch::{alu, waves_needed};
+
+pub struct Libra {
+    residuals: Vec<Vec<f32>>,
+    /// Per-dimension EMA of selection frequency (the hotness predictor).
+    hotness: Vec<f32>,
+    /// Dimensions currently installed as hot switch slots.
+    hot_set: Vec<usize>,
+    k: usize,
+    hot_slots: usize,
+    bits: usize,
+}
+
+impl Libra {
+    pub fn new(cfg: &ExperimentConfig, d: usize) -> Self {
+        let k = ((cfg.baselines.libra_k_frac * d as f64).round() as usize).clamp(1, d);
+        // Hot slots sized to hot_frac of the expected per-round union,
+        // capped by switch registers (4 B per slot).
+        let hot_slots = ((cfg.baselines.libra_hot_frac * (k * cfg.num_clients) as f64)
+            as usize)
+            .clamp(1, cfg.ps.memory_bytes / 4)
+            .min(d);
+        Libra {
+            residuals: vec![vec![0.0; d]; cfg.num_clients],
+            hotness: vec![0.0; d],
+            hot_set: Vec::new(),
+            k,
+            hot_slots,
+            bits: 16,
+        }
+    }
+
+    fn refresh_hot_set(&mut self) {
+        if self.hotness.iter().all(|&h| h == 0.0) {
+            self.hot_set.clear();
+            return;
+        }
+        self.hot_set = compress::top_k_indices(&self.hotness, self.hot_slots);
+    }
+}
+
+impl Algorithm for Libra {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::Libra
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv, round: usize) -> Result<RoundReport> {
+        let lr = env.cfg.lr.at(round) as f32;
+        let d = env.d();
+        let n = env.cfg.num_clients;
+        let payload = env.cfg.packet_payload();
+        let agg_ops_before = env.switch.stats().agg_ops;
+        env.switch.reset_queue();
+        let mut traffic = TrafficMeter::default();
+
+        // Hot set installed *before* the round from past frequencies.
+        self.refresh_hot_set();
+        let mut is_hot = vec![false; d];
+        let mut hot_slot_of = vec![usize::MAX; d];
+        for (slot, &dim) in self.hot_set.iter().enumerate() {
+            is_hot[dim] = true;
+            hot_slot_of[dim] = slot;
+        }
+
+        let ef = env.cfg.baselines.error_feedback;
+        let local = common::local_training(
+            env,
+            round,
+            lr,
+            ef.then_some(self.residuals.as_slice()),
+        );
+        let m = common::global_max_abs(&local.updates);
+        let f = compress::scale_factor(self.bits, n, m);
+
+        let mut hot_acc = vec![0i32; self.hot_set.len()];
+        let mut cold_acc: std::collections::BTreeMap<usize, i64> =
+            std::collections::BTreeMap::new();
+        let mut switch_pkts: Vec<usize> = Vec::with_capacity(n);
+        let mut server_pkts: Vec<usize> = Vec::with_capacity(n);
+        let mut uploaded = 0.0f64;
+        for i in 0..n {
+            let mask = topk::topk_mask(&local.updates[i], self.k);
+            let mask_f32 = mask.to_f32_mask();
+            let seed = 0x11B4_0000 | (round as i64) << 8 | i as i64;
+            let (q, new_residual) =
+                env.backend.compress(&local.updates[i], &mask_f32, f, seed);
+            if ef {
+                self.residuals[i] = new_residual;
+            } else {
+                let _ = new_residual; // paper baselines: residual dropped
+            }
+
+            let mut hot_pairs = 0usize;
+            let mut cold_pairs = 0usize;
+            for dim in mask.iter_ones() {
+                self.hotness[dim] = 0.9 * self.hotness[dim] + 0.1;
+                if q[dim] == 0 {
+                    continue;
+                }
+                if is_hot[dim] {
+                    let slot = hot_slot_of[dim];
+                    let over =
+                        alu::add_i32_sat(&mut hot_acc[slot..slot + 1], &[q[dim]]);
+                    if over > 0 {
+                        env.switch.note_overflow(over);
+                    }
+                    hot_pairs += 1;
+                } else {
+                    *cold_acc.entry(dim).or_insert(0) += q[dim] as i64;
+                    cold_pairs += 1;
+                }
+            }
+            // Hotness decay for unselected dims happens implicitly via EMA
+            // on selection; decay everything slightly once per client pass
+            // would be O(d·n) — do it once per round below.
+            uploaded += (hot_pairs + cold_pairs) as f64;
+
+            // Wire: (slot/index, value) pairs, 8 B each.
+            let hot_bytes = hot_pairs * 8;
+            let cold_bytes = cold_pairs * 8;
+            let hp = hot_bytes.div_ceil(payload).max(usize::from(hot_pairs > 0));
+            let cp = cold_bytes.div_ceil(payload).max(usize::from(cold_pairs > 0));
+            switch_pkts.push(hp);
+            server_pkts.push(cp);
+            env.charge_upload(hot_bytes + cold_bytes, hp + cp, &mut traffic, false);
+        }
+        // Global hotness decay (dimensions not selected cool down).
+        self.hotness.iter_mut().for_each(|h| *h *= 0.95);
+        uploaded /= n as f64;
+
+        // Switch path (hot) and server path (cold) run in parallel.
+        let mem = env.switch.profile().memory_bytes;
+        let slots_bytes = self.hot_set.len() * 4;
+        let epb = (payload / 8).max(1); // 8-byte pairs per packet
+        let window = (mem / (epb * 4).max(1)).max(1);
+        let hot_blocks: usize = switch_pkts.iter().sum();
+        let waves = waves_needed(hot_blocks.min(self.hot_set.len().div_ceil(epb)), window);
+        env.switch.note_memory_demand(slots_bytes.min(mem), slots_bytes);
+        let t_switch = env.upload_phase(&local.ready, &switch_pkts, waves);
+        env.charge_retransmissions(&t_switch, &mut traffic);
+        let t_server = common::server_path(env, &local.ready, &server_pkts);
+        let merge_end = t_switch.end.max(t_server);
+
+        // Server merges hot aggregate + cold aggregate; broadcast union
+        // as (index, value) pairs.
+        let union_elems =
+            hot_acc.iter().filter(|&&v| v != 0).count() + cold_acc.len();
+        let t_done = env.broadcast(merge_end, union_elems * 8, &mut traffic, false);
+
+        // Apply.
+        let scale = 1.0 / (n as f32 * f);
+        for (slot, &dim) in self.hot_set.iter().enumerate() {
+            if hot_acc[slot] != 0 {
+                env.params[dim] -= hot_acc[slot] as f32 * scale;
+            }
+        }
+        for (&dim, &v) in &cold_acc {
+            env.params[dim] -= v as f32 * scale;
+        }
+
+        env.traffic_total.add(&traffic);
+        Ok(RoundReport {
+            round,
+            duration_s: t_done,
+            train_loss: local.mean_loss,
+            traffic,
+            agg_ops: env.switch.stats().agg_ops - agg_ops_before,
+            uploaded_elems: uploaded,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, Partition};
+    use crate::data::synth;
+    use crate::fl::NativeBackend;
+
+    fn make_env(n: usize) -> FlEnv {
+        let cfg = ExperimentConfig {
+            num_clients: n,
+            ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+        };
+        let fd = synth::generate(cfg.dataset, cfg.partition, n, 40, cfg.seed);
+        let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+        let mut env = FlEnv::new(cfg, backend);
+        env.init_model();
+        env
+    }
+
+    #[test]
+    fn learns_over_rounds() {
+        let mut env = make_env(4);
+        let mut alg = Libra::new(&env.cfg, env.d());
+        let mut first = None;
+        let mut last = 0.0;
+        for round in 0..10 {
+            let r = alg.run_round(&mut env, round).unwrap();
+            if round == 0 {
+                first = Some(r.train_loss);
+            }
+            last = r.train_loss;
+        }
+        assert!(last < first.unwrap());
+    }
+
+    #[test]
+    fn hot_set_forms_after_first_round() {
+        let mut env = make_env(4);
+        let mut alg = Libra::new(&env.cfg, env.d());
+        assert!(alg.hot_set.is_empty());
+        alg.run_round(&mut env, 0).unwrap();
+        let r1 = alg.run_round(&mut env, 1).unwrap();
+        assert!(!alg.hot_set.is_empty(), "hotness EMA never formed a hot set");
+        // Once hot slots exist the switch sees traffic.
+        assert!(r1.agg_ops > 0, "hot path unused");
+    }
+
+    #[test]
+    fn round0_is_all_cold() {
+        // No hot set yet ⇒ everything goes to the server, zero PS ops.
+        let mut env = make_env(4);
+        let mut alg = Libra::new(&env.cfg, env.d());
+        let r0 = alg.run_round(&mut env, 0).unwrap();
+        assert_eq!(r0.agg_ops, 0);
+        assert!(r0.traffic.up_bytes > 0);
+    }
+
+    #[test]
+    fn uploads_respect_topk_budget() {
+        let mut env = make_env(4);
+        let mut alg = Libra::new(&env.cfg, env.d());
+        let r = alg.run_round(&mut env, 0).unwrap();
+        // (index,value) pairs with zero-quantised values skipped: ≤ k.
+        assert!(r.uploaded_elems <= alg.k as f64 + 0.5);
+    }
+}

@@ -1,0 +1,50 @@
+//! In-network aggregation algorithms: FediAC (the paper's contribution)
+//! and the §V-A3 baselines (SwitchML, OmniReduce, libra) plus plain
+//! server-side FedAvg. Every algorithm implements [`Algorithm`] and drives
+//! its protocol through the shared [`crate::fl::FlEnv`].
+
+pub mod common;
+pub mod fedavg;
+pub mod fediac;
+pub mod libra;
+pub mod omnireduce;
+pub mod switchml;
+
+use crate::configx::{AlgorithmKind, ExperimentConfig};
+use crate::fl::FlEnv;
+use crate::metrics::TrafficMeter;
+
+/// Outcome of one global iteration.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    pub round: usize,
+    /// Simulated duration of the round (s).
+    pub duration_s: f64,
+    /// Mean local training loss across clients.
+    pub train_loss: f64,
+    pub traffic: TrafficMeter,
+    /// Switch aggregation ops consumed this round.
+    pub agg_ops: u64,
+    /// Mean dimensions uploaded per client this round.
+    pub uploaded_elems: f64,
+}
+
+/// A federated aggregation protocol.
+pub trait Algorithm {
+    fn kind(&self) -> AlgorithmKind;
+
+    /// Execute global iteration `round`, mutating `env.params` in place
+    /// and returning timing/traffic accounting.
+    fn run_round(&mut self, env: &mut FlEnv, round: usize) -> anyhow::Result<RoundReport>;
+}
+
+/// Instantiate the algorithm named in the config.
+pub fn make_algorithm(cfg: &ExperimentConfig, d: usize) -> Box<dyn Algorithm> {
+    match cfg.algorithm {
+        AlgorithmKind::FediAc => Box::new(fediac::FediAc::new(cfg, d)),
+        AlgorithmKind::SwitchMl => Box::new(switchml::SwitchMl::new(cfg)),
+        AlgorithmKind::OmniReduce => Box::new(omnireduce::OmniReduce::new(cfg, d)),
+        AlgorithmKind::Libra => Box::new(libra::Libra::new(cfg, d)),
+        AlgorithmKind::FedAvg => Box::new(fedavg::FedAvg::new(cfg)),
+    }
+}

@@ -1,0 +1,157 @@
+//! SwitchML baseline [5]: dense b-bit quantised in-network aggregation.
+//!
+//! Every round, every client quantises all d updates into b-bit integers
+//! (the paper tunes b and finds 12 best, §V-A3) and streams them to the
+//! PS, which accumulates aligned i32 lanes slot-by-slot and multicasts
+//! the aggregate. No sparsification, no residual (the quantiser is
+//! unbiased); communication is d·b up + d·32 down per client per round.
+
+use anyhow::Result;
+
+use crate::algorithms::{common, Algorithm, RoundReport};
+use crate::compress;
+use crate::configx::{AlgorithmKind, ExperimentConfig};
+use crate::fl::FlEnv;
+use crate::metrics::TrafficMeter;
+use crate::switch::{waves_needed, RegisterFile, UpdateAggregator};
+
+pub struct SwitchMl {
+    bits: usize,
+}
+
+impl SwitchMl {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        SwitchMl { bits: cfg.baselines.switchml_bits }
+    }
+}
+
+impl Algorithm for SwitchMl {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::SwitchMl
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv, round: usize) -> Result<RoundReport> {
+        let lr = env.cfg.lr.at(round) as f32;
+        let d = env.d();
+        let n = env.cfg.num_clients;
+        let payload = env.cfg.packet_payload();
+        let agg_ops_before = env.switch.stats().agg_ops;
+        env.switch.reset_queue();
+        let mut traffic = TrafficMeter::default();
+
+        let local = common::local_training(env, round, lr, None);
+        let m = common::global_max_abs(&local.updates);
+        let f = compress::scale_factor(self.bits, n, m);
+
+        let epb = (payload * 8 / self.bits).max(1);
+        let n_blocks = d.div_ceil(epb);
+        let mem = env.switch.profile().memory_bytes;
+        let window = (mem / (epb * 4)).max(1);
+        let waves = waves_needed(n_blocks, window);
+        env.switch.note_memory_demand((d * 4).min(mem), d * 4);
+
+        let mut file = RegisterFile::new(d * 4);
+        let mut agg = UpdateAggregator::new(&mut file, d, n, epb).unwrap();
+        let ones = vec![1.0f32; d];
+        let bits_up = d * self.bits;
+        let pkts: Vec<usize> = vec![env.packets_for_bits(bits_up); n];
+        for i in 0..n {
+            // The unbiased quantiser is the same L1 kernel FediAC uses,
+            // with an all-ones mask (SwitchML keeps every dimension).
+            let seed = 0x50ED_0000 | (round as i64) << 8 | i as i64;
+            let (q, _residual) = env.backend.compress(&local.updates[i], &ones, f, seed);
+            for block in 0..n_blocks {
+                let lo = block * epb;
+                let hi = ((block + 1) * epb).min(d);
+                agg.ingest(i, block, &q[lo..hi]);
+            }
+            env.charge_upload(bits_up.div_ceil(8), pkts[i], &mut traffic, false);
+        }
+        debug_assert!(agg.all_complete());
+
+        let t_up = env.upload_phase(&local.ready, &pkts, waves);
+        env.charge_retransmissions(&t_up, &mut traffic);
+        let t_done = env.broadcast(t_up.end, d * 4, &mut traffic, false);
+
+        let overflow = agg.overflow_lanes();
+        if overflow > 0 {
+            env.switch.note_overflow(overflow);
+        }
+        let delta = compress::dequantize_aggregate(agg.aggregate(), n, f);
+        agg.release(&mut file);
+        common::apply_dense_delta(&mut env.params, &delta);
+
+        env.traffic_total.add(&traffic);
+        Ok(RoundReport {
+            round,
+            duration_s: t_done,
+            train_loss: local.mean_loss,
+            traffic,
+            agg_ops: env.switch.stats().agg_ops - agg_ops_before,
+            uploaded_elems: d as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, Partition};
+    use crate::data::synth;
+    use crate::fl::NativeBackend;
+
+    fn make_env(n: usize) -> FlEnv {
+        let cfg = ExperimentConfig {
+            num_clients: n,
+            ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+        };
+        let fd = synth::generate(cfg.dataset, cfg.partition, n, 40, cfg.seed);
+        let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+        let mut env = FlEnv::new(cfg, backend);
+        env.init_model();
+        env
+    }
+
+    #[test]
+    fn round_runs_and_learns() {
+        let mut env = make_env(4);
+        let mut alg = SwitchMl::new(&env.cfg);
+        let mut first = None;
+        let mut last = 0.0;
+        for round in 0..8 {
+            let r = alg.run_round(&mut env, round).unwrap();
+            assert!(r.agg_ops > 0);
+            assert_eq!(r.uploaded_elems as usize, env.d());
+            if round == 0 {
+                first = Some(r.train_loss);
+            }
+            last = r.train_loss;
+        }
+        assert!(last < first.unwrap());
+    }
+
+    #[test]
+    fn traffic_is_dense_b_bits() {
+        let mut env = make_env(3);
+        let mut alg = SwitchMl::new(&env.cfg);
+        let r = alg.run_round(&mut env, 0).unwrap();
+        let d = env.d();
+        let bits = env.cfg.baselines.switchml_bits;
+        let payload = env.cfg.packet_payload();
+        let pkts = (d * bits).div_ceil(8).div_ceil(payload);
+        let expect_up = 3 * ((d * bits).div_ceil(8) + pkts * env.cfg.packet_header);
+        assert_eq!(r.traffic.up_bytes, expect_up as u64);
+        assert_eq!(r.traffic.vote_up_bytes, 0, "switchml has no vote phase");
+    }
+
+    #[test]
+    fn more_bits_more_traffic() {
+        let mut e1 = make_env(3);
+        e1.cfg.baselines.switchml_bits = 8;
+        let r8 = SwitchMl::new(&e1.cfg).run_round(&mut e1, 0).unwrap();
+        let mut e2 = make_env(3);
+        e2.cfg.baselines.switchml_bits = 14;
+        let r14 = SwitchMl::new(&e2.cfg).run_round(&mut e2, 0).unwrap();
+        assert!(r14.traffic.up_bytes > r8.traffic.up_bytes);
+    }
+}

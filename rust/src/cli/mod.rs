@@ -1,0 +1,185 @@
+//! Command-line argument parsing (clap is not available offline).
+//!
+//! Grammar: `fediac <subcommand> [--key value | --key=value | --flag] ...`.
+//! Typed getters with defaults keep call sites terse; unknown-argument
+//! detection catches typos (`finish()` must be called after all reads).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand + key/value options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("cannot parse --{key} value '{value}' as {ty}")]
+    BadValue { key: String, value: String, ty: &'static str },
+    #[error("unknown option(s): {0}")]
+    Unknown(String),
+    #[error("unexpected positional argument '{0}'")]
+    UnexpectedPositional(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, CliError> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value style: `--key value` unless next token is an option
+                    // or absent, in which case it is a boolean flag.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            args.options.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                return Err(CliError::UnexpectedPositional(tok));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_opt_str(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                ty: "f64",
+            }),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                ty: "usize",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                ty: "u64",
+            }),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on any option that was provided but never read (typo guard).
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.options.keys().filter(|k| !consumed.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig2", "--rounds", "40", "--ps=low", "--quiet"]);
+        assert_eq!(a.subcommand(), Some("fig2"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 40);
+        assert_eq!(a.get_str("ps", "high"), "low");
+        assert!(a.get_flag("quiet"));
+        assert!(!a.get_flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["table"]);
+        assert_eq!(a.get_f64("beta", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_str("dataset", "cifar10"), "cifar10");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["x", "--rounds", "abc"]);
+        assert!(a.get_usize("rounds", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = parse(&["x", "--runds", "3"]);
+        let _ = a.get_usize("rounds", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn unexpected_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+
+    #[test]
+    fn equals_and_space_styles_agree() {
+        let a = parse(&["run", "--n=30"]);
+        let b = parse(&["run", "--n", "30"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), b.get_usize("n", 0).unwrap());
+    }
+}

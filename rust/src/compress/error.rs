@@ -1,0 +1,78 @@
+//! Empirical compression-error measurement.
+//!
+//! γ̂ = ‖Π(Θ(f·U)) − f·U‖² / ‖f·U‖² — the quantity Proposition 1 bounds.
+//! Experiments compare this Monte-Carlo estimate against the analytic γ
+//! from `theory::prop1` (E7) and the convergence requirement 0 < γ < 1.
+
+/// Relative squared compression error of one client's round.
+pub fn relative_error(q: &[i32], updates: &[f32], f: f32) -> f64 {
+    debug_assert_eq!(q.len(), updates.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..q.len() {
+        let target = updates[i] as f64 * f as f64;
+        let got = q[i] as f64;
+        num += (got - target) * (got - target);
+        den += target * target;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::{max_abs, quantize_sparsify, scale_factor};
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn zero_error_when_everything_kept_and_integral() {
+        let updates = vec![1.0f32, -2.0, 3.0];
+        let q = vec![2, -4, 6];
+        assert_eq!(relative_error(&q, &updates, 2.0), 0.0);
+    }
+
+    #[test]
+    fn full_mask_error_below_one() {
+        // With everything uploaded, only rounding error remains: γ̂ ≪ 1.
+        let mut rng = Rng::new(3);
+        let updates = prop::gen_updates(&mut rng, 4096, 0.05);
+        let mask = vec![1.0f32; 4096];
+        let f = scale_factor(12, 20, max_abs(&updates));
+        let (q, _) = quantize_sparsify(&updates, &mask, f, &mut rng);
+        let g = relative_error(&q, &updates, f);
+        assert!(g < 0.05, "γ̂ {g}");
+    }
+
+    #[test]
+    fn empty_mask_error_is_one() {
+        // Nothing uploaded ⇒ the full signal is lost: γ̂ = 1.
+        let mut rng = Rng::new(4);
+        let updates = prop::gen_updates(&mut rng, 1024, 0.05);
+        let mask = vec![0.0f32; 1024];
+        let f = scale_factor(12, 20, max_abs(&updates));
+        let (q, _) = quantize_sparsify(&updates, &mask, f, &mut rng);
+        let g = relative_error(&q, &updates, f);
+        assert!((g - 1.0).abs() < 1e-9, "γ̂ {g}");
+    }
+
+    #[test]
+    fn error_decreases_with_mask_coverage() {
+        let mut rng = Rng::new(5);
+        let updates = prop::gen_updates(&mut rng, 2048, 0.05);
+        let f = scale_factor(12, 20, max_abs(&updates));
+        let gamma_at = |frac: f64, rng: &mut Rng| {
+            let mask: Vec<f32> = (0..2048)
+                .map(|i| if (i as f64 / 2048.0) < frac { 1.0 } else { 0.0 })
+                .collect();
+            let (q, _) = quantize_sparsify(&updates, &mask, f, rng);
+            relative_error(&q, &updates, f)
+        };
+        let g20 = gamma_at(0.2, &mut rng);
+        let g80 = gamma_at(0.8, &mut rng);
+        assert!(g80 < g20, "g80 {g80} vs g20 {g20}");
+    }
+}

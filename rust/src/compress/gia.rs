@@ -1,0 +1,115 @@
+//! Global Index Array deduction — host-side reference of §IV step 2.
+//!
+//! The switch's `VoteAggregator` performs this in the data plane; this
+//! module is the one-shot reference used by tests (the two must agree
+//! exactly) and by algorithms that need consensus statistics without a
+//! switch instance (e.g. the theory explorer).
+
+use crate::util::BitVec;
+
+/// Aggregate client vote bitmaps and threshold with `a`:
+/// GIA[l] = 1 iff at least `a` clients voted dimension l.
+pub fn deduce_gia(votes: &[BitVec], threshold_a: usize) -> BitVec {
+    assert!(!votes.is_empty());
+    let d = votes[0].len();
+    let mut counts = vec![0u16; d];
+    for v in votes {
+        assert_eq!(v.len(), d, "vote arrays must share dimension");
+        for i in v.iter_ones() {
+            counts[i] += 1;
+        }
+    }
+    let mut gia = BitVec::zeros(d);
+    for (i, &c) in counts.iter().enumerate() {
+        if c as usize >= threshold_a {
+            gia.set(i, true);
+        }
+    }
+    gia
+}
+
+/// Vote histogram (how many clients voted each dimension).
+pub fn vote_histogram(votes: &[BitVec]) -> Vec<u16> {
+    let d = votes[0].len();
+    let mut counts = vec![0u16; d];
+    for v in votes {
+        for i in v.iter_ones() {
+            counts[i] += 1;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    #[test]
+    fn motivation_example() {
+        // §III-B: 11100 and 01110 with a=2 ⇒ 01100.
+        let votes = vec![
+            BitVec::from_indices(5, &[0, 1, 2]),
+            BitVec::from_indices(5, &[1, 2, 3]),
+        ];
+        let gia = deduce_gia(&votes, 2);
+        assert_eq!(gia.iter_ones().collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn threshold_one_is_union() {
+        let votes = vec![
+            BitVec::from_indices(8, &[0, 1]),
+            BitVec::from_indices(8, &[6]),
+        ];
+        let gia = deduce_gia(&votes, 1);
+        assert_eq!(gia.iter_ones().collect::<Vec<_>>(), vec![0, 1, 6]);
+    }
+
+    #[test]
+    fn threshold_n_is_intersection() {
+        let votes = vec![
+            BitVec::from_indices(8, &[0, 1, 5]),
+            BitVec::from_indices(8, &[1, 5, 7]),
+            BitVec::from_indices(8, &[1, 2, 5]),
+        ];
+        let gia = deduce_gia(&votes, 3);
+        assert_eq!(gia.iter_ones().collect::<Vec<_>>(), vec![1, 5]);
+    }
+
+    #[test]
+    fn gia_monotone_in_threshold() {
+        // Raising a can only shrink the GIA (the property behind the
+        // paper's "larger a ⇒ higher compression rate" remark).
+        prop::check("gia_monotone", 32, |rng| {
+            let d = 128;
+            let n = 2 + rng.below(18);
+            let votes: Vec<BitVec> = (0..n)
+                .map(|_| {
+                    let k = rng.below(d);
+                    let mut idx: Vec<usize> = (0..d).collect();
+                    let mut r2 = Rng::new(rng.next_u64());
+                    r2.shuffle(&mut idx);
+                    BitVec::from_indices(d, &idx[..k])
+                })
+                .collect();
+            let mut prev = deduce_gia(&votes, 1).count_ones();
+            for a in 2..=n {
+                let cur = deduce_gia(&votes, a).count_ones();
+                crate::prop_assert!(cur <= prev, "a={a}: {cur} > {prev}");
+                prev = cur;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let votes = vec![
+            BitVec::from_indices(4, &[0, 2]),
+            BitVec::from_indices(4, &[0, 3]),
+        ];
+        assert_eq!(vote_histogram(&votes), vec![2, 0, 1, 1]);
+    }
+}

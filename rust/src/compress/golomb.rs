@@ -1,0 +1,219 @@
+//! Golomb–Rice coding of 0-1 index arrays — the second §IV-D candidate.
+//!
+//! A sparse vote bitmap is a sequence of gaps between set bits; for k
+//! random votes over d dimensions the gaps are ≈ geometric with mean
+//! d/k, for which Golomb coding with M ≈ 0.69·d/k is the optimal prefix
+//! code. We use the Rice restriction (M = 2^r) for cheap shifts — the
+//! same trade-off a switch/NIC implementation would make.
+//!
+//! `bench_compress` (E8) compares raw bitmap vs RLE vs Golomb–Rice.
+
+use crate::util::BitVec;
+
+/// Bit-granular writer.
+struct BitWriter {
+    bytes: Vec<u8>,
+    bit: u8,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { bytes: Vec::new(), bit: 0 }
+    }
+
+    fn push_bit(&mut self, b: bool) {
+        if self.bit == 0 {
+            self.bytes.push(0);
+        }
+        if b {
+            *self.bytes.last_mut().unwrap() |= 1 << self.bit;
+        }
+        self.bit = (self.bit + 1) & 7;
+    }
+
+    fn push_bits(&mut self, value: u64, n: u32) {
+        for i in (0..n).rev() {
+            self.push_bit((value >> i) & 1 == 1);
+        }
+    }
+
+    fn finish(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// Bit-granular reader.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn read_bit(&mut self) -> Option<bool> {
+        let byte = *self.bytes.get(self.pos >> 3)?;
+        let b = (byte >> (self.pos & 7)) & 1 == 1;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn read_bits(&mut self, n: u32) -> Option<u64> {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit()? as u64;
+        }
+        Some(v)
+    }
+}
+
+/// Rice parameter r chosen from the density: M = 2^r ≈ 0.69·d/k.
+pub fn rice_param(d: usize, ones: usize) -> u32 {
+    if ones == 0 || d == 0 {
+        return 0;
+    }
+    let target = 0.69 * d as f64 / ones as f64;
+    target.max(1.0).log2().round().clamp(0.0, 32.0) as u32
+}
+
+/// Encode: header (d, count, r as LEB128-ish u32s) + Rice-coded gaps.
+pub fn encode(bv: &BitVec) -> Vec<u8> {
+    let ones: Vec<usize> = bv.iter_ones().collect();
+    let r = rice_param(bv.len(), ones.len());
+    let mut w = BitWriter::new();
+    w.push_bits(bv.len() as u64, 32);
+    w.push_bits(ones.len() as u64, 32);
+    w.push_bits(r as u64, 6);
+    let mut prev = 0usize;
+    for (i, &idx) in ones.iter().enumerate() {
+        let gap = if i == 0 { idx } else { idx - prev - 1 } as u64;
+        prev = idx;
+        // Rice: quotient unary + r remainder bits.
+        let q = gap >> r;
+        for _ in 0..q {
+            w.push_bit(true);
+        }
+        w.push_bit(false);
+        w.push_bits(gap & ((1u64 << r) - 1).max(0), r);
+    }
+    w.finish()
+}
+
+/// Decode; None on malformed input.
+pub fn decode(bytes: &[u8]) -> Option<BitVec> {
+    let mut rd = BitReader { bytes, pos: 0 };
+    let d = rd.read_bits(32)? as usize;
+    let count = rd.read_bits(32)? as usize;
+    let r = rd.read_bits(6)? as u32;
+    if count > d {
+        return None;
+    }
+    let mut bv = BitVec::zeros(d);
+    let mut prev: Option<usize> = None;
+    for _ in 0..count {
+        let mut q = 0u64;
+        loop {
+            match rd.read_bit()? {
+                true => q += 1,
+                false => break,
+            }
+            if q as usize > d {
+                return None;
+            }
+        }
+        let rem = rd.read_bits(r)?;
+        let gap = (q << r) | rem;
+        let idx = match prev {
+            None => gap as usize,
+            Some(p) => p + 1 + gap as usize,
+        };
+        if idx >= d {
+            return None;
+        }
+        bv.set(idx, true);
+        prev = Some(idx);
+    }
+    Some(bv)
+}
+
+/// Encoded size in bytes.
+pub fn encoded_bytes(bv: &BitVec) -> usize {
+    encode(bv).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn roundtrip_simple_patterns() {
+        for pattern in [
+            vec![],
+            vec![0usize],
+            vec![9],
+            vec![0, 1, 2],
+            vec![0, 5, 9],
+            (0..10).collect::<Vec<_>>(),
+        ] {
+            let bv = BitVec::from_indices(10, &pattern);
+            assert_eq!(decode(&encode(&bv)).unwrap(), bv, "{pattern:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop::check("golomb_roundtrip", prop::default_cases(), |rng| {
+            let d = prop::gen_dim(rng);
+            let density = rng.f64() * rng.f64(); // biased sparse
+            let mut bv = BitVec::zeros(d);
+            for i in 0..d {
+                if rng.f64() < density {
+                    bv.set(i, true);
+                }
+            }
+            let dec = decode(&encode(&bv)).ok_or("decode failed")?;
+            crate::prop_assert!(dec == bv, "golomb roundtrip d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_votes_beat_raw_bitmap() {
+        let d = 100_000;
+        let k = d / 20; // the paper's 5% vote density
+        let mut rng = Rng::new(11);
+        let mut idx: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut idx);
+        let bv = BitVec::from_indices(d, &idx[..k]);
+        let raw = bv.payload_bytes();
+        let gol = encoded_bytes(&bv);
+        assert!(gol < raw, "golomb {gol} >= raw {raw}");
+    }
+
+    #[test]
+    fn golomb_beats_rle_on_random_sparse() {
+        // Random (geometric-gap) patterns are Golomb's sweet spot; RLE
+        // wins only on long literal runs.
+        use crate::compress::rle;
+        let d = 50_000;
+        let mut rng = Rng::new(12);
+        let mut idx: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut idx);
+        let bv = BitVec::from_indices(d, &idx[..d / 50]);
+        let gol = encoded_bytes(&bv);
+        let r = rle::encoded_bytes(&bv);
+        assert!(gol <= r, "golomb {gol} > rle {r} on random sparse");
+    }
+
+    #[test]
+    fn rice_param_tracks_density() {
+        assert!(rice_param(100_000, 50_000) < rice_param(100_000, 1_000));
+        assert_eq!(rice_param(100, 0), 0);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(decode(&[]).is_none());
+        let enc = encode(&BitVec::from_indices(100, &[3, 50]));
+        assert!(decode(&enc[..enc.len() - 1]).is_none());
+    }
+}

@@ -1,0 +1,18 @@
+//! Compression substrate: Eq.-1 stochastic quantisation, magnitude-
+//! proportional voting, Topk, GIA deduction, RLE index-array coding and
+//! empirical compression-error measurement.
+
+pub mod error;
+pub mod gia;
+pub mod golomb;
+pub mod quantize;
+pub mod rle;
+pub mod topk;
+pub mod vote;
+
+pub use gia::deduce_gia;
+pub use quantize::{
+    dequantize_aggregate, max_abs, quantize_dense, quantize_sparsify, scale_factor,
+};
+pub use topk::{topk_by_magnitude, topk_mask, topk_sparse};
+pub use vote::{top_k_indices, vote_bitmap, vote_bitmap_from_scores, vote_scores_native};

@@ -1,0 +1,181 @@
+//! Unbiased stochastic integer quantisation — Eq. (1) of the paper.
+//!
+//! A model update U_l is amplified by f = (2^{b−1} − N)/(N·m) and rounded
+//! to ⌊fU⌋ or ⌈fU⌉ with probabilities that make the result unbiased:
+//! E[θ(fU)] = fU. The amplification bound guarantees the *aggregate* of N
+//! clients fits in a signed (b + log₂N)-bit register without overflow.
+//!
+//! This is the rust mirror of the L1 Pallas kernel (same math, same
+//! residual law); the PJRT backend runs the kernel artifact, the native
+//! backend runs this. `tests/protocol_props.rs` cross-checks the two.
+
+use crate::util::Rng;
+
+/// Amplification factor f = (2^{b−1} − N)/(N·m) (§IV step 3).
+pub fn scale_factor(bits_b: usize, n_clients: usize, max_abs: f32) -> f32 {
+    assert!(bits_b >= 2 && bits_b <= 31, "b={bits_b} out of range");
+    let numer = (1i64 << (bits_b - 1)) as f32 - n_clients as f32;
+    assert!(numer > 0.0, "2^(b-1) must exceed N");
+    let denom = n_clients as f32 * max_abs.max(f32::MIN_POSITIVE);
+    numer / denom
+}
+
+/// Stochastically round one amplified value (Eq. 1).
+#[inline]
+pub fn stochastic_round(amplified: f32, rng: &mut Rng) -> i32 {
+    let low = amplified.floor();
+    let frac = amplified - low;
+    let up = (rng.f32() < frac) as i32;
+    low as i32 + up
+}
+
+/// Quantise + sparsify a full update vector against a 0/1 mask, producing
+/// the integers to upload and the residual error to carry to round t+1:
+/// e = (f·U − Π(Θ(f·U)))/f (Algorithm 1 line 9). `mask[i]` uses 0.0/1.0
+/// exactly like the GIA the compress artifact consumes.
+pub fn quantize_sparsify(
+    updates: &[f32],
+    mask: &[f32],
+    f: f32,
+    rng: &mut Rng,
+) -> (Vec<i32>, Vec<f32>) {
+    debug_assert_eq!(updates.len(), mask.len());
+    let mut q = vec![0i32; updates.len()];
+    let mut residual = vec![0f32; updates.len()];
+    for i in 0..updates.len() {
+        let amplified = updates[i] * f;
+        if mask[i] != 0.0 {
+            let v = stochastic_round(amplified, rng);
+            q[i] = v;
+            residual[i] = (amplified - v as f32) / f;
+        } else {
+            residual[i] = updates[i];
+        }
+    }
+    (q, residual)
+}
+
+/// Dense variant (all-ones mask) used by SwitchML.
+pub fn quantize_dense(updates: &[f32], f: f32, rng: &mut Rng) -> Vec<i32> {
+    updates.iter().map(|&u| stochastic_round(u * f, rng)).collect()
+}
+
+/// Recover the float aggregate: w_{t+1} = w_t − Σq/(N·f) (§IV step 4).
+pub fn dequantize_aggregate(agg: &[i32], n_clients: usize, f: f32) -> Vec<f32> {
+    let scale = 1.0 / (n_clients as f32 * f);
+    agg.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Max |U| over a vector (the m in the scale factor).
+pub fn max_abs(updates: &[f32]) -> f32 {
+    updates.iter().fold(0.0f32, |m, &u| m.max(u.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn scale_factor_paper_form() {
+        // b=12, N=20, m=0.5: f = (2048−20)/(20·0.5) = 202.8.
+        let f = scale_factor(12, 20, 0.5);
+        assert!((f - 202.8).abs() < 1e-3, "{f}");
+    }
+
+    #[test]
+    fn aggregate_fits_in_register() {
+        // N clients each upload ≤ f·m + 1 < 2^{b−1}/N + 1 in magnitude, so
+        // the N-client sum stays far from i32 overflow for b ≤ 31.
+        let n = 20;
+        let b = 12;
+        let m = 1.0;
+        let f = scale_factor(b, n, m);
+        let per_client_max = (f * m).ceil() as i64 + 1;
+        assert!(n as i64 * per_client_max < (1i64 << (b as i64)));
+    }
+
+    #[test]
+    fn quantization_unbiased() {
+        let mut rng = Rng::new(1);
+        let x = 3.37f32;
+        let trials = 60_000;
+        let sum: i64 = (0..trials).map(|_| stochastic_round(x, &mut rng) as i64).sum();
+        let mean = sum as f64 / trials as f64;
+        assert!((mean - x as f64).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn quantization_handles_negative() {
+        let mut rng = Rng::new(2);
+        let x = -2.25f32;
+        let trials = 60_000;
+        let sum: i64 = (0..trials).map(|_| stochastic_round(x, &mut rng) as i64).sum();
+        let mean = sum as f64 / trials as f64;
+        assert!((mean - x as f64).abs() < 0.01, "mean {mean}");
+        for _ in 0..1000 {
+            let v = stochastic_round(x, &mut rng);
+            assert!(v == -3 || v == -2);
+        }
+    }
+
+    #[test]
+    fn residual_identity_property() {
+        // f·U = q + f·e on masked lanes; e = U on unmasked lanes.
+        prop::check("residual_identity", prop::default_cases(), |rng| {
+            let d = prop::gen_dim(rng);
+            let updates = prop::gen_updates(rng, d, 0.05);
+            let mask: Vec<f32> =
+                (0..d).map(|_| if rng.f64() < 0.4 { 1.0 } else { 0.0 }).collect();
+            let f = scale_factor(12, 20, max_abs(&updates).max(1e-6));
+            let (q, e) = quantize_sparsify(&updates, &mask, f, rng);
+            for i in 0..d {
+                if mask[i] != 0.0 {
+                    let lhs = q[i] as f64 + f as f64 * e[i] as f64;
+                    let rhs = f as f64 * updates[i] as f64;
+                    crate::prop_assert!(
+                        (lhs - rhs).abs() <= 1e-2 * rhs.abs().max(1.0),
+                        "lane {i}: {lhs} != {rhs}"
+                    );
+                } else {
+                    crate::prop_assert!(q[i] == 0, "masked lane {i} leaked {}", q[i]);
+                    crate::prop_assert!(
+                        (e[i] - updates[i]).abs() < 1e-6,
+                        "masked residual {i}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_one() {
+        prop::check("round_err_lt_1", 32, |rng| {
+            let d = prop::gen_dim(rng);
+            let updates = prop::gen_updates(rng, d, 0.1);
+            let f = scale_factor(10, 20, max_abs(&updates).max(1e-6));
+            let q = quantize_dense(&updates, f, rng);
+            for i in 0..d {
+                let err = (q[i] as f32 - updates[i] * f).abs();
+                crate::prop_assert!(err < 1.0 + 1e-4, "lane {i} err {err}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dequantize_inverts_scale() {
+        let agg = vec![100, -200, 0];
+        let out = dequantize_aggregate(&agg, 20, 5.0);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!((out[1] + 2.0).abs() < 1e-6);
+        assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn max_abs_basics() {
+        assert_eq!(max_abs(&[0.5, -2.0, 1.0]), 2.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! Deterministic Topk sparsification [13] — the compression primitive the
+//! libra and OmniReduce baselines are built on (§V-A3: both "will be
+//! sparsified using Topk before uploading").
+
+use crate::compress::vote::top_k_indices;
+use crate::util::BitVec;
+
+/// Indices of the k largest-|v| entries (ascending index order).
+pub fn topk_by_magnitude(values: &[f32], k: usize) -> Vec<usize> {
+    let mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+    top_k_indices(&mags, k)
+}
+
+/// Topk selection as a mask bitmap.
+pub fn topk_mask(values: &[f32], k: usize) -> BitVec {
+    BitVec::from_indices(values.len(), &topk_by_magnitude(values, k))
+}
+
+/// Sparse (index, value) pairs for the k largest-|v| entries.
+pub fn topk_sparse(values: &[f32], k: usize) -> Vec<(usize, f32)> {
+    topk_by_magnitude(values, k).into_iter().map(|i| (i, values[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let v = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        assert_eq!(topk_by_magnitude(&v, 2), vec![1, 3]);
+        let sparse = topk_sparse(&v, 2);
+        assert_eq!(sparse, vec![(1, -5.0), (3, 3.0)]);
+    }
+
+    #[test]
+    fn mask_matches_indices() {
+        let v = vec![1.0, -2.0, 0.5, 4.0];
+        let mask = topk_mask(&v, 2);
+        assert_eq!(mask.iter_ones().collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(mask.count_ones(), 2);
+    }
+
+    #[test]
+    fn k_larger_than_d() {
+        let v = vec![1.0, 2.0];
+        assert_eq!(topk_by_magnitude(&v, 10), vec![0, 1]);
+    }
+}

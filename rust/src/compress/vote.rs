@@ -1,0 +1,175 @@
+//! Magnitude-proportional voting (§IV step 1) + top-k selection.
+//!
+//! "Client i probabilistically votes k elements. The odds to vote each
+//! model update is proportional to its magnitude." Sampling k indices
+//! without replacement with probability ∝ |U_l| is realised by the
+//! Gumbel-top-k identity: perturb log|U_l| with Gumbel(0,1) noise and take
+//! the k largest scores. The PJRT backend computes scores with the Pallas
+//! `vote` artifact; this module provides the native scorer plus the
+//! top-k selector both backends share (selection stays in rust so k is a
+//! runtime parameter).
+
+use crate::util::{BitVec, Rng};
+
+/// Native Gumbel vote scores (semantics mirror kernels/vote_kernel.py).
+///
+/// Perf: top-k only cares about the *ordering*, and
+/// log|u| + Gumbel = log|u| − log(−log U) = log(|u| / E) with
+/// E = −log U ~ Exp(1), so we return the monotone-equivalent linear-domain
+/// score |u|/E — one `ln` per element instead of three. This is exactly
+/// the exponential-race formulation of Gumbel-top-k (identical selection
+/// distribution); EXPERIMENTS.md §Perf records the 2.3× speedup.
+pub fn vote_scores_native(updates: &[f32], rng: &mut Rng) -> Vec<f32> {
+    updates
+        .iter()
+        .map(|&u| {
+            let e = -(rng.f64_open().ln()) as f32; // Exp(1)
+            (u.abs() + 1e-30) / e
+        })
+        .collect()
+}
+
+/// Indices of the k largest scores (unordered). O(d) quickselect + final
+/// partition; the hot path for every client every round.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let d = scores.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= d {
+        return (0..d).collect();
+    }
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    // Quickselect on scores so that the top-k occupy idx[..k].
+    let mut lo = 0usize;
+    let mut hi = d;
+    let target = k;
+    let mut state = 0x9E3779B97F4A7C15u64 ^ (d as u64);
+    while hi - lo > 1 {
+        // Deterministic pseudo-random pivot to dodge adversarial patterns.
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let pivot_pos = lo + (state as usize) % (hi - lo);
+        let pivot = scores[idx[pivot_pos] as usize];
+        // Partition: larger-than-pivot first.
+        let mut i = lo;
+        let mut j = hi - 1;
+        while i <= j {
+            while scores[idx[i] as usize] > pivot {
+                i += 1;
+            }
+            while scores[idx[j] as usize] < pivot {
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            }
+            if i <= j {
+                idx.swap(i, j);
+                i += 1;
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            }
+        }
+        if target <= j + 1 {
+            hi = j + 1;
+        } else if target >= i {
+            lo = i;
+        } else {
+            break; // pivot band covers position k
+        }
+    }
+    idx.truncate(d);
+    let mut out: Vec<usize> = idx[..k].iter().map(|&i| i as usize).collect();
+    out.sort_unstable();
+    out
+}
+
+/// One client's vote: k Gumbel-top-k indices as a packed bitmap.
+pub fn vote_bitmap(updates: &[f32], k: usize, rng: &mut Rng) -> BitVec {
+    let scores = vote_scores_native(updates, rng);
+    vote_bitmap_from_scores(&scores, k)
+}
+
+/// Build the vote bitmap from externally computed scores (PJRT path).
+pub fn vote_bitmap_from_scores(scores: &[f32], k: usize) -> BitVec {
+    let idx = top_k_indices(scores, k);
+    BitVec::from_indices(scores.len(), &idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn top_k_small_exact() {
+        let scores = vec![0.1, 5.0, -1.0, 3.0, 4.0];
+        assert_eq!(top_k_indices(&scores, 2), vec![1, 4]);
+        assert_eq!(top_k_indices(&scores, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&scores, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(top_k_indices(&scores, 9), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn top_k_matches_sort_reference() {
+        prop::check("topk_vs_sort", prop::default_cases(), |rng| {
+            let d = prop::gen_dim(rng);
+            let scores = prop::gen_updates(rng, d, 1.0);
+            let k = rng.below(d + 1);
+            let got = top_k_indices(&scores, k);
+            // Reference: full sort by (score desc, index asc is irrelevant —
+            // compare the selected score multiset instead to allow ties).
+            let mut by_score: Vec<usize> = (0..d).collect();
+            by_score.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            let mut want: Vec<f32> = by_score[..k].iter().map(|&i| scores[i]).collect();
+            let mut have: Vec<f32> = got.iter().map(|&i| scores[i]).collect();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            have.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            crate::prop_assert!(got.len() == k.min(d), "size {} != {}", got.len(), k);
+            crate::prop_assert!(want == have, "selected multiset mismatch d={d} k={k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vote_prefers_large_magnitudes() {
+        let mut rng = Rng::new(5);
+        let d = 200;
+        let mut updates = vec![0.001f32; d];
+        updates.iter_mut().take(10).for_each(|u| *u = 10.0);
+        let mut hits = vec![0usize; d];
+        let trials = 200;
+        for _ in 0..trials {
+            for i in vote_bitmap(&updates, 20, &mut rng).iter_ones() {
+                hits[i] += 1;
+            }
+        }
+        assert!(hits[..10].iter().all(|&h| h as f64 >= 0.95 * trials as f64));
+        let rest: f64 =
+            hits[10..].iter().sum::<usize>() as f64 / (d - 10) as f64 / trials as f64;
+        assert!(rest < 0.2, "background hit rate {rest}");
+    }
+
+    #[test]
+    fn vote_bitmap_has_exactly_k_bits() {
+        let mut rng = Rng::new(6);
+        let updates = prop::gen_updates(&mut rng, 1000, 0.1);
+        for k in [0usize, 1, 50, 1000] {
+            assert_eq!(vote_bitmap(&updates, k, &mut rng).count_ones(), k.min(1000));
+        }
+    }
+
+    #[test]
+    fn ties_handled() {
+        let scores = vec![1.0f32; 64];
+        let got = top_k_indices(&scores, 10);
+        assert_eq!(got.len(), 10);
+        let mut uniq = got.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 10);
+    }
+}

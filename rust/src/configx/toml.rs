@@ -1,0 +1,253 @@
+//! Minimal TOML-subset parser (serde/toml crates unavailable offline).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!
+//! ```toml
+//! # comment
+//! key = "string"            [section]
+//! key = 3.14                [section.subsection]
+//! key = 42                  key = [1, 2, 3]
+//! key = true
+//! ```
+//!
+//! Values are stored flat under dotted keys (`section.sub.key`). No
+//! multi-line strings, datetimes or inline tables — configs stay simple.
+
+use std::collections::BTreeMap;
+
+/// Parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+}
+
+/// Flat dotted-key map of parsed values.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.as_i64()).map(|i| i as u64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+}
+
+fn parse_scalar(raw: &str, line_no: usize) -> Result<Value, TomlError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(TomlError::Parse(line_no, "empty value".into()));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| TomlError::Parse(line_no, "unterminated string".into()))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| TomlError::Parse(line_no, "unterminated array".into()))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_scalar(part, line_no)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if !raw.contains('.') && !raw.contains('e') && !raw.contains('E') {
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    raw.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| TomlError::Parse(line_no, format!("cannot parse value '{raw}'")))
+}
+
+/// Parse a TOML-subset document into a flat dotted-key table.
+pub fn parse(text: &str) -> Result<Table, TomlError> {
+    let mut table = Table::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // Strip comments that are not inside a string literal.
+        let mut in_str = false;
+        let mut line = String::new();
+        for c in raw_line.chars() {
+            if c == '"' {
+                in_str = !in_str;
+            }
+            if c == '#' && !in_str {
+                break;
+            }
+            line.push(c);
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError::Parse(line_no, "unterminated section".into()))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| TomlError::Parse(line_no, "expected key = value".into()))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(TomlError::Parse(line_no, "empty key".into()));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        table.entries.insert(full_key, parse_scalar(value, line_no)?);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = r#"
+            # experiment
+            name = "cifar10_iid"
+            rounds = 60
+            lr = 0.1
+
+            [ps]
+            profile = "high"
+            agg_mean_s = 3.03e-7
+            pipelined = true
+
+            [fediac]
+            k_frac = 0.05
+            thresholds = [1, 2, 3, 4]
+        "#;
+        let t = parse(doc).unwrap();
+        assert_eq!(t.str_or("name", ""), "cifar10_iid");
+        assert_eq!(t.usize_or("rounds", 0), 60);
+        assert!((t.f64_or("lr", 0.0) - 0.1).abs() < 1e-12);
+        assert_eq!(t.str_or("ps.profile", ""), "high");
+        assert!((t.f64_or("ps.agg_mean_s", 0.0) - 3.03e-7).abs() < 1e-18);
+        assert!(t.bool_or("ps.pipelined", false));
+        match t.get("fediac.thresholds").unwrap() {
+            Value::Array(items) => {
+                let v: Vec<i64> = items.iter().map(|i| i.as_i64().unwrap()).collect();
+                assert_eq!(v, vec![1, 2, 3, 4]);
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let t = parse("label = \"a#b\"  # trailing\n").unwrap();
+        assert_eq!(t.str_or("label", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("x = \n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = parse("\n\nnonsense\n").unwrap_err();
+        assert!(err.to_string().contains("line 3"));
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let t = parse("").unwrap();
+        assert_eq!(t.usize_or("rounds", 7), 7);
+        assert_eq!(t.str_or("x", "d"), "d");
+        assert!(!t.bool_or("b", false));
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let t = parse("a = 3\nb = 3.0\nc = 1e-3\n").unwrap();
+        assert_eq!(t.get("a"), Some(&Value::Int(3)));
+        assert_eq!(t.get("b"), Some(&Value::Float(3.0)));
+        assert_eq!(t.get("c"), Some(&Value::Float(1e-3)));
+    }
+}

@@ -1,0 +1,183 @@
+//! In-memory dataset container shared by the native and PJRT backends.
+//!
+//! Samples are stored as flat f32 feature rows (images are row-major
+//! H·W·C), matching exactly what the AOT model artifacts take as input.
+
+/// A labelled dataset of flat feature rows.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// feature_len floats per sample, concatenated.
+    features: Vec<f32>,
+    labels: Vec<u16>,
+    feature_len: usize,
+    num_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(feature_len: usize, num_classes: usize) -> Self {
+        Dataset { features: Vec::new(), labels: Vec::new(), feature_len, num_classes }
+    }
+
+    pub fn push(&mut self, features: &[f32], label: u16) {
+        debug_assert_eq!(features.len(), self.feature_len);
+        debug_assert!((label as usize) < self.num_classes);
+        self.features.extend_from_slice(features);
+        self.labels.push(label);
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_len(&self) -> usize {
+        self.feature_len
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn features_of(&self, idx: usize) -> &[f32] {
+        let lo = idx * self.feature_len;
+        &self.features[lo..lo + self.feature_len]
+    }
+
+    pub fn label_of(&self, idx: usize) -> u16 {
+        self.labels[idx]
+    }
+
+    pub fn labels(&self) -> &[u16] {
+        &self.labels
+    }
+
+    /// Gather a batch into caller-provided buffers (no allocation on the
+    /// training hot path).
+    pub fn fill_batch(&self, indices: &[usize], feat_out: &mut [f32], label_out: &mut [i32]) {
+        debug_assert_eq!(feat_out.len(), indices.len() * self.feature_len);
+        debug_assert_eq!(label_out.len(), indices.len());
+        for (row, &idx) in indices.iter().enumerate() {
+            let src = self.features_of(idx);
+            feat_out[row * self.feature_len..(row + 1) * self.feature_len]
+                .copy_from_slice(src);
+            label_out[row] = self.labels[idx] as i32;
+        }
+    }
+
+    /// Per-class sample counts (used by partition tests / non-IID metrics).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut hist = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            hist[l as usize] += 1;
+        }
+        hist
+    }
+}
+
+/// Train/test split of a generated corpus plus the per-client partition.
+#[derive(Debug, Clone)]
+pub struct FederatedData {
+    pub train: Dataset,
+    pub test: Dataset,
+    /// Per-client indices into `train`.
+    pub client_indices: Vec<Vec<usize>>,
+}
+
+impl FederatedData {
+    pub fn n_clients(&self) -> usize {
+        self.client_indices.len()
+    }
+
+    /// Label distribution divergence: mean total-variation distance between
+    /// each client's label histogram and the global one. 0 ⇒ perfectly IID.
+    pub fn noniid_degree(&self) -> f64 {
+        let c = self.train.num_classes();
+        let mut global = vec![0f64; c];
+        for &l in self.train.labels() {
+            global[l as usize] += 1.0;
+        }
+        let total: f64 = global.iter().sum();
+        global.iter_mut().for_each(|x| *x /= total);
+        let mut tv_sum = 0.0;
+        for indices in &self.client_indices {
+            if indices.is_empty() {
+                continue;
+            }
+            let mut local = vec![0f64; c];
+            for &i in indices {
+                local[self.train.label_of(i) as usize] += 1.0;
+            }
+            let n: f64 = local.iter().sum();
+            local.iter_mut().for_each(|x| *x /= n);
+            tv_sum += global
+                .iter()
+                .zip(&local)
+                .map(|(g, l)| (g - l).abs())
+                .sum::<f64>()
+                / 2.0;
+        }
+        tv_sum / self.client_indices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dataset() -> Dataset {
+        let mut ds = Dataset::new(3, 2);
+        ds.push(&[1.0, 2.0, 3.0], 0);
+        ds.push(&[4.0, 5.0, 6.0], 1);
+        ds.push(&[7.0, 8.0, 9.0], 1);
+        ds
+    }
+
+    #[test]
+    fn push_and_access() {
+        let ds = tiny_dataset();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.features_of(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ds.label_of(2), 1);
+        assert_eq!(ds.class_histogram(), vec![1, 2]);
+    }
+
+    #[test]
+    fn fill_batch_gathers() {
+        let ds = tiny_dataset();
+        let mut feats = vec![0f32; 6];
+        let mut labels = vec![0i32; 2];
+        ds.fill_batch(&[2, 0], &mut feats, &mut labels);
+        assert_eq!(feats, vec![7.0, 8.0, 9.0, 1.0, 2.0, 3.0]);
+        assert_eq!(labels, vec![1, 0]);
+    }
+
+    #[test]
+    fn noniid_degree_extremes() {
+        // Two clients, two classes: identical split ⇒ 0; disjoint ⇒ high.
+        let mut train = Dataset::new(1, 2);
+        for i in 0..100 {
+            train.push(&[i as f32], (i % 2) as u16);
+        }
+        let iid = FederatedData {
+            train: train.clone(),
+            test: Dataset::new(1, 2),
+            client_indices: vec![
+                (0..50).collect::<Vec<_>>(),
+                (50..100).collect::<Vec<_>>(),
+            ],
+        };
+        assert!(iid.noniid_degree() < 0.05, "{}", iid.noniid_degree());
+        let disjoint = FederatedData {
+            train,
+            test: Dataset::new(1, 2),
+            client_indices: vec![
+                (0..100).step_by(2).collect::<Vec<_>>(),   // all class 0
+                (1..100).step_by(2).collect::<Vec<_>>(),   // all class 1
+            ],
+        };
+        assert!(disjoint.noniid_degree() > 0.45, "{}", disjoint.noniid_degree());
+    }
+}

@@ -1,0 +1,149 @@
+//! Client data partitioners (§V-A1).
+//!
+//! * IID: shuffle the corpus and split uniformly — "the label distribution
+//!   is the same for different clients".
+//! * Dirichlet(β): draw one label distribution per client from a symmetric
+//!   Dirichlet and assign samples accordingly — "the default parameter of
+//!   the Dirichlet distribution denoted by β is set to 0.5 [34]".
+//! * Natural: group by an externally supplied shard id (FEMNIST writers).
+
+use crate::util::Rng;
+
+/// Uniform IID split of `n_samples` across `n_clients`.
+pub fn partition_iid(n_samples: usize, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut indices: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut indices);
+    let mut out = vec![Vec::new(); n_clients];
+    for (i, idx) in indices.into_iter().enumerate() {
+        out[i % n_clients].push(idx);
+    }
+    out
+}
+
+/// Dirichlet(β) label-skew partition: for each class, split its samples
+/// across clients proportionally to per-client Dirichlet draws.
+pub fn partition_dirichlet(
+    labels: &[u16],
+    num_classes: usize,
+    n_clients: usize,
+    beta: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    // Samples per class, shuffled for random assignment within a class.
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        per_class[l as usize].push(i);
+    }
+    let mut out = vec![Vec::new(); n_clients];
+    for class_samples in per_class.iter_mut() {
+        rng.shuffle(class_samples);
+        // Per-client share of this class.
+        let shares = rng.dirichlet(beta, n_clients);
+        // Largest-remainder allocation of |class| samples to clients.
+        let n = class_samples.len();
+        let mut counts: Vec<usize> = shares.iter().map(|s| (s * n as f64) as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        // Distribute the remainder to the largest fractional shares.
+        let mut order: Vec<usize> = (0..n_clients).collect();
+        order.sort_by(|&a, &b| {
+            let fa = shares[a] * n as f64 - counts[a] as f64;
+            let fb = shares[b] * n as f64 - counts[b] as f64;
+            fb.partial_cmp(&fa).unwrap()
+        });
+        let mut oi = 0;
+        while assigned < n {
+            counts[order[oi % n_clients]] += 1;
+            assigned += 1;
+            oi += 1;
+        }
+        let mut cursor = 0;
+        for (client, &c) in counts.iter().enumerate() {
+            out[client].extend_from_slice(&class_samples[cursor..cursor + c]);
+            cursor += c;
+        }
+    }
+    out
+}
+
+/// Natural partition: samples carry a shard id (e.g. FEMNIST writer);
+/// client i gets every sample whose shard maps to it.
+pub fn partition_natural(shards: &[usize], n_clients: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); n_clients];
+    for (i, &s) in shards.iter().enumerate() {
+        out[s % n_clients].push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn iid_covers_everything_once() {
+        let mut rng = Rng::new(1);
+        let parts = partition_iid(103, 10, &mut rng);
+        let mut all: Vec<usize> = parts.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // Balanced within ±1.
+        for p in &parts {
+            assert!(p.len() == 10 || p.len() == 11);
+        }
+    }
+
+    #[test]
+    fn dirichlet_partition_is_exact_cover() {
+        prop::check("dirichlet_cover", 16, |rng| {
+            let n = 500;
+            let classes = 10;
+            let labels: Vec<u16> = (0..n).map(|_| rng.below(classes) as u16).collect();
+            let parts = partition_dirichlet(&labels, classes, 7, 0.5, rng);
+            let mut all: Vec<usize> = parts.iter().flatten().cloned().collect();
+            all.sort_unstable();
+            crate::prop_assert!(
+                all == (0..n).collect::<Vec<_>>(),
+                "not an exact cover: {} items",
+                all.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smaller_beta_more_skew() {
+        let mut rng = Rng::new(2);
+        let n = 4000;
+        let classes = 10;
+        let labels: Vec<u16> = (0..n).map(|i| (i % classes) as u16).collect();
+        let skew = |beta: f64, rng: &mut Rng| {
+            let parts = partition_dirichlet(&labels, classes, 10, beta, rng);
+            // Mean of per-client max class share.
+            parts
+                .iter()
+                .map(|p| {
+                    let mut hist = vec![0f64; classes];
+                    for &i in p {
+                        hist[labels[i] as usize] += 1.0;
+                    }
+                    let total: f64 = hist.iter().sum();
+                    hist.iter().cloned().fold(0.0, f64::max) / total.max(1.0)
+                })
+                .sum::<f64>()
+                / 10.0
+        };
+        let strong = skew(0.1, &mut rng);
+        let weak = skew(5.0, &mut rng);
+        assert!(strong > weak + 0.1, "strong {strong} weak {weak}");
+    }
+
+    #[test]
+    fn natural_partition_groups_by_shard() {
+        let shards = vec![0usize, 1, 2, 0, 1, 2, 5];
+        let parts = partition_natural(&shards, 3);
+        assert_eq!(parts[0], vec![0, 3]);
+        assert_eq!(parts[1], vec![1, 4]);
+        assert_eq!(parts[2], vec![2, 5, 6]); // shard 5 wraps to client 2
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrate: synthetic federated corpora (CIFAR/FEMNIST stand-ins),
+//! IID/Dirichlet/natural partitioners and the dataset container.
+
+pub mod dataset;
+pub mod dirichlet;
+pub mod synth;
+
+pub use dataset::{Dataset, FederatedData};
+pub use dirichlet::{partition_dirichlet, partition_iid, partition_natural};
+pub use synth::{feature_shape, generate, generate_with, SynthConfig};

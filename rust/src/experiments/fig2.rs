@@ -1,0 +1,132 @@
+//! E1 / Fig. 2: model accuracy vs simulated wall-clock for every
+//! algorithm, dataset, partition and PS profile.
+//!
+//! The paper's headline comparison: FediAC converges fastest in wall-clock
+//! on both high- and low-performance switches; OmniReduce is worst.
+
+use anyhow::Result;
+
+use crate::configx::{
+    AlgorithmKind, DatasetKind, ExperimentConfig, Partition, PsProfile,
+};
+use crate::experiments::{runner, RunOptions, Scale};
+use crate::metrics::RunRecorder;
+
+/// One panel of Fig. 2.
+pub struct Fig2Panel {
+    pub dataset: DatasetKind,
+    pub partition: Partition,
+    pub ps: PsProfile,
+    pub runs: Vec<(AlgorithmKind, RunRecorder)>,
+}
+
+/// Algorithms compared in Fig. 2 (FedAvg is in the repo as an extra
+/// reference but not part of the paper's figure).
+pub const FIG2_ALGOS: [AlgorithmKind; 4] = [
+    AlgorithmKind::FediAc,
+    AlgorithmKind::SwitchMl,
+    AlgorithmKind::OmniReduce,
+    AlgorithmKind::Libra,
+];
+
+/// Per-dataset simulated-time budget (the paper plots accuracy against
+/// wall-clock over a fixed span; every algorithm runs as many rounds as
+/// fit — that is where FediAC's shorter rounds pay off).
+pub fn time_budget_s(dataset: DatasetKind) -> f64 {
+    match dataset {
+        DatasetKind::Tiny => 20.0,
+        DatasetKind::SynthFemnist => 150.0,
+        DatasetKind::SynthCifar10 => 800.0,
+        DatasetKind::SynthCifar100 => 1200.0,
+    }
+}
+
+/// Run one panel.
+pub fn run_panel(
+    dataset: DatasetKind,
+    partition: Partition,
+    ps: PsProfile,
+    scale: &Scale,
+    opts: &RunOptions,
+) -> Result<Fig2Panel> {
+    let mut runs = Vec::new();
+    for alg in FIG2_ALGOS {
+        let mut cfg = ExperimentConfig::preset(dataset, partition);
+        scale.apply(&mut cfg);
+        cfg.algorithm = alg;
+        cfg.ps = ps.clone();
+        cfg.sim_time_limit_s =
+            Some(scale.sim_time_limit_s.unwrap_or_else(|| time_budget_s(dataset)));
+        runs.push((alg, runner::run(&cfg, opts)?));
+    }
+    Ok(Fig2Panel { dataset, partition, ps, runs })
+}
+
+/// Render a panel as a TSV series block (round-wise, one line per eval).
+pub fn render_panel(panel: &Fig2Panel) -> String {
+    let mut out = format!(
+        "# fig2 panel: dataset={} partition={} ps={}\n\
+         algorithm\tround\tsim_time_s\taccuracy\tcum_traffic_mb\n",
+        panel.dataset.name(),
+        panel.partition.name(),
+        panel.ps.name
+    );
+    for (alg, rec) in &panel.runs {
+        for (i, r) in rec.records.iter().enumerate() {
+            if let Some(acc) = r.test_accuracy {
+                out.push_str(&format!(
+                    "{}\t{}\t{:.3}\t{:.4}\t{:.3}\n",
+                    alg.name(),
+                    r.round,
+                    r.sim_time_s,
+                    acc,
+                    rec.cumulative_traffic(i).total_mb(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Panel summary: final accuracy per algorithm (the figure's right edge).
+pub fn final_accuracies(panel: &Fig2Panel) -> Vec<(AlgorithmKind, f64)> {
+    panel
+        .runs
+        .iter()
+        .map(|(alg, rec)| {
+            let last = rec
+                .records
+                .iter()
+                .rev()
+                .find_map(|r| r.test_accuracy)
+                .unwrap_or(0.0);
+            (*alg, last)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_panel_has_all_series() {
+        let scale = Scale { rounds: 3, num_clients: 4, ..Scale::quick() };
+        let panel = run_panel(
+            DatasetKind::Tiny,
+            Partition::Iid,
+            PsProfile::high(),
+            &scale,
+            &RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(panel.runs.len(), 4);
+        let tsv = render_panel(&panel);
+        for alg in FIG2_ALGOS {
+            assert!(tsv.contains(alg.name()), "missing {alg:?}");
+        }
+        let finals = final_accuracies(&panel);
+        assert_eq!(finals.len(), 4);
+        assert!(finals.iter().all(|&(_, a)| (0.0..=1.0).contains(&a)));
+    }
+}

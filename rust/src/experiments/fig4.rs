@@ -1,0 +1,77 @@
+//! E5 / Fig. 4: sensitivity to the voting threshold a across system
+//! scales N ∈ {20..50}, threshold a ∈ {5%, 10%, 15%, 20%}·N, IID and
+//! non-IID, low-performance PS, fixed training time.
+//!
+//! Paper's shape: a plateau of near-best accuracy for a ∈ [5%N, 15%N]
+//! (IID) / [10%N, 20%N] (non-IID); accuracy degrades as N grows at fixed
+//! time because rounds take longer.
+
+use anyhow::Result;
+
+use crate::configx::{AlgorithmKind, DatasetKind, ExperimentConfig, Partition};
+use crate::experiments::{runner, RunOptions, Scale};
+
+pub const A_FRACTIONS: [f64; 4] = [0.05, 0.10, 0.15, 0.20];
+
+/// Grid entry: (N, a, accuracy).
+pub fn run_sweep(
+    partition: Partition,
+    clients: &[usize],
+    scale: &Scale,
+    opts: &RunOptions,
+) -> Result<Vec<(usize, usize, f64)>> {
+    let mut out = Vec::new();
+    for &n in clients {
+        for &frac in &A_FRACTIONS {
+            let a = ((frac * n as f64).round() as usize).clamp(1, n);
+            let mut cfg = ExperimentConfig::preset(DatasetKind::SynthCifar10, partition);
+            scale.apply(&mut cfg);
+            cfg.algorithm = AlgorithmKind::FediAc;
+            cfg.num_clients = n;
+            cfg.fediac.threshold_a = a;
+            cfg.ps = crate::configx::PsProfile::low();
+            // Paper: fixed 500 s training-time budget (fig. 4 setup).
+            cfg.sim_time_limit_s = scale.sim_time_limit_s.or(Some(500.0));
+            let rec = runner::run(&cfg, opts)?;
+            let acc = rec
+                .records
+                .iter()
+                .rev()
+                .find_map(|r| r.test_accuracy)
+                .unwrap_or(0.0);
+            out.push((n, a, acc));
+        }
+    }
+    Ok(out)
+}
+
+pub fn render(results: &[(usize, usize, f64)], label: &str) -> String {
+    let mut out = format!(
+        "# fig4 ({label}): FediAC final accuracy vs voting threshold a\n\
+         clients_n\tthreshold_a\ta_pct_of_n\taccuracy\n"
+    );
+    for (n, a, acc) in results {
+        out.push_str(&format!(
+            "{n}\t{a}\t{:.0}%\t{acc:.4}\n",
+            100.0 * *a as f64 / *n as f64
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_grid() {
+        let scale = Scale { rounds: 3, num_clients: 6, ..Scale::quick() };
+        let res =
+            run_sweep(Partition::Iid, &[6], &scale, &RunOptions::default()).unwrap();
+        assert_eq!(res.len(), A_FRACTIONS.len());
+        // a values rise with the fraction.
+        let a_vals: Vec<usize> = res.iter().map(|&(_, a, _)| a).collect();
+        assert!(a_vals.windows(2).all(|w| w[0] <= w[1]));
+        assert!(!render(&res, "iid").is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! Paper experiment regenerators (DESIGN.md §3 index):
+//!
+//! * E1 `fig2`  — accuracy vs wall-clock per dataset/partition/PS
+//! * E2/E3 `tables` — traffic to target accuracy (Tables I & II)
+//! * E4 `fig3` — accuracy vs Dirichlet β (FediAC vs libra)
+//! * E5 `fig4` — accuracy vs voting threshold a across system scales N
+//!
+//! Each prints the paper's rows/series on stdout and writes CSVs under
+//! `results/`.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod runner;
+pub mod tables;
+
+pub use runner::{build_env, run, RunOptions};
+
+use crate::configx::{BackendKind, DatasetKind, ExperimentConfig};
+
+/// Workload scale shared by the regenerators. The paper's absolute scale
+/// (ResNet-18, 500 s budgets) is out of reach on this testbed; `quick`
+/// keeps every qualitative comparison while fitting in CI, `standard` is
+/// the EXPERIMENTS.md reference scale, and every knob is CLI-overridable.
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub rounds: usize,
+    pub num_clients: usize,
+    pub samples_per_client: usize,
+    pub sim_time_limit_s: Option<f64>,
+    pub backend: BackendKind,
+    pub eval_every: usize,
+    /// Wire-dimension scaling (see ExperimentConfig::net_scale).
+    /// 0.0 = auto: paper_d(dataset) / testbed_d (see `auto_net_scale`).
+    pub net_scale: f64,
+    pub seed: u64,
+}
+
+/// Per-dataset auto wire scale: the paper's model dimension over this
+/// testbed's (ResNet-18 ≈ 11M for CIFAR*, the 800k CNN for FEMNIST,
+/// §V-A1) so each dataset keeps its own communication/computation ratio.
+pub fn auto_net_scale(dataset: DatasetKind) -> f64 {
+    match dataset {
+        DatasetKind::Tiny => 1.0,
+        DatasetKind::SynthFemnist => 15.0,  // 0.8M / ~54k
+        DatasetKind::SynthCifar10 | DatasetKind::SynthCifar100 => 200.0, // 11M / ~55k
+    }
+}
+
+impl Scale {
+    /// CI-sized: native backend, few rounds.
+    pub fn quick() -> Self {
+        Scale {
+            rounds: 12,
+            num_clients: 8,
+            samples_per_client: 60,
+            sim_time_limit_s: None,
+            backend: BackendKind::Native,
+            eval_every: 2,
+            net_scale: 1.0,
+            seed: 7,
+        }
+    }
+
+    /// EXPERIMENTS.md reference scale (native backend for sweeps).
+    /// net_scale = 200 emulates the paper's ResNet-18 wire footprint
+    /// (d ≈ 11M) at this testbed's d ≈ 50k (DESIGN.md §2 note 4).
+    pub fn standard() -> Self {
+        Scale {
+            rounds: 60,
+            num_clients: 20,
+            samples_per_client: 200,
+            sim_time_limit_s: None,
+            backend: BackendKind::Native,
+            eval_every: 2,
+            net_scale: 0.0, // auto per dataset
+            seed: 7,
+        }
+    }
+
+    /// Apply onto a preset config.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        cfg.rounds = self.rounds;
+        cfg.num_clients = self.num_clients;
+        cfg.samples_per_client = self.samples_per_client;
+        cfg.sim_time_limit_s = self.sim_time_limit_s;
+        cfg.backend = self.backend;
+        cfg.net_scale = if self.net_scale == 0.0 {
+            auto_net_scale(cfg.dataset)
+        } else {
+            self.net_scale
+        };
+        cfg.seed = self.seed;
+        // Keep the paper's a-threshold proportionate when N ≠ 20:
+        // a = 3/20·N (IID) or 4/20·N (non-IID), ≥ 1.
+        let frac = cfg.fediac.threshold_a as f64 / 20.0;
+        cfg.fediac.threshold_a =
+            ((frac * self.num_clients as f64).round() as usize).clamp(1, self.num_clients);
+    }
+}

@@ -1,0 +1,145 @@
+//! E2/E3 — Tables I & II: total communication traffic (upload + download)
+//! to reach target test accuracy, FediAC vs the best baseline, for the
+//! high- and low-performance PS.
+//!
+//! Absolute targets are calibrated to the synthetic corpora (DESIGN.md
+//! §2 substitution 3); the *shape* asserted against the paper: FediAC
+//! reaches target with substantially less traffic (paper: 41–70% less).
+
+use anyhow::Result;
+
+use crate::configx::{
+    AlgorithmKind, DatasetKind, ExperimentConfig, Partition, PsProfile,
+};
+use crate::experiments::{runner, RunOptions, Scale};
+
+/// One table row.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub scenario: String,
+    pub target_accuracy: f64,
+    /// (algorithm, traffic MB, sim time s) for those that reached target.
+    pub reached: Vec<(AlgorithmKind, f64, f64)>,
+    /// FediAC traffic vs the best baseline that reached target.
+    pub reduction_pct: Option<f64>,
+}
+
+/// The scenarios of Tables I/II with synthetic-corpus target accuracies.
+pub fn scenarios() -> Vec<(DatasetKind, Partition, f64)> {
+    vec![
+        (DatasetKind::SynthCifar10, Partition::Iid, 0.55),
+        (DatasetKind::SynthCifar10, Partition::Dirichlet(0.5), 0.50),
+        (DatasetKind::SynthFemnist, Partition::Natural, 0.45),
+        (DatasetKind::SynthCifar100, Partition::Iid, 0.30),
+        (DatasetKind::SynthCifar100, Partition::Dirichlet(0.5), 0.25),
+    ]
+}
+
+/// Algorithms entered into the table race.
+pub const TABLE_ALGOS: [AlgorithmKind; 4] = [
+    AlgorithmKind::FediAc,
+    AlgorithmKind::SwitchMl,
+    AlgorithmKind::OmniReduce,
+    AlgorithmKind::Libra,
+];
+
+/// Run one scenario on one PS profile.
+pub fn run_row(
+    dataset: DatasetKind,
+    partition: Partition,
+    target: f64,
+    ps: PsProfile,
+    scale: &Scale,
+    opts: &RunOptions,
+) -> Result<TableRow> {
+    let mut reached = Vec::new();
+    let mut fediac_mb = None;
+    let mut best_baseline_mb: Option<f64> = None;
+    for alg in TABLE_ALGOS {
+        let mut cfg = ExperimentConfig::preset(dataset, partition);
+        scale.apply(&mut cfg);
+        cfg.algorithm = alg;
+        cfg.ps = ps.clone();
+        let rec = runner::run(&cfg, opts)?;
+        if let Some((_round, time, traffic)) = rec.time_to_accuracy(target) {
+            let mb = traffic.total_mb();
+            reached.push((alg, mb, time));
+            if alg == AlgorithmKind::FediAc {
+                fediac_mb = Some(mb);
+            } else {
+                best_baseline_mb =
+                    Some(best_baseline_mb.map_or(mb, |b: f64| b.min(mb)));
+            }
+        }
+    }
+    let reduction_pct = match (fediac_mb, best_baseline_mb) {
+        (Some(f), Some(b)) if b > 0.0 => Some((1.0 - f / b) * 100.0),
+        _ => None,
+    };
+    Ok(TableRow {
+        scenario: format!("{}_{}", dataset.name(), partition.name()),
+        target_accuracy: target,
+        reached,
+        reduction_pct,
+    })
+}
+
+/// Render rows in the paper's table format.
+pub fn render(rows: &[TableRow], ps_name: &str) -> String {
+    let mut out = format!(
+        "# Table (PS = {ps_name}): traffic to target accuracy\n\
+         scenario\ttarget\talgorithm\ttraffic_mb\tsim_time_s\treduction_vs_best_baseline\n"
+    );
+    for row in rows {
+        if row.reached.is_empty() {
+            out.push_str(&format!(
+                "{}\t{:.2}\t(none reached target)\t-\t-\t-\n",
+                row.scenario, row.target_accuracy
+            ));
+            continue;
+        }
+        for (alg, mb, time) in &row.reached {
+            let red = if *alg == AlgorithmKind::FediAc {
+                row.reduction_pct
+                    .map(|p| format!("{p:.2}%"))
+                    .unwrap_or_else(|| "-".into())
+            } else {
+                "-".into()
+            };
+            out.push_str(&format!(
+                "{}\t{:.2}\t{}\t{:.1}\t{:.1}\t{}\n",
+                row.scenario,
+                row.target_accuracy,
+                alg.name(),
+                mb,
+                time,
+                red
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_reports_reduction_when_fediac_wins() {
+        // Tiny-scale race: all algorithms on the easy synthetic task.
+        let scale = Scale { rounds: 10, num_clients: 4, ..Scale::quick() };
+        let row = run_row(
+            DatasetKind::Tiny,
+            Partition::Iid,
+            0.5,
+            PsProfile::high(),
+            &scale,
+            &RunOptions::default(),
+        )
+        .unwrap();
+        // At this scale everyone usually reaches 0.5; the render must not
+        // panic regardless of who did.
+        let txt = render(&[row], "high");
+        assert!(txt.contains("scenario"));
+    }
+}

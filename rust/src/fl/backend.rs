@@ -1,0 +1,57 @@
+//! Model-execution backend abstraction.
+//!
+//! The FL round engine treats the model as an opaque flat f32 vector and
+//! asks a backend for four operations. Two implementations exist:
+//!
+//! * [`crate::fl::native::NativeBackend`] — pure-rust manual-backprop MLP;
+//!   artifact-free, fast, used by tests and quick sweeps.
+//! * [`crate::runtime::PjrtBackend`] — the full paper stack: AOT-lowered
+//!   JAX/Pallas HLO executed through the PJRT C API.
+//!
+//! Both must satisfy the same contract; `rust/tests/protocol_props.rs`
+//! cross-checks compression semantics between them.
+
+/// Result of one client's local training round (E SGD iterations).
+#[derive(Debug, Clone)]
+pub struct LocalTrainOutput {
+    pub new_params: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+/// Uniform interface over native and PJRT model execution.
+pub trait ModelBackend {
+    /// Flat parameter dimension d.
+    fn d(&self) -> usize;
+
+    /// Deterministic initial global model w₁.
+    fn init_params(&mut self) -> Vec<f32>;
+
+    /// Run E local SGD iterations for `client` starting from `params`
+    /// (Algorithm 1 line 3). `round` seeds batch sampling.
+    fn local_train(
+        &mut self,
+        params: &[f32],
+        client: usize,
+        round: usize,
+        lr: f32,
+    ) -> LocalTrainOutput;
+
+    /// Full-test-set evaluation → (accuracy ∈ [0,1], mean loss).
+    fn evaluate(&mut self, params: &[f32]) -> (f64, f64);
+
+    /// Gumbel vote scores for one client's updates (§IV step 1).
+    fn vote_scores(&mut self, updates: &[f32], seed: i64) -> Vec<f32>;
+
+    /// Fused quantise+sparsify+residual (§IV step 3 / Eq. 1):
+    /// (updates, gia mask of 0.0/1.0, f, seed) → (q, residual).
+    fn compress(
+        &mut self,
+        updates: &[f32],
+        gia: &[f32],
+        f: f32,
+        seed: i64,
+    ) -> (Vec<i32>, Vec<f32>);
+
+    /// Human-readable backend name for logs.
+    fn backend_name(&self) -> &'static str;
+}

@@ -1,0 +1,460 @@
+//! Shared round environment: global model, switch, network timing helpers
+//! and traffic accounting. Algorithms (FediAC + baselines) drive their
+//! protocol through this; the timing model follows §V-A2 exactly:
+//!
+//! * each client's upload is a Poisson packet stream at its trace rate;
+//! * the PS serves the merged stream through an M/G/1 queue (one
+//!   aggregation op per packet, Gaussian service);
+//! * downloads run at 5× the mean client upload rate;
+//! * local training charges the per-dataset constant (0.1/2/3 s).
+
+use crate::configx::ExperimentConfig;
+use crate::fl::backend::ModelBackend;
+use crate::metrics::TrafficMeter;
+use crate::net::{client_rates, PoissonProcess};
+use crate::sim::SimTime;
+use crate::switch::ProgrammableSwitch;
+use crate::util::Rng;
+
+/// The mutable world one experiment run lives in.
+pub struct FlEnv {
+    pub cfg: ExperimentConfig,
+    pub backend: Box<dyn ModelBackend>,
+    pub switch: ProgrammableSwitch,
+    /// Mean upload rate per client (packets/s) from the cellular traces.
+    pub rates: Vec<f64>,
+    /// Global model (identical on every client after each round).
+    pub params: Vec<f32>,
+    pub rng: Rng,
+    /// Simulated wall-clock (end of the last completed round).
+    pub now: SimTime,
+    /// Cumulative traffic across the run.
+    pub traffic_total: TrafficMeter,
+}
+
+/// Timing outcome of one upload phase.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTiming {
+    /// Absolute sim time at which the switch finished the last packet.
+    pub end: SimTime,
+    pub packets: u64,
+    /// Loss-triggered retransmissions (extra wire copies; the scoreboard
+    /// drops the occasional spurious duplicate).
+    pub retransmissions: u64,
+}
+
+impl FlEnv {
+    pub fn new(cfg: ExperimentConfig, backend: Box<dyn ModelBackend>) -> Self {
+        // net_scale emulates a net_scale×-larger model on the wire: each
+        // "packet" here stands for net_scale real packets, so per-packet
+        // transmission slows down and per-packet aggregation cost grows
+        // by the same factor (DESIGN.md §2 note 4).
+        let rates: Vec<f64> = client_rates(cfg.num_clients, cfg.seed)
+            .into_iter()
+            .map(|r| r / cfg.net_scale)
+            .collect();
+        let mut ps = cfg.ps.clone();
+        ps.agg_mean_s *= cfg.net_scale;
+        ps.agg_jitter_s *= cfg.net_scale;
+        let switch = ProgrammableSwitch::new(ps, cfg.seed);
+        let rng = Rng::new(cfg.seed ^ 0xE17);
+        FlEnv {
+            cfg,
+            backend,
+            switch,
+            rates,
+            params: Vec::new(),
+            rng,
+            now: 0.0,
+            traffic_total: TrafficMeter::default(),
+        }
+    }
+
+    pub fn init_model(&mut self) {
+        self.params = self.backend.init_params();
+    }
+
+    pub fn d(&self) -> usize {
+        self.backend.d()
+    }
+
+    /// Mean client upload rate (pkts/s) — the base of the download rate.
+    pub fn mean_rate(&self) -> f64 {
+        self.rates.iter().sum::<f64>() / self.rates.len() as f64
+    }
+
+    /// Download rate in packets/s (5× mean upload per the paper).
+    pub fn download_rate(&self) -> f64 {
+        self.cfg.download_mult * self.mean_rate()
+    }
+
+    /// Per-client local-training completion times for a round starting at
+    /// `start`: the dataset constant ± 5% jitter.
+    pub fn local_train_ready(&mut self, start: SimTime) -> Vec<SimTime> {
+        let base = self.cfg.dataset.local_train_time_s();
+        (0..self.cfg.num_clients)
+            .map(|_| start + base * (0.95 + 0.1 * self.rng.f64()))
+            .collect()
+    }
+
+    /// Simulate an upload phase: client i emits `pkts[i]` packets as a
+    /// Poisson stream at its trace rate starting at `ready[i]`; the merged
+    /// stream is served FIFO by the switch (one aggregation op each).
+    ///
+    /// `waves` > 1 models register-memory pressure: the block space is
+    /// processed in `waves` synchronised passes — clients only start wave
+    /// w+1's packets after the switch drained wave w *and* multicast the
+    /// completed partial aggregates (the slot-credit round trip that frees
+    /// the registers, SwitchML-style). This is §III-B's "excessive number
+    /// of aggregations" effect: exceeding PS memory serialises the round.
+    pub fn upload_phase(&mut self, ready: &[SimTime], pkts: &[usize], waves: usize) -> PhaseTiming {
+        self.upload_phase_sharded(ready, pkts, waves, self.cfg.num_switches)
+    }
+
+    /// Multi-PS variant (§VI future work): the index space is sharded
+    /// round-robin across `n_switches` collaborative switches. Each client
+    /// still emits ONE Poisson packet stream (its uplink serialises), but
+    /// service parallelises: shard s's packets drain through switch s's
+    /// own queue, and the phase ends when the slowest shard finishes.
+    /// Aggregation ops are charged once per packet regardless of shard
+    /// (the system-wide count); the primary switch carries the stats.
+    pub fn upload_phase_sharded(
+        &mut self,
+        ready: &[SimTime],
+        pkts: &[usize],
+        waves: usize,
+        n_switches: usize,
+    ) -> PhaseTiming {
+        debug_assert_eq!(ready.len(), pkts.len());
+        let n_switches = n_switches.max(1);
+        if n_switches > 1 {
+            return self.upload_phase_multi(ready, pkts, waves, n_switches);
+        }
+        let waves = waves.max(1);
+        let n = ready.len();
+        let loss = self.cfg.loss_rate;
+        let rto = self.cfg.retx_timeout_s;
+        let mut wave_ready: Vec<SimTime> = ready.to_vec();
+        let mut total_packets = 0u64;
+        let mut retransmissions = 0u64;
+        let mut end: SimTime = ready.iter().cloned().fold(0.0, f64::max);
+        if waves > 1 {
+            self.switch.note_waves(waves as u64 - 1);
+        }
+        for w in 0..waves {
+            // Client i's packet share for this wave.
+            let mut arrivals: Vec<(SimTime, usize)> = Vec::new();
+            for i in 0..n {
+                let per_wave = pkts[i].div_ceil(waves);
+                let sent_before = (w * per_wave).min(pkts[i]);
+                let this_wave = per_wave.min(pkts[i] - sent_before);
+                if this_wave == 0 {
+                    continue;
+                }
+                let mut proc = PoissonProcess::new(self.rates[i], wave_ready[i]);
+                for _ in 0..this_wave {
+                    let mut t = proc.next(&mut self.rng);
+                    // Uplink loss: geometric retransmission with RTO
+                    // back-off (SwitchML end-host retransmission).
+                    while loss > 0.0 && self.rng.f64() < loss {
+                        retransmissions += 1;
+                        t += rto;
+                    }
+                    arrivals.push((t, i));
+                }
+            }
+            if arrivals.is_empty() {
+                continue;
+            }
+            arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            total_packets += arrivals.len() as u64;
+            let wave_pkts = arrivals.len();
+            let mut wave_end: SimTime = 0.0;
+            for &(arrival, _client) in &arrivals {
+                wave_end = self.switch.service_packet(arrival);
+            }
+            end = end.max(wave_end);
+            if w + 1 < waves {
+                // Slot-credit barrier: the partial aggregates of this
+                // wave's blocks are multicast back before the registers
+                // are reused; clients resume only after receiving credit.
+                // Latency only — byte accounting happens once in the
+                // algorithm's download phase.
+                let credit = wave_pkts as f64 / self.download_rate();
+                let restart = wave_end + credit;
+                wave_ready.iter_mut().for_each(|t| *t = restart.max(*t));
+                end = end.max(restart);
+            }
+        }
+        PhaseTiming { end, packets: total_packets, retransmissions }
+    }
+
+    /// Parallel-shard service: arrivals are generated exactly as in the
+    /// single-switch path, assigned round-robin to `n_switches` FIFO
+    /// queues with the same Gaussian service model, and the end time is
+    /// the max over shards. Waves divide each shard's window identically.
+    fn upload_phase_multi(
+        &mut self,
+        ready: &[SimTime],
+        pkts: &[usize],
+        waves: usize,
+        n_switches: usize,
+    ) -> PhaseTiming {
+        use crate::net::Mg1Queue;
+        let waves = waves.max(1);
+        let n = ready.len();
+        let loss = self.cfg.loss_rate;
+        let rto = self.cfg.retx_timeout_s;
+        let profile = self.switch.profile().clone();
+        let mut queues: Vec<Mg1Queue> = (0..n_switches).map(|_| Mg1Queue::new()).collect();
+        let mut wave_ready: Vec<SimTime> = ready.to_vec();
+        let mut total_packets = 0u64;
+        let mut retransmissions = 0u64;
+        let mut end: SimTime = ready.iter().cloned().fold(0.0, f64::max);
+        if waves > 1 {
+            self.switch.note_waves(waves as u64 - 1);
+        }
+        for w in 0..waves {
+            let mut arrivals: Vec<(SimTime, usize)> = Vec::new();
+            for i in 0..n {
+                let per_wave = pkts[i].div_ceil(waves);
+                let sent_before = (w * per_wave).min(pkts[i]);
+                let this_wave = per_wave.min(pkts[i] - sent_before);
+                if this_wave == 0 {
+                    continue;
+                }
+                let mut proc = PoissonProcess::new(self.rates[i], wave_ready[i]);
+                for seq in 0..this_wave {
+                    let mut t = proc.next(&mut self.rng);
+                    while loss > 0.0 && self.rng.f64() < loss {
+                        retransmissions += 1;
+                        t += rto;
+                    }
+                    arrivals.push((t, seq % n_switches));
+                }
+            }
+            if arrivals.is_empty() {
+                continue;
+            }
+            arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            total_packets += arrivals.len() as u64;
+            let wave_pkts = arrivals.len();
+            let mut wave_end: SimTime = 0.0;
+            for &(arrival, shard) in &arrivals {
+                // Same service model as ProgrammableSwitch::service_packet,
+                // drawn from the env RNG; system-wide op count charged on
+                // the primary switch.
+                let service = self
+                    .rng
+                    .gaussian_pos(profile.agg_mean_s, profile.agg_jitter_s);
+                let depart = queues[shard].serve(arrival, service);
+                wave_end = wave_end.max(depart);
+                self.switch.note_shadow_op();
+            }
+            end = end.max(wave_end);
+            if w + 1 < waves {
+                let credit = wave_pkts as f64 / self.download_rate();
+                let restart = wave_end + credit;
+                wave_ready.iter_mut().for_each(|t| *t = restart.max(*t));
+                end = end.max(restart);
+            }
+        }
+        PhaseTiming { end, packets: total_packets, retransmissions }
+    }
+
+    /// Charge the wire cost of retransmitted copies (full-size frames).
+    pub fn charge_retransmissions(
+        &mut self,
+        timing: &PhaseTiming,
+        traffic: &mut TrafficMeter,
+    ) {
+        traffic.up_bytes += timing.retransmissions * self.cfg.packet_mtu as u64;
+    }
+
+    /// Broadcast `payload_bytes` to all clients at the download rate.
+    /// Returns the completion time. Traffic is charged per receiving
+    /// client (the paper's tables count download traffic for the system).
+    pub fn broadcast(
+        &mut self,
+        start: SimTime,
+        payload_bytes: usize,
+        traffic: &mut TrafficMeter,
+        vote_phase: bool,
+    ) -> SimTime {
+        let payload = self.cfg.packet_payload();
+        let packets = payload_bytes.div_ceil(payload).max(1);
+        let wire = payload_bytes + packets * self.cfg.packet_header;
+        let bytes_all = wire as u64 * self.cfg.num_clients as u64;
+        traffic.down_bytes += bytes_all;
+        if vote_phase {
+            traffic.vote_down_bytes += bytes_all;
+        }
+        start + packets as f64 / self.download_rate()
+    }
+
+    /// Charge upload traffic for `packets` MTU frames carrying
+    /// `payload_bytes` in total (per single client).
+    pub fn charge_upload(
+        &mut self,
+        payload_bytes: usize,
+        packets: usize,
+        traffic: &mut TrafficMeter,
+        vote_phase: bool,
+    ) {
+        let wire = (payload_bytes + packets * self.cfg.packet_header) as u64;
+        traffic.up_bytes += wire;
+        if vote_phase {
+            traffic.vote_up_bytes += wire;
+        }
+    }
+
+    /// Packets needed to carry `total_bits` of payload.
+    pub fn packets_for_bits(&self, total_bits: usize) -> usize {
+        if total_bits == 0 {
+            return 0;
+        }
+        total_bits.div_ceil(8).div_ceil(self.cfg.packet_payload())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, ExperimentConfig, Partition};
+    use crate::data::synth;
+    use crate::fl::native::NativeBackend;
+
+    fn env() -> FlEnv {
+        let cfg = ExperimentConfig {
+            num_clients: 4,
+            ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+        };
+        let fd = synth::generate(cfg.dataset, cfg.partition, cfg.num_clients, 40, cfg.seed);
+        let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+        FlEnv::new(cfg, backend)
+    }
+
+    #[test]
+    fn rates_match_population() {
+        let e = env();
+        assert_eq!(e.rates.len(), 4);
+        assert!(e.download_rate() > e.mean_rate() * 4.9);
+    }
+
+    #[test]
+    fn upload_phase_duration_scales_with_packets() {
+        let mut e = env();
+        let ready = vec![0.0; 4];
+        let t_small = e.upload_phase(&ready, &[10; 4], 1);
+        let mut e2 = env();
+        let t_large = e2.upload_phase(&ready, &[100; 4], 1);
+        assert_eq!(t_small.packets, 40);
+        assert_eq!(t_large.packets, 400);
+        assert!(t_large.end > t_small.end);
+    }
+
+    #[test]
+    fn waves_serialize_uploads() {
+        let mut a = env();
+        let mut b = env();
+        let ready = vec![0.0; 4];
+        let one = a.upload_phase(&ready, &[50; 4], 1);
+        let four = b.upload_phase(&ready, &[50; 4], 4);
+        assert_eq!(one.packets, four.packets);
+        assert!(four.end > one.end, "waves {:.4} vs {:.4}", four.end, one.end);
+    }
+
+    #[test]
+    fn broadcast_charges_all_clients() {
+        let mut e = env();
+        let mut t = TrafficMeter::default();
+        let end = e.broadcast(1.0, 10_000, &mut t, false);
+        assert!(end > 1.0);
+        let packets = 10_000usize.div_ceil(e.cfg.packet_payload());
+        let wire = 10_000 + packets * e.cfg.packet_header;
+        assert_eq!(t.down_bytes, wire as u64 * 4);
+    }
+
+    #[test]
+    fn packets_for_bits_consistent() {
+        let e = env();
+        assert_eq!(e.packets_for_bits(0), 0);
+        assert_eq!(e.packets_for_bits(8), 1);
+        let cap_bits = e.cfg.packet_payload() * 8;
+        assert_eq!(e.packets_for_bits(cap_bits), 1);
+        assert_eq!(e.packets_for_bits(cap_bits + 1), 2);
+    }
+
+    #[test]
+    fn multi_ps_parallelises_service_bound_phase() {
+        // Service-bound regime: slow switch, fast arrivals. Four shards
+        // should finish markedly sooner than one.
+        let slow = |n_switches: usize| {
+            let mut e = env();
+            e.cfg.num_switches = n_switches;
+            e.switch = crate::switch::ProgrammableSwitch::new(
+                crate::configx::PsProfile {
+                    name: "slow".into(),
+                    agg_mean_s: 4e-3,
+                    agg_jitter_s: 1e-5,
+                    memory_bytes: 1 << 20,
+                },
+                e.cfg.seed,
+            );
+            let ready = vec![0.0; 4];
+            e.upload_phase(&ready, &[200; 4], 1).end
+        };
+        let t1 = slow(1);
+        let t4 = slow(4);
+        assert!(
+            t4 < 0.5 * t1,
+            "4 switches should at least halve a service-bound phase: {t4:.3} vs {t1:.3}"
+        );
+    }
+
+    #[test]
+    fn multi_ps_packet_count_unchanged() {
+        let mut e = env();
+        e.cfg.num_switches = 3;
+        let ready = vec![0.0; 4];
+        let t = e.upload_phase(&ready, &[50; 4], 1);
+        assert_eq!(t.packets, 200);
+        assert_eq!(e.switch.stats().agg_ops, 200, "system-wide ops must be charged");
+    }
+
+    #[test]
+    fn packet_loss_delays_and_retransmits() {
+        let mut clean = env();
+        let ready = vec![0.0; 4];
+        let t_clean = clean.upload_phase(&ready, &[100; 4], 1);
+        assert_eq!(t_clean.retransmissions, 0);
+
+        let mut lossy = env();
+        lossy.cfg.loss_rate = 0.2;
+        let t_lossy = lossy.upload_phase(&ready, &[100; 4], 1);
+        assert!(t_lossy.retransmissions > 0, "no retransmissions at 20% loss");
+        assert!(
+            t_lossy.end > t_clean.end,
+            "loss should delay: {:.4} !> {:.4}",
+            t_lossy.end,
+            t_clean.end
+        );
+        // Retransmission traffic charged as full frames.
+        let mut traffic = TrafficMeter::default();
+        lossy.charge_retransmissions(&t_lossy, &mut traffic);
+        assert_eq!(
+            traffic.up_bytes,
+            t_lossy.retransmissions * lossy.cfg.packet_mtu as u64
+        );
+    }
+
+    #[test]
+    fn ready_times_jittered_around_constant() {
+        let mut e = env();
+        let ready = e.local_train_ready(10.0);
+        let base = e.cfg.dataset.local_train_time_s();
+        for &r in &ready {
+            assert!(r >= 10.0 + base * 0.95 && r <= 10.0 + base * 1.05);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! FL core: the backend abstraction, the pure-rust native backend and the
+//! shared round environment (model, switch, timing, traffic).
+
+pub mod backend;
+pub mod env;
+pub mod native;
+
+pub use backend::{LocalTrainOutput, ModelBackend};
+pub use env::{FlEnv, PhaseTiming};
+pub use native::NativeBackend;

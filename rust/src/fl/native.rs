@@ -1,0 +1,370 @@
+//! Pure-rust model backend: one-hidden-layer MLP with manual backprop.
+//!
+//! Exists so the entire coordination stack (voting, GIA, switch, queueing,
+//! traffic) can be exercised deterministically and fast without the AOT
+//! artifacts — CI, property tests and large parameter sweeps use this.
+//! The PJRT backend replaces it for the full paper stack. The compression
+//! members delegate to `crate::compress`, which mirrors the Pallas kernel
+//! math exactly.
+//!
+//! Layout of the flat vector: [W1 (in×h) | b1 (h) | W2 (h×C) | b2 (C)],
+//! row-major, matching the convention of `python/compile/model.py`.
+
+use crate::compress;
+use crate::data::FederatedData;
+use crate::fl::backend::{LocalTrainOutput, ModelBackend};
+use crate::util::Rng;
+
+/// MLP dimensions + data + sampling state.
+pub struct NativeBackend {
+    data: FederatedData,
+    input: usize,
+    hidden: usize,
+    classes: usize,
+    local_iters: usize,
+    batch: usize,
+    seed: u64,
+    // Reused buffers (no allocation in the train loop).
+    feat_buf: Vec<f32>,
+    label_buf: Vec<i32>,
+    h_buf: Vec<f32>,
+    logits_buf: Vec<f32>,
+    dh_buf: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new(
+        data: FederatedData,
+        hidden: usize,
+        local_iters: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let input = data.train.feature_len();
+        let classes = data.train.num_classes();
+        NativeBackend {
+            data,
+            input,
+            hidden,
+            classes,
+            local_iters,
+            batch,
+            seed,
+            feat_buf: Vec::new(),
+            label_buf: Vec::new(),
+            h_buf: Vec::new(),
+            logits_buf: Vec::new(),
+            dh_buf: Vec::new(),
+        }
+    }
+
+    pub fn data(&self) -> &FederatedData {
+        &self.data
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize) {
+        let w1 = self.input * self.hidden;
+        let b1 = self.hidden;
+        let w2 = self.hidden * self.classes;
+        let b2 = self.classes;
+        (w1, b1, w2, b2)
+    }
+
+    /// One SGD step on a batch; returns the mean loss. Gradients are
+    /// accumulated straight into `params` scaled by −lr/B (fused update).
+    fn sgd_step(&mut self, params: &mut [f32], indices: &[usize], lr: f32) -> f32 {
+        let (w1n, b1n, w2n, _) = self.dims();
+        let b = indices.len();
+        let (inp, hid, cls) = (self.input, self.hidden, self.classes);
+
+        self.feat_buf.resize(b * inp, 0.0);
+        self.label_buf.resize(b, 0);
+        self.data.train.fill_batch(indices, &mut self.feat_buf, &mut self.label_buf);
+
+        self.h_buf.resize(b * hid, 0.0);
+        self.logits_buf.resize(b * cls, 0.0);
+        self.dh_buf.resize(b * hid, 0.0);
+
+        let scale = lr / b as f32;
+        let mut loss_sum = 0.0f64;
+
+        // Forward for the whole batch.
+        for r in 0..b {
+            let x = &self.feat_buf[r * inp..(r + 1) * inp];
+            let h = &mut self.h_buf[r * hid..(r + 1) * hid];
+            // h = b1 + xᵀ·W1, accumulated input-major so every W1 row access
+            // is contiguous (W1 is (input × hidden) row-major: row i at i·hid).
+            h.copy_from_slice(&params[w1n..w1n + hid]);
+            for (i, &xi) in x.iter().enumerate() {
+                if xi != 0.0 {
+                    let row = &params[i * hid..(i + 1) * hid];
+                    for (hj, &wj) in h.iter_mut().zip(row) {
+                        *hj += xi * wj;
+                    }
+                }
+            }
+            for hj in h.iter_mut() {
+                *hj = hj.max(0.0); // relu
+            }
+            let logits = &mut self.logits_buf[r * cls..(r + 1) * cls];
+            for c in 0..cls {
+                let mut acc = params[w1n + b1n + w2n + c]; // b2[c]
+                for (j, &hj) in h.iter().enumerate() {
+                    acc += hj * params[w1n + b1n + j * cls + c];
+                }
+                logits[c] = acc;
+            }
+            // Softmax CE, computing dlogits in place.
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - max).exp();
+                z += *l;
+            }
+            let label = self.label_buf[r] as usize;
+            loss_sum += -(f64::from(logits[label]) / f64::from(z)).ln();
+            for l in logits.iter_mut() {
+                *l /= z; // now softmax probs
+            }
+            logits[label] -= 1.0; // dlogits = p − y
+        }
+
+        // Backward + fused SGD update.
+        for r in 0..b {
+            let x = &self.feat_buf[r * inp..(r + 1) * inp];
+            let h = &self.h_buf[r * hid..(r + 1) * hid];
+            let dlogits = &self.logits_buf[r * cls..(r + 1) * cls];
+            let dh = &mut self.dh_buf[r * hid..(r + 1) * hid];
+            // dH = dlogits · W2ᵀ, gated by relu; W2 update.
+            for j in 0..hid {
+                let mut acc = 0.0f32;
+                let w2_row = w1n + b1n + j * cls;
+                for c in 0..cls {
+                    acc += dlogits[c] * params[w2_row + c];
+                }
+                dh[j] = if h[j] > 0.0 { acc } else { 0.0 };
+            }
+            for c in 0..cls {
+                let d = dlogits[c];
+                params[w1n + b1n + w2n + c] -= scale * d; // b2
+            }
+            for j in 0..hid {
+                let hj = h[j];
+                if hj != 0.0 {
+                    let w2_row = w1n + b1n + j * cls;
+                    for c in 0..cls {
+                        params[w2_row + c] -= scale * dlogits[c] * hj;
+                    }
+                }
+                if dh[j] != 0.0 {
+                    params[w1n + j] -= scale * dh[j]; // b1
+                }
+            }
+            // W1 update input-major: each touched W1 row is contiguous.
+            for (i, &xi) in x.iter().enumerate() {
+                if xi != 0.0 {
+                    let sxi = scale * xi;
+                    let row = &mut params[i * hid..(i + 1) * hid];
+                    for (wj, &dhj) in row.iter_mut().zip(dh.iter()) {
+                        *wj -= sxi * dhj;
+                    }
+                }
+            }
+        }
+        (loss_sum / b as f64) as f32
+    }
+
+    fn forward_logits(&self, params: &[f32], x: &[f32], logits: &mut [f32]) {
+        let (w1n, b1n, w2n, _) = self.dims();
+        let (hid, cls) = (self.hidden, self.classes);
+        let mut h = params[w1n..w1n + hid].to_vec();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi != 0.0 {
+                let row = &params[i * hid..(i + 1) * hid];
+                for (hj, &wj) in h.iter_mut().zip(row) {
+                    *hj += xi * wj;
+                }
+            }
+        }
+        for hj in h.iter_mut() {
+            *hj = hj.max(0.0);
+        }
+        for c in 0..cls {
+            let mut acc = params[w1n + b1n + w2n + c];
+            for (j, &hj) in h.iter().enumerate() {
+                acc += hj * params[w1n + b1n + j * cls + c];
+            }
+            logits[c] = acc;
+        }
+    }
+}
+
+impl ModelBackend for NativeBackend {
+    fn d(&self) -> usize {
+        let (w1, b1, w2, b2) = self.dims();
+        w1 + b1 + w2 + b2
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ 0x1417);
+        let (w1n, b1n, w2n, b2n) = self.dims();
+        let mut p = vec![0.0f32; w1n + b1n + w2n + b2n];
+        let s1 = (2.0 / self.input as f64).sqrt();
+        let s2 = (2.0 / self.hidden as f64).sqrt();
+        for v in &mut p[..w1n] {
+            *v = (rng.gaussian() * s1) as f32;
+        }
+        for v in &mut p[w1n + b1n..w1n + b1n + w2n] {
+            *v = (rng.gaussian() * s2) as f32;
+        }
+        p
+    }
+
+    fn local_train(
+        &mut self,
+        params: &[f32],
+        client: usize,
+        round: usize,
+        lr: f32,
+    ) -> LocalTrainOutput {
+        let mut p = params.to_vec();
+        let mut rng =
+            Rng::new(self.seed ^ (client as u64) << 20 ^ (round as u64) << 1 ^ 0xB47C);
+        let my = self.data.client_indices[client].clone();
+        assert!(!my.is_empty(), "client {client} has no data");
+        let mut loss_sum = 0.0f32;
+        for _ in 0..self.local_iters {
+            let batch: Vec<usize> =
+                (0..self.batch).map(|_| my[rng.below(my.len())]).collect();
+            loss_sum += self.sgd_step(&mut p, &batch, lr);
+        }
+        LocalTrainOutput { new_params: p, mean_loss: loss_sum / self.local_iters as f32 }
+    }
+
+    fn evaluate(&mut self, params: &[f32]) -> (f64, f64) {
+        let n = self.data.test.len();
+        let mut logits = vec![0.0f32; self.classes];
+        let mut correct = 0usize;
+        let mut loss_sum = 0.0f64;
+        for i in 0..n {
+            let x = self.data.test.features_of(i);
+            self.forward_logits(params, x, &mut logits);
+            let label = self.data.test.label_of(i) as usize;
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == label {
+                correct += 1;
+            }
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = logits.iter().map(|l| (l - max).exp()).sum();
+            loss_sum += -f64::from(logits[label] - max) + f64::from(z.ln());
+        }
+        (correct as f64 / n as f64, loss_sum / n as f64)
+    }
+
+    fn vote_scores(&mut self, updates: &[f32], seed: i64) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ seed as u64 ^ 0x907e);
+        compress::vote_scores_native(updates, &mut rng)
+    }
+
+    fn compress(
+        &mut self,
+        updates: &[f32],
+        gia: &[f32],
+        f: f32,
+        seed: i64,
+    ) -> (Vec<i32>, Vec<f32>) {
+        let mut rng = Rng::new(self.seed ^ seed as u64 ^ 0xc049);
+        compress::quantize_sparsify(updates, gia, f, &mut rng)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, Partition};
+    use crate::data::synth;
+
+    fn backend() -> NativeBackend {
+        let fd = synth::generate(DatasetKind::Tiny, Partition::Iid, 4, 60, 5);
+        NativeBackend::new(fd, 32, 5, 16, 5)
+    }
+
+    #[test]
+    fn d_matches_layout() {
+        let b = backend();
+        assert_eq!(b.d(), 32 * 32 + 32 + 32 * 10 + 10);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let mut b = backend();
+        assert_eq!(b.init_params(), b.init_params());
+    }
+
+    #[test]
+    fn local_training_reduces_loss() {
+        let mut b = backend();
+        let mut params = b.init_params();
+        let mut first = None;
+        let mut last = 0.0;
+        for round in 0..10 {
+            let out = b.local_train(&params, 0, round, 0.1);
+            params = out.new_params;
+            if first.is_none() {
+                first = Some(out.mean_loss);
+            }
+            last = out.mean_loss;
+        }
+        assert!(last < first.unwrap(), "loss {first:?} → {last}");
+    }
+
+    #[test]
+    fn accuracy_improves_with_training() {
+        let mut b = backend();
+        let mut params = b.init_params();
+        let (acc0, _) = b.evaluate(&params);
+        for round in 0..25 {
+            // All clients train sequentially on the shared model (FedSGD-ish).
+            for c in 0..4 {
+                let out = b.local_train(&params, c, round, 0.05);
+                // Average client deltas to emulate aggregation.
+                for (p, np) in params.iter_mut().zip(&out.new_params) {
+                    *p += (np - *p) / 4.0;
+                }
+            }
+        }
+        let (acc1, _) = b.evaluate(&params);
+        assert!(acc1 > acc0 + 0.2, "acc {acc0} → {acc1}");
+    }
+
+    #[test]
+    fn updates_nonzero_and_finite() {
+        let mut b = backend();
+        let params = b.init_params();
+        let out = b.local_train(&params, 1, 0, 0.1);
+        let u: Vec<f32> =
+            params.iter().zip(&out.new_params).map(|(a, b)| a - b).collect();
+        assert!(u.iter().any(|&x| x != 0.0));
+        assert!(u.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn local_train_deterministic_per_round() {
+        let mut b = backend();
+        let params = b.init_params();
+        let a = b.local_train(&params, 2, 7, 0.1);
+        let c = b.local_train(&params, 2, 7, 0.1);
+        assert_eq!(a.new_params, c.new_params);
+        let d = b.local_train(&params, 2, 8, 0.1);
+        assert_ne!(a.new_params, d.new_params);
+    }
+}

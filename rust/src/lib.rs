@@ -1,0 +1,20 @@
+//! FediAC: voting-based consensus model compression for in-network FL.
+//!
+//! Reproduction of Su et al., "Expediting In-Network Federated Learning by
+//! Voting-Based Consensus Model Compression" (2024). See DESIGN.md for the
+//! architecture and README.md for usage.
+
+pub mod algorithms;
+pub mod cli;
+pub mod configx;
+pub mod compress;
+pub mod data;
+pub mod experiments;
+pub mod fl;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod switch;
+pub mod theory;
+pub mod util;

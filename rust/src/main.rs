@@ -1,0 +1,274 @@
+//! `fediac` — leader binary: run paper experiments and single training
+//! jobs from the command line.
+//!
+//! ```text
+//! fediac train  [--dataset cifar10] [--partition iid|dirichlet|natural]
+//!               [--algorithm fediac] [--rounds 40] [--clients 20]
+//!               [--ps high|low] [--backend native|pjrt] [--config file.toml]
+//! fediac fig2   [--dataset …] [--ps …] [--scale quick|standard] …
+//! fediac table  [--ps high|low] [--scale …]
+//! fediac fig3   [--ps …]
+//! fediac fig4   [--partition iid|dirichlet]
+//! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
+//! ```
+//!
+//! All experiment output goes to stdout as TSV blocks; CSVs land in
+//! `results/`.
+
+use anyhow::Result;
+
+use fediac::cli::Args;
+use fediac::configx::{
+    AlgorithmKind, BackendKind, DatasetKind, ExperimentConfig, Partition, PsProfile,
+};
+use fediac::experiments::{self, fig2, fig3, fig4, tables, RunOptions, Scale};
+use fediac::theory::{prop1_evaluate, PowerLaw, Prop1Params};
+
+fn scale_from(args: &Args) -> Result<Scale> {
+    let mut scale = match args.get_str("scale", "standard").as_str() {
+        "quick" => Scale::quick(),
+        "standard" => Scale::standard(),
+        other => anyhow::bail!("unknown --scale '{other}' (quick|standard)"),
+    };
+    scale.rounds = args.get_usize("rounds", scale.rounds)?;
+    scale.num_clients = args.get_usize("clients", scale.num_clients)?;
+    scale.samples_per_client =
+        args.get_usize("samples", scale.samples_per_client)?;
+    scale.eval_every = args.get_usize("eval-every", scale.eval_every)?;
+    scale.seed = args.get_u64("seed", scale.seed)?;
+    scale.net_scale = args.get_f64("net-scale", scale.net_scale)?;
+    if let Some(limit) = args.get_opt_str("time-limit") {
+        scale.sim_time_limit_s = Some(limit.parse()?);
+    }
+    if let Some(b) = args.get_opt_str("backend") {
+        scale.backend = BackendKind::parse(&b)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend '{b}'"))?;
+    }
+    Ok(scale)
+}
+
+fn opts_from(args: &Args) -> Result<RunOptions> {
+    Ok(RunOptions {
+        eval_every: args.get_usize("eval-every", 2)?,
+        verbose: !args.get_flag("quiet"),
+        artifact_dir: args.get_str("artifact-dir", "artifacts"),
+        native_hidden: args.get_usize("hidden", 64)?,
+        native_batch: args.get_usize("batch", 16)?,
+    })
+}
+
+fn dataset_from(args: &Args, default: DatasetKind) -> Result<DatasetKind> {
+    let name = args.get_str("dataset", default.name());
+    DatasetKind::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown --dataset '{name}'"))
+}
+
+fn partition_from(args: &Args, default: &str) -> Result<Partition> {
+    Ok(match args.get_str("partition", default).as_str() {
+        "iid" => Partition::Iid,
+        "natural" => Partition::Natural,
+        "dirichlet" => Partition::Dirichlet(args.get_f64("beta", 0.5)?),
+        other => anyhow::bail!("unknown --partition '{other}'"),
+    })
+}
+
+fn ps_from(args: &Args) -> Result<PsProfile> {
+    let name = args.get_str("ps", "high");
+    PsProfile::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown --ps '{name}'"))
+}
+
+fn save(path: &str, contents: &str) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)?;
+    eprintln!("[fediac] wrote {path}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let dataset = dataset_from(args, DatasetKind::Tiny)?;
+    let default_part = if dataset == DatasetKind::SynthFemnist { "natural" } else { "iid" };
+    let partition = partition_from(args, default_part)?;
+    let mut cfg = ExperimentConfig::preset(dataset, partition);
+    scale.apply(&mut cfg);
+    cfg.ps = ps_from(args)?;
+    let alg_name = args.get_str("algorithm", "fediac");
+    cfg.algorithm = AlgorithmKind::parse(&alg_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --algorithm '{alg_name}'"))?;
+    if let Some(path) = args.get_opt_str("config") {
+        cfg.apply_file(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    if let Some(a) = args.get_opt_str("a") {
+        cfg.fediac.threshold_a = a.parse()?;
+    }
+    if let Some(b) = args.get_opt_str("b") {
+        cfg.fediac.bits_b = Some(b.parse()?);
+    }
+    cfg.fediac.rle_phase1 = args.get_flag("rle");
+    cfg.num_switches = args.get_usize("switches", cfg.num_switches)?;
+    cfg.lr.base = args.get_f64("lr", cfg.lr.base)?;
+    cfg.loss_rate = args.get_f64("loss", cfg.loss_rate)?;
+    let opts = opts_from(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let rec = experiments::run(&cfg, &opts)?;
+    println!("{}", rec.to_csv());
+    let best = rec.best_accuracy().unwrap_or(0.0);
+    eprintln!(
+        "[fediac] {}: best_acc={:.4} total_traffic={:.2} MB sim_time={:.1} s",
+        cfg.label(),
+        best,
+        rec.total_traffic().total_mb(),
+        rec.final_time()
+    );
+    rec.write_csv(&format!("results/train_{}.csv", cfg.label()))?;
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let opts = opts_from(args)?;
+    let only_dataset = args.get_opt_str("dataset");
+    let only_ps = args.get_opt_str("ps");
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let panels: Vec<(DatasetKind, Partition)> = vec![
+        (DatasetKind::SynthCifar10, Partition::Iid),
+        (DatasetKind::SynthCifar10, Partition::Dirichlet(0.5)),
+        (DatasetKind::SynthCifar100, Partition::Iid),
+        (DatasetKind::SynthCifar100, Partition::Dirichlet(0.5)),
+        (DatasetKind::SynthFemnist, Partition::Natural),
+    ];
+    for ps in [PsProfile::high(), PsProfile::low()] {
+        if let Some(ref p) = only_ps {
+            if *p != ps.name {
+                continue;
+            }
+        }
+        for (dataset, partition) in &panels {
+            if let Some(ref d) = only_dataset {
+                if d != dataset.name() {
+                    continue;
+                }
+            }
+            let panel = fig2::run_panel(*dataset, *partition, ps.clone(), &scale, &opts)?;
+            let tsv = fig2::render_panel(&panel);
+            println!("{tsv}");
+            save(
+                &format!(
+                    "results/fig2_{}_{}_{}.tsv",
+                    dataset.name(),
+                    partition.name().replace(['(', ')'], "_"),
+                    ps.name
+                ),
+                &tsv,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let opts = opts_from(args)?;
+    let ps = ps_from(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut rows = Vec::new();
+    for (dataset, partition, target) in tables::scenarios() {
+        rows.push(tables::run_row(dataset, partition, target, ps.clone(), &scale, &opts)?);
+    }
+    let txt = tables::render(&rows, &ps.name);
+    println!("{txt}");
+    save(&format!("results/table_{}.tsv", ps.name), &txt)?;
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let opts = opts_from(args)?;
+    let only_ps = args.get_opt_str("ps");
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+    for ps in [PsProfile::high(), PsProfile::low()] {
+        if let Some(ref p) = only_ps {
+            if *p != ps.name {
+                continue;
+            }
+        }
+        let res = fig3::run_sweep(ps.clone(), &scale, &opts, &fig3::BETAS)?;
+        let txt = fig3::render(&res, &ps.name);
+        println!("{txt}");
+        save(&format!("results/fig3_{}.tsv", ps.name), &txt)?;
+    }
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let opts = opts_from(args)?;
+    let partition = partition_from(args, "iid")?;
+    let clients: Vec<usize> = args
+        .get_str("client-grid", "20,30,40,50")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<_, _>>()?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let res = fig4::run_sweep(partition, &clients, &scale, &opts)?;
+    let label = partition.name();
+    let txt = fig4::render(&res, &label);
+    println!("{txt}");
+    save(&format!("results/fig4_{}.tsv", label.replace(['(', ')'], "_")), &txt)?;
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let d = args.get_usize("d", 100_000)?;
+    let n = args.get_usize("clients", 20)?;
+    let k = args.get_usize("k", d / 20)?;
+    let a = args.get_usize("a", 3)?;
+    let b = args.get_usize("b", 12)?;
+    let phi = args.get_f64("phi", 0.1)?;
+    let alpha = args.get_f64("alpha", -0.7)?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = prop1_evaluate(&Prop1Params {
+        d,
+        n_clients: n,
+        k,
+        threshold_a: a,
+        law: PowerLaw { phi, alpha },
+        bits_b: b,
+    });
+    println!(
+        "prop1: d={d} N={n} k={k} a={a} b={b} phi={phi} alpha={alpha}\n\
+         gamma={:.6}  E[k_S]={:.1} ({:.2}% of d)  f={:.2}\n\
+         min_bits(cor.1)={}",
+        out.gamma,
+        out.expected_uploads,
+        100.0 * out.expected_uploads / d as f64,
+        out.f,
+        fediac::theory::min_bits(d, n, k, a, &PowerLaw { phi, alpha }),
+    );
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: fediac <train|fig2|table|fig3|fig4|theory> [options]\n\
+         see README.md for the option reference"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("table") => cmd_table(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("fig4") => cmd_fig4(&args),
+        Some("theory") => cmd_theory(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,197 @@
+//! Metrics: traffic accounting, per-round records and CSV emission.
+//!
+//! Tables I/II compare "total communication traffic (upload + download)"
+//! to reach target accuracy; Fig. 2 plots accuracy against simulated
+//! wall-clock. Every experiment funnels through [`RunRecorder`] so that
+//! benches and examples emit the same machine-readable rows.
+
+pub mod plot;
+
+/// Byte counters split by direction and phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrafficMeter {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    /// Phase-1 (vote/GIA) share of the above, FediAC only.
+    pub vote_up_bytes: u64,
+    pub vote_down_bytes: u64,
+}
+
+impl TrafficMeter {
+    pub fn total(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 / 1e6
+    }
+
+    pub fn add(&mut self, other: &TrafficMeter) {
+        self.up_bytes += other.up_bytes;
+        self.down_bytes += other.down_bytes;
+        self.vote_up_bytes += other.vote_up_bytes;
+        self.vote_down_bytes += other.vote_down_bytes;
+    }
+}
+
+/// One global iteration's outcome.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated wall-clock at the *end* of this round (s).
+    pub sim_time_s: f64,
+    pub train_loss: f64,
+    /// Test accuracy if evaluated this round.
+    pub test_accuracy: Option<f64>,
+    pub test_loss: Option<f64>,
+    pub traffic: TrafficMeter,
+    /// Aggregation operations the switch performed this round.
+    pub agg_ops: u64,
+    /// Dimensions uploaded per client (k_S for FediAC; d for SwitchML...).
+    pub uploaded_elems: f64,
+}
+
+/// Accumulates rounds and renders CSV.
+#[derive(Debug, Default, Clone)]
+pub struct RunRecorder {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunRecorder {
+    pub fn new(label: impl Into<String>) -> Self {
+        RunRecorder { label: label.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    /// Cumulative traffic up to and including round index `i`.
+    pub fn cumulative_traffic(&self, i: usize) -> TrafficMeter {
+        let mut t = TrafficMeter::default();
+        for r in &self.records[..=i] {
+            t.add(&r.traffic);
+        }
+        t
+    }
+
+    /// Total traffic of the whole run.
+    pub fn total_traffic(&self) -> TrafficMeter {
+        let mut t = TrafficMeter::default();
+        for r in &self.records {
+            t.add(&r.traffic);
+        }
+        t
+    }
+
+    /// First round index whose evaluated accuracy reaches `target`, with
+    /// the simulated time and cumulative traffic at that point.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<(usize, f64, TrafficMeter)> {
+        for (i, r) in self.records.iter().enumerate() {
+            if let Some(acc) = r.test_accuracy {
+                if acc >= target {
+                    return Some((i, r.sim_time_s, self.cumulative_traffic(i)));
+                }
+            }
+        }
+        None
+    }
+
+    /// Best accuracy observed.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records.iter().filter_map(|r| r.test_accuracy).fold(None, |best, a| {
+            Some(best.map_or(a, |b: f64| b.max(a)))
+        })
+    }
+
+    /// Final simulated time.
+    pub fn final_time(&self) -> f64 {
+        self.records.last().map(|r| r.sim_time_s).unwrap_or(0.0)
+    }
+
+    /// Render as CSV (header + one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "label,round,sim_time_s,train_loss,test_accuracy,test_loss,\
+             up_bytes,down_bytes,agg_ops,uploaded_elems\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{},{},{},{},{},{:.1}\n",
+                self.label,
+                r.round,
+                r.sim_time_s,
+                r.train_loss,
+                r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}")),
+                r.test_loss.map_or(String::new(), |l| format!("{l:.4}")),
+                r.traffic.up_bytes,
+                r.traffic.down_bytes,
+                r.agg_ops,
+                r.uploaded_elems,
+            ));
+        }
+        out
+    }
+
+    /// Write the CSV next to other experiment outputs.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, t: f64, acc: Option<f64>, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            sim_time_s: t,
+            train_loss: 1.0,
+            test_accuracy: acc,
+            test_loss: acc.map(|_| 0.5),
+            traffic: TrafficMeter { up_bytes: up, down_bytes: up / 2, ..Default::default() },
+            agg_ops: 10,
+            uploaded_elems: 100.0,
+        }
+    }
+
+    #[test]
+    fn traffic_accumulates() {
+        let mut rr = RunRecorder::new("x");
+        rr.push(rec(0, 1.0, None, 100));
+        rr.push(rec(1, 2.0, Some(0.5), 100));
+        assert_eq!(rr.total_traffic().up_bytes, 200);
+        assert_eq!(rr.total_traffic().down_bytes, 100);
+        assert_eq!(rr.cumulative_traffic(0).total(), 150);
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut rr = RunRecorder::new("x");
+        rr.push(rec(0, 1.0, Some(0.3), 10));
+        rr.push(rec(1, 2.0, Some(0.6), 10));
+        rr.push(rec(2, 3.0, Some(0.9), 10));
+        let (round, t, traffic) = rr.time_to_accuracy(0.6).unwrap();
+        assert_eq!(round, 1);
+        assert_eq!(t, 2.0);
+        assert_eq!(traffic.total(), 30);
+        assert!(rr.time_to_accuracy(0.95).is_none());
+        assert_eq!(rr.best_accuracy(), Some(0.9));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut rr = RunRecorder::new("run1");
+        rr.push(rec(0, 1.0, Some(0.25), 42));
+        let csv = rr.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("label,round"));
+        assert!(lines[1].starts_with("run1,0,1.000000"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Terminal line plots for experiment output (no plotting crates offline).
+//!
+//! Renders multiple (x, y) series into a fixed-size ASCII grid with axis
+//! labels — enough to eyeball the Fig. 2/3/4 shapes straight from the
+//! terminal.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct PlotSpec {
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Default for PlotSpec {
+    fn default() -> Self {
+        PlotSpec { width: 72, height: 18 }
+    }
+}
+
+const MARKS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+
+/// Render series into an ASCII chart with a legend.
+pub fn render(series: &[Series], spec: PlotSpec, x_label: &str, y_label: &str) -> String {
+    let pts: Vec<(f64, f64)> =
+        series.iter().flat_map(|s| s.points.iter().cloned()).collect();
+    if pts.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_min, mut y_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x_min = x_min.min(x);
+        x_max = x_max.max(x);
+        y_min = y_min.min(y);
+        y_max = y_max.max(y);
+    }
+    if (x_max - x_min).abs() < 1e-12 {
+        x_max = x_min + 1.0;
+    }
+    if (y_max - y_min).abs() < 1e-12 {
+        y_max = y_min + 1.0;
+    }
+    let (w, h) = (spec.width, spec.height);
+    let mut grid = vec![vec![' '; w]; h];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        // Draw line segments between consecutive points.
+        for pair in s.points.windows(2) {
+            let (x0, y0) = pair[0];
+            let (x1, y1) = pair[1];
+            let steps = (w * 2).max(2);
+            for t in 0..=steps {
+                let f = t as f64 / steps as f64;
+                let x = x0 + (x1 - x0) * f;
+                let y = y0 + (y1 - y0) * f;
+                let cx = ((x - x_min) / (x_max - x_min) * (w - 1) as f64).round() as usize;
+                let cy = ((y - y_min) / (y_max - y_min) * (h - 1) as f64).round() as usize;
+                grid[h - 1 - cy][cx] = mark;
+            }
+        }
+        if let Some(&(x, y)) = s.points.first() {
+            let cx = ((x - x_min) / (x_max - x_min) * (w - 1) as f64).round() as usize;
+            let cy = ((y - y_min) / (y_max - y_min) * (h - 1) as f64).round() as usize;
+            grid[h - 1 - cy][cx] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{y_label}\n"));
+    for (i, row) in grid.iter().enumerate() {
+        let y_val = y_max - (y_max - y_min) * i as f64 / (h - 1) as f64;
+        let label = if i % 4 == 0 { format!("{y_val:>8.3} ") } else { " ".repeat(9) };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(9));
+    out.push('+');
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out.push_str(&format!(
+        "{}{:<12.4}{}{:>12.4}   ({x_label})\n",
+        " ".repeat(10),
+        x_min,
+        " ".repeat(w.saturating_sub(26)),
+        x_max
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nonempty_chart() {
+        let s = vec![
+            Series {
+                name: "a".into(),
+                points: (0..20).map(|i| (i as f64, (i as f64).sqrt())).collect(),
+            },
+            Series {
+                name: "b".into(),
+                points: (0..20).map(|i| (i as f64, i as f64 / 20.0)).collect(),
+            },
+        ];
+        let txt = render(&s, PlotSpec::default(), "time", "acc");
+        assert!(txt.contains('*') && txt.contains('o'));
+        assert!(txt.contains("time") && txt.contains("acc"));
+        assert!(txt.lines().count() > 18);
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        assert_eq!(render(&[], PlotSpec::default(), "x", "y"), "(no data)\n");
+        let s = vec![Series { name: "p".into(), points: vec![(1.0, 1.0)] }];
+        let txt = render(&s, PlotSpec::default(), "x", "y");
+        assert!(txt.contains('*'));
+    }
+}

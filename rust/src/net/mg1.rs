@@ -1,0 +1,134 @@
+//! M/G/1 queueing primitives (§V-A2).
+//!
+//! The PS aggregation pipeline and each client's download/update path are
+//! modelled as M/G/1 queues: Poisson arrivals, a general (here Gaussian,
+//! zero-truncated) service-time distribution, one server. The simulator
+//! uses the exact sample-path recursion; `pollaczek_khinchine` provides
+//! the analytic mean waiting time the tests validate against.
+
+use crate::sim::SimTime;
+
+/// Single-server FIFO queue: tracks when the server frees up.
+#[derive(Debug, Clone, Default)]
+pub struct Mg1Queue {
+    next_free: SimTime,
+    busy_time: f64,
+    served: u64,
+    wait_sum: f64,
+}
+
+impl Mg1Queue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serve a job arriving at `arrival` needing `service` seconds.
+    /// Returns its departure time. Lindley recursion:
+    /// start = max(arrival, previous departure).
+    pub fn serve(&mut self, arrival: SimTime, service: f64) -> SimTime {
+        let start = arrival.max(self.next_free);
+        let depart = start + service;
+        self.wait_sum += start - arrival;
+        self.busy_time += service;
+        self.served += 1;
+        self.next_free = depart;
+        depart
+    }
+
+    /// Time at which the server next becomes idle.
+    pub fn next_free(&self) -> SimTime {
+        self.next_free
+    }
+
+    /// Mean queueing delay (excluding service) over jobs served so far.
+    pub fn mean_wait(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.wait_sum / self.served as f64
+        }
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    pub fn busy_time(&self) -> f64 {
+        self.busy_time
+    }
+
+    /// Reset between rounds/phases while keeping cumulative stats external.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// Analytic Pollaczek–Khinchine mean waiting time for an M/G/1 queue:
+/// W = λ·E[S²] / (2·(1−ρ)) with ρ = λ·E[S]. Returns None when unstable
+/// (ρ ≥ 1).
+pub fn pollaczek_khinchine(lambda: f64, mean_s: f64, var_s: f64) -> Option<f64> {
+    let rho = lambda * mean_s;
+    if rho >= 1.0 {
+        return None;
+    }
+    let es2 = var_s + mean_s * mean_s;
+    Some(lambda * es2 / (2.0 * (1.0 - rho)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fifo_and_no_overlap() {
+        let mut q = Mg1Queue::new();
+        let d1 = q.serve(0.0, 1.0);
+        let d2 = q.serve(0.5, 1.0); // arrives while busy
+        let d3 = q.serve(5.0, 1.0); // arrives after idle period
+        assert_eq!(d1, 1.0);
+        assert_eq!(d2, 2.0);
+        assert_eq!(d3, 6.0);
+        assert!((q.mean_wait() - (0.0 + 0.5 + 0.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pk_formula_md1() {
+        // M/D/1: var = 0 ⇒ W = λ·E[S]² / (2(1−ρ)) = 0.5/(2·0.5) = 0.5.
+        let w = pollaczek_khinchine(0.5, 1.0, 0.0).unwrap();
+        assert!((w - 0.5).abs() < 1e-12);
+        assert!(pollaczek_khinchine(1.1, 1.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn simulation_matches_pollaczek_khinchine() {
+        // M/M/1 as a special case of M/G/1: exponential service.
+        let lambda = 0.7;
+        let mu = 1.0;
+        let mut rng = Rng::new(11);
+        let mut q = Mg1Queue::new();
+        let mut t = 0.0;
+        let n = 200_000;
+        for _ in 0..n {
+            t += rng.exponential(lambda);
+            let s = rng.exponential(mu);
+            q.serve(t, s);
+        }
+        let analytic =
+            pollaczek_khinchine(lambda, 1.0 / mu, 1.0 / (mu * mu)).unwrap();
+        let sim = q.mean_wait();
+        assert!(
+            (sim - analytic).abs() / analytic < 0.05,
+            "sim {sim} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn utilisation_tracks_busy_time() {
+        let mut q = Mg1Queue::new();
+        q.serve(0.0, 2.0);
+        q.serve(10.0, 3.0);
+        assert_eq!(q.busy_time(), 5.0);
+        assert_eq!(q.served(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Network substrate: packets, Poisson arrivals, M/G/1 queues and the
+//! synthetic cellular traces that drive client upload rates (§V-A2).
+
+pub mod mg1;
+pub mod packet;
+pub mod poisson;
+pub mod trace;
+
+pub use mg1::{pollaczek_khinchine, Mg1Queue};
+pub use packet::{elems_per_packet, frames_for_bits, packetize, Packet, Phase};
+pub use poisson::PoissonProcess;
+pub use trace::{client_rates, CellularTrace};

@@ -1,0 +1,170 @@
+//! Packet model: 1,500-byte Ethernet frames carrying aggregation payloads.
+//!
+//! Uploaded model updates "are encapsulated into packets which are then
+//! transmitted to the PS; the default size of each packet is 1,500 bytes"
+//! (§V-A2). Alignment matters: because the GIA fixes the index order, every
+//! FediAC client packs the same number of elements per packet and the PS
+//! adds payloads slot-by-slot without reading indices (§IV "Model
+//! Aggregation").
+
+/// Which protocol phase a packet belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// FediAC phase 1: packed 0-1 vote arrays.
+    Vote,
+    /// Data phase: quantised integer model updates.
+    Update,
+    /// Downstream: GIA or aggregated updates multicast to clients.
+    Broadcast,
+}
+
+/// Simulation-level packet descriptor. Payload *contents* live in the
+/// algorithm state; the descriptor carries what the network/switch needs:
+/// identity, sizing and the aggregation slot (block index).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    pub client: usize,
+    pub round: usize,
+    pub phase: Phase,
+    /// Aggregation block this packet contributes to (slot alignment).
+    pub block: usize,
+    /// Payload bytes actually carried (≤ payload capacity).
+    pub payload_bytes: usize,
+    /// Number of logical elements (votes bits / int updates) in the payload.
+    pub elements: usize,
+}
+
+impl Packet {
+    /// Total wire size including protocol headers.
+    pub fn wire_bytes(&self, header: usize) -> usize {
+        self.payload_bytes + header
+    }
+}
+
+/// Compute the packet layout for a vector payload.
+///
+/// `total_bits` of payload are split into MTU-sized frames with
+/// `payload_capacity = mtu − header` bytes each. Returns (packet count,
+/// last-packet payload bytes).
+pub fn frames_for_bits(total_bits: usize, payload_capacity_bytes: usize) -> (usize, usize) {
+    if total_bits == 0 {
+        return (0, 0);
+    }
+    let total_bytes = total_bits.div_ceil(8);
+    let n = total_bytes.div_ceil(payload_capacity_bytes);
+    let last = total_bytes - (n - 1) * payload_capacity_bytes;
+    (n, last)
+}
+
+/// Build the per-block packet descriptors for one client's upload of
+/// `elements` logical values of `bits_per_element` bits each.
+///
+/// Every client uses the same layout (same element count per packet), so
+/// block i from any client aligns with block i from every other client —
+/// the property phase 1 buys FediAC (§III-B).
+pub fn packetize(
+    client: usize,
+    round: usize,
+    phase: Phase,
+    elements: usize,
+    bits_per_element: usize,
+    payload_capacity_bytes: usize,
+) -> Vec<Packet> {
+    if elements == 0 {
+        return Vec::new();
+    }
+    let elems_per_packet = (payload_capacity_bytes * 8) / bits_per_element;
+    assert!(elems_per_packet > 0, "element larger than packet payload");
+    let n = elements.div_ceil(elems_per_packet);
+    (0..n)
+        .map(|block| {
+            let e = if block + 1 == n {
+                elements - block * elems_per_packet
+            } else {
+                elems_per_packet
+            };
+            Packet {
+                client,
+                round,
+                phase,
+                block,
+                payload_bytes: (e * bits_per_element).div_ceil(8),
+                elements: e,
+            }
+        })
+        .collect()
+}
+
+/// Number of elements per full packet for a given encoding.
+pub fn elems_per_packet(bits_per_element: usize, payload_capacity_bytes: usize) -> usize {
+    (payload_capacity_bytes * 8) / bits_per_element
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CAP: usize = 1500 - 62;
+
+    #[test]
+    fn frames_for_bits_boundaries() {
+        assert_eq!(frames_for_bits(0, CAP), (0, 0));
+        assert_eq!(frames_for_bits(8, CAP), (1, 1));
+        assert_eq!(frames_for_bits(CAP * 8, CAP), (1, CAP));
+        assert_eq!(frames_for_bits(CAP * 8 + 1, CAP), (2, 1));
+    }
+
+    #[test]
+    fn packetize_alignment_across_clients() {
+        // Two clients uploading the same element count produce identical
+        // block layouts — the alignment FediAC relies on.
+        let a = packetize(0, 3, Phase::Update, 10_000, 32, CAP);
+        let b = packetize(1, 3, Phase::Update, 10_000, 32, CAP);
+        assert_eq!(a.len(), b.len());
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.block, pb.block);
+            assert_eq!(pa.elements, pb.elements);
+            assert_eq!(pa.payload_bytes, pb.payload_bytes);
+        }
+        let total: usize = a.iter().map(|p| p.elements).sum();
+        assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn packetize_vote_phase_bit_density() {
+        // Phase 1 carries one bit per dimension: a 10M-d model fits in
+        // ceil(10e6/8 / 1438) ≈ 870 packets (§IV-D's 1.25 MB).
+        let pkts = packetize(0, 0, Phase::Vote, 10_000_000, 1, CAP);
+        let bytes: usize = pkts.iter().map(|p| p.payload_bytes).sum();
+        assert_eq!(bytes, 1_250_000);
+        assert_eq!(pkts.len(), 1_250_000_usize.div_ceil(CAP));
+    }
+
+    #[test]
+    fn last_packet_partial() {
+        let pkts = packetize(0, 0, Phase::Update, 7, 32, CAP);
+        assert_eq!(pkts.len(), 1);
+        assert_eq!(pkts[0].elements, 7);
+        assert_eq!(pkts[0].payload_bytes, 28);
+    }
+
+    #[test]
+    fn wire_bytes_includes_header() {
+        let p = Packet {
+            client: 0,
+            round: 0,
+            phase: Phase::Update,
+            block: 0,
+            payload_bytes: 100,
+            elements: 25,
+        };
+        assert_eq!(p.wire_bytes(62), 162);
+    }
+
+    #[test]
+    fn elems_per_packet_encodings() {
+        assert_eq!(elems_per_packet(32, CAP), CAP * 8 / 32); // 32-bit ints
+        assert_eq!(elems_per_packet(1, CAP), CAP * 8); // vote bits
+        assert_eq!(elems_per_packet(12, CAP), CAP * 8 / 12); // SwitchML b=12
+    }
+}

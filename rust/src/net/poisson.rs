@@ -1,0 +1,102 @@
+//! Poisson packet-arrival processes (§V-A2).
+//!
+//! "Each client uploads model updates following a Poisson process with the
+//! rate determined by its network transmission rate." A client with n
+//! packets to send at rate λ emits them at the event times of a Poisson
+//! process; the superposition at the PS is again Poisson with Σλᵢ.
+
+use crate::sim::SimTime;
+use crate::util::Rng;
+
+/// Homogeneous Poisson process generator.
+#[derive(Debug, Clone)]
+pub struct PoissonProcess {
+    rate: f64,
+    t: SimTime,
+}
+
+impl PoissonProcess {
+    /// Start a process at `start` with `rate` events/second.
+    pub fn new(rate: f64, start: SimTime) -> Self {
+        assert!(rate > 0.0, "poisson rate must be positive");
+        PoissonProcess { rate, t: start }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Next event time (advances internal clock).
+    pub fn next(&mut self, rng: &mut Rng) -> SimTime {
+        self.t += rng.exponential(self.rate);
+        self.t
+    }
+
+    /// Event times for the next `n` events.
+    pub fn take(&mut self, rng: &mut Rng, n: usize) -> Vec<SimTime> {
+        (0..n).map(|_| self.next(rng)).collect()
+    }
+}
+
+/// Time to transmit `n` packets at `rate` pkts/s in expectation.
+pub fn expected_duration(n: usize, rate: f64) -> f64 {
+    n as f64 / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interarrival_mean_matches_rate() {
+        let mut rng = Rng::new(3);
+        let rate = 1000.0;
+        let mut p = PoissonProcess::new(rate, 0.0);
+        let n = 100_000;
+        let times = p.take(&mut rng, n);
+        let duration = *times.last().unwrap();
+        let empirical_rate = n as f64 / duration;
+        assert!(
+            (empirical_rate - rate).abs() / rate < 0.02,
+            "empirical {empirical_rate}"
+        );
+    }
+
+    #[test]
+    fn strictly_increasing() {
+        let mut rng = Rng::new(4);
+        let mut p = PoissonProcess::new(50.0, 10.0);
+        let mut last = 10.0;
+        for _ in 0..1000 {
+            let t = p.next(&mut rng);
+            assert!(t > last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn superposition_rate_adds() {
+        // Merge two processes; the merged count over a window matches Σλ.
+        let mut rng = Rng::new(5);
+        let mut a = PoissonProcess::new(300.0, 0.0);
+        let mut b = PoissonProcess::new(700.0, 0.0);
+        let horizon = 50.0;
+        let mut count = 0;
+        loop {
+            let t = a.next(&mut rng);
+            if t > horizon {
+                break;
+            }
+            count += 1;
+        }
+        loop {
+            let t = b.next(&mut rng);
+            if t > horizon {
+                break;
+            }
+            count += 1;
+        }
+        let rate = count as f64 / horizon;
+        assert!((rate - 1000.0).abs() < 30.0, "rate {rate}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Synthetic cellular upload traces (NYC-subway substitute).
+//!
+//! The paper assigns client upload rates from packet traces "collected from
+//! scenarios of subway traveling in New York City" [38], yielding rates of
+//! 200–2,800 packets/s across clients (§V-A2). Those traces are not
+//! public, so this generator reproduces the two properties the experiments
+//! actually consume:
+//!
+//! 1. heterogeneous *mean* rates across clients spanning that range, and
+//! 2. heavy-tailed within-trace variability (tunnels vs stations vs moving)
+//!    via a regime-switching Markov chain.
+//!
+//! DESIGN.md §2 substitution 2 documents this.
+
+use crate::util::Rng;
+
+/// Paper-reported bounds on per-client upload rates (packets/second).
+pub const MIN_RATE: f64 = 200.0;
+pub const MAX_RATE: f64 = 2_800.0;
+
+/// Connectivity regime of a subway rider.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// Deep tunnel: weak link.
+    Tunnel,
+    /// Moving between stations: medium link.
+    Moving,
+    /// In/near a station: strong link.
+    Station,
+}
+
+impl Regime {
+    /// Rate multiplier applied to the client's base rate.
+    fn multiplier(self) -> f64 {
+        match self {
+            Regime::Tunnel => 0.25,
+            Regime::Moving => 1.0,
+            Regime::Station => 1.8,
+        }
+    }
+
+    /// Markov transition: rides alternate tunnel → moving → station.
+    fn next(self, rng: &mut Rng) -> Regime {
+        let u = rng.f64();
+        match self {
+            Regime::Tunnel => {
+                if u < 0.6 {
+                    Regime::Tunnel
+                } else {
+                    Regime::Moving
+                }
+            }
+            Regime::Moving => {
+                if u < 0.3 {
+                    Regime::Tunnel
+                } else if u < 0.6 {
+                    Regime::Moving
+                } else {
+                    Regime::Station
+                }
+            }
+            Regime::Station => {
+                if u < 0.5 {
+                    Regime::Station
+                } else {
+                    Regime::Moving
+                }
+            }
+        }
+    }
+}
+
+/// One client's synthetic trace: a piecewise-constant rate function.
+#[derive(Debug, Clone)]
+pub struct CellularTrace {
+    /// (segment start time s, rate pkts/s); segments are contiguous.
+    segments: Vec<(f64, f64)>,
+    /// Total generated horizon (s); `rate_at` extends periodically.
+    horizon_s: f64,
+    /// Mean over the generated horizon.
+    mean_rate: f64,
+}
+
+impl CellularTrace {
+    /// Generate a trace of `horizon_s` seconds with ~`segment_s`-long
+    /// regimes around a log-uniform base rate.
+    pub fn generate(rng: &mut Rng, horizon_s: f64, segment_s: f64) -> Self {
+        // Log-uniform base so the population spreads across the range the
+        // way heterogeneous radio conditions do.
+        let log_lo = (MIN_RATE * 1.6).ln();
+        let log_hi = (MAX_RATE / 1.9).ln();
+        let base = rng.range_f64(log_lo, log_hi).exp();
+        let mut regime = Regime::Moving;
+        let mut t = 0.0;
+        let mut segments = Vec::new();
+        let mut weighted = 0.0;
+        while t < horizon_s {
+            let dur = rng.exponential(1.0 / segment_s).min(horizon_s - t).max(0.01);
+            let rate = (base * regime.multiplier()).clamp(MIN_RATE, MAX_RATE);
+            segments.push((t, rate));
+            weighted += rate * dur;
+            t += dur;
+            regime = regime.next(rng);
+        }
+        CellularTrace { segments, horizon_s, mean_rate: weighted / horizon_s }
+    }
+
+    /// Rate at simulated time `t` (clamped into the horizon; periodic
+    /// extension past the end).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let t = if t < 0.0 { 0.0 } else { t % self.horizon_s.max(1.0) };
+        match self.segments.binary_search_by(|&(s, _)| s.partial_cmp(&t).unwrap()) {
+            Ok(i) => self.segments[i].1,
+            Err(0) => self.segments[0].1,
+            Err(i) => self.segments[i - 1].1,
+        }
+    }
+
+    pub fn mean_rate(&self) -> f64 {
+        self.mean_rate
+    }
+}
+
+/// Population helper: one mean upload rate per client, as the experiments
+/// use (§V-A2 assigns the trace-calculated rate to each client).
+pub fn client_rates(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x7ace);
+    (0..n)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            CellularTrace::generate(&mut r, 600.0, 30.0).mean_rate()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_within_paper_range() {
+        let rates = client_rates(100, 1);
+        for &r in &rates {
+            assert!((MIN_RATE..=MAX_RATE).contains(&r), "rate {r}");
+        }
+    }
+
+    #[test]
+    fn rates_are_heterogeneous() {
+        let rates = client_rates(50, 2);
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 2.0, "spread too small: {min}..{max}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(client_rates(10, 3), client_rates(10, 3));
+        assert_ne!(client_rates(10, 3), client_rates(10, 4));
+    }
+
+    #[test]
+    fn rate_at_piecewise_lookup() {
+        let mut rng = Rng::new(5);
+        let trace = CellularTrace::generate(&mut rng, 100.0, 10.0);
+        for t in [0.0, 1.0, 50.0, 99.9, 150.0] {
+            let r = trace.rate_at(t);
+            assert!((MIN_RATE..=MAX_RATE).contains(&r));
+        }
+    }
+
+    #[test]
+    fn mean_rate_consistent_with_segments() {
+        let mut rng = Rng::new(6);
+        let trace = CellularTrace::generate(&mut rng, 200.0, 20.0);
+        // Numeric average of rate_at over the horizon ≈ stored mean.
+        let samples = 2000;
+        let avg: f64 = (0..samples)
+            .map(|i| trace.rate_at(i as f64 * 200.0 / samples as f64))
+            .sum::<f64>()
+            / samples as f64;
+        assert!(
+            (avg - trace.mean_rate()).abs() / trace.mean_rate() < 0.05,
+            "avg {avg} vs mean {}",
+            trace.mean_rate()
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT model backend: the full three-layer stack at runtime.
+//!
+//! Loads the AOT HLO-text artifacts (`train`/`eval`/`compress`/`vote`/
+//! `init`), compiles them once on the PJRT CPU client, and serves the
+//! [`ModelBackend`] contract from compiled executables. Python never runs
+//! here — the artifacts *are* the L2 JAX model and the L1 Pallas kernels.
+//!
+//! Interchange is HLO text via `HloModuleProto::from_text_file` (see
+//! DESIGN.md §1 for why not serialized protos).
+
+use anyhow::{Context, Result};
+
+use crate::data::FederatedData;
+use crate::fl::backend::{LocalTrainOutput, ModelBackend};
+use crate::runtime::manifest::{Manifest, ModelEntry};
+use crate::util::Rng;
+
+/// PJRT-backed model execution.
+pub struct PjrtBackend {
+    entry: ModelEntry,
+    data: FederatedData,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    compress_exe: xla::PjRtLoadedExecutable,
+    vote_exe: xla::PjRtLoadedExecutable,
+    init_exe: xla::PjRtLoadedExecutable,
+    seed: u64,
+    // Reused host staging buffers (hot path: one pair per train call).
+    feat_buf: Vec<f32>,
+    label_buf: Vec<i32>,
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    dir: &str,
+    file: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = std::path::Path::new(dir).join(file);
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {file}"))
+}
+
+impl PjrtBackend {
+    /// Load + compile the artifact bundle for `model` from `dir`.
+    pub fn load(dir: &str, model: &str, data: FederatedData, seed: u64) -> Result<Self> {
+        let manifest = Manifest::load(dir).context("loading manifest.json")?;
+        let entry = manifest.model(model)?.clone();
+        anyhow::ensure!(
+            entry.feature_len() == data.train.feature_len(),
+            "dataset feature_len {} != model input {}",
+            data.train.feature_len(),
+            entry.feature_len()
+        );
+        anyhow::ensure!(
+            entry.num_classes == data.train.num_classes(),
+            "dataset classes {} != model classes {}",
+            data.train.num_classes(),
+            entry.num_classes
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let get = |kind: &str| -> Result<&str> {
+            entry
+                .artifacts
+                .get(kind)
+                .map(|s| s.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact kind '{kind}' missing"))
+        };
+        let train_exe = compile(&client, dir, get("train")?)?;
+        let eval_exe = compile(&client, dir, get("eval")?)?;
+        let compress_exe = compile(&client, dir, get("compress")?)?;
+        let vote_exe = compile(&client, dir, get("vote")?)?;
+        let init_exe = compile(&client, dir, get("init")?)?;
+        Ok(PjrtBackend {
+            entry,
+            data,
+            train_exe,
+            eval_exe,
+            compress_exe,
+            vote_exe,
+            init_exe,
+            seed,
+            feat_buf: Vec::new(),
+            label_buf: Vec::new(),
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn image_dims(&self, leading: &[i64]) -> Vec<i64> {
+        let mut dims = leading.to_vec();
+        dims.extend(self.entry.input_shape.iter().map(|&d| d as i64));
+        dims
+    }
+
+    /// Execute an executable and unwrap the outer tuple.
+    fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let out = exe.execute::<xla::Literal>(args)?;
+        Ok(out[0][0].to_literal_sync()?)
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn d(&self) -> usize {
+        self.entry.d
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        let result = Self::run(&self.init_exe, &[]).expect("init artifact failed");
+        let flat = result.to_tuple1().and_then(|l| l.to_vec::<f32>()).expect("init output");
+        assert_eq!(flat.len(), self.entry.d);
+        flat
+    }
+
+    fn local_train(
+        &mut self,
+        params: &[f32],
+        client: usize,
+        round: usize,
+        lr: f32,
+    ) -> LocalTrainOutput {
+        let e = self.entry.local_iters;
+        let b = self.entry.train_batch;
+        let flen = self.entry.feature_len();
+        let my = &self.data.client_indices[client];
+        assert!(!my.is_empty(), "client {client} has no data");
+        let mut rng =
+            Rng::new(self.seed ^ (client as u64) << 20 ^ (round as u64) << 1 ^ 0xB47C);
+        self.feat_buf.resize(e * b * flen, 0.0);
+        self.label_buf.resize(e * b, 0);
+        let indices: Vec<usize> = (0..e * b).map(|_| my[rng.below(my.len())]).collect();
+        self.data.train.fill_batch(&indices, &mut self.feat_buf, &mut self.label_buf);
+
+        let dims = self.image_dims(&[e as i64, b as i64]);
+        let images = xla::Literal::vec1(self.feat_buf.as_slice())
+            .reshape(&dims)
+            .expect("image reshape");
+        let labels = xla::Literal::vec1(self.label_buf.as_slice())
+            .reshape(&[e as i64, b as i64])
+            .expect("label reshape");
+        let params_lit = xla::Literal::vec1(params);
+        let lr_lit = xla::Literal::scalar(lr);
+
+        let result = Self::run(&self.train_exe, &[params_lit, images, labels, lr_lit])
+            .expect("train exec");
+        let (new_params, loss) = result.to_tuple2().expect("train tuple");
+        LocalTrainOutput {
+            new_params: new_params.to_vec::<f32>().expect("params out"),
+            mean_loss: loss.to_vec::<f32>().expect("loss out")[0],
+        }
+    }
+
+    fn evaluate(&mut self, params: &[f32]) -> (f64, f64) {
+        let eb = self.entry.eval_batch;
+        let flen = self.entry.feature_len();
+        let n = self.data.test.len();
+        let chunks = n / eb; // remainder trimmed; test sizes are multiples
+        assert!(chunks > 0, "test set smaller than eval batch");
+        let params_lit = xla::Literal::vec1(params);
+        let mut feat = vec![0f32; eb * flen];
+        let mut labels = vec![0i32; eb];
+        let mut correct = 0i64;
+        let mut loss_sum = 0f64;
+        for c in 0..chunks {
+            let indices: Vec<usize> = (c * eb..(c + 1) * eb).collect();
+            self.data.test.fill_batch(&indices, &mut feat, &mut labels);
+            let dims = self.image_dims(&[eb as i64]);
+            let images =
+                xla::Literal::vec1(feat.as_slice()).reshape(&dims).expect("eval reshape");
+            let labels_lit = xla::Literal::vec1(labels.as_slice())
+                .reshape(&[eb as i64])
+                .expect("eval labels");
+            let result = Self::run(&self.eval_exe, &[params_lit.clone(), images, labels_lit])
+                .expect("eval exec");
+            let (c_lit, l_lit) = result.to_tuple2().expect("eval tuple");
+            correct += c_lit.to_vec::<i32>().expect("correct")[0] as i64;
+            loss_sum += l_lit.to_vec::<f32>().expect("loss")[0] as f64;
+        }
+        (correct as f64 / (chunks * eb) as f64, loss_sum / chunks as f64)
+    }
+
+    fn vote_scores(&mut self, updates: &[f32], seed: i64) -> Vec<f32> {
+        let u = xla::Literal::vec1(updates);
+        let s = xla::Literal::scalar(seed as i32);
+        let result = Self::run(&self.vote_exe, &[u, s]).expect("vote exec");
+        result.to_tuple1().and_then(|l| l.to_vec::<f32>()).expect("vote out")
+    }
+
+    fn compress(
+        &mut self,
+        updates: &[f32],
+        gia: &[f32],
+        f: f32,
+        seed: i64,
+    ) -> (Vec<i32>, Vec<f32>) {
+        let u = xla::Literal::vec1(updates);
+        let g = xla::Literal::vec1(gia);
+        let f_lit = xla::Literal::scalar(f);
+        let s = xla::Literal::scalar(seed as i32);
+        let result =
+            Self::run(&self.compress_exe, &[u, g, f_lit, s]).expect("compress exec");
+        let (q, residual) = result.to_tuple2().expect("compress tuple");
+        (
+            q.to_vec::<i32>().expect("q out"),
+            residual.to_vec::<f32>().expect("residual out"),
+        )
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}

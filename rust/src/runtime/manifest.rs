@@ -1,0 +1,221 @@
+//! Artifact manifest: what the AOT bundle contains and how to call it.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json`; this module
+//! parses and validates it so the rust side never guesses shapes.
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] json::JsonError),
+    #[error("manifest: {0}")]
+    Schema(String),
+}
+
+/// One tensor in the flat-parameter layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorLayout {
+    pub tensor: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model variant's entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub d: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub local_iters: usize,
+    pub layout: Vec<TensorLayout>,
+    /// artifact kind ("train"/"eval"/"compress"/"vote") → file name.
+    pub artifacts: std::collections::BTreeMap<String, String>,
+}
+
+impl ModelEntry {
+    /// Flat feature length of one sample.
+    pub fn feature_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Validate internal consistency (layout sums to d, artifacts present).
+    pub fn validate(&self) -> Result<(), ManifestError> {
+        let total: usize =
+            self.layout.iter().map(|t| t.shape.iter().product::<usize>()).sum();
+        if total != self.d {
+            return Err(ManifestError::Schema(format!(
+                "{}: layout sums to {total}, manifest d = {}",
+                self.name, self.d
+            )));
+        }
+        for kind in ["train", "eval", "compress", "vote", "init"] {
+            if !self.artifacts.contains_key(kind) {
+                return Err(ManifestError::Schema(format!(
+                    "{}: missing artifact '{kind}'",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: std::collections::BTreeMap<String, ModelEntry>,
+}
+
+fn usize_field(obj: &Json, key: &str, ctx: &str) -> Result<usize, ManifestError> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ManifestError::Schema(format!("{ctx}: missing usize '{key}'")))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, ManifestError> {
+        let root = json::parse(text)?;
+        let fmt = root.get("format").and_then(Json::as_str).unwrap_or("");
+        if fmt != "hlo-text-v1" {
+            return Err(ManifestError::Schema(format!("unknown format '{fmt}'")));
+        }
+        let models_json = root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| ManifestError::Schema("missing 'models'".into()))?;
+        let mut models = std::collections::BTreeMap::new();
+        for (name, m) in models_json {
+            let layout = m
+                .get("layout")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ManifestError::Schema(format!("{name}: missing layout")))?
+                .iter()
+                .map(|t| -> Result<TensorLayout, ManifestError> {
+                    Ok(TensorLayout {
+                        tensor: t
+                            .get("tensor")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| {
+                                ManifestError::Schema(format!("{name}: tensor name"))
+                            })?
+                            .to_string(),
+                        shape: t
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| {
+                                ManifestError::Schema(format!("{name}: tensor shape"))
+                            })?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let artifacts = m
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| ManifestError::Schema(format!("{name}: artifacts")))?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                .collect();
+            let entry = ModelEntry {
+                name: name.clone(),
+                d: usize_field(m, "d", name)?,
+                input_shape: m
+                    .get("input_shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ManifestError::Schema(format!("{name}: input_shape")))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                num_classes: usize_field(m, "num_classes", name)?,
+                train_batch: usize_field(m, "train_batch", name)?,
+                eval_batch: usize_field(m, "eval_batch", name)?,
+                local_iters: usize_field(m, "local_iters", name)?,
+                layout,
+                artifacts,
+            };
+            entry.validate()?;
+            models.insert(name.clone(), entry);
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn load(dir: &str) -> Result<Self, ManifestError> {
+        let path = std::path::Path::new(dir).join("manifest.json");
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry, ManifestError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| ManifestError::Schema(format!("model '{name}' not in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "models": {
+        "tiny": {
+          "name": "tiny", "d": 12, "input_shape": [2], "num_classes": 2,
+          "train_batch": 4, "eval_batch": 8, "local_iters": 5,
+          "layout": [
+            {"tensor": "fc0_w", "shape": [2, 3]},
+            {"tensor": "fc0_b", "shape": [3]},
+            {"tensor": "fc1_w", "shape": [3, 1]}
+          ],
+          "artifacts": {"train": "t", "eval": "e", "compress": "c", "vote": "v", "init": "i"},
+          "init_params_seed": 0
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.d, 12);
+        assert_eq!(tiny.feature_len(), 2);
+        assert_eq!(tiny.layout.len(), 3);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn layout_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"d\": 12", "\"d\": 13");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_rejected() {
+        let bad = SAMPLE.replace("\"vote\": \"v\"", "\"votex\": \"v\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_format_rejected() {
+        let bad = SAMPLE.replace("hlo-text-v1", "hlo-bin");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_bundle_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(!m.models.is_empty());
+            for entry in m.models.values() {
+                entry.validate().unwrap();
+            }
+        }
+    }
+}

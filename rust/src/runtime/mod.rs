@@ -1,0 +1,17 @@
+//! PJRT runtime: manifest parsing + artifact loading + the PJRT-backed
+//! [`crate::fl::ModelBackend`]. Start-to-finish pattern follows
+//! /opt/xla-example/load_hlo (HLO text → compile → execute).
+
+pub mod backend;
+pub mod manifest;
+
+pub use backend::PjrtBackend;
+pub use manifest::{Manifest, ManifestError, ModelEntry};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// True when an AOT bundle is present (tests skip PJRT paths otherwise).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,0 +1,10 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper evaluates FediAC on a simulated testbed (§V-A2): clients
+//! upload packets as Poisson processes, the PS serves them through an
+//! M/G/1 queue, and figures plot accuracy against *simulated* wall-clock.
+//! This module provides the deterministic event core those models run on.
+
+pub mod event;
+
+pub use event::{EventQueue, SimTime};

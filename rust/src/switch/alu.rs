@@ -1,0 +1,102 @@
+//! Integer-only data-plane arithmetic.
+//!
+//! A PS "can only perform integer arithmetic" (§IV step 3 / [5]); floats
+//! never cross the data plane. These are the only two operations FediAC
+//! and the baselines need, and both are on the per-packet hot path:
+//!
+//! * phase 2 / SwitchML / OmniReduce: lane-wise `i32` accumulate;
+//! * phase 1: add a packed 0-1 vote array into `u16` vote counters.
+//!
+//! Saturation is counted, not silently wrapped — overflow on a real
+//! switch corrupts the aggregate, so the simulator surfaces it as a stat.
+
+/// Lane-wise saturating i32 accumulate; returns the number of lanes that
+/// saturated (data-plane overflow events).
+pub fn add_i32_sat(acc: &mut [i32], payload: &[i32]) -> u64 {
+    debug_assert_eq!(acc.len(), payload.len());
+    let mut overflows = 0;
+    for (a, &p) in acc.iter_mut().zip(payload) {
+        let (sum, over) = a.overflowing_add(p);
+        if over {
+            *a = if *a >= 0 { i32::MAX } else { i32::MIN };
+            overflows += 1;
+        } else {
+            *a = sum;
+        }
+    }
+    overflows
+}
+
+/// Add a packed little-endian bit payload into `u16` vote counters.
+/// `counters[i] += bit(i)` for i in 0..counters.len(). Saturating (a vote
+/// count can never legitimately exceed N ≤ 65535 anyway).
+pub fn add_vote_bits(counters: &mut [u16], bits: &[u8]) {
+    for (i, ctr) in counters.iter_mut().enumerate() {
+        let byte = bits[i >> 3];
+        let bit = (byte >> (i & 7)) & 1;
+        *ctr = ctr.saturating_add(bit as u16);
+    }
+}
+
+/// Threshold the vote counters into GIA bits (§IV step 2): bit i is set
+/// iff counters[i] ≥ a. Writes packed little-endian bytes into `out`.
+pub fn threshold_votes(counters: &[u16], a: u16, out: &mut [u8]) {
+    debug_assert!(out.len() * 8 >= counters.len());
+    out.iter_mut().for_each(|b| *b = 0);
+    for (i, &c) in counters.iter().enumerate() {
+        if c >= a {
+            out[i >> 3] |= 1 << (i & 7);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i32_accumulate() {
+        let mut acc = vec![1, -2, 3];
+        let over = add_i32_sat(&mut acc, &[10, 20, -30]);
+        assert_eq!(acc, vec![11, 18, -27]);
+        assert_eq!(over, 0);
+    }
+
+    #[test]
+    fn i32_saturates_and_counts() {
+        let mut acc = vec![i32::MAX - 1, i32::MIN + 1];
+        let over = add_i32_sat(&mut acc, &[5, -5]);
+        assert_eq!(acc, vec![i32::MAX, i32::MIN]);
+        assert_eq!(over, 2);
+    }
+
+    #[test]
+    fn vote_bits_accumulate() {
+        let mut ctr = vec![0u16; 10];
+        // bits 0,1,2 set in first byte; bit 9 set in second byte.
+        let payload = [0b0000_0111u8, 0b0000_0010];
+        add_vote_bits(&mut ctr, &payload);
+        add_vote_bits(&mut ctr, &payload);
+        assert_eq!(ctr, vec![2, 2, 2, 0, 0, 0, 0, 0, 0, 2]);
+    }
+
+    #[test]
+    fn threshold_matches_paper_example() {
+        // §III-B: votes 11100 + 01110 = 12210, threshold 2 ⇒ GIA 01100.
+        let mut ctr = vec![0u16; 5];
+        add_vote_bits(&mut ctr, &[0b0000_0111]); // client 1: dims 0,1,2
+        add_vote_bits(&mut ctr, &[0b0000_1110]); // client 2: dims 1,2,3
+        assert_eq!(ctr, vec![1, 2, 2, 1, 0]);
+        let mut gia = [0u8; 1];
+        threshold_votes(&ctr, 2, &mut gia);
+        assert_eq!(gia[0], 0b0000_0110); // dims 1 and 2 selected
+    }
+
+    #[test]
+    fn threshold_clears_previous_bits() {
+        let ctr = vec![5u16, 0, 5];
+        let mut out = [0xFFu8];
+        threshold_votes(&ctr, 3, &mut out);
+        assert_eq!(out[0], 0b0000_0101);
+    }
+}

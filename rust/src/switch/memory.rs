@@ -1,0 +1,119 @@
+//! Switch register-memory model.
+//!
+//! The whole paper exists because "the memory space of a PS is very
+//! limited" (§III-B: ~1 MB allocatable to FL on a Tofino-class switch).
+//! Aggregation state must fit in this register file; when a round's
+//! working set exceeds it, the data plane must process the index space in
+//! waves, multiplying aggregation latency. This module does the strict
+//! byte accounting that drives that behaviour.
+
+/// Byte-accounted register file.
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    capacity: usize,
+    used: usize,
+    peak: usize,
+}
+
+/// Handle for an allocation (freed explicitly; Drop-free for determinism).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    pub bytes: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum MemError {
+    #[error("register file exhausted: requested {requested} B, free {free} B of {capacity} B")]
+    Exhausted { requested: usize, free: usize, capacity: usize },
+}
+
+impl RegisterFile {
+    pub fn new(capacity: usize) -> Self {
+        RegisterFile { capacity, used: 0, peak: 0 }
+    }
+
+    /// Reserve `bytes`; fails when the request does not fit.
+    pub fn alloc(&mut self, bytes: usize) -> Result<Allocation, MemError> {
+        let free = self.capacity - self.used;
+        if bytes > free {
+            return Err(MemError::Exhausted { requested: bytes, free, capacity: self.capacity });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(Allocation { bytes })
+    }
+
+    /// Release a previous allocation.
+    pub fn free(&mut self, alloc: Allocation) {
+        debug_assert!(alloc.bytes <= self.used, "double free");
+        self.used -= alloc.bytes.min(self.used);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// High-water mark across the lifetime of this register file.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+/// How many whole aggregation blocks of `block_bytes` fit in `capacity`.
+/// This is the switch's advertised in-flight window: clients may not have
+/// packets outstanding beyond it (flow control, SwitchML-style slots).
+pub fn window_blocks(capacity: usize, block_bytes: usize) -> usize {
+    if block_bytes == 0 {
+        return usize::MAX;
+    }
+    (capacity / block_bytes).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_accounting() {
+        let mut rf = RegisterFile::new(1000);
+        let a = rf.alloc(400).unwrap();
+        let b = rf.alloc(600).unwrap();
+        assert_eq!(rf.used(), 1000);
+        assert_eq!(rf.free_bytes(), 0);
+        assert_eq!(
+            rf.alloc(1),
+            Err(MemError::Exhausted { requested: 1, free: 0, capacity: 1000 })
+        );
+        rf.free(a);
+        assert_eq!(rf.free_bytes(), 400);
+        rf.free(b);
+        assert_eq!(rf.used(), 0);
+        assert_eq!(rf.peak(), 1000);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut rf = RegisterFile::new(100);
+        let a = rf.alloc(70).unwrap();
+        rf.free(a);
+        let _ = rf.alloc(30).unwrap();
+        assert_eq!(rf.peak(), 70);
+    }
+
+    #[test]
+    fn window_blocks_examples() {
+        // 1 MiB of registers, 1438-byte payload blocks of 32-bit ints:
+        // each block needs 1438 bytes of accumulators.
+        assert_eq!(window_blocks(1 << 20, 1438), (1 << 20) / 1438);
+        assert_eq!(window_blocks(100, 1000), 1); // always at least one
+        assert_eq!(window_blocks(100, 0), usize::MAX);
+    }
+}

@@ -1,0 +1,16 @@
+//! Programmable-switch (PS) simulator: register memory, integer ALU,
+//! scoreboard, and the two aggregation programs (vote counting + integer
+//! accumulation) all in-network FL algorithms in this repo run on.
+
+pub mod alu;
+pub mod memory;
+pub mod scoreboard;
+#[allow(clippy::module_inception)]
+pub mod switch;
+
+pub use memory::{window_blocks, MemError, RegisterFile};
+pub use scoreboard::{Mark, Scoreboard};
+pub use switch::{
+    advertised_window, waves_needed, ProgrammableSwitch, SwitchStats, UpdateAggregator,
+    VoteAggregator,
+};

@@ -1,0 +1,123 @@
+//! Per-block contribution scoreboard.
+//!
+//! SwitchML-style switches keep a scoreboard marking which workers have
+//! contributed to each aggregation slot so that (a) duplicates from
+//! retransmission are dropped and (b) a slot's registers can be freed and
+//! its aggregate broadcast the moment all N contributions are in (§II
+//! "In-Network FL": scoreboard mechanism + end-host retransmission).
+
+/// Tracks, per aggregation block, which clients have contributed.
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    n_clients: usize,
+    /// One u64 mask per block (supports up to 64 clients; the paper's
+    /// system scales N ∈ [20, 50]).
+    masks: Vec<u64>,
+    complete: Vec<bool>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mark {
+    /// First contribution from this client for this block.
+    Fresh,
+    /// Duplicate (retransmission) — must not be aggregated again.
+    Duplicate,
+    /// This contribution completed the block (all N clients seen).
+    Completed,
+}
+
+impl Scoreboard {
+    pub fn new(n_blocks: usize, n_clients: usize) -> Self {
+        assert!(n_clients <= 64, "scoreboard supports up to 64 clients");
+        assert!(n_clients > 0);
+        Scoreboard { n_clients, masks: vec![0; n_blocks], complete: vec![false; n_blocks] }
+    }
+
+    /// Record a contribution. Returns how the packet should be treated.
+    pub fn mark(&mut self, block: usize, client: usize) -> Mark {
+        debug_assert!(client < self.n_clients);
+        let bit = 1u64 << client;
+        if self.masks[block] & bit != 0 {
+            return Mark::Duplicate;
+        }
+        self.masks[block] |= bit;
+        if self.masks[block].count_ones() as usize == self.n_clients {
+            self.complete[block] = true;
+            Mark::Completed
+        } else {
+            Mark::Fresh
+        }
+    }
+
+    pub fn is_complete(&self, block: usize) -> bool {
+        self.complete[block]
+    }
+
+    /// Number of contributions received for a block.
+    pub fn contributions(&self, block: usize) -> usize {
+        self.masks[block].count_ones() as usize
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// All blocks complete?
+    pub fn all_complete(&self) -> bool {
+        self.complete.iter().all(|&c| c)
+    }
+
+    /// Reset for reuse in the next round/phase.
+    pub fn reset(&mut self, n_blocks: usize) {
+        self.masks.clear();
+        self.masks.resize(n_blocks, 0);
+        self.complete.clear();
+        self.complete.resize(n_blocks, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_then_complete() {
+        let mut sb = Scoreboard::new(2, 3);
+        assert_eq!(sb.mark(0, 0), Mark::Fresh);
+        assert_eq!(sb.mark(0, 1), Mark::Fresh);
+        assert_eq!(sb.mark(0, 2), Mark::Completed);
+        assert!(sb.is_complete(0));
+        assert!(!sb.is_complete(1));
+        assert!(!sb.all_complete());
+        sb.mark(1, 0);
+        sb.mark(1, 1);
+        sb.mark(1, 2);
+        assert!(sb.all_complete());
+    }
+
+    #[test]
+    fn duplicates_detected() {
+        let mut sb = Scoreboard::new(1, 4);
+        assert_eq!(sb.mark(0, 2), Mark::Fresh);
+        assert_eq!(sb.mark(0, 2), Mark::Duplicate);
+        assert_eq!(sb.contributions(0), 1);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut sb = Scoreboard::new(1, 2);
+        sb.mark(0, 0);
+        sb.mark(0, 1);
+        assert!(sb.all_complete());
+        sb.reset(3);
+        assert_eq!(sb.n_blocks(), 3);
+        assert!(!sb.is_complete(0));
+        assert_eq!(sb.contributions(0), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_clients_rejected() {
+        let _ = Scoreboard::new(1, 65);
+    }
+}

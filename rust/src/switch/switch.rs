@@ -1,0 +1,400 @@
+//! The programmable switch: per-packet service model + aggregation programs.
+//!
+//! Two data-plane programs cover every algorithm in the paper:
+//!
+//! * [`VoteAggregator`] — FediAC phase 1: add packed 0-1 vote arrays into
+//!   u16 counters, then threshold with `a` to produce the GIA (§IV step 2).
+//! * [`UpdateAggregator`] — FediAC phase 2 and the SwitchML/OmniReduce/libra
+//!   hot path: lane-wise i32 accumulation of aligned packet payloads.
+//!
+//! Timing follows §V-A2: each arriving packet costs one aggregation
+//! operation drawn from a zero-truncated Gaussian (mean 3.03e-7 s high /
+//! 3.03e-6 s low) served FIFO through an M/G/1 queue. Memory follows
+//! §III-B: registers for in-flight blocks must fit in the register file;
+//! when they cannot, the round is processed in waves (see `waves_needed`).
+
+use crate::configx::PsProfile;
+use crate::net::Mg1Queue;
+use crate::sim::SimTime;
+use crate::switch::alu;
+use crate::switch::memory::{window_blocks, Allocation, MemError, RegisterFile};
+use crate::switch::scoreboard::{Mark, Scoreboard};
+use crate::util::{BitVec, Rng};
+
+/// Cumulative switch counters surfaced to experiments.
+#[derive(Debug, Clone, Default)]
+pub struct SwitchStats {
+    pub packets_processed: u64,
+    /// One aggregation op per serviced packet — the paper's cost unit.
+    pub agg_ops: u64,
+    pub duplicates_dropped: u64,
+    pub overflow_lanes: u64,
+    pub waves: u64,
+    /// Peak register bytes actually resident (≤ capacity).
+    pub peak_mem_used: usize,
+    /// Largest register demand seen (may exceed capacity ⇒ waves).
+    pub peak_mem_demanded: usize,
+}
+
+/// The switch: service-time model + register file + counters.
+pub struct ProgrammableSwitch {
+    profile: PsProfile,
+    queue: Mg1Queue,
+    registers: RegisterFile,
+    rng: Rng,
+    stats: SwitchStats,
+}
+
+impl ProgrammableSwitch {
+    pub fn new(profile: PsProfile, seed: u64) -> Self {
+        let registers = RegisterFile::new(profile.memory_bytes);
+        ProgrammableSwitch {
+            profile,
+            queue: Mg1Queue::new(),
+            registers,
+            rng: Rng::new(seed ^ 0x5717c4),
+            stats: SwitchStats::default(),
+        }
+    }
+
+    pub fn profile(&self) -> &PsProfile {
+        &self.profile
+    }
+
+    /// Serve one packet arriving at `arrival`; returns its departure time
+    /// (aggregation applied). Charges exactly one aggregation op.
+    pub fn service_packet(&mut self, arrival: SimTime) -> SimTime {
+        let service = self
+            .rng
+            .gaussian_pos(self.profile.agg_mean_s, self.profile.agg_jitter_s);
+        self.stats.packets_processed += 1;
+        self.stats.agg_ops += 1;
+        self.queue.serve(arrival, service)
+    }
+
+    /// Account a dropped duplicate (serviced but not aggregated).
+    pub fn note_duplicate(&mut self) {
+        self.stats.duplicates_dropped += 1;
+    }
+
+    /// Charge an aggregation op served on a collaborating shard switch
+    /// (multi-PS mode): counts toward system-wide ops without touching
+    /// this switch's queue.
+    pub fn note_shadow_op(&mut self) {
+        self.stats.packets_processed += 1;
+        self.stats.agg_ops += 1;
+    }
+
+    pub fn note_overflow(&mut self, lanes: u64) {
+        self.stats.overflow_lanes += lanes;
+    }
+
+    pub fn note_waves(&mut self, waves: u64) {
+        self.stats.waves += waves;
+    }
+
+    /// Record a round's register working set: `used` is what fit in the
+    /// file (≤ capacity), `demanded` is what the phase would have wanted
+    /// without wave-serialisation.
+    pub fn note_memory_demand(&mut self, used: usize, demanded: usize) {
+        self.stats.peak_mem_used = self.stats.peak_mem_used.max(used.min(self.profile.memory_bytes));
+        self.stats.peak_mem_demanded = self.stats.peak_mem_demanded.max(demanded);
+    }
+
+    pub fn registers(&mut self) -> &mut RegisterFile {
+        &mut self.registers
+    }
+
+    pub fn peak_memory(&self) -> usize {
+        self.registers.peak()
+    }
+
+    pub fn stats(&self) -> &SwitchStats {
+        self.stats_ref()
+    }
+
+    fn stats_ref(&self) -> &SwitchStats {
+        &self.stats
+    }
+
+    pub fn mean_queue_wait(&self) -> f64 {
+        self.queue.mean_wait()
+    }
+
+    /// New round: the aggregation queue idles between rounds.
+    pub fn reset_queue(&mut self) {
+        self.queue.reset();
+    }
+}
+
+/// Phase-1 program: vote-counter accumulation + GIA thresholding.
+pub struct VoteAggregator {
+    d: usize,
+    n_clients: usize,
+    threshold_a: u16,
+    elems_per_block: usize,
+    counters: Vec<u16>,
+    scoreboard: Scoreboard,
+    alloc: Allocation,
+}
+
+impl VoteAggregator {
+    /// Allocate counters for all `d` dimensions from the register file.
+    /// 2 bytes per dimension — phase 1's entire memory footprint.
+    pub fn new(
+        rf: &mut RegisterFile,
+        d: usize,
+        n_clients: usize,
+        threshold_a: usize,
+        elems_per_block: usize,
+    ) -> Result<Self, MemError> {
+        let alloc = rf.alloc(d * 2)?;
+        let n_blocks = d.div_ceil(elems_per_block);
+        Ok(VoteAggregator {
+            d,
+            n_clients,
+            threshold_a: threshold_a as u16,
+            elems_per_block,
+            counters: vec![0u16; d],
+            scoreboard: Scoreboard::new(n_blocks, n_clients),
+            alloc,
+        })
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.scoreboard.n_blocks()
+    }
+
+    /// Ingest one client's vote packet for `block` (packed LE bits covering
+    /// dims [block·epb, min(d, (block+1)·epb))).
+    pub fn ingest(&mut self, client: usize, block: usize, payload_bits: &[u8]) -> Mark {
+        let mark = self.scoreboard.mark(block, client);
+        if mark == Mark::Duplicate {
+            return mark;
+        }
+        let lo = block * self.elems_per_block;
+        let hi = (lo + self.elems_per_block).min(self.d);
+        alu::add_vote_bits(&mut self.counters[lo..hi], payload_bits);
+        mark
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.scoreboard.all_complete()
+    }
+
+    /// Threshold the counters into the GIA (requires all blocks complete
+    /// unless `partial` semantics are wanted for failure tests).
+    pub fn gia(&self) -> BitVec {
+        let mut bytes = vec![0u8; self.d.div_ceil(8)];
+        alu::threshold_votes(&self.counters, self.threshold_a, &mut bytes);
+        BitVec::from_bytes(self.d, &bytes)
+    }
+
+    /// Raw vote histogram (used by experiments to study consensus).
+    pub fn counters(&self) -> &[u16] {
+        &self.counters
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Free register memory.
+    pub fn release(self, rf: &mut RegisterFile) {
+        rf.free(self.alloc);
+    }
+}
+
+/// Phase-2 / baseline program: aligned integer accumulation.
+pub struct UpdateAggregator {
+    n_elems: usize,
+    elems_per_block: usize,
+    acc: Vec<i32>,
+    scoreboard: Scoreboard,
+    alloc: Allocation,
+    overflow_lanes: u64,
+}
+
+impl UpdateAggregator {
+    /// Allocate `n_elems` i32 accumulators (4 bytes each).
+    pub fn new(
+        rf: &mut RegisterFile,
+        n_elems: usize,
+        n_clients: usize,
+        elems_per_block: usize,
+    ) -> Result<Self, MemError> {
+        let alloc = rf.alloc(n_elems * 4)?;
+        let n_blocks = n_elems.div_ceil(elems_per_block.max(1)).max(1);
+        Ok(UpdateAggregator {
+            n_elems,
+            elems_per_block,
+            acc: vec![0i32; n_elems],
+            scoreboard: Scoreboard::new(n_blocks, n_clients),
+            alloc,
+            overflow_lanes: 0,
+        })
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.scoreboard.n_blocks()
+    }
+
+    /// Ingest one client's update packet for `block`.
+    pub fn ingest(&mut self, client: usize, block: usize, payload: &[i32]) -> Mark {
+        let mark = self.scoreboard.mark(block, client);
+        if mark == Mark::Duplicate {
+            return mark;
+        }
+        let lo = block * self.elems_per_block;
+        let hi = (lo + payload.len()).min(self.n_elems);
+        self.overflow_lanes += alu::add_i32_sat(&mut self.acc[lo..hi], &payload[..hi - lo]);
+        mark
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.scoreboard.all_complete()
+    }
+
+    pub fn aggregate(&self) -> &[i32] {
+        &self.acc
+    }
+
+    pub fn overflow_lanes(&self) -> u64 {
+        self.overflow_lanes
+    }
+
+    pub fn release(self, rf: &mut RegisterFile) {
+        rf.free(self.alloc);
+    }
+}
+
+/// How many sequential waves a phase needs when its register demand
+/// exceeds the file: blocks are processed `window` at a time.
+pub fn waves_needed(total_blocks: usize, window: usize) -> usize {
+    if total_blocks == 0 {
+        return 0;
+    }
+    total_blocks.div_ceil(window.max(1))
+}
+
+/// Convenience: advertised window for a block of `block_bytes` registers.
+pub fn advertised_window(profile: &PsProfile, block_bytes: usize) -> usize {
+    window_blocks(profile.memory_bytes, block_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rf(cap: usize) -> RegisterFile {
+        RegisterFile::new(cap)
+    }
+
+    #[test]
+    fn vote_aggregator_motivation_example() {
+        // §III-B worked example: d=5, two clients, top-3 votes each,
+        // threshold a=2 ⇒ GIA = 01100.
+        let mut reg = rf(1024);
+        let mut agg = VoteAggregator::new(&mut reg, 5, 2, 2, 5).unwrap();
+        assert_eq!(agg.n_blocks(), 1);
+        let c1 = BitVec::from_indices(5, &[0, 1, 2]);
+        let c2 = BitVec::from_indices(5, &[1, 2, 3]);
+        assert_eq!(agg.ingest(0, 0, &c1.to_bytes()), Mark::Fresh);
+        assert_eq!(agg.ingest(1, 0, &c2.to_bytes()), Mark::Completed);
+        assert!(agg.all_complete());
+        let gia = agg.gia();
+        let selected: Vec<usize> = gia.iter_ones().collect();
+        assert_eq!(selected, vec![1, 2]);
+        agg.release(&mut reg);
+        assert_eq!(reg.used(), 0);
+    }
+
+    #[test]
+    fn vote_aggregator_multi_block() {
+        let d = 20;
+        let epb = 8; // 8 dims per packet ⇒ 3 blocks
+        let mut reg = rf(1024);
+        let mut agg = VoteAggregator::new(&mut reg, d, 2, 1, epb).unwrap();
+        assert_eq!(agg.n_blocks(), 3);
+        let votes = BitVec::from_indices(d, &[0, 7, 8, 15, 16, 19]);
+        let bytes = votes.to_bytes();
+        for client in 0..2 {
+            for block in 0..3 {
+                let lo = block * epb;
+                let hi = (lo + epb).min(d);
+                let chunk = BitVec::from_indices(
+                    hi - lo,
+                    &votes
+                        .iter_ones()
+                        .filter(|&i| i >= lo && i < hi)
+                        .map(|i| i - lo)
+                        .collect::<Vec<_>>(),
+                );
+                agg.ingest(client, block, &chunk.to_bytes());
+            }
+        }
+        let _ = bytes;
+        assert!(agg.all_complete());
+        let gia = agg.gia();
+        assert_eq!(gia.iter_ones().collect::<Vec<_>>(), vec![0, 7, 8, 15, 16, 19]);
+        agg.release(&mut reg);
+    }
+
+    #[test]
+    fn vote_memory_exhaustion() {
+        let mut reg = rf(10); // room for 5 counters only
+        assert!(VoteAggregator::new(&mut reg, 6, 2, 1, 8).is_err());
+        assert!(VoteAggregator::new(&mut reg, 5, 2, 1, 8).is_ok());
+    }
+
+    #[test]
+    fn update_aggregator_sums_aligned_blocks() {
+        let mut reg = rf(1024);
+        let mut agg = UpdateAggregator::new(&mut reg, 6, 2, 4).unwrap();
+        assert_eq!(agg.n_blocks(), 2);
+        agg.ingest(0, 0, &[1, 2, 3, 4]);
+        agg.ingest(0, 1, &[5, 6]);
+        agg.ingest(1, 0, &[10, 20, 30, 40]);
+        agg.ingest(1, 1, &[50, 60]);
+        assert!(agg.all_complete());
+        assert_eq!(agg.aggregate(), &[11, 22, 33, 44, 55, 66]);
+        agg.release(&mut reg);
+    }
+
+    #[test]
+    fn update_duplicate_not_double_counted() {
+        let mut reg = rf(64);
+        let mut agg = UpdateAggregator::new(&mut reg, 2, 2, 2).unwrap();
+        agg.ingest(0, 0, &[1, 1]);
+        assert_eq!(agg.ingest(0, 0, &[1, 1]), Mark::Duplicate);
+        agg.ingest(1, 0, &[1, 1]);
+        assert_eq!(agg.aggregate(), &[2, 2]);
+        agg.release(&mut reg);
+    }
+
+    #[test]
+    fn service_times_scale_with_profile() {
+        let mut hi = ProgrammableSwitch::new(PsProfile::high(), 1);
+        let mut lo = ProgrammableSwitch::new(PsProfile::low(), 1);
+        let n = 10_000;
+        let mut t_hi = 0.0;
+        let mut t_lo = 0.0;
+        for i in 0..n {
+            let arrival = i as f64 * 1e-9; // back-to-back ⇒ service-bound
+            t_hi = hi.service_packet(arrival);
+            t_lo = lo.service_packet(arrival);
+        }
+        // Low-performance switch is ~10× slower end-to-end.
+        let ratio = t_lo / t_hi;
+        assert!((5.0..20.0).contains(&ratio), "ratio {ratio}");
+        assert_eq!(hi.stats().agg_ops, n as u64);
+    }
+
+    #[test]
+    fn waves_math() {
+        assert_eq!(waves_needed(0, 10), 0);
+        assert_eq!(waves_needed(10, 10), 1);
+        assert_eq!(waves_needed(11, 10), 2);
+        assert_eq!(waves_needed(5, 0), 5); // degenerate window clamps to 1
+    }
+}

@@ -1,0 +1,118 @@
+//! Theorem 1: convergence-rate bound evaluator.
+//!
+//!   ‖∇F(x)‖² ≤ (F(w₁) − F* + δ)/(c·E·√T) + L²·E·G²·γ/(1−√γ)² / (2c√T)
+//!
+//! with c = 1/2 − 15E²η²L² and δ = (L+1)/2·E²G² + 5E²L²/2·(σ² + 6EΓ²).
+//! Experiments use this to sanity-check hyper-parameter choices (a larger
+//! γ inflates the bound; γ → 1 blows it up, matching Corollary 1's role).
+
+/// Problem/algorithm constants appearing in Theorem 1.
+#[derive(Debug, Clone, Copy)]
+pub struct TheoremParams {
+    /// Initial optimality gap F(w₁) − F*.
+    pub init_gap: f64,
+    /// Smoothness constant L (Assumption 1).
+    pub smooth_l: f64,
+    /// Gradient-norm bound G (Assumption 3).
+    pub grad_bound: f64,
+    /// Gradient-variance bound σ² (Assumption 2).
+    pub sigma_sq: f64,
+    /// non-IID degree Γ² (Definition 2).
+    pub gamma_noniid_sq: f64,
+    /// Local iterations E.
+    pub local_iters: usize,
+    /// Learning rate η (constant-step evaluation of the bound).
+    pub eta: f64,
+    /// Global iterations T.
+    pub rounds: usize,
+}
+
+/// Evaluate the Theorem-1 RHS for compression error `gamma_c` ∈ (0, 1).
+/// Returns None when the step-size condition c ≥ 0 or 0 < γ < 1 fails.
+pub fn theorem1_bound(p: &TheoremParams, gamma_c: f64) -> Option<f64> {
+    if !(0.0..1.0).contains(&gamma_c) || gamma_c == 0.0 {
+        // γ = 0 (lossless) is allowed as a limit; treat separately below.
+    }
+    if gamma_c < 0.0 || gamma_c >= 1.0 {
+        return None;
+    }
+    let e = p.local_iters as f64;
+    let c = 0.5 - 15.0 * e * e * p.eta * p.eta * p.smooth_l * p.smooth_l;
+    if c < 0.0 {
+        return None;
+    }
+    let c = c.max(1e-12);
+    let delta = (p.smooth_l + 1.0) / 2.0 * e * e * p.grad_bound * p.grad_bound
+        + 5.0 * e * e * p.smooth_l * p.smooth_l / 2.0
+            * (p.sigma_sq + 6.0 * e * p.gamma_noniid_sq);
+    let t_sqrt = (p.rounds as f64).sqrt();
+    let term1 = (p.init_gap + delta) / (c * e * t_sqrt);
+    let gamma_amp = if gamma_c == 0.0 {
+        0.0
+    } else {
+        gamma_c / (1.0 - gamma_c.sqrt()).powi(2)
+    };
+    let term2 = p.smooth_l * p.smooth_l * e * p.grad_bound * p.grad_bound * gamma_amp
+        / (2.0 * c * t_sqrt);
+    Some(term1 + term2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TheoremParams {
+        TheoremParams {
+            init_gap: 10.0,
+            smooth_l: 0.1,
+            grad_bound: 1.0,
+            sigma_sq: 0.5,
+            gamma_noniid_sq: 0.2,
+            local_iters: 5,
+            eta: 0.05,
+            rounds: 400,
+        }
+    }
+
+    #[test]
+    fn bound_decays_with_rounds() {
+        let p = params();
+        let b1 = theorem1_bound(&p, 0.3).unwrap();
+        let b2 = theorem1_bound(&TheoremParams { rounds: 1600, ..p }, 0.3).unwrap();
+        // √T scaling: 4× rounds ⇒ half the bound.
+        assert!((b2 - b1 / 2.0).abs() / b1 < 1e-9);
+    }
+
+    #[test]
+    fn bound_grows_with_compression_error() {
+        let p = params();
+        let lo = theorem1_bound(&p, 0.1).unwrap();
+        let hi = theorem1_bound(&p, 0.9).unwrap();
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn bound_explodes_near_gamma_one() {
+        let p = params();
+        let near = theorem1_bound(&p, 0.9999).unwrap();
+        let mid = theorem1_bound(&p, 0.5).unwrap();
+        assert!(near > 100.0 * mid);
+        assert!(theorem1_bound(&p, 1.0).is_none());
+        assert!(theorem1_bound(&p, -0.1).is_none());
+    }
+
+    #[test]
+    fn step_size_condition_enforced() {
+        let p = TheoremParams { eta: 10.0, ..params() }; // violates c ≥ 0
+        assert!(theorem1_bound(&p, 0.3).is_none());
+    }
+
+    #[test]
+    fn noniid_degree_inflates_bound() {
+        let p = params();
+        let iid = theorem1_bound(&TheoremParams { gamma_noniid_sq: 0.0, ..p }, 0.3).unwrap();
+        let noniid =
+            theorem1_bound(&TheoremParams { gamma_noniid_sq: 5.0, ..p }, 0.3).unwrap();
+        assert!(noniid > iid);
+    }
+}

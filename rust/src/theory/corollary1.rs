@@ -1,0 +1,115 @@
+//! Corollary 1: the quantisation-bit lower bound that guarantees 0 < γ < 1.
+//!
+//!   b > log₂( √(Σ r_l) / (2·φ·√(Σ r_l·l^{2α})) · N·m + N ) + 1   (Eq. 6)
+//!
+//! §IV-D: "For each given value of a, b is set according to (6) to
+//! minimize the load on the PS" — so FediAC runs with the *smallest*
+//! convergent b, which is what `min_bits` returns.
+
+use crate::theory::power_law::PowerLaw;
+use crate::theory::prop1::{binom_tail_geq, vote_prob, voted_prob};
+
+/// Exact RHS of Eq. (6) (not yet rounded to an integer bit count).
+pub fn bits_lower_bound(
+    d: usize,
+    n_clients: usize,
+    k: usize,
+    threshold_a: usize,
+    law: &PowerLaw,
+) -> f64 {
+    let p = vote_prob(d, law.alpha);
+    let q = voted_prob(&p, k);
+    let mut sum_r = 0.0;
+    let mut sum_r_l2a = 0.0;
+    for l in 1..=d {
+        let r = binom_tail_geq(n_clients, q[l - 1], threshold_a);
+        sum_r += r;
+        sum_r_l2a += r * (l as f64).powf(2.0 * law.alpha);
+    }
+    let m = law.phi; // rank-1 magnitude under Definition 1
+    let inner =
+        sum_r.sqrt() / (2.0 * law.phi * sum_r_l2a.sqrt()) * n_clients as f64 * m
+            + n_clients as f64;
+    inner.log2() + 1.0
+}
+
+/// Smallest integer b satisfying Corollary 1 (clamped to a sane range;
+/// the data plane cannot exceed 31-bit signed lanes).
+pub fn min_bits(
+    d: usize,
+    n_clients: usize,
+    k: usize,
+    threshold_a: usize,
+    law: &PowerLaw,
+) -> usize {
+    let bound = bits_lower_bound(d, n_clients, k, threshold_a, law);
+    let b = bound.floor() as i64 + 1; // strictly greater than the bound
+    b.clamp(2, 31) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::prop1::{evaluate, Prop1Params};
+
+    fn law() -> PowerLaw {
+        PowerLaw { phi: 0.1, alpha: -0.7 }
+    }
+
+    #[test]
+    fn min_bits_strictly_exceeds_bound() {
+        let d = 5000;
+        let bound = bits_lower_bound(d, 20, 250, 3, &law());
+        let b = min_bits(d, 20, 250, 3, &law());
+        assert!((b as f64) > bound, "b {b} ≤ bound {bound}");
+        assert!((b as f64) - bound <= 1.0 + 1e-9, "not minimal: {b} vs {bound}");
+    }
+
+    #[test]
+    fn chosen_bits_give_convergent_gamma() {
+        // The whole point of Corollary 1: plugging min_bits back into
+        // Proposition 1 must land γ strictly inside (0, 1).
+        for a in [1usize, 3, 6] {
+            let d = 4000;
+            let b = min_bits(d, 20, 200, a, &law());
+            let out = evaluate(&Prop1Params {
+                d,
+                n_clients: 20,
+                k: 200,
+                threshold_a: a,
+                law: law(),
+                bits_b: b,
+            });
+            assert!(
+                out.gamma > 0.0 && out.gamma < 1.0,
+                "a={a}, b={b}: γ = {}",
+                out.gamma
+            );
+        }
+    }
+
+    #[test]
+    fn one_fewer_bit_can_break_convergence_margin() {
+        // b−1 must violate the bound (that's what minimality means).
+        let d = 4000;
+        let bound = bits_lower_bound(d, 20, 200, 3, &law());
+        let b = min_bits(d, 20, 200, 3, &law());
+        assert!(((b - 1) as f64) <= bound);
+    }
+
+    #[test]
+    fn more_clients_need_more_bits() {
+        let d = 4000;
+        let b_small = bits_lower_bound(d, 10, 200, 3, &law());
+        let b_large = bits_lower_bound(d, 50, 200, 3, &law());
+        assert!(b_large > b_small);
+    }
+
+    #[test]
+    fn clamped_to_valid_range() {
+        // Extreme φ forces the clamp rather than a panic.
+        let crazy = PowerLaw { phi: 1e30, alpha: -0.01 };
+        let b = min_bits(100, 20, 5, 1, &crazy);
+        assert!((2..=31).contains(&b));
+    }
+}

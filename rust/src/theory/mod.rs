@@ -1,0 +1,12 @@
+//! Analytic machinery of §IV-B/C: power-law fit (Definition 1),
+//! Proposition 1 (γ, E[k_S]), Corollary 1 (bit lower bound) and the
+//! Theorem-1 convergence bound.
+
+pub mod convergence;
+pub mod corollary1;
+pub mod power_law;
+pub mod prop1;
+
+pub use corollary1::{bits_lower_bound, min_bits};
+pub use power_law::{fit_power_law, PowerLaw};
+pub use prop1::{evaluate as prop1_evaluate, Prop1Output, Prop1Params};

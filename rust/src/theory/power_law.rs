@@ -1,0 +1,100 @@
+//! Power-law magnitude model fit (Definition 1).
+//!
+//! The analysis assumes |U{l}| ≤ φ·l^α for the rank-l update (descending
+//! magnitude order, α < 0). §IV-D's implementation note: in the first
+//! global iteration a parameter server "can fit the power-law distribution
+//! in reported model updates to obtain α and φ", then derive a and b.
+//! This module is that fit: OLS on (log rank, log magnitude).
+
+use crate::util::stats::linear_fit;
+
+/// Fitted power-law parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerLaw {
+    /// Scale φ (magnitude of the rank-1 update).
+    pub phi: f64,
+    /// Decay exponent α < 0.
+    pub alpha: f64,
+}
+
+impl PowerLaw {
+    /// Predicted magnitude of the rank-l (1-based) update.
+    pub fn magnitude(&self, rank: usize) -> f64 {
+        self.phi * (rank as f64).powf(self.alpha)
+    }
+}
+
+/// Fit φ, α from one round of model updates.
+///
+/// Magnitudes are sorted descending; ranks are subsampled geometrically
+/// (every fit point costs a log) and zero magnitudes are skipped. Returns
+/// None when fewer than 2 usable points exist.
+pub fn fit_power_law(updates: &[f32]) -> Option<PowerLaw> {
+    let mut mags: Vec<f64> =
+        updates.iter().map(|u| u.abs() as f64).filter(|&m| m > 0.0).collect();
+    if mags.len() < 2 {
+        return None;
+    }
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // Geometric rank subsampling: ranks 1, ~1.25, ~1.5625, ...
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut rank = 1usize;
+    while rank <= mags.len() {
+        xs.push((rank as f64).ln());
+        ys.push(mags[rank - 1].ln());
+        rank = ((rank as f64 * 1.25).ceil() as usize).max(rank + 1);
+    }
+    if xs.len() < 2 {
+        return None;
+    }
+    let (intercept, slope) = linear_fit(&xs, &ys);
+    Some(PowerLaw { phi: intercept.exp(), alpha: slope })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn recovers_exact_power_law() {
+        let phi = 0.5;
+        let alpha = -0.8;
+        let updates: Vec<f32> = (1..=5000)
+            .map(|l| (phi * (l as f64).powf(alpha)) as f32)
+            .collect();
+        let fit = fit_power_law(&updates).unwrap();
+        assert!((fit.alpha - alpha).abs() < 0.02, "alpha {}", fit.alpha);
+        assert!((fit.phi - phi).abs() / phi < 0.05, "phi {}", fit.phi);
+    }
+
+    #[test]
+    fn recovers_under_shuffle_and_sign() {
+        let mut rng = Rng::new(1);
+        let mut updates: Vec<f32> = (1..=4000)
+            .map(|l| {
+                let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+                (sign * 0.2 * (l as f64).powf(-0.6)) as f32
+            })
+            .collect();
+        rng.shuffle(&mut updates);
+        let fit = fit_power_law(&updates).unwrap();
+        assert!((fit.alpha + 0.6).abs() < 0.03, "alpha {}", fit.alpha);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(fit_power_law(&[]).is_none());
+        assert!(fit_power_law(&[1.0]).is_none());
+        assert!(fit_power_law(&[0.0, 0.0, 0.0]).is_none());
+        assert!(fit_power_law(&[1.0, 0.5]).is_some());
+    }
+
+    #[test]
+    fn magnitude_prediction() {
+        let pl = PowerLaw { phi: 1.0, alpha: -1.0 };
+        assert!((pl.magnitude(1) - 1.0).abs() < 1e-12);
+        assert!((pl.magnitude(4) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,229 @@
+//! Proposition 1: the FediAC compression-error bound γ.
+//!
+//! Chain of quantities (§IV-B, Eqs. 2–5):
+//!   p_l — probability one vote lands on the rank-l update,
+//!   q_l — probability client votes rank-l at least once in k draws,
+//!   r_l — probability ≥ a of N clients vote rank-l (GIA inclusion),
+//!   E[k_S] = Σ r_l — expected uploaded dimensions,
+//!   γ — bound on E‖Π(Θ(fU)) − fU‖² / ‖fU‖².
+//!
+//! `examples/theory_explorer.rs` (E7) Monte-Carlo-validates these.
+
+use crate::theory::power_law::PowerLaw;
+
+/// Inputs to the Proposition-1 computation.
+#[derive(Debug, Clone, Copy)]
+pub struct Prop1Params {
+    pub d: usize,
+    pub n_clients: usize,
+    /// Votes per client (k in the paper).
+    pub k: usize,
+    /// Consensus threshold a.
+    pub threshold_a: usize,
+    /// Fitted power law (α, φ).
+    pub law: PowerLaw,
+    /// Quantisation bits b.
+    pub bits_b: usize,
+}
+
+/// Full analytic output of Proposition 1.
+#[derive(Debug, Clone)]
+pub struct Prop1Output {
+    /// GIA-inclusion probability per rank, r_l (Eq. 4).
+    pub r: Vec<f64>,
+    /// Expected uploaded dimensions E[k_S] = Σ r_l.
+    pub expected_uploads: f64,
+    /// Compression error bound γ (Eq. 5).
+    pub gamma: f64,
+    /// Amplification factor f = (2^{b−1} − N)/(N·m), m = φ.
+    pub f: f64,
+}
+
+/// Vote probability p_l = l^α / Σ l'^α (Eq. 2).
+pub fn vote_prob(d: usize, alpha: f64) -> Vec<f64> {
+    let weights: Vec<f64> = (1..=d).map(|l| (l as f64).powf(alpha)).collect();
+    let sum: f64 = weights.iter().sum();
+    weights.into_iter().map(|w| w / sum).collect()
+}
+
+/// q_l = 1 − (1 − p_l)^k (Eq. 3). Uses ln1p for small p numerical safety.
+pub fn voted_prob(p: &[f64], k: usize) -> Vec<f64> {
+    p.iter().map(|&pl| 1.0 - ((1.0 - pl).ln() * k as f64).exp()).collect()
+}
+
+/// Binomial upper tail P[X ≥ a], X ~ Bin(n, q), computed by a
+/// multiplicative pmf recurrence (n ≤ 64 in all experiments).
+pub fn binom_tail_geq(n: usize, q: f64, a: usize) -> f64 {
+    if a == 0 {
+        return 1.0;
+    }
+    if a > n {
+        return 0.0;
+    }
+    if q <= 0.0 {
+        return 0.0;
+    }
+    if q >= 1.0 {
+        return 1.0;
+    }
+    // pmf(0) = (1-q)^n; pmf(j+1) = pmf(j) · (n-j)/(j+1) · q/(1-q).
+    let ratio = q / (1.0 - q);
+    let mut pmf = (1.0 - q).powi(n as i32);
+    let mut cdf_below = 0.0; // P[X < a]
+    for j in 0..a {
+        cdf_below += pmf;
+        pmf *= (n - j) as f64 / (j + 1) as f64 * ratio;
+    }
+    (1.0 - cdf_below).clamp(0.0, 1.0)
+}
+
+/// Evaluate Proposition 1 end-to-end.
+pub fn evaluate(params: &Prop1Params) -> Prop1Output {
+    let Prop1Params { d, n_clients, k, threshold_a, law, bits_b } = *params;
+    let p = vote_prob(d, law.alpha);
+    let q = voted_prob(&p, k);
+    let r: Vec<f64> =
+        q.iter().map(|&ql| binom_tail_geq(n_clients, ql, threshold_a)).collect();
+    let expected_uploads: f64 = r.iter().sum();
+
+    // m = max update magnitude = φ·1^α = φ under Definition 1.
+    let m = law.phi;
+    let f = ((1u64 << (bits_b - 1)) as f64 - n_clients as f64) / (n_clients as f64 * m);
+
+    // γ = 1 − Σ r_l·l^{2α}/Σ l^{2α} + (1/4f²)·Σ r_l/(φ²·Σ l^{2α})  (Eq. 5).
+    let mut sum_l2a = 0.0;
+    let mut sum_r_l2a = 0.0;
+    for l in 1..=d {
+        let w = (l as f64).powf(2.0 * law.alpha);
+        sum_l2a += w;
+        sum_r_l2a += r[l - 1] * w;
+    }
+    let gamma = 1.0 - sum_r_l2a / sum_l2a
+        + expected_uploads / (4.0 * f * f * law.phi * law.phi * sum_l2a);
+
+    Prop1Output { r, expected_uploads, gamma, f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_law() -> PowerLaw {
+        PowerLaw { phi: 0.1, alpha: -0.7 }
+    }
+
+    #[test]
+    fn vote_prob_normalised_and_decreasing() {
+        let p = vote_prob(1000, -0.8);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        for w in p.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn voted_prob_monotone_in_k() {
+        let p = vote_prob(100, -0.5);
+        let q1 = voted_prob(&p, 5);
+        let q2 = voted_prob(&p, 20);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!(b >= a);
+        }
+    }
+
+    #[test]
+    fn binom_tail_exact_small_cases() {
+        // n=2, q=0.5: P[X≥1] = 0.75, P[X≥2] = 0.25.
+        assert!((binom_tail_geq(2, 0.5, 1) - 0.75).abs() < 1e-12);
+        assert!((binom_tail_geq(2, 0.5, 2) - 0.25).abs() < 1e-12);
+        assert_eq!(binom_tail_geq(2, 0.5, 0), 1.0);
+        assert_eq!(binom_tail_geq(2, 0.5, 3), 0.0);
+        assert_eq!(binom_tail_geq(10, 0.0, 1), 0.0);
+        assert_eq!(binom_tail_geq(10, 1.0, 10), 1.0);
+    }
+
+    #[test]
+    fn binom_tail_matches_monte_carlo() {
+        use crate::util::Rng;
+        let (n, q, a) = (20, 0.3, 7);
+        let analytic = binom_tail_geq(n, q, a);
+        let mut rng = Rng::new(17);
+        let trials = 100_000;
+        let mut hits = 0u64;
+        for _ in 0..trials {
+            let x = (0..n).filter(|_| rng.f64() < q).count();
+            if x >= a {
+                hits += 1;
+            }
+        }
+        let mc = hits as f64 / trials as f64;
+        assert!((mc - analytic).abs() < 0.01, "mc {mc} vs analytic {analytic}");
+    }
+
+    #[test]
+    fn gamma_monotone_in_threshold_a() {
+        // Larger a ⇒ fewer uploads ⇒ larger sparsification error term.
+        let mut prev = 0.0;
+        for a in [1usize, 4, 8, 16] {
+            let out = evaluate(&Prop1Params {
+                d: 5000,
+                n_clients: 20,
+                k: 250,
+                threshold_a: a,
+                law: default_law(),
+                bits_b: 12,
+            });
+            assert!(out.gamma >= prev - 1e-12, "a={a}: {} < {prev}", out.gamma);
+            prev = out.gamma;
+        }
+    }
+
+    #[test]
+    fn expected_uploads_shrink_with_a() {
+        let mk = |a| {
+            evaluate(&Prop1Params {
+                d: 5000,
+                n_clients: 20,
+                k: 250,
+                threshold_a: a,
+                law: default_law(),
+                bits_b: 12,
+            })
+            .expected_uploads
+        };
+        assert!(mk(1) > mk(3));
+        assert!(mk(3) > mk(10));
+    }
+
+    #[test]
+    fn gamma_in_unit_interval_for_paper_settings() {
+        // §V-A3 defaults: k = 5%·d, a = 3, N = 20, b = 12.
+        let d = 10_000;
+        let out = evaluate(&Prop1Params {
+            d,
+            n_clients: 20,
+            k: d / 20,
+            threshold_a: 3,
+            law: default_law(),
+            bits_b: 12,
+        });
+        assert!(out.gamma > 0.0 && out.gamma < 1.0, "γ = {}", out.gamma);
+        assert!(out.expected_uploads > 0.0 && out.expected_uploads < d as f64);
+    }
+
+    #[test]
+    fn more_bits_reduce_gamma() {
+        let mk = |b| {
+            evaluate(&Prop1Params {
+                d: 2000,
+                n_clients: 20,
+                k: 100,
+                threshold_a: 3,
+                law: default_law(),
+                bits_b: b,
+            })
+            .gamma
+        };
+        assert!(mk(16) < mk(8));
+    }
+}

@@ -1,0 +1,183 @@
+//! Packed 0-1 index arrays — the phase-1 vote payload (§IV step 1).
+//!
+//! FediAC's entire phase-1 advantage comes from representing each model
+//! dimension with a single bit, so this structure is on the hot path:
+//! clients build one per round, the PS adds them into vote counters, and
+//! the GIA returned to clients is again a `BitVec`.
+
+/// Fixed-length packed bit vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-zeros bit vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, words: vec![0u64; len.div_ceil(64)] }
+    }
+
+    /// Build from a list of set indices.
+    pub fn from_indices(len: usize, indices: &[usize]) -> Self {
+        let mut bv = BitVec::zeros(len);
+        for &i in indices {
+            bv.set(i, true);
+        }
+        bv
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, value: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i >> 6, i & 63);
+        if value {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over the indices of set bits in ascending order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, &w)| {
+            let mut word = w;
+            std::iter::from_fn(move || {
+                if word == 0 {
+                    return None;
+                }
+                let b = word.trailing_zeros() as usize;
+                word &= word - 1;
+                Some((wi << 6) | b)
+            })
+        })
+    }
+
+    /// Raw payload bytes of the array (what goes on the wire in phase 1:
+    /// one bit per model dimension, §IV-D "Overhead of Phase 1").
+    pub fn payload_bytes(&self) -> usize {
+        self.len.div_ceil(8)
+    }
+
+    /// Serialise to little-endian bytes (wire format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload_bytes());
+        for (wi, w) in self.words.iter().enumerate() {
+            let remaining = self.payload_bytes().saturating_sub(wi * 8);
+            let take = remaining.min(8);
+            out.extend_from_slice(&w.to_le_bytes()[..take]);
+        }
+        out
+    }
+
+    /// Parse from wire bytes.
+    pub fn from_bytes(len: usize, bytes: &[u8]) -> Self {
+        assert!(bytes.len() >= len.div_ceil(8), "short bitvec payload");
+        let mut words = vec![0u64; len.div_ceil(64)];
+        for (i, chunk) in bytes[..len.div_ceil(8)].chunks(8).enumerate() {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            words[i] = u64::from_le_bytes(buf);
+        }
+        let mut bv = BitVec { len, words };
+        bv.mask_tail();
+        bv
+    }
+
+    /// Bitwise OR in place (used by tests and the scoreboard).
+    pub fn or_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Clear any bits beyond `len` in the last word.
+    fn mask_tail(&mut self) {
+        let tail = self.len & 63;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// View as a 0.0/1.0 f32 mask (the GIA layout the compress artifact takes).
+    pub fn to_f32_mask(&self) -> Vec<f32> {
+        (0..self.len).map(|i| if self.get(i) { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut bv = BitVec::zeros(130);
+        assert_eq!(bv.count_ones(), 0);
+        bv.set(0, true);
+        bv.set(63, true);
+        bv.set(64, true);
+        bv.set(129, true);
+        assert!(bv.get(0) && bv.get(63) && bv.get(64) && bv.get(129));
+        assert!(!bv.get(1) && !bv.get(128));
+        assert_eq!(bv.count_ones(), 4);
+        bv.set(63, false);
+        assert_eq!(bv.count_ones(), 3);
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let idx = [3usize, 17, 64, 65, 100, 127];
+        let bv = BitVec::from_indices(128, &idx);
+        let got: Vec<usize> = bv.iter_ones().collect();
+        assert_eq!(got, idx);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        for len in [1usize, 7, 8, 9, 63, 64, 65, 1000] {
+            let idx: Vec<usize> = (0..len).filter(|i| i % 3 == 0).collect();
+            let bv = BitVec::from_indices(len, &idx);
+            let rt = BitVec::from_bytes(len, &bv.to_bytes());
+            assert_eq!(bv, rt, "len {len}");
+            assert_eq!(bv.payload_bytes(), len.div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn f32_mask_matches_bits() {
+        let bv = BitVec::from_indices(10, &[1, 4, 9]);
+        let mask = bv.to_f32_mask();
+        assert_eq!(mask, vec![0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn paper_overhead_example() {
+        // §IV-D: a 10-million-dimension model costs 1.25 MB in phase 1.
+        let bv = BitVec::zeros(10_000_000);
+        assert_eq!(bv.payload_bytes(), 1_250_000);
+    }
+}

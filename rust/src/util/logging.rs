@@ -1,0 +1,93 @@
+//! Tiny leveled logger (the `log` facade + a backend are overkill offline).
+//!
+//! Controlled by `FEDIAC_LOG` ∈ {trace, debug, info, warn, error, off};
+//! defaults to `info`. All output goes to stderr so experiment stdout stays
+//! machine-parsable (CSV/TSV rows).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+    Off = 5,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("FEDIAC_LOG").as_deref() {
+        Ok("trace") => Level::Trace,
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        Ok("off") => Level::Off,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// True when messages at `level` should be emitted.
+pub fn enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == u8::MAX {
+        cur = init_from_env();
+    }
+    level as u8 >= cur
+}
+
+/// Override the level programmatically (tests, quiet benches).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{:5}] {}: {}", format!("{level:?}").to_lowercase(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: PRNG + distributions, packed bit arrays, statistics,
+//! property-test harness and logging. All hand-rolled — the offline vendor
+//! set has no rand/proptest/log crates (see DESIGN.md §2 substitutions).
+
+pub mod bitvec;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use bitvec::BitVec;
+pub use rng::Rng;
+pub use stats::OnlineStats;

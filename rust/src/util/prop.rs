@@ -1,0 +1,99 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not in the offline vendor set, so this module provides the
+//! subset the test suite needs: run a property over many seeded-random
+//! cases and, on failure, report the exact seed so the case replays
+//! deterministically (`FEDIAC_PROP_SEED=<seed> cargo test`).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with FEDIAC_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("FEDIAC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `property` over `cases` independent random streams. The property
+/// returns `Err(message)` to fail; the panic message includes the replay
+/// seed of the failing case.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let forced: Option<u64> = std::env::var("FEDIAC_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    if let Some(seed) = forced {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xF3D1_AC00 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with FEDIAC_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generator: vector of f32 drawn from N(0, scale).
+pub fn gen_updates(rng: &mut Rng, d: usize, scale: f64) -> Vec<f32> {
+    (0..d).map(|_| (rng.gaussian() * scale) as f32).collect()
+}
+
+/// Generator: dimension sizes around interesting boundaries.
+pub fn gen_dim(rng: &mut Rng) -> usize {
+    const INTERESTING: [usize; 9] = [1, 2, 7, 63, 64, 65, 500, 1024, 4097];
+    INTERESTING[rng.below(INTERESTING.len())]
+}
+
+/// Assert helper producing the Err(String) shape `check` expects.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 16, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with FEDIAC_PROP_SEED=")]
+    fn check_reports_seed_on_failure() {
+        check("always_fails", 4, |_rng| Err("boom".to_string()));
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Rng::new(1);
+        let v = gen_updates(&mut rng, 100, 0.05);
+        assert_eq!(v.len(), 100);
+        for _ in 0..100 {
+            assert!(gen_dim(&mut rng) >= 1);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! End-to-end PJRT tests: the artifact bundle (L2 JAX model + L1 Pallas
+//! kernels) executed through the rust runtime, composed with the full
+//! FediAC protocol. Skipped (cleanly) when `make artifacts` has not run.
+
+use fediac::configx::{
+    AlgorithmKind, BackendKind, DatasetKind, ExperimentConfig, Partition,
+};
+use fediac::data::synth;
+use fediac::experiments::{run, RunOptions};
+use fediac::fl::ModelBackend;
+use fediac::runtime::{artifacts_available, Manifest, PjrtBackend};
+
+const DIR: &str = "artifacts";
+
+fn skip() -> bool {
+    if !artifacts_available(DIR) {
+        eprintln!("skipping PJRT e2e test: no artifacts/ bundle (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn tiny_backend(seed: u64) -> PjrtBackend {
+    let manifest = Manifest::load(DIR).unwrap();
+    let entry = manifest.model("tiny").unwrap();
+    let n = 4;
+    let data = synth::generate(DatasetKind::Tiny, Partition::Iid, n, 60, seed);
+    assert_eq!(entry.feature_len(), data.train.feature_len());
+    PjrtBackend::load(DIR, "tiny", data, seed).unwrap()
+}
+
+#[test]
+fn pjrt_init_is_deterministic_and_sized() {
+    if skip() {
+        return;
+    }
+    let mut b = tiny_backend(5);
+    let p1 = b.init_params();
+    let p2 = b.init_params();
+    assert_eq!(p1.len(), b.d());
+    assert_eq!(p1, p2);
+    assert!(p1.iter().any(|&x| x != 0.0));
+}
+
+#[test]
+fn pjrt_train_step_reduces_loss() {
+    if skip() {
+        return;
+    }
+    let mut b = tiny_backend(6);
+    let mut params = b.init_params();
+    let mut first = None;
+    let mut last = 0.0;
+    for round in 0..8 {
+        let out = b.local_train(&params, 0, round, 0.05);
+        params = out.new_params;
+        if first.is_none() {
+            first = Some(out.mean_loss);
+        }
+        last = out.mean_loss;
+    }
+    assert!(last < first.unwrap(), "PJRT training no signal: {first:?} → {last}");
+}
+
+#[test]
+fn pjrt_compress_matches_rust_semantics() {
+    if skip() {
+        return;
+    }
+    // The Pallas kernel must satisfy the same protocol invariants as the
+    // rust mirror: masked lanes zero, residual identity, determinism.
+    let mut b = tiny_backend(7);
+    let d = b.d();
+    let updates: Vec<f32> = (0..d).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+    let gia: Vec<f32> = (0..d).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let f = 512.0f32;
+    let (q1, e1) = b.compress(&updates, &gia, f, 99);
+    let (q2, e2) = b.compress(&updates, &gia, f, 99);
+    assert_eq!(q1, q2, "kernel must be deterministic per seed");
+    assert_eq!(e1, e2);
+    let (q3, _) = b.compress(&updates, &gia, f, 100);
+    assert_ne!(q1, q3, "different seeds must differ");
+    for l in 0..d {
+        if gia[l] == 0.0 {
+            assert_eq!(q1[l], 0, "masked lane {l} leaked");
+            assert!((e1[l] - updates[l]).abs() < 1e-6);
+        } else {
+            let lhs = q1[l] as f64 + f as f64 * e1[l] as f64;
+            let rhs = f as f64 * updates[l] as f64;
+            assert!((lhs - rhs).abs() < 1e-2, "lane {l}: {lhs} vs {rhs}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_vote_scores_prefer_magnitude() {
+    if skip() {
+        return;
+    }
+    let mut b = tiny_backend(8);
+    let d = b.d();
+    let mut updates = vec![1e-4f32; d];
+    for u in updates.iter_mut().take(20) {
+        *u = 5.0;
+    }
+    let mut hits = vec![0usize; d];
+    for seed in 0..30 {
+        let scores = b.vote_scores(&updates, seed);
+        let top = fediac::compress::top_k_indices(&scores, 40);
+        for i in top {
+            hits[i] += 1;
+        }
+    }
+    let dominant: usize = hits[..20].iter().sum();
+    assert!(dominant >= 20 * 28, "dominant dims voted only {dominant}/600");
+}
+
+#[test]
+fn pjrt_full_fediac_run() {
+    if skip() {
+        return;
+    }
+    // The E10 composition at test scale: FediAC + PJRT + switch + queues.
+    let mut cfg = ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid);
+    cfg.algorithm = AlgorithmKind::FediAc;
+    cfg.backend = BackendKind::Pjrt;
+    cfg.num_clients = 4;
+    cfg.rounds = 6;
+    cfg.samples_per_client = 60;
+    cfg.fediac.threshold_a = 2;
+    let rec = run(&cfg, &RunOptions { eval_every: 1, ..Default::default() }).unwrap();
+    assert_eq!(rec.records.len(), 6);
+    let first = rec.records.first().unwrap().test_accuracy.unwrap();
+    let best = rec.best_accuracy().unwrap();
+    assert!(best > first, "PJRT e2e no learning: {first:.3} → {best:.3}");
+    assert!(rec.total_traffic().total() > 0);
+}

@@ -1,0 +1,119 @@
+//! Failure-injection tests: packet loss, retransmission, duplicates and
+//! register-memory pressure — the switch-side robustness mechanisms (§II
+//! scoreboard + end-host retransmission; §III-B memory waves).
+
+use fediac::configx::{AlgorithmKind, DatasetKind, ExperimentConfig, Partition};
+use fediac::experiments::{run, RunOptions};
+use fediac::switch::{Mark, RegisterFile, UpdateAggregator, VoteAggregator};
+use fediac::util::BitVec;
+
+fn cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid);
+    cfg.algorithm = AlgorithmKind::FediAc;
+    cfg.num_clients = 5;
+    cfg.rounds = 8;
+    cfg.samples_per_client = 40;
+    cfg.fediac.threshold_a = 2;
+    cfg
+}
+
+#[test]
+fn loss_increases_time_and_traffic_not_accuracy() {
+    let clean = run(&cfg(), &RunOptions::default()).unwrap();
+    let mut lossy_cfg = cfg();
+    lossy_cfg.loss_rate = 0.15;
+    let lossy = run(&lossy_cfg, &RunOptions::default()).unwrap();
+
+    // Retransmission is transparent to the learning process: the model
+    // trajectory is a function of the (identical) aggregation content.
+    for (a, b) in clean.records.iter().zip(&lossy.records) {
+        assert_eq!(a.test_accuracy, b.test_accuracy, "loss changed the model");
+    }
+    assert!(
+        lossy.final_time() > clean.final_time(),
+        "15% loss must slow the run: {:.3} !> {:.3}",
+        lossy.final_time(),
+        clean.final_time()
+    );
+    assert!(
+        lossy.total_traffic().up_bytes > clean.total_traffic().up_bytes,
+        "retransmitted frames must be charged"
+    );
+}
+
+#[test]
+fn heavy_loss_still_converges() {
+    let mut heavy = cfg();
+    heavy.loss_rate = 0.4;
+    heavy.rounds = 10;
+    let rec = run(&heavy, &RunOptions::default()).unwrap();
+    assert!(rec.best_accuracy().unwrap() > 0.5, "40% loss broke convergence");
+}
+
+#[test]
+fn duplicate_votes_do_not_inflate_gia() {
+    // Retransmitted phase-1 packets reach the switch twice; the
+    // scoreboard must drop the second copy or vote counts corrupt.
+    let d = 64;
+    let mut rf = RegisterFile::new(d * 2);
+    let mut agg = VoteAggregator::new(&mut rf, d, 2, 1, d).unwrap();
+    let votes = BitVec::from_indices(d, &[1, 2, 3]);
+    assert_eq!(agg.ingest(0, 0, &votes.to_bytes()), Mark::Fresh);
+    assert_eq!(agg.ingest(0, 0, &votes.to_bytes()), Mark::Duplicate);
+    assert_eq!(agg.ingest(1, 0, &BitVec::zeros(d).to_bytes()), Mark::Completed);
+    // Threshold 1: selected = client-0 votes exactly once each.
+    let gia = agg.gia();
+    assert_eq!(gia.iter_ones().collect::<Vec<_>>(), vec![1, 2, 3]);
+    assert_eq!(agg.counters()[1], 1, "duplicate was double counted");
+    agg.release(&mut rf);
+}
+
+#[test]
+fn duplicate_updates_do_not_double_aggregate() {
+    let mut rf = RegisterFile::new(64);
+    let mut agg = UpdateAggregator::new(&mut rf, 4, 2, 4).unwrap();
+    agg.ingest(0, 0, &[5, 5, 5, 5]);
+    assert_eq!(agg.ingest(0, 0, &[5, 5, 5, 5]), Mark::Duplicate);
+    agg.ingest(1, 0, &[1, 1, 1, 1]);
+    assert_eq!(agg.aggregate(), &[6, 6, 6, 6]);
+    agg.release(&mut rf);
+}
+
+#[test]
+fn tiny_switch_memory_forces_waves_but_same_result() {
+    // Starving the register file must slow the round (waves) without
+    // changing the aggregation content (accuracy trajectory identical).
+    // Needs a model spanning multiple aggregation blocks (d ≈ 50k).
+    let big = || {
+        let mut c = cfg();
+        c.dataset = DatasetKind::SynthCifar10;
+        c.rounds = 4;
+        c
+    };
+    let normal = run(&big(), &RunOptions::default()).unwrap();
+    let mut starved_cfg = big();
+    starved_cfg.ps.memory_bytes = 4 * 1024; // 4 KB of registers
+    let starved = run(&starved_cfg, &RunOptions::default()).unwrap();
+    for (a, b) in normal.records.iter().zip(&starved.records) {
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+    }
+    assert!(
+        starved.final_time() > normal.final_time(),
+        "memory starvation must cost time: {:.3} !> {:.3}",
+        starved.final_time(),
+        normal.final_time()
+    );
+}
+
+#[test]
+fn multi_ps_same_model_faster_rounds() {
+    // §VI extension: sharding across 4 switches must not change content.
+    let single = run(&cfg(), &RunOptions::default()).unwrap();
+    let mut multi_cfg = cfg();
+    multi_cfg.num_switches = 4;
+    let multi = run(&multi_cfg, &RunOptions::default()).unwrap();
+    for (a, b) in single.records.iter().zip(&multi.records) {
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+    }
+    assert!(multi.final_time() <= single.final_time() * 1.05);
+}

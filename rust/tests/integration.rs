@@ -1,0 +1,166 @@
+//! Cross-module integration tests: the full native-backend stack from
+//! config to recorded runs, exercising every algorithm and the paper's
+//! qualitative claims at miniature scale.
+
+use fediac::configx::{
+    AlgorithmKind, DatasetKind, ExperimentConfig, Partition, PsProfile,
+};
+use fediac::experiments::{run, RunOptions, Scale};
+
+fn cfg(alg: AlgorithmKind, dataset: DatasetKind, partition: Partition) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(dataset, partition);
+    cfg.algorithm = alg;
+    cfg.num_clients = 6;
+    cfg.rounds = 10;
+    cfg.samples_per_client = 60;
+    cfg.fediac.threshold_a = 2;
+    cfg
+}
+
+#[test]
+fn fediac_learns_on_every_dataset() {
+    for dataset in [
+        DatasetKind::Tiny,
+        DatasetKind::SynthCifar10,
+        DatasetKind::SynthFemnist,
+    ] {
+        let partition = if dataset == DatasetKind::SynthFemnist {
+            Partition::Natural
+        } else {
+            Partition::Iid
+        };
+        let rec = run(&cfg(AlgorithmKind::FediAc, dataset, partition), &RunOptions::default())
+            .unwrap();
+        let first = rec.records.first().unwrap().test_accuracy.unwrap();
+        let best = rec.best_accuracy().unwrap();
+        // Either clear improvement, or the task was already at ceiling
+        // after the bootstrap round (easy synthetic split).
+        assert!(
+            best > first + 0.05 || best > 0.9,
+            "{dataset:?}: no learning ({first:.3} → {best:.3})"
+        );
+    }
+}
+
+#[test]
+fn fediac_beats_baselines_on_traffic_at_equal_rounds() {
+    // The core claim behind Tables I/II: per round, FediAC moves far less
+    // data than SwitchML (dense) and OmniReduce (block-amplified Topk).
+    let mut totals = std::collections::BTreeMap::new();
+    for alg in [
+        AlgorithmKind::FediAc,
+        AlgorithmKind::SwitchMl,
+        AlgorithmKind::OmniReduce,
+    ] {
+        let rec = run(
+            &cfg(alg, DatasetKind::SynthCifar10, Partition::Iid),
+            &RunOptions::default(),
+        )
+        .unwrap();
+        totals.insert(alg.name(), rec.total_traffic().total());
+    }
+    let fediac = totals["fediac"];
+    assert!(
+        fediac < totals["switchml"],
+        "fediac {fediac} !< switchml {}",
+        totals["switchml"]
+    );
+    assert!(
+        fediac < totals["omnireduce"],
+        "fediac {fediac} !< omnireduce {}",
+        totals["omnireduce"]
+    );
+}
+
+#[test]
+fn low_ps_rounds_take_longer_than_high_ps() {
+    let mut base = cfg(AlgorithmKind::SwitchMl, DatasetKind::SynthCifar10, Partition::Iid);
+    base.rounds = 3;
+    let t_high = run(&base, &RunOptions::default()).unwrap().final_time();
+    base.ps = PsProfile::low();
+    let t_low = run(&base, &RunOptions::default()).unwrap().final_time();
+    assert!(
+        t_low > t_high,
+        "low-perf PS should be slower: {t_low:.3} !> {t_high:.3}"
+    );
+}
+
+#[test]
+fn noniid_does_not_beat_iid() {
+    let iid = run(
+        &cfg(AlgorithmKind::FediAc, DatasetKind::SynthCifar10, Partition::Iid),
+        &RunOptions::default(),
+    )
+    .unwrap()
+    .best_accuracy()
+    .unwrap();
+    let mut noniid_cfg = cfg(
+        AlgorithmKind::FediAc,
+        DatasetKind::SynthCifar10,
+        Partition::Dirichlet(0.1),
+    );
+    noniid_cfg.fediac.threshold_a = 3;
+    let noniid = run(&noniid_cfg, &RunOptions::default()).unwrap().best_accuracy().unwrap();
+    assert!(
+        iid >= noniid - 0.02,
+        "strong skew should not beat IID: iid {iid:.3} vs β=0.1 {noniid:.3}"
+    );
+}
+
+#[test]
+fn switch_stats_accumulate_only_for_in_network_algorithms() {
+    let rec_fediac = run(
+        &cfg(AlgorithmKind::FediAc, DatasetKind::Tiny, Partition::Iid),
+        &RunOptions::default(),
+    )
+    .unwrap();
+    let ops: u64 = rec_fediac.records.iter().map(|r| r.agg_ops).sum();
+    assert!(ops > 0);
+    let rec_avg = run(
+        &cfg(AlgorithmKind::FedAvg, DatasetKind::Tiny, Partition::Iid),
+        &RunOptions::default(),
+    )
+    .unwrap();
+    let ops: u64 = rec_avg.records.iter().map(|r| r.agg_ops).sum();
+    assert_eq!(ops, 0);
+}
+
+#[test]
+fn scale_apply_keeps_threshold_proportional() {
+    let mut cfg = ExperimentConfig::preset(DatasetKind::SynthCifar10, Partition::Iid);
+    assert_eq!(cfg.fediac.threshold_a, 3); // 15% of 20
+    let scale = Scale { num_clients: 40, ..Scale::quick() };
+    scale.apply(&mut cfg);
+    assert_eq!(cfg.fediac.threshold_a, 6); // 15% of 40
+    cfg.validate().unwrap();
+}
+
+#[test]
+fn csv_outputs_parse_back() {
+    let rec = run(
+        &cfg(AlgorithmKind::FediAc, DatasetKind::Tiny, Partition::Iid),
+        &RunOptions::default(),
+    )
+    .unwrap();
+    let csv = rec.to_csv();
+    let lines: Vec<&str> = csv.trim().lines().collect();
+    assert_eq!(lines.len(), rec.records.len() + 1);
+    for line in &lines[1..] {
+        assert_eq!(line.split(',').count(), 10, "bad row: {line}");
+    }
+}
+
+#[test]
+fn rle_mode_changes_no_accuracy_only_traffic() {
+    let mut a = cfg(AlgorithmKind::FediAc, DatasetKind::Tiny, Partition::Iid);
+    a.fediac.k_frac = 0.01;
+    let plain = run(&a, &RunOptions::default()).unwrap();
+    a.fediac.rle_phase1 = true;
+    let rle = run(&a, &RunOptions::default()).unwrap();
+    // Same votes/GIA → identical accuracy trajectory; RLE only shrinks
+    // the phase-1 wire bytes.
+    for (x, y) in plain.records.iter().zip(&rle.records) {
+        assert_eq!(x.test_accuracy, y.test_accuracy);
+    }
+    assert!(rle.total_traffic().vote_up_bytes <= plain.total_traffic().vote_up_bytes);
+}

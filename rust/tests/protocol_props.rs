@@ -1,0 +1,172 @@
+//! Property tests over the FediAC protocol invariants (hand-rolled
+//! harness in `fediac::util::prop`; replay failures with
+//! FEDIAC_PROP_SEED=<seed>).
+
+use fediac::compress::{
+    deduce_gia, dequantize_aggregate, max_abs, quantize_sparsify, scale_factor,
+    vote_bitmap,
+};
+use fediac::prop_assert;
+use fediac::switch::{RegisterFile, VoteAggregator};
+use fediac::util::{prop, BitVec, Rng};
+
+/// The switch's data-plane GIA must equal the host-side reference for any
+/// vote pattern, block size and threshold.
+#[test]
+fn switch_gia_equals_host_gia() {
+    prop::check("switch_gia_host_gia", prop::default_cases(), |rng| {
+        let d = 1 + rng.below(600);
+        let n = 2 + rng.below(14);
+        let a = 1 + rng.below(n);
+        let votes: Vec<BitVec> = (0..n)
+            .map(|_| {
+                let k = rng.below(d + 1);
+                let mut idx: Vec<usize> = (0..d).collect();
+                rng.shuffle(&mut idx);
+                BitVec::from_indices(d, &idx[..k])
+            })
+            .collect();
+        let host = deduce_gia(&votes, a);
+
+        let epb = 8 * (1 + rng.below(32)); // byte-aligned block sizes
+        let mut rf = RegisterFile::new(d * 2);
+        let mut agg = VoteAggregator::new(&mut rf, d, n, a, epb).unwrap();
+        let n_blocks = d.div_ceil(epb);
+        for (client, v) in votes.iter().enumerate() {
+            let bytes = v.to_bytes();
+            for block in 0..n_blocks {
+                let lo = block * (epb / 8);
+                let hi = ((block + 1) * (epb / 8)).min(bytes.len());
+                agg.ingest(client, block, &bytes[lo..hi]);
+            }
+        }
+        prop_assert!(agg.all_complete(), "incomplete scoreboard d={d} n={n}");
+        let switch_gia = agg.gia();
+        agg.release(&mut rf);
+        prop_assert!(switch_gia == host, "GIA mismatch d={d} n={n} a={a} epb={epb}");
+        Ok(())
+    });
+}
+
+/// Conservation: for every client, f·U = q + f·e on GIA lanes and e = U
+/// off-GIA — nothing is lost or double-counted by the protocol.
+#[test]
+fn round_conservation_invariant() {
+    prop::check("round_conservation", prop::default_cases(), |rng| {
+        let d = 16 + rng.below(512);
+        let n = 2 + rng.below(10);
+        let k = 1 + rng.below(d);
+        let a = 1 + rng.below(n);
+        let updates: Vec<Vec<f32>> =
+            (0..n).map(|_| prop::gen_updates(rng, d, 0.05)).collect();
+        let votes: Vec<BitVec> =
+            updates.iter().map(|u| vote_bitmap(u, k, rng)).collect();
+        let gia = deduce_gia(&votes, a);
+        let mask = gia.to_f32_mask();
+        let m = updates.iter().map(|u| max_abs(u)).fold(1e-9f32, f32::max);
+        let f = scale_factor(12, n, m);
+        for (i, u) in updates.iter().enumerate() {
+            let (q, e) = quantize_sparsify(u, &mask, f, rng);
+            for l in 0..d {
+                if gia.get(l) {
+                    let lhs = q[l] as f64 + f as f64 * e[l] as f64;
+                    let rhs = f as f64 * u[l] as f64;
+                    prop_assert!(
+                        (lhs - rhs).abs() <= 1e-2 * rhs.abs().max(1.0),
+                        "client {i} lane {l}: {lhs} vs {rhs}"
+                    );
+                } else {
+                    prop_assert!(q[l] == 0, "client {i} lane {l} leaked");
+                    prop_assert!(
+                        (e[l] - u[l]).abs() < 1e-6,
+                        "client {i} lane {l} residual"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Aggregate unbiasedness: E[Σq/(N·f)] = mean(U) on GIA lanes — averaged
+/// over many seeds, the dequantised aggregate approaches the true mean.
+#[test]
+fn aggregate_unbiased_monte_carlo() {
+    let d = 64;
+    let n = 5;
+    let mut rng = Rng::new(99);
+    let updates: Vec<Vec<f32>> = (0..n).map(|_| prop::gen_updates(&mut rng, d, 0.1)).collect();
+    let gia = BitVec::from_indices(d, &(0..d).collect::<Vec<_>>()); // all lanes
+    let mask = gia.to_f32_mask();
+    let m = updates.iter().map(|u| max_abs(u)).fold(1e-9f32, f32::max);
+    let f = scale_factor(10, n, m);
+    let trials = 600;
+    let mut mean_est = vec![0f64; d];
+    for _ in 0..trials {
+        let mut agg = vec![0i64; d];
+        for u in &updates {
+            let (q, _) = quantize_sparsify(u, &mask, f, &mut rng);
+            for l in 0..d {
+                agg[l] += q[l] as i64;
+            }
+        }
+        let agg32: Vec<i32> = agg.iter().map(|&v| v as i32).collect();
+        let deq = dequantize_aggregate(&agg32, n, f);
+        for l in 0..d {
+            mean_est[l] += deq[l] as f64;
+        }
+    }
+    for l in 0..d {
+        mean_est[l] /= trials as f64;
+        let truth: f64 =
+            updates.iter().map(|u| u[l] as f64).sum::<f64>() / n as f64;
+        // CI: per-trial std ≤ sqrt(n)·0.5/(n·f).
+        let tol = 4.0 * (n as f64).sqrt() * 0.5 / (n as f64 * f as f64)
+            / (trials as f64).sqrt()
+            + 1e-6;
+        assert!(
+            (mean_est[l] - truth).abs() < tol.max(1e-4),
+            "lane {l}: est {} vs truth {truth}",
+            mean_est[l]
+        );
+    }
+}
+
+/// GIA size shrinks monotonically in the threshold for *voted* bitmaps
+/// (not just arbitrary ones — ties to the real voting distribution).
+#[test]
+fn gia_size_monotone_in_a_for_real_votes() {
+    prop::check("gia_monotone_real_votes", 24, |rng| {
+        let d = 256;
+        let n = 8;
+        let k = 32;
+        let updates: Vec<Vec<f32>> =
+            (0..n).map(|_| prop::gen_updates(rng, d, 0.05)).collect();
+        let votes: Vec<BitVec> = updates.iter().map(|u| vote_bitmap(u, k, rng)).collect();
+        let mut prev = usize::MAX;
+        for a in 1..=n {
+            let size = deduce_gia(&votes, a).count_ones();
+            prop_assert!(size <= prev, "a={a}: {size} > {prev}");
+            prev = size;
+        }
+        Ok(())
+    });
+}
+
+/// Larger quantisation budgets reduce empirical compression error.
+#[test]
+fn gamma_hat_decreases_with_bits() {
+    let d = 4096;
+    let mut rng = Rng::new(5);
+    let updates = prop::gen_updates(&mut rng, d, 0.05);
+    let mask = vec![1.0f32; d];
+    let m = max_abs(&updates);
+    let gamma_at = |bits: usize, rng: &mut Rng| {
+        let f = scale_factor(bits, 20, m);
+        let (q, _) = quantize_sparsify(&updates, &mask, f, rng);
+        fediac::compress::error::relative_error(&q, &updates, f)
+    };
+    let g8 = gamma_at(8, &mut rng);
+    let g16 = gamma_at(16, &mut rng);
+    assert!(g16 < g8, "γ̂(16b) {g16} !< γ̂(8b) {g8}");
+}

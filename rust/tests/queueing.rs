@@ -1,0 +1,101 @@
+//! Queueing-theory validation of the network/switch timing model
+//! (§V-A2): the simulated M/G/1 behaviour must match analytic results.
+
+use fediac::configx::PsProfile;
+use fediac::net::{pollaczek_khinchine, Mg1Queue, PoissonProcess};
+use fediac::switch::ProgrammableSwitch;
+use fediac::util::Rng;
+
+/// M/G/1 with Gaussian (truncated) service: sample-path mean wait vs
+/// Pollaczek–Khinchine within 10%.
+#[test]
+fn gaussian_service_matches_pk() {
+    let lambda = 60_000.0; // pkts/s
+    let mean_s = 1.0e-5;
+    let jitter = 2.0e-6;
+    let mut rng = Rng::new(42);
+    let mut q = Mg1Queue::new();
+    let mut proc = PoissonProcess::new(lambda, 0.0);
+    let n = 300_000;
+    for _ in 0..n {
+        let t = proc.next(&mut rng);
+        let s = rng.gaussian_pos(mean_s, jitter);
+        q.serve(t, s);
+    }
+    let analytic = pollaczek_khinchine(lambda, mean_s, jitter * jitter).unwrap();
+    let sim = q.mean_wait();
+    assert!(
+        (sim - analytic).abs() / analytic < 0.10,
+        "sim {sim:.3e} vs PK {analytic:.3e}"
+    );
+}
+
+/// The switch's service loop is exactly that M/G/1: empirical mean wait
+/// under heavy load matches PK for the high-perf profile.
+#[test]
+fn switch_queue_matches_pk() {
+    let profile = PsProfile::high();
+    let lambda = 0.8 / profile.agg_mean_s; // ρ = 0.8
+    let mut sw = ProgrammableSwitch::new(profile.clone(), 3);
+    let mut rng = Rng::new(4);
+    let mut proc = PoissonProcess::new(lambda, 0.0);
+    for _ in 0..400_000 {
+        let t = proc.next(&mut rng);
+        sw.service_packet(t);
+    }
+    let analytic = pollaczek_khinchine(
+        lambda,
+        profile.agg_mean_s,
+        profile.agg_jitter_s * profile.agg_jitter_s,
+    )
+    .unwrap();
+    let sim = sw.mean_queue_wait();
+    assert!(
+        (sim - analytic).abs() / analytic < 0.10,
+        "sim {sim:.3e} vs PK {analytic:.3e}"
+    );
+}
+
+/// Utilisation sanity: below saturation the queue drains (departure rate
+/// equals arrival rate); above saturation it falls behind.
+#[test]
+fn saturation_behaviour() {
+    let mean_s = 1e-4;
+    for (rho, should_keep_up) in [(0.5, true), (2.0, false)] {
+        let lambda = rho / mean_s;
+        let mut rng = Rng::new(7);
+        let mut q = Mg1Queue::new();
+        let mut proc = PoissonProcess::new(lambda, 0.0);
+        let n = 50_000;
+        let mut last_arrival = 0.0;
+        for _ in 0..n {
+            last_arrival = proc.next(&mut rng);
+            q.serve(last_arrival, rng.gaussian_pos(mean_s, mean_s * 0.01));
+        }
+        let lag = q.next_free() - last_arrival;
+        if should_keep_up {
+            assert!(lag < 0.05 * last_arrival, "ρ={rho}: lag {lag}");
+        } else {
+            // Falls behind by ~(ρ−1)/ρ of the horizon.
+            assert!(lag > 0.2 * last_arrival, "ρ={rho}: lag {lag}");
+        }
+    }
+}
+
+/// Per-aggregation cost ratio between the two PS profiles is the paper's
+/// 10× (3.03e-6 / 3.03e-7) under service-bound load.
+#[test]
+fn profile_cost_ratio_is_ten_x() {
+    let serve_all = |profile: PsProfile| {
+        let mut sw = ProgrammableSwitch::new(profile, 11);
+        let mut t_done = 0.0;
+        for i in 0..100_000 {
+            t_done = sw.service_packet(i as f64 * 1e-9);
+        }
+        t_done
+    };
+    let high = serve_all(PsProfile::high());
+    let low = serve_all(PsProfile::low());
+    let ratio = low / high;
+    assert!((8.0..12.0).contains(&ratio), "ratio {ratio}");
+}

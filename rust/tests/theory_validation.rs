@@ -1,0 +1,161 @@
+//! Monte-Carlo validation of §IV-B: the analytic Proposition-1 pipeline
+//! (p_l → q_l → r_l → E[k_S], γ) against the actual voting + GIA +
+//! quantisation implementation (E7 as assertions).
+
+use fediac::compress::{
+    deduce_gia, error::relative_error, max_abs, quantize_sparsify, scale_factor,
+    vote_bitmap,
+};
+use fediac::theory::{
+    bits_lower_bound, fit_power_law, min_bits, prop1_evaluate, PowerLaw, Prop1Params,
+};
+use fediac::util::{BitVec, Rng};
+
+/// Build a shuffled power-law update vector.
+fn power_law_updates(d: usize, law: &PowerLaw, rng: &mut Rng) -> Vec<f32> {
+    let mut index_of_rank: Vec<usize> = (0..d).collect();
+    rng.shuffle(&mut index_of_rank);
+    let mut u = vec![0.0f32; d];
+    for (rank, &idx) in index_of_rank.iter().enumerate() {
+        let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+        u[idx] = (sign * law.magnitude(rank + 1)) as f32;
+    }
+    u
+}
+
+#[test]
+fn expected_uploads_match_simulation() {
+    let d = 8_000;
+    let n = 20;
+    let k = d / 20;
+    let law = PowerLaw { phi: 0.1, alpha: -0.7 };
+    let mut rng = Rng::new(3);
+    let updates = power_law_updates(d, &law, &mut rng);
+    for a in [1usize, 3, 6] {
+        let analytic = prop1_evaluate(&Prop1Params {
+            d,
+            n_clients: n,
+            k,
+            threshold_a: a,
+            law,
+            bits_b: 12,
+        })
+        .expected_uploads;
+        let trials = 6;
+        let mut sim = 0.0;
+        for _ in 0..trials {
+            let votes: Vec<BitVec> =
+                (0..n).map(|_| vote_bitmap(&updates, k, &mut rng)).collect();
+            sim += deduce_gia(&votes, a).count_ones() as f64;
+        }
+        sim /= trials as f64;
+        let rel = (sim - analytic).abs() / analytic.max(1.0);
+        // The analytic form assumes per-rank independence; the simulation
+        // samples without replacement, so agreement within ~35% is the
+        // expected regime (tightens as a grows).
+        assert!(rel < 0.35, "a={a}: sim {sim:.1} vs analytic {analytic:.1}");
+    }
+}
+
+#[test]
+fn gamma_bound_holds_empirically() {
+    // Proposition 1 is an upper bound: measured γ̂ must stay below the
+    // analytic γ for every threshold (with the matched b from Cor. 1).
+    let d = 8_000;
+    let n = 20;
+    let k = d / 20;
+    let law = PowerLaw { phi: 0.1, alpha: -0.7 };
+    let mut rng = Rng::new(4);
+    let updates = power_law_updates(d, &law, &mut rng);
+    for a in [1usize, 3, 6] {
+        let b = min_bits(d, n, k, a, &law);
+        let out = prop1_evaluate(&Prop1Params {
+            d,
+            n_clients: n,
+            k,
+            threshold_a: a,
+            law,
+            bits_b: b,
+        });
+        let votes: Vec<BitVec> =
+            (0..n).map(|_| vote_bitmap(&updates, k, &mut rng)).collect();
+        let gia = deduce_gia(&votes, a);
+        let f = scale_factor(b, n, max_abs(&updates));
+        let (q, _) = quantize_sparsify(&updates, &gia.to_f32_mask(), f, &mut rng);
+        let gamma_hat = relative_error(&q, &updates, f);
+        assert!(
+            gamma_hat <= out.gamma + 0.05,
+            "a={a}: γ̂ {gamma_hat:.4} exceeds bound γ {:.4}",
+            out.gamma
+        );
+        assert!(gamma_hat < 1.0, "a={a}: γ̂ {gamma_hat} ≥ 1 breaks convergence");
+    }
+}
+
+#[test]
+fn fitted_law_reproduces_generator() {
+    let law = PowerLaw { phi: 0.2, alpha: -0.85 };
+    let mut rng = Rng::new(5);
+    let updates = power_law_updates(10_000, &law, &mut rng);
+    let fit = fit_power_law(&updates).unwrap();
+    assert!((fit.alpha - law.alpha).abs() < 0.05, "alpha {}", fit.alpha);
+    assert!((fit.phi - law.phi).abs() / law.phi < 0.1, "phi {}", fit.phi);
+}
+
+#[test]
+fn corollary1_is_tight_under_simulation() {
+    // One bit below the Corollary-1 minimum must push the analytic γ out
+    // of (0,1) — the knife-edge the paper tunes b on.
+    let d = 5_000;
+    let n = 20;
+    let k = 250;
+    let a = 3;
+    let law = PowerLaw { phi: 0.1, alpha: -0.7 };
+    let b = min_bits(d, n, k, a, &law);
+    let bound = bits_lower_bound(d, n, k, a, &law);
+    assert!((b as f64) > bound && (b as f64 - 1.0) <= bound);
+    let ok = prop1_evaluate(&Prop1Params {
+        d,
+        n_clients: n,
+        k,
+        threshold_a: a,
+        law,
+        bits_b: b,
+    });
+    assert!(ok.gamma < 1.0);
+    if b > 2 {
+        let below = prop1_evaluate(&Prop1Params {
+            d,
+            n_clients: n,
+            k,
+            threshold_a: a,
+            law,
+            bits_b: b - 1,
+        });
+        assert!(
+            below.gamma >= ok.gamma,
+            "shrinking b must not shrink γ: {} vs {}",
+            below.gamma,
+            ok.gamma
+        );
+    }
+}
+
+#[test]
+fn vote_probability_chain_is_ordered() {
+    // p and q decrease in rank; r decreases in rank for fixed a.
+    let d = 1_000;
+    let p = fediac::theory::prop1::vote_prob(d, -0.6);
+    let q = fediac::theory::prop1::voted_prob(&p, 50);
+    let r: Vec<f64> =
+        q.iter().map(|&ql| fediac::theory::prop1::binom_tail_geq(20, ql, 3)).collect();
+    for w in p.windows(2) {
+        assert!(w[0] >= w[1]);
+    }
+    for w in q.windows(2) {
+        assert!(w[0] >= w[1] - 1e-12);
+    }
+    for w in r.windows(2) {
+        assert!(w[0] >= w[1] - 1e-12);
+    }
+}
