@@ -19,6 +19,7 @@
 use anyhow::Result;
 
 use crate::algorithms::{common, Algorithm, RoundReport};
+use crate::client::protocol;
 use crate::compress::{self, rle};
 use crate::configx::{AlgorithmKind, ExperimentConfig};
 use crate::fl::FlEnv;
@@ -130,7 +131,9 @@ impl Algorithm for FediAc {
         // --- phase 1: voting (lines 5–7).
         let votes: Vec<BitVec> = (0..n)
             .map(|i| {
-                let seed = (round as i64) << 24 | i as i64;
+                // Canonical per-(round, client) seed — the networked client
+                // (`client::driver`) derives the identical stream.
+                let seed = protocol::vote_seed(round, i);
                 let scores = env.backend.vote_scores(&local.updates[i], seed);
                 compress::vote_bitmap_from_scores(&scores, self.k)
             })
@@ -208,7 +211,7 @@ impl Algorithm for FediAc {
         let pkts2: Vec<usize> = vec![env.packets_for_bits(bits2); n];
         let mut selected = vec![0i32; k_s];
         for i in 0..n {
-            let seed = 0x5EED_0000 | (round as i64) << 8 | i as i64;
+            let seed = protocol::compress_seed(round, i);
             let (q, new_residual) =
                 env.backend.compress(&local.updates[i], &gia_mask, f, seed);
             self.residuals[i] = new_residual;

@@ -112,6 +112,28 @@ impl Args {
         }
     }
 
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                ty: "u32",
+            }),
+        }
+    }
+
+    pub fn get_u16(&self, key: &str, default: u16) -> Result<u16, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                ty: "u16",
+            }),
+        }
+    }
+
     pub fn get_flag(&self, key: &str) -> bool {
         matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
     }

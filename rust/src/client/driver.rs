@@ -1,0 +1,441 @@
+//! The networked FediAC client: one UDP socket, two phases, timeout-based
+//! retransmission.
+//!
+//! A round is: upload vote blocks → await the Golomb-coded GIA broadcast →
+//! quantise against the GIA → upload aligned i32 lanes → await the
+//! aggregate broadcast. Every wait retransmits the phase's frames (and a
+//! `Poll`) on timeout; the server's scoreboards make retransmission
+//! idempotent, so the driver is safe on lossy links — the `send_loss`
+//! option injects exactly the lossy-uplink behaviour `net::trace`
+//! scenarios model in simulation, making them runnable end-to-end.
+
+use std::net::UdpSocket;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::client::protocol;
+use crate::compress::{self, golomb};
+use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
+use crate::util::{BitVec, Rng};
+use crate::wire::{
+    decode_frame, decode_lanes, encode_frame, update_chunks, vote_chunks, ChunkAssembler,
+    Header, JobSpec, WireKind, DEFAULT_PAYLOAD_BUDGET,
+};
+
+/// Everything a client needs to participate in one job.
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// Server address, e.g. "127.0.0.1:7177".
+    pub server: String,
+    pub job: u32,
+    pub client_id: u16,
+    /// Total clients N in the job (all must agree).
+    pub n_clients: u16,
+    /// Model dimension d.
+    pub d: usize,
+    /// Voting threshold a (server-side; part of the shared spec).
+    pub threshold_a: u16,
+    /// Votes per client k (paper: 5%·d).
+    pub k: usize,
+    /// Quantisation bits b (Eq. 1 / Corollary 1).
+    pub bits_b: usize,
+    /// Payload bytes per data frame (must match across the job).
+    pub payload_budget: usize,
+    /// Backend seed: fixes the vote/quantisation RNG streams so a wire
+    /// round reproduces an in-process round bit-exactly.
+    pub backend_seed: u64,
+    /// Receive timeout before retransmitting a phase.
+    pub timeout: Duration,
+    /// Timeouts tolerated per wait before giving up.
+    pub max_retries: usize,
+    /// Probability of dropping an outgoing datagram (lossy-uplink
+    /// emulation for tests; 0.0 = reliable).
+    pub send_loss: f64,
+}
+
+impl ClientOptions {
+    pub fn new(server: impl Into<String>, job: u32, client_id: u16, d: usize, n_clients: u16) -> Self {
+        ClientOptions {
+            server: server.into(),
+            job,
+            client_id,
+            n_clients,
+            d,
+            threshold_a: 3,
+            k: protocol::votes_per_client(d, 0.05),
+            bits_b: 12,
+            payload_budget: DEFAULT_PAYLOAD_BUDGET,
+            backend_seed: 7,
+            timeout: Duration::from_millis(200),
+            max_retries: 50,
+            send_loss: 0.0,
+        }
+    }
+
+    /// The job spec this client will register.
+    pub fn spec(&self) -> JobSpec {
+        JobSpec {
+            d: self.d as u32,
+            n_clients: self.n_clients,
+            threshold_a: self.threshold_a,
+            payload_budget: self.payload_budget as u16,
+        }
+    }
+}
+
+/// Cumulative driver counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Frames re-sent after a timeout.
+    pub retransmissions: u64,
+    /// Frames dropped by the loss injector (never hit the wire).
+    pub dropped_sends: u64,
+    /// Poll frames sent.
+    pub polls: u64,
+}
+
+/// Result of one completed FediAC round over the wire.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub gia: BitVec,
+    /// Ascending selected dimensions (upload order of the lanes).
+    pub gia_indices: Vec<usize>,
+    /// Global max-|U| the PS folded from all clients (the m in f).
+    pub global_max: f32,
+    /// Amplification factor f = (2^{b−1} − N)/(N·m).
+    pub scale_f: f32,
+    /// Aggregated i32 lanes in GIA order.
+    pub aggregate: Vec<i32>,
+    /// Dequantised aggregate Σq/(N·f), aligned with `gia_indices`.
+    pub delta: Vec<f32>,
+    /// Residual error e to fold into the next round's update.
+    pub residual: Vec<f32>,
+    /// Frames retransmitted during this round.
+    pub retransmissions: u64,
+}
+
+impl RoundOutcome {
+    /// Apply w ← w − delta at the selected dimensions, exactly as the
+    /// simulated round does (Algorithm 1 line 12).
+    pub fn apply(&self, params: &mut [f32]) {
+        crate::algorithms::common::apply_sparse_delta(params, &self.gia_indices, &self.delta);
+    }
+}
+
+/// A connected (joined) FediAC client.
+pub struct FediacClient {
+    socket: UdpSocket,
+    opts: ClientOptions,
+    loss_rng: Rng,
+    pub stats: ClientStats,
+}
+
+impl FediacClient {
+    /// Bind an ephemeral socket, connect and register with the server.
+    pub fn connect(opts: ClientOptions) -> Result<Self> {
+        // `JobSpec` narrows these fields; reject values that would
+        // silently truncate (and then disagree with the local chunking).
+        anyhow::ensure!(
+            opts.payload_budget <= u16::MAX as usize,
+            "payload_budget {} exceeds the wire maximum {}",
+            opts.payload_budget,
+            u16::MAX
+        );
+        anyhow::ensure!(
+            opts.d <= u32::MAX as usize,
+            "d {} exceeds the wire maximum {}",
+            opts.d,
+            u32::MAX
+        );
+        opts.spec().validate().map_err(|e| anyhow::anyhow!("bad client options: {e}"))?;
+        anyhow::ensure!(opts.client_id < opts.n_clients, "client_id out of range");
+        anyhow::ensure!(
+            (2..=31).contains(&opts.bits_b) && (1i64 << (opts.bits_b - 1)) > opts.n_clients as i64,
+            "bits_b={} too small for N={}",
+            opts.bits_b,
+            opts.n_clients
+        );
+        let socket = UdpSocket::bind("0.0.0.0:0").context("binding client socket")?;
+        socket.connect(&opts.server).with_context(|| format!("connecting to {}", opts.server))?;
+        socket.set_read_timeout(Some(opts.timeout))?;
+        let loss_rng = Rng::new(opts.backend_seed ^ (opts.client_id as u64) << 40 ^ 0x10_55);
+        let mut client = FediacClient { socket, opts, loss_rng, stats: ClientStats::default() };
+        client.join()?;
+        Ok(client)
+    }
+
+    pub fn options(&self) -> &ClientOptions {
+        &self.opts
+    }
+
+    fn send_datagram(&mut self, bytes: &[u8]) {
+        if self.opts.send_loss > 0.0 && self.loss_rng.f64() < self.opts.send_loss {
+            self.stats.dropped_sends += 1;
+            return;
+        }
+        let _ = self.socket.send(bytes);
+    }
+
+    /// Register with the server (idempotent; re-run on JOIN_UNKNOWN_JOB).
+    fn join(&mut self) -> Result<()> {
+        let spec = self.opts.spec();
+        let frame = encode_frame(
+            &Header::control(WireKind::Join, self.opts.job, self.opts.client_id, 0, 0),
+            &spec.encode(),
+        );
+        let mut buf = vec![0u8; 2048];
+        let mut timeouts = 0usize;
+        self.send_datagram(&frame);
+        loop {
+            match self.socket.recv(&mut buf) {
+                Ok(n) => {
+                    let Ok(f) = decode_frame(&buf[..n]) else { continue };
+                    if f.header.kind == WireKind::JoinAck && f.header.job == self.opts.job {
+                        if f.header.aux == JOIN_OK {
+                            return Ok(());
+                        }
+                        bail!("server refused join: status {}", f.header.aux);
+                    }
+                    // Stray broadcast from an earlier round — ignore.
+                }
+                Err(e) if is_timeout(&e) => {
+                    timeouts += 1;
+                    if timeouts > self.opts.max_retries {
+                        bail!("join timed out after {timeouts} attempts");
+                    }
+                    self.stats.retransmissions += 1;
+                    self.send_datagram(&frame);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn vote_frames(&self, round: u32, votes: &BitVec, local_max: f32) -> Vec<Vec<u8>> {
+        let chunks = vote_chunks(votes, self.opts.payload_budget);
+        let n_blocks = chunks.len() as u32;
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(i, (dims, bytes))| {
+                let header = Header {
+                    kind: WireKind::Vote,
+                    client: self.opts.client_id,
+                    job: self.opts.job,
+                    round,
+                    block: i as u32,
+                    n_blocks,
+                    elems: *dims as u32,
+                    aux: local_max.to_bits(),
+                };
+                encode_frame(&header, bytes)
+            })
+            .collect()
+    }
+
+    fn update_frames(&self, round: u32, lanes: &[i32], f: f32) -> Vec<Vec<u8>> {
+        let chunks = update_chunks(lanes, self.opts.payload_budget);
+        let n_blocks = chunks.len() as u32;
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(i, (n, bytes))| {
+                let header = Header {
+                    kind: WireKind::Update,
+                    client: self.opts.client_id,
+                    job: self.opts.job,
+                    round,
+                    block: i as u32,
+                    n_blocks,
+                    elems: *n as u32,
+                    aux: f.to_bits(),
+                };
+                encode_frame(&header, bytes)
+            })
+            .collect()
+    }
+
+    /// Upload `frames`, then wait for the complete `want` broadcast of
+    /// `round`, retransmitting on every timeout. Returns (reassembled
+    /// payload bytes, the broadcast's aux word).
+    fn exchange(&mut self, round: u32, frames: &[Vec<u8>], want: WireKind) -> Result<(Vec<u8>, u32)> {
+        for f in frames {
+            self.send_datagram(f);
+        }
+        let mut asm: Option<ChunkAssembler> = None;
+        let mut aux = 0u32;
+        let mut buf = vec![0u8; 65536];
+        let mut timeouts = 0usize;
+        loop {
+            match self.socket.recv(&mut buf) {
+                Ok(n) => {
+                    let Ok(frame) = decode_frame(&buf[..n]) else { continue };
+                    let h = frame.header;
+                    if h.job != self.opts.job {
+                        continue;
+                    }
+                    if h.kind == want && h.round == round {
+                        let a = asm
+                            .get_or_insert_with(|| ChunkAssembler::new(h.n_blocks as usize));
+                        aux = h.aux;
+                        a.insert(h.block as usize, frame.payload);
+                        if a.is_complete() {
+                            return Ok((asm.take().unwrap().assemble(), aux));
+                        }
+                    } else if h.kind == WireKind::JoinAck && h.aux == JOIN_UNKNOWN_JOB {
+                        // Server lost (or never had) our registration.
+                        self.join()?;
+                        self.stats.retransmissions += frames.len() as u64;
+                        for f in frames {
+                            self.send_datagram(f);
+                        }
+                    }
+                    // NotReady / stale rounds / other phases: keep waiting.
+                }
+                Err(e) if is_timeout(&e) => {
+                    timeouts += 1;
+                    if timeouts > self.opts.max_retries {
+                        bail!(
+                            "client {} timed out waiting for {want:?} of round {round} \
+                             after {timeouts} timeouts",
+                            self.opts.client_id
+                        );
+                    }
+                    self.stats.retransmissions += frames.len() as u64;
+                    for f in frames {
+                        self.send_datagram(f);
+                    }
+                    self.stats.polls += 1;
+                    let poll = encode_frame(
+                        &Header {
+                            kind: WireKind::Poll,
+                            client: self.opts.client_id,
+                            job: self.opts.job,
+                            round,
+                            block: 0,
+                            n_blocks: 0,
+                            elems: 0,
+                            aux: want as u32,
+                        },
+                        &[],
+                    );
+                    self.send_datagram(&poll);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Execute both FediAC phases for `round` on this client's update
+    /// vector (with any residual already folded in by the caller).
+    pub fn run_round(&mut self, round: usize, update: &[f32]) -> Result<RoundOutcome> {
+        anyhow::ensure!(
+            update.len() == self.opts.d,
+            "update dimension {} != d {}",
+            update.len(),
+            self.opts.d
+        );
+        let retx_before = self.stats.retransmissions;
+        let round_u = round as u32;
+        let cid = self.opts.client_id as usize;
+
+        // Phase 1: vote, then receive the GIA.
+        let votes =
+            protocol::client_vote(update, self.opts.k, self.opts.backend_seed, round, cid);
+        let local_max = compress::max_abs(update);
+        let vote_frames = self.vote_frames(round_u, &votes, local_max);
+        let (gia_bytes, gia_aux) = self.exchange(round_u, &vote_frames, WireKind::Gia)?;
+        let gia = golomb::decode(&gia_bytes)
+            .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
+        anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
+        let global_max = f32::from_bits(gia_aux);
+
+        // Phase 2: quantise against the GIA, upload aligned lanes, receive
+        // the aggregate.
+        let f = compress::scale_factor(self.opts.bits_b, self.opts.n_clients as usize, global_max);
+        let (q, residual) = protocol::client_quantize(
+            update,
+            &gia.to_f32_mask(),
+            f,
+            self.opts.backend_seed,
+            round,
+            cid,
+        );
+        let gia_indices: Vec<usize> = gia.iter_ones().collect();
+        let k_s = gia_indices.len();
+        let (aggregate, delta) = if k_s == 0 {
+            (Vec::new(), Vec::new())
+        } else {
+            let selected: Vec<i32> = gia_indices.iter().map(|&g| q[g]).collect();
+            let update_frames = self.update_frames(round_u, &selected, f);
+            let (agg_bytes, agg_aux) =
+                self.exchange(round_u, &update_frames, WireKind::Aggregate)?;
+            let lanes = decode_lanes(&agg_bytes)
+                .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
+            anyhow::ensure!(
+                lanes.len() == k_s && agg_aux as usize == k_s,
+                "aggregate has {} lanes, expected k_S = {k_s}",
+                lanes.len()
+            );
+            let delta =
+                compress::dequantize_aggregate(&lanes, self.opts.n_clients as usize, f);
+            (lanes, delta)
+        };
+
+        Ok(RoundOutcome {
+            gia,
+            gia_indices,
+            global_max,
+            scale_f: f,
+            aggregate,
+            delta,
+            residual,
+            retransmissions: self.stats.retransmissions - retx_before,
+        })
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::{serve, ServeOptions};
+
+    #[test]
+    fn options_produce_valid_spec() {
+        let opts = ClientOptions::new("127.0.0.1:1", 3, 0, 1000, 4);
+        assert!(opts.spec().validate().is_ok());
+        assert_eq!(opts.k, 50);
+    }
+
+    #[test]
+    fn single_client_round_trip() {
+        // N = 1, a = 1: the GIA is exactly this client's vote set and the
+        // aggregate is its own quantised upload.
+        let handle = serve(&ServeOptions::default()).unwrap();
+        let mut opts =
+            ClientOptions::new(handle.local_addr().to_string(), 77, 0, 300, 1);
+        opts.threshold_a = 1;
+        opts.payload_budget = 16; // several blocks per phase
+        opts.backend_seed = 42;
+        let mut client = FediacClient::connect(opts).unwrap();
+
+        let update: Vec<f32> = (0..300).map(|i| ((i as f32) * 0.1).sin() * 0.01).collect();
+        let out = client.run_round(1, &update).unwrap();
+
+        let votes = protocol::client_vote(&update, client.options().k, 42, 1, 0);
+        assert_eq!(out.gia, votes, "N=1, a=1 ⇒ GIA = own votes");
+        let m = compress::max_abs(&update).max(f32::MIN_POSITIVE);
+        assert_eq!(out.global_max, m);
+        let f = compress::scale_factor(12, 1, m);
+        let (q, _) = protocol::client_quantize(&update, &votes.to_f32_mask(), f, 42, 1, 0);
+        let want: Vec<i32> = out.gia_indices.iter().map(|&g| q[g]).collect();
+        assert_eq!(out.aggregate, want);
+        assert_eq!(out.delta.len(), out.aggregate.len());
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,18 @@
+//! FediAC client driver: both protocol phases over a real UDP socket.
+//!
+//! * [`protocol`] — the deterministic client-side round math (vote
+//!   selection and Eq.-1 quantisation with the canonical seed derivation).
+//!   [`crate::algorithms::fediac`] drives the *simulated* round through the
+//!   same functions, so a networked round and an in-process round produce
+//!   bit-identical aggregation content for the same inputs.
+//! * [`driver`] — the socket state machine: join, upload vote blocks,
+//!   await the Golomb-coded GIA broadcast, upload aligned quantised
+//!   updates, await the aggregate; every wait uses timeout-based
+//!   retransmission (the server's scoreboards drop the duplicates), so
+//!   lossy links only cost time, never correctness.
+
+pub mod driver;
+pub mod protocol;
+
+pub use driver::{ClientOptions, ClientStats, FediacClient, RoundOutcome};
+pub use protocol::{client_quantize, client_vote, compress_seed, vote_seed, votes_per_client};

@@ -1,0 +1,132 @@
+//! Canonical client-side round math, shared by the simulator and the wire.
+//!
+//! [`crate::algorithms::fediac`] (simulation) and
+//! [`crate::client::driver`] (networked) must produce bit-identical vote
+//! bitmaps and quantised updates for the same inputs, or the loopback
+//! integration tests could not compare a wire round against an in-process
+//! round. The seed derivation here mirrors
+//! [`crate::fl::NativeBackend::vote_scores`] / `compress` exactly: both
+//! mix the backend seed with a per-(round, client) protocol seed and a
+//! role constant.
+
+use crate::compress;
+use crate::util::{BitVec, Rng};
+
+/// Role constant mixed into the vote-score RNG (see `fl::native`).
+const VOTE_MIX: u64 = 0x907e;
+/// Role constant mixed into the quantisation RNG (see `fl::native`).
+const COMPRESS_MIX: u64 = 0xc049;
+
+/// Votes per client: k = round(k_frac · d), clamped to [1, d] — the same
+/// resolution `FediAc::new` applies (paper: k = 5%·d).
+pub fn votes_per_client(d: usize, k_frac: f64) -> usize {
+    ((k_frac * d as f64).round() as usize).clamp(1, d)
+}
+
+/// Protocol seed for phase-1 voting (Algorithm 1 line 5).
+pub fn vote_seed(round: usize, client: usize) -> i64 {
+    (round as i64) << 24 | client as i64
+}
+
+/// Protocol seed for phase-2 quantisation (Algorithm 1 line 9).
+pub fn compress_seed(round: usize, client: usize) -> i64 {
+    0x5EED_0000 | (round as i64) << 8 | client as i64
+}
+
+/// RNG stream for one client's vote scores in one round.
+pub fn vote_rng(backend_seed: u64, round: usize, client: usize) -> Rng {
+    Rng::new(backend_seed ^ vote_seed(round, client) as u64 ^ VOTE_MIX)
+}
+
+/// RNG stream for one client's stochastic quantisation in one round.
+pub fn compress_rng(backend_seed: u64, round: usize, client: usize) -> Rng {
+    Rng::new(backend_seed ^ compress_seed(round, client) as u64 ^ COMPRESS_MIX)
+}
+
+/// Phase 1: the client's k-hot vote bitmap (Gumbel-top-k ∝ |U|).
+pub fn client_vote(
+    update: &[f32],
+    k: usize,
+    backend_seed: u64,
+    round: usize,
+    client: usize,
+) -> BitVec {
+    let mut rng = vote_rng(backend_seed, round, client);
+    let scores = compress::vote_scores_native(update, &mut rng);
+    compress::vote_bitmap_from_scores(&scores, k)
+}
+
+/// Phase 2: quantise + sparsify against the GIA mask (Eq. 1), returning
+/// the integers to upload and the residual to fold into round t+1.
+pub fn client_quantize(
+    update: &[f32],
+    gia_mask: &[f32],
+    f: f32,
+    backend_seed: u64,
+    round: usize,
+    client: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut rng = compress_rng(backend_seed, round, client);
+    compress::quantize_sparsify(update, gia_mask, f, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{DatasetKind, Partition};
+    use crate::data::synth;
+    use crate::fl::{ModelBackend, NativeBackend};
+
+    fn backend(seed: u64) -> NativeBackend {
+        let fd = synth::generate(DatasetKind::Tiny, Partition::Iid, 3, 30, seed);
+        NativeBackend::new(fd, 8, 2, 8, seed)
+    }
+
+    #[test]
+    fn matches_native_backend_vote_scores() {
+        // The wire client must reproduce exactly what the simulated FediAC
+        // round asks the backend for.
+        let seed = 11u64;
+        let mut b = backend(seed);
+        let update: Vec<f32> = (0..b.d()).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+        for (round, client) in [(1usize, 0usize), (3, 2)] {
+            let via_backend = b.vote_scores(&update, vote_seed(round, client));
+            let mut rng = vote_rng(seed, round, client);
+            let direct = compress::vote_scores_native(&update, &mut rng);
+            assert_eq!(via_backend, direct, "round {round} client {client}");
+        }
+    }
+
+    #[test]
+    fn matches_native_backend_compress() {
+        let seed = 13u64;
+        let mut b = backend(seed);
+        let d = b.d();
+        let update: Vec<f32> = (0..d).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect();
+        let mask: Vec<f32> = (0..d).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        let f = 300.0f32;
+        let (round, client) = (2usize, 1usize);
+        let via_backend = b.compress(&update, &mask, f, compress_seed(round, client));
+        let direct = client_quantize(&update, &mask, f, seed, round, client);
+        assert_eq!(via_backend, direct);
+    }
+
+    #[test]
+    fn votes_per_client_mirrors_fediac_new() {
+        assert_eq!(votes_per_client(1000, 0.05), 50);
+        assert_eq!(votes_per_client(10, 0.0), 1); // clamped low
+        assert_eq!(votes_per_client(10, 1.0), 10);
+        assert_eq!(votes_per_client(3, 0.9), 3); // round(2.7) = 3
+    }
+
+    #[test]
+    fn vote_bitmap_is_k_hot_and_deterministic() {
+        let update: Vec<f32> = (0..500).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = client_vote(&update, 25, 7, 4, 2);
+        let b = client_vote(&update, 25, 7, 4, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.count_ones(), 25);
+        let c = client_vote(&update, 25, 7, 4, 3);
+        assert_ne!(a, c, "different clients must draw different votes");
+    }
+}

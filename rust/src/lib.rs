@@ -6,6 +6,7 @@
 
 pub mod algorithms;
 pub mod cli;
+pub mod client;
 pub mod configx;
 pub mod compress;
 pub mod data;
@@ -14,7 +15,9 @@ pub mod fl;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod switch;
 pub mod theory;
 pub mod util;
+pub mod wire;

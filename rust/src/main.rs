@@ -10,6 +10,10 @@
 //! fediac fig3   [--ps …]
 //! fediac fig4   [--partition iid|dirichlet]
 //! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
+//! fediac serve  [--bind 0.0.0.0:7177] [--ps high|low] [--memory BYTES]
+//! fediac client [--server host:port] [--job 1] [--client-id 0]
+//!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
+//!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
 //! ```
 //!
 //! All experiment output goes to stdout as TSV blocks; CSVs land in
@@ -252,9 +256,92 @@ fn cmd_theory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the networked aggregation daemon until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let bind = args.get_str("bind", "0.0.0.0:7177");
+    let mut profile = ps_from(args)?;
+    profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
+    let stats_every = args.get_u64("stats-every", 10)?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let handle = fediac::server::serve(&fediac::server::ServeOptions { bind, profile })?;
+    eprintln!(
+        "[fediac] aggregation server listening on {} (ctrl-c to stop)",
+        handle.local_addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
+        let s = handle.stats();
+        eprintln!(
+            "[fediac] pkts={} jobs={} rounds={} dup={} spill={} waves={} err={}",
+            s.packets,
+            s.jobs_created,
+            s.rounds_completed,
+            s.duplicates,
+            s.spilled,
+            s.waves,
+            s.decode_errors
+        );
+    }
+}
+
+/// Drive one client through FediAC rounds over the wire (synthetic
+/// deterministic updates; every client of a job must share --seed).
+fn cmd_client(args: &Args) -> Result<()> {
+    use fediac::client::{protocol, ClientOptions, FediacClient};
+    use fediac::util::Rng;
+
+    let server = args.get_str("server", "127.0.0.1:7177");
+    let job = args.get_u32("job", 1)?;
+    let client_id = args.get_u16("client-id", 0)?;
+    let n_clients = args.get_u16("clients", 4)?;
+    let d = args.get_usize("d", 4096)?;
+    let rounds = args.get_usize("rounds", 2)?;
+    let k_frac = args.get_f64("k-frac", 0.05)?;
+    let mut opts = ClientOptions::new(server, job, client_id, d, n_clients);
+    opts.threshold_a = args.get_u16("a", 3)?;
+    opts.bits_b = args.get_usize("b", 12)?;
+    opts.backend_seed = args.get_u64("seed", 7)?;
+    opts.payload_budget = args.get_usize("payload", opts.payload_budget)?;
+    opts.timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 200)?);
+    opts.send_loss = args.get_f64("loss", 0.0)?;
+    opts.k = protocol::votes_per_client(d, k_frac);
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let seed = opts.backend_seed;
+    let mut client = FediacClient::connect(opts)?;
+    eprintln!("[fediac] client {client_id} joined job {job} ({n_clients} clients, d={d})");
+    let mut residual = vec![0.0f32; d];
+    for round in 1..=rounds {
+        // Deterministic synthetic update stream (unique per client/round),
+        // with the previous round's residual folded in (Algorithm 1).
+        let mut rng = Rng::new(seed ^ (client_id as u64) << 32 ^ round as u64);
+        let mut update: Vec<f32> = (0..d).map(|_| (rng.gaussian() * 0.01) as f32).collect();
+        for (u, r) in update.iter_mut().zip(&residual) {
+            *u += *r;
+        }
+        let out = client.run_round(round, &update)?;
+        residual = out.residual;
+        let l2 = out.delta.iter().map(|&x| f64::from(x) * f64::from(x)).sum::<f64>().sqrt();
+        println!(
+            "round {round}: k_S={} ({:.2}% of d)  f={:.1}  |delta|2={l2:.4e}  retx={}",
+            out.gia_indices.len(),
+            100.0 * out.gia_indices.len() as f64 / d as f64,
+            out.scale_f,
+            out.retransmissions
+        );
+    }
+    let s = client.stats;
+    eprintln!(
+        "[fediac] client {client_id} done: retx={} dropped={} polls={}",
+        s.retransmissions, s.dropped_sends, s.polls
+    );
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
-        "usage: fediac <train|fig2|table|fig3|fig4|theory> [options]\n\
+        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|client> [options]\n\
          see README.md for the option reference"
     );
     std::process::exit(2);
@@ -269,6 +356,8 @@ fn main() -> Result<()> {
         Some("fig3") => cmd_fig3(&args),
         Some("fig4") => cmd_fig4(&args),
         Some("theory") => cmd_theory(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         _ => usage(),
     }
 }

@@ -1,0 +1,70 @@
+//! Stub PJRT backend for builds without the `pjrt` feature.
+//!
+//! The real [`backend`](super) implementation executes AOT HLO artifacts
+//! through the `xla` PJRT bindings, which are only present in toolchains
+//! that vendor them. This stub keeps every caller compiling: `load`
+//! always errors, and `artifacts_available` reports false for such
+//! builds, so runner/tests take the skip path before ever constructing
+//! one.
+
+use anyhow::Result;
+
+use crate::data::FederatedData;
+use crate::fl::backend::{LocalTrainOutput, ModelBackend};
+
+/// Unconstructible placeholder with the real backend's public surface.
+pub struct PjrtBackend {
+    _private: (),
+}
+
+impl PjrtBackend {
+    /// Always fails: this build cannot execute PJRT artifacts.
+    pub fn load(_dir: &str, _model: &str, _data: FederatedData, _seed: u64) -> Result<Self> {
+        anyhow::bail!(
+            "this build has no PJRT runtime — rebuild with `--features pjrt` \
+             and the xla bindings vendored (see DESIGN.md)"
+        )
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn d(&self) -> usize {
+        unreachable!("stub PjrtBackend cannot be constructed")
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        unreachable!("stub PjrtBackend cannot be constructed")
+    }
+
+    fn local_train(
+        &mut self,
+        _params: &[f32],
+        _client: usize,
+        _round: usize,
+        _lr: f32,
+    ) -> LocalTrainOutput {
+        unreachable!("stub PjrtBackend cannot be constructed")
+    }
+
+    fn evaluate(&mut self, _params: &[f32]) -> (f64, f64) {
+        unreachable!("stub PjrtBackend cannot be constructed")
+    }
+
+    fn vote_scores(&mut self, _updates: &[f32], _seed: i64) -> Vec<f32> {
+        unreachable!("stub PjrtBackend cannot be constructed")
+    }
+
+    fn compress(
+        &mut self,
+        _updates: &[f32],
+        _gia: &[f32],
+        _f: f32,
+        _seed: i64,
+    ) -> (Vec<i32>, Vec<f32>) {
+        unreachable!("stub PjrtBackend cannot be constructed")
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}

@@ -2,6 +2,13 @@
 //! [`crate::fl::ModelBackend`]. Start-to-finish pattern follows
 //! /opt/xla-example/load_hlo (HLO text → compile → execute).
 
+// The real backend links the `xla` PJRT bindings, which only exist in
+// toolchains that vendor them; default builds compile a stub with the same
+// surface so every caller type-checks and PJRT paths skip cleanly.
+#[cfg(feature = "pjrt")]
+pub mod backend;
+#[cfg(not(feature = "pjrt"))]
+#[path = "backend_stub.rs"]
 pub mod backend;
 pub mod manifest;
 
@@ -11,7 +18,8 @@ pub use manifest::{Manifest, ManifestError, ModelEntry};
 /// Default artifact directory relative to the repo root.
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
 
-/// True when an AOT bundle is present (tests skip PJRT paths otherwise).
+/// True when an AOT bundle is present AND this build can execute it
+/// (tests skip PJRT paths otherwise).
 pub fn artifacts_available(dir: &str) -> bool {
-    std::path::Path::new(dir).join("manifest.json").exists()
+    cfg!(feature = "pjrt") && std::path::Path::new(dir).join("manifest.json").exists()
 }

@@ -1,0 +1,209 @@
+//! Threaded UDP front-end for the aggregation server.
+//!
+//! One dispatch thread owns the socket's receive side and routes datagrams
+//! by job id (a cheap [`peek_route`] — no checksum work on the hot thread)
+//! to per-job worker threads over mpsc channels. Each worker owns its
+//! [`Job`] state exclusively (no locks on the aggregation path) and sends
+//! replies through a cloned socket handle. Jobs are therefore concurrent
+//! with each other and serialized internally — the same discipline a
+//! switch pipeline imposes per register block.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, UdpSocket};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::configx::PsProfile;
+use crate::server::job::Job;
+use crate::server::{ServerStats, StatsSnapshot};
+use crate::wire::{decode_frame, peek_route};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address, e.g. "0.0.0.0:7177" or "127.0.0.1:0" for tests.
+    pub bind: String,
+    /// Switch profile — its `memory_bytes` drives per-job wave behaviour.
+    pub profile: PsProfile,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { bind: "127.0.0.1:0".to_string(), profile: PsProfile::high() }
+    }
+}
+
+/// Running daemon handle: address, live stats, shutdown.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    dispatch: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Stop the dispatch loop and join every worker.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind a socket and start the dispatch + worker threads.
+pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
+    let socket = UdpSocket::bind(&opts.bind)?;
+    socket.set_read_timeout(Some(Duration::from_millis(25)))?;
+    let addr = socket.local_addr()?;
+    let stats = Arc::new(ServerStats::default());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let dispatch = {
+        let stats = Arc::clone(&stats);
+        let stop = Arc::clone(&stop);
+        let profile = opts.profile.clone();
+        thread::Builder::new().name("fediac-dispatch".into()).spawn(move || {
+            dispatch_loop(socket, profile, stats, stop);
+        })?
+    };
+
+    Ok(ServerHandle { addr, stats, stop, dispatch: Some(dispatch) })
+}
+
+type WorkerTx = Sender<(Vec<u8>, SocketAddr)>;
+
+/// Upper bound on concurrently hosted jobs (= worker threads). A cheap
+/// `peek_route` must not let an unauthenticated sender spawn unbounded OS
+/// threads by spraying fresh job ids; beyond the cap, datagrams for
+/// unknown jobs are dropped and counted.
+const MAX_JOBS: usize = 256;
+
+fn dispatch_loop(
+    socket: UdpSocket,
+    profile: PsProfile,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut workers: HashMap<u32, (WorkerTx, JoinHandle<()>)> = HashMap::new();
+    let mut buf = vec![0u8; 65536];
+    while !stop.load(Ordering::SeqCst) {
+        let (n, from) = match socket.recv_from(&mut buf) {
+            Ok(ok) => ok,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        };
+        ServerStats::bump(&stats.packets);
+        let Some((job_id, _kind)) = peek_route(&buf[..n]) else {
+            ServerStats::bump(&stats.decode_errors);
+            continue;
+        };
+        if !workers.contains_key(&job_id) && workers.len() >= MAX_JOBS {
+            ServerStats::bump(&stats.jobs_rejected);
+            continue;
+        }
+        let worker = workers.entry(job_id).or_insert_with(|| {
+            spawn_worker(job_id, &socket, profile.clone(), Arc::clone(&stats))
+        });
+        if worker.0.send((buf[..n].to_vec(), from)).is_err() {
+            // Worker died (should not happen); drop the datagram — the
+            // client's retransmission will respawn it.
+            workers.remove(&job_id);
+        }
+    }
+    for (_, (tx, handle)) in workers {
+        drop(tx);
+        let _ = handle.join();
+    }
+}
+
+fn spawn_worker(
+    job_id: u32,
+    socket: &UdpSocket,
+    profile: PsProfile,
+    stats: Arc<ServerStats>,
+) -> (WorkerTx, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<(Vec<u8>, SocketAddr)>();
+    let out = socket.try_clone().expect("cloning UDP socket for worker");
+    let handle = thread::Builder::new()
+        .name(format!("fediac-job-{job_id}"))
+        .spawn(move || {
+            let mut job = Job::new(job_id, profile, Arc::clone(&stats));
+            while let Ok((datagram, from)) = rx.recv() {
+                match decode_frame(&datagram) {
+                    Ok(frame) => {
+                        for (dest, bytes) in job.handle(&frame, from) {
+                            let _ = out.send_to(&bytes, dest);
+                        }
+                    }
+                    Err(_) => ServerStats::bump(&stats.decode_errors),
+                }
+            }
+        })
+        .expect("spawning job worker");
+    (tx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::{encode_frame, Header, JobSpec, WireKind};
+
+    #[test]
+    fn daemon_starts_acks_join_and_shuts_down() {
+        let handle = serve(&ServeOptions::default()).unwrap();
+        let addr = handle.local_addr();
+
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let spec = JobSpec { d: 64, n_clients: 1, threshold_a: 1, payload_budget: 8 };
+        let join = encode_frame(&Header::control(WireKind::Join, 5, 0, 0, 0), &spec.encode());
+        client.send_to(&join, addr).unwrap();
+
+        let mut buf = [0u8; 2048];
+        let (n, _) = client.recv_from(&mut buf).unwrap();
+        let frame = decode_frame(&buf[..n]).unwrap();
+        assert_eq!(frame.header.kind, WireKind::JoinAck);
+        assert_eq!(frame.header.aux, crate::server::JOIN_OK);
+
+        // Garbage is counted, not fatal.
+        client.send_to(b"not a frame", addr).unwrap();
+        // A second job spins up its own worker.
+        let join2 = encode_frame(&Header::control(WireKind::Join, 6, 0, 0, 0), &spec.encode());
+        client.send_to(&join2, addr).unwrap();
+        let (n, _) = client.recv_from(&mut buf).unwrap();
+        assert_eq!(decode_frame(&buf[..n]).unwrap().header.job, 6);
+
+        let stats = handle.stats();
+        assert!(stats.packets >= 3);
+        assert_eq!(stats.jobs_created, 2);
+        assert!(stats.decode_errors >= 1);
+        handle.shutdown();
+    }
+}

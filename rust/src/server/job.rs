@@ -1,0 +1,922 @@
+//! Per-job protocol state machine: FediAC's two phases over real payloads,
+//! with register-window wave accounting.
+//!
+//! One `Job` owns everything a tenant needs: the agreed [`JobSpec`], a
+//! byte-accounted [`RegisterFile`] sized by the switch's [`PsProfile`], the
+//! client address book, and a small window of per-round states. Each round
+//! runs:
+//!
+//! 1. **vote phase** — packed bitmap blocks accumulate into u16 counters
+//!    through [`VoteAggregator`] waves; when every block is complete the
+//!    counters are thresholded ([`alu::threshold_votes`]) into the GIA,
+//!    Golomb-coded and multicast;
+//! 2. **update phase** — aligned i32 lanes accumulate through
+//!    [`UpdateAggregator`] waves; the finished aggregate is multicast.
+//!
+//! *Waves*: only `window` blocks of registers are resident at a time
+//! (`window_blocks` of the profile's memory). Packets beyond the window
+//! spill to host memory and are drained as waves retire — the operational
+//! form of §III-B's "process the index space in waves" behaviour. The
+//! per-wave [`crate::switch::Scoreboard`] (inside the aggregators) drops
+//! retransmitted duplicates so lossy links never double-count.
+
+use std::collections::{BTreeMap, HashMap};
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+use crate::compress::golomb;
+use crate::configx::PsProfile;
+use crate::server::ServerStats;
+use crate::switch::{alu, window_blocks, Mark, RegisterFile, UpdateAggregator, VoteAggregator};
+use crate::util::BitVec;
+use crate::wire::{
+    byte_chunks, encode_frame, lanes_iter, update_chunks, Frame, Header, JobSpec, WireKind,
+};
+
+/// `JoinAck` status: registered (or re-registered) successfully.
+pub const JOIN_OK: u32 = 0;
+/// `JoinAck` status: the job exists with a different spec.
+pub const JOIN_SPEC_MISMATCH: u32 = 1;
+/// `JoinAck` status: a data frame arrived for a job nobody has joined.
+pub const JOIN_UNKNOWN_JOB: u32 = 2;
+/// `JoinAck` status: the spec is invalid or exceeds this switch's memory.
+pub const JOIN_BAD_SPEC: u32 = 3;
+
+/// Datagrams to transmit in response to one handled frame.
+pub type Outgoing = Vec<(SocketAddr, Vec<u8>)>;
+
+/// Sliding register window over a phase's block space.
+#[derive(Debug, Clone, Copy)]
+struct Wave {
+    n_blocks: usize,
+    window: usize,
+    start: usize,
+}
+
+impl Wave {
+    fn idle() -> Self {
+        Wave { n_blocks: 0, window: 1, start: 0 }
+    }
+
+    /// First block past the resident window.
+    fn end(&self) -> usize {
+        (self.start + self.window).min(self.n_blocks)
+    }
+
+    fn done(&self) -> bool {
+        self.start >= self.n_blocks
+    }
+}
+
+/// Phase-1 result kept for (re-)broadcast.
+struct GiaReady {
+    gia: BitVec,
+    encoded: Vec<u8>,
+    global_max: f32,
+}
+
+/// One round's aggregation state.
+struct RoundState {
+    // Phase 1: host-side counter mirror (retired waves land here) plus the
+    // resident register wave.
+    counters: Vec<u16>,
+    vote_wave: Wave,
+    vote_agg: Option<VoteAggregator>,
+    vote_spill: Vec<(u16, u32, Vec<u8>)>,
+    local_max: f32,
+    gia: Option<GiaReady>,
+    // Phase 2 (geometry fixed once the GIA is known).
+    upd_acc: Vec<i32>,
+    upd_wave: Wave,
+    upd_agg: Option<UpdateAggregator>,
+    upd_spill: Vec<(u16, u32, Vec<i32>)>,
+    agg_done: bool,
+}
+
+impl RoundState {
+    fn new(spec: &JobSpec, memory_bytes: usize) -> Self {
+        let d = spec.d as usize;
+        let n_blocks = spec.vote_n_blocks();
+        let window = window_blocks(memory_bytes, spec.vote_block_bits() * 2).min(n_blocks);
+        RoundState {
+            counters: vec![0u16; d],
+            vote_wave: Wave { n_blocks, window, start: 0 },
+            vote_agg: None,
+            vote_spill: Vec::new(),
+            local_max: f32::MIN_POSITIVE,
+            gia: None,
+            upd_acc: Vec::new(),
+            upd_wave: Wave::idle(),
+            upd_agg: None,
+            upd_spill: Vec::new(),
+            agg_done: false,
+        }
+    }
+
+    fn release(self, rf: &mut RegisterFile) {
+        if let Some(a) = self.vote_agg {
+            a.release(rf);
+        }
+        if let Some(a) = self.upd_agg {
+            a.release(rf);
+        }
+    }
+
+    // ---- phase 1 ---------------------------------------------------------
+
+    /// Ingest one vote block; returns true when phase 1 just completed.
+    #[allow(clippy::too_many_arguments)]
+    fn vote_packet(
+        &mut self,
+        spec: &JobSpec,
+        rf: &mut RegisterFile,
+        stats: &ServerStats,
+        client: u16,
+        block: u32,
+        elems: u32,
+        payload: &[u8],
+        local_max: f32,
+    ) -> bool {
+        let d = spec.d as usize;
+        let epb = spec.vote_block_bits();
+        let block = block as usize;
+        if block >= self.vote_wave.n_blocks {
+            ServerStats::bump(&stats.decode_errors);
+            return false;
+        }
+        let expect = epb.min(d - block * epb);
+        if elems as usize != expect || payload.len() != expect.div_ceil(8) {
+            ServerStats::bump(&stats.decode_errors);
+            return false;
+        }
+        self.local_max = self.local_max.max(local_max);
+        if block < self.vote_wave.start {
+            ServerStats::bump(&stats.duplicates);
+            return false;
+        }
+        // Make sure the resident wave has registers (lazy allocation also
+        // drains any spill that became resident).
+        if self.vote_agg.is_none() && self.pump_vote(spec, rf, stats) {
+            return true;
+        }
+        if block < self.vote_wave.start {
+            // The pump advanced past this block on drained spill — the
+            // packet is a duplicate of an already-aggregated contribution.
+            ServerStats::bump(&stats.duplicates);
+            return false;
+        }
+        if self.vote_agg.is_some() && block < self.vote_wave.end() {
+            let rel = block - self.vote_wave.start;
+            let mark = self.vote_agg.as_mut().unwrap().ingest(client as usize, rel, payload);
+            if mark == Mark::Duplicate {
+                ServerStats::bump(&stats.duplicates);
+                return false;
+            }
+        } else {
+            // Beyond the register window (or the window is stalled on
+            // memory): spill to host memory until the wave advances.
+            self.vote_spill.push((client, block as u32, payload.to_vec()));
+            ServerStats::bump(&stats.spilled);
+            return false;
+        }
+        self.pump_vote(spec, rf, stats)
+    }
+
+    /// Allocate/retire vote waves until progress stops. Returns true when
+    /// the whole vote block space has been aggregated.
+    fn pump_vote(&mut self, spec: &JobSpec, rf: &mut RegisterFile, stats: &ServerStats) -> bool {
+        let d = spec.d as usize;
+        let epb = spec.vote_block_bits();
+        loop {
+            if self.vote_wave.done() {
+                return true;
+            }
+            if self.vote_agg.is_none() {
+                let lo_dim = self.vote_wave.start * epb;
+                let wave_dims = (self.vote_wave.end() * epb).min(d) - lo_dim;
+                match VoteAggregator::new(
+                    rf,
+                    wave_dims,
+                    spec.n_clients as usize,
+                    spec.threshold_a as usize,
+                    epb,
+                ) {
+                    Ok(agg) => {
+                        if self.vote_wave.start > 0 {
+                            ServerStats::bump(&stats.waves);
+                        }
+                        self.vote_agg = Some(agg);
+                        self.drain_vote_spill(stats);
+                    }
+                    Err(_) => {
+                        ServerStats::bump(&stats.register_stalls);
+                        return false;
+                    }
+                }
+            }
+            if !self.vote_agg.as_ref().is_some_and(|a| a.all_complete()) {
+                return false;
+            }
+            let agg = self.vote_agg.take().unwrap();
+            let lo_dim = self.vote_wave.start * epb;
+            let wave_dims = agg.counters().len();
+            self.counters[lo_dim..lo_dim + wave_dims].copy_from_slice(agg.counters());
+            agg.release(rf);
+            self.vote_wave.start = self.vote_wave.end();
+        }
+    }
+
+    fn drain_vote_spill(&mut self, stats: &ServerStats) {
+        let (start, end) = (self.vote_wave.start, self.vote_wave.end());
+        let mut keep = Vec::new();
+        for (client, block, payload) in std::mem::take(&mut self.vote_spill) {
+            let b = block as usize;
+            if b < start {
+                ServerStats::bump(&stats.duplicates);
+            } else if b < end {
+                let agg = self.vote_agg.as_mut().expect("resident vote wave");
+                if agg.ingest(client as usize, b - start, &payload) == Mark::Duplicate {
+                    ServerStats::bump(&stats.duplicates);
+                }
+            } else {
+                keep.push((client, block, payload));
+            }
+        }
+        self.vote_spill = keep;
+    }
+
+    /// Threshold the finished counters into the GIA and arm phase 2.
+    fn finish_phase1(&mut self, spec: &JobSpec, memory_bytes: usize, stats: &ServerStats) {
+        let d = spec.d as usize;
+        let mut bytes = vec![0u8; d.div_ceil(8)];
+        alu::threshold_votes(&self.counters, spec.threshold_a, &mut bytes);
+        let gia = BitVec::from_bytes(d, &bytes);
+        let encoded = golomb::encode(&gia);
+        let k_s = gia.count_ones();
+        let n_blocks = spec.update_n_blocks(k_s);
+        let window = window_blocks(memory_bytes, spec.payload_budget as usize).min(n_blocks);
+        self.upd_acc = vec![0i32; k_s];
+        self.upd_wave = Wave { n_blocks, window, start: 0 };
+        if k_s == 0 {
+            // Nothing passed the consensus threshold: the round's data
+            // phase is trivially complete.
+            self.upd_wave.start = self.upd_wave.n_blocks;
+            self.agg_done = true;
+            ServerStats::bump(&stats.rounds_completed);
+        }
+        self.gia = Some(GiaReady { gia, encoded, global_max: self.local_max });
+    }
+
+    // ---- phase 2 ---------------------------------------------------------
+
+    /// Ingest one update block; returns true when phase 2 just completed.
+    #[allow(clippy::too_many_arguments)]
+    fn update_packet(
+        &mut self,
+        spec: &JobSpec,
+        rf: &mut RegisterFile,
+        stats: &ServerStats,
+        client: u16,
+        block: u32,
+        elems: u32,
+        payload: &[u8],
+    ) -> bool {
+        let k_s = self.upd_acc.len();
+        let epb = spec.update_block_lanes();
+        let block = block as usize;
+        if block >= self.upd_wave.n_blocks {
+            ServerStats::bump(&stats.decode_errors);
+            return false;
+        }
+        let expect = epb.min(k_s - (block * epb).min(k_s));
+        if elems as usize != expect || payload.len() != expect * 4 {
+            ServerStats::bump(&stats.decode_errors);
+            return false;
+        }
+        if block < self.upd_wave.start {
+            ServerStats::bump(&stats.duplicates);
+            return false;
+        }
+        if self.upd_agg.is_none() && self.pump_update(spec, rf, stats) {
+            return true;
+        }
+        if block < self.upd_wave.start {
+            ServerStats::bump(&stats.duplicates);
+            return false;
+        }
+        if self.upd_agg.is_some() && block < self.upd_wave.end() {
+            let lanes: Vec<i32> = lanes_iter(payload).collect();
+            let rel = block - self.upd_wave.start;
+            let mark = self.upd_agg.as_mut().unwrap().ingest(client as usize, rel, &lanes);
+            if mark == Mark::Duplicate {
+                ServerStats::bump(&stats.duplicates);
+                return false;
+            }
+        } else {
+            let lanes: Vec<i32> = lanes_iter(payload).collect();
+            self.upd_spill.push((client, block as u32, lanes));
+            ServerStats::bump(&stats.spilled);
+            return false;
+        }
+        self.pump_update(spec, rf, stats)
+    }
+
+    fn pump_update(&mut self, spec: &JobSpec, rf: &mut RegisterFile, stats: &ServerStats) -> bool {
+        let k_s = self.upd_acc.len();
+        let epb = spec.update_block_lanes();
+        loop {
+            if self.upd_wave.done() {
+                return true;
+            }
+            if self.upd_agg.is_none() {
+                let lo_lane = self.upd_wave.start * epb;
+                let wave_lanes = (self.upd_wave.end() * epb).min(k_s) - lo_lane;
+                match UpdateAggregator::new(rf, wave_lanes, spec.n_clients as usize, epb) {
+                    Ok(agg) => {
+                        if self.upd_wave.start > 0 {
+                            ServerStats::bump(&stats.waves);
+                        }
+                        self.upd_agg = Some(agg);
+                        self.drain_update_spill(stats);
+                    }
+                    Err(_) => {
+                        ServerStats::bump(&stats.register_stalls);
+                        return false;
+                    }
+                }
+            }
+            if !self.upd_agg.as_ref().is_some_and(|a| a.all_complete()) {
+                return false;
+            }
+            let agg = self.upd_agg.take().unwrap();
+            let lo_lane = self.upd_wave.start * epb;
+            let wave_lanes = agg.aggregate().len();
+            self.upd_acc[lo_lane..lo_lane + wave_lanes].copy_from_slice(agg.aggregate());
+            ServerStats::add(&stats.overflow_lanes, agg.overflow_lanes());
+            agg.release(rf);
+            self.upd_wave.start = self.upd_wave.end();
+        }
+    }
+
+    fn drain_update_spill(&mut self, stats: &ServerStats) {
+        let (start, end) = (self.upd_wave.start, self.upd_wave.end());
+        let mut keep = Vec::new();
+        for (client, block, lanes) in std::mem::take(&mut self.upd_spill) {
+            let b = block as usize;
+            if b < start {
+                ServerStats::bump(&stats.duplicates);
+            } else if b < end {
+                let agg = self.upd_agg.as_mut().expect("resident update wave");
+                if agg.ingest(client as usize, b - start, &lanes) == Mark::Duplicate {
+                    ServerStats::bump(&stats.duplicates);
+                }
+            } else {
+                keep.push((client, block, lanes));
+            }
+        }
+        self.upd_spill = keep;
+    }
+}
+
+/// Configured half of a job (exists after the first valid `Join`).
+struct JobState {
+    spec: JobSpec,
+    registers: RegisterFile,
+    clients: HashMap<u16, SocketAddr>,
+    rounds: BTreeMap<u32, RoundState>,
+}
+
+/// One tenant of the aggregation server.
+pub struct Job {
+    id: u32,
+    profile: PsProfile,
+    stats: Arc<ServerStats>,
+    state: Option<JobState>,
+}
+
+/// How many completed rounds a job keeps for retransmitted polls.
+const ROUND_HISTORY: u32 = 3;
+/// Hard cap on simultaneously live round states per job: bounds memory
+/// against a participant spraying round numbers without letting one bogus
+/// frame wedge in-progress rounds (oldest-first eviction).
+const MAX_LIVE_ROUNDS: usize = 8;
+
+impl Job {
+    pub fn new(id: u32, profile: PsProfile, stats: Arc<ServerStats>) -> Self {
+        Job { id, profile, stats, state: None }
+    }
+
+    pub fn is_configured(&self) -> bool {
+        self.state.is_some()
+    }
+
+    pub fn spec(&self) -> Option<&JobSpec> {
+        self.state.as_ref().map(|s| &s.spec)
+    }
+
+    /// Finished GIA for a round (None until phase 1 completes).
+    pub fn round_gia(&self, round: u32) -> Option<&BitVec> {
+        let st = self.state.as_ref()?;
+        st.rounds.get(&round)?.gia.as_ref().map(|g| &g.gia)
+    }
+
+    /// Finished aggregate lanes for a round (None until phase 2 completes).
+    pub fn round_aggregate(&self, round: u32) -> Option<&[i32]> {
+        let st = self.state.as_ref()?;
+        let rs = st.rounds.get(&round)?;
+        rs.agg_done.then_some(rs.upd_acc.as_slice())
+    }
+
+    /// Handle one decoded frame; returns the datagrams to send.
+    pub fn handle(&mut self, frame: &Frame<'_>, from: SocketAddr) -> Outgoing {
+        let h = frame.header;
+        match h.kind {
+            WireKind::Join => self.on_join(h, frame.payload, from),
+            _ if self.state.is_none() => vec![(
+                from,
+                encode_frame(
+                    &Header::control(WireKind::JoinAck, self.id, h.client, h.round, JOIN_UNKNOWN_JOB),
+                    &[],
+                ),
+            )],
+            WireKind::Vote => self.on_vote(h, frame.payload, from),
+            WireKind::Update => self.on_update(h, frame.payload, from),
+            WireKind::Poll => self.on_poll(h, from),
+            // Downlink kinds arriving at the server are stray reflections.
+            _ => {
+                ServerStats::bump(&self.stats.decode_errors);
+                Vec::new()
+            }
+        }
+    }
+
+    fn ack(&self, client: u16, round: u32, status: u32, to: SocketAddr) -> Outgoing {
+        vec![(
+            to,
+            encode_frame(&Header::control(WireKind::JoinAck, self.id, client, round, status), &[]),
+        )]
+    }
+
+    fn on_join(&mut self, h: Header, payload: &[u8], from: SocketAddr) -> Outgoing {
+        let spec = match JobSpec::decode(payload) {
+            Ok(s) => s,
+            Err(_) => return self.ack(h.client, h.round, JOIN_BAD_SPEC, from),
+        };
+        // One resident block of either phase must fit this switch's
+        // register file (vote: 2 bytes per dimension, update: the lanes).
+        let min_block = (spec.vote_block_bits() * 2).max(spec.payload_budget as usize);
+        if min_block > self.profile.memory_bytes || h.client >= spec.n_clients {
+            return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
+        }
+        if self.state.as_ref().is_some_and(|st| st.spec != spec) {
+            return self.ack(h.client, h.round, JOIN_SPEC_MISMATCH, from);
+        }
+        if self.state.is_none() {
+            self.state = Some(JobState {
+                spec,
+                registers: RegisterFile::new(self.profile.memory_bytes),
+                clients: HashMap::new(),
+                rounds: BTreeMap::new(),
+            });
+            ServerStats::bump(&self.stats.jobs_created);
+        }
+        self.state.as_mut().unwrap().clients.insert(h.client, from);
+        ServerStats::bump(&self.stats.joins);
+        self.ack(h.client, h.round, JOIN_OK, from)
+    }
+
+    /// Create the round lazily and prune retired history. Only *completed*
+    /// rounds age out by round distance (a single frame with a huge round
+    /// number must not wedge in-progress rounds); total live rounds are
+    /// bounded by oldest-first eviction.
+    fn ensure_round(st: &mut JobState, round: u32, memory_bytes: usize) {
+        if st.rounds.contains_key(&round) {
+            return;
+        }
+        st.rounds.insert(round, RoundState::new(&st.spec, memory_bytes));
+        let newest = *st.rounds.keys().next_back().unwrap();
+        let cutoff = newest.saturating_sub(ROUND_HISTORY);
+        let stale: Vec<u32> = st
+            .rounds
+            .iter()
+            .filter(|(&r, rs)| r < cutoff && rs.agg_done)
+            .map(|(&r, _)| r)
+            .collect();
+        for r in stale {
+            if let Some(old) = st.rounds.remove(&r) {
+                old.release(&mut st.registers);
+            }
+        }
+        while st.rounds.len() > MAX_LIVE_ROUNDS {
+            // Never evict the round we just created — the caller is about
+            // to ingest into it.
+            let oldest = *st.rounds.keys().find(|&&r| r != round).unwrap();
+            if let Some(old) = st.rounds.remove(&oldest) {
+                old.release(&mut st.registers);
+            }
+        }
+    }
+
+    fn on_vote(&mut self, h: Header, payload: &[u8], from: SocketAddr) -> Outgoing {
+        let st = self.state.as_mut().unwrap();
+        if h.client >= st.spec.n_clients {
+            ServerStats::bump(&self.stats.decode_errors);
+            return Vec::new();
+        }
+        st.clients.insert(h.client, from);
+        Self::ensure_round(st, h.round, self.profile.memory_bytes);
+        let JobState { spec, registers, rounds, clients } = st;
+        let spec = *spec;
+        let rs = rounds.get_mut(&h.round).unwrap();
+        if rs.gia.is_some() {
+            // The client missed the broadcast and is retransmitting votes:
+            // answer with the GIA instead of re-aggregating.
+            ServerStats::bump(&self.stats.duplicates);
+            return Self::to_one(from, Self::gia_frames(self.id, h.round, rs, &spec));
+        }
+        let done = rs.vote_packet(
+            &spec,
+            registers,
+            &self.stats,
+            h.client,
+            h.block,
+            h.elems,
+            payload,
+            f32::from_bits(h.aux),
+        );
+        if !done {
+            return Vec::new();
+        }
+        rs.finish_phase1(&spec, self.profile.memory_bytes, &self.stats);
+        let frames = Self::gia_frames(self.id, h.round, rs, &spec);
+        Self::to_all(clients, &frames)
+    }
+
+    fn on_update(&mut self, h: Header, payload: &[u8], from: SocketAddr) -> Outgoing {
+        let st = self.state.as_mut().unwrap();
+        if h.client >= st.spec.n_clients {
+            ServerStats::bump(&self.stats.decode_errors);
+            return Vec::new();
+        }
+        st.clients.insert(h.client, from);
+        let JobState { spec, registers, rounds, clients } = st;
+        let spec = *spec;
+        let Some(rs) = rounds.get_mut(&h.round) else {
+            // Updates for an unknown round (e.g. pruned): nothing to join
+            // them to — the client's poll will get NotReady.
+            ServerStats::bump(&self.stats.decode_errors);
+            return Vec::new();
+        };
+        if rs.gia.is_none() {
+            // Phase 2 data before phase 1 finished — protocol violation or
+            // heavy reordering; drop and let the client retransmit.
+            ServerStats::bump(&self.stats.decode_errors);
+            return Vec::new();
+        }
+        if rs.agg_done {
+            ServerStats::bump(&self.stats.duplicates);
+            return Self::to_one(from, Self::agg_frames(self.id, h.round, rs, &spec));
+        }
+        let done = rs.update_packet(
+            &spec,
+            registers,
+            &self.stats,
+            h.client,
+            h.block,
+            h.elems,
+            payload,
+        );
+        if !done {
+            return Vec::new();
+        }
+        rs.agg_done = true;
+        ServerStats::bump(&self.stats.rounds_completed);
+        let frames = Self::agg_frames(self.id, h.round, rs, &spec);
+        Self::to_all(clients, &frames)
+    }
+
+    fn on_poll(&mut self, h: Header, from: SocketAddr) -> Outgoing {
+        let st = self.state.as_mut().unwrap();
+        if h.client >= st.spec.n_clients {
+            ServerStats::bump(&self.stats.decode_errors);
+            return Vec::new();
+        }
+        st.clients.insert(h.client, from);
+        let JobState { spec, rounds, .. } = st;
+        let spec = *spec;
+        let not_ready = vec![(
+            from,
+            encode_frame(
+                &Header::control(WireKind::NotReady, self.id, h.client, h.round, h.aux),
+                &[],
+            ),
+        )];
+        let Some(rs) = rounds.get_mut(&h.round) else {
+            return not_ready;
+        };
+        if h.aux == WireKind::Gia as u32 && rs.gia.is_some() {
+            Self::to_one(from, Self::gia_frames(self.id, h.round, rs, &spec))
+        } else if h.aux == WireKind::Aggregate as u32 && rs.agg_done {
+            Self::to_one(from, Self::agg_frames(self.id, h.round, rs, &spec))
+        } else {
+            not_ready
+        }
+    }
+
+    /// Encode the GIA broadcast once; clients ignore the destination field
+    /// on downlink frames, so one frame set serves every receiver.
+    fn gia_frames(job: u32, round: u32, rs: &RoundState, spec: &JobSpec) -> Vec<Vec<u8>> {
+        let ready = rs.gia.as_ref().expect("gia ready");
+        let chunks = byte_chunks(&ready.encoded, spec.payload_budget as usize);
+        let n_blocks = chunks.len() as u32;
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(i, chunk)| {
+                let header = Header {
+                    kind: WireKind::Gia,
+                    client: u16::MAX,
+                    job,
+                    round,
+                    block: i as u32,
+                    n_blocks,
+                    elems: chunk.len() as u32,
+                    aux: ready.global_max.to_bits(),
+                };
+                encode_frame(&header, chunk)
+            })
+            .collect()
+    }
+
+    /// Encode the aggregate broadcast once (see [`Self::gia_frames`]).
+    fn agg_frames(job: u32, round: u32, rs: &RoundState, spec: &JobSpec) -> Vec<Vec<u8>> {
+        let chunks = update_chunks(&rs.upd_acc, spec.payload_budget as usize);
+        let n_blocks = chunks.len() as u32;
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(i, (lanes, bytes))| {
+                let header = Header {
+                    kind: WireKind::Aggregate,
+                    client: u16::MAX,
+                    job,
+                    round,
+                    block: i as u32,
+                    n_blocks,
+                    elems: *lanes as u32,
+                    aux: rs.upd_acc.len() as u32,
+                };
+                encode_frame(&header, bytes)
+            })
+            .collect()
+    }
+
+    /// Address one pre-encoded frame set to a single receiver.
+    fn to_one(addr: SocketAddr, frames: Vec<Vec<u8>>) -> Outgoing {
+        frames.into_iter().map(|b| (addr, b)).collect()
+    }
+
+    /// Fan one pre-encoded frame set out to every registered client.
+    fn to_all(clients: &HashMap<u16, SocketAddr>, frames: &[Vec<u8>]) -> Outgoing {
+        let mut out = Vec::with_capacity(clients.len() * frames.len());
+        for &addr in clients.values() {
+            for frame in frames {
+                out.push((addr, frame.clone()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::deduce_gia;
+    use crate::wire::{decode_frame, vote_chunks, ChunkAssembler};
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn profile(memory: usize) -> PsProfile {
+        PsProfile { memory_bytes: memory, ..PsProfile::high() }
+    }
+
+    fn join_frame(job: u32, client: u16, spec: &JobSpec) -> Vec<u8> {
+        encode_frame(&Header::control(WireKind::Join, job, client, 0, 0), &spec.encode())
+    }
+
+    fn vote_frames(job: u32, client: u16, round: u32, bits: &BitVec, spec: &JobSpec) -> Vec<Vec<u8>> {
+        let chunks = vote_chunks(bits, spec.payload_budget as usize);
+        let n_blocks = chunks.len() as u32;
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(i, (dims, bytes))| {
+                encode_frame(
+                    &Header {
+                        kind: WireKind::Vote,
+                        client,
+                        job,
+                        round,
+                        block: i as u32,
+                        n_blocks,
+                        elems: *dims as u32,
+                        aux: 1.0f32.to_bits(),
+                    },
+                    bytes,
+                )
+            })
+            .collect()
+    }
+
+    fn update_frames(
+        job: u32,
+        client: u16,
+        round: u32,
+        lanes: &[i32],
+        spec: &JobSpec,
+    ) -> Vec<Vec<u8>> {
+        let chunks = update_chunks(lanes, spec.payload_budget as usize);
+        let n_blocks = chunks.len() as u32;
+        chunks
+            .iter()
+            .enumerate()
+            .map(|(i, (n, bytes))| {
+                encode_frame(
+                    &Header {
+                        kind: WireKind::Update,
+                        client,
+                        job,
+                        round,
+                        block: i as u32,
+                        n_blocks,
+                        elems: *n as u32,
+                        aux: 0,
+                    },
+                    bytes,
+                )
+            })
+            .collect()
+    }
+
+    fn feed(job: &mut Job, datagram: &[u8], from: SocketAddr) -> Outgoing {
+        let frame = decode_frame(datagram).unwrap();
+        job.handle(&frame, from)
+    }
+
+    fn make_job(spec: &JobSpec, memory: usize) -> Job {
+        let stats = Arc::new(ServerStats::default());
+        let mut job = Job::new(9, profile(memory), stats);
+        for c in 0..spec.n_clients {
+            let out = feed(&mut job, &join_frame(9, c, spec), addr(4000 + c));
+            let ackf = decode_frame(&out[0].1).unwrap();
+            assert_eq!(ackf.header.kind, WireKind::JoinAck);
+            assert_eq!(ackf.header.aux, JOIN_OK);
+        }
+        job
+    }
+
+    #[test]
+    fn full_round_matches_host_reference() {
+        let spec = JobSpec { d: 100, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let mut job = make_job(&spec, 1 << 20);
+        let v0 = BitVec::from_indices(100, &[0, 5, 64, 99]);
+        let v1 = BitVec::from_indices(100, &[5, 64, 70]);
+
+        let mut gia_out = Vec::new();
+        for (c, v) in [(0u16, &v0), (1u16, &v1)] {
+            for f in vote_frames(9, c, 1, v, &spec) {
+                gia_out = feed(&mut job, &f, addr(4000 + c));
+            }
+        }
+        // Completion multicast: GIA chunks to both clients.
+        assert!(!gia_out.is_empty());
+        let expected = deduce_gia(&[v0.clone(), v1.clone()], 1);
+        assert_eq!(job.round_gia(1), Some(&expected));
+        let k_s = expected.count_ones();
+
+        // Reassemble one client's copy and check it Golomb-decodes.
+        let mut asm = ChunkAssembler::new(
+            decode_frame(&gia_out[0].1).unwrap().header.n_blocks as usize,
+        );
+        for (to, bytes) in &gia_out {
+            let f = decode_frame(bytes).unwrap();
+            if *to == addr(4000) && f.header.kind == WireKind::Gia {
+                asm.insert(f.header.block as usize, f.payload);
+            }
+        }
+        assert!(asm.is_complete());
+        assert_eq!(golomb::decode(&asm.assemble()).unwrap(), expected);
+
+        // Phase 2: two aligned lane vectors.
+        let l0: Vec<i32> = (0..k_s as i32).collect();
+        let l1: Vec<i32> = (0..k_s as i32).map(|x| 10 * x).collect();
+        let mut agg_out = Vec::new();
+        for (c, l) in [(0u16, &l0), (1u16, &l1)] {
+            for f in update_frames(9, c, 1, l, &spec) {
+                agg_out = feed(&mut job, &f, addr(4000 + c));
+            }
+        }
+        assert!(!agg_out.is_empty());
+        let want: Vec<i32> = (0..k_s as i32).map(|x| 11 * x).collect();
+        assert_eq!(job.round_aggregate(1), Some(&want[..]));
+    }
+
+    #[test]
+    fn wave_spill_with_tiny_register_file() {
+        // budget 8 → vote block = 64 dims = 128 B of counters; 200 B of
+        // registers hold exactly one block, so d=100 (2 blocks) needs 2
+        // waves and out-of-window packets spill.
+        let spec = JobSpec { d: 100, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let mut job = make_job(&spec, 200);
+        let votes: Vec<BitVec> =
+            (0..2).map(|c| BitVec::from_indices(100, &[c, 50, 80, 99])).collect();
+        let frames: Vec<Vec<Vec<u8>>> =
+            (0..2).map(|c| vote_frames(9, c as u16, 0, &votes[c], &spec)).collect();
+
+        // Block 1 first from client 0 → must spill (window holds block 0).
+        assert!(feed(&mut job, &frames[0][1], addr(4000)).is_empty());
+        assert_eq!(job.stats.spilled.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert!(feed(&mut job, &frames[0][0], addr(4000)).is_empty());
+        assert!(feed(&mut job, &frames[1][0], addr(4001)).is_empty());
+        // Wave 0 retires, spill drains; client 1's block 1 completes it.
+        let out = feed(&mut job, &frames[1][1], addr(4001));
+        assert!(!out.is_empty(), "phase 1 should complete");
+        assert_eq!(job.stats.waves.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(job.round_gia(0), Some(&deduce_gia(&votes, 2)));
+        // Registers fully returned after the phase.
+        let st = job.state.as_ref().unwrap();
+        assert_eq!(st.registers.used(), 0);
+    }
+
+    #[test]
+    fn duplicates_are_suppressed() {
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let mut job = make_job(&spec, 1 << 20);
+        let v = BitVec::from_indices(64, &[1, 2, 3]);
+        let f0 = &vote_frames(9, 0, 0, &v, &spec)[0];
+        assert!(feed(&mut job, f0, addr(4000)).is_empty());
+        assert!(feed(&mut job, f0, addr(4000)).is_empty());
+        assert_eq!(job.stats.duplicates.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // Completing the phase then retransmitting re-serves the GIA.
+        let f1 = &vote_frames(9, 1, 0, &v, &spec)[0];
+        assert!(!feed(&mut job, f1, addr(4001)).is_empty());
+        let replay = feed(&mut job, f0, addr(4000));
+        assert!(!replay.is_empty(), "late vote should re-serve the GIA");
+        assert_eq!(decode_frame(&replay[0].1).unwrap().header.kind, WireKind::Gia);
+        // Counters only saw each contribution once.
+        assert_eq!(job.round_gia(0).unwrap().count_ones(), 3);
+    }
+
+    #[test]
+    fn join_validation() {
+        let stats = Arc::new(ServerStats::default());
+        let mut job = Job::new(1, profile(100), stats);
+        // Budget too large for 100 B of registers (needs 16·budget).
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 64 };
+        let out = feed(&mut job, &join_frame(1, 0, &spec), addr(5000));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
+        assert!(!job.is_configured());
+
+        // Valid spec creates the job; a conflicting re-join is refused.
+        let ok = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 4 };
+        let out = feed(&mut job, &join_frame(1, 0, &ok), addr(5000));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+        let conflicting = JobSpec { threshold_a: 2, ..ok };
+        let out = feed(&mut job, &join_frame(1, 1, &conflicting), addr(5001));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_SPEC_MISMATCH);
+        // Data for an unconfigured job id elsewhere gets JOIN_UNKNOWN_JOB.
+        let mut fresh = Job::new(2, profile(1 << 20), Arc::new(ServerStats::default()));
+        let v = BitVec::from_indices(64, &[0]);
+        let out = feed(&mut fresh, &vote_frames(2, 0, 0, &v, &ok)[0], addr(5002));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_UNKNOWN_JOB);
+    }
+
+    #[test]
+    fn poll_not_ready_then_ready() {
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let mut job = make_job(&spec, 1 << 20);
+        let poll = encode_frame(
+            &Header {
+                kind: WireKind::Poll,
+                client: 0,
+                job: 9,
+                round: 0,
+                block: 0,
+                n_blocks: 0,
+                elems: 0,
+                aux: WireKind::Gia as u32,
+            },
+            &[],
+        );
+        let out = feed(&mut job, &poll, addr(4000));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.kind, WireKind::NotReady);
+        let v = BitVec::from_indices(64, &[7]);
+        for c in 0..2u16 {
+            feed(&mut job, &vote_frames(9, c, 0, &v, &spec)[0], addr(4000 + c));
+        }
+        let out = feed(&mut job, &poll, addr(4000));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.kind, WireKind::Gia);
+    }
+}

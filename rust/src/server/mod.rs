@@ -1,0 +1,89 @@
+//! The switch daemon: a threaded UDP aggregation server hosting multiple
+//! concurrent FL jobs (multi-tenant), each job running FediAC's two-phase
+//! protocol over the [`crate::wire`] format.
+//!
+//! Architecture:
+//!
+//! * [`daemon`] — socket front-end: one dispatch thread routes datagrams
+//!   by job id ([`crate::wire::peek_route`]) to per-job worker threads,
+//!   so independent jobs aggregate concurrently while each job's state
+//!   stays single-threaded (the same invariant a real switch pipeline
+//!   gives per-register-block).
+//! * [`job`] — the per-job protocol state machine: per-round vote
+//!   counters and update accumulators backed by the existing
+//!   [`crate::switch::RegisterFile`] byte accounting. When a phase's
+//!   register demand exceeds the [`crate::configx::PsProfile`] capacity
+//!   the block space is processed in *waves*: only a window of blocks is
+//!   resident in registers, packets beyond it spill to host memory, and
+//!   retired waves copy their partial aggregates out — §III-B's memory
+//!   pressure made operational. Duplicate suppression reuses the
+//!   [`crate::switch::Scoreboard`] inside the wave aggregators.
+
+pub mod daemon;
+pub mod job;
+
+pub use daemon::{serve, ServeOptions, ServerHandle};
+pub use job::{Job, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cross-thread daemon counters (lock-free; workers update directly).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub packets: AtomicU64,
+    pub decode_errors: AtomicU64,
+    pub duplicates: AtomicU64,
+    pub spilled: AtomicU64,
+    pub waves: AtomicU64,
+    pub overflow_lanes: AtomicU64,
+    pub register_stalls: AtomicU64,
+    pub joins: AtomicU64,
+    pub jobs_created: AtomicU64,
+    /// Datagrams dropped because the per-daemon job cap was reached.
+    pub jobs_rejected: AtomicU64,
+    pub rounds_completed: AtomicU64,
+}
+
+/// Point-in-time copy of [`ServerStats`] for reporting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub packets: u64,
+    pub decode_errors: u64,
+    pub duplicates: u64,
+    pub spilled: u64,
+    pub waves: u64,
+    pub overflow_lanes: u64,
+    pub register_stalls: u64,
+    pub joins: u64,
+    pub jobs_created: u64,
+    pub jobs_rejected: u64,
+    pub rounds_completed: u64,
+}
+
+impl ServerStats {
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            packets: self.packets.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
+            duplicates: self.duplicates.load(Ordering::Relaxed),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            overflow_lanes: self.overflow_lanes.load(Ordering::Relaxed),
+            register_stalls: self.register_stalls.load(Ordering::Relaxed),
+            joins: self.joins.load(Ordering::Relaxed),
+            jobs_created: self.jobs_created.load(Ordering::Relaxed),
+            jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
+            rounds_completed: self.rounds_completed.load(Ordering::Relaxed),
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Fixed-header frame codec: encode to a datagram, decode zero-copy.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! off len field        notes
+//!   0   4 magic        0x46444143 ("CADF" on the wire)
+//!   4   1 version      1
+//!   5   1 kind         WireKind discriminant
+//!   6   2 client       sender id (uplink); 0xFFFF on broadcast downlink
+//!   8   4 job          multi-tenant job id
+//!  12   4 round        global FL iteration
+//!  16   4 block        aggregation slot / chunk index within the phase
+//!  20   4 n_blocks     total blocks in this phase stream (reassembly)
+//!  24   4 elems        logical elements in THIS frame (bits / lanes / bytes)
+//!  28   4 aux          phase-specific scalar (f32 bits or a count)
+//!  32   4 payload_len  bytes following the header
+//!  36   4 checksum     CRC-32 over bytes [0,36) + payload
+//! ```
+//!
+//! `aux` semantics per kind: `Vote` → f32 bits of the client's local
+//! max-|U| (the PS folds these with max, §IV's m); `Gia` → f32 bits of the
+//! global max; `Update` → f32 bits of the scale factor f (server-side
+//! sanity only); `Aggregate` → total lane count k_S; `JoinAck` → status
+//! code; `Poll` → the `WireKind` being polled.
+
+use crate::net::packet::Phase;
+use crate::wire::WireError;
+
+/// Frame magic ("FDAC" as a little-endian u32 constant).
+pub const MAGIC: u32 = 0x4644_4143;
+/// Wire protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 40;
+/// Default payload budget per datagram: header + payload + IP/UDP overhead
+/// stays under a 1500-byte MTU, and the budget is a multiple of 4 so i32
+/// lanes pack without padding.
+pub const DEFAULT_PAYLOAD_BUDGET: usize = 1408;
+
+/// Message kind carried in the header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum WireKind {
+    /// Client → server: job registration (payload = [`super::JobSpec`]).
+    Join = 1,
+    /// Server → client: Join outcome (`aux` = status code).
+    JoinAck = 2,
+    /// Client → server: packed vote bitmap block (phase 1).
+    Vote = 3,
+    /// Server → clients: Golomb-coded GIA chunk (phase 1 result).
+    Gia = 4,
+    /// Client → server: quantised i32 lanes block (phase 2).
+    Update = 5,
+    /// Server → clients: aggregated i32 lanes chunk (phase 2 result).
+    Aggregate = 6,
+    /// Client → server: ask for a phase result (`aux` = polled kind).
+    Poll = 7,
+    /// Server → client: polled phase not complete yet.
+    NotReady = 8,
+}
+
+impl WireKind {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => WireKind::Join,
+            2 => WireKind::JoinAck,
+            3 => WireKind::Vote,
+            4 => WireKind::Gia,
+            5 => WireKind::Update,
+            6 => WireKind::Aggregate,
+            7 => WireKind::Poll,
+            8 => WireKind::NotReady,
+            _ => return None,
+        })
+    }
+
+    /// Map the data-carrying kinds onto the simulator's packet phases.
+    pub fn sim_phase(self) -> Option<Phase> {
+        match self {
+            WireKind::Vote => Some(Phase::Vote),
+            WireKind::Update => Some(Phase::Update),
+            WireKind::Gia | WireKind::Aggregate => Some(Phase::Broadcast),
+            _ => None,
+        }
+    }
+}
+
+/// Decoded fixed header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub kind: WireKind,
+    pub client: u16,
+    pub job: u32,
+    pub round: u32,
+    pub block: u32,
+    pub n_blocks: u32,
+    pub elems: u32,
+    pub aux: u32,
+}
+
+impl Header {
+    /// Minimal constructor for control frames (no block structure).
+    pub fn control(kind: WireKind, job: u32, client: u16, round: u32, aux: u32) -> Self {
+        Header { kind, client, job, round, block: 0, n_blocks: 0, elems: 0, aux }
+    }
+}
+
+/// A decoded frame borrowing its payload from the receive buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Frame<'a> {
+    pub header: Header,
+    pub payload: &'a [u8],
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) over the concatenation of `parts`.
+pub fn crc32(parts: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for part in parts {
+        for &b in *part {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
+
+#[inline]
+fn u32_at(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+#[inline]
+fn u16_at(buf: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes(buf[off..off + 2].try_into().unwrap())
+}
+
+/// Encode one frame into a fresh datagram buffer.
+pub fn encode_frame(h: &Header, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(VERSION);
+    buf.push(h.kind as u8);
+    buf.extend_from_slice(&h.client.to_le_bytes());
+    buf.extend_from_slice(&h.job.to_le_bytes());
+    buf.extend_from_slice(&h.round.to_le_bytes());
+    buf.extend_from_slice(&h.block.to_le_bytes());
+    buf.extend_from_slice(&h.n_blocks.to_le_bytes());
+    buf.extend_from_slice(&h.elems.to_le_bytes());
+    buf.extend_from_slice(&h.aux.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let crc = crc32(&[&buf, payload]);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Strict zero-copy decode of one datagram.
+pub fn decode_frame(buf: &[u8]) -> Result<Frame<'_>, WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated { needed: HEADER_LEN, got: buf.len() });
+    }
+    let magic = u32_at(buf, 0);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if buf[4] != VERSION {
+        return Err(WireError::BadVersion(buf[4]));
+    }
+    let kind = WireKind::from_u8(buf[5]).ok_or(WireError::BadKind(buf[5]))?;
+    let payload_len = u32_at(buf, 32) as usize;
+    if buf.len() < HEADER_LEN + payload_len {
+        return Err(WireError::Truncated { needed: HEADER_LEN + payload_len, got: buf.len() });
+    }
+    if buf.len() != HEADER_LEN + payload_len {
+        return Err(WireError::LengthMismatch {
+            declared: payload_len,
+            got: buf.len() - HEADER_LEN,
+        });
+    }
+    let stored = u32_at(buf, 36);
+    let computed = crc32(&[&buf[..36], &buf[HEADER_LEN..]]);
+    if stored != computed {
+        return Err(WireError::ChecksumMismatch { stored, computed });
+    }
+    Ok(Frame {
+        header: Header {
+            kind,
+            client: u16_at(buf, 6),
+            job: u32_at(buf, 8),
+            round: u32_at(buf, 12),
+            block: u32_at(buf, 16),
+            n_blocks: u32_at(buf, 20),
+            elems: u32_at(buf, 24),
+            aux: u32_at(buf, 28),
+        },
+        payload: &buf[HEADER_LEN..],
+    })
+}
+
+/// Cheap routing peek for the server's dispatch loop: validates only the
+/// parts needed to pick a job worker (magic, version, length) and leaves
+/// checksum verification to the worker's full decode.
+pub fn peek_route(buf: &[u8]) -> Option<(u32, WireKind)> {
+    if buf.len() < HEADER_LEN || u32_at(buf, 0) != MAGIC || buf[4] != VERSION {
+        return None;
+    }
+    let kind = WireKind::from_u8(buf[5])?;
+    Some((u32_at(buf, 8), kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> Header {
+        Header {
+            kind: WireKind::Update,
+            client: 3,
+            job: 42,
+            round: 7,
+            block: 11,
+            n_blocks: 12,
+            elems: 96,
+            aux: 0xDEAD_BEEF,
+        }
+    }
+
+    #[test]
+    fn encode_decode_identity() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let buf = encode_frame(&header(), &payload);
+        assert_eq!(buf.len(), HEADER_LEN + payload.len());
+        let frame = decode_frame(&buf).unwrap();
+        assert_eq!(frame.header, header());
+        assert_eq!(frame.payload, &payload[..]);
+    }
+
+    #[test]
+    fn empty_payload_ok() {
+        let buf = encode_frame(&Header::control(WireKind::Poll, 1, 0, 0, 4), &[]);
+        let frame = decode_frame(&buf).unwrap();
+        assert_eq!(frame.header.kind, WireKind::Poll);
+        assert!(frame.payload.is_empty());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let buf = encode_frame(&header(), &[1, 2, 3, 4]);
+        for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN, buf.len() - 1] {
+            let err = decode_frame(&buf[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let mut buf = encode_frame(&header(), &[]);
+        buf[0] ^= 0xFF;
+        assert!(matches!(decode_frame(&buf), Err(WireError::BadMagic(_))));
+        let mut buf = encode_frame(&header(), &[]);
+        buf[4] = 9;
+        assert_eq!(decode_frame(&buf), Err(WireError::BadVersion(9)));
+    }
+
+    #[test]
+    fn checksum_catches_any_flip() {
+        let buf = encode_frame(&header(), &[7; 33]);
+        for i in (0..buf.len()).step_by(5) {
+            if (32..36).contains(&i) {
+                continue; // payload_len flips become length errors instead
+            }
+            let mut bad = buf.clone();
+            bad[i] ^= 0x10;
+            let err = decode_frame(&bad).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    WireError::ChecksumMismatch { .. }
+                        | WireError::BadMagic(_)
+                        | WireError::BadVersion(_)
+                        | WireError::BadKind(_)
+                ),
+                "byte {i}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn length_mismatch_detected() {
+        let mut buf = encode_frame(&header(), &[1, 2, 3, 4]);
+        buf.push(0); // trailing garbage
+        assert!(matches!(
+            decode_frame(&buf),
+            Err(WireError::LengthMismatch { declared: 4, got: 5 })
+        ));
+    }
+
+    #[test]
+    fn peek_matches_full_decode() {
+        let buf = encode_frame(&header(), &[9; 10]);
+        assert_eq!(peek_route(&buf), Some((42, WireKind::Update)));
+        assert_eq!(peek_route(&buf[..10]), None);
+    }
+
+    #[test]
+    fn sim_phase_mapping() {
+        assert_eq!(WireKind::Vote.sim_phase(), Some(Phase::Vote));
+        assert_eq!(WireKind::Update.sim_phase(), Some(Phase::Update));
+        assert_eq!(WireKind::Gia.sim_phase(), Some(Phase::Broadcast));
+        assert_eq!(WireKind::Aggregate.sim_phase(), Some(Phase::Broadcast));
+        assert_eq!(WireKind::Join.sim_phase(), None);
+    }
+
+    #[test]
+    fn crc_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926 — the classic check value.
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,51 @@
+//! Binary wire format for the networked FediAC aggregation service.
+//!
+//! The simulator models packets as in-process descriptors
+//! ([`crate::net::packet::Packet`] carries sizes, never bytes); this module
+//! is the real thing: a fixed 40-byte checksummed header followed by a
+//! phase-specific payload, one frame per UDP datagram.
+//!
+//! * `Vote` frames carry packed 0-1 vote bitmaps (one bit per model
+//!   dimension, the [`crate::util::BitVec`] wire layout);
+//! * `Update` frames carry quantised little-endian i32 lanes in GIA order
+//!   (the [`crate::compress::quantize`] integers);
+//! * `Gia` broadcast frames carry the Golomb–Rice-coded GIA
+//!   ([`crate::compress::golomb`]) split into MTU-sized chunks;
+//! * `Aggregate` broadcast frames carry the summed i32 lanes.
+//!
+//! Decoding is strict: truncation, a bad magic, an unknown version/kind, a
+//! length mismatch or a checksum failure each produce a distinct
+//! [`WireError`]; a frame that decodes is internally consistent. Decoding
+//! is also zero-copy — [`frame::Frame`] borrows the payload from the
+//! receive buffer, and lane readers iterate the raw bytes.
+
+pub mod frame;
+pub mod payload;
+
+pub use frame::{
+    crc32, decode_frame, encode_frame, peek_route, Frame, Header, WireKind,
+    DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAGIC, VERSION,
+};
+pub use payload::{
+    byte_chunks, decode_lanes, encode_lanes, lanes_iter, update_chunks, vote_chunks,
+    ChunkAssembler, JobSpec,
+};
+
+/// Strict decode errors — every way a datagram can be malformed.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum WireError {
+    #[error("truncated frame: need {needed} bytes, got {got}")]
+    Truncated { needed: usize, got: usize },
+    #[error("bad magic {0:#010x}")]
+    BadMagic(u32),
+    #[error("unsupported version {0}")]
+    BadVersion(u8),
+    #[error("unknown frame kind {0}")]
+    BadKind(u8),
+    #[error("declared payload length {declared} != actual {got}")]
+    LengthMismatch { declared: usize, got: usize },
+    #[error("checksum mismatch: header says {stored:#010x}, computed {computed:#010x}")]
+    ChecksumMismatch { stored: u32, computed: u32 },
+    #[error("malformed payload: {0}")]
+    BadPayload(&'static str),
+}

@@ -1,0 +1,280 @@
+//! Payload bodies: i32 lane packing, job registration specs, and the
+//! chunking/reassembly helpers shared by client and server.
+//!
+//! Framing reuses the repo's existing codecs rather than inventing new
+//! ones: vote blocks are byte slices of [`crate::util::BitVec::to_bytes`],
+//! GIA broadcasts are [`crate::compress::golomb`] streams, and update /
+//! aggregate lanes are the [`crate::compress::quantize`] integers in
+//! little-endian order.
+
+use crate::util::BitVec;
+use crate::wire::WireError;
+
+/// Pack i32 lanes little-endian.
+pub fn encode_lanes(lanes: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(lanes.len() * 4);
+    for &v in lanes {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Zero-copy lane reader over a payload slice.
+pub fn lanes_iter(payload: &[u8]) -> impl Iterator<Item = i32> + '_ {
+    payload.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+}
+
+/// Decode i32 lanes; errors when the payload is not a whole number of lanes.
+pub fn decode_lanes(payload: &[u8]) -> Result<Vec<i32>, WireError> {
+    if payload.len() % 4 != 0 {
+        return Err(WireError::BadPayload("lane payload not a multiple of 4 bytes"));
+    }
+    Ok(lanes_iter(payload).collect())
+}
+
+/// Job registration record carried by `Join` frames. Every client of a job
+/// must present an identical spec; the first Join creates the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Model dimension d (vote bitmap length).
+    pub d: u32,
+    /// Number of clients N contributing per round.
+    pub n_clients: u16,
+    /// Voting threshold a (GIA[l] = 1 iff ≥ a votes).
+    pub threshold_a: u16,
+    /// Payload bytes per data frame — fixes the block geometry both sides
+    /// derive (vote: 8·budget bits/block, update: budget/4 lanes/block).
+    pub payload_budget: u16,
+}
+
+impl JobSpec {
+    pub const ENCODED_LEN: usize = 12;
+
+    pub fn encode(&self) -> [u8; Self::ENCODED_LEN] {
+        let mut out = [0u8; Self::ENCODED_LEN];
+        out[0..4].copy_from_slice(&self.d.to_le_bytes());
+        out[4..6].copy_from_slice(&self.n_clients.to_le_bytes());
+        out[6..8].copy_from_slice(&self.threshold_a.to_le_bytes());
+        out[8..10].copy_from_slice(&self.payload_budget.to_le_bytes());
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self, WireError> {
+        if payload.len() != Self::ENCODED_LEN {
+            return Err(WireError::BadPayload("job spec must be 12 bytes"));
+        }
+        let spec = JobSpec {
+            d: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+            n_clients: u16::from_le_bytes(payload[4..6].try_into().unwrap()),
+            threshold_a: u16::from_le_bytes(payload[6..8].try_into().unwrap()),
+            payload_budget: u16::from_le_bytes(payload[8..10].try_into().unwrap()),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural validity (independent of any server's memory profile).
+    pub fn validate(&self) -> Result<(), WireError> {
+        if self.d == 0 {
+            return Err(WireError::BadPayload("d must be > 0"));
+        }
+        if self.n_clients == 0 || self.n_clients > 64 {
+            return Err(WireError::BadPayload("n_clients must be in [1, 64]"));
+        }
+        if self.threshold_a == 0 || self.threshold_a > self.n_clients {
+            return Err(WireError::BadPayload("threshold_a must be in [1, N]"));
+        }
+        if self.payload_budget < 4 || self.payload_budget % 4 != 0 {
+            return Err(WireError::BadPayload("payload_budget must be a positive multiple of 4"));
+        }
+        Ok(())
+    }
+
+    /// Vote-phase geometry: bits (= dimensions) per block.
+    pub fn vote_block_bits(&self) -> usize {
+        self.payload_budget as usize * 8
+    }
+
+    /// Vote-phase block count for this model dimension.
+    pub fn vote_n_blocks(&self) -> usize {
+        (self.d as usize).div_ceil(self.vote_block_bits()).max(1)
+    }
+
+    /// Update-phase geometry: i32 lanes per block.
+    pub fn update_block_lanes(&self) -> usize {
+        self.payload_budget as usize / 4
+    }
+
+    /// Update-phase block count for a GIA of `k_s` selected dimensions.
+    pub fn update_n_blocks(&self, k_s: usize) -> usize {
+        k_s.div_ceil(self.update_block_lanes()).max(1)
+    }
+}
+
+/// Split a full d-bit vote bitmap into per-block byte payloads of at most
+/// `budget` bytes. Returns `(dims_in_block, bytes)` per block; every block
+/// but the last covers exactly `8·budget` dimensions, so block i from any
+/// client aligns with block i from every other client.
+pub fn vote_chunks(bits: &BitVec, budget: usize) -> Vec<(usize, Vec<u8>)> {
+    let d = bits.len();
+    let bytes = bits.to_bytes();
+    let dims_per_block = budget * 8;
+    let n_blocks = d.div_ceil(dims_per_block).max(1);
+    (0..n_blocks)
+        .map(|b| {
+            let lo_dim = b * dims_per_block;
+            let dims = dims_per_block.min(d - lo_dim);
+            let lo = b * budget;
+            let hi = (lo + dims.div_ceil(8)).min(bytes.len());
+            (dims, bytes[lo..hi].to_vec())
+        })
+        .collect()
+}
+
+/// Split i32 lanes into per-block payloads of `budget/4` lanes. Returns
+/// `(lanes_in_block, bytes)` per block; a zero-lane stream still yields one
+/// empty block so the phase has a completion signal.
+pub fn update_chunks(lanes: &[i32], budget: usize) -> Vec<(usize, Vec<u8>)> {
+    let per_block = (budget / 4).max(1);
+    let n_blocks = lanes.len().div_ceil(per_block).max(1);
+    (0..n_blocks)
+        .map(|b| {
+            let lo = b * per_block;
+            let hi = (lo + per_block).min(lanes.len());
+            (hi - lo, encode_lanes(&lanes[lo..hi]))
+        })
+        .collect()
+}
+
+/// Split an opaque byte stream (e.g. a Golomb-coded GIA) into broadcast
+/// chunks of at most `budget` bytes; always at least one (possibly empty).
+pub fn byte_chunks(data: &[u8], budget: usize) -> Vec<Vec<u8>> {
+    if data.is_empty() {
+        return vec![Vec::new()];
+    }
+    data.chunks(budget.max(1)).map(|c| c.to_vec()).collect()
+}
+
+/// Reassemble a chunked stream from out-of-order, possibly duplicated
+/// frames.
+#[derive(Debug, Clone)]
+pub struct ChunkAssembler {
+    parts: Vec<Option<Vec<u8>>>,
+    received: usize,
+}
+
+impl ChunkAssembler {
+    pub fn new(n_blocks: usize) -> Self {
+        ChunkAssembler { parts: vec![None; n_blocks.max(1)], received: 0 }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Insert one chunk; returns false for duplicates / out-of-range blocks.
+    pub fn insert(&mut self, block: usize, bytes: &[u8]) -> bool {
+        match self.parts.get_mut(block) {
+            Some(slot @ None) => {
+                *slot = Some(bytes.to_vec());
+                self.received += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.received == self.parts.len()
+    }
+
+    /// Concatenate all chunks in block order (requires completeness).
+    pub fn assemble(self) -> Vec<u8> {
+        assert!(self.is_complete(), "assembling an incomplete stream");
+        let mut out = Vec::new();
+        for part in self.parts {
+            out.extend_from_slice(&part.unwrap());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_roundtrip() {
+        let lanes = vec![0, 1, -1, i32::MAX, i32::MIN, 123_456];
+        let bytes = encode_lanes(&lanes);
+        assert_eq!(bytes.len(), 24);
+        assert_eq!(decode_lanes(&bytes).unwrap(), lanes);
+        assert!(decode_lanes(&bytes[..23]).is_err());
+    }
+
+    #[test]
+    fn job_spec_roundtrip_and_validation() {
+        let spec = JobSpec { d: 10_000, n_clients: 8, threshold_a: 3, payload_budget: 256 };
+        assert_eq!(JobSpec::decode(&spec.encode()).unwrap(), spec);
+        let bad = JobSpec { threshold_a: 9, ..spec };
+        assert!(JobSpec::decode(&bad.encode()).is_err());
+        let bad = JobSpec { payload_budget: 10, ..spec };
+        assert!(bad.validate().is_err());
+        assert!(JobSpec::decode(&[0; 5]).is_err());
+    }
+
+    #[test]
+    fn spec_geometry() {
+        let spec = JobSpec { d: 100, n_clients: 4, threshold_a: 2, payload_budget: 8 };
+        assert_eq!(spec.vote_block_bits(), 64);
+        assert_eq!(spec.vote_n_blocks(), 2); // 64 + 36 bits
+        assert_eq!(spec.update_block_lanes(), 2);
+        assert_eq!(spec.update_n_blocks(0), 1);
+        assert_eq!(spec.update_n_blocks(5), 3);
+    }
+
+    #[test]
+    fn vote_chunks_align_and_cover() {
+        let d = 100;
+        let bv = BitVec::from_indices(d, &[0, 63, 64, 65, 99]);
+        let chunks = vote_chunks(&bv, 8);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].0, 64);
+        assert_eq!(chunks[1].0, 36);
+        // Reassembling the chunk bytes reproduces the bitmap.
+        let mut bytes = Vec::new();
+        for (_, c) in &chunks {
+            bytes.extend_from_slice(c);
+        }
+        assert_eq!(BitVec::from_bytes(d, &bytes), bv);
+    }
+
+    #[test]
+    fn update_chunks_cover_all_lanes() {
+        let lanes: Vec<i32> = (0..10).collect();
+        let chunks = update_chunks(&lanes, 16); // 4 lanes per block
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks.iter().map(|(n, _)| n).sum::<usize>(), 10);
+        let mut got = Vec::new();
+        for (_, c) in &chunks {
+            got.extend(decode_lanes(c).unwrap());
+        }
+        assert_eq!(got, lanes);
+        // Empty stream still yields one (empty) block.
+        assert_eq!(update_chunks(&[], 16).len(), 1);
+    }
+
+    #[test]
+    fn assembler_out_of_order_with_duplicates() {
+        let chunks = byte_chunks(&(0..=99u8).collect::<Vec<_>>(), 40);
+        assert_eq!(chunks.len(), 3);
+        let mut asm = ChunkAssembler::new(3);
+        assert!(asm.insert(2, &chunks[2]));
+        assert!(asm.insert(0, &chunks[0]));
+        assert!(!asm.insert(0, &chunks[0]), "duplicate accepted");
+        assert!(!asm.is_complete());
+        assert!(asm.insert(1, &chunks[1]));
+        assert!(asm.is_complete());
+        assert_eq!(asm.assemble(), (0..=99u8).collect::<Vec<_>>());
+    }
+}

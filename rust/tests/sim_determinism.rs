@@ -1,0 +1,96 @@
+//! Regression tests for the determinism substrate the simulator (and now
+//! the wire subsystem) leans on: `sim::event` tie-breaking and
+//! `util::BitVec` word-boundary behaviour.
+
+use fediac::sim::EventQueue;
+use fediac::util::BitVec;
+
+#[test]
+fn equal_timestamps_pop_in_insertion_order() {
+    // The documented contract: float-coincident events are FIFO. A mix of
+    // distinct and tied timestamps, scheduled out of order.
+    let mut q = EventQueue::new();
+    q.schedule(2.0, "t2-first");
+    q.schedule(1.0, "t1-first");
+    q.schedule(2.0, "t2-second");
+    q.schedule(1.0, "t1-second");
+    q.schedule(2.0, "t2-third");
+    q.schedule(0.5, "t05");
+    let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+    assert_eq!(
+        order,
+        vec!["t05", "t1-first", "t1-second", "t2-first", "t2-second", "t2-third"]
+    );
+}
+
+#[test]
+fn large_tie_bucket_is_stable() {
+    // Heap order must not leak through: 1000 events at one timestamp pop
+    // exactly in insertion order.
+    let mut q = EventQueue::new();
+    for i in 0..1000 {
+        q.schedule(3.25, i);
+    }
+    let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+    assert_eq!(order, (0..1000).collect::<Vec<_>>());
+}
+
+#[test]
+fn ties_after_interleaved_pops_stay_fifo() {
+    // Scheduling between pops (the simulator's actual pattern) keeps the
+    // per-timestamp FIFO contract.
+    let mut q = EventQueue::new();
+    q.schedule(1.0, 0);
+    q.schedule(1.0, 1);
+    assert_eq!(q.pop().unwrap().1, 0);
+    q.schedule(1.0, 2); // same timestamp as the remaining event
+    assert_eq!(q.pop().unwrap().1, 1);
+    assert_eq!(q.pop().unwrap().1, 2);
+    assert!(q.is_empty());
+}
+
+#[test]
+fn bitvec_word_boundary_indices() {
+    // Bit 0, the last bit of word 0, and the first bit of word 1 — the
+    // indices a shift bug would corrupt first.
+    for d in [65usize, 128, 130] {
+        let mut bv = BitVec::zeros(d);
+        for &i in &[0usize, 63, 64] {
+            assert!(!bv.get(i), "d={d}: bit {i} dirty at init");
+            bv.set(i, true);
+            assert!(bv.get(i), "d={d}: bit {i} did not set");
+        }
+        assert_eq!(bv.count_ones(), 3, "d={d}");
+        // Neighbours unaffected.
+        assert!(!bv.get(1) && !bv.get(62), "d={d}");
+        if d > 65 {
+            assert!(!bv.get(65), "d={d}");
+        }
+        let ones: Vec<usize> = bv.iter_ones().collect();
+        assert_eq!(ones, vec![0, 63, 64], "d={d}");
+        // Clearing across the boundary works too.
+        bv.set(63, false);
+        bv.set(64, false);
+        assert_eq!(bv.count_ones(), 1, "d={d}");
+    }
+}
+
+#[test]
+fn bitvec_last_bit_and_byte_roundtrip_at_boundaries() {
+    // Lengths straddling byte and word boundaries: the final bit must
+    // survive to_bytes/from_bytes and the tail must stay masked.
+    for d in [1usize, 7, 8, 9, 63, 64, 65, 127, 128, 129] {
+        let bv = BitVec::from_indices(d, &[0, d - 1]);
+        let rt = BitVec::from_bytes(d, &bv.to_bytes());
+        assert_eq!(rt, bv, "d={d}");
+        assert!(rt.get(d - 1), "d={d}: last bit lost");
+        assert_eq!(rt.count_ones(), if d == 1 { 1 } else { 2 }, "d={d}");
+        // A payload with garbage tail bits must be masked on parse.
+        let mut bytes = bv.to_bytes();
+        if d % 8 != 0 {
+            *bytes.last_mut().unwrap() |= 0xFF << (d % 8);
+            let masked = BitVec::from_bytes(d, &bytes);
+            assert_eq!(masked, bv, "d={d}: tail bits leaked");
+        }
+    }
+}

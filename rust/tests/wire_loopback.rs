@@ -1,0 +1,295 @@
+//! Loopback integration tests: full FediAC rounds over real UDP sockets.
+//!
+//! The acceptance bar: two jobs running concurrently on one server, each
+//! with ≥ 4 clients, where the wire-aggregated update **bit-exactly**
+//! matches the in-process `algorithms::fediac` result for the same seeded
+//! inputs. The client driver shares its seed derivation with the
+//! simulated round (`client::protocol`), so the comparison is exact, not
+//! approximate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use fediac::algorithms::{common, fediac::FediAc, Algorithm};
+use fediac::client::{protocol, ClientOptions, FediacClient, RoundOutcome};
+use fediac::compress::{self, deduce_gia};
+use fediac::configx::{DatasetKind, ExperimentConfig, Partition, PsProfile};
+use fediac::data::synth;
+use fediac::fl::{FlEnv, NativeBackend};
+use fediac::server::{serve, ServeOptions};
+use fediac::util::Rng;
+
+const N_CLIENTS: usize = 4;
+
+fn make_env(seed: u64) -> FlEnv {
+    let cfg = ExperimentConfig {
+        num_clients: N_CLIENTS,
+        seed,
+        ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+    };
+    let fd = synth::generate(cfg.dataset, cfg.partition, N_CLIENTS, 40, cfg.seed);
+    let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+    let mut env = FlEnv::new(cfg, backend);
+    env.init_model();
+    env
+}
+
+/// Everything the wire side needs to replay one in-process FediAC round.
+struct SimRound {
+    seed: u64,
+    d: usize,
+    k: usize,
+    threshold_a: u16,
+    bits_b: usize,
+    /// The exact round-1 update vectors the simulated round aggregated.
+    updates: Vec<Vec<f32>>,
+    /// Global model before round 1.
+    params_before: Vec<f32>,
+    /// Global model after round 1 (the ground truth to reproduce).
+    params_after: Vec<f32>,
+}
+
+/// Run bootstrap + round 1 of the simulated FediAC and capture the inputs
+/// and outputs needed to replay round 1 over the wire.
+fn run_sim_round(seed: u64) -> SimRound {
+    // Reference run: bootstrap (round 0) then one compressed round.
+    let mut env = make_env(seed);
+    let mut alg = FediAc::new(&env.cfg, env.d());
+    alg.run_round(&mut env, 0).unwrap();
+    let params_before = env.params.clone();
+    let bits_b = alg.bits().expect("bootstrap sets b");
+    alg.run_round(&mut env, 1).unwrap();
+    let params_after = env.params.clone();
+
+    // Twin run: identical env, stopped after bootstrap, to re-derive the
+    // round-1 local updates (local training is deterministic per seed and
+    // the post-bootstrap residuals are all zero).
+    let mut env2 = make_env(seed);
+    let mut alg2 = FediAc::new(&env2.cfg, env2.d());
+    alg2.run_round(&mut env2, 0).unwrap();
+    assert_eq!(env2.params, params_before, "twin env diverged in bootstrap");
+    let d = env2.d();
+    let lr = env2.cfg.lr.at(1) as f32;
+    let zero_residuals = vec![vec![0.0f32; d]; N_CLIENTS];
+    let local = common::local_training(&mut env2, 1, lr, Some(&zero_residuals));
+
+    SimRound {
+        seed,
+        d,
+        k: protocol::votes_per_client(d, env2.cfg.fediac.k_frac),
+        threshold_a: env2.cfg.fediac.threshold_a as u16,
+        bits_b,
+        updates: local.updates,
+        params_before,
+        params_after,
+    }
+}
+
+fn client_opts(server: String, job: u32, id: u16, sim: &SimRound) -> ClientOptions {
+    let mut opts = ClientOptions::new(server, job, id, sim.d, N_CLIENTS as u16);
+    opts.threshold_a = sim.threshold_a;
+    opts.k = sim.k;
+    opts.bits_b = sim.bits_b;
+    opts.backend_seed = sim.seed;
+    opts.timeout = Duration::from_millis(300);
+    opts.max_retries = 100;
+    opts
+}
+
+/// Run all four clients of one job concurrently and return their outcomes.
+fn run_job_clients(
+    server: std::net::SocketAddr,
+    job: u32,
+    sim: &SimRound,
+    send_loss: f64,
+    payload_budget: Option<usize>,
+    dropped: &AtomicU64,
+    retransmitted: &AtomicU64,
+) -> Vec<RoundOutcome> {
+    let mut outcomes: Vec<Option<RoundOutcome>> = (0..N_CLIENTS).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, slot) in outcomes.iter_mut().enumerate() {
+            let update = &sim.updates[i];
+            handles.push(scope.spawn(move || {
+                let mut opts = client_opts(server.to_string(), job, i as u16, sim);
+                opts.send_loss = send_loss;
+                if let Some(b) = payload_budget {
+                    opts.payload_budget = b;
+                }
+                let mut client = FediacClient::connect(opts).unwrap();
+                let out = client.run_round(1, update).unwrap();
+                dropped.fetch_add(client.stats.dropped_sends, Ordering::Relaxed);
+                retransmitted.fetch_add(client.stats.retransmissions, Ordering::Relaxed);
+                *slot = Some(out);
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread panicked");
+        }
+    });
+    outcomes.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[test]
+fn two_concurrent_jobs_match_in_process_fediac_bit_exactly() {
+    let sim_a = run_sim_round(7);
+    let sim_b = run_sim_round(21);
+
+    let handle = serve(&ServeOptions::default()).unwrap();
+    let addr = handle.local_addr();
+    let drops = AtomicU64::new(0);
+    let retx = AtomicU64::new(0);
+
+    // Both jobs' clients run at the same time against one daemon.
+    let (out_a, out_b) = std::thread::scope(|scope| {
+        let ha = scope.spawn(|| run_job_clients(addr, 401, &sim_a, 0.0, None, &drops, &retx));
+        let hb =
+            scope.spawn(|| run_job_clients(addr, 402, &sim_b, 0.0, Some(64), &drops, &retx));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+
+    for (sim, outcomes, job) in [(&sim_a, &out_a, 401u32), (&sim_b, &out_b, 402u32)] {
+        // Every client of the job saw the same consensus and aggregate.
+        for o in outcomes.iter().skip(1) {
+            assert_eq!(o.gia, outcomes[0].gia, "job {job}: GIA differs across clients");
+            assert_eq!(
+                o.aggregate, outcomes[0].aggregate,
+                "job {job}: aggregate differs across clients"
+            );
+        }
+        let out = &outcomes[0];
+        assert!(!out.gia_indices.is_empty(), "job {job}: empty consensus");
+        // The PS-folded global max equals the simulation's m.
+        let m = common::global_max_abs(&sim.updates);
+        assert_eq!(out.global_max, m, "job {job}: global max differs");
+        // Applying the wire round to the pre-round model reproduces the
+        // simulated post-round model bit-for-bit.
+        let mut params = sim.params_before.clone();
+        out.apply(&mut params);
+        assert_eq!(
+            params, sim.params_after,
+            "job {job}: wire round diverged from algorithms::fediac"
+        );
+    }
+
+    let stats = handle.stats();
+    assert_eq!(stats.jobs_created, 2);
+    assert_eq!(stats.rounds_completed, 2);
+    handle.shutdown();
+}
+
+/// Reference aggregation for synthetic (non-training) inputs, built from
+/// the same primitives the simulated round drives.
+fn reference_round(
+    updates: &[Vec<f32>],
+    seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+    bits_b: usize,
+) -> (Vec<usize>, Vec<i32>, f32) {
+    let votes: Vec<_> = updates
+        .iter()
+        .enumerate()
+        .map(|(i, u)| protocol::client_vote(u, k, seed, round, i))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = common::global_max_abs(updates);
+    let f = compress::scale_factor(bits_b, updates.len(), m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    for (i, u) in updates.iter().enumerate() {
+        let (q, _) = protocol::client_quantize(u, &mask, f, seed, round, i);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+    }
+    (indices, lanes, f)
+}
+
+fn synthetic_updates(seed: u64, d: usize) -> Vec<Vec<f32>> {
+    (0..N_CLIENTS)
+        .map(|i| {
+            let mut rng = Rng::new(seed ^ (i as u64) << 16);
+            (0..d).map(|_| (rng.gaussian() * 0.02) as f32).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn lossy_uplink_retransmits_and_stays_exact() {
+    // 30% of every client's outgoing datagrams are dropped before the
+    // wire — the protocol must finish anyway and produce the identical
+    // aggregate (scoreboards drop the duplicate retransmissions).
+    let d = 500;
+    let seed = 99u64;
+    let updates = synthetic_updates(seed, d);
+    let k = protocol::votes_per_client(d, 0.05);
+    let (ref_indices, ref_lanes, _) = reference_round(&updates, seed, 1, k, 1, 12);
+    assert!(!ref_indices.is_empty());
+
+    let handle = serve(&ServeOptions::default()).unwrap();
+    let sim = SimRound {
+        seed,
+        d,
+        k,
+        threshold_a: 1,
+        bits_b: 12,
+        updates,
+        params_before: Vec::new(),
+        params_after: Vec::new(),
+    };
+    let drops = AtomicU64::new(0);
+    let retx = AtomicU64::new(0);
+    let outcomes =
+        run_job_clients(handle.local_addr(), 77, &sim, 0.30, Some(64), &drops, &retx);
+    for o in &outcomes {
+        assert_eq!(o.gia_indices, ref_indices, "lossy link changed the consensus");
+        assert_eq!(o.aggregate, ref_lanes, "lossy link corrupted the aggregate");
+    }
+    assert!(drops.load(Ordering::Relaxed) > 0, "loss injector never fired");
+    let stats = handle.stats();
+    assert!(stats.duplicates > 0 || retx.load(Ordering::Relaxed) > 0);
+    handle.shutdown();
+}
+
+#[test]
+fn register_pressure_forces_waves_over_the_wire() {
+    // A server with barely one vote block of registers (budget 16 →
+    // 16·8·2 = 256 B per block) must process a 2-block vote space in two
+    // waves and still aggregate exactly.
+    let d = 256; // 2 vote blocks at budget 16
+    let seed = 5u64;
+    let updates = synthetic_updates(seed, d);
+    let k = protocol::votes_per_client(d, 0.05);
+    let (ref_indices, ref_lanes, _) = reference_round(&updates, seed, 1, k, 2, 12);
+
+    let opts = ServeOptions {
+        profile: PsProfile { memory_bytes: 300, ..PsProfile::high() },
+        ..ServeOptions::default()
+    };
+    let handle = serve(&opts).unwrap();
+    let sim = SimRound {
+        seed,
+        d,
+        k,
+        threshold_a: 2,
+        bits_b: 12,
+        updates,
+        params_before: Vec::new(),
+        params_after: Vec::new(),
+    };
+    let drops = AtomicU64::new(0);
+    let retx = AtomicU64::new(0);
+    let outcomes =
+        run_job_clients(handle.local_addr(), 12, &sim, 0.0, Some(16), &drops, &retx);
+    for o in &outcomes {
+        assert_eq!(o.gia_indices, ref_indices);
+        assert_eq!(o.aggregate, ref_lanes);
+    }
+    let stats = handle.stats();
+    assert!(stats.waves >= 1, "no wave advance despite tiny register file");
+    handle.shutdown();
+}

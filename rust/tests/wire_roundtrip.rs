@@ -1,0 +1,153 @@
+//! Property-style round-trip tests for the wire codec: encode→decode
+//! identity for all three packet phases, plus corruption cases (truncated
+//! buffer, flipped checksum byte, wrong version).
+
+use fediac::compress::golomb;
+use fediac::prop_assert;
+use fediac::util::{prop, BitVec, Rng};
+use fediac::wire::{
+    byte_chunks, decode_frame, decode_lanes, encode_frame, encode_lanes, update_chunks,
+    vote_chunks, ChunkAssembler, Frame, Header, JobSpec, WireError, WireKind, HEADER_LEN,
+};
+
+fn random_bitvec(rng: &mut Rng, d: usize, density: f64) -> BitVec {
+    let mut bv = BitVec::zeros(d);
+    for i in 0..d {
+        if rng.f64() < density {
+            bv.set(i, true);
+        }
+    }
+    bv
+}
+
+fn header(kind: WireKind, block: u32, n_blocks: u32, elems: u32, aux: u32) -> Header {
+    Header { kind, client: 2, job: 31, round: 5, block, n_blocks, elems, aux }
+}
+
+#[test]
+fn vote_phase_roundtrip_property() {
+    // A client's vote bitmap, chunked into Vote frames, must survive
+    // encode→decode→reassembly bit-exactly for any dimension/density.
+    prop::check("vote_wire_roundtrip", prop::default_cases(), |rng| {
+        let d = prop::gen_dim(rng);
+        let bv = random_bitvec(rng, d, rng.f64());
+        let budget = 8 * (1 + rng.below(4)); // 8..32 bytes
+        let chunks = vote_chunks(&bv, budget);
+        let mut bytes = Vec::new();
+        for (i, (dims, payload)) in chunks.iter().enumerate() {
+            let buf = encode_frame(
+                &header(WireKind::Vote, i as u32, chunks.len() as u32, *dims as u32, 0),
+                payload,
+            );
+            let frame: Frame<'_> = decode_frame(&buf).map_err(|e| e.to_string())?;
+            prop_assert!(frame.header.kind == WireKind::Vote, "kind changed");
+            prop_assert!(frame.header.block == i as u32, "block changed");
+            prop_assert!(frame.payload == &payload[..], "payload changed");
+            bytes.extend_from_slice(frame.payload);
+        }
+        let rt = BitVec::from_bytes(d, &bytes);
+        prop_assert!(rt == bv, "bitmap mutated on the wire (d={d})");
+        Ok(())
+    });
+}
+
+#[test]
+fn update_phase_roundtrip_property() {
+    prop::check("update_wire_roundtrip", prop::default_cases(), |rng| {
+        let k_s = 1 + rng.below(2000);
+        let lanes: Vec<i32> =
+            (0..k_s).map(|_| (rng.next_u32() as i32).wrapping_div(3)).collect();
+        let budget = 4 * (1 + rng.below(64)); // 4..256 bytes
+        let chunks = update_chunks(&lanes, budget);
+        let mut got = Vec::new();
+        for (i, (n, payload)) in chunks.iter().enumerate() {
+            let buf = encode_frame(
+                &header(WireKind::Update, i as u32, chunks.len() as u32, *n as u32, 0),
+                payload,
+            );
+            let frame = decode_frame(&buf).map_err(|e| e.to_string())?;
+            let dec = decode_lanes(frame.payload).map_err(|e| e.to_string())?;
+            prop_assert!(dec.len() == *n, "lane count changed");
+            got.extend(dec);
+        }
+        prop_assert!(got == lanes, "lanes mutated on the wire (k_s={k_s})");
+        Ok(())
+    });
+}
+
+#[test]
+fn broadcast_phase_roundtrip_property() {
+    // Golomb-coded GIA chunked into Broadcast frames and reassembled out
+    // of order must decode to the original bitmap.
+    prop::check("gia_wire_roundtrip", prop::default_cases(), |rng| {
+        let d = prop::gen_dim(rng);
+        let gia = random_bitvec(rng, d, rng.f64() * rng.f64());
+        let encoded = golomb::encode(&gia);
+        let budget = 8 * (1 + rng.below(8));
+        let chunks = byte_chunks(&encoded, budget);
+        let mut order: Vec<usize> = (0..chunks.len()).collect();
+        rng.shuffle(&mut order);
+        let mut asm = ChunkAssembler::new(chunks.len());
+        for &i in &order {
+            let buf = encode_frame(
+                &header(WireKind::Gia, i as u32, chunks.len() as u32, chunks[i].len() as u32, 0),
+                &chunks[i],
+            );
+            let frame = decode_frame(&buf).map_err(|e| e.to_string())?;
+            asm.insert(frame.header.block as usize, frame.payload);
+        }
+        prop_assert!(asm.is_complete(), "chunks missing after shuffle");
+        let rt = golomb::decode(&asm.assemble()).ok_or("golomb decode failed")?;
+        prop_assert!(rt == gia, "GIA mutated on the wire (d={d})");
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_buffers_rejected_at_every_length() {
+    let payload: Vec<u8> = (0..=200u8).collect();
+    let buf = encode_frame(&header(WireKind::Aggregate, 0, 1, 201, 7), &payload);
+    for cut in 0..buf.len() {
+        let err = decode_frame(&buf[..cut]).unwrap_err();
+        assert!(
+            matches!(err, WireError::Truncated { .. }),
+            "cut at {cut} gave {err:?}"
+        );
+    }
+    assert!(decode_frame(&buf).is_ok());
+}
+
+#[test]
+fn flipped_checksum_byte_rejected() {
+    let buf = encode_frame(&header(WireKind::Vote, 0, 1, 8, 0), &[0xAB]);
+    // Flip each stored-checksum byte individually.
+    for i in 36..HEADER_LEN {
+        let mut bad = buf.clone();
+        bad[i] ^= 0x01;
+        assert!(
+            matches!(decode_frame(&bad), Err(WireError::ChecksumMismatch { .. })),
+            "checksum byte {i} accepted"
+        );
+    }
+    // Flip a payload byte: the checksum must catch it.
+    let mut bad = buf.clone();
+    *bad.last_mut().unwrap() ^= 0x80;
+    assert!(matches!(decode_frame(&bad), Err(WireError::ChecksumMismatch { .. })));
+}
+
+#[test]
+fn wrong_version_rejected() {
+    let mut buf = encode_frame(&header(WireKind::Vote, 0, 1, 8, 0), &[0xFF]);
+    buf[4] = 2;
+    assert_eq!(decode_frame(&buf).unwrap_err(), WireError::BadVersion(2));
+    buf[4] = 0;
+    assert_eq!(decode_frame(&buf).unwrap_err(), WireError::BadVersion(0));
+}
+
+#[test]
+fn job_spec_survives_join_frame() {
+    let spec = JobSpec { d: 123_456, n_clients: 20, threshold_a: 3, payload_budget: 1408 };
+    let buf = encode_frame(&Header::control(WireKind::Join, 9, 4, 0, 0), &spec.encode());
+    let frame = decode_frame(&buf).unwrap();
+    assert_eq!(JobSpec::decode(frame.payload).unwrap(), spec);
+}
