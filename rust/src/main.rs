@@ -11,6 +11,7 @@
 //! fediac fig4   [--partition iid|dirichlet]
 //! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
 //! fediac serve  [--bind 0.0.0.0:7177] [--ps high|low] [--memory BYTES]
+//!               [--host-bytes BYTES]
 //! fediac client [--server host:port] [--job 1] [--client-id 0]
 //!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
 //!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
@@ -262,9 +263,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut profile = ps_from(args)?;
     profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
     let stats_every = args.get_u64("stats-every", 10)?;
+    let defaults = fediac::server::JobLimits::default();
+    let limits = fediac::server::JobLimits {
+        host_bytes: args.get_usize("host-bytes", defaults.host_bytes)?,
+        ..defaults
+    };
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let handle = fediac::server::serve(&fediac::server::ServeOptions { bind, profile })?;
+    let handle = fediac::server::serve(&fediac::server::ServeOptions { bind, profile, limits })?;
     eprintln!(
         "[fediac] aggregation server listening on {} (ctrl-c to stop)",
         handle.local_addr()
@@ -273,13 +279,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
         let s = handle.stats();
         eprintln!(
-            "[fediac] pkts={} jobs={} rounds={} dup={} spill={} waves={} err={}",
+            "[fediac] pkts={} jobs={} rounds={} dup={} spill={} spill_drop={} waves={} \
+             stalls={} idle_rel={} reserve_sup={} err={}",
             s.packets,
             s.jobs_created,
             s.rounds_completed,
             s.duplicates,
             s.spilled,
+            s.spill_dropped,
             s.waves,
+            s.register_stalls,
+            s.idle_releases,
+            s.reserves_suppressed,
             s.decode_errors
         );
     }

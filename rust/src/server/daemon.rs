@@ -18,9 +18,9 @@ use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use crate::configx::PsProfile;
-use crate::server::job::Job;
+use crate::server::job::{Job, JobLimits, JOIN_UNKNOWN_JOB};
 use crate::server::{ServerStats, StatsSnapshot};
-use crate::wire::{decode_frame, peek_route};
+use crate::wire::{decode_frame, encode_frame, peek_route, Header, WireKind};
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -29,11 +29,18 @@ pub struct ServeOptions {
     pub bind: String,
     /// Switch profile — its `memory_bytes` drives per-job wave behaviour.
     pub profile: PsProfile,
+    /// Per-job abuse limits: host-memory budget enforced at `Join`, spill
+    /// caps, idle register reclamation, and re-serve rate limiting.
+    pub limits: JobLimits,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { bind: "127.0.0.1:0".to_string(), profile: PsProfile::high() }
+        ServeOptions {
+            bind: "127.0.0.1:0".to_string(),
+            profile: PsProfile::high(),
+            limits: JobLimits::default(),
+        }
     }
 }
 
@@ -84,8 +91,9 @@ pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
         let stats = Arc::clone(&stats);
         let stop = Arc::clone(&stop);
         let profile = opts.profile.clone();
+        let limits = opts.limits;
         thread::Builder::new().name("fediac-dispatch".into()).spawn(move || {
-            dispatch_loop(socket, profile, stats, stop);
+            dispatch_loop(socket, profile, limits, stats, stop);
         })?
     };
 
@@ -94,19 +102,30 @@ pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
 
 type WorkerTx = Sender<(Vec<u8>, SocketAddr)>;
 
-/// Upper bound on concurrently hosted jobs (= worker threads). A cheap
-/// `peek_route` must not let an unauthenticated sender spawn unbounded OS
-/// threads by spraying fresh job ids; beyond the cap, datagrams for
-/// unknown jobs are dropped and counted.
+/// One spawned job worker: its input channel, its thread handle, and
+/// whether its `Job` has been configured by a valid `Join` (unconfigured
+/// workers are the eviction candidates under cap pressure).
+struct WorkerSlot {
+    tx: WorkerTx,
+    handle: JoinHandle<()>,
+    configured: Arc<AtomicBool>,
+}
+
+/// Upper bound on concurrently hosted jobs (= worker threads). Workers
+/// are born only on `Join` frames, and when the cap is hit a worker whose
+/// job never completed a valid `Join` (a forged or abandoned id) is
+/// evicted first, so spraying job ids can neither spawn unbounded OS
+/// threads nor permanently lock new tenants out.
 const MAX_JOBS: usize = 256;
 
 fn dispatch_loop(
     socket: UdpSocket,
     profile: PsProfile,
+    limits: JobLimits,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut workers: HashMap<u32, (WorkerTx, JoinHandle<()>)> = HashMap::new();
+    let mut workers: HashMap<u32, WorkerSlot> = HashMap::new();
     let mut buf = vec![0u8; 65536];
     while !stop.load(Ordering::SeqCst) {
         let (n, from) = match socket.recv_from(&mut buf) {
@@ -120,46 +139,80 @@ fn dispatch_loop(
             Err(_) => break,
         };
         ServerStats::bump(&stats.packets);
-        let Some((job_id, _kind)) = peek_route(&buf[..n]) else {
+        let Some((job_id, kind)) = peek_route(&buf[..n]) else {
             ServerStats::bump(&stats.decode_errors);
             continue;
         };
-        if !workers.contains_key(&job_id) && workers.len() >= MAX_JOBS {
-            ServerStats::bump(&stats.jobs_rejected);
-            continue;
+        if !workers.contains_key(&job_id) {
+            // Workers are born only on Join. Data frames for unknown jobs
+            // get the protocol's JoinAck/UNKNOWN straight from this thread
+            // (the client driver re-joins on seeing it), so a sprayed job
+            // id cannot pin an OS thread.
+            if kind != WireKind::Join {
+                let h = Header::control(WireKind::JoinAck, job_id, u16::MAX, 0, JOIN_UNKNOWN_JOB);
+                let _ = socket.send_to(&encode_frame(&h, &[]), from);
+                continue;
+            }
+            if workers.len() >= MAX_JOBS && !evict_unconfigured(&mut workers) {
+                ServerStats::bump(&stats.jobs_rejected);
+                continue;
+            }
         }
         let worker = workers.entry(job_id).or_insert_with(|| {
-            spawn_worker(job_id, &socket, profile.clone(), Arc::clone(&stats))
+            spawn_worker(job_id, &socket, profile.clone(), limits, Arc::clone(&stats))
         });
-        if worker.0.send((buf[..n].to_vec(), from)).is_err() {
+        if worker.tx.send((buf[..n].to_vec(), from)).is_err() {
             // Worker died (should not happen); drop the datagram — the
             // client's retransmission will respawn it.
             workers.remove(&job_id);
         }
     }
-    for (_, (tx, handle)) in workers {
-        drop(tx);
-        let _ = handle.join();
+    for (_, slot) in workers {
+        drop(slot.tx);
+        let _ = slot.handle.join();
     }
+}
+
+/// Drop one worker whose job was never configured by a valid `Join`.
+/// Returns false when every resident job is real (the cap then holds).
+fn evict_unconfigured(workers: &mut HashMap<u32, WorkerSlot>) -> bool {
+    let victim = workers
+        .iter()
+        .find(|(_, slot)| !slot.configured.load(Ordering::SeqCst))
+        .map(|(&id, _)| id);
+    let Some(id) = victim else {
+        return false;
+    };
+    if let Some(slot) = workers.remove(&id) {
+        drop(slot.tx);
+        let _ = slot.handle.join();
+    }
+    true
 }
 
 fn spawn_worker(
     job_id: u32,
     socket: &UdpSocket,
     profile: PsProfile,
+    limits: JobLimits,
     stats: Arc<ServerStats>,
-) -> (WorkerTx, JoinHandle<()>) {
+) -> WorkerSlot {
     let (tx, rx) = mpsc::channel::<(Vec<u8>, SocketAddr)>();
     let out = socket.try_clone().expect("cloning UDP socket for worker");
+    let configured = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&configured);
     let handle = thread::Builder::new()
         .name(format!("fediac-job-{job_id}"))
         .spawn(move || {
-            let mut job = Job::new(job_id, profile, Arc::clone(&stats));
+            let mut job = Job::with_limits(job_id, profile, limits, Arc::clone(&stats));
             while let Ok((datagram, from)) = rx.recv() {
                 match decode_frame(&datagram) {
                     Ok(frame) => {
                         for (dest, bytes) in job.handle(&frame, from) {
                             let _ = out.send_to(&bytes, dest);
+                        }
+                        if !flag.load(Ordering::SeqCst) && job.is_configured() {
+                            flag.store(true, Ordering::SeqCst);
                         }
                     }
                     Err(_) => ServerStats::bump(&stats.decode_errors),
@@ -167,7 +220,7 @@ fn spawn_worker(
             }
         })
         .expect("spawning job worker");
-    (tx, handle)
+    WorkerSlot { tx, handle, configured }
 }
 
 #[cfg(test)]
@@ -199,6 +252,28 @@ mod tests {
         client.send_to(&join2, addr).unwrap();
         let (n, _) = client.recv_from(&mut buf).unwrap();
         assert_eq!(decode_frame(&buf[..n]).unwrap().header.job, 6);
+
+        // A data frame for a job nobody joined is answered straight from
+        // the dispatch thread — no worker slot is spent on it.
+        let stray = encode_frame(
+            &Header {
+                kind: WireKind::Vote,
+                client: 0,
+                job: 999,
+                round: 0,
+                block: 0,
+                n_blocks: 1,
+                elems: 8,
+                aux: 0,
+            },
+            &[0u8; 1],
+        );
+        client.send_to(&stray, addr).unwrap();
+        let (n, _) = client.recv_from(&mut buf).unwrap();
+        let f = decode_frame(&buf[..n]).unwrap();
+        assert_eq!(f.header.kind, WireKind::JoinAck);
+        assert_eq!(f.header.job, 999);
+        assert_eq!(f.header.aux, crate::server::JOIN_UNKNOWN_JOB);
 
         let stats = handle.stats();
         assert!(stats.packets >= 3);

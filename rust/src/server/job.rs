@@ -23,6 +23,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::net::SocketAddr;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::compress::golomb;
 use crate::configx::PsProfile;
@@ -39,11 +40,66 @@ pub const JOIN_OK: u32 = 0;
 pub const JOIN_SPEC_MISMATCH: u32 = 1;
 /// `JoinAck` status: a data frame arrived for a job nobody has joined.
 pub const JOIN_UNKNOWN_JOB: u32 = 2;
-/// `JoinAck` status: the spec is invalid or exceeds this switch's memory.
+/// `JoinAck` status: the spec is invalid, exceeds this switch's register
+/// memory, or exceeds the server's per-job host-memory budget.
 pub const JOIN_BAD_SPEC: u32 = 3;
 
 /// Datagrams to transmit in response to one handled frame.
 pub type Outgoing = Vec<(SocketAddr, Vec<u8>)>;
+
+/// Abuse limits for one job — everything an unauthenticated UDP sender
+/// could otherwise inflate. Defaults are generous for legitimate jobs;
+/// raise `host_bytes` for very large models.
+#[derive(Debug, Clone, Copy)]
+pub struct JobLimits {
+    /// Host bytes one job may pin across its `MAX_LIVE_ROUNDS` live
+    /// rounds (vote counters, GIA, update accumulators); a `Join` whose
+    /// spec would exceed it is refused with [`JOIN_BAD_SPEC`]. The
+    /// daemon-wide worst case is `MAX_JOBS ×` this figure.
+    pub host_bytes: usize,
+    /// Spilled payload bytes one phase of one round may hold; beyond the
+    /// derived entry cap, spill is dropped (and counted) — the client's
+    /// retransmission re-delivers once the wave advances.
+    pub spill_bytes: usize,
+    /// Release an in-progress round's register aggregators after this
+    /// long without traffic. The round stays live: retransmission
+    /// rebuilds the reclaimed wave, so a stalled or abandoned round
+    /// cannot pin the register file forever.
+    pub idle_release_after: Duration,
+    /// Full GIA/aggregate frame-set re-serves allowed per source address
+    /// per round (the completion multicast is not charged). Only `Poll`
+    /// triggers a re-serve — late data frames are dropped silently — and
+    /// a recovering client spends one unit per timeout cycle, so the
+    /// default comfortably exceeds any sane retry policy while bounding
+    /// the bytes one small spoofed frame can reflect at a victim.
+    pub reserve_budget: u32,
+}
+
+impl Default for JobLimits {
+    fn default() -> Self {
+        JobLimits {
+            host_bytes: 64 << 20,
+            spill_bytes: 4 << 20,
+            idle_release_after: Duration::from_secs(30),
+            reserve_budget: 128,
+        }
+    }
+}
+
+/// Spill entry caps derived from `JobLimits::spill_bytes` (the clamp keeps
+/// per-entry heap overhead bounded when payloads are tiny).
+const MIN_SPILL_ENTRIES: usize = 16;
+const MAX_SPILL_ENTRIES: usize = 8192;
+/// Distinct source addresses tracked per round for re-serve budgeting.
+/// Unregistered sources beyond this (necessarily spoofed floods — real
+/// jobs have at most 64 clients) are never re-served; Join-registered
+/// addresses bypass the gate so floods cannot lock real clients out.
+const MAX_RESERVE_SOURCES: usize = 64;
+
+fn spill_cap(limits: &JobLimits, spec: &JobSpec) -> usize {
+    (limits.spill_bytes / (spec.payload_budget.max(1) as usize))
+        .clamp(MIN_SPILL_ENTRIES, MAX_SPILL_ENTRIES)
+}
 
 /// Sliding register window over a phase's block space.
 #[derive(Debug, Clone, Copy)]
@@ -82,19 +138,26 @@ struct RoundState {
     counters: Vec<u16>,
     vote_wave: Wave,
     vote_agg: Option<VoteAggregator>,
-    vote_spill: Vec<(u16, u32, Vec<u8>)>,
+    vote_spill: BTreeMap<(u32, u16), Vec<u8>>,
     local_max: f32,
     gia: Option<GiaReady>,
     // Phase 2 (geometry fixed once the GIA is known).
     upd_acc: Vec<i32>,
     upd_wave: Wave,
     upd_agg: Option<UpdateAggregator>,
-    upd_spill: Vec<(u16, u32, Vec<i32>)>,
+    upd_spill: BTreeMap<(u32, u16), Vec<i32>>,
     agg_done: bool,
+    /// Per-phase cap on spill entries (derived from `JobLimits`).
+    spill_cap: usize,
+    /// Full frame-set re-serves already granted per source this round.
+    serves: HashMap<SocketAddr, u32>,
+    /// Last *validated* data-path packet (idle register reclamation —
+    /// garbage or stale-block replays must not count as traffic).
+    last_touch: Instant,
 }
 
 impl RoundState {
-    fn new(spec: &JobSpec, memory_bytes: usize) -> Self {
+    fn new(spec: &JobSpec, memory_bytes: usize, spill_cap: usize) -> Self {
         let d = spec.d as usize;
         let n_blocks = spec.vote_n_blocks();
         let window = window_blocks(memory_bytes, spec.vote_block_bits() * 2).min(n_blocks);
@@ -102,15 +165,56 @@ impl RoundState {
             counters: vec![0u16; d],
             vote_wave: Wave { n_blocks, window, start: 0 },
             vote_agg: None,
-            vote_spill: Vec::new(),
+            vote_spill: BTreeMap::new(),
             local_max: f32::MIN_POSITIVE,
             gia: None,
             upd_acc: Vec::new(),
             upd_wave: Wave::idle(),
             upd_agg: None,
-            upd_spill: Vec::new(),
+            upd_spill: BTreeMap::new(),
             agg_done: false,
+            spill_cap,
+            serves: HashMap::new(),
+            last_touch: Instant::now(),
         }
+    }
+
+    /// Charge one full GIA/aggregate frame-set re-serve to `from`'s
+    /// per-round budget. Returns false (and counts the suppression) when
+    /// the source is over budget or the source table is full — the caller
+    /// then sends nothing, so a small spoofed Poll cannot reflect the
+    /// multi-frame broadcast set at a victim indefinitely. Sources that
+    /// registered through `Join` (`registered`) bypass the table-size
+    /// gate and get 4× the budget; absent authentication an attacker who
+    /// spoofs a client's exact address can still burn that client's
+    /// budget, so this bounds reflected volume rather than guaranteeing
+    /// recovery under targeted spoofing.
+    fn charge_reserve(
+        &mut self,
+        from: SocketAddr,
+        registered: bool,
+        limits: &JobLimits,
+        stats: &ServerStats,
+    ) -> bool {
+        if !registered
+            && self.serves.len() >= MAX_RESERVE_SOURCES
+            && !self.serves.contains_key(&from)
+        {
+            ServerStats::bump(&stats.reserves_suppressed);
+            return false;
+        }
+        let cap = if registered {
+            limits.reserve_budget.saturating_mul(4)
+        } else {
+            limits.reserve_budget
+        };
+        let granted = self.serves.entry(from).or_insert(0);
+        if *granted >= cap {
+            ServerStats::bump(&stats.reserves_suppressed);
+            return false;
+        }
+        *granted += 1;
+        true
     }
 
     fn release(self, rf: &mut RegisterFile) {
@@ -154,6 +258,9 @@ impl RoundState {
             ServerStats::bump(&stats.duplicates);
             return false;
         }
+        // Only a frame that survives validation (and isn't a stale-block
+        // replay) counts as traffic for idle register reclamation.
+        self.last_touch = Instant::now();
         // Make sure the resident wave has registers (lazy allocation also
         // drains any spill that became resident).
         if self.vote_agg.is_none() && self.pump_vote(spec, rf, stats) {
@@ -175,8 +282,18 @@ impl RoundState {
         } else {
             // Beyond the register window (or the window is stalled on
             // memory): spill to host memory until the wave advances.
-            self.vote_spill.push((client, block as u32, payload.to_vec()));
-            ServerStats::bump(&stats.spilled);
+            // Retransmissions during a stall must not grow the spill, so
+            // dedup on (block, client) and cap the entries — dropped
+            // spill is re-delivered by the client's retransmission.
+            let key = (block as u32, client);
+            if self.vote_spill.contains_key(&key) {
+                ServerStats::bump(&stats.duplicates);
+            } else if self.vote_spill.len() >= self.spill_cap {
+                ServerStats::bump(&stats.spill_dropped);
+            } else {
+                self.vote_spill.insert(key, payload.to_vec());
+                ServerStats::bump(&stats.spilled);
+            }
             return false;
         }
         self.pump_vote(spec, rf, stats)
@@ -228,21 +345,19 @@ impl RoundState {
 
     fn drain_vote_spill(&mut self, stats: &ServerStats) {
         let (start, end) = (self.vote_wave.start, self.vote_wave.end());
-        let mut keep = Vec::new();
-        for (client, block, payload) in std::mem::take(&mut self.vote_spill) {
-            let b = block as usize;
-            if b < start {
+        // Entries at or past the window keep waiting; the rest drain.
+        let keep = self.vote_spill.split_off(&(end as u32, 0));
+        for ((block, client), payload) in std::mem::replace(&mut self.vote_spill, keep) {
+            if (block as usize) < start {
                 ServerStats::bump(&stats.duplicates);
-            } else if b < end {
+            } else {
                 let agg = self.vote_agg.as_mut().expect("resident vote wave");
-                if agg.ingest(client as usize, b - start, &payload) == Mark::Duplicate {
+                let rel = block as usize - start;
+                if agg.ingest(client as usize, rel, &payload) == Mark::Duplicate {
                     ServerStats::bump(&stats.duplicates);
                 }
-            } else {
-                keep.push((client, block, payload));
             }
         }
-        self.vote_spill = keep;
     }
 
     /// Threshold the finished counters into the GIA and arm phase 2.
@@ -297,6 +412,8 @@ impl RoundState {
             ServerStats::bump(&stats.duplicates);
             return false;
         }
+        // See vote_packet: validated, non-stale traffic only.
+        self.last_touch = Instant::now();
         if self.upd_agg.is_none() && self.pump_update(spec, rf, stats) {
             return true;
         }
@@ -313,9 +430,17 @@ impl RoundState {
                 return false;
             }
         } else {
-            let lanes: Vec<i32> = lanes_iter(payload).collect();
-            self.upd_spill.push((client, block as u32, lanes));
-            ServerStats::bump(&stats.spilled);
+            // Same dedup + cap discipline as the vote spill.
+            let key = (block as u32, client);
+            if self.upd_spill.contains_key(&key) {
+                ServerStats::bump(&stats.duplicates);
+            } else if self.upd_spill.len() >= self.spill_cap {
+                ServerStats::bump(&stats.spill_dropped);
+            } else {
+                let lanes: Vec<i32> = lanes_iter(payload).collect();
+                self.upd_spill.insert(key, lanes);
+                ServerStats::bump(&stats.spilled);
+            }
             return false;
         }
         self.pump_update(spec, rf, stats)
@@ -360,21 +485,18 @@ impl RoundState {
 
     fn drain_update_spill(&mut self, stats: &ServerStats) {
         let (start, end) = (self.upd_wave.start, self.upd_wave.end());
-        let mut keep = Vec::new();
-        for (client, block, lanes) in std::mem::take(&mut self.upd_spill) {
-            let b = block as usize;
-            if b < start {
+        let keep = self.upd_spill.split_off(&(end as u32, 0));
+        for ((block, client), lanes) in std::mem::replace(&mut self.upd_spill, keep) {
+            if (block as usize) < start {
                 ServerStats::bump(&stats.duplicates);
-            } else if b < end {
+            } else {
                 let agg = self.upd_agg.as_mut().expect("resident update wave");
-                if agg.ingest(client as usize, b - start, &lanes) == Mark::Duplicate {
+                let rel = block as usize - start;
+                if agg.ingest(client as usize, rel, &lanes) == Mark::Duplicate {
                     ServerStats::bump(&stats.duplicates);
                 }
-            } else {
-                keep.push((client, block, lanes));
             }
         }
-        self.upd_spill = keep;
     }
 }
 
@@ -390,6 +512,7 @@ struct JobState {
 pub struct Job {
     id: u32,
     profile: PsProfile,
+    limits: JobLimits,
     stats: Arc<ServerStats>,
     state: Option<JobState>,
 }
@@ -403,7 +526,16 @@ const MAX_LIVE_ROUNDS: usize = 8;
 
 impl Job {
     pub fn new(id: u32, profile: PsProfile, stats: Arc<ServerStats>) -> Self {
-        Job { id, profile, stats, state: None }
+        Self::with_limits(id, profile, JobLimits::default(), stats)
+    }
+
+    pub fn with_limits(
+        id: u32,
+        profile: PsProfile,
+        limits: JobLimits,
+        stats: Arc<ServerStats>,
+    ) -> Self {
+        Job { id, profile, limits, stats, state: None }
     }
 
     pub fn is_configured(&self) -> bool {
@@ -439,8 +571,8 @@ impl Job {
                     &[],
                 ),
             )],
-            WireKind::Vote => self.on_vote(h, frame.payload, from),
-            WireKind::Update => self.on_update(h, frame.payload, from),
+            WireKind::Vote => self.on_vote(h, frame.payload),
+            WireKind::Update => self.on_update(h, frame.payload),
             WireKind::Poll => self.on_poll(h, from),
             // Downlink kinds arriving at the server are stray reflections.
             _ => {
@@ -468,6 +600,13 @@ impl Job {
         if min_block > self.profile.memory_bytes || h.client >= spec.n_clients {
             return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
         }
+        // Bound host-side allocation from an untrusted spec: every live
+        // round pins counters/GIA/accumulator memory proportional to d,
+        // and rounds are created by unauthenticated data frames.
+        let worst = spec.host_bytes_per_round().saturating_mul(MAX_LIVE_ROUNDS);
+        if worst > self.limits.host_bytes {
+            return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
+        }
         if self.state.as_ref().is_some_and(|st| st.spec != spec) {
             return self.ack(h.client, h.round, JOIN_SPEC_MISMATCH, from);
         }
@@ -489,11 +628,12 @@ impl Job {
     /// rounds age out by round distance (a single frame with a huge round
     /// number must not wedge in-progress rounds); total live rounds are
     /// bounded by oldest-first eviction.
-    fn ensure_round(st: &mut JobState, round: u32, memory_bytes: usize) {
+    fn ensure_round(st: &mut JobState, round: u32, memory_bytes: usize, limits: &JobLimits) {
         if st.rounds.contains_key(&round) {
             return;
         }
-        st.rounds.insert(round, RoundState::new(&st.spec, memory_bytes));
+        let cap = spill_cap(limits, &st.spec);
+        st.rounds.insert(round, RoundState::new(&st.spec, memory_bytes, cap));
         let newest = *st.rounds.keys().next_back().unwrap();
         let cutoff = newest.saturating_sub(ROUND_HISTORY);
         let stale: Vec<u32> = st
@@ -517,22 +657,50 @@ impl Job {
         }
     }
 
-    fn on_vote(&mut self, h: Header, payload: &[u8], from: SocketAddr) -> Outgoing {
+    /// Reclaim register aggregators from in-progress rounds with no recent
+    /// traffic, so one abandoned (or merely stalled) round cannot hold the
+    /// register file hostage while other rounds spill forever. The round's
+    /// host state survives; if its clients return, their retransmissions
+    /// rebuild the reclaimed wave through a fresh aggregator.
+    fn reap_idle(st: &mut JobState, current: u32, limits: &JobLimits, stats: &ServerStats) {
+        let now = Instant::now();
+        let JobState { registers, rounds, .. } = st;
+        for (&r, rs) in rounds.iter_mut() {
+            if r == current || (rs.vote_agg.is_none() && rs.upd_agg.is_none()) {
+                continue;
+            }
+            if now.duration_since(rs.last_touch) < limits.idle_release_after {
+                continue;
+            }
+            if let Some(a) = rs.vote_agg.take() {
+                a.release(registers);
+                ServerStats::bump(&stats.idle_releases);
+            }
+            if let Some(a) = rs.upd_agg.take() {
+                a.release(registers);
+                ServerStats::bump(&stats.idle_releases);
+            }
+        }
+    }
+
+    fn on_vote(&mut self, h: Header, payload: &[u8]) -> Outgoing {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
             return Vec::new();
         }
-        st.clients.insert(h.client, from);
-        Self::ensure_round(st, h.round, self.profile.memory_bytes);
+        Self::reap_idle(st, h.round, &self.limits, &self.stats);
+        Self::ensure_round(st, h.round, self.profile.memory_bytes, &self.limits);
         let JobState { spec, registers, rounds, clients } = st;
         let spec = *spec;
         let rs = rounds.get_mut(&h.round).unwrap();
         if rs.gia.is_some() {
-            // The client missed the broadcast and is retransmitting votes:
-            // answer with the GIA instead of re-aggregating.
+            // Phase 1 already closed: drop the straggler silently. The
+            // client's own Poll (sent on every timeout) re-serves the GIA
+            // under the per-source budget — answering every retransmitted
+            // data frame with the full set would be a reflection vector.
             ServerStats::bump(&self.stats.duplicates);
-            return Self::to_one(from, Self::gia_frames(self.id, h.round, rs, &spec));
+            return Vec::new();
         }
         let done = rs.vote_packet(
             &spec,
@@ -552,13 +720,13 @@ impl Job {
         Self::to_all(clients, &frames)
     }
 
-    fn on_update(&mut self, h: Header, payload: &[u8], from: SocketAddr) -> Outgoing {
+    fn on_update(&mut self, h: Header, payload: &[u8]) -> Outgoing {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
             return Vec::new();
         }
-        st.clients.insert(h.client, from);
+        Self::reap_idle(st, h.round, &self.limits, &self.stats);
         let JobState { spec, registers, rounds, clients } = st;
         let spec = *spec;
         let Some(rs) = rounds.get_mut(&h.round) else {
@@ -574,8 +742,10 @@ impl Job {
             return Vec::new();
         }
         if rs.agg_done {
+            // Round already closed: as with late votes, recovery goes
+            // through the budgeted Poll path, not data-frame echoes.
             ServerStats::bump(&self.stats.duplicates);
-            return Self::to_one(from, Self::agg_frames(self.id, h.round, rs, &spec));
+            return Vec::new();
         }
         let done = rs.update_packet(
             &spec,
@@ -601,8 +771,7 @@ impl Job {
             ServerStats::bump(&self.stats.decode_errors);
             return Vec::new();
         }
-        st.clients.insert(h.client, from);
-        let JobState { spec, rounds, .. } = st;
+        let JobState { spec, rounds, clients, .. } = st;
         let spec = *spec;
         let not_ready = vec![(
             from,
@@ -614,12 +783,22 @@ impl Job {
         let Some(rs) = rounds.get_mut(&h.round) else {
             return not_ready;
         };
-        if h.aux == WireKind::Gia as u32 && rs.gia.is_some() {
+        let serving = (h.aux == WireKind::Gia as u32 && rs.gia.is_some())
+            || (h.aux == WireKind::Aggregate as u32 && rs.agg_done);
+        if !serving {
+            return not_ready;
+        }
+        // A poll's reply is the full multi-frame set — charge it to the
+        // per-source reflection budget. Addresses that came through Join
+        // keep a seat at the table and get extra budget headroom.
+        let registered = clients.values().any(|a| *a == from);
+        if !rs.charge_reserve(from, registered, &self.limits, &self.stats) {
+            return Vec::new();
+        }
+        if h.aux == WireKind::Gia as u32 {
             Self::to_one(from, Self::gia_frames(self.id, h.round, rs, &spec))
-        } else if h.aux == WireKind::Aggregate as u32 && rs.agg_done {
-            Self::to_one(from, Self::agg_frames(self.id, h.round, rs, &spec))
         } else {
-            not_ready
+            Self::to_one(from, Self::agg_frames(self.id, h.round, rs, &spec))
         }
     }
 
@@ -859,11 +1038,26 @@ mod tests {
         assert!(feed(&mut job, f0, addr(4000)).is_empty());
         assert!(feed(&mut job, f0, addr(4000)).is_empty());
         assert_eq!(job.stats.duplicates.load(std::sync::atomic::Ordering::Relaxed), 1);
-        // Completing the phase then retransmitting re-serves the GIA.
+        // Completing the phase then retransmitting is dropped silently —
+        // a straggler recovers the GIA through its Poll, not data echoes.
         let f1 = &vote_frames(9, 1, 0, &v, &spec)[0];
         assert!(!feed(&mut job, f1, addr(4001)).is_empty());
-        let replay = feed(&mut job, f0, addr(4000));
-        assert!(!replay.is_empty(), "late vote should re-serve the GIA");
+        assert!(feed(&mut job, f0, addr(4000)).is_empty());
+        let poll = encode_frame(
+            &Header {
+                kind: WireKind::Poll,
+                client: 0,
+                job: 9,
+                round: 0,
+                block: 0,
+                n_blocks: 0,
+                elems: 0,
+                aux: WireKind::Gia as u32,
+            },
+            &[],
+        );
+        let replay = feed(&mut job, &poll, addr(4000));
+        assert!(!replay.is_empty(), "poll should re-serve the GIA");
         assert_eq!(decode_frame(&replay[0].1).unwrap().header.kind, WireKind::Gia);
         // Counters only saw each contribution once.
         assert_eq!(job.round_gia(0).unwrap().count_ones(), 3);
@@ -918,5 +1112,145 @@ mod tests {
         }
         let out = feed(&mut job, &poll, addr(4000));
         assert_eq!(decode_frame(&out[0].1).unwrap().header.kind, WireKind::Gia);
+    }
+
+    fn stat(counter: &std::sync::atomic::AtomicU64) -> u64 {
+        counter.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    #[test]
+    fn join_rejects_specs_exceeding_host_budget() {
+        // d = u32::MAX would pin gigabytes of host counters per live
+        // round; the default budget refuses the spec outright.
+        let mut job = Job::new(3, profile(1 << 20), Arc::new(ServerStats::default()));
+        let huge = JobSpec { d: u32::MAX, n_clients: 2, threshold_a: 1, payload_budget: 256 };
+        let out = feed(&mut job, &join_frame(3, 0, &huge), addr(4100));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
+        assert!(!job.is_configured());
+
+        // A tighter configured budget rejects a spec the default accepts.
+        let spec = JobSpec { d: 10_000, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let limits = JobLimits { host_bytes: 1 << 10, ..JobLimits::default() };
+        let mut tight =
+            Job::with_limits(4, profile(1 << 20), limits, Arc::new(ServerStats::default()));
+        let out = feed(&mut tight, &join_frame(4, 0, &spec), addr(4101));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
+        let mut roomy = Job::new(5, profile(1 << 20), Arc::new(ServerStats::default()));
+        let out = feed(&mut roomy, &join_frame(5, 0, &spec), addr(4102));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+    }
+
+    #[test]
+    fn spill_is_deduped_and_capped() {
+        // One resident 64-dim block (200 B of registers), a 40-block vote
+        // space, and a spill limit that clamps to MIN_SPILL_ENTRIES = 16.
+        let spec = JobSpec { d: 64 * 40, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let stats = Arc::new(ServerStats::default());
+        let limits = JobLimits { spill_bytes: 1, ..JobLimits::default() };
+        let mut job = Job::with_limits(9, profile(200), limits, Arc::clone(&stats));
+        for c in 0..spec.n_clients {
+            feed(&mut job, &join_frame(9, c, &spec), addr(4000 + c));
+        }
+        let v = BitVec::from_indices(spec.d as usize, &[1]);
+        let frames = vote_frames(9, 0, 0, &v, &spec);
+        // Blocks 1..=20 are all beyond the (stalled-at-0) window: the
+        // first 16 spill, the rest are dropped at the cap.
+        for f in &frames[1..=20] {
+            assert!(feed(&mut job, f, addr(4000)).is_empty());
+        }
+        assert_eq!(stat(&stats.spilled), 16);
+        assert_eq!(stat(&stats.spill_dropped), 4);
+        // Retransmitting a spilled block is deduped, not re-buffered.
+        feed(&mut job, &frames[1], addr(4000));
+        assert_eq!(stat(&stats.spilled), 16);
+        assert_eq!(stat(&stats.duplicates), 1);
+    }
+
+    #[test]
+    fn reserve_budget_bounds_reflection() {
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let stats = Arc::new(ServerStats::default());
+        let limits = JobLimits { reserve_budget: 2, ..JobLimits::default() };
+        let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
+        for c in 0..spec.n_clients {
+            feed(&mut job, &join_frame(9, c, &spec), addr(4000 + c));
+        }
+        let v = BitVec::from_indices(64, &[1, 2]);
+        for c in 0..2u16 {
+            feed(&mut job, &vote_frames(9, c, 0, &v, &spec)[0], addr(4000 + c));
+        }
+        assert!(job.round_gia(0).is_some());
+        // Retransmitted data frames after completion reflect nothing.
+        let replay = &vote_frames(9, 0, 0, &v, &spec)[0];
+        assert!(feed(&mut job, replay, addr(6666)).is_empty());
+        let poll_from = |job: &mut Job, source: SocketAddr| {
+            let poll = encode_frame(
+                &Header {
+                    kind: WireKind::Poll,
+                    client: 0,
+                    job: 9,
+                    round: 0,
+                    block: 0,
+                    n_blocks: 0,
+                    elems: 0,
+                    aux: WireKind::Gia as u32,
+                },
+                &[],
+            );
+            feed(job, &poll, source)
+        };
+        // A spoofed source is served the full GIA set only
+        // `reserve_budget` times, then nothing.
+        let spoof = addr(6666);
+        assert!(!poll_from(&mut job, spoof).is_empty());
+        assert!(!poll_from(&mut job, spoof).is_empty());
+        assert!(poll_from(&mut job, spoof).is_empty());
+        assert!(poll_from(&mut job, spoof).is_empty());
+        assert_eq!(stat(&stats.reserves_suppressed), 2);
+        // Filling the source table with spoofed addresses must not lock
+        // out the Join-registered clients.
+        for port in 0..(MAX_RESERVE_SOURCES as u16 + 8) {
+            poll_from(&mut job, addr(10_000 + port));
+        }
+        assert!(stat(&stats.reserves_suppressed) > 2, "table never filled");
+        assert!(!poll_from(&mut job, addr(4000)).is_empty());
+        assert!(!poll_from(&mut job, addr(4001)).is_empty());
+    }
+
+    #[test]
+    fn idle_rounds_release_their_registers() {
+        // 200 B of registers hold exactly one 64-dim vote wave, so two
+        // in-progress rounds contend for the whole register file.
+        let spec = JobSpec { d: 100, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let stats = Arc::new(ServerStats::default());
+        let limits = JobLimits { idle_release_after: Duration::ZERO, ..JobLimits::default() };
+        let mut job = Job::with_limits(9, profile(200), limits, Arc::clone(&stats));
+        for c in 0..spec.n_clients {
+            feed(&mut job, &join_frame(9, c, &spec), addr(4000 + c));
+        }
+        let votes: Vec<BitVec> = (0..2).map(|c| BitVec::from_indices(100, &[c, 40, 80])).collect();
+        let mk = |c: u16, round: u32| vote_frames(9, c, round, &votes[c as usize], &spec);
+
+        // Round 0: one contribution allocates the only wave, then stalls.
+        feed(&mut job, &mk(0, 0)[0], addr(4000));
+        assert!(job.state.as_ref().unwrap().registers.used() > 0);
+        // Round 1 traffic reclaims round 0's idle aggregator instead of
+        // spilling behind it forever, and completes normally.
+        feed(&mut job, &mk(0, 1)[0], addr(4000));
+        assert!(stat(&stats.idle_releases) >= 1);
+        feed(&mut job, &mk(0, 1)[1], addr(4000));
+        feed(&mut job, &mk(1, 1)[0], addr(4001));
+        let out = feed(&mut job, &mk(1, 1)[1], addr(4001));
+        assert!(!out.is_empty(), "round 1 should finish phase 1");
+        assert_eq!(job.round_gia(1), Some(&deduce_gia(&votes, 2)));
+
+        // Round 0 stays live: retransmission rebuilds the reclaimed wave
+        // from scratch and the round still aggregates correctly.
+        for c in 0..2u16 {
+            for f in &mk(c, 0) {
+                feed(&mut job, f, addr(4000 + c));
+            }
+        }
+        assert_eq!(job.round_gia(0), Some(&deduce_gia(&votes, 2)));
     }
 }

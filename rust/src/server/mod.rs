@@ -23,7 +23,7 @@ pub mod daemon;
 pub mod job;
 
 pub use daemon::{serve, ServeOptions, ServerHandle};
-pub use job::{Job, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB};
+pub use job::{Job, JobLimits, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -34,9 +34,17 @@ pub struct ServerStats {
     pub decode_errors: AtomicU64,
     pub duplicates: AtomicU64,
     pub spilled: AtomicU64,
+    /// Spill entries dropped at the per-round cap (repaired by client
+    /// retransmission once the wave advances).
+    pub spill_dropped: AtomicU64,
     pub waves: AtomicU64,
     pub overflow_lanes: AtomicU64,
     pub register_stalls: AtomicU64,
+    /// Full GIA/aggregate re-serves refused by the per-source budget
+    /// (UDP reflection damping).
+    pub reserves_suppressed: AtomicU64,
+    /// Register aggregators reclaimed from rounds with no recent traffic.
+    pub idle_releases: AtomicU64,
     pub joins: AtomicU64,
     pub jobs_created: AtomicU64,
     /// Datagrams dropped because the per-daemon job cap was reached.
@@ -51,9 +59,12 @@ pub struct StatsSnapshot {
     pub decode_errors: u64,
     pub duplicates: u64,
     pub spilled: u64,
+    pub spill_dropped: u64,
     pub waves: u64,
     pub overflow_lanes: u64,
     pub register_stalls: u64,
+    pub reserves_suppressed: u64,
+    pub idle_releases: u64,
     pub joins: u64,
     pub jobs_created: u64,
     pub jobs_rejected: u64,
@@ -77,9 +88,12 @@ impl ServerStats {
             decode_errors: self.decode_errors.load(Ordering::Relaxed),
             duplicates: self.duplicates.load(Ordering::Relaxed),
             spilled: self.spilled.load(Ordering::Relaxed),
+            spill_dropped: self.spill_dropped.load(Ordering::Relaxed),
             waves: self.waves.load(Ordering::Relaxed),
             overflow_lanes: self.overflow_lanes.load(Ordering::Relaxed),
             register_stalls: self.register_stalls.load(Ordering::Relaxed),
+            reserves_suppressed: self.reserves_suppressed.load(Ordering::Relaxed),
+            idle_releases: self.idle_releases.load(Ordering::Relaxed),
             joins: self.joins.load(Ordering::Relaxed),
             jobs_created: self.jobs_created.load(Ordering::Relaxed),
             jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),

@@ -109,6 +109,16 @@ impl JobSpec {
     pub fn update_n_blocks(&self, k_s: usize) -> usize {
         k_s.div_ceil(self.update_block_lanes()).max(1)
     }
+
+    /// Worst-case host bytes one round of this job pins outside the
+    /// register file: u16 vote counters (2d), the thresholded GIA bitmap
+    /// plus its Golomb stream (≲ d/2 together for any density), and the
+    /// i32 update accumulator at k_S = d (4d). Spill memory is bounded
+    /// separately by the server's per-round spill cap.
+    pub fn host_bytes_per_round(&self) -> usize {
+        let d = self.d as usize;
+        2 * d + d / 2 + 4 * d
+    }
 }
 
 /// Split a full d-bit vote bitmap into per-block byte payloads of at most
@@ -231,6 +241,8 @@ mod tests {
         assert_eq!(spec.update_block_lanes(), 2);
         assert_eq!(spec.update_n_blocks(0), 1);
         assert_eq!(spec.update_n_blocks(5), 3);
+        // 2d counters + d/2 GIA forms + 4d accumulator.
+        assert_eq!(spec.host_bytes_per_round(), 650);
     }
 
     #[test]
