@@ -7,7 +7,9 @@
 //! `Poll`) on timeout; the server's scoreboards make retransmission
 //! idempotent, so the driver is safe on lossy links — the `send_loss`
 //! option injects exactly the lossy-uplink behaviour `net::trace`
-//! scenarios model in simulation, making them runnable end-to-end.
+//! scenarios model in simulation, making them runnable end-to-end, and
+//! the `chaos` option interposes a full [`crate::net::chaos`] proxy
+//! (loss, duplication, reordering, corruption — both directions).
 
 use std::net::UdpSocket;
 use std::time::Duration;
@@ -16,12 +18,17 @@ use anyhow::{bail, Context, Result};
 
 use crate::client::protocol;
 use crate::compress::{self, golomb};
+use crate::net::chaos::{chaos_proxy, ChaosConfig, ChaosHandle, ChaosProxyOptions, ChaosSnapshot};
 use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
 use crate::util::{BitVec, Rng};
 use crate::wire::{
     decode_frame, decode_lanes, encode_frame, update_chunks, vote_chunks, ChunkAssembler,
     Header, JobSpec, WireKind, DEFAULT_PAYLOAD_BUDGET,
 };
+
+/// Broadcast frames of the *other* phase kept aside during a wait (see
+/// [`FediacClient::exchange`]); bounds memory against a babbling server.
+const PENDING_CAP: usize = 256;
 
 /// Everything a client needs to participate in one job.
 #[derive(Debug, Clone)]
@@ -52,6 +59,11 @@ pub struct ClientOptions {
     /// Probability of dropping an outgoing datagram (lossy-uplink
     /// emulation for tests; 0.0 = reliable).
     pub send_loss: f64,
+    /// Run this client through an in-process chaos proxy: loss,
+    /// duplication, bounded reordering and bit corruption in either
+    /// direction ([`crate::net::chaos`]). `None` = talk to the server
+    /// directly.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl ClientOptions {
@@ -70,6 +82,7 @@ impl ClientOptions {
             timeout: Duration::from_millis(200),
             max_retries: 50,
             send_loss: 0.0,
+            chaos: None,
         }
     }
 
@@ -93,6 +106,12 @@ pub struct ClientStats {
     pub dropped_sends: u64,
     /// Poll frames sent.
     pub polls: u64,
+    /// Mid-round re-registrations after a `JOIN_UNKNOWN_JOB` (e.g. the
+    /// server restarted or evicted the job).
+    pub rejoins: u64,
+    /// Broadcast streams restarted because interleaved frames disagreed
+    /// on geometry (`n_blocks`) or the aux word.
+    pub stream_resets: u64,
 }
 
 /// Result of one completed FediAC round over the wire.
@@ -128,6 +147,13 @@ pub struct FediacClient {
     socket: UdpSocket,
     opts: ClientOptions,
     loss_rng: Rng,
+    /// Broadcast frames of this round's other phase, captured while
+    /// waiting (an empty-consensus round multicasts GIA and aggregate
+    /// back-to-back; reordering can also deliver them interleaved).
+    pending: Vec<(Header, Vec<u8>)>,
+    /// Keeps the per-client chaos proxy (if any) alive for the client's
+    /// lifetime.
+    chaos: Option<ChaosHandle>,
     pub stats: ClientStats,
 }
 
@@ -156,17 +182,46 @@ impl FediacClient {
             opts.bits_b,
             opts.n_clients
         );
+        // With chaos configured, interpose an in-process proxy between
+        // this client and the server; the handle (and its threads) lives
+        // as long as the client.
+        let mut target = opts.server.clone();
+        let chaos = match opts.chaos {
+            Some(config) => {
+                let handle = chaos_proxy(&ChaosProxyOptions {
+                    listen: "127.0.0.1:0".to_string(),
+                    upstream: target.clone(),
+                    config,
+                })
+                .context("starting chaos proxy")?;
+                target = handle.local_addr().to_string();
+                Some(handle)
+            }
+            None => None,
+        };
         let socket = UdpSocket::bind("0.0.0.0:0").context("binding client socket")?;
-        socket.connect(&opts.server).with_context(|| format!("connecting to {}", opts.server))?;
+        socket.connect(&target).with_context(|| format!("connecting to {target}"))?;
         socket.set_read_timeout(Some(opts.timeout))?;
         let loss_rng = Rng::new(opts.backend_seed ^ (opts.client_id as u64) << 40 ^ 0x10_55);
-        let mut client = FediacClient { socket, opts, loss_rng, stats: ClientStats::default() };
+        let mut client = FediacClient {
+            socket,
+            opts,
+            loss_rng,
+            pending: Vec::new(),
+            chaos,
+            stats: ClientStats::default(),
+        };
         client.join()?;
         Ok(client)
     }
 
     pub fn options(&self) -> &ClientOptions {
         &self.opts
+    }
+
+    /// Chaos-proxy counters, when this client runs behind one.
+    pub fn chaos_snapshot(&self) -> Option<ChaosSnapshot> {
+        self.chaos.as_ref().map(|h| h.snapshot())
     }
 
     fn send_datagram(&mut self, bytes: &[u8]) {
@@ -177,13 +232,20 @@ impl FediacClient {
         let _ = self.socket.send(bytes);
     }
 
-    /// Register with the server (idempotent; re-run on JOIN_UNKNOWN_JOB).
-    fn join(&mut self) -> Result<()> {
-        let spec = self.opts.spec();
-        let frame = encode_frame(
+    /// The (idempotent) registration frame for this client's job.
+    fn join_frame(&self) -> Vec<u8> {
+        encode_frame(
             &Header::control(WireKind::Join, self.opts.job, self.opts.client_id, 0, 0),
-            &spec.encode(),
-        );
+            &self.opts.spec().encode(),
+        )
+    }
+
+    /// Initial registration with the server. Mid-round re-registration
+    /// does NOT use this loop — `exchange` re-joins inline so broadcast
+    /// frames of the awaited round keep counting while the Join is in
+    /// flight.
+    fn join(&mut self) -> Result<()> {
+        let frame = self.join_frame();
         let mut buf = vec![0u8; 2048];
         let mut timeouts = 0usize;
         self.send_datagram(&frame);
@@ -256,15 +318,48 @@ impl FediacClient {
             .collect()
     }
 
+    /// Largest broadcast block count this job could legitimately need:
+    /// the aggregate is at most 4·d lane bytes and the Golomb GIA stays
+    /// under 2 bits per dimension plus its header for any density the
+    /// server-side Rice parameter produces. A frame declaring more
+    /// blocks is forged or stale — sizing the assembler from it would
+    /// pin unbounded memory.
+    fn max_broadcast_blocks(&self) -> usize {
+        (16 + 4 * self.opts.d).div_ceil(self.opts.payload_budget).max(1) + 1
+    }
+
     /// Upload `frames`, then wait for the complete `want` broadcast of
     /// `round`, retransmitting on every timeout. Returns (reassembled
     /// payload bytes, the broadcast's aux word).
+    ///
+    /// Robustness in this loop (all chaos-matrix-proven):
+    /// * mixed streams — a frame disagreeing with the in-progress
+    ///   assembly on `n_blocks` or `aux` restarts the assembler instead
+    ///   of completing with garbage;
+    /// * re-join — a `JOIN_UNKNOWN_JOB` ack triggers an *inline* Join so
+    ///   wanted broadcast frames arriving meanwhile still count;
+    /// * phase overlap — broadcast frames of this round's other phase
+    ///   are stashed in `pending` for the next wait instead of being
+    ///   dropped into a retransmission cycle.
     fn exchange(&mut self, round: u32, frames: &[Vec<u8>], want: WireKind) -> Result<(Vec<u8>, u32)> {
+        let max_blocks = self.max_broadcast_blocks();
+        let mut asm: Option<(ChunkAssembler, u32)> = None;
+        // Drain stashed frames from the previous wait of this round.
+        self.pending.retain(|(h, _)| h.round == round);
+        let (mine, keep): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.pending).into_iter().partition(|(h, _)| h.kind == want);
+        self.pending = keep;
+        for (h, payload) in mine {
+            if let Some(done) = ingest_chunk(&mut asm, max_blocks, &h, &payload, &mut self.stats)
+            {
+                return Ok(done);
+            }
+        }
         for f in frames {
             self.send_datagram(f);
         }
-        let mut asm: Option<ChunkAssembler> = None;
-        let mut aux = 0u32;
+        let join_frame = self.join_frame();
+        let mut rejoining = false;
         let mut buf = vec![0u8; 65536];
         let mut timeouts = 0usize;
         loop {
@@ -276,19 +371,49 @@ impl FediacClient {
                         continue;
                     }
                     if h.kind == want && h.round == round {
-                        let a = asm
-                            .get_or_insert_with(|| ChunkAssembler::new(h.n_blocks as usize));
-                        aux = h.aux;
-                        a.insert(h.block as usize, frame.payload);
-                        if a.is_complete() {
-                            return Ok((asm.take().unwrap().assemble(), aux));
+                        if let Some(done) =
+                            ingest_chunk(&mut asm, max_blocks, &h, frame.payload, &mut self.stats)
+                        {
+                            return Ok(done);
                         }
-                    } else if h.kind == WireKind::JoinAck && h.aux == JOIN_UNKNOWN_JOB {
-                        // Server lost (or never had) our registration.
-                        self.join()?;
-                        self.stats.retransmissions += frames.len() as u64;
-                        for f in frames {
-                            self.send_datagram(f);
+                    } else if (h.kind == WireKind::Gia || h.kind == WireKind::Aggregate)
+                        && h.round == round
+                    {
+                        // The other phase's broadcast for this round:
+                        // keep it for the next exchange.
+                        if self.pending.len() < PENDING_CAP {
+                            self.pending.push((h, frame.payload.to_vec()));
+                        }
+                    } else if h.kind == WireKind::JoinAck {
+                        match h.aux {
+                            JOIN_UNKNOWN_JOB => {
+                                // Server lost (or never had) our
+                                // registration; re-join without leaving
+                                // this receive loop.
+                                if !rejoining {
+                                    rejoining = true;
+                                    self.stats.rejoins += 1;
+                                    self.send_datagram(&join_frame);
+                                }
+                            }
+                            JOIN_OK if rejoining => {
+                                // Re-registered. The server may have lost
+                                // every round state too — re-upload this
+                                // phase's frames.
+                                rejoining = false;
+                                self.stats.retransmissions += frames.len() as u64;
+                                for f in frames {
+                                    self.send_datagram(f);
+                                }
+                            }
+                            JOIN_OK => {} // duplicate ack of an earlier join
+                            status if rejoining => {
+                                bail!("server refused re-join: status {status}")
+                            }
+                            // Unsolicited non-OK ack (spoof or stale):
+                            // only a refusal of *our* in-flight re-join
+                            // may kill the round.
+                            _ => {}
                         }
                     }
                     // NotReady / stale rounds / other phases: keep waiting.
@@ -301,6 +426,11 @@ impl FediacClient {
                              after {timeouts} timeouts",
                             self.opts.client_id
                         );
+                    }
+                    if rejoining {
+                        // The in-flight Join (or its ack) was lost.
+                        self.stats.retransmissions += 1;
+                        self.send_datagram(&join_frame);
                     }
                     self.stats.retransmissions += frames.len() as u64;
                     for f in frames {
@@ -346,10 +476,14 @@ impl FediacClient {
         let local_max = compress::max_abs(update);
         let vote_frames = self.vote_frames(round_u, &votes, local_max);
         let (gia_bytes, gia_aux) = self.exchange(round_u, &vote_frames, WireKind::Gia)?;
-        let gia = golomb::decode(&gia_bytes)
+        let gia = golomb::decode_with_limit(&gia_bytes, self.opts.d)
             .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
         anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
         let global_max = f32::from_bits(gia_aux);
+        anyhow::ensure!(
+            global_max.is_finite() && global_max > 0.0,
+            "GIA broadcast carried a non-finite global max ({global_max})"
+        );
 
         // Phase 2: quantise against the GIA, upload aligned lanes, receive
         // the aggregate.
@@ -364,24 +498,22 @@ impl FediacClient {
         );
         let gia_indices: Vec<usize> = gia.iter_ones().collect();
         let k_s = gia_indices.len();
-        let (aggregate, delta) = if k_s == 0 {
-            (Vec::new(), Vec::new())
-        } else {
-            let selected: Vec<i32> = gia_indices.iter().map(|&g| q[g]).collect();
-            let update_frames = self.update_frames(round_u, &selected, f);
-            let (agg_bytes, agg_aux) =
-                self.exchange(round_u, &update_frames, WireKind::Aggregate)?;
-            let lanes = decode_lanes(&agg_bytes)
-                .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
-            anyhow::ensure!(
-                lanes.len() == k_s && agg_aux as usize == k_s,
-                "aggregate has {} lanes, expected k_S = {k_s}",
-                lanes.len()
-            );
-            let delta =
-                compress::dequantize_aggregate(&lanes, self.opts.n_clients as usize, f);
-            (lanes, delta)
-        };
+        // Phase 2 runs even when the consensus is empty: `update_chunks`
+        // emits one zero-lane block as the completion signal, and the
+        // (empty) aggregate wait confirms the server closed the round.
+        // Skipping it would leave the two sides disagreeing on whether
+        // the round happened at all.
+        let selected: Vec<i32> = gia_indices.iter().map(|&g| q[g]).collect();
+        let update_frames = self.update_frames(round_u, &selected, f);
+        let (agg_bytes, agg_aux) = self.exchange(round_u, &update_frames, WireKind::Aggregate)?;
+        let aggregate = decode_lanes(&agg_bytes)
+            .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
+        anyhow::ensure!(
+            aggregate.len() == k_s && agg_aux as usize == k_s,
+            "aggregate has {} lanes, expected k_S = {k_s}",
+            aggregate.len()
+        );
+        let delta = compress::dequantize_aggregate(&aggregate, self.opts.n_clients as usize, f);
 
         Ok(RoundOutcome {
             gia,
@@ -400,16 +532,112 @@ fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
+/// Feed one broadcast chunk into the (lazily created) assembler. Frames
+/// are cross-checked against the stream in progress: a different
+/// `n_blocks` or aux word means two broadcasts are interleaved (a stale
+/// or truncated-spec stream mixed with the real one) — the assembler
+/// restarts from the newer frame instead of completing with chunks from
+/// both. Implausibly large geometry is ignored outright. Returns the
+/// reassembled payload and aux once complete.
+fn ingest_chunk(
+    asm: &mut Option<(ChunkAssembler, u32)>,
+    max_blocks: usize,
+    h: &Header,
+    payload: &[u8],
+    stats: &mut ClientStats,
+) -> Option<(Vec<u8>, u32)> {
+    let n_blocks = h.n_blocks as usize;
+    if n_blocks == 0 || n_blocks > max_blocks {
+        return None;
+    }
+    if asm.as_ref().is_some_and(|(a, aux)| a.n_blocks() != n_blocks || *aux != h.aux) {
+        stats.stream_resets += 1;
+        *asm = None;
+    }
+    let (a, _) = asm.get_or_insert_with(|| (ChunkAssembler::new(n_blocks), h.aux));
+    a.insert(h.block as usize, payload);
+    if a.is_complete() {
+        let (a, aux) = asm.take().expect("assembler just used");
+        Some((a.assemble(), aux))
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::chaos::ChaosDirection;
     use crate::server::{serve, ServeOptions};
+    use crate::wire::byte_chunks;
 
     #[test]
     fn options_produce_valid_spec() {
         let opts = ClientOptions::new("127.0.0.1:1", 3, 0, 1000, 4);
         assert!(opts.spec().validate().is_ok());
         assert_eq!(opts.k, 50);
+    }
+
+    fn bcast_header(n_blocks: u32, block: u32, aux: u32) -> Header {
+        Header {
+            kind: WireKind::Gia,
+            client: u16::MAX,
+            job: 1,
+            round: 1,
+            block,
+            n_blocks,
+            elems: 0,
+            aux,
+        }
+    }
+
+    #[test]
+    fn ingest_chunk_resets_on_mixed_streams() {
+        let mut stats = ClientStats::default();
+        let data: Vec<u8> = (0..=89u8).collect();
+        let chunks = byte_chunks(&data, 30); // 3 chunks
+        let mut asm: Option<(ChunkAssembler, u32)> = None;
+
+        // Two chunks of the real stream…
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(3, 0, 7), &chunks[0], &mut stats)
+            .is_none());
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(3, 2, 7), &chunks[2], &mut stats)
+            .is_none());
+        // …then a stale broadcast with different geometry interleaves:
+        // the assembler must restart, not mix chunks from both streams.
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(2, 0, 7), &[1, 2], &mut stats)
+            .is_none());
+        assert_eq!(stats.stream_resets, 1);
+        // A frame agreeing on geometry but not on aux also resets.
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(2, 1, 9), &[3, 4], &mut stats)
+            .is_none());
+        assert_eq!(stats.stream_resets, 2);
+        // The real stream, uninterrupted, completes with the right bytes
+        // (nothing from the interleaved impostors survives).
+        for (i, c) in chunks.iter().enumerate() {
+            if let Some(done) =
+                ingest_chunk(&mut asm, 100, &bcast_header(3, i as u32, 7), c, &mut stats)
+            {
+                assert_eq!(i, 2, "completed early");
+                assert_eq!(done, (data.clone(), 7));
+                assert_eq!(stats.stream_resets, 3);
+                return;
+            }
+        }
+        panic!("real stream never completed");
+    }
+
+    #[test]
+    fn ingest_chunk_ignores_implausible_geometry() {
+        let mut stats = ClientStats::default();
+        let mut asm: Option<(ChunkAssembler, u32)> = None;
+        // A forged frame declaring 2^31 blocks must not size the
+        // assembler (that would be a multi-gigabyte allocation).
+        let h = bcast_header(1 << 31, 0, 0);
+        assert!(ingest_chunk(&mut asm, 64, &h, &[], &mut stats).is_none());
+        assert!(asm.is_none());
+        assert!(ingest_chunk(&mut asm, 64, &bcast_header(0, 0, 0), &[], &mut stats).is_none());
+        assert!(asm.is_none());
     }
 
     #[test]
@@ -436,6 +664,28 @@ mod tests {
         let want: Vec<i32> = out.gia_indices.iter().map(|&g| q[g]).collect();
         assert_eq!(out.aggregate, want);
         assert_eq!(out.delta.len(), out.aggregate.len());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn chaos_knob_runs_the_client_behind_a_proxy() {
+        let handle = serve(&ServeOptions::default()).unwrap();
+        let mut opts = ClientOptions::new(handle.local_addr().to_string(), 78, 0, 200, 1);
+        opts.threshold_a = 1;
+        opts.payload_budget = 16;
+        opts.backend_seed = 9;
+        opts.timeout = Duration::from_millis(100);
+        opts.chaos = Some(ChaosConfig::symmetric(3, ChaosDirection::lossy(0.15, 0.1, 0.2)));
+        let mut client = FediacClient::connect(opts).unwrap();
+
+        let update: Vec<f32> = (0..200).map(|i| ((i as f32) * 0.2).cos() * 0.01).collect();
+        let out = client.run_round(1, &update).unwrap();
+        let votes = protocol::client_vote(&update, client.options().k, 9, 1, 0);
+        assert_eq!(out.gia, votes, "chaos changed the consensus");
+
+        let snap = client.chaos_snapshot().expect("proxy attached");
+        assert_eq!(snap.flows, 1);
+        assert!(snap.up.forwarded > 0 && snap.down.forwarded > 0);
         handle.shutdown();
     }
 }

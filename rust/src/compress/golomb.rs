@@ -97,13 +97,29 @@ pub fn encode(bv: &BitVec) -> Vec<u8> {
     w.finish()
 }
 
-/// Decode; None on malformed input.
+/// Decode; None on malformed input. The declared dimension is untrusted
+/// input — callers that know the expected model dimension should prefer
+/// [`decode_with_limit`], which also bounds the output allocation.
 pub fn decode(bytes: &[u8]) -> Option<BitVec> {
+    decode_with_limit(bytes, u32::MAX as usize)
+}
+
+/// Decode with an upper bound on the declared dimension. A mutated or
+/// forged stream can claim any 32-bit `d`; without a cap that is a
+/// 512 MB allocation per call. The wire client passes its own `d`, so a
+/// stream that disagrees is rejected before any allocation.
+pub fn decode_with_limit(bytes: &[u8], max_d: usize) -> Option<BitVec> {
     let mut rd = BitReader { bytes, pos: 0 };
     let d = rd.read_bits(32)? as usize;
     let count = rd.read_bits(32)? as usize;
     let r = rd.read_bits(6)? as u32;
-    if count > d {
+    if d > max_d || count > d {
+        return None;
+    }
+    // Every coded index costs at least one bit, so `count` beyond the
+    // remaining input length is malformed — and, pre-check, a forged
+    // count near 2^32 would otherwise spin this loop for minutes.
+    if count > bytes.len().saturating_mul(8) {
         return None;
     }
     let mut bv = BitVec::zeros(d);
@@ -120,7 +136,19 @@ pub fn decode(bytes: &[u8]) -> Option<BitVec> {
             }
         }
         let rem = rd.read_bits(r)?;
+        // `q << r` would silently discard high bits for q ≥ 2^(64−r),
+        // letting a forged stream alias an astronomical gap down to an
+        // attacker-chosen small one — reject before shifting.
+        if r > 0 && q >= 1u64 << (64 - r) {
+            return None;
+        }
         let gap = (q << r) | rem;
+        // Any legal gap is < d (indices are strictly increasing below d);
+        // checking before the index arithmetic also keeps `prev + 1 + gap`
+        // from overflowing on adversarial (q, r) combinations.
+        if gap >= d as u64 {
+            return None;
+        }
         let idx = match prev {
             None => gap as usize,
             Some(p) => p + 1 + gap as usize,
@@ -215,5 +243,70 @@ mod tests {
         assert!(decode(&[]).is_none());
         let enc = encode(&BitVec::from_indices(100, &[3, 50]));
         assert!(decode(&enc[..enc.len() - 1]).is_none());
+    }
+
+    /// Craft a raw stream: header (d, count, r) + explicit payload bits.
+    fn craft(d: u64, count: u64, r: u32, body: &[bool]) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        w.push_bits(d, 32);
+        w.push_bits(count, 32);
+        w.push_bits(r as u64, 6);
+        for &b in body {
+            w.push_bit(b);
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn forged_count_rejected_without_spinning() {
+        // count ≈ 2^32 with a 9-byte stream: more indices than input bits
+        // can possibly encode. Pre-hardening this looped 4 billion times.
+        let evil = craft(u32::MAX as u64, u32::MAX as u64, 0, &[]);
+        assert!(decode(&evil).is_none());
+        assert!(decode_with_limit(&evil, 1 << 20).is_none());
+    }
+
+    #[test]
+    fn adversarial_gap_rejected_without_overflow() {
+        // r = 63 with an all-ones remainder makes the second gap ≈ 2^64,
+        // which used to overflow `prev + 1 + gap` (a debug-build panic).
+        let mut body = vec![false]; // first index: q = 0 …
+        body.extend(vec![false; 63]); // … remainder 0 → idx 0
+        body.push(true); // second index: q = 1 …
+        body.push(false);
+        body.extend(vec![true; 63]); // … remainder 2^63 − 1
+        let evil = craft(1 << 31, 2, 63, &body);
+        assert!(decode(&evil).is_none());
+    }
+
+    #[test]
+    fn aliased_gap_rejected_not_misdecoded() {
+        // r = 63, q = 2: `q << r` wraps to 0, so pre-hardening the gap
+        // aliased down to the attacker-chosen remainder and the stream
+        // decoded to a *valid-looking* wrong bitmap. It must be rejected.
+        let mut body = vec![true, true, false]; // q = 2
+        body.extend(vec![false; 57]);
+        body.extend([false, false, false, true, false, true]); // rem = 5
+        let evil = craft(1 << 31, 1, 63, &body);
+        assert!(decode(&evil).is_none(), "wrapped quotient decoded");
+    }
+
+    #[test]
+    fn dimension_limit_bounds_allocation() {
+        // A stream claiming d = 2^30 is refused before the 128 MB
+        // allocation when the caller knows its model dimension.
+        let evil = craft(1 << 30, 0, 0, &[]);
+        assert!(decode_with_limit(&evil, 100_000).is_none());
+        // The same stream with a plausible d decodes fine.
+        let ok = craft(64, 0, 0, &[]);
+        assert_eq!(decode_with_limit(&ok, 100_000).unwrap(), BitVec::zeros(64));
+    }
+
+    #[test]
+    fn decode_with_limit_accepts_legit_streams_at_the_limit() {
+        let bv = BitVec::from_indices(1000, &[0, 1, 17, 999]);
+        let enc = encode(&bv);
+        assert_eq!(decode_with_limit(&enc, 1000).unwrap(), bv);
+        assert!(decode_with_limit(&enc, 999).is_none());
     }
 }

@@ -11,10 +11,17 @@
 //! fediac fig4   [--partition iid|dirichlet]
 //! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
 //! fediac serve  [--bind 0.0.0.0:7177] [--ps high|low] [--memory BYTES]
-//!               [--host-bytes BYTES]
+//!               [--host-bytes BYTES] [--down-drop 0.0] [--down-dup 0.0]
+//!               [--down-reorder 0.0] [--down-corrupt 0.0] [--chaos-seed 0]
 //! fediac client [--server host:port] [--job 1] [--client-id 0]
 //!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
 //!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
+//!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
+//!               [--chaos-corrupt 0.0] [--chaos-seed 1]
+//! fediac chaos  [--listen 127.0.0.1:7178] [--upstream 127.0.0.1:7177]
+//!               [--seed 1] [--up-drop 0.0] [--up-dup 0.0] [--up-reorder 0.0]
+//!               [--up-corrupt 0.0] [--up-depth 4] [--up-hold-ms 40]
+//!               [--down-*…] [--stats-every 10]
 //! ```
 //!
 //! All experiment output goes to stdout as TSV blocks; CSVs land in
@@ -257,6 +264,21 @@ fn cmd_theory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Read one chaos direction's knobs from `--<prefix>-*` options.
+fn chaos_direction_from(args: &Args, prefix: &str) -> Result<fediac::net::ChaosDirection> {
+    let defaults = fediac::net::ChaosDirection::default();
+    Ok(fediac::net::ChaosDirection {
+        drop: args.get_f64(&format!("{prefix}-drop"), 0.0)?,
+        duplicate: args.get_f64(&format!("{prefix}-dup"), 0.0)?,
+        reorder: args.get_f64(&format!("{prefix}-reorder"), 0.0)?,
+        corrupt: args.get_f64(&format!("{prefix}-corrupt"), 0.0)?,
+        reorder_depth: args.get_usize(&format!("{prefix}-depth"), defaults.reorder_depth)?,
+        max_hold: std::time::Duration::from_millis(
+            args.get_u64(&format!("{prefix}-hold-ms"), defaults.max_hold.as_millis() as u64)?,
+        ),
+    })
+}
+
 /// Run the networked aggregation daemon until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
     let bind = args.get_str("bind", "0.0.0.0:7177");
@@ -268,9 +290,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         host_bytes: args.get_usize("host-bytes", defaults.host_bytes)?,
         ..defaults
     };
+    let down = chaos_direction_from(args, "down")?;
+    let downlink_chaos = (!down.is_clean()).then_some(down);
+    let chaos_seed = args.get_u64("chaos-seed", 0)?;
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let handle = fediac::server::serve(&fediac::server::ServeOptions { bind, profile, limits })?;
+    let handle = fediac::server::serve(&fediac::server::ServeOptions {
+        bind,
+        profile,
+        limits,
+        downlink_chaos,
+        chaos_seed,
+    })?;
     eprintln!(
         "[fediac] aggregation server listening on {} (ctrl-c to stop)",
         handle.local_addr()
@@ -280,7 +311,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let s = handle.stats();
         eprintln!(
             "[fediac] pkts={} jobs={} rounds={} dup={} spill={} spill_drop={} waves={} \
-             stalls={} idle_rel={} reserve_sup={} err={}",
+             stalls={} idle_rel={} reserve_sup={} spoof={} bad_aux={} err={}",
             s.packets,
             s.jobs_created,
             s.rounds_completed,
@@ -291,7 +322,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.register_stalls,
             s.idle_releases,
             s.reserves_suppressed,
+            s.downlink_spoofs,
+            s.non_finite_aux,
             s.decode_errors
+        );
+    }
+}
+
+/// Run a standalone chaos proxy in front of an aggregation server until
+/// killed. Point clients at `--listen`; datagrams relay to `--upstream`
+/// with the configured per-direction loss/dup/reorder/corruption.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let listen = args.get_str("listen", "127.0.0.1:7178");
+    let upstream = args.get_str("upstream", "127.0.0.1:7177");
+    let seed = args.get_u64("seed", 1)?;
+    let uplink = chaos_direction_from(args, "up")?;
+    let downlink = chaos_direction_from(args, "down")?;
+    let stats_every = args.get_u64("stats-every", 10)?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let handle = fediac::net::chaos_proxy(&fediac::net::ChaosProxyOptions {
+        listen,
+        upstream: upstream.clone(),
+        config: fediac::net::ChaosConfig { seed, uplink, downlink },
+    })?;
+    eprintln!(
+        "[fediac] chaos proxy on {} → {upstream} (seed {seed}; ctrl-c to stop)",
+        handle.local_addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
+        let s = handle.snapshot();
+        eprintln!(
+            "[fediac] flows={} (rejected={}) up: fwd={} drop={} dup={} reord={} corrupt={} | \
+             down: fwd={} drop={} dup={} reord={} corrupt={}",
+            s.flows,
+            s.flows_rejected,
+            s.up.forwarded,
+            s.up.dropped,
+            s.up.duplicated,
+            s.up.reordered,
+            s.up.corrupted,
+            s.down.forwarded,
+            s.down.dropped,
+            s.down.duplicated,
+            s.down.reordered,
+            s.down.corrupted
         );
     }
 }
@@ -317,6 +393,13 @@ fn cmd_client(args: &Args) -> Result<()> {
     opts.timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 200)?);
     opts.send_loss = args.get_f64("loss", 0.0)?;
     opts.k = protocol::votes_per_client(d, k_frac);
+    // --chaos-*: run this client behind an in-process chaos proxy with
+    // the same knobs applied to both directions.
+    let chaos_dir = chaos_direction_from(args, "chaos")?;
+    let chaos_seed = args.get_u64("chaos-seed", 1)?;
+    if !chaos_dir.is_clean() {
+        opts.chaos = Some(fediac::net::ChaosConfig::symmetric(chaos_seed, chaos_dir));
+    }
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let seed = opts.backend_seed;
@@ -342,17 +425,31 @@ fn cmd_client(args: &Args) -> Result<()> {
             out.retransmissions
         );
     }
+    if let Some(snap) = client.chaos_snapshot() {
+        eprintln!(
+            "[fediac] chaos: up drop={} dup={} reord={} corrupt={} | \
+             down drop={} dup={} reord={} corrupt={}",
+            snap.up.dropped,
+            snap.up.duplicated,
+            snap.up.reordered,
+            snap.up.corrupted,
+            snap.down.dropped,
+            snap.down.duplicated,
+            snap.down.reordered,
+            snap.down.corrupted
+        );
+    }
     let s = client.stats;
     eprintln!(
-        "[fediac] client {client_id} done: retx={} dropped={} polls={}",
-        s.retransmissions, s.dropped_sends, s.polls
+        "[fediac] client {client_id} done: retx={} dropped={} polls={} rejoins={} resets={}",
+        s.retransmissions, s.dropped_sends, s.polls, s.rejoins, s.stream_resets
     );
     Ok(())
 }
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|client> [options]\n\
+        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|client|chaos> [options]\n\
          see README.md for the option reference"
     );
     std::process::exit(2);
@@ -369,6 +466,7 @@ fn main() -> Result<()> {
         Some("theory") => cmd_theory(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("chaos") => cmd_chaos(&args),
         _ => usage(),
     }
 }

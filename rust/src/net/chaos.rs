@@ -1,0 +1,686 @@
+//! Deterministic network-chaos layer: an in-process UDP proxy that
+//! injects loss, duplication, bounded reordering and bit corruption into
+//! both directions of a client↔server path.
+//!
+//! The simulator models lossy links analytically (`net::trace`,
+//! `ClientOptions::send_loss` covers uplink drops); this module attacks
+//! the *real* datagram path so `tests/wire_chaos.rs` can prove the
+//! scoreboard-deduped, index-aligned aggregation protocol stays
+//! bit-exact under downlink loss, duplication, reordering and corruption
+//! too — the ROADMAP "Loss/reorder fuzzing" item.
+//!
+//! **Determinism contract.** All chaos decisions come from
+//! [`crate::util::Rng`] streams derived from a single seed. A
+//! [`ChaosLane`] consumes a fixed number of draws per packet in a fixed
+//! order (drop, corrupt, duplicate, then one reorder draw per emitted
+//! copy), so the same `(seed, config)` applied to the same packet
+//! *sequence* makes identical decisions — rerunning a scenario replays
+//! the exact same drop/dup/reorder/corrupt pattern per flow. What stays
+//! nondeterministic over real sockets is only the arrival interleaving
+//! *between* flows (each client flow gets its own lane pair, seeded by
+//! flow-creation order).
+//!
+//! **Knob semantics** (per direction, all independent):
+//!
+//! * `drop` — probability a datagram vanishes entirely (evaluated first;
+//!   a dropped datagram is never duplicated, reordered or corrupted);
+//! * `corrupt` — probability 1–3 random bits of the datagram are
+//!   flipped before forwarding (the wire CRC must catch these);
+//! * `duplicate` — probability a second copy is emitted; each copy then
+//!   takes its own reorder draw, so a duplicate can overtake the
+//!   original;
+//! * `reorder` — probability a copy is held back and released only after
+//!   `reorder_depth`-ish later packets have passed (uniform in
+//!   `[1, reorder_depth]`) or after `max_hold` elapses, whichever comes
+//!   first. The deadline keeps the tail packet of a burst from being
+//!   held hostage when no follow-up traffic arrives.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, ToSocketAddrs, UdpSocket};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::util::Rng;
+
+/// How often proxy threads wake to flush overdue held-back packets. Must
+/// be well under any client retransmission timeout so reordering adds
+/// latency, not spurious timeouts.
+const TICK: Duration = Duration::from_millis(5);
+
+/// Per-direction chaos knobs. `Default` is a clean (pass-through) link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosDirection {
+    /// Probability a datagram is dropped outright.
+    pub drop: f64,
+    /// Probability a datagram is emitted twice.
+    pub duplicate: f64,
+    /// Probability a copy is held back (bounded-delay reordering).
+    pub reorder: f64,
+    /// Probability 1–3 bits of the datagram are flipped.
+    pub corrupt: f64,
+    /// Maximum later-packet count a held copy waits for before release.
+    pub reorder_depth: usize,
+    /// Hard deadline on holding a copy back (liveness without traffic).
+    pub max_hold: Duration,
+}
+
+impl Default for ChaosDirection {
+    fn default() -> Self {
+        ChaosDirection {
+            drop: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            corrupt: 0.0,
+            reorder_depth: 4,
+            max_hold: Duration::from_millis(40),
+        }
+    }
+}
+
+impl ChaosDirection {
+    /// A clean pass-through direction (no chaos).
+    pub fn clean() -> Self {
+        ChaosDirection::default()
+    }
+
+    /// The classic lossy-link trio; corruption stays off.
+    pub fn lossy(drop: f64, duplicate: f64, reorder: f64) -> Self {
+        ChaosDirection { drop, duplicate, reorder, ..ChaosDirection::default() }
+    }
+
+    /// Add bit-corruption to a direction.
+    pub fn with_corrupt(mut self, corrupt: f64) -> Self {
+        self.corrupt = corrupt;
+        self
+    }
+
+    /// True when every rate is zero (the lane is a pure pass-through).
+    pub fn is_clean(&self) -> bool {
+        self.drop <= 0.0 && self.duplicate <= 0.0 && self.reorder <= 0.0 && self.corrupt <= 0.0
+    }
+}
+
+/// A full proxy configuration: one seed, one knob set per direction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChaosConfig {
+    /// Root seed; per-flow, per-direction lanes derive their streams
+    /// from it deterministically.
+    pub seed: u64,
+    /// Client → server direction.
+    pub uplink: ChaosDirection,
+    /// Server → client direction.
+    pub downlink: ChaosDirection,
+}
+
+impl ChaosConfig {
+    /// Apply the same knobs to both directions.
+    pub fn symmetric(seed: u64, both: ChaosDirection) -> Self {
+        ChaosConfig { seed, uplink: both, downlink: both }
+    }
+}
+
+/// Cross-thread counters for one direction.
+#[derive(Debug, Default)]
+pub struct LaneStats {
+    /// Datagrams actually emitted (incl. duplicates and released holds).
+    pub forwarded: AtomicU64,
+    pub dropped: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub reordered: AtomicU64,
+    pub corrupted: AtomicU64,
+}
+
+/// Point-in-time copy of [`LaneStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneSnapshot {
+    pub forwarded: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+    pub corrupted: u64,
+}
+
+impl LaneStats {
+    fn snapshot(&self) -> LaneSnapshot {
+        LaneSnapshot {
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            duplicated: self.duplicated.load(Ordering::Relaxed),
+            reordered: self.reordered.load(Ordering::Relaxed),
+            corrupted: self.corrupted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time proxy counters for reporting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosSnapshot {
+    pub up: LaneSnapshot,
+    pub down: LaneSnapshot,
+    /// Distinct client flows seen so far.
+    pub flows: u64,
+    /// Datagrams from new sources dropped at the [`MAX_FLOWS`] cap.
+    pub flows_rejected: u64,
+}
+
+/// Upper bound on concurrent client flows (each one costs a socket and a
+/// relay thread). Without it, a blind spray of spoofed source addresses
+/// at the proxy port would exhaust file descriptors — the same abuse
+/// class the daemon's `MAX_JOBS` cap closes. Datagrams from new sources
+/// beyond the cap are dropped (and counted); a real FL job has at most
+/// 64 clients per the wire spec, so the default is generous.
+pub const MAX_FLOWS: usize = 1024;
+
+/// One direction's chaos engine, decoupled from sockets so the server
+/// can embed it on its downlink and tests can drive it deterministically.
+/// `M` is opaque per-packet metadata carried through holds (the daemon
+/// uses the destination address; the proxy uses `()`).
+pub struct ChaosLane<M = ()> {
+    cfg: ChaosDirection,
+    rng: Rng,
+    stats: Arc<LaneStats>,
+    /// Held-back copies: (deadline, packets-still-to-pass, bytes, meta).
+    held: Vec<(Instant, usize, Vec<u8>, M)>,
+}
+
+impl<M: Clone> ChaosLane<M> {
+    pub fn new(cfg: ChaosDirection, seed: u64) -> Self {
+        Self::with_stats(cfg, seed, Arc::new(LaneStats::default()))
+    }
+
+    pub fn with_stats(cfg: ChaosDirection, seed: u64, stats: Arc<LaneStats>) -> Self {
+        ChaosLane { cfg, rng: Rng::new(seed ^ 0xC4A0_5EED), stats, held: Vec::new() }
+    }
+
+    pub fn stats(&self) -> &Arc<LaneStats> {
+        &self.stats
+    }
+
+    /// Number of copies currently held back.
+    pub fn held_len(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Run one incoming datagram through the chaos decisions. Returns the
+    /// datagrams to emit *now*, in order — possibly none (dropped or
+    /// held), possibly several (a duplicate and/or holds released by this
+    /// packet's passage).
+    pub fn process(&mut self, pkt: &[u8], meta: M, now: Instant) -> Vec<(Vec<u8>, M)> {
+        let mut out = Vec::new();
+        if self.rng.f64() < self.cfg.drop {
+            bump(&self.stats.dropped);
+            // A dropped packet still "passes" the existing holds.
+            self.release(&mut out, now, true);
+            return out;
+        }
+        let mut bytes = pkt.to_vec();
+        if self.rng.f64() < self.cfg.corrupt {
+            self.flip_bits(&mut bytes);
+            bump(&self.stats.corrupted);
+        }
+        let copies = if self.rng.f64() < self.cfg.duplicate {
+            bump(&self.stats.duplicated);
+            2
+        } else {
+            1
+        };
+        let mut new_holds = Vec::new();
+        for _ in 0..copies {
+            if self.rng.f64() < self.cfg.reorder && self.cfg.reorder_depth > 0 {
+                let wait = 1 + self.rng.below(self.cfg.reorder_depth);
+                new_holds.push((now + self.cfg.max_hold, wait, bytes.clone(), meta.clone()));
+                bump(&self.stats.reordered);
+            } else {
+                out.push((bytes.clone(), meta.clone()));
+                bump(&self.stats.forwarded);
+            }
+        }
+        // Existing holds see this packet pass — released ones come out
+        // *after* the current packet (that is the reordering). The copies
+        // held just above join the queue only now, so they cannot count
+        // their own packet's passage.
+        self.release(&mut out, now, true);
+        self.held.extend(new_holds);
+        out
+    }
+
+    /// Release holds that are past their deadline (call on idle ticks so
+    /// the last packet of a burst is not held forever).
+    pub fn flush_due(&mut self, now: Instant) -> Vec<(Vec<u8>, M)> {
+        let mut out = Vec::new();
+        self.release(&mut out, now, false);
+        out
+    }
+
+    /// Release every hold immediately (drain on shutdown).
+    pub fn flush_all(&mut self) -> Vec<(Vec<u8>, M)> {
+        let mut out = Vec::new();
+        for (_, _, bytes, meta) in self.held.drain(..) {
+            bump(&self.stats.forwarded);
+            out.push((bytes, meta));
+        }
+        out
+    }
+
+    fn release(&mut self, out: &mut Vec<(Vec<u8>, M)>, now: Instant, packet_passed: bool) {
+        let mut i = 0;
+        while i < self.held.len() {
+            if packet_passed {
+                self.held[i].1 = self.held[i].1.saturating_sub(1);
+            }
+            if self.held[i].1 == 0 || self.held[i].0 <= now {
+                let (_, _, bytes, meta) = self.held.swap_remove(i);
+                bump(&self.stats.forwarded);
+                out.push((bytes, meta));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn flip_bits(&mut self, bytes: &mut [u8]) {
+        if bytes.is_empty() {
+            return;
+        }
+        let flips = 1 + self.rng.below(3);
+        for _ in 0..flips {
+            let bit = self.rng.below(bytes.len() * 8);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+        }
+    }
+}
+
+#[inline]
+fn bump(counter: &AtomicU64) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Proxy configuration: where to listen, where the real server is, and
+/// the chaos to inject.
+#[derive(Debug, Clone)]
+pub struct ChaosProxyOptions {
+    /// Client-facing bind address, e.g. "127.0.0.1:0" for tests.
+    pub listen: String,
+    /// The real server address datagrams are relayed to.
+    pub upstream: String,
+    pub config: ChaosConfig,
+}
+
+/// Running proxy handle: address, live stats, shutdown.
+pub struct ChaosHandle {
+    addr: SocketAddr,
+    up_stats: Arc<LaneStats>,
+    down_stats: Arc<LaneStats>,
+    flows: Arc<AtomicU64>,
+    flows_rejected: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    main: Option<JoinHandle<()>>,
+}
+
+impl ChaosHandle {
+    /// The client-facing address (point `ClientOptions::server` here).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn snapshot(&self) -> ChaosSnapshot {
+        ChaosSnapshot {
+            up: self.up_stats.snapshot(),
+            down: self.down_stats.snapshot(),
+            flows: self.flows.load(Ordering::Relaxed),
+            flows_rejected: self.flows_rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the forwarder and join every flow thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.main.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.main.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One client flow: its NAT socket toward the server, the uplink lane,
+/// and the downlink relay thread feeding replies back.
+struct Flow {
+    up_sock: UdpSocket,
+    lane: ChaosLane<()>,
+    relay: JoinHandle<()>,
+}
+
+/// Start a chaos proxy. Clients talk to [`ChaosHandle::local_addr`];
+/// each distinct client source address gets its own upstream socket
+/// (NAT-style), so the server still sees one address per client and its
+/// Join address book / reflection budgeting keep working through the
+/// proxy.
+pub fn chaos_proxy(opts: &ChaosProxyOptions) -> io::Result<ChaosHandle> {
+    let down_sock = UdpSocket::bind(&opts.listen)?;
+    down_sock.set_read_timeout(Some(TICK))?;
+    let addr = down_sock.local_addr()?;
+    let upstream: SocketAddr = opts
+        .upstream
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "upstream did not resolve"))?;
+    let up_stats = Arc::new(LaneStats::default());
+    let down_stats = Arc::new(LaneStats::default());
+    let flows = Arc::new(AtomicU64::new(0));
+    let flows_rejected = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let main = {
+        let cfg = opts.config;
+        let up_stats = Arc::clone(&up_stats);
+        let down_stats = Arc::clone(&down_stats);
+        let flows = Arc::clone(&flows);
+        let flows_rejected = Arc::clone(&flows_rejected);
+        let stop = Arc::clone(&stop);
+        thread::Builder::new().name("fediac-chaos".into()).spawn(move || {
+            proxy_loop(down_sock, upstream, cfg, up_stats, down_stats, flows, flows_rejected, stop);
+        })?
+    };
+
+    Ok(ChaosHandle { addr, up_stats, down_stats, flows, flows_rejected, stop, main: Some(main) })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn proxy_loop(
+    down_sock: UdpSocket,
+    upstream: SocketAddr,
+    cfg: ChaosConfig,
+    up_stats: Arc<LaneStats>,
+    down_stats: Arc<LaneStats>,
+    flow_count: Arc<AtomicU64>,
+    flows_rejected: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut flows: HashMap<SocketAddr, Flow> = HashMap::new();
+    let mut next_flow = 0u64;
+    let mut buf = vec![0u8; 65536];
+    while !stop.load(Ordering::SeqCst) {
+        match down_sock.recv_from(&mut buf) {
+            Ok((n, from)) => {
+                if !flows.contains_key(&from) {
+                    if flows.len() >= MAX_FLOWS {
+                        flows_rejected.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    match spawn_flow(
+                        &down_sock,
+                        upstream,
+                        from,
+                        &cfg,
+                        next_flow,
+                        Arc::clone(&up_stats),
+                        Arc::clone(&down_stats),
+                        Arc::clone(&stop),
+                    ) {
+                        Ok(flow) => {
+                            next_flow += 1;
+                            flow_count.fetch_add(1, Ordering::Relaxed);
+                            flows.insert(from, flow);
+                        }
+                        Err(_) => continue,
+                    }
+                }
+                let flow = flows.get_mut(&from).expect("flow just ensured");
+                let now = Instant::now();
+                for (pkt, ()) in flow.lane.process(&buf[..n], (), now) {
+                    let _ = flow.up_sock.send(&pkt);
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut => {}
+            // Transient socket errors (e.g. an ICMP unreachable surfacing
+            // as ECONNRESET after a client exits) must not tear the proxy
+            // down for every other flow; back off briefly and carry on.
+            Err(_) => thread::sleep(Duration::from_millis(1)),
+        }
+        // Idle tick: release overdue held-back uplink copies.
+        let now = Instant::now();
+        for flow in flows.values_mut() {
+            for (pkt, ()) in flow.lane.flush_due(now) {
+                let _ = flow.up_sock.send(&pkt);
+            }
+        }
+    }
+    for (_, flow) in flows {
+        let _ = flow.relay.join();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_flow(
+    down_sock: &UdpSocket,
+    upstream: SocketAddr,
+    client: SocketAddr,
+    cfg: &ChaosConfig,
+    flow_idx: u64,
+    up_stats: Arc<LaneStats>,
+    down_stats: Arc<LaneStats>,
+    stop: Arc<AtomicBool>,
+) -> io::Result<Flow> {
+    // Bind on the unspecified address of the upstream's family so the
+    // proxy also works across real hosts, not just loopback.
+    let bind_any = if upstream.is_ipv4() { "0.0.0.0:0" } else { "[::]:0" };
+    let up_sock = UdpSocket::bind(bind_any)?;
+    up_sock.connect(upstream)?;
+    up_sock.set_read_timeout(Some(TICK))?;
+    let relay_sock = up_sock.try_clone()?;
+    let reply_sock = down_sock.try_clone()?;
+    // Flow lanes derive their streams from (seed, flow index, direction).
+    let lane = ChaosLane::with_stats(cfg.uplink, cfg.seed ^ (flow_idx << 1), up_stats);
+    let mut down_lane: ChaosLane<()> =
+        ChaosLane::with_stats(cfg.downlink, cfg.seed ^ (flow_idx << 1) ^ 1, down_stats);
+    let relay = thread::Builder::new().name(format!("fediac-chaos-dl-{flow_idx}")).spawn(
+        move || {
+            let mut buf = vec![0u8; 65536];
+            while !stop.load(Ordering::SeqCst) {
+                match relay_sock.recv(&mut buf) {
+                    Ok(n) => {
+                        let now = Instant::now();
+                        for (pkt, ()) in down_lane.process(&buf[..n], (), now) {
+                            let _ = reply_sock.send_to(&pkt, client);
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut => {}
+                    // E.g. ECONNREFUSED while the upstream restarts:
+                    // back off briefly instead of spinning.
+                    Err(_) => thread::sleep(Duration::from_millis(1)),
+                }
+                let now = Instant::now();
+                for (pkt, ()) in down_lane.flush_due(now) {
+                    let _ = reply_sock.send_to(&pkt, client);
+                }
+            }
+        },
+    )?;
+    Ok(Flow { up_sock, lane, relay })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_packets(n: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|i| (i as u32).to_le_bytes().to_vec()).collect()
+    }
+
+    fn run_lane(cfg: ChaosDirection, seed: u64, pkts: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        let mut lane: ChaosLane<()> = ChaosLane::new(cfg, seed);
+        let base = Instant::now();
+        let mut out = Vec::new();
+        for (i, p) in pkts.iter().enumerate() {
+            let now = base + Duration::from_millis(i as u64);
+            out.extend(lane.process(p, (), now).into_iter().map(|(b, ())| b));
+        }
+        // Drain whatever is still held (deadline far in the future).
+        out.extend(lane.flush_all().into_iter().map(|(b, ())| b));
+        out
+    }
+
+    #[test]
+    fn lane_is_deterministic_per_seed() {
+        let cfg = ChaosDirection::lossy(0.2, 0.15, 0.3).with_corrupt(0.1);
+        let pkts = seq_packets(500);
+        let a = run_lane(cfg, 42, &pkts);
+        let b = run_lane(cfg, 42, &pkts);
+        assert_eq!(a, b, "same seed must replay the same chaos");
+        let c = run_lane(cfg, 43, &pkts);
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn clean_lane_is_identity() {
+        let pkts = seq_packets(100);
+        let out = run_lane(ChaosDirection::clean(), 7, &pkts);
+        assert_eq!(out, pkts);
+    }
+
+    #[test]
+    fn lossless_lane_conserves_packets() {
+        // No drop, no corruption: every input appears in the output
+        // (maybe twice for duplicates), just possibly out of order.
+        let cfg = ChaosDirection::lossy(0.0, 0.2, 0.4);
+        let pkts = seq_packets(300);
+        let out = run_lane(cfg, 11, &pkts);
+        let mut counts: HashMap<Vec<u8>, usize> = HashMap::new();
+        for p in &out {
+            *counts.entry(p.clone()).or_insert(0) += 1;
+        }
+        for p in &pkts {
+            let c = counts.get(p).copied().unwrap_or(0);
+            assert!(c == 1 || c == 2, "packet {p:?} emitted {c} times");
+        }
+        assert!(out.len() > pkts.len(), "no duplicate ever fired");
+        assert_ne!(out[..pkts.len()], pkts[..], "no reordering happened");
+    }
+
+    #[test]
+    fn drop_rate_matches_configuration() {
+        let cfg = ChaosDirection::lossy(0.3, 0.0, 0.0);
+        let lane: ChaosLane<()> = ChaosLane::new(cfg, 5);
+        let stats = Arc::clone(lane.stats());
+        let mut lane = lane;
+        let base = Instant::now();
+        let pkts = seq_packets(10_000);
+        for p in &pkts {
+            lane.process(p, (), base);
+        }
+        let dropped = stats.dropped.load(Ordering::Relaxed) as f64 / pkts.len() as f64;
+        assert!((0.25..0.35).contains(&dropped), "drop rate {dropped}");
+    }
+
+    #[test]
+    fn reorder_is_bounded_by_depth_and_deadline() {
+        let cfg = ChaosDirection { reorder: 1.0, reorder_depth: 3, ..ChaosDirection::default() };
+        let mut lane: ChaosLane<()> = ChaosLane::new(cfg, 9);
+        let base = Instant::now();
+        // Every packet is held; each later packet decrements the holds,
+        // so nothing can lag more than `reorder_depth` packets behind.
+        let pkts = seq_packets(50);
+        let mut emitted = 0usize;
+        for (i, p) in pkts.iter().enumerate() {
+            emitted += lane.process(p, (), base).len();
+            assert!(lane.held_len() <= cfg.reorder_depth, "hold queue grew past depth at {i}");
+        }
+        // The stragglers release on the deadline tick even with no more
+        // traffic.
+        emitted += lane.flush_due(base + cfg.max_hold + Duration::from_millis(1)).len();
+        assert_eq!(emitted, pkts.len());
+    }
+
+    #[test]
+    fn corruption_flips_bits_but_keeps_length() {
+        let cfg = ChaosDirection { corrupt: 1.0, ..ChaosDirection::default() };
+        let mut lane: ChaosLane<()> = ChaosLane::new(cfg, 3);
+        let pkt = vec![0u8; 64];
+        let mut mutated = 0;
+        for _ in 0..16 {
+            let out = lane.process(&pkt, (), Instant::now());
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].0.len(), pkt.len(), "corruption changed the length");
+            if out[0].0 != pkt {
+                mutated += 1;
+            }
+        }
+        // An even number of flips can land on one bit and cancel, but not
+        // 16 packets in a row.
+        assert!(mutated > 0, "corruption never flipped a bit");
+    }
+
+    #[test]
+    fn proxy_relays_both_directions() {
+        // Echo "server": replies with the payload reversed.
+        let server = UdpSocket::bind("127.0.0.1:0").unwrap();
+        server.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let server_addr = server.local_addr().unwrap();
+        let echo = thread::spawn(move || {
+            let mut buf = [0u8; 256];
+            let (n, from) = server.recv_from(&mut buf).unwrap();
+            let mut reply = buf[..n].to_vec();
+            reply.reverse();
+            server.send_to(&reply, from).unwrap();
+        });
+
+        let handle = chaos_proxy(&ChaosProxyOptions {
+            listen: "127.0.0.1:0".into(),
+            upstream: server_addr.to_string(),
+            config: ChaosConfig::default(),
+        })
+        .unwrap();
+
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        client.send_to(b"chaos", handle.local_addr()).unwrap();
+        let mut buf = [0u8; 256];
+        let (n, _) = client.recv_from(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"soahc");
+        echo.join().unwrap();
+
+        let snap = handle.snapshot();
+        assert_eq!(snap.flows, 1);
+        assert_eq!(snap.up.forwarded, 1);
+        assert_eq!(snap.down.forwarded, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn proxy_full_drop_blackholes_uplink() {
+        let server = UdpSocket::bind("127.0.0.1:0").unwrap();
+        server.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        let server_addr = server.local_addr().unwrap();
+        let handle = chaos_proxy(&ChaosProxyOptions {
+            listen: "127.0.0.1:0".into(),
+            upstream: server_addr.to_string(),
+            config: ChaosConfig {
+                seed: 1,
+                uplink: ChaosDirection::lossy(1.0, 0.0, 0.0),
+                downlink: ChaosDirection::clean(),
+            },
+        })
+        .unwrap();
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.send_to(b"void", handle.local_addr()).unwrap();
+        let mut buf = [0u8; 16];
+        assert!(server.recv_from(&mut buf).is_err(), "dropped datagram arrived");
+        assert_eq!(handle.snapshot().up.dropped, 1);
+        handle.shutdown();
+    }
+}

@@ -1,11 +1,17 @@
-//! Network substrate: packets, Poisson arrivals, M/G/1 queues and the
-//! synthetic cellular traces that drive client upload rates (§V-A2).
+//! Network substrate: packets, Poisson arrivals, M/G/1 queues, the
+//! synthetic cellular traces that drive client upload rates (§V-A2), and
+//! the deterministic chaos proxy for wire-path failure injection.
 
+pub mod chaos;
 pub mod mg1;
 pub mod packet;
 pub mod poisson;
 pub mod trace;
 
+pub use chaos::{
+    chaos_proxy, ChaosConfig, ChaosDirection, ChaosHandle, ChaosLane, ChaosProxyOptions,
+    ChaosSnapshot, LaneSnapshot, LaneStats,
+};
 pub use mg1::{pollaczek_khinchine, Mg1Queue};
 pub use packet::{elems_per_packet, frames_for_bits, packetize, Packet, Phase};
 pub use poisson::PoissonProcess;

@@ -12,12 +12,13 @@ use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, UdpSocket};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Sender};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::configx::PsProfile;
+use crate::net::chaos::{ChaosDirection, ChaosLane};
 use crate::server::job::{Job, JobLimits, JOIN_UNKNOWN_JOB};
 use crate::server::{ServerStats, StatsSnapshot};
 use crate::wire::{decode_frame, encode_frame, peek_route, Header, WireKind};
@@ -32,6 +33,14 @@ pub struct ServeOptions {
     /// Per-job abuse limits: host-memory budget enforced at `Join`, spill
     /// caps, idle register reclamation, and re-serve rate limiting.
     pub limits: JobLimits,
+    /// Downlink chaos injection point: run every worker-sent datagram
+    /// (GIA/aggregate multicasts, acks, re-serves) through a seeded
+    /// [`ChaosLane`] — loss/dup/reorder/corruption on the server→client
+    /// path without an external proxy. Lanes are per worker, seeded from
+    /// `chaos_seed ^ job_id`.
+    pub downlink_chaos: Option<ChaosDirection>,
+    /// Root seed for `downlink_chaos` lanes.
+    pub chaos_seed: u64,
 }
 
 impl Default for ServeOptions {
@@ -40,6 +49,8 @@ impl Default for ServeOptions {
             bind: "127.0.0.1:0".to_string(),
             profile: PsProfile::high(),
             limits: JobLimits::default(),
+            downlink_chaos: None,
+            chaos_seed: 0,
         }
     }
 }
@@ -92,8 +103,10 @@ pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
         let stop = Arc::clone(&stop);
         let profile = opts.profile.clone();
         let limits = opts.limits;
+        let chaos = opts.downlink_chaos;
+        let chaos_seed = opts.chaos_seed;
         thread::Builder::new().name("fediac-dispatch".into()).spawn(move || {
-            dispatch_loop(socket, profile, limits, stats, stop);
+            dispatch_loop(socket, profile, limits, chaos, chaos_seed, stats, stop);
         })?
     };
 
@@ -122,6 +135,8 @@ fn dispatch_loop(
     socket: UdpSocket,
     profile: PsProfile,
     limits: JobLimits,
+    chaos: Option<ChaosDirection>,
+    chaos_seed: u64,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
 ) {
@@ -144,13 +159,20 @@ fn dispatch_loop(
             continue;
         };
         if !workers.contains_key(&job_id) {
-            // Workers are born only on Join. Data frames for unknown jobs
-            // get the protocol's JoinAck/UNKNOWN straight from this thread
-            // (the client driver re-joins on seeing it), so a sprayed job
-            // id cannot pin an OS thread.
+            // Workers are born only on Join. Genuine uplink data frames
+            // for unknown jobs get the protocol's JoinAck/UNKNOWN
+            // straight from this thread (the client driver re-joins on
+            // seeing it), so a sprayed job id cannot pin an OS thread.
+            // Server-bound spoofs of downlink kinds earn no reply at all
+            // — answering them would reflect traffic at forged sources.
             if kind != WireKind::Join {
-                let h = Header::control(WireKind::JoinAck, job_id, u16::MAX, 0, JOIN_UNKNOWN_JOB);
-                let _ = socket.send_to(&encode_frame(&h, &[]), from);
+                if matches!(kind, WireKind::Vote | WireKind::Update | WireKind::Poll) {
+                    let h =
+                        Header::control(WireKind::JoinAck, job_id, u16::MAX, 0, JOIN_UNKNOWN_JOB);
+                    let _ = socket.send_to(&encode_frame(&h, &[]), from);
+                } else {
+                    ServerStats::bump(&stats.downlink_spoofs);
+                }
                 continue;
             }
             if workers.len() >= MAX_JOBS && !evict_unconfigured(&mut workers) {
@@ -159,7 +181,7 @@ fn dispatch_loop(
             }
         }
         let worker = workers.entry(job_id).or_insert_with(|| {
-            spawn_worker(job_id, &socket, profile.clone(), limits, Arc::clone(&stats))
+            spawn_worker(job_id, &socket, profile.clone(), limits, chaos, chaos_seed, Arc::clone(&stats))
         });
         if worker.tx.send((buf[..n].to_vec(), from)).is_err() {
             // Worker died (should not happen); drop the datagram — the
@@ -190,11 +212,17 @@ fn evict_unconfigured(workers: &mut HashMap<u32, WorkerSlot>) -> bool {
     true
 }
 
+/// How often a chaos-enabled worker wakes to flush overdue held-back
+/// downlink datagrams.
+const CHAOS_TICK: Duration = Duration::from_millis(10);
+
 fn spawn_worker(
     job_id: u32,
     socket: &UdpSocket,
     profile: PsProfile,
     limits: JobLimits,
+    chaos: Option<ChaosDirection>,
+    chaos_seed: u64,
     stats: Arc<ServerStats>,
 ) -> WorkerSlot {
     let (tx, rx) = mpsc::channel::<(Vec<u8>, SocketAddr)>();
@@ -205,17 +233,52 @@ fn spawn_worker(
         .name(format!("fediac-job-{job_id}"))
         .spawn(move || {
             let mut job = Job::with_limits(job_id, profile, limits, Arc::clone(&stats));
-            while let Ok((datagram, from)) = rx.recv() {
-                match decode_frame(&datagram) {
-                    Ok(frame) => {
-                        for (dest, bytes) in job.handle(&frame, from) {
-                            let _ = out.send_to(&bytes, dest);
-                        }
-                        if !flag.load(Ordering::SeqCst) && job.is_configured() {
-                            flag.store(true, Ordering::SeqCst);
-                        }
+            // Downlink chaos lane (None = send straight through). Held
+            // copies carry their destination as lane metadata.
+            let mut lane: Option<ChaosLane<SocketAddr>> =
+                chaos.map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64));
+            loop {
+                // With a lane attached the worker must wake on idle to
+                // release overdue reordered datagrams; without one it
+                // blocks cheaply on the channel.
+                let msg = if lane.is_some() {
+                    match rx.recv_timeout(CHAOS_TICK) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break,
                     }
-                    Err(_) => ServerStats::bump(&stats.decode_errors),
+                } else {
+                    match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    }
+                };
+                if let Some((datagram, from)) = msg {
+                    match decode_frame(&datagram) {
+                        Ok(frame) => {
+                            for (dest, bytes) in job.handle(&frame, from) {
+                                match lane.as_mut() {
+                                    Some(l) => {
+                                        for (pkt, to) in l.process(&bytes, dest, Instant::now()) {
+                                            let _ = out.send_to(&pkt, to);
+                                        }
+                                    }
+                                    None => {
+                                        let _ = out.send_to(&bytes, dest);
+                                    }
+                                }
+                            }
+                            if !flag.load(Ordering::SeqCst) && job.is_configured() {
+                                flag.store(true, Ordering::SeqCst);
+                            }
+                        }
+                        Err(_) => ServerStats::bump(&stats.decode_errors),
+                    }
+                }
+                if let Some(l) = lane.as_mut() {
+                    for (pkt, to) in l.flush_due(Instant::now()) {
+                        let _ = out.send_to(&pkt, to);
+                    }
                 }
             }
         })
@@ -275,10 +338,51 @@ mod tests {
         assert_eq!(f.header.job, 999);
         assert_eq!(f.header.aux, crate::server::JOIN_UNKNOWN_JOB);
 
+        // A server-bound spoof of a *downlink* kind gets no reply at all
+        // (a JoinAck echo here would be reflection fodder).
+        let spoof = encode_frame(
+            &Header {
+                kind: WireKind::Gia,
+                client: u16::MAX,
+                job: 31337,
+                round: 0,
+                block: 0,
+                n_blocks: 1,
+                elems: 0,
+                aux: 0,
+            },
+            &[],
+        );
+        client.send_to(&spoof, addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+        let mut tmp = [0u8; 64];
+        assert!(client.recv_from(&mut tmp).is_err(), "spoofed downlink frame was answered");
+
         let stats = handle.stats();
         assert!(stats.packets >= 3);
         assert_eq!(stats.jobs_created, 2);
         assert!(stats.decode_errors >= 1);
+        assert!(stats.downlink_spoofs >= 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn downlink_chaos_lane_reaches_worker_sends() {
+        // Full downlink drop: the worker's JoinAck never escapes.
+        let handle = serve(&ServeOptions {
+            downlink_chaos: Some(ChaosDirection::lossy(1.0, 0.0, 0.0)),
+            chaos_seed: 5,
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
+        let spec = JobSpec { d: 64, n_clients: 1, threshold_a: 1, payload_budget: 8 };
+        let join = encode_frame(&Header::control(WireKind::Join, 8, 0, 0, 0), &spec.encode());
+        client.send_to(&join, handle.local_addr()).unwrap();
+        let mut buf = [0u8; 256];
+        assert!(client.recv_from(&mut buf).is_err(), "dropped JoinAck arrived");
+        assert_eq!(handle.stats().joins, 1, "join itself must still register");
         handle.shutdown();
     }
 }

@@ -562,6 +562,17 @@ impl Job {
     /// Handle one decoded frame; returns the datagrams to send.
     pub fn handle(&mut self, frame: &Frame<'_>, from: SocketAddr) -> Outgoing {
         let h = frame.header;
+        // Downlink kinds arriving at the server are reflections or
+        // server-bound spoofs. They must be dropped *silently* — even a
+        // small JoinAck/UNKNOWN reply would let a forged Gia/Aggregate
+        // frame bounce traffic off this daemon at a victim address.
+        if matches!(
+            h.kind,
+            WireKind::JoinAck | WireKind::Gia | WireKind::Aggregate | WireKind::NotReady
+        ) {
+            ServerStats::bump(&self.stats.downlink_spoofs);
+            return Vec::new();
+        }
         match h.kind {
             WireKind::Join => self.on_join(h, frame.payload, from),
             _ if self.state.is_none() => vec![(
@@ -574,11 +585,8 @@ impl Job {
             WireKind::Vote => self.on_vote(h, frame.payload),
             WireKind::Update => self.on_update(h, frame.payload),
             WireKind::Poll => self.on_poll(h, from),
-            // Downlink kinds arriving at the server are stray reflections.
-            _ => {
-                ServerStats::bump(&self.stats.decode_errors);
-                Vec::new()
-            }
+            // Unreachable: every uplink kind is matched above.
+            _ => Vec::new(),
         }
     }
 
@@ -689,6 +697,15 @@ impl Job {
             ServerStats::bump(&self.stats.decode_errors);
             return Vec::new();
         }
+        // The aux word is this client's local max-|U|, folded with max
+        // into the global m every client later derives f from. A single
+        // NaN/Inf (one hostile or broken client) would poison the scale
+        // factor for the whole job — reject the frame at ingest.
+        let local_max = f32::from_bits(h.aux);
+        if !local_max.is_finite() {
+            ServerStats::bump(&self.stats.non_finite_aux);
+            return Vec::new();
+        }
         Self::reap_idle(st, h.round, &self.limits, &self.stats);
         Self::ensure_round(st, h.round, self.profile.memory_bytes, &self.limits);
         let JobState { spec, registers, rounds, clients } = st;
@@ -710,13 +727,19 @@ impl Job {
             h.block,
             h.elems,
             payload,
-            f32::from_bits(h.aux),
+            local_max,
         );
         if !done {
             return Vec::new();
         }
         rs.finish_phase1(&spec, self.profile.memory_bytes, &self.stats);
-        let frames = Self::gia_frames(self.id, h.round, rs, &spec);
+        let mut frames = Self::gia_frames(self.id, h.round, rs, &spec);
+        if rs.agg_done {
+            // Empty consensus: phase 2 closed inside finish_phase1, so
+            // this multicast is the only chance to answer the clients'
+            // (empty) aggregate wait without costing each a poll cycle.
+            frames.extend(Self::agg_frames(self.id, h.round, rs, &spec));
+        }
         Self::to_all(clients, &frames)
     }
 
@@ -1215,6 +1238,115 @@ mod tests {
         assert!(stat(&stats.reserves_suppressed) > 2, "table never filled");
         assert!(!poll_from(&mut job, addr(4000)).is_empty());
         assert!(!poll_from(&mut job, addr(4001)).is_empty());
+    }
+
+    #[test]
+    fn empty_consensus_closes_round_and_multicasts_empty_aggregate() {
+        // N = 2, a = 2, disjoint votes: nothing passes the threshold.
+        // The round must close at phase 1 (no wedged live-round slot) and
+        // the completion multicast must answer the clients' aggregate
+        // wait too — one zero-lane block, the phase-completion signal
+        // `wire::update_chunks` defines.
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let mut job = make_job(&spec, 1 << 20);
+        let v0 = BitVec::from_indices(64, &[1, 2]);
+        let v1 = BitVec::from_indices(64, &[10, 20]);
+        assert!(feed(&mut job, &vote_frames(9, 0, 0, &v0, &spec)[0], addr(4000)).is_empty());
+        let out = feed(&mut job, &vote_frames(9, 1, 0, &v1, &spec)[0], addr(4001));
+        let kinds: Vec<WireKind> =
+            out.iter().map(|(_, b)| decode_frame(b).unwrap().header.kind).collect();
+        assert!(kinds.contains(&WireKind::Gia), "no GIA in completion multicast");
+        assert!(kinds.contains(&WireKind::Aggregate), "empty aggregate not multicast");
+        assert_eq!(job.round_gia(0).unwrap().count_ones(), 0);
+        assert_eq!(job.round_aggregate(0), Some(&[][..]), "round did not close");
+        assert_eq!(job.stats.rounds_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        let agg = out
+            .iter()
+            .map(|(_, b)| decode_frame(b).unwrap())
+            .find(|f| f.header.kind == WireKind::Aggregate)
+            .unwrap();
+        assert_eq!((agg.header.n_blocks, agg.header.elems, agg.header.aux), (1, 0, 0));
+        assert!(agg.payload.is_empty());
+    }
+
+    #[test]
+    fn non_finite_vote_aux_is_rejected_at_ingest() {
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let mut job = make_job(&spec, 1 << 20);
+        let v = BitVec::from_indices(64, &[1, 2]);
+        // A NaN local-max would make global_max (and every client's f)
+        // NaN; the whole frame is rejected, vote bits included.
+        let (dims, bytes) = &vote_chunks(&v, 8)[0];
+        let evil = encode_frame(
+            &Header {
+                kind: WireKind::Vote,
+                client: 0,
+                job: 9,
+                round: 0,
+                block: 0,
+                n_blocks: 1,
+                elems: *dims as u32,
+                aux: f32::NAN.to_bits(),
+            },
+            bytes,
+        );
+        assert!(feed(&mut job, &evil, addr(4000)).is_empty());
+        assert_eq!(job.stats.non_finite_aux.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // Finite-aux frames complete the round with a clean global max.
+        for c in 0..2u16 {
+            feed(&mut job, &vote_frames(9, c, 0, &v, &spec)[0], addr(4000 + c));
+        }
+        let poll = encode_frame(
+            &Header {
+                kind: WireKind::Poll,
+                client: 0,
+                job: 9,
+                round: 0,
+                block: 0,
+                n_blocks: 0,
+                elems: 0,
+                aux: WireKind::Gia as u32,
+            },
+            &[],
+        );
+        let out = feed(&mut job, &poll, addr(4000));
+        let gia = decode_frame(&out[0].1).unwrap();
+        assert_eq!(gia.header.kind, WireKind::Gia);
+        let m = f32::from_bits(gia.header.aux);
+        assert!(m.is_finite(), "NaN leaked into the folded global max");
+        assert_eq!(m, 1.0, "helper frames carry local max 1.0");
+    }
+
+    #[test]
+    fn downlink_kind_frames_get_no_reply() {
+        // Unconfigured job: a forged Gia must not even earn the
+        // JoinAck/UNKNOWN nudge (reflection damping).
+        let stats = Arc::new(ServerStats::default());
+        let mut fresh = Job::new(2, profile(1 << 20), Arc::clone(&stats));
+        let forged = |kind: WireKind, job: u32| {
+            encode_frame(
+                &Header {
+                    kind,
+                    client: u16::MAX,
+                    job,
+                    round: 0,
+                    block: 0,
+                    n_blocks: 1,
+                    elems: 0,
+                    aux: 0,
+                },
+                &[],
+            )
+        };
+        assert!(feed(&mut fresh, &forged(WireKind::Gia, 2), addr(7000)).is_empty());
+        assert!(feed(&mut fresh, &forged(WireKind::JoinAck, 2), addr(7000)).is_empty());
+        assert_eq!(stat(&stats.downlink_spoofs), 2);
+        // Configured job: same silence.
+        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let mut job = make_job(&spec, 1 << 20);
+        assert!(feed(&mut job, &forged(WireKind::Aggregate, 9), addr(7000)).is_empty());
+        assert!(feed(&mut job, &forged(WireKind::NotReady, 9), addr(7000)).is_empty());
+        assert_eq!(job.stats.downlink_spoofs.load(std::sync::atomic::Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -45,6 +45,12 @@ pub struct ServerStats {
     pub reserves_suppressed: AtomicU64,
     /// Register aggregators reclaimed from rounds with no recent traffic.
     pub idle_releases: AtomicU64,
+    /// Server-bound frames of downlink-only kinds (Gia / Aggregate /
+    /// JoinAck / NotReady) dropped without a reply (anti-reflection).
+    pub downlink_spoofs: AtomicU64,
+    /// Vote frames rejected because their local-max aux was NaN/Inf
+    /// (would poison the job-wide scale factor).
+    pub non_finite_aux: AtomicU64,
     pub joins: AtomicU64,
     pub jobs_created: AtomicU64,
     /// Datagrams dropped because the per-daemon job cap was reached.
@@ -65,6 +71,8 @@ pub struct StatsSnapshot {
     pub register_stalls: u64,
     pub reserves_suppressed: u64,
     pub idle_releases: u64,
+    pub downlink_spoofs: u64,
+    pub non_finite_aux: u64,
     pub joins: u64,
     pub jobs_created: u64,
     pub jobs_rejected: u64,
@@ -94,6 +102,8 @@ impl ServerStats {
             register_stalls: self.register_stalls.load(Ordering::Relaxed),
             reserves_suppressed: self.reserves_suppressed.load(Ordering::Relaxed),
             idle_releases: self.idle_releases.load(Ordering::Relaxed),
+            downlink_spoofs: self.downlink_spoofs.load(Ordering::Relaxed),
+            non_finite_aux: self.non_finite_aux.load(Ordering::Relaxed),
             joins: self.joins.load(Ordering::Relaxed),
             jobs_created: self.jobs_created.load(Ordering::Relaxed),
             jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),

@@ -1,0 +1,356 @@
+//! Chaos-matrix integration tests: full FediAC rounds through the
+//! deterministic loss/duplication/reordering/corruption proxy
+//! (`net::chaos`), asserting multi-round **bit-exactness** against the
+//! clean in-process reference aggregation.
+//!
+//! The acceptance bar: 5 rounds at (20% loss, 10% dup, 30% reorder) in
+//! *each* direction, two jobs running concurrently through one proxy,
+//! every round's GIA and aggregate identical to the reference — chaos
+//! may only cost time (retransmissions), never correctness.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use fediac::client::{protocol, ClientOptions, FediacClient};
+use fediac::compress::{self, deduce_gia};
+use fediac::net::{chaos_proxy, ChaosConfig, ChaosDirection, ChaosProxyOptions};
+use fediac::server::{serve, ServeOptions, ServerHandle};
+use fediac::util::{BitVec, Rng};
+
+const ROUNDS: usize = 5;
+
+/// Deterministic per-(client, round) synthetic update vectors.
+fn synthetic_update(seed: u64, d: usize, client: usize, round: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ (client as u64) << 16 ^ (round as u64) << 40);
+    (0..d).map(|_| (rng.gaussian() * 0.02) as f32).collect()
+}
+
+/// Clean in-process reference for one round: (gia indices, aggregate).
+fn reference_round(
+    updates: &[Vec<f32>],
+    seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+    bits_b: usize,
+) -> (Vec<usize>, Vec<i32>) {
+    let votes: Vec<BitVec> = updates
+        .iter()
+        .enumerate()
+        .map(|(i, u)| protocol::client_vote(u, k, seed, round, i))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = updates
+        .iter()
+        .map(|u| compress::max_abs(u))
+        .fold(f32::MIN_POSITIVE, f32::max);
+    let f = compress::scale_factor(bits_b, updates.len(), m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    for (i, u) in updates.iter().enumerate() {
+        let (q, _) = protocol::client_quantize(u, &mask, f, seed, round, i);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+    }
+    (indices, lanes)
+}
+
+struct JobSetup {
+    job: u32,
+    seed: u64,
+    d: usize,
+    n_clients: usize,
+    threshold_a: u16,
+    payload_budget: usize,
+}
+
+impl JobSetup {
+    fn k(&self) -> usize {
+        protocol::votes_per_client(self.d, 0.05)
+    }
+}
+
+/// Run every client of one job for `ROUNDS` rounds against `server`
+/// (usually a chaos-proxy address) and assert each round bit-exact
+/// against the clean reference; accumulates retransmissions into `retx`.
+fn run_job(server: SocketAddr, setup: &JobSetup, retx: &AtomicU64) {
+    std::thread::scope(|scope| {
+        for client_id in 0..setup.n_clients {
+            scope.spawn(move || {
+                let mut opts = ClientOptions::new(
+                    server.to_string(),
+                    setup.job,
+                    client_id as u16,
+                    setup.d,
+                    setup.n_clients as u16,
+                );
+                opts.threshold_a = setup.threshold_a;
+                opts.k = setup.k();
+                opts.backend_seed = setup.seed;
+                opts.payload_budget = setup.payload_budget;
+                opts.timeout = Duration::from_millis(150);
+                opts.max_retries = 400;
+                let mut client = FediacClient::connect(opts).unwrap();
+                for round in 1..=ROUNDS {
+                    let update = synthetic_update(setup.seed, setup.d, client_id, round);
+                    let out = client.run_round(round, &update).unwrap();
+                    // Recompute the reference per client thread — cheap,
+                    // and keeps the threads free of shared state.
+                    let updates: Vec<Vec<f32>> = (0..setup.n_clients)
+                        .map(|c| synthetic_update(setup.seed, setup.d, c, round))
+                        .collect();
+                    let (ref_idx, ref_lanes) = reference_round(
+                        &updates,
+                        setup.seed,
+                        round,
+                        setup.k(),
+                        setup.threshold_a as usize,
+                        12,
+                    );
+                    assert_eq!(
+                        out.gia_indices, ref_idx,
+                        "job {} client {client_id} round {round}: consensus diverged",
+                        setup.job
+                    );
+                    assert_eq!(
+                        out.aggregate, ref_lanes,
+                        "job {} client {client_id} round {round}: aggregate diverged",
+                        setup.job
+                    );
+                }
+                retx.fetch_add(client.stats.retransmissions, Ordering::Relaxed);
+            });
+        }
+    });
+}
+
+fn start_server() -> ServerHandle {
+    serve(&ServeOptions::default()).unwrap()
+}
+
+fn start_proxy(upstream: SocketAddr, config: ChaosConfig) -> fediac::net::ChaosHandle {
+    chaos_proxy(&ChaosProxyOptions {
+        listen: "127.0.0.1:0".into(),
+        upstream: upstream.to_string(),
+        config,
+    })
+    .unwrap()
+}
+
+/// The acceptance scenario: heavy chaos in BOTH directions, two jobs
+/// concurrently through one shared proxy, 5 rounds each, bit-exact.
+#[test]
+fn both_direction_chaos_two_jobs_five_rounds_bit_exact() {
+    let server = start_server();
+    let chaos = ChaosDirection::lossy(0.20, 0.10, 0.30);
+    let proxy = start_proxy(
+        server.local_addr(),
+        ChaosConfig { seed: 71, uplink: chaos, downlink: chaos },
+    );
+    let retx = AtomicU64::new(0);
+
+    let job_a = JobSetup {
+        job: 501,
+        seed: 17,
+        d: 384,
+        n_clients: 4,
+        threshold_a: 2,
+        payload_budget: 16,
+    };
+    let job_b = JobSetup {
+        job: 502,
+        seed: 23,
+        d: 300,
+        n_clients: 3,
+        threshold_a: 1,
+        payload_budget: 32,
+    };
+    let addr = proxy.local_addr();
+    std::thread::scope(|scope| {
+        scope.spawn(|| run_job(addr, &job_a, &retx));
+        scope.spawn(|| run_job(addr, &job_b, &retx));
+    });
+
+    let snap = proxy.snapshot();
+    assert_eq!(snap.flows, 7, "one NAT flow per client socket");
+    assert!(snap.up.dropped > 0, "uplink chaos never fired");
+    assert!(snap.down.dropped > 0, "downlink chaos never fired");
+    assert!(snap.up.reordered > 0 && snap.down.reordered > 0);
+    assert!(snap.up.duplicated > 0 && snap.down.duplicated > 0);
+    let stats = server.stats();
+    assert_eq!(stats.rounds_completed, 2 * ROUNDS as u64);
+    assert!(
+        stats.duplicates > 0 || retx.load(Ordering::Relaxed) > 0,
+        "chaos at these rates should force retransmission"
+    );
+    proxy.shutdown();
+    server.shutdown();
+}
+
+/// Direction sweep: the same lossy trio applied to only one side at a
+/// time, plus a corruption-heavy config (CRC must shield the codec), all
+/// bit-exact over multiple rounds.
+#[test]
+fn per_direction_and_corruption_matrix_stays_bit_exact() {
+    let lossy = ChaosDirection::lossy(0.20, 0.10, 0.30);
+    let corrupting = ChaosDirection::lossy(0.10, 0.05, 0.10).with_corrupt(0.15);
+    let matrix: Vec<(&str, ChaosConfig)> = vec![
+        (
+            "uplink-only",
+            ChaosConfig { seed: 81, uplink: lossy, downlink: ChaosDirection::clean() },
+        ),
+        (
+            "downlink-only",
+            ChaosConfig { seed: 82, uplink: ChaosDirection::clean(), downlink: lossy },
+        ),
+        ("corrupt-both", ChaosConfig { seed: 83, uplink: corrupting, downlink: corrupting }),
+    ];
+    for (name, config) in matrix {
+        let server = start_server();
+        let proxy = start_proxy(server.local_addr(), config);
+        let setup = JobSetup {
+            job: 600,
+            seed: 29,
+            d: 256,
+            n_clients: 2,
+            threshold_a: 1,
+            payload_budget: 16,
+        };
+        let retx = AtomicU64::new(0);
+        run_job(proxy.local_addr(), &setup, &retx);
+        let snap = proxy.snapshot();
+        let touched = snap.up.dropped
+            + snap.up.reordered
+            + snap.up.corrupted
+            + snap.down.dropped
+            + snap.down.reordered
+            + snap.down.corrupted;
+        assert!(touched > 0, "{name}: chaos config never fired");
+        assert_eq!(server.stats().rounds_completed, ROUNDS as u64, "{name}");
+        proxy.shutdown();
+        server.shutdown();
+    }
+}
+
+/// Empty-consensus regression: with a threshold no dimension reaches
+/// (disjoint hot dimension ranges per client), every round must still
+/// close on both sides — the client uploads the zero-lane completion
+/// block and receives the empty aggregate; the server frees the round
+/// instead of pinning a live-round slot until idle-release.
+#[test]
+fn unreachable_threshold_rounds_complete_without_wedging() {
+    let server = start_server();
+    let d = 512;
+    let n_clients = 2usize;
+    let retx = AtomicU64::new(0);
+
+    std::thread::scope(|scope| {
+        for client_id in 0..n_clients {
+            let server_addr = server.local_addr();
+            let retx = &retx;
+            scope.spawn(move || {
+                let mut opts = ClientOptions::new(
+                    server_addr.to_string(),
+                    700,
+                    client_id as u16,
+                    d,
+                    n_clients as u16,
+                );
+                // a = 2 but the clients' hot dimensions are disjoint
+                // halves of the index space, so no dimension ever gets
+                // two votes: k_S = 0 every round.
+                opts.threshold_a = 2;
+                opts.k = 8;
+                opts.backend_seed = 31;
+                opts.payload_budget = 32;
+                opts.timeout = Duration::from_millis(150);
+                opts.max_retries = 100;
+                opts.chaos = Some(ChaosConfig::symmetric(
+                    91 + client_id as u64,
+                    ChaosDirection::lossy(0.10, 0.05, 0.15),
+                ));
+                let mut client = FediacClient::connect(opts).unwrap();
+                for round in 1..=3usize {
+                    // Hot |U| only inside this client's private half; the
+                    // vote scorer (∝ |U|) cannot realistically pick a
+                    // ~1e-30-magnitude dimension over a 1.0 one.
+                    let lo = client_id * (d / 2);
+                    let update: Vec<f32> = (0..d)
+                        .map(|i| if (lo..lo + d / 2).contains(&i) { 1.0 } else { 0.0 })
+                        .collect();
+                    let out = client.run_round(round, &update).unwrap();
+                    assert!(
+                        out.gia_indices.is_empty(),
+                        "client {client_id} round {round}: expected empty consensus"
+                    );
+                    assert!(out.aggregate.is_empty());
+                    assert_eq!(out.residual, update, "empty round must carry all residual");
+                }
+                retx.fetch_add(client.stats.retransmissions, Ordering::Relaxed);
+            });
+        }
+    });
+
+    let stats = server.stats();
+    assert_eq!(
+        stats.rounds_completed, 3,
+        "every empty-consensus round must close server-side"
+    );
+    server.shutdown();
+}
+
+/// Re-join under chaos: restart the server (same port, empty state)
+/// between rounds. The client's next round runs into JOIN_UNKNOWN_JOB,
+/// re-registers inline and completes bit-exactly — all through a lossy,
+/// reordering proxy.
+#[test]
+fn server_restart_rejoin_under_chaos_stays_exact() {
+    let first = start_server();
+    let addr = first.local_addr();
+    let proxy = start_proxy(
+        addr,
+        ChaosConfig::symmetric(47, ChaosDirection::lossy(0.15, 0.10, 0.20)),
+    );
+
+    let d = 256;
+    let seed = 37u64;
+    let k = protocol::votes_per_client(d, 0.05);
+    let mut opts = ClientOptions::new(proxy.local_addr().to_string(), 800, 0, d, 1);
+    opts.threshold_a = 1;
+    opts.k = k;
+    opts.backend_seed = seed;
+    opts.payload_budget = 16;
+    opts.timeout = Duration::from_millis(150);
+    opts.max_retries = 400;
+    let mut client = FediacClient::connect(opts).unwrap();
+
+    let run_and_check = |client: &mut FediacClient, round: usize| {
+        let update = synthetic_update(seed, d, 0, round);
+        let out = client.run_round(round, &update).unwrap();
+        let (ref_idx, ref_lanes) =
+            reference_round(&[update], seed, round, k, 1, 12);
+        assert_eq!(out.gia_indices, ref_idx, "round {round}");
+        assert_eq!(out.aggregate, ref_lanes, "round {round}");
+    };
+    run_and_check(&mut client, 1);
+
+    // Kill the server and bring an amnesiac replacement up on the SAME
+    // address (UDP rebinds immediately; the proxy's upstream sockets
+    // keep pointing at it).
+    first.shutdown();
+    let second = serve(&ServeOptions {
+        bind: addr.to_string(),
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    assert_eq!(second.local_addr(), addr);
+
+    run_and_check(&mut client, 2);
+    assert!(client.stats.rejoins >= 1, "restart must force a mid-round re-join");
+    assert_eq!(second.stats().rounds_completed, 1);
+    proxy.shutdown();
+    second.shutdown();
+}
