@@ -9,6 +9,7 @@ use crate::sim::SimTime;
 pub struct LocalRound {
     /// U_t^i per client (with residual folded in by the caller if any).
     pub updates: Vec<Vec<f32>>,
+    /// Mean local training loss across clients.
     pub mean_loss: f64,
     /// Per-client local-training completion time (relative to round start).
     pub ready: Vec<SimTime>,

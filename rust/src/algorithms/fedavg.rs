@@ -12,9 +12,11 @@ use crate::configx::{AlgorithmKind, ExperimentConfig};
 use crate::fl::FlEnv;
 use crate::metrics::TrafficMeter;
 
+/// Plain parameter-server FedAvg (uncompressed reference point).
 pub struct FedAvg;
 
 impl FedAvg {
+    /// FedAvg has no knobs.
     pub fn new(_cfg: &ExperimentConfig) -> Self {
         FedAvg
     }

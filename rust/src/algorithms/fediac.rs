@@ -44,6 +44,7 @@ pub struct FediAc {
 }
 
 impl FediAc {
+    /// Configure FediAC for model dimension `d` from the experiment knobs.
     pub fn new(cfg: &ExperimentConfig, d: usize) -> Self {
         FediAc {
             residuals: vec![vec![0.0; d]; cfg.num_clients],
@@ -55,6 +56,8 @@ impl FediAc {
         }
     }
 
+    /// The quantisation bit-width in force (set by round 1's bootstrap
+    /// when the config leaves it to Corollary 1).
     pub fn bits(&self) -> Option<usize> {
         self.bits_b
     }

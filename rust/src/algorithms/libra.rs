@@ -20,6 +20,8 @@ use crate::fl::FlEnv;
 use crate::metrics::TrafficMeter;
 use crate::switch::{alu, waves_needed};
 
+/// libra baseline: hot dimensions aggregate on the switch, cold ones on
+/// a remote server (§II related work).
 pub struct Libra {
     residuals: Vec<Vec<f32>>,
     /// Per-dimension EMA of selection frequency (the hotness predictor).
@@ -32,6 +34,7 @@ pub struct Libra {
 }
 
 impl Libra {
+    /// Configure libra for model dimension `d` from the tuned baselines.
     pub fn new(cfg: &ExperimentConfig, d: usize) -> Self {
         let k = ((cfg.baselines.libra_k_frac * d as f64).round() as usize).clamp(1, d);
         // Hot slots sized to hot_frac of the expected per-round union,

@@ -17,11 +17,13 @@ use crate::metrics::TrafficMeter;
 /// Outcome of one global iteration.
 #[derive(Debug, Clone)]
 pub struct RoundReport {
+    /// Global iteration index.
     pub round: usize,
     /// Simulated duration of the round (s).
     pub duration_s: f64,
     /// Mean local training loss across clients.
     pub train_loss: f64,
+    /// Bytes the round moved.
     pub traffic: TrafficMeter,
     /// Switch aggregation ops consumed this round.
     pub agg_ops: u64,
@@ -31,6 +33,7 @@ pub struct RoundReport {
 
 /// A federated aggregation protocol.
 pub trait Algorithm {
+    /// Which algorithm this is (for labels and dispatch).
     fn kind(&self) -> AlgorithmKind;
 
     /// Execute global iteration `round`, mutating `env.params` in place

@@ -21,6 +21,7 @@ use crate::fl::FlEnv;
 use crate::metrics::TrafficMeter;
 use crate::switch::{alu, waves_needed};
 
+/// OmniReduce baseline: non-zero-block sparse aggregation (§II).
 pub struct OmniReduce {
     residuals: Vec<Vec<f32>>,
     k: usize,
@@ -29,6 +30,7 @@ pub struct OmniReduce {
 }
 
 impl OmniReduce {
+    /// Configure OmniReduce for model dimension `d`.
     pub fn new(cfg: &ExperimentConfig, d: usize) -> Self {
         OmniReduce {
             residuals: vec![vec![0.0; d]; cfg.num_clients],

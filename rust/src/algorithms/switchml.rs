@@ -15,11 +15,13 @@ use crate::fl::FlEnv;
 use crate::metrics::TrafficMeter;
 use crate::switch::{waves_needed, RegisterFile, UpdateAggregator};
 
+/// SwitchML baseline: dense quantised in-network aggregation (§II).
 pub struct SwitchMl {
     bits: usize,
 }
 
 impl SwitchMl {
+    /// Configure SwitchML from the tuned baselines.
     pub fn new(cfg: &ExperimentConfig) -> Self {
         SwitchMl { bits: cfg.baselines.switchml_bits }
     }

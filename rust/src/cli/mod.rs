@@ -14,14 +14,19 @@ pub struct Args {
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
 
+/// Argument-parsing failures surfaced to the user.
 #[derive(Debug, thiserror::Error)]
 pub enum CliError {
+    /// A value-style option was given without a value.
     #[error("option --{0} expects a value")]
     MissingValue(String),
+    /// An option's value failed to parse as the expected type.
     #[error("cannot parse --{key} value '{value}' as {ty}")]
     BadValue { key: String, value: String, ty: &'static str },
+    /// Options nobody read — almost always a typo (see [`Args::finish`]).
     #[error("unknown option(s): {0}")]
     Unknown(String),
+    /// A bare token after the subcommand.
     #[error("unexpected positional argument '{0}'")]
     UnexpectedPositional(String),
 }
@@ -62,6 +67,7 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// The leading subcommand token, if any.
     pub fn subcommand(&self) -> Option<&str> {
         self.subcommand.as_deref()
     }
@@ -71,14 +77,17 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// String option, or `default` when absent.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.raw(key).unwrap_or(default).to_string()
     }
 
+    /// String option, `None` when absent.
     pub fn get_opt_str(&self, key: &str) -> Option<String> {
         self.raw(key).map(|s| s.to_string())
     }
 
+    /// f64 option, or `default`; errors on an unparsable value.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.raw(key) {
             None => Ok(default),
@@ -90,6 +99,7 @@ impl Args {
         }
     }
 
+    /// usize option, or `default`; errors on an unparsable value.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.raw(key) {
             None => Ok(default),
@@ -101,6 +111,7 @@ impl Args {
         }
     }
 
+    /// u64 option, or `default`; errors on an unparsable value.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.raw(key) {
             None => Ok(default),
@@ -112,6 +123,7 @@ impl Args {
         }
     }
 
+    /// u32 option, or `default`; errors on an unparsable value.
     pub fn get_u32(&self, key: &str, default: u32) -> Result<u32, CliError> {
         match self.raw(key) {
             None => Ok(default),
@@ -123,6 +135,7 @@ impl Args {
         }
     }
 
+    /// u16 option, or `default`; errors on an unparsable value.
     pub fn get_u16(&self, key: &str, default: u16) -> Result<u16, CliError> {
         match self.raw(key) {
             None => Ok(default),
@@ -134,6 +147,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag: present (or `=true`) ⇒ true.
     pub fn get_flag(&self, key: &str) -> bool {
         matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
     }

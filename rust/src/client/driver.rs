@@ -23,7 +23,7 @@ use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
 use crate::util::{BitVec, Rng};
 use crate::wire::{
     decode_frame, decode_lanes, encode_frame, update_chunks, vote_chunks, ChunkAssembler,
-    Header, JobSpec, WireKind, DEFAULT_PAYLOAD_BUDGET,
+    Header, JobSpec, ShardPlan, WireKind, DEFAULT_PAYLOAD_BUDGET,
 };
 
 /// Broadcast frames of the *other* phase kept aside during a wait (see
@@ -35,7 +35,9 @@ const PENDING_CAP: usize = 256;
 pub struct ClientOptions {
     /// Server address, e.g. "127.0.0.1:7177".
     pub server: String,
+    /// Job id shared by every client of the job.
     pub job: u32,
+    /// This client's id in `[0, n_clients)`.
     pub client_id: u16,
     /// Total clients N in the job (all must agree).
     pub n_clients: u16,
@@ -64,9 +66,15 @@ pub struct ClientOptions {
     /// direction ([`crate::net::chaos`]). `None` = talk to the server
     /// directly.
     pub chaos: Option<ChaosConfig>,
+    /// Which slice of a sharded deployment `server` hosts (PROTOCOL.md
+    /// §8). [`ShardPlan::single`] for ordinary single-server jobs; the
+    /// sharded fan-out driver ([`crate::client::ShardedFediacClient`])
+    /// sets it per endpoint, with `d` already narrowed to the sub-model.
+    pub shard: ShardPlan,
 }
 
 impl ClientOptions {
+    /// Sensible defaults for one client of a job (paper k = 5%·d, b = 12).
     pub fn new(server: impl Into<String>, job: u32, client_id: u16, d: usize, n_clients: u16) -> Self {
         ClientOptions {
             server: server.into(),
@@ -83,6 +91,7 @@ impl ClientOptions {
             max_retries: 50,
             send_loss: 0.0,
             chaos: None,
+            shard: ShardPlan::single(),
         }
     }
 
@@ -93,6 +102,7 @@ impl ClientOptions {
             n_clients: self.n_clients,
             threshold_a: self.threshold_a,
             payload_budget: self.payload_budget as u16,
+            shard: self.shard,
         }
     }
 }
@@ -114,9 +124,23 @@ pub struct ClientStats {
     pub stream_resets: u64,
 }
 
+impl ClientStats {
+    /// Fold another endpoint's counters in — the single place that knows
+    /// every field, so multi-endpoint aggregation (the sharded driver)
+    /// cannot silently drop a counter added later.
+    pub fn add(&mut self, other: &ClientStats) {
+        self.retransmissions += other.retransmissions;
+        self.dropped_sends += other.dropped_sends;
+        self.polls += other.polls;
+        self.rejoins += other.rejoins;
+        self.stream_resets += other.stream_resets;
+    }
+}
+
 /// Result of one completed FediAC round over the wire.
 #[derive(Debug, Clone)]
 pub struct RoundOutcome {
+    /// The round's global important-index bitmap.
     pub gia: BitVec,
     /// Ascending selected dimensions (upload order of the lanes).
     pub gia_indices: Vec<usize>,
@@ -154,6 +178,7 @@ pub struct FediacClient {
     /// Keeps the per-client chaos proxy (if any) alive for the client's
     /// lifetime.
     chaos: Option<ChaosHandle>,
+    /// Cumulative driver counters.
     pub stats: ClientStats,
 }
 
@@ -215,6 +240,7 @@ impl FediacClient {
         Ok(client)
     }
 
+    /// The options this client connected with.
     pub fn options(&self) -> &ClientOptions {
         &self.opts
     }
@@ -457,6 +483,58 @@ impl FediacClient {
         }
     }
 
+    /// Run phase 1 over the wire: upload the vote bitmap blocks, await
+    /// the Golomb-coded GIA broadcast and return the decoded GIA (over
+    /// this endpoint's `d`) plus the server-folded global max-|U|.
+    ///
+    /// `run_round` drives this with the full-model vote; the sharded
+    /// fan-out driver ([`crate::client::ShardedFediacClient`]) calls it
+    /// per shard with sub-model bitmaps.
+    pub fn vote_phase(
+        &mut self,
+        round: u32,
+        votes: &BitVec,
+        local_max: f32,
+    ) -> Result<(BitVec, f32)> {
+        anyhow::ensure!(
+            votes.len() == self.opts.d,
+            "vote bitmap length {} != d {}",
+            votes.len(),
+            self.opts.d
+        );
+        let vote_frames = self.vote_frames(round, votes, local_max);
+        let (gia_bytes, gia_aux) = self.exchange(round, &vote_frames, WireKind::Gia)?;
+        let gia = golomb::decode_with_limit(&gia_bytes, self.opts.d)
+            .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
+        anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
+        let global_max = f32::from_bits(gia_aux);
+        anyhow::ensure!(
+            global_max.is_finite() && global_max > 0.0,
+            "GIA broadcast carried a non-finite global max ({global_max})"
+        );
+        Ok((gia, global_max))
+    }
+
+    /// Run phase 2 over the wire: upload the GIA-aligned quantised lanes,
+    /// await the aggregate broadcast and return the summed lanes (same
+    /// order and length as `lanes`). An empty `lanes` still uploads the
+    /// zero-lane completion block and awaits the empty aggregate —
+    /// skipping it would leave the two sides disagreeing on whether the
+    /// round happened at all.
+    pub fn update_phase(&mut self, round: u32, lanes: &[i32], f: f32) -> Result<Vec<i32>> {
+        let update_frames = self.update_frames(round, lanes, f);
+        let (agg_bytes, agg_aux) = self.exchange(round, &update_frames, WireKind::Aggregate)?;
+        let aggregate = decode_lanes(&agg_bytes)
+            .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
+        anyhow::ensure!(
+            aggregate.len() == lanes.len() && agg_aux as usize == lanes.len(),
+            "aggregate has {} lanes, expected k_S = {}",
+            aggregate.len(),
+            lanes.len()
+        );
+        Ok(aggregate)
+    }
+
     /// Execute both FediAC phases for `round` on this client's update
     /// vector (with any residual already folded in by the caller).
     pub fn run_round(&mut self, round: usize, update: &[f32]) -> Result<RoundOutcome> {
@@ -474,19 +552,11 @@ impl FediacClient {
         let votes =
             protocol::client_vote(update, self.opts.k, self.opts.backend_seed, round, cid);
         let local_max = compress::max_abs(update);
-        let vote_frames = self.vote_frames(round_u, &votes, local_max);
-        let (gia_bytes, gia_aux) = self.exchange(round_u, &vote_frames, WireKind::Gia)?;
-        let gia = golomb::decode_with_limit(&gia_bytes, self.opts.d)
-            .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
-        anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
-        let global_max = f32::from_bits(gia_aux);
-        anyhow::ensure!(
-            global_max.is_finite() && global_max > 0.0,
-            "GIA broadcast carried a non-finite global max ({global_max})"
-        );
+        let (gia, global_max) = self.vote_phase(round_u, &votes, local_max)?;
 
         // Phase 2: quantise against the GIA, upload aligned lanes, receive
-        // the aggregate.
+        // the aggregate (phase 2 runs even on an empty consensus — see
+        // `update_phase`).
         let f = compress::scale_factor(self.opts.bits_b, self.opts.n_clients as usize, global_max);
         let (q, residual) = protocol::client_quantize(
             update,
@@ -497,22 +567,8 @@ impl FediacClient {
             cid,
         );
         let gia_indices: Vec<usize> = gia.iter_ones().collect();
-        let k_s = gia_indices.len();
-        // Phase 2 runs even when the consensus is empty: `update_chunks`
-        // emits one zero-lane block as the completion signal, and the
-        // (empty) aggregate wait confirms the server closed the round.
-        // Skipping it would leave the two sides disagreeing on whether
-        // the round happened at all.
         let selected: Vec<i32> = gia_indices.iter().map(|&g| q[g]).collect();
-        let update_frames = self.update_frames(round_u, &selected, f);
-        let (agg_bytes, agg_aux) = self.exchange(round_u, &update_frames, WireKind::Aggregate)?;
-        let aggregate = decode_lanes(&agg_bytes)
-            .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
-        anyhow::ensure!(
-            aggregate.len() == k_s && agg_aux as usize == k_s,
-            "aggregate has {} lanes, expected k_S = {k_s}",
-            aggregate.len()
-        );
+        let aggregate = self.update_phase(round_u, &selected, f)?;
         let delta = compress::dequantize_aggregate(&aggregate, self.opts.n_clients as usize, f);
 
         Ok(RoundOutcome {

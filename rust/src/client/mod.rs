@@ -10,9 +10,16 @@
 //!   updates, await the aggregate; every wait uses timeout-based
 //!   retransmission (the server's scoreboards drop the duplicates), so
 //!   lossy links only cost time, never correctness.
+//! * [`sharded`] — the multi-server fan-out: the same round math spread
+//!   over N collaborating shard servers along the
+//!   [`crate::wire::ShardLayout`] block-ownership map, phases running
+//!   concurrently per shard and the GIA/aggregate reassembled from the
+//!   per-shard broadcasts (PROTOCOL.md §8).
 
 pub mod driver;
 pub mod protocol;
+pub mod sharded;
 
 pub use driver::{ClientOptions, ClientStats, FediacClient, RoundOutcome};
 pub use protocol::{client_quantize, client_vote, compress_seed, vote_seed, votes_per_client};
+pub use sharded::ShardedFediacClient;

@@ -1,0 +1,274 @@
+//! Sharded fan-out driver: one logical FediAC client talking to N
+//! collaborating aggregation servers at once (PROTOCOL.md §8).
+//!
+//! The round math is *identical* to the single-server
+//! [`FediacClient`] — one global vote, one global quantisation — only
+//! the transport fans out: the vote bitmap is scattered into per-shard
+//! sub-bitmaps along the [`ShardLayout`] block-ownership map, each shard
+//! runs its two phases concurrently (a thread per endpoint, so one slow
+//! or lossy shard overlaps the others' waits), and the full GIA and
+//! aggregate reassemble from the per-shard broadcasts. Because
+//! thresholding and integer summation are per-dimension, the reassembled
+//! round is bit-exact against the single-server wire path and the
+//! in-process `algorithms::fediac` round (`tests/wire_shard.rs` proves
+//! both, clean and under `net::chaos`).
+
+use std::thread;
+
+use anyhow::Result;
+
+use crate::client::driver::{ClientOptions, ClientStats, FediacClient, RoundOutcome};
+use crate::client::protocol;
+use crate::compress;
+use crate::util::BitVec;
+use crate::wire::{ShardLayout, ShardPlan, MAX_SHARDS};
+
+/// A connected sharded client: one [`FediacClient`] per shard endpoint,
+/// plus the ownership layout that scatters uploads and gathers
+/// broadcasts.
+pub struct ShardedFediacClient {
+    shards: Vec<FediacClient>,
+    layout: ShardLayout,
+    /// Base options with the *global* model dimension (`server` names
+    /// shard 0's endpoint but is otherwise unused).
+    opts: ClientOptions,
+}
+
+/// Run one closure per shard client concurrently (a scoped thread per
+/// endpoint, so one slow or lossy shard overlaps the others' waits) and
+/// collect the results in shard order, failing on the first error.
+fn fan_out<T: Send>(
+    shards: &mut [FediacClient],
+    work: impl Fn(usize, &mut FediacClient) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    let mut results = Vec::with_capacity(shards.len());
+    thread::scope(|scope| {
+        let work = &work;
+        let mut handles = Vec::with_capacity(shards.len());
+        for (s, client) in shards.iter_mut().enumerate() {
+            handles.push(scope.spawn(move || work(s, client)));
+        }
+        for h in handles {
+            results.push(h.join().expect("shard worker thread panicked"));
+        }
+    });
+    results.into_iter().collect()
+}
+
+impl ShardedFediacClient {
+    /// Register with every shard endpoint concurrently. `servers[s]`
+    /// hosts slice `s`; `base.d` is the full model dimension — each
+    /// shard is joined with a [`crate::wire::JobSpec`] narrowed to its
+    /// own sub-model and the matching [`ShardPlan`]. Plans in which some
+    /// shard owns no vote blocks (more servers than blocks) are refused
+    /// up front.
+    pub fn connect(servers: &[String], base: ClientOptions) -> Result<Self> {
+        let n = servers.len();
+        anyhow::ensure!(
+            (1..=MAX_SHARDS as usize).contains(&n),
+            "shard count {n} must be in [1, {MAX_SHARDS}]"
+        );
+        let layout = ShardLayout::new(base.d, base.payload_budget, n);
+        for s in 0..n {
+            anyhow::ensure!(
+                layout.shard_dims(s) > 0,
+                "shard {s} owns no vote blocks: d={} at budget {} gives only {} blocks for \
+                 {n} shards",
+                base.d,
+                base.payload_budget,
+                layout.n_blocks()
+            );
+        }
+        let mut shard_opts = Vec::with_capacity(n);
+        for (s, server) in servers.iter().enumerate() {
+            let mut o = base.clone();
+            o.server = server.clone();
+            o.d = layout.shard_dims(s);
+            o.shard = ShardPlan { n_shards: n as u8, shard_id: s as u8 };
+            if let Some(c) = o.chaos.as_mut() {
+                // Decorrelate the per-shard chaos streams, mirroring the
+                // proxy's per-flow lane seeding.
+                c.seed ^= (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            }
+            shard_opts.push(o);
+        }
+        // Concurrent joins: under chaos a single join can take several
+        // retransmission cycles, and serialising N of them would stack
+        // the timeouts.
+        let mut joined: Vec<Result<FediacClient>> = Vec::with_capacity(n);
+        thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n);
+            for o in shard_opts {
+                handles.push(scope.spawn(move || FediacClient::connect(o)));
+            }
+            for h in handles {
+                joined.push(h.join().expect("shard join thread panicked"));
+            }
+        });
+        let shards = joined.into_iter().collect::<Result<Vec<_>>>()?;
+        Ok(ShardedFediacClient { shards, layout, opts: base })
+    }
+
+    /// Number of shard endpoints this client fans out to.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The block-ownership layout shared with the servers.
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// Per-shard clients (index = shard id), e.g. for per-endpoint
+    /// chaos snapshots in tests.
+    pub fn shards(&self) -> &[FediacClient] {
+        &self.shards
+    }
+
+    /// Driver counters summed across every shard endpoint.
+    pub fn stats(&self) -> ClientStats {
+        let mut total = ClientStats::default();
+        for c in &self.shards {
+            total.add(&c.stats);
+        }
+        total
+    }
+
+    /// Execute both FediAC phases for `round` across every shard,
+    /// returning the same [`RoundOutcome`] a single-server round
+    /// produces for the same inputs.
+    pub fn run_round(&mut self, round: usize, update: &[f32]) -> Result<RoundOutcome> {
+        anyhow::ensure!(
+            update.len() == self.opts.d,
+            "update dimension {} != d {}",
+            update.len(),
+            self.opts.d
+        );
+        let retx_before = self.stats().retransmissions;
+        let round_u = round as u32;
+        let cid = self.opts.client_id as usize;
+
+        // Phase 1: one global vote, scattered along block ownership and
+        // fanned out concurrently; the full GIA reassembles from the
+        // per-shard broadcasts.
+        let votes =
+            protocol::client_vote(update, self.opts.k, self.opts.backend_seed, round, cid);
+        let local_max = compress::max_abs(update);
+        let sub_votes = self.layout.split_bitmap(&votes);
+        let partials = fan_out(&mut self.shards, |s, client| {
+            client.vote_phase(round_u, &sub_votes[s], local_max)
+        })?;
+        let (sub_gias, maxima): (Vec<BitVec>, Vec<f32>) = partials.into_iter().unzip();
+        let gia = self
+            .layout
+            .merge_bitmaps(&sub_gias)
+            .map_err(|e| anyhow::anyhow!("reassembling the sharded GIA: {e}"))?;
+        // Every shard folds the same per-client maxima (each client
+        // reports its full-model max-|U| to every shard), so a
+        // disagreement means the shards saw different client sets.
+        let global_max = maxima[0];
+        for (s, &m) in maxima.iter().enumerate() {
+            anyhow::ensure!(
+                m == global_max,
+                "shard {s} folded global max {m} but shard 0 folded {global_max}: the shards \
+                 disagree on the client set"
+            );
+        }
+
+        // Phase 2: one global quantisation against the reassembled GIA;
+        // each selected lane uploads to the shard owning its vote block,
+        // and the global aggregate interleaves back from the per-shard
+        // sums.
+        let f = compress::scale_factor(self.opts.bits_b, self.opts.n_clients as usize, global_max);
+        let (q, residual) = protocol::client_quantize(
+            update,
+            &gia.to_f32_mask(),
+            f,
+            self.opts.backend_seed,
+            round,
+            cid,
+        );
+        let gia_indices: Vec<usize> = gia.iter_ones().collect();
+        let lanes_per_shard: Vec<Vec<i32>> = self
+            .layout
+            .split_selected(&gia)
+            .iter()
+            .map(|idxs| idxs.iter().map(|&g| q[g]).collect())
+            .collect();
+        let parts = fan_out(&mut self.shards, |s, client| {
+            client.update_phase(round_u, &lanes_per_shard[s], f)
+        })?;
+        let aggregate = self
+            .layout
+            .merge_lanes(&gia, &parts)
+            .map_err(|e| anyhow::anyhow!("reassembling the sharded aggregate: {e}"))?;
+        let delta = compress::dequantize_aggregate(&aggregate, self.opts.n_clients as usize, f);
+
+        Ok(RoundOutcome {
+            gia,
+            gia_indices,
+            global_max,
+            scale_f: f,
+            aggregate,
+            delta,
+            residual,
+            retransmissions: self.stats().retransmissions - retx_before,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::{serve_sharded, ServeOptions};
+    use std::time::Duration;
+
+    #[test]
+    fn connect_refuses_empty_shards_and_bad_counts() {
+        // d = 64 at budget 8 is one vote block: a second shard would own
+        // nothing, and the driver must say so before any socket work.
+        let opts = ClientOptions::new("127.0.0.1:1", 3, 0, 64, 1);
+        let servers = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        let err = ShardedFediacClient::connect(&servers, opts.clone()).unwrap_err();
+        assert!(err.to_string().contains("owns no vote blocks"), "{err}");
+        let too_many: Vec<String> =
+            (0..17).map(|i| format!("127.0.0.1:{}", 100 + i)).collect();
+        assert!(ShardedFediacClient::connect(&too_many, opts).is_err());
+    }
+
+    #[test]
+    fn two_shard_round_trip_matches_single_client_math() {
+        // N_clients = 1, a = 1: the reassembled GIA is exactly the
+        // client's own vote set and the aggregate its own upload —
+        // across two shard servers.
+        let handles = serve_sharded(&ServeOptions::default(), 2).unwrap();
+        let servers: Vec<String> =
+            handles.iter().map(|h| h.local_addr().to_string()).collect();
+        let mut opts = ClientOptions::new(servers[0].clone(), 91, 0, 300, 1);
+        opts.threshold_a = 1;
+        opts.payload_budget = 16; // several blocks per shard
+        opts.backend_seed = 13;
+        opts.timeout = Duration::from_millis(300);
+        let mut client = ShardedFediacClient::connect(&servers, opts).unwrap();
+        assert_eq!(client.n_shards(), 2);
+
+        let update: Vec<f32> = (0..300).map(|i| ((i as f32) * 0.13).sin() * 0.01).collect();
+        let out = client.run_round(1, &update).unwrap();
+
+        let votes = protocol::client_vote(&update, client.opts.k, 13, 1, 0);
+        assert_eq!(out.gia, votes, "N=1, a=1 ⇒ GIA = own votes");
+        let m = compress::max_abs(&update).max(f32::MIN_POSITIVE);
+        assert_eq!(out.global_max, m);
+        let f = compress::scale_factor(12, 1, m);
+        let (q, _) = protocol::client_quantize(&update, &votes.to_f32_mask(), f, 13, 1, 0);
+        let want: Vec<i32> = out.gia_indices.iter().map(|&g| q[g]).collect();
+        assert_eq!(out.aggregate, want);
+        // Each shard completed its own round.
+        for h in &handles {
+            assert_eq!(h.stats().rounds_completed, 1);
+        }
+        for h in handles {
+            h.shutdown();
+        }
+    }
+}

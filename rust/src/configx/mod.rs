@@ -22,6 +22,7 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// Parse a CLI/TOML dataset name; `None` when unrecognised.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "tiny" => DatasetKind::Tiny,
@@ -32,6 +33,7 @@ impl DatasetKind {
         })
     }
 
+    /// Canonical lowercase name (the CLI/label form).
     pub fn name(&self) -> &'static str {
         match self {
             DatasetKind::Tiny => "tiny",
@@ -41,6 +43,7 @@ impl DatasetKind {
         }
     }
 
+    /// Label-space size of the dataset.
     pub fn num_classes(&self) -> usize {
         match self {
             DatasetKind::Tiny | DatasetKind::SynthCifar10 => 10,
@@ -73,6 +76,7 @@ pub enum Partition {
 }
 
 impl Partition {
+    /// Human-readable label, e.g. `iid` or `dirichlet(0.5)`.
     pub fn name(&self) -> String {
         match self {
             Partition::Iid => "iid".into(),
@@ -85,15 +89,20 @@ impl Partition {
 /// In-network aggregation algorithm under test.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AlgorithmKind {
+    /// The paper's two-phase voting/aggregation protocol.
     FediAc,
+    /// SwitchML-style dense quantised in-network aggregation.
     SwitchMl,
+    /// OmniReduce-style non-zero-block sparse aggregation.
     OmniReduce,
+    /// libra-style hot/cold index split (switch + remote server).
     Libra,
     /// Plain parameter-server FedAvg (uncompressed reference).
     FedAvg,
 }
 
 impl AlgorithmKind {
+    /// Parse a CLI/TOML algorithm name; `None` when unrecognised.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "fediac" => AlgorithmKind::FediAc,
@@ -105,6 +114,7 @@ impl AlgorithmKind {
         })
     }
 
+    /// Canonical lowercase name (the CLI/label form).
     pub fn name(&self) -> &'static str {
         match self {
             AlgorithmKind::FediAc => "fediac",
@@ -115,6 +125,7 @@ impl AlgorithmKind {
         }
     }
 
+    /// Every algorithm, in the paper's presentation order.
     pub const ALL: [AlgorithmKind; 5] = [
         AlgorithmKind::FediAc,
         AlgorithmKind::SwitchMl,
@@ -127,6 +138,7 @@ impl AlgorithmKind {
 /// Programmable-switch performance profile (§V-A2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PsProfile {
+    /// Profile label ("high" / "low").
     pub name: String,
     /// Mean per-packet aggregation time (s): 3.03e-7 high, 3.03e-6 low.
     pub agg_mean_s: f64,
@@ -140,6 +152,7 @@ pub struct PsProfile {
 }
 
 impl PsProfile {
+    /// The paper's high-performance switch profile.
     pub fn high() -> Self {
         PsProfile {
             name: "high".into(),
@@ -149,6 +162,7 @@ impl PsProfile {
         }
     }
 
+    /// The paper's low-performance switch profile (10× slower service).
     pub fn low() -> Self {
         PsProfile {
             name: "low".into(),
@@ -158,6 +172,7 @@ impl PsProfile {
         }
     }
 
+    /// Parse a CLI profile name; `None` when unrecognised.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "high" => Some(PsProfile::high()),
@@ -170,11 +185,14 @@ impl PsProfile {
 /// Learning-rate schedule lr(t) = base / (1 + sqrt(t)/div) (§V-A1).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LrSchedule {
+    /// Base learning rate at round 0.
     pub base: f64,
+    /// Decay divisor: larger means slower decay.
     pub div: f64,
 }
 
 impl LrSchedule {
+    /// Learning rate for `round`.
     pub fn at(&self, round: usize) -> f64 {
         self.base / (1.0 + (round as f64).sqrt() / self.div)
     }
@@ -190,6 +208,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a CLI backend name; `None` when unrecognised.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "native" => Some(BackendKind::Native),
@@ -265,18 +284,29 @@ impl Default for BaselineConf {
 /// Complete description of one experiment run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Dataset generator.
     pub dataset: DatasetKind,
+    /// Client data partition scheme.
     pub partition: Partition,
+    /// Aggregation algorithm under test.
     pub algorithm: AlgorithmKind,
+    /// Model-execution backend.
     pub backend: BackendKind,
+    /// Programmable-switch performance profile.
     pub ps: PsProfile,
+    /// Clients N contributing per round.
     pub num_clients: usize,
+    /// Local SGD iterations per round (paper: E).
     pub local_iters: usize,
+    /// Rounds to run (unless the time limit fires first).
     pub rounds: usize,
     /// Stop once simulated wall-clock exceeds this (paper fig. 3/4: 500 s).
     pub sim_time_limit_s: Option<f64>,
+    /// Learning-rate schedule.
     pub lr: LrSchedule,
+    /// FediAC hyper-parameters.
     pub fediac: FediAcConf,
+    /// Baseline hyper-parameters.
     pub baselines: BaselineConf,
     /// Ethernet payload per packet (paper: 1,500-byte packets, §V-A2).
     pub packet_mtu: usize,
@@ -302,6 +332,7 @@ pub struct ExperimentConfig {
     pub loss_rate: f64,
     /// Retransmission timeout (s).
     pub retx_timeout_s: f64,
+    /// Root seed every derived RNG stream mixes in.
     pub seed: u64,
 }
 
@@ -333,14 +364,19 @@ impl Default for ExperimentConfig {
     }
 }
 
+/// Everything that can go wrong building or loading a config.
 #[derive(Debug, thiserror::Error)]
 pub enum ConfigError {
+    /// A field name or enum value is not recognised.
     #[error("unknown {field}: '{value}'")]
     Unknown { field: &'static str, value: String },
+    /// A value is recognised but out of range / inconsistent.
     #[error("invalid config: {0}")]
     Invalid(String),
+    /// The TOML-subset loader failed.
     #[error(transparent)]
     Toml(#[from] toml::TomlError),
+    /// Reading the config file failed.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
 }
@@ -440,6 +476,7 @@ impl ExperimentConfig {
         self.apply_table(&toml::parse(&text)?)
     }
 
+    /// Cross-field sanity checks (run after presets + overrides).
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.num_clients == 0 {
             return Err(ConfigError::Invalid("num_clients must be > 0".into()));

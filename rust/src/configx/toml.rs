@@ -18,14 +18,20 @@ use std::collections::BTreeMap;
 /// Parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// `[v, v, …]` of any supported scalars.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string form, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -33,6 +39,7 @@ impl Value {
         }
     }
 
+    /// Numeric form (ints widen to f64).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -41,6 +48,7 @@ impl Value {
         }
     }
 
+    /// Integer form, if this is a [`Value::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -48,6 +56,7 @@ impl Value {
         }
     }
 
+    /// Boolean form, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -56,8 +65,10 @@ impl Value {
     }
 }
 
+/// Parse failure with its 1-based line number.
 #[derive(Debug, thiserror::Error)]
 pub enum TomlError {
+    /// Malformed line: (line number, description).
     #[error("line {0}: {1}")]
     Parse(usize, String),
 }
@@ -65,34 +76,42 @@ pub enum TomlError {
 /// Flat dotted-key map of parsed values.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Values keyed by dotted path, e.g. `fediac.threshold_a`.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Table {
+    /// Look a dotted key up.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
 
+    /// String at `key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
     }
 
+    /// Float (or widened int) at `key`, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// Unsigned integer at `key`, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_i64()).map(|i| i as usize).unwrap_or(default)
     }
 
+    /// u64 at `key`, or `default`.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.as_i64()).map(|i| i as u64).unwrap_or(default)
     }
 
+    /// Bool at `key`, or `default`.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// Insert/overwrite a dotted key.
     pub fn set(&mut self, key: &str, value: Value) {
         self.entries.insert(key.to_string(), value);
     }

@@ -14,10 +14,12 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Empty dataset with fixed row width and label space.
     pub fn new(feature_len: usize, num_classes: usize) -> Self {
         Dataset { features: Vec::new(), labels: Vec::new(), feature_len, num_classes }
     }
 
+    /// Append one labelled sample.
     pub fn push(&mut self, features: &[f32], label: u16) {
         debug_assert_eq!(features.len(), self.feature_len);
         debug_assert!((label as usize) < self.num_classes);
@@ -25,31 +27,38 @@ impl Dataset {
         self.labels.push(label);
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when no samples were pushed.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Floats per sample row.
     pub fn feature_len(&self) -> usize {
         self.feature_len
     }
 
+    /// Label-space size.
     pub fn num_classes(&self) -> usize {
         self.num_classes
     }
 
+    /// Feature row of sample `idx`.
     pub fn features_of(&self, idx: usize) -> &[f32] {
         let lo = idx * self.feature_len;
         &self.features[lo..lo + self.feature_len]
     }
 
+    /// Label of sample `idx`.
     pub fn label_of(&self, idx: usize) -> u16 {
         self.labels[idx]
     }
 
+    /// All labels in sample order.
     pub fn labels(&self) -> &[u16] {
         &self.labels
     }
@@ -80,13 +89,16 @@ impl Dataset {
 /// Train/test split of a generated corpus plus the per-client partition.
 #[derive(Debug, Clone)]
 pub struct FederatedData {
+    /// Training corpus (partitioned by `client_indices`).
     pub train: Dataset,
+    /// Held-out evaluation corpus.
     pub test: Dataset,
     /// Per-client indices into `train`.
     pub client_indices: Vec<Vec<usize>>,
 }
 
 impl FederatedData {
+    /// Clients in the partition.
     pub fn n_clients(&self) -> usize {
         self.client_indices.len()
     }

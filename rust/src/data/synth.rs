@@ -40,9 +40,11 @@ fn class_template(kind: DatasetKind, class: usize, feature_len: usize) -> Vec<f3
 pub struct SynthConfig {
     /// Signal-to-noise: sample = template·signal + N(0, noise).
     pub signal: f32,
+    /// Additive Gaussian noise std.
     pub noise: f32,
     /// Per-writer style-shift strength (FEMNIST only).
     pub style: f32,
+    /// Held-out test samples to generate.
     pub test_samples: usize,
 }
 
@@ -113,6 +115,8 @@ pub fn generate(
     )
 }
 
+/// [`generate`] with explicit generation knobs instead of the per-kind
+/// defaults.
 pub fn generate_with(
     kind: DatasetKind,
     partition: Partition,

@@ -14,9 +14,13 @@ use crate::metrics::RunRecorder;
 
 /// One panel of Fig. 2.
 pub struct Fig2Panel {
+    /// Panel dataset.
     pub dataset: DatasetKind,
+    /// Panel partition scheme.
     pub partition: Partition,
+    /// Switch profile of this panel.
     pub ps: PsProfile,
+    /// One recorded run per algorithm.
     pub runs: Vec<(AlgorithmKind, RunRecorder)>,
 }
 

@@ -13,7 +13,9 @@ use crate::configx::{
 };
 use crate::experiments::{runner, RunOptions, Scale};
 
+/// Dirichlet β grid of the paper's Fig. 3.
 pub const BETAS: [f64; 4] = [0.3, 0.5, 1.0, 5.0];
+/// Algorithms compared in Fig. 3.
 pub const FIG3_ALGOS: [AlgorithmKind; 2] = [AlgorithmKind::FediAc, AlgorithmKind::Libra];
 
 /// (β, algorithm, final accuracy) grid for one PS profile.
@@ -47,6 +49,7 @@ pub fn run_sweep(
     Ok(out)
 }
 
+/// Render the sweep grid as a TSV block.
 pub fn render(results: &[(f64, AlgorithmKind, f64)], ps_name: &str) -> String {
     let mut out = format!(
         "# fig3 (PS = {ps_name}): final accuracy vs Dirichlet beta\n\

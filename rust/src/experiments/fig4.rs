@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::configx::{AlgorithmKind, DatasetKind, ExperimentConfig, Partition};
 use crate::experiments::{runner, RunOptions, Scale};
 
+/// Voting thresholds a as fractions of N (the paper's Fig. 4 grid).
 pub const A_FRACTIONS: [f64; 4] = [0.05, 0.10, 0.15, 0.20];
 
 /// Grid entry: (N, a, accuracy).
@@ -45,6 +46,7 @@ pub fn run_sweep(
     Ok(out)
 }
 
+/// Render the sweep grid as a TSV block.
 pub fn render(results: &[(usize, usize, f64)], label: &str) -> String {
     let mut out = format!(
         "# fig4 ({label}): FediAC final accuracy vs voting threshold a\n\

@@ -24,15 +24,22 @@ use crate::configx::{BackendKind, DatasetKind, ExperimentConfig};
 /// the EXPERIMENTS.md reference scale, and every knob is CLI-overridable.
 #[derive(Debug, Clone)]
 pub struct Scale {
+    /// Global rounds per run.
     pub rounds: usize,
+    /// Clients N.
     pub num_clients: usize,
+    /// Synthetic samples generated per client.
     pub samples_per_client: usize,
+    /// Simulated wall-clock budget, if any.
     pub sim_time_limit_s: Option<f64>,
+    /// Model-execution backend.
     pub backend: BackendKind,
+    /// Evaluate accuracy every this many rounds.
     pub eval_every: usize,
     /// Wire-dimension scaling (see ExperimentConfig::net_scale).
     /// 0.0 = auto: paper_d(dataset) / testbed_d (see `auto_net_scale`).
     pub net_scale: f64,
+    /// Root seed for the whole run.
     pub seed: u64,
 }
 

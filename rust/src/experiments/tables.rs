@@ -16,7 +16,9 @@ use crate::experiments::{runner, RunOptions, Scale};
 /// One table row.
 #[derive(Debug, Clone)]
 pub struct TableRow {
+    /// Scenario label (dataset + partition).
     pub scenario: String,
+    /// Accuracy bar the scenario runs until.
     pub target_accuracy: f64,
     /// (algorithm, traffic MB, sim time s) for those that reached target.
     pub reached: Vec<(AlgorithmKind, f64, f64)>,

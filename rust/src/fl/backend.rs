@@ -14,7 +14,9 @@
 /// Result of one client's local training round (E SGD iterations).
 #[derive(Debug, Clone)]
 pub struct LocalTrainOutput {
+    /// Parameters after the client's E local iterations.
     pub new_params: Vec<f32>,
+    /// Mean training loss over those iterations.
     pub mean_loss: f32,
 }
 

@@ -18,13 +18,17 @@ use crate::util::Rng;
 
 /// The mutable world one experiment run lives in.
 pub struct FlEnv {
+    /// The experiment's full configuration.
     pub cfg: ExperimentConfig,
+    /// Model-execution backend (native MLP or PJRT artifacts).
     pub backend: Box<dyn ModelBackend>,
+    /// The simulated programmable switch (primary PS in multi-PS mode).
     pub switch: ProgrammableSwitch,
     /// Mean upload rate per client (packets/s) from the cellular traces.
     pub rates: Vec<f64>,
     /// Global model (identical on every client after each round).
     pub params: Vec<f32>,
+    /// Environment RNG (arrival/service/jitter draws).
     pub rng: Rng,
     /// Simulated wall-clock (end of the last completed round).
     pub now: SimTime,
@@ -37,6 +41,7 @@ pub struct FlEnv {
 pub struct PhaseTiming {
     /// Absolute sim time at which the switch finished the last packet.
     pub end: SimTime,
+    /// Packets the phase put on the wire (first copies only).
     pub packets: u64,
     /// Loss-triggered retransmissions (extra wire copies; the scoreboard
     /// drops the occasional spurious duplicate).
@@ -44,6 +49,8 @@ pub struct PhaseTiming {
 }
 
 impl FlEnv {
+    /// Build the environment: trace-derived client rates, the configured
+    /// switch profile (net_scale applied) and a seeded RNG.
     pub fn new(cfg: ExperimentConfig, backend: Box<dyn ModelBackend>) -> Self {
         // net_scale emulates a net_scale×-larger model on the wire: each
         // "packet" here stands for net_scale real packets, so per-packet
@@ -70,10 +77,12 @@ impl FlEnv {
         }
     }
 
+    /// Initialise the global model from the backend.
     pub fn init_model(&mut self) {
         self.params = self.backend.init_params();
     }
 
+    /// Model dimension d.
     pub fn d(&self) -> usize {
         self.backend.d()
     }

@@ -33,6 +33,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Build a backend over `data` with a `hidden`-unit MLP, `local_iters`
+    /// SGD steps per round at batch size `batch`, seeded by `seed`.
     pub fn new(
         data: FederatedData,
         hidden: usize,
@@ -58,6 +60,7 @@ impl NativeBackend {
         }
     }
 
+    /// The federated dataset this backend trains on.
     pub fn data(&self) -> &FederatedData {
         &self.data
     }

@@ -2,7 +2,13 @@
 //!
 //! Reproduction of Su et al., "Expediting In-Network Federated Learning by
 //! Voting-Based Consensus Model Compression" (2024). See DESIGN.md for the
-//! architecture and README.md for usage.
+//! architecture, README.md for usage, and PROTOCOL.md for the normative
+//! wire-protocol specification.
+
+// Doc rot fails CI: `cargo doc --no-deps` runs with `-D warnings`, so
+// every public item (fields and stat counters included) must say what
+// it is for.
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod cli;

@@ -13,7 +13,11 @@
 //! fediac serve  [--bind 0.0.0.0:7177] [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-drop 0.0] [--down-dup 0.0]
 //!               [--down-reorder 0.0] [--down-corrupt 0.0] [--chaos-seed 0]
-//! fediac client [--server host:port] [--job 1] [--client-id 0]
+//! fediac shard-serve [--bind-base 0.0.0.0:7177] [--shards 2]
+//!               [--ps high|low] [--memory BYTES] [--host-bytes BYTES]
+//!               [--down-*…] [--chaos-seed 0] [--stats-every 10]
+//! fediac client [--server host:port | --shards host:p0,host:p1,…]
+//!               [--job 1] [--client-id 0]
 //!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
 //!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
 //!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
@@ -279,9 +283,14 @@ fn chaos_direction_from(args: &Args, prefix: &str) -> Result<fediac::net::ChaosD
     })
 }
 
-/// Run the networked aggregation daemon until killed.
-fn cmd_serve(args: &Args) -> Result<()> {
-    let bind = args.get_str("bind", "0.0.0.0:7177");
+/// Parse the serve-family options shared by `serve` and `shard-serve`
+/// (profile, register memory, host-byte limits, downlink chaos, seed)
+/// plus the stats-print cadence — one list, so the two subcommands
+/// cannot grow divergent CLI surfaces.
+fn serve_options_from(
+    args: &Args,
+    bind: String,
+) -> Result<(fediac::server::ServeOptions, u64)> {
     let mut profile = ps_from(args)?;
     profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
     let stats_every = args.get_u64("stats-every", 10)?;
@@ -293,15 +302,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let down = chaos_direction_from(args, "down")?;
     let downlink_chaos = (!down.is_clean()).then_some(down);
     let chaos_seed = args.get_u64("chaos-seed", 0)?;
+    Ok((
+        fediac::server::ServeOptions { bind, profile, limits, downlink_chaos, chaos_seed },
+        stats_every,
+    ))
+}
+
+/// Run the networked aggregation daemon until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let bind = args.get_str("bind", "0.0.0.0:7177");
+    let (opts, stats_every) = serve_options_from(args, bind)?;
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let handle = fediac::server::serve(&fediac::server::ServeOptions {
-        bind,
-        profile,
-        limits,
-        downlink_chaos,
-        chaos_seed,
-    })?;
+    let handle = fediac::server::serve(&opts)?;
     eprintln!(
         "[fediac] aggregation server listening on {} (ctrl-c to stop)",
         handle.local_addr()
@@ -326,6 +339,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.non_finite_aux,
             s.decode_errors
         );
+    }
+}
+
+/// Run N collaborating shard daemons in one process until killed: shard
+/// `s` listens on `--bind-base`'s port plus `s` (PROTOCOL.md §8). Point
+/// clients at the full endpoint list with `fediac client --shards`.
+fn cmd_shard_serve(args: &Args) -> Result<()> {
+    let bind = args.get_str("bind-base", "0.0.0.0:7177");
+    let n_shards = args.get_usize("shards", 2)?;
+    let n_shards = u8::try_from(n_shards)
+        .map_err(|_| anyhow::anyhow!("--shards {n_shards} out of range (max 16)"))?;
+    let (opts, stats_every) = serve_options_from(args, bind)?;
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let handles = fediac::server::serve_sharded(&opts, n_shards)?;
+    let endpoints: Vec<String> = handles.iter().map(|h| h.local_addr().to_string()).collect();
+    for (s, addr) in endpoints.iter().enumerate() {
+        eprintln!("[fediac] shard {s}/{n_shards} listening on {addr}");
+    }
+    eprintln!(
+        "[fediac] sharded deployment up (ctrl-c to stop); clients connect with \
+         --shards {}",
+        endpoints.join(",")
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
+        for (s, h) in handles.iter().enumerate() {
+            let st = h.stats();
+            eprintln!(
+                "[fediac] shard {s}: pkts={} jobs={} rounds={} dup={} spill={} waves={} \
+                 stalls={} err={}",
+                st.packets,
+                st.jobs_created,
+                st.rounds_completed,
+                st.duplicates,
+                st.spilled,
+                st.waves,
+                st.register_stalls,
+                st.decode_errors
+            );
+        }
     }
 }
 
@@ -372,10 +426,37 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     }
 }
 
+/// Either transport behind `fediac client`: one server, or the sharded
+/// fan-out across the `--shards` endpoint list.
+enum AnyClient {
+    Single(fediac::client::FediacClient),
+    Sharded(fediac::client::ShardedFediacClient),
+}
+
+impl AnyClient {
+    fn run_round(
+        &mut self,
+        round: usize,
+        update: &[f32],
+    ) -> Result<fediac::client::RoundOutcome> {
+        match self {
+            AnyClient::Single(c) => c.run_round(round, update),
+            AnyClient::Sharded(c) => c.run_round(round, update),
+        }
+    }
+
+    fn stats(&self) -> fediac::client::ClientStats {
+        match self {
+            AnyClient::Single(c) => c.stats,
+            AnyClient::Sharded(c) => c.stats(),
+        }
+    }
+}
+
 /// Drive one client through FediAC rounds over the wire (synthetic
 /// deterministic updates; every client of a job must share --seed).
 fn cmd_client(args: &Args) -> Result<()> {
-    use fediac::client::{protocol, ClientOptions, FediacClient};
+    use fediac::client::{protocol, ClientOptions, FediacClient, ShardedFediacClient};
     use fediac::util::Rng;
 
     let server = args.get_str("server", "127.0.0.1:7177");
@@ -400,11 +481,33 @@ fn cmd_client(args: &Args) -> Result<()> {
     if !chaos_dir.is_clean() {
         opts.chaos = Some(fediac::net::ChaosConfig::symmetric(chaos_seed, chaos_dir));
     }
+    // --shards host:p0,host:p1,…: fan the protocol out across a sharded
+    // deployment instead of a single server (endpoint s hosts slice s).
+    let shard_list = args.get_opt_str("shards");
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let seed = opts.backend_seed;
-    let mut client = FediacClient::connect(opts)?;
-    eprintln!("[fediac] client {client_id} joined job {job} ({n_clients} clients, d={d})");
+    let mut client = match shard_list {
+        Some(list) => {
+            let servers: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let c = ShardedFediacClient::connect(&servers, opts)?;
+            eprintln!(
+                "[fediac] client {client_id} joined job {job} across {} shards \
+                 ({n_clients} clients, d={d})",
+                c.n_shards()
+            );
+            AnyClient::Sharded(c)
+        }
+        None => {
+            let c = FediacClient::connect(opts)?;
+            eprintln!("[fediac] client {client_id} joined job {job} ({n_clients} clients, d={d})");
+            AnyClient::Single(c)
+        }
+    };
     let mut residual = vec![0.0f32; d];
     for round in 1..=rounds {
         // Deterministic synthetic update stream (unique per client/round),
@@ -425,9 +528,20 @@ fn cmd_client(args: &Args) -> Result<()> {
             out.retransmissions
         );
     }
-    if let Some(snap) = client.chaos_snapshot() {
+    let snapshots: Vec<(String, fediac::net::ChaosSnapshot)> = match &client {
+        AnyClient::Single(c) => {
+            c.chaos_snapshot().map(|s| ("".to_string(), s)).into_iter().collect()
+        }
+        AnyClient::Sharded(c) => c
+            .shards()
+            .iter()
+            .enumerate()
+            .filter_map(|(i, sc)| sc.chaos_snapshot().map(|s| (format!(" shard {i}"), s)))
+            .collect(),
+    };
+    for (label, snap) in snapshots {
         eprintln!(
-            "[fediac] chaos: up drop={} dup={} reord={} corrupt={} | \
+            "[fediac] chaos{label}: up drop={} dup={} reord={} corrupt={} | \
              down drop={} dup={} reord={} corrupt={}",
             snap.up.dropped,
             snap.up.duplicated,
@@ -439,7 +553,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             snap.down.corrupted
         );
     }
-    let s = client.stats;
+    let s = client.stats();
     eprintln!(
         "[fediac] client {client_id} done: retx={} dropped={} polls={} rejoins={} resets={}",
         s.retransmissions, s.dropped_sends, s.polls, s.rejoins, s.stream_resets
@@ -449,7 +563,8 @@ fn cmd_client(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|client|chaos> [options]\n\
+        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|chaos> \
+         [options]\n\
          see README.md for the option reference"
     );
     std::process::exit(2);
@@ -465,6 +580,7 @@ fn main() -> Result<()> {
         Some("fig4") => cmd_fig4(&args),
         Some("theory") => cmd_theory(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard-serve") => cmd_shard_serve(&args),
         Some("client") => cmd_client(&args),
         Some("chaos") => cmd_chaos(&args),
         _ => usage(),

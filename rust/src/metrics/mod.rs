@@ -10,22 +10,28 @@ pub mod plot;
 /// Byte counters split by direction and phase.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TrafficMeter {
+    /// Client → PS bytes on the wire (headers included).
     pub up_bytes: u64,
+    /// PS → client bytes, charged per receiving client.
     pub down_bytes: u64,
     /// Phase-1 (vote/GIA) share of the above, FediAC only.
     pub vote_up_bytes: u64,
+    /// Phase-1 share of the download bytes, FediAC only.
     pub vote_down_bytes: u64,
 }
 
 impl TrafficMeter {
+    /// Upload + download bytes.
     pub fn total(&self) -> u64 {
         self.up_bytes + self.down_bytes
     }
 
+    /// Total in decimal megabytes (the tables' unit).
     pub fn total_mb(&self) -> f64 {
         self.total() as f64 / 1e6
     }
 
+    /// Fold another meter in.
     pub fn add(&mut self, other: &TrafficMeter) {
         self.up_bytes += other.up_bytes;
         self.down_bytes += other.down_bytes;
@@ -37,13 +43,17 @@ impl TrafficMeter {
 /// One global iteration's outcome.
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
+    /// Global iteration index.
     pub round: usize,
     /// Simulated wall-clock at the *end* of this round (s).
     pub sim_time_s: f64,
+    /// Mean training loss across clients this round.
     pub train_loss: f64,
     /// Test accuracy if evaluated this round.
     pub test_accuracy: Option<f64>,
+    /// Test loss if evaluated this round.
     pub test_loss: Option<f64>,
+    /// Bytes this round moved.
     pub traffic: TrafficMeter,
     /// Aggregation operations the switch performed this round.
     pub agg_ops: u64,
@@ -54,15 +64,19 @@ pub struct RoundRecord {
 /// Accumulates rounds and renders CSV.
 #[derive(Debug, Default, Clone)]
 pub struct RunRecorder {
+    /// Run label (dataset/partition/algorithm).
     pub label: String,
+    /// One record per completed round.
     pub records: Vec<RoundRecord>,
 }
 
 impl RunRecorder {
+    /// Empty recorder for `label`.
     pub fn new(label: impl Into<String>) -> Self {
         RunRecorder { label: label.into(), records: Vec::new() }
     }
 
+    /// Append one round's record.
     pub fn push(&mut self, rec: RoundRecord) {
         self.records.push(rec);
     }

@@ -7,14 +7,18 @@
 /// One named series of (x, y) points.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Legend label.
     pub name: String,
+    /// (x, y) samples in plot order.
     pub points: Vec<(f64, f64)>,
 }
 
 /// Plot dimensions.
 #[derive(Debug, Clone, Copy)]
 pub struct PlotSpec {
+    /// Grid columns.
     pub width: usize,
+    /// Grid rows.
     pub height: usize,
 }
 

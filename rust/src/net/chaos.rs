@@ -127,19 +127,28 @@ impl ChaosConfig {
 pub struct LaneStats {
     /// Datagrams actually emitted (incl. duplicates and released holds).
     pub forwarded: AtomicU64,
+    /// Datagrams removed by the `drop` knob.
     pub dropped: AtomicU64,
+    /// Datagrams emitted twice by the `duplicate` knob.
     pub duplicated: AtomicU64,
+    /// Copies held back by the `reorder` knob.
     pub reordered: AtomicU64,
+    /// Datagrams with 1–3 bits flipped by the `corrupt` knob.
     pub corrupted: AtomicU64,
 }
 
 /// Point-in-time copy of [`LaneStats`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LaneSnapshot {
+    /// See [`LaneStats::forwarded`].
     pub forwarded: u64,
+    /// See [`LaneStats::dropped`].
     pub dropped: u64,
+    /// See [`LaneStats::duplicated`].
     pub duplicated: u64,
+    /// See [`LaneStats::reordered`].
     pub reordered: u64,
+    /// See [`LaneStats::corrupted`].
     pub corrupted: u64,
 }
 
@@ -158,7 +167,9 @@ impl LaneStats {
 /// Point-in-time proxy counters for reporting.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ChaosSnapshot {
+    /// Client → server direction counters.
     pub up: LaneSnapshot,
+    /// Server → client direction counters.
     pub down: LaneSnapshot,
     /// Distinct client flows seen so far.
     pub flows: u64,
@@ -187,14 +198,17 @@ pub struct ChaosLane<M = ()> {
 }
 
 impl<M: Clone> ChaosLane<M> {
+    /// Lane with fresh private stats.
     pub fn new(cfg: ChaosDirection, seed: u64) -> Self {
         Self::with_stats(cfg, seed, Arc::new(LaneStats::default()))
     }
 
+    /// Lane reporting into shared (e.g. per-direction) stats.
     pub fn with_stats(cfg: ChaosDirection, seed: u64, stats: Arc<LaneStats>) -> Self {
         ChaosLane { cfg, rng: Rng::new(seed ^ 0xC4A0_5EED), stats, held: Vec::new() }
     }
 
+    /// The lane's counters.
     pub fn stats(&self) -> &Arc<LaneStats> {
         &self.stats
     }
@@ -306,6 +320,7 @@ pub struct ChaosProxyOptions {
     pub listen: String,
     /// The real server address datagrams are relayed to.
     pub upstream: String,
+    /// Seed + per-direction knobs.
     pub config: ChaosConfig,
 }
 
@@ -326,6 +341,7 @@ impl ChaosHandle {
         self.addr
     }
 
+    /// Point-in-time copy of both directions' counters.
     pub fn snapshot(&self) -> ChaosSnapshot {
         ChaosSnapshot {
             up: self.up_stats.snapshot(),

@@ -18,6 +18,7 @@ pub struct Mg1Queue {
 }
 
 impl Mg1Queue {
+    /// Idle queue at time zero.
     pub fn new() -> Self {
         Self::default()
     }
@@ -49,10 +50,12 @@ impl Mg1Queue {
         }
     }
 
+    /// Jobs served so far.
     pub fn served(&self) -> u64 {
         self.served
     }
 
+    /// Cumulative service time (for utilisation checks).
     pub fn busy_time(&self) -> f64 {
         self.busy_time
     }

@@ -23,8 +23,11 @@ pub enum Phase {
 /// identity, sizing and the aggregation slot (block index).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Packet {
+    /// Originating client id.
     pub client: usize,
+    /// Global FL iteration.
     pub round: usize,
+    /// Protocol phase the packet belongs to.
     pub phase: Phase,
     /// Aggregation block this packet contributes to (slot alignment).
     pub block: usize,

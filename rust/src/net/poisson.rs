@@ -22,6 +22,7 @@ impl PoissonProcess {
         PoissonProcess { rate, t: start }
     }
 
+    /// The process rate (events/second).
     pub fn rate(&self) -> f64 {
         self.rate
     }

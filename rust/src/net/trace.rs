@@ -14,8 +14,9 @@
 
 use crate::util::Rng;
 
-/// Paper-reported bounds on per-client upload rates (packets/second).
+/// Paper-reported lower bound on per-client upload rates (packets/s).
 pub const MIN_RATE: f64 = 200.0;
+/// Paper-reported upper bound on per-client upload rates (packets/s).
 pub const MAX_RATE: f64 = 2_800.0;
 
 /// Connectivity regime of a subway rider.
@@ -116,6 +117,7 @@ impl CellularTrace {
         }
     }
 
+    /// Time-averaged rate over the whole trace.
     pub fn mean_rate(&self) -> f64 {
         self.mean_rate
     }

@@ -86,6 +86,7 @@ impl PjrtBackend {
         })
     }
 
+    /// The manifest entry this backend executes.
     pub fn entry(&self) -> &ModelEntry {
         &self.entry
     }

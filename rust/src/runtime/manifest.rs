@@ -5,12 +5,16 @@
 
 use crate::util::json::{self, Json};
 
+/// Everything that can go wrong loading `artifacts/manifest.json`.
 #[derive(Debug, thiserror::Error)]
 pub enum ManifestError {
+    /// Reading the file failed.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
+    /// The file is not well-formed JSON.
     #[error("json: {0}")]
     Json(#[from] json::JsonError),
+    /// The JSON does not match the manifest schema.
     #[error("manifest: {0}")]
     Schema(String),
 }
@@ -18,20 +22,30 @@ pub enum ManifestError {
 /// One tensor in the flat-parameter layout.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorLayout {
+    /// Tensor name in the model's parameter tree.
     pub tensor: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 /// One model variant's entry.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Model variant name (manifest key).
     pub name: String,
+    /// Flat parameter count.
     pub d: usize,
+    /// Input sample shape (H, W, C).
     pub input_shape: Vec<usize>,
+    /// Label-space size.
     pub num_classes: usize,
+    /// Batch size the train artifact was lowered for.
     pub train_batch: usize,
+    /// Batch size the eval artifact was lowered for.
     pub eval_batch: usize,
+    /// Local SGD iterations baked into the train artifact.
     pub local_iters: usize,
+    /// Flat-vector ↔ tensor mapping, in flattening order.
     pub layout: Vec<TensorLayout>,
     /// artifact kind ("train"/"eval"/"compress"/"vote") → file name.
     pub artifacts: std::collections::BTreeMap<String, String>,
@@ -68,6 +82,7 @@ impl ModelEntry {
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model entries keyed by variant name.
     pub models: std::collections::BTreeMap<String, ModelEntry>,
 }
 
@@ -78,6 +93,7 @@ fn usize_field(obj: &Json, key: &str, ctx: &str) -> Result<usize, ManifestError>
 }
 
 impl Manifest {
+    /// Parse and validate manifest JSON.
     pub fn parse(text: &str) -> Result<Self, ManifestError> {
         let root = json::parse(text)?;
         let fmt = root.get("format").and_then(Json::as_str).unwrap_or("");
@@ -146,11 +162,13 @@ impl Manifest {
         Ok(Manifest { models })
     }
 
+    /// Load `<dir>/manifest.json`.
     pub fn load(dir: &str) -> Result<Self, ManifestError> {
         let path = std::path::Path::new(dir).join("manifest.json");
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Entry for a model variant, or a schema error naming it.
     pub fn model(&self, name: &str) -> Result<&ModelEntry, ManifestError> {
         self.models
             .get(name)

@@ -64,10 +64,12 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// The bound socket address (useful with an ephemeral bind port).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
     }
 
+    /// Point-in-time copy of the daemon's counters.
     pub fn stats(&self) -> StatsSnapshot {
         self.stats.snapshot()
     }
@@ -88,6 +90,49 @@ impl Drop for ServerHandle {
             let _ = h.join();
         }
     }
+}
+
+/// Launch `n_shards` collaborating daemons in one process — shard `s` of
+/// the deployment PROTOCOL.md §8 describes listens on `base.bind`'s port
+/// plus `s` (an ephemeral port 0 in `base.bind` gives every shard its own
+/// ephemeral port instead). Each shard is a full, independent
+/// [`serve`] instance with its own socket, workers and stats; clients
+/// address shard `s` with a [`crate::wire::JobSpec`] whose `shard` field
+/// names slice `s`. Returns one handle per shard, index = shard id.
+pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<ServerHandle>> {
+    if n_shards == 0 || n_shards > crate::wire::MAX_SHARDS {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "n_shards must be in [1, 16]",
+        ));
+    }
+    let (host, port) = base
+        .bind
+        .rsplit_once(':')
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "bind must be host:port"))?;
+    let port: u16 = port
+        .parse()
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "bind port must be a u16"))?;
+    let mut handles = Vec::with_capacity(n_shards as usize);
+    for s in 0..n_shards {
+        let bind = if port == 0 {
+            format!("{host}:0")
+        } else {
+            let p = port.checked_add(s as u16).ok_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidInput, "shard port range overflows u16")
+            })?;
+            format!("{host}:{p}")
+        };
+        let opts = ServeOptions {
+            bind,
+            // Decorrelate per-shard downlink chaos streams the same way
+            // the proxy decorrelates per-flow lanes.
+            chaos_seed: base.chaos_seed ^ ((s as u64) << 32),
+            ..base.clone()
+        };
+        handles.push(serve(&opts)?);
+    }
+    Ok(handles)
 }
 
 /// Bind a socket and start the dispatch + worker threads.
@@ -289,7 +334,7 @@ fn spawn_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::wire::{encode_frame, Header, JobSpec, WireKind};
+    use crate::wire::{encode_frame, Header, JobSpec, ShardPlan, WireKind};
 
     #[test]
     fn daemon_starts_acks_join_and_shuts_down() {
@@ -298,7 +343,13 @@ mod tests {
 
         let client = UdpSocket::bind("127.0.0.1:0").unwrap();
         client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
-        let spec = JobSpec { d: 64, n_clients: 1, threshold_a: 1, payload_budget: 8 };
+        let spec = JobSpec {
+            d: 64,
+            n_clients: 1,
+            threshold_a: 1,
+            payload_budget: 8,
+            shard: ShardPlan::single(),
+        };
         let join = encode_frame(&Header::control(WireKind::Join, 5, 0, 0, 0), &spec.encode());
         client.send_to(&join, addr).unwrap();
 
@@ -367,6 +418,41 @@ mod tests {
     }
 
     #[test]
+    fn sharded_daemons_bind_and_ack_shard_specs() {
+        let handles = serve_sharded(&ServeOptions::default(), 2).unwrap();
+        assert_eq!(handles.len(), 2);
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        for (s, h) in handles.iter().enumerate() {
+            let spec = JobSpec {
+                d: 64,
+                n_clients: 1,
+                threshold_a: 1,
+                payload_budget: 8,
+                shard: ShardPlan { n_shards: 2, shard_id: s as u8 },
+            };
+            let join =
+                encode_frame(&Header::control(WireKind::Join, 11, 0, 0, 0), &spec.encode());
+            client.send_to(&join, h.local_addr()).unwrap();
+            let mut buf = [0u8; 256];
+            let (n, _) = client.recv_from(&mut buf).unwrap();
+            let f = decode_frame(&buf[..n]).unwrap();
+            assert_eq!(f.header.kind, WireKind::JoinAck);
+            assert_eq!(f.header.aux, crate::server::JOIN_OK, "shard {s} refused its spec");
+        }
+        assert_ne!(handles[0].local_addr(), handles[1].local_addr());
+        for h in handles {
+            h.shutdown();
+        }
+    }
+
+    #[test]
+    fn sharded_serve_rejects_bad_shard_counts() {
+        assert!(serve_sharded(&ServeOptions::default(), 0).is_err());
+        assert!(serve_sharded(&ServeOptions::default(), 17).is_err());
+    }
+
+    #[test]
     fn downlink_chaos_lane_reaches_worker_sends() {
         // Full downlink drop: the worker's JoinAck never escapes.
         let handle = serve(&ServeOptions {
@@ -377,7 +463,13 @@ mod tests {
         .unwrap();
         let client = UdpSocket::bind("127.0.0.1:0").unwrap();
         client.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
-        let spec = JobSpec { d: 64, n_clients: 1, threshold_a: 1, payload_budget: 8 };
+        let spec = JobSpec {
+            d: 64,
+            n_clients: 1,
+            threshold_a: 1,
+            payload_budget: 8,
+            shard: ShardPlan::single(),
+        };
         let join = encode_frame(&Header::control(WireKind::Join, 8, 0, 0, 0), &spec.encode());
         client.send_to(&join, handle.local_addr()).unwrap();
         let mut buf = [0u8; 256];

@@ -525,10 +525,13 @@ const ROUND_HISTORY: u32 = 3;
 const MAX_LIVE_ROUNDS: usize = 8;
 
 impl Job {
+    /// Unconfigured job with default [`JobLimits`] (configured by the
+    /// first valid `Join`).
     pub fn new(id: u32, profile: PsProfile, stats: Arc<ServerStats>) -> Self {
         Self::with_limits(id, profile, JobLimits::default(), stats)
     }
 
+    /// Unconfigured job with explicit abuse limits.
     pub fn with_limits(
         id: u32,
         profile: PsProfile,
@@ -538,10 +541,12 @@ impl Job {
         Job { id, profile, limits, stats, state: None }
     }
 
+    /// True once a valid `Join` has fixed the job's spec.
     pub fn is_configured(&self) -> bool {
         self.state.is_some()
     }
 
+    /// The agreed spec (None until configured).
     pub fn spec(&self) -> Option<&JobSpec> {
         self.state.as_ref().map(|s| &s.spec)
     }
@@ -894,10 +899,14 @@ impl Job {
 mod tests {
     use super::*;
     use crate::compress::deduce_gia;
-    use crate::wire::{decode_frame, vote_chunks, ChunkAssembler};
+    use crate::wire::{decode_frame, vote_chunks, ChunkAssembler, ShardPlan};
 
     fn addr(port: u16) -> SocketAddr {
         format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn mkspec(d: u32, n_clients: u16, threshold_a: u16, payload_budget: u16) -> JobSpec {
+        JobSpec { d, n_clients, threshold_a, payload_budget, shard: ShardPlan::single() }
     }
 
     fn profile(memory: usize) -> PsProfile {
@@ -981,7 +990,7 @@ mod tests {
 
     #[test]
     fn full_round_matches_host_reference() {
-        let spec = JobSpec { d: 100, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(100, 2, 1, 8);
         let mut job = make_job(&spec, 1 << 20);
         let v0 = BitVec::from_indices(100, &[0, 5, 64, 99]);
         let v1 = BitVec::from_indices(100, &[5, 64, 70]);
@@ -1030,7 +1039,7 @@ mod tests {
         // budget 8 → vote block = 64 dims = 128 B of counters; 200 B of
         // registers hold exactly one block, so d=100 (2 blocks) needs 2
         // waves and out-of-window packets spill.
-        let spec = JobSpec { d: 100, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let spec = mkspec(100, 2, 2, 8);
         let mut job = make_job(&spec, 200);
         let votes: Vec<BitVec> =
             (0..2).map(|c| BitVec::from_indices(100, &[c, 50, 80, 99])).collect();
@@ -1054,7 +1063,7 @@ mod tests {
 
     #[test]
     fn duplicates_are_suppressed() {
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(64, 2, 1, 8);
         let mut job = make_job(&spec, 1 << 20);
         let v = BitVec::from_indices(64, &[1, 2, 3]);
         let f0 = &vote_frames(9, 0, 0, &v, &spec)[0];
@@ -1091,13 +1100,13 @@ mod tests {
         let stats = Arc::new(ServerStats::default());
         let mut job = Job::new(1, profile(100), stats);
         // Budget too large for 100 B of registers (needs 16·budget).
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 64 };
+        let spec = mkspec(64, 2, 1, 64);
         let out = feed(&mut job, &join_frame(1, 0, &spec), addr(5000));
         assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
         assert!(!job.is_configured());
 
         // Valid spec creates the job; a conflicting re-join is refused.
-        let ok = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 4 };
+        let ok = mkspec(64, 2, 1, 4);
         let out = feed(&mut job, &join_frame(1, 0, &ok), addr(5000));
         assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
         let conflicting = JobSpec { threshold_a: 2, ..ok };
@@ -1111,8 +1120,31 @@ mod tests {
     }
 
     #[test]
+    fn shard_plan_mismatch_is_refused() {
+        // A shard's clients must agree on the whole spec, plan included:
+        // a client that believes a different slice (or no sharding at
+        // all) lives at this server must not silently join and feed
+        // blocks of the wrong sub-model into the counters.
+        let stats = Arc::new(ServerStats::default());
+        let mut job = Job::new(7, profile(1 << 20), stats);
+        let shard0 =
+            JobSpec { shard: ShardPlan { n_shards: 2, shard_id: 0 }, ..mkspec(64, 2, 1, 8) };
+        let out = feed(&mut job, &join_frame(7, 0, &shard0), addr(4300));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+        let other = JobSpec { shard: ShardPlan { n_shards: 2, shard_id: 1 }, ..shard0 };
+        let out = feed(&mut job, &join_frame(7, 1, &other), addr(4301));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_SPEC_MISMATCH);
+        let unsharded = JobSpec { shard: ShardPlan::single(), ..shard0 };
+        let out = feed(&mut job, &join_frame(7, 1, &unsharded), addr(4301));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_SPEC_MISMATCH);
+        // The matching plan joins fine.
+        let out = feed(&mut job, &join_frame(7, 1, &shard0), addr(4301));
+        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+    }
+
+    #[test]
     fn poll_not_ready_then_ready() {
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(64, 2, 1, 8);
         let mut job = make_job(&spec, 1 << 20);
         let poll = encode_frame(
             &Header {
@@ -1146,13 +1178,13 @@ mod tests {
         // d = u32::MAX would pin gigabytes of host counters per live
         // round; the default budget refuses the spec outright.
         let mut job = Job::new(3, profile(1 << 20), Arc::new(ServerStats::default()));
-        let huge = JobSpec { d: u32::MAX, n_clients: 2, threshold_a: 1, payload_budget: 256 };
+        let huge = mkspec(u32::MAX, 2, 1, 256);
         let out = feed(&mut job, &join_frame(3, 0, &huge), addr(4100));
         assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
         assert!(!job.is_configured());
 
         // A tighter configured budget rejects a spec the default accepts.
-        let spec = JobSpec { d: 10_000, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(10_000, 2, 1, 8);
         let limits = JobLimits { host_bytes: 1 << 10, ..JobLimits::default() };
         let mut tight =
             Job::with_limits(4, profile(1 << 20), limits, Arc::new(ServerStats::default()));
@@ -1167,7 +1199,7 @@ mod tests {
     fn spill_is_deduped_and_capped() {
         // One resident 64-dim block (200 B of registers), a 40-block vote
         // space, and a spill limit that clamps to MIN_SPILL_ENTRIES = 16.
-        let spec = JobSpec { d: 64 * 40, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let spec = mkspec(64 * 40, 2, 2, 8);
         let stats = Arc::new(ServerStats::default());
         let limits = JobLimits { spill_bytes: 1, ..JobLimits::default() };
         let mut job = Job::with_limits(9, profile(200), limits, Arc::clone(&stats));
@@ -1191,7 +1223,7 @@ mod tests {
 
     #[test]
     fn reserve_budget_bounds_reflection() {
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(64, 2, 1, 8);
         let stats = Arc::new(ServerStats::default());
         let limits = JobLimits { reserve_budget: 2, ..JobLimits::default() };
         let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
@@ -1247,7 +1279,7 @@ mod tests {
         // the completion multicast must answer the clients' aggregate
         // wait too — one zero-lane block, the phase-completion signal
         // `wire::update_chunks` defines.
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let spec = mkspec(64, 2, 2, 8);
         let mut job = make_job(&spec, 1 << 20);
         let v0 = BitVec::from_indices(64, &[1, 2]);
         let v1 = BitVec::from_indices(64, &[10, 20]);
@@ -1271,7 +1303,7 @@ mod tests {
 
     #[test]
     fn non_finite_vote_aux_is_rejected_at_ingest() {
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(64, 2, 1, 8);
         let mut job = make_job(&spec, 1 << 20);
         let v = BitVec::from_indices(64, &[1, 2]);
         // A NaN local-max would make global_max (and every client's f)
@@ -1342,7 +1374,7 @@ mod tests {
         assert!(feed(&mut fresh, &forged(WireKind::JoinAck, 2), addr(7000)).is_empty());
         assert_eq!(stat(&stats.downlink_spoofs), 2);
         // Configured job: same silence.
-        let spec = JobSpec { d: 64, n_clients: 2, threshold_a: 1, payload_budget: 8 };
+        let spec = mkspec(64, 2, 1, 8);
         let mut job = make_job(&spec, 1 << 20);
         assert!(feed(&mut job, &forged(WireKind::Aggregate, 9), addr(7000)).is_empty());
         assert!(feed(&mut job, &forged(WireKind::NotReady, 9), addr(7000)).is_empty());
@@ -1353,7 +1385,7 @@ mod tests {
     fn idle_rounds_release_their_registers() {
         // 200 B of registers hold exactly one 64-dim vote wave, so two
         // in-progress rounds contend for the whole register file.
-        let spec = JobSpec { d: 100, n_clients: 2, threshold_a: 2, payload_budget: 8 };
+        let spec = mkspec(100, 2, 2, 8);
         let stats = Arc::new(ServerStats::default());
         let limits = JobLimits { idle_release_after: Duration::ZERO, ..JobLimits::default() };
         let mut job = Job::with_limits(9, profile(200), limits, Arc::clone(&stats));

@@ -22,7 +22,7 @@
 pub mod daemon;
 pub mod job;
 
-pub use daemon::{serve, ServeOptions, ServerHandle};
+pub use daemon::{serve, serve_sharded, ServeOptions, ServerHandle};
 pub use job::{Job, JobLimits, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,15 +30,27 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Cross-thread daemon counters (lock-free; workers update directly).
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// Datagrams received by the dispatch loop (valid or not).
     pub packets: AtomicU64,
+    /// Frames dropped for malformed bytes or impossible geometry
+    /// (bad route peek, failed decode, out-of-range block/elems/client).
     pub decode_errors: AtomicU64,
+    /// Frames dropped as already-seen contributions (scoreboard hits,
+    /// stale-block replays, re-buffered spill, post-completion data).
     pub duplicates: AtomicU64,
+    /// Data blocks buffered to host memory because they landed beyond
+    /// the resident register wave.
     pub spilled: AtomicU64,
     /// Spill entries dropped at the per-round cap (repaired by client
     /// retransmission once the wave advances).
     pub spill_dropped: AtomicU64,
+    /// Register waves advanced past the first (each bump = one wave
+    /// retired and the window moved, §III-B memory pressure).
     pub waves: AtomicU64,
+    /// Aggregate lanes that saturated i32 during accumulation.
     pub overflow_lanes: AtomicU64,
+    /// Wave allocations refused for lack of register memory (the round
+    /// keeps spilling until another wave releases).
     pub register_stalls: AtomicU64,
     /// Full GIA/aggregate re-serves refused by the per-source budget
     /// (UDP reflection damping).
@@ -51,45 +63,67 @@ pub struct ServerStats {
     /// Vote frames rejected because their local-max aux was NaN/Inf
     /// (would poison the job-wide scale factor).
     pub non_finite_aux: AtomicU64,
+    /// Join frames accepted (including idempotent re-joins).
     pub joins: AtomicU64,
+    /// Jobs configured by a first valid Join.
     pub jobs_created: AtomicU64,
     /// Datagrams dropped because the per-daemon job cap was reached.
     pub jobs_rejected: AtomicU64,
+    /// Rounds whose phase-2 aggregate completed (or closed empty).
     pub rounds_completed: AtomicU64,
 }
 
 /// Point-in-time copy of [`ServerStats`] for reporting.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StatsSnapshot {
+    /// See [`ServerStats::packets`].
     pub packets: u64,
+    /// See [`ServerStats::decode_errors`].
     pub decode_errors: u64,
+    /// See [`ServerStats::duplicates`].
     pub duplicates: u64,
+    /// See [`ServerStats::spilled`].
     pub spilled: u64,
+    /// See [`ServerStats::spill_dropped`].
     pub spill_dropped: u64,
+    /// See [`ServerStats::waves`].
     pub waves: u64,
+    /// See [`ServerStats::overflow_lanes`].
     pub overflow_lanes: u64,
+    /// See [`ServerStats::register_stalls`].
     pub register_stalls: u64,
+    /// See [`ServerStats::reserves_suppressed`].
     pub reserves_suppressed: u64,
+    /// See [`ServerStats::idle_releases`].
     pub idle_releases: u64,
+    /// See [`ServerStats::downlink_spoofs`].
     pub downlink_spoofs: u64,
+    /// See [`ServerStats::non_finite_aux`].
     pub non_finite_aux: u64,
+    /// See [`ServerStats::joins`].
     pub joins: u64,
+    /// See [`ServerStats::jobs_created`].
     pub jobs_created: u64,
+    /// See [`ServerStats::jobs_rejected`].
     pub jobs_rejected: u64,
+    /// See [`ServerStats::rounds_completed`].
     pub rounds_completed: u64,
 }
 
 impl ServerStats {
+    /// Increment one counter (relaxed; counters are advisory).
     #[inline]
     pub fn bump(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n` to one counter (relaxed).
     #[inline]
     pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Copy every counter at one point in time.
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
             packets: self.packets.load(Ordering::Relaxed),

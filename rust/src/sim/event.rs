@@ -51,6 +51,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// Empty queue at time zero.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
     }
@@ -85,10 +86,12 @@ impl<E> EventQueue<E> {
         self.now
     }
 
+    /// True when nothing is scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Scheduled events outstanding.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

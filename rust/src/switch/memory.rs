@@ -18,16 +18,20 @@ pub struct RegisterFile {
 /// Handle for an allocation (freed explicitly; Drop-free for determinism).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Allocation {
+    /// Size of the reservation being held.
     pub bytes: usize,
 }
 
+/// Register allocation failures.
 #[derive(Debug, thiserror::Error, PartialEq, Eq)]
 pub enum MemError {
+    /// The request does not fit the remaining register memory.
     #[error("register file exhausted: requested {requested} B, free {free} B of {capacity} B")]
     Exhausted { requested: usize, free: usize, capacity: usize },
 }
 
 impl RegisterFile {
+    /// Empty file of `capacity` bytes.
     pub fn new(capacity: usize) -> Self {
         RegisterFile { capacity, used: 0, peak: 0 }
     }
@@ -49,14 +53,17 @@ impl RegisterFile {
         self.used -= alloc.bytes.min(self.used);
     }
 
+    /// Total register bytes.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Bytes currently reserved.
     pub fn used(&self) -> usize {
         self.used
     }
 
+    /// Bytes still available.
     pub fn free_bytes(&self) -> usize {
         self.capacity - self.used
     }

@@ -16,6 +16,7 @@ pub struct Scoreboard {
     complete: Vec<bool>,
 }
 
+/// How an incoming contribution should be treated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mark {
     /// First contribution from this client for this block.
@@ -27,6 +28,7 @@ pub enum Mark {
 }
 
 impl Scoreboard {
+    /// Empty board for `n_blocks` blocks × `n_clients` clients (≤ 64).
     pub fn new(n_blocks: usize, n_clients: usize) -> Self {
         assert!(n_clients <= 64, "scoreboard supports up to 64 clients");
         assert!(n_clients > 0);
@@ -49,6 +51,7 @@ impl Scoreboard {
         }
     }
 
+    /// True when `block` has every client's contribution.
     pub fn is_complete(&self, block: usize) -> bool {
         self.complete[block]
     }
@@ -58,6 +61,7 @@ impl Scoreboard {
         self.masks[block].count_ones() as usize
     }
 
+    /// Blocks tracked.
     pub fn n_blocks(&self) -> usize {
         self.masks.len()
     }

@@ -24,11 +24,15 @@ use crate::util::{BitVec, Rng};
 /// Cumulative switch counters surfaced to experiments.
 #[derive(Debug, Clone, Default)]
 pub struct SwitchStats {
+    /// Packets serviced (shadow-shard ops included).
     pub packets_processed: u64,
     /// One aggregation op per serviced packet — the paper's cost unit.
     pub agg_ops: u64,
+    /// Duplicates the scoreboard refused to aggregate.
     pub duplicates_dropped: u64,
+    /// Accumulator lanes that saturated i32.
     pub overflow_lanes: u64,
+    /// Extra register waves forced by memory pressure.
     pub waves: u64,
     /// Peak register bytes actually resident (≤ capacity).
     pub peak_mem_used: usize,
@@ -46,6 +50,7 @@ pub struct ProgrammableSwitch {
 }
 
 impl ProgrammableSwitch {
+    /// Switch with `profile`'s service model and register capacity.
     pub fn new(profile: PsProfile, seed: u64) -> Self {
         let registers = RegisterFile::new(profile.memory_bytes);
         ProgrammableSwitch {
@@ -57,6 +62,7 @@ impl ProgrammableSwitch {
         }
     }
 
+    /// The performance profile this switch runs.
     pub fn profile(&self) -> &PsProfile {
         &self.profile
     }
@@ -85,10 +91,12 @@ impl ProgrammableSwitch {
         self.stats.agg_ops += 1;
     }
 
+    /// Account saturated accumulator lanes.
     pub fn note_overflow(&mut self, lanes: u64) {
         self.stats.overflow_lanes += lanes;
     }
 
+    /// Account extra register waves a phase needed.
     pub fn note_waves(&mut self, waves: u64) {
         self.stats.waves += waves;
     }
@@ -101,14 +109,17 @@ impl ProgrammableSwitch {
         self.stats.peak_mem_demanded = self.stats.peak_mem_demanded.max(demanded);
     }
 
+    /// The switch's register file (aggregators allocate from it).
     pub fn registers(&mut self) -> &mut RegisterFile {
         &mut self.registers
     }
 
+    /// Peak register bytes ever resident.
     pub fn peak_memory(&self) -> usize {
         self.registers.peak()
     }
 
+    /// Cumulative counters.
     pub fn stats(&self) -> &SwitchStats {
         self.stats_ref()
     }
@@ -117,6 +128,7 @@ impl ProgrammableSwitch {
         &self.stats
     }
 
+    /// Mean queueing delay packets saw (excludes service time).
     pub fn mean_queue_wait(&self) -> f64 {
         self.queue.mean_wait()
     }
@@ -161,6 +173,7 @@ impl VoteAggregator {
         })
     }
 
+    /// Blocks in this aggregator's space.
     pub fn n_blocks(&self) -> usize {
         self.scoreboard.n_blocks()
     }
@@ -178,6 +191,7 @@ impl VoteAggregator {
         mark
     }
 
+    /// True when every block has every client's contribution.
     pub fn all_complete(&self) -> bool {
         self.scoreboard.all_complete()
     }
@@ -195,6 +209,7 @@ impl VoteAggregator {
         &self.counters
     }
 
+    /// Contributing clients per block.
     pub fn n_clients(&self) -> usize {
         self.n_clients
     }
@@ -235,6 +250,7 @@ impl UpdateAggregator {
         })
     }
 
+    /// Blocks in this aggregator's space.
     pub fn n_blocks(&self) -> usize {
         self.scoreboard.n_blocks()
     }
@@ -251,18 +267,22 @@ impl UpdateAggregator {
         mark
     }
 
+    /// True when every block has every client's contribution.
     pub fn all_complete(&self) -> bool {
         self.scoreboard.all_complete()
     }
 
+    /// The summed integer lanes.
     pub fn aggregate(&self) -> &[i32] {
         &self.acc
     }
 
+    /// Lanes that saturated during accumulation.
     pub fn overflow_lanes(&self) -> u64 {
         self.overflow_lanes
     }
 
+    /// Free register memory.
     pub fn release(self, rf: &mut RegisterFile) {
         rf.free(self.alloc);
     }

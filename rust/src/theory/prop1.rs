@@ -14,7 +14,9 @@ use crate::theory::power_law::PowerLaw;
 /// Inputs to the Proposition-1 computation.
 #[derive(Debug, Clone, Copy)]
 pub struct Prop1Params {
+    /// Model dimension d.
     pub d: usize,
+    /// Clients N.
     pub n_clients: usize,
     /// Votes per client (k in the paper).
     pub k: usize,

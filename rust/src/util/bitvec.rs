@@ -27,22 +27,26 @@ impl BitVec {
         bv
     }
 
+    /// Length in bits (the model dimension d).
     #[inline]
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True for a zero-length vector.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Bit `i`.
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.len);
         (self.words[i >> 6] >> (i & 63)) & 1 == 1
     }
 
+    /// Set bit `i`.
     #[inline]
     pub fn set(&mut self, i: usize, value: bool) {
         debug_assert!(i < self.len);

@@ -6,17 +6,25 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object member by key (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -24,6 +32,7 @@ impl Json {
         }
     }
 
+    /// Array element by index (`None` on non-arrays).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -31,6 +40,7 @@ impl Json {
         }
     }
 
+    /// The string form, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -38,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The numeric form, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -45,10 +56,12 @@ impl Json {
         }
     }
 
+    /// The number truncated to usize (manifest dimension fields).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The array elements, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -56,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The member map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -64,10 +78,13 @@ impl Json {
     }
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What went wrong there.
     pub msg: String,
 }
 

@@ -8,12 +8,19 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 #[repr(u8)]
+/// Log severity, ordered; `FEDIAC_LOG` selects the minimum emitted.
 pub enum Level {
+    /// Per-packet noise.
     Trace = 0,
+    /// Per-round diagnostics.
     Debug = 1,
+    /// Run-level progress (the default).
     Info = 2,
+    /// Unexpected but recoverable conditions.
     Warn = 3,
+    /// Failures.
     Error = 4,
+    /// Disable all output.
     Off = 5,
 }
 
@@ -46,12 +53,15 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Emit one line to stderr when `level` clears the filter (prefer the
+/// `info!`/`debug!`/`warn!` macros, which capture the module path).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
         eprintln!("[{:5}] {}: {}", format!("{level:?}").to_lowercase(), module, msg);
     }
 }
 
+/// Log at [`util::logging::Level::Info`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)+) => {
@@ -60,6 +70,7 @@ macro_rules! info {
     };
 }
 
+/// Log at [`util::logging::Level::Debug`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)+) => {
@@ -68,6 +79,7 @@ macro_rules! debug {
     };
 }
 
+/// Log at [`util::logging::Level::Warn`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! warn {
     ($($arg:tt)+) => {

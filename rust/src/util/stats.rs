@@ -14,10 +14,12 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// Fresh accumulator (no samples).
     pub fn new() -> Self {
         OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -27,10 +29,12 @@ impl OnlineStats {
         self.max = self.max.max(x);
     }
 
+    /// Samples seen so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (NaN before the first sample).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
@@ -40,14 +44,17 @@ impl OnlineStats {
         if self.n == 0 { f64::NAN } else { self.m2 / self.n as f64 }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample (+∞ before the first).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample (−∞ before the first).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -62,6 +69,7 @@ pub fn percentile(values: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Arithmetic mean of a slice (NaN when empty).
 pub fn mean(values: &[f64]) -> f64 {
     if values.is_empty() {
         return f64::NAN;

@@ -61,6 +61,7 @@ pub enum WireKind {
 }
 
 impl WireKind {
+    /// Parse the header discriminant; `None` for unknown kinds.
     pub fn from_u8(v: u8) -> Option<Self> {
         Some(match v {
             1 => WireKind::Join,
@@ -89,13 +90,21 @@ impl WireKind {
 /// Decoded fixed header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
+    /// Frame kind.
     pub kind: WireKind,
+    /// Sender's client id (uplink); `0xFFFF` on broadcast downlink.
     pub client: u16,
+    /// Multi-tenant job id.
     pub job: u32,
+    /// Global FL iteration.
     pub round: u32,
+    /// Chunk index within the phase stream.
     pub block: u32,
+    /// Total chunks in the phase stream (reassembly).
     pub n_blocks: u32,
+    /// Logical elements in THIS frame (bits / lanes / bytes).
     pub elems: u32,
+    /// Phase-specific scalar (see the module docs).
     pub aux: u32,
 }
 
@@ -109,7 +118,9 @@ impl Header {
 /// A decoded frame borrowing its payload from the receive buffer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Frame<'a> {
+    /// The validated fixed header.
     pub header: Header,
+    /// Payload bytes, borrowed from the receive buffer.
     pub payload: &'a [u8],
 }
 

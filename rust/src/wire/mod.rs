@@ -21,6 +21,7 @@
 
 pub mod frame;
 pub mod payload;
+pub mod shard;
 
 pub use frame::{
     crc32, decode_frame, encode_frame, peek_route, Frame, Header, WireKind,
@@ -30,22 +31,30 @@ pub use payload::{
     byte_chunks, decode_lanes, encode_lanes, lanes_iter, update_chunks, vote_chunks,
     ChunkAssembler, JobSpec,
 };
+pub use shard::{ShardLayout, ShardPlan, MAX_SHARDS};
 
 /// Strict decode errors — every way a datagram can be malformed.
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 pub enum WireError {
+    /// Buffer shorter than the header (or its declared payload).
     #[error("truncated frame: need {needed} bytes, got {got}")]
     Truncated { needed: usize, got: usize },
+    /// First four bytes are not the protocol magic.
     #[error("bad magic {0:#010x}")]
     BadMagic(u32),
+    /// Version byte this implementation does not speak.
     #[error("unsupported version {0}")]
     BadVersion(u8),
+    /// Unknown kind discriminant.
     #[error("unknown frame kind {0}")]
     BadKind(u8),
+    /// Datagram length disagrees with the declared payload length.
     #[error("declared payload length {declared} != actual {got}")]
     LengthMismatch { declared: usize, got: usize },
+    /// CRC-32 over header + payload failed.
     #[error("checksum mismatch: header says {stored:#010x}, computed {computed:#010x}")]
     ChecksumMismatch { stored: u32, computed: u32 },
+    /// Frame decoded but its payload violates the phase codec.
     #[error("malformed payload: {0}")]
     BadPayload(&'static str),
 }

@@ -8,7 +8,7 @@
 //! little-endian order.
 
 use crate::util::BitVec;
-use crate::wire::WireError;
+use crate::wire::{ShardPlan, WireError};
 
 /// Pack i32 lanes little-endian.
 pub fn encode_lanes(lanes: &[i32]) -> Vec<u8> {
@@ -34,9 +34,15 @@ pub fn decode_lanes(payload: &[u8]) -> Result<Vec<i32>, WireError> {
 
 /// Job registration record carried by `Join` frames. Every client of a job
 /// must present an identical spec; the first Join creates the job.
+///
+/// In a sharded deployment (PROTOCOL.md §8) each collaborating server is
+/// registered with its *own* spec: `d` is that shard's sub-model
+/// dimension and `shard` names the slice, so one server's state machine
+/// never needs global knowledge.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobSpec {
-    /// Model dimension d (vote bitmap length).
+    /// Model dimension d (vote bitmap length). For a sharded job this is
+    /// the *sub-model* dimension the addressed shard owns.
     pub d: u32,
     /// Number of clients N contributing per round.
     pub n_clients: u16,
@@ -45,29 +51,55 @@ pub struct JobSpec {
     /// Payload bytes per data frame — fixes the block geometry both sides
     /// derive (vote: 8·budget bits/block, update: budget/4 lanes/block).
     pub payload_budget: u16,
+    /// Shard-plane extension: which slice of a sharded deployment this
+    /// spec describes ([`ShardPlan::single`] for unsharded jobs). Encoded
+    /// in the two formerly-reserved trailing bytes; a zero `n_shards`
+    /// byte (every pre-shard encoder) decodes as the single-server plan,
+    /// keeping old and new peers wire-compatible at n_shards = 1.
+    pub shard: ShardPlan,
 }
 
 impl JobSpec {
+    /// Wire size of an encoded spec (the `Join` payload).
     pub const ENCODED_LEN: usize = 12;
 
+    /// Serialise to the fixed 12-byte `Join` payload.
     pub fn encode(&self) -> [u8; Self::ENCODED_LEN] {
         let mut out = [0u8; Self::ENCODED_LEN];
         out[0..4].copy_from_slice(&self.d.to_le_bytes());
         out[4..6].copy_from_slice(&self.n_clients.to_le_bytes());
         out[6..8].copy_from_slice(&self.threshold_a.to_le_bytes());
         out[8..10].copy_from_slice(&self.payload_budget.to_le_bytes());
+        out[10] = self.shard.n_shards;
+        out[11] = self.shard.shard_id;
         out
     }
 
+    /// Parse and validate a `Join` payload.
     pub fn decode(payload: &[u8]) -> Result<Self, WireError> {
         if payload.len() != Self::ENCODED_LEN {
             return Err(WireError::BadPayload("job spec must be 12 bytes"));
         }
+        // Backward-compatible shard decode: encoders predating the shard
+        // extension left bytes 10..12 zeroed, which means "unsharded".
+        // Only the all-zero form is grandfathered — a zero shard count
+        // with a nonzero shard id is malformed, and normalising it away
+        // would both violate the strict-decode contract and break the
+        // decode→encode round-trip.
+        let shard = if payload[10] == 0 {
+            if payload[11] != 0 {
+                return Err(WireError::BadPayload("shard_id set without n_shards"));
+            }
+            ShardPlan::single()
+        } else {
+            ShardPlan { n_shards: payload[10], shard_id: payload[11] }
+        };
         let spec = JobSpec {
             d: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
             n_clients: u16::from_le_bytes(payload[4..6].try_into().unwrap()),
             threshold_a: u16::from_le_bytes(payload[6..8].try_into().unwrap()),
             payload_budget: u16::from_le_bytes(payload[8..10].try_into().unwrap()),
+            shard,
         };
         spec.validate()?;
         Ok(spec)
@@ -87,7 +119,7 @@ impl JobSpec {
         if self.payload_budget < 4 || self.payload_budget % 4 != 0 {
             return Err(WireError::BadPayload("payload_budget must be a positive multiple of 4"));
         }
-        Ok(())
+        self.shard.validate()
     }
 
     /// Vote-phase geometry: bits (= dimensions) per block.
@@ -174,10 +206,12 @@ pub struct ChunkAssembler {
 }
 
 impl ChunkAssembler {
+    /// Empty assembler for a stream of `n_blocks` chunks.
     pub fn new(n_blocks: usize) -> Self {
         ChunkAssembler { parts: vec![None; n_blocks.max(1)], received: 0 }
     }
 
+    /// The stream's declared chunk count.
     pub fn n_blocks(&self) -> usize {
         self.parts.len()
     }
@@ -194,6 +228,7 @@ impl ChunkAssembler {
         }
     }
 
+    /// True once every chunk has arrived.
     pub fn is_complete(&self) -> bool {
         self.received == self.parts.len()
     }
@@ -224,7 +259,13 @@ mod tests {
 
     #[test]
     fn job_spec_roundtrip_and_validation() {
-        let spec = JobSpec { d: 10_000, n_clients: 8, threshold_a: 3, payload_budget: 256 };
+        let spec = JobSpec {
+            d: 10_000,
+            n_clients: 8,
+            threshold_a: 3,
+            payload_budget: 256,
+            shard: ShardPlan::single(),
+        };
         assert_eq!(JobSpec::decode(&spec.encode()).unwrap(), spec);
         let bad = JobSpec { threshold_a: 9, ..spec };
         assert!(JobSpec::decode(&bad.encode()).is_err());
@@ -234,8 +275,46 @@ mod tests {
     }
 
     #[test]
+    fn shard_plan_roundtrip_and_backward_compat() {
+        let spec = JobSpec {
+            d: 512,
+            n_clients: 4,
+            threshold_a: 2,
+            payload_budget: 16,
+            shard: ShardPlan { n_shards: 4, shard_id: 3 },
+        };
+        assert_eq!(JobSpec::decode(&spec.encode()).unwrap(), spec);
+        // A pre-shard encoder leaves bytes 10..12 zeroed — that must
+        // decode as the single-server plan, equal to a modern unsharded
+        // spec for the same job parameters.
+        let mut legacy = spec.encode();
+        legacy[10] = 0;
+        legacy[11] = 0;
+        let decoded = JobSpec::decode(&legacy).unwrap();
+        assert_eq!(decoded.shard, ShardPlan::single());
+        assert_eq!(decoded, JobSpec { shard: ShardPlan::single(), ..spec });
+        // Invalid plans are refused at decode.
+        let bad = JobSpec { shard: ShardPlan { n_shards: 2, shard_id: 2 }, ..spec };
+        assert!(JobSpec::decode(&bad.encode()).is_err());
+        let bad = JobSpec { shard: ShardPlan { n_shards: 17, shard_id: 0 }, ..spec };
+        assert!(bad.validate().is_err());
+        // A zero shard count with a nonzero shard id is malformed, not
+        // normalised away (strict decode; encode/decode must round-trip).
+        let mut mangled = spec.encode();
+        mangled[10] = 0;
+        mangled[11] = 5;
+        assert!(JobSpec::decode(&mangled).is_err());
+    }
+
+    #[test]
     fn spec_geometry() {
-        let spec = JobSpec { d: 100, n_clients: 4, threshold_a: 2, payload_budget: 8 };
+        let spec = JobSpec {
+            d: 100,
+            n_clients: 4,
+            threshold_a: 2,
+            payload_budget: 8,
+            shard: ShardPlan::single(),
+        };
         assert_eq!(spec.vote_block_bits(), 64);
         assert_eq!(spec.vote_n_blocks(), 2); // 64 + 36 bits
         assert_eq!(spec.update_block_lanes(), 2);

@@ -1,0 +1,346 @@
+//! Shard plane: splitting one job's block space round-robin across N
+//! collaborative aggregation servers (the wire realisation of the
+//! simulator's `configx::num_switches` / `fl::FlEnv::upload_phase_sharded`
+//! multi-PS model, and §VI's collaborative-switches future work).
+//!
+//! Ownership is defined on *vote blocks*, the unit both phases derive
+//! their geometry from: block `b` of the full model belongs to shard
+//! `b % n_shards`. A shard therefore serves the sub-model formed by
+//! concatenating its owned blocks in ascending block order — every owned
+//! block keeps its exact bit width, so the shard's own chunking of the
+//! sub-model reproduces the owned blocks one-to-one and the unmodified
+//! per-job server state machine ([`crate::server::Job`]) runs each shard:
+//! vote ingest, GIA thresholding and update aggregation are restricted to
+//! owned blocks by construction.
+//!
+//! The update phase follows the same ownership: a selected dimension
+//! (GIA bit) is uploaded to, and aggregated by, the shard that owns its
+//! vote block. Because sub-model dimension order is ascending in global
+//! dimension order, per-shard lane streams interleave back into the
+//! global GIA-ordered aggregate deterministically ([`ShardLayout`] holds
+//! the split/merge maps).
+//!
+//! The plan itself ([`ShardPlan`]) travels inside
+//! [`crate::wire::JobSpec`] so every client of a job registers the same
+//! world view with each shard and a server can refuse a client that
+//! disagrees (`JOIN_SPEC_MISMATCH`). Single-server deployments carry the
+//! trivial plan and are wire-compatible with pre-shard peers (see
+//! PROTOCOL.md §8).
+
+use crate::util::BitVec;
+use crate::wire::WireError;
+
+/// Hard cap on collaborating shards per job. Generous for the paper's
+/// setting (a handful of switches share one index space) while keeping
+/// the plan encodable in one byte with room to spare.
+pub const MAX_SHARDS: u8 = 16;
+
+/// One shard's identity within a sharded job: how many servers share the
+/// block space, and which slice this spec describes. Carried in the two
+/// trailing bytes of the [`crate::wire::JobSpec`] wire encoding; a zero
+/// `n_shards` byte (all pre-shard encoders) decodes as the single-server
+/// plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardPlan {
+    /// Total collaborating servers (1 = unsharded).
+    pub n_shards: u8,
+    /// This server's slice index in `[0, n_shards)`.
+    pub shard_id: u8,
+}
+
+impl ShardPlan {
+    /// The trivial plan: one server owns every block.
+    pub fn single() -> Self {
+        ShardPlan { n_shards: 1, shard_id: 0 }
+    }
+
+    /// True when the plan is the trivial single-server one.
+    pub fn is_single(&self) -> bool {
+        self.n_shards <= 1
+    }
+
+    /// Structural validity of the plan.
+    pub fn validate(&self) -> Result<(), WireError> {
+        if self.n_shards == 0 || self.n_shards > MAX_SHARDS {
+            return Err(WireError::BadPayload("n_shards must be in [1, 16]"));
+        }
+        if self.shard_id >= self.n_shards {
+            return Err(WireError::BadPayload("shard_id must be < n_shards"));
+        }
+        Ok(())
+    }
+}
+
+impl Default for ShardPlan {
+    fn default() -> Self {
+        ShardPlan::single()
+    }
+}
+
+/// Deterministic block-ownership map shared by the sharded client driver
+/// and the tests: which shard owns which vote block of a `d`-dimension
+/// model chunked at `block_bits` dimensions per block, plus the
+/// scatter/gather transforms between the global model and each shard's
+/// sub-model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardLayout {
+    d: usize,
+    block_bits: usize,
+    n_shards: usize,
+}
+
+impl ShardLayout {
+    /// Build the layout for a `d`-dimension model with `payload_budget`
+    /// bytes per vote frame (the same geometry
+    /// [`crate::wire::JobSpec::vote_block_bits`] derives) split over
+    /// `n_shards` servers.
+    pub fn new(d: usize, payload_budget: usize, n_shards: usize) -> Self {
+        ShardLayout {
+            d,
+            block_bits: payload_budget.max(1) * 8,
+            n_shards: n_shards.max(1),
+        }
+    }
+
+    /// Total vote blocks of the full model.
+    pub fn n_blocks(&self) -> usize {
+        self.d.div_ceil(self.block_bits).max(1)
+    }
+
+    /// Number of shards in the plan.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Shard owning vote block `block` (round-robin, mirroring the
+    /// simulator's `seq % n_switches` assignment).
+    pub fn owner_of_block(&self, block: usize) -> usize {
+        block % self.n_shards
+    }
+
+    /// Shard owning global model dimension `dim`.
+    pub fn owner_of_dim(&self, dim: usize) -> usize {
+        (dim / self.block_bits) % self.n_shards
+    }
+
+    /// Bit width of global vote block `block` (full `block_bits` except
+    /// possibly the last block of the model).
+    fn block_width(&self, block: usize) -> usize {
+        let lo = block * self.block_bits;
+        self.block_bits.min(self.d.saturating_sub(lo))
+    }
+
+    /// Sub-model dimension of `shard`: the summed widths of its owned
+    /// blocks. Zero when there are more shards than vote blocks — the
+    /// sharded client refuses such plans.
+    pub fn shard_dims(&self, shard: usize) -> usize {
+        (0..self.n_blocks())
+            .filter(|&b| self.owner_of_block(b) == shard)
+            .map(|b| self.block_width(b))
+            .sum()
+    }
+
+    /// Scatter a full `d`-bit bitmap into one sub-model bitmap per shard
+    /// (owned blocks concatenated in ascending block order).
+    pub fn split_bitmap(&self, full: &BitVec) -> Vec<BitVec> {
+        assert_eq!(full.len(), self.d, "bitmap length != layout dimension");
+        let mut parts: Vec<BitVec> =
+            (0..self.n_shards).map(|s| BitVec::zeros(self.shard_dims(s))).collect();
+        let mut offsets = vec![0usize; self.n_shards];
+        for b in 0..self.n_blocks() {
+            let s = self.owner_of_block(b);
+            let lo = b * self.block_bits;
+            let width = self.block_width(b);
+            for i in 0..width {
+                if full.get(lo + i) {
+                    parts[s].set(offsets[s] + i, true);
+                }
+            }
+            offsets[s] += width;
+        }
+        parts
+    }
+
+    /// Gather per-shard sub-model bitmaps back into the full `d`-bit
+    /// bitmap (the inverse of [`Self::split_bitmap`]). Errors when a
+    /// part's length disagrees with the layout — a shard served a
+    /// different geometry than the plan describes.
+    pub fn merge_bitmaps(&self, parts: &[BitVec]) -> Result<BitVec, WireError> {
+        if parts.len() != self.n_shards {
+            return Err(WireError::BadPayload("shard bitmap count != n_shards"));
+        }
+        for (s, p) in parts.iter().enumerate() {
+            if p.len() != self.shard_dims(s) {
+                return Err(WireError::BadPayload("shard bitmap length != owned dims"));
+            }
+        }
+        let mut full = BitVec::zeros(self.d);
+        let mut offsets = vec![0usize; self.n_shards];
+        for b in 0..self.n_blocks() {
+            let s = self.owner_of_block(b);
+            let lo = b * self.block_bits;
+            let width = self.block_width(b);
+            for i in 0..width {
+                if parts[s].get(offsets[s] + i) {
+                    full.set(lo + i, true);
+                }
+            }
+            offsets[s] += width;
+        }
+        Ok(full)
+    }
+
+    /// Partition the GIA's selected dimensions by owning shard. Each
+    /// shard's list is ascending in global dimension order — which is
+    /// also that shard's sub-model (upload) order, because owned blocks
+    /// concatenate in ascending block order.
+    pub fn split_selected(&self, gia: &BitVec) -> Vec<Vec<usize>> {
+        assert_eq!(gia.len(), self.d, "GIA length != layout dimension");
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); self.n_shards];
+        for g in gia.iter_ones() {
+            parts[self.owner_of_dim(g)].push(g);
+        }
+        parts
+    }
+
+    /// Interleave per-shard aggregate lanes back into global GIA order:
+    /// walk the selected dimensions ascending and take the next lane from
+    /// each dimension's owner. Errors when a shard returned a lane count
+    /// different from its owned selection.
+    pub fn merge_lanes(&self, gia: &BitVec, parts: &[Vec<i32>]) -> Result<Vec<i32>, WireError> {
+        if parts.len() != self.n_shards {
+            return Err(WireError::BadPayload("shard lane-set count != n_shards"));
+        }
+        let mut cursors = vec![0usize; self.n_shards];
+        let mut out = Vec::with_capacity(gia.count_ones());
+        for g in gia.iter_ones() {
+            let s = self.owner_of_dim(g);
+            let Some(&lane) = parts[s].get(cursors[s]) else {
+                return Err(WireError::BadPayload("shard aggregate shorter than its GIA slice"));
+            };
+            cursors[s] += 1;
+            out.push(lane);
+        }
+        for (s, &used) in cursors.iter().enumerate() {
+            if used != parts[s].len() {
+                return Err(WireError::BadPayload("shard aggregate longer than its GIA slice"));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_validation() {
+        assert!(ShardPlan::single().validate().is_ok());
+        assert!(ShardPlan { n_shards: 4, shard_id: 3 }.validate().is_ok());
+        assert!(ShardPlan { n_shards: 0, shard_id: 0 }.validate().is_err());
+        assert!(ShardPlan { n_shards: 17, shard_id: 0 }.validate().is_err());
+        assert!(ShardPlan { n_shards: 2, shard_id: 2 }.validate().is_err());
+        assert!(ShardPlan::single().is_single());
+        assert!(!ShardPlan { n_shards: 2, shard_id: 0 }.is_single());
+    }
+
+    #[test]
+    fn ownership_is_round_robin_and_covers_the_model() {
+        // d = 100 at budget 8 → 64-bit blocks: blocks 0 (64 bits) and
+        // 1 (36 bits); with 2 shards, shard 0 owns block 0, shard 1
+        // owns the 36-bit tail.
+        let layout = ShardLayout::new(100, 8, 2);
+        assert_eq!(layout.n_blocks(), 2);
+        assert_eq!(layout.owner_of_block(0), 0);
+        assert_eq!(layout.owner_of_block(1), 1);
+        assert_eq!(layout.owner_of_dim(63), 0);
+        assert_eq!(layout.owner_of_dim(64), 1);
+        assert_eq!(layout.shard_dims(0), 64);
+        assert_eq!(layout.shard_dims(1), 36);
+        // Shard dims always partition d.
+        for (d, budget, n) in [(100, 8, 2), (1000, 16, 4), (257, 8, 3), (64, 8, 4)] {
+            let l = ShardLayout::new(d, budget, n);
+            let total: usize = (0..n).map(|s| l.shard_dims(s)).sum();
+            assert_eq!(total, d, "d={d} budget={budget} n={n}");
+        }
+    }
+
+    #[test]
+    fn more_shards_than_blocks_leaves_empty_shards() {
+        // 64 dims at budget 8 is a single block: shards 1..3 own nothing.
+        let layout = ShardLayout::new(64, 8, 4);
+        assert_eq!(layout.shard_dims(0), 64);
+        for s in 1..4 {
+            assert_eq!(layout.shard_dims(s), 0);
+        }
+    }
+
+    #[test]
+    fn bitmap_split_merge_roundtrip() {
+        let d = 300;
+        let bits: Vec<usize> = (0..d).filter(|i| i % 7 == 0 || i % 11 == 3).collect();
+        let full = BitVec::from_indices(d, &bits);
+        for n in [1usize, 2, 3, 4] {
+            let layout = ShardLayout::new(d, 8, n);
+            let parts = layout.split_bitmap(&full);
+            assert_eq!(parts.len(), n);
+            let ones: usize = parts.iter().map(|p| p.count_ones()).sum();
+            assert_eq!(ones, full.count_ones());
+            assert_eq!(layout.merge_bitmaps(&parts).unwrap(), full, "n={n}");
+        }
+    }
+
+    #[test]
+    fn merge_bitmaps_rejects_wrong_geometry() {
+        let layout = ShardLayout::new(100, 8, 2);
+        let full = BitVec::from_indices(100, &[1, 70]);
+        let parts = layout.split_bitmap(&full);
+        assert!(layout.merge_bitmaps(&parts[..1]).is_err(), "missing shard accepted");
+        let bad = vec![BitVec::zeros(64), BitVec::zeros(35)];
+        assert!(layout.merge_bitmaps(&bad).is_err(), "short sub-bitmap accepted");
+    }
+
+    #[test]
+    fn lane_split_merge_reproduces_gia_order() {
+        let d = 200;
+        let layout = ShardLayout::new(d, 8, 3);
+        let gia = BitVec::from_indices(d, &[0, 5, 63, 64, 65, 128, 129, 190, 199]);
+        let selected: Vec<usize> = gia.iter_ones().collect();
+        // Lane value = 1000 + global dim, so merged order is checkable.
+        let per_shard = layout.split_selected(&gia);
+        let flat: usize = per_shard.iter().map(|p| p.len()).sum();
+        assert_eq!(flat, selected.len());
+        for part in &per_shard {
+            assert!(part.windows(2).all(|w| w[0] < w[1]), "per-shard order not ascending");
+        }
+        let parts: Vec<Vec<i32>> = per_shard
+            .iter()
+            .map(|idxs| idxs.iter().map(|&g| 1000 + g as i32).collect())
+            .collect();
+        let merged = layout.merge_lanes(&gia, &parts).unwrap();
+        let want: Vec<i32> = selected.iter().map(|&g| 1000 + g as i32).collect();
+        assert_eq!(merged, want);
+    }
+
+    #[test]
+    fn merge_lanes_rejects_mismatched_counts() {
+        let layout = ShardLayout::new(128, 8, 2);
+        let gia = BitVec::from_indices(128, &[0, 64]);
+        // Shard 0 owns dim 0, shard 1 owns dim 64 — one lane each.
+        assert!(layout.merge_lanes(&gia, &[vec![1], vec![]]).is_err(), "short part accepted");
+        assert!(
+            layout.merge_lanes(&gia, &[vec![1], vec![2, 3]]).is_err(),
+            "long part accepted"
+        );
+        assert_eq!(layout.merge_lanes(&gia, &[vec![1], vec![2]]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_gia_merges_to_empty_aggregate() {
+        let layout = ShardLayout::new(256, 8, 4);
+        let gia = BitVec::zeros(256);
+        let parts = vec![Vec::new(); 4];
+        assert!(layout.merge_lanes(&gia, &parts).unwrap().is_empty());
+    }
+}

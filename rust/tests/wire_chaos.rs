@@ -302,6 +302,60 @@ fn unreachable_threshold_rounds_complete_without_wedging() {
     server.shutdown();
 }
 
+/// Chaos under register pressure (ROADMAP follow-on from the chaos PR):
+/// a server with barely one resident vote block must process a
+/// many-block space in waves *while* the link reorders heavily in both
+/// directions. Reordered blocks land beyond the register window and take
+/// the spill path; dropped spill is repaired by retransmission — and the
+/// rounds must still be bit-exact.
+#[test]
+fn chaos_under_register_pressure_stays_bit_exact() {
+    // budget 16 → one 128-dim vote block = 256 B of counters; 300 B of
+    // registers hold exactly one block, so d = 1024 (8 blocks) forces
+    // waves on every round.
+    let server = serve(&ServeOptions {
+        profile: fediac::configx::PsProfile {
+            memory_bytes: 300,
+            ..fediac::configx::PsProfile::high()
+        },
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let heavy_reorder = ChaosDirection {
+        drop: 0.10,
+        duplicate: 0.10,
+        reorder: 0.50,
+        reorder_depth: 6,
+        ..ChaosDirection::default()
+    };
+    let proxy = start_proxy(
+        server.local_addr(),
+        ChaosConfig { seed: 101, uplink: heavy_reorder, downlink: heavy_reorder },
+    );
+    let setup = JobSetup {
+        job: 650,
+        seed: 43,
+        d: 1024,
+        n_clients: 2,
+        threshold_a: 1,
+        payload_budget: 16,
+    };
+    let retx = AtomicU64::new(0);
+    run_job(proxy.local_addr(), &setup, &retx);
+
+    let snap = proxy.snapshot();
+    assert!(snap.up.reordered > 0 && snap.down.reordered > 0, "reorder never fired");
+    let stats = server.stats();
+    assert_eq!(stats.rounds_completed, ROUNDS as u64);
+    assert!(stats.waves > 0, "tiny register file never forced a wave");
+    assert!(
+        stats.spilled > 0,
+        "heavy reorder against a one-block window should spill out-of-window packets"
+    );
+    proxy.shutdown();
+    server.shutdown();
+}
+
 /// Re-join under chaos: restart the server (same port, empty state)
 /// between rounds. The client's next round runs into JOIN_UNKNOWN_JOB,
 /// re-registers inline and completes bit-exactly — all through a lossy,

@@ -18,7 +18,7 @@ use fediac::compress::golomb;
 use fediac::util::{BitVec, Rng};
 use fediac::wire::{
     decode_frame, decode_lanes, encode_frame, encode_lanes, vote_chunks, Header, JobSpec,
-    WireKind,
+    ShardPlan, WireKind,
 };
 
 /// Dimension cap handed to `golomb::decode_with_limit` — what a real
@@ -35,7 +35,13 @@ fn fuzz_frames() -> usize {
 /// Valid frames of every kind and payload codec, plus raw payload bodies.
 fn corpus(rng: &mut Rng) -> Vec<Vec<u8>> {
     let mut out = Vec::new();
-    let spec = JobSpec { d: 10_000, n_clients: 8, threshold_a: 3, payload_budget: 256 };
+    let spec = JobSpec {
+        d: 10_000,
+        n_clients: 8,
+        threshold_a: 3,
+        payload_budget: 256,
+        shard: ShardPlan::single(),
+    };
 
     // Join + control kinds.
     out.push(encode_frame(&Header::control(WireKind::Join, 7, 2, 0, 0), &spec.encode()));

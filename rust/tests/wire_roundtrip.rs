@@ -7,7 +7,8 @@ use fediac::prop_assert;
 use fediac::util::{prop, BitVec, Rng};
 use fediac::wire::{
     byte_chunks, decode_frame, decode_lanes, encode_frame, encode_lanes, update_chunks,
-    vote_chunks, ChunkAssembler, Frame, Header, JobSpec, WireError, WireKind, HEADER_LEN,
+    vote_chunks, ChunkAssembler, Frame, Header, JobSpec, ShardPlan, WireError, WireKind,
+    HEADER_LEN,
 };
 
 fn random_bitvec(rng: &mut Rng, d: usize, density: f64) -> BitVec {
@@ -146,7 +147,13 @@ fn wrong_version_rejected() {
 
 #[test]
 fn job_spec_survives_join_frame() {
-    let spec = JobSpec { d: 123_456, n_clients: 20, threshold_a: 3, payload_budget: 1408 };
+    let spec = JobSpec {
+        d: 123_456,
+        n_clients: 20,
+        threshold_a: 3,
+        payload_budget: 1408,
+        shard: ShardPlan::single(),
+    };
     let buf = encode_frame(&Header::control(WireKind::Join, 9, 4, 0, 0), &spec.encode());
     let frame = decode_frame(&buf).unwrap();
     assert_eq!(JobSpec::decode(frame.payload).unwrap(), spec);

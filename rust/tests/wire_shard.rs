@@ -1,0 +1,449 @@
+//! Sharded-wire integration tests: one job's block space split
+//! round-robin across N collaborating daemons (PROTOCOL.md §8), proven
+//! **bit-exact** against both the single-server wire path and the
+//! `num_switches` simulation (`fl::FlEnv::upload_phase_sharded`) — clean
+//! and under `net::chaos` in both directions — plus the register-pressure
+//! relief the shard plane exists for: at fixed `--memory`, each of N
+//! servers must see strictly fewer waves + register stalls than the one
+//! server handling the whole model.
+
+use std::time::Duration;
+
+use fediac::algorithms::{common, fediac::FediAc, Algorithm};
+use fediac::client::{protocol, ClientOptions, FediacClient, RoundOutcome, ShardedFediacClient};
+use fediac::compress::{self, deduce_gia};
+use fediac::configx::{DatasetKind, ExperimentConfig, Partition, PsProfile};
+use fediac::data::synth;
+use fediac::fl::{FlEnv, NativeBackend};
+use fediac::net::{ChaosConfig, ChaosDirection};
+use fediac::server::{serve_sharded, ServeOptions, ServerHandle};
+use fediac::util::{BitVec, Rng};
+
+const N_CLIENTS: usize = 4;
+
+fn make_env(seed: u64, n_switches: usize) -> FlEnv {
+    let cfg = ExperimentConfig {
+        num_clients: N_CLIENTS,
+        num_switches: n_switches,
+        seed,
+        ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+    };
+    let fd = synth::generate(cfg.dataset, cfg.partition, N_CLIENTS, 40, cfg.seed);
+    let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+    let mut env = FlEnv::new(cfg, backend);
+    env.init_model();
+    env
+}
+
+/// Everything the wire side needs to replay one in-process FediAC round
+/// (the `wire_loopback` recipe, parameterised on `num_switches`).
+struct SimRound {
+    seed: u64,
+    d: usize,
+    k: usize,
+    threshold_a: u16,
+    bits_b: usize,
+    updates: Vec<Vec<f32>>,
+    params_before: Vec<f32>,
+    params_after: Vec<f32>,
+}
+
+/// Run bootstrap + round 1 of the simulated FediAC with `n_switches`
+/// collaborative PSes and capture the round-1 inputs and ground truth.
+fn run_sim_round(seed: u64, n_switches: usize) -> SimRound {
+    let mut env = make_env(seed, n_switches);
+    let mut alg = FediAc::new(&env.cfg, env.d());
+    alg.run_round(&mut env, 0).unwrap();
+    let params_before = env.params.clone();
+    let bits_b = alg.bits().expect("bootstrap sets b");
+    alg.run_round(&mut env, 1).unwrap();
+    let params_after = env.params.clone();
+
+    // Twin run stopped after bootstrap to re-derive the round-1 updates
+    // (deterministic per seed; post-bootstrap residuals are zero).
+    let mut env2 = make_env(seed, n_switches);
+    let mut alg2 = FediAc::new(&env2.cfg, env2.d());
+    alg2.run_round(&mut env2, 0).unwrap();
+    assert_eq!(env2.params, params_before, "twin env diverged in bootstrap");
+    let d = env2.d();
+    let lr = env2.cfg.lr.at(1) as f32;
+    let zero_residuals = vec![vec![0.0f32; d]; N_CLIENTS];
+    let local = common::local_training(&mut env2, 1, lr, Some(&zero_residuals));
+
+    SimRound {
+        seed,
+        d,
+        k: protocol::votes_per_client(d, env2.cfg.fediac.k_frac),
+        threshold_a: env2.cfg.fediac.threshold_a as u16,
+        bits_b,
+        updates: local.updates,
+        params_before,
+        params_after,
+    }
+}
+
+fn client_opts(server: String, job: u32, id: u16, sim: &SimRound) -> ClientOptions {
+    let mut opts = ClientOptions::new(server, job, id, sim.d, N_CLIENTS as u16);
+    opts.threshold_a = sim.threshold_a;
+    opts.k = sim.k;
+    opts.bits_b = sim.bits_b;
+    opts.backend_seed = sim.seed;
+    opts.payload_budget = 16; // enough vote blocks to split 4 ways
+    opts.timeout = Duration::from_millis(300);
+    opts.max_retries = 200;
+    opts
+}
+
+/// Run all clients of one job concurrently against the shard endpoint
+/// list (a single endpoint = the plain single-server path) and return
+/// their outcomes in client order.
+fn run_clients(servers: &[String], job: u32, sim: &SimRound) -> Vec<RoundOutcome> {
+    let mut outcomes: Vec<Option<RoundOutcome>> = (0..N_CLIENTS).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (i, slot) in outcomes.iter_mut().enumerate() {
+            let update = &sim.updates[i];
+            scope.spawn(move || {
+                let opts = client_opts(servers[0].clone(), job, i as u16, sim);
+                let mut client = ShardedFediacClient::connect(servers, opts).unwrap();
+                *slot = Some(client.run_round(1, update).unwrap());
+            });
+        }
+    });
+    outcomes.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// The plain single-server wire path (ordinary [`FediacClient`] against
+/// one daemon) — the reference the sharded rounds must equal.
+fn run_clients_plain(server: &str, job: u32, sim: &SimRound) -> Vec<RoundOutcome> {
+    let mut outcomes: Vec<Option<RoundOutcome>> = (0..N_CLIENTS).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (i, slot) in outcomes.iter_mut().enumerate() {
+            let update = &sim.updates[i];
+            scope.spawn(move || {
+                let opts = client_opts(server.to_string(), job, i as u16, sim);
+                let mut client = FediacClient::connect(opts).unwrap();
+                *slot = Some(client.run_round(1, update).unwrap());
+            });
+        }
+    });
+    outcomes.into_iter().map(|o| o.unwrap()).collect()
+}
+
+fn endpoints(handles: &[ServerHandle]) -> Vec<String> {
+    handles.iter().map(|h| h.local_addr().to_string()).collect()
+}
+
+/// The acceptance matrix: for N ∈ {2, 4}, a sharded wire round must be
+/// bit-exact against (a) the single-server wire round and (b) the
+/// simulated FediAC round configured with `num_switches = N`.
+#[test]
+fn sharded_wire_matches_single_server_and_simulation_bit_exactly() {
+    for n_shards in [2usize, 4] {
+        let sim = run_sim_round(7, n_shards);
+
+        let single = serve_sharded(&ServeOptions::default(), 1).unwrap();
+        let single_out =
+            run_clients_plain(&endpoints(&single)[0], 300 + n_shards as u32, &sim);
+
+        let shards = serve_sharded(&ServeOptions::default(), n_shards as u8).unwrap();
+        let sharded_out = run_clients(&endpoints(&shards), 400 + n_shards as u32, &sim);
+
+        for (i, (a, b)) in single_out.iter().zip(&sharded_out).enumerate() {
+            assert_eq!(b.gia, a.gia, "N={n_shards} client {i}: GIA differs from single-server");
+            assert_eq!(
+                b.aggregate, a.aggregate,
+                "N={n_shards} client {i}: aggregate differs from single-server"
+            );
+            assert_eq!(
+                b.global_max, a.global_max,
+                "N={n_shards} client {i}: folded global max differs"
+            );
+        }
+        // Every client of the sharded job saw the same consensus.
+        for o in sharded_out.iter().skip(1) {
+            assert_eq!(o.gia, sharded_out[0].gia);
+            assert_eq!(o.aggregate, sharded_out[0].aggregate);
+        }
+        let out = &sharded_out[0];
+        assert!(!out.gia_indices.is_empty(), "N={n_shards}: empty consensus");
+        assert_eq!(out.global_max, common::global_max_abs(&sim.updates));
+        // Applying the sharded wire round to the pre-round model
+        // reproduces the `upload_phase_sharded` simulation bit-for-bit.
+        let mut params = sim.params_before.clone();
+        out.apply(&mut params);
+        assert_eq!(
+            params, sim.params_after,
+            "N={n_shards}: sharded wire round diverged from the num_switches simulation"
+        );
+        // Each shard server hosted exactly its slice of the round.
+        for (s, h) in shards.iter().enumerate() {
+            let st = h.stats();
+            assert_eq!(st.jobs_created, 1, "N={n_shards} shard {s}");
+            assert_eq!(st.rounds_completed, 1, "N={n_shards} shard {s}");
+        }
+        for h in single {
+            h.shutdown();
+        }
+        for h in shards {
+            h.shutdown();
+        }
+    }
+}
+
+/// Deterministic per-(client, round) synthetic update vectors (the
+/// `wire_chaos` recipe).
+fn synthetic_update(seed: u64, d: usize, client: usize, round: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ (client as u64) << 16 ^ (round as u64) << 40);
+    (0..d).map(|_| (rng.gaussian() * 0.02) as f32).collect()
+}
+
+/// Clean in-process reference for one round: (gia indices, aggregate).
+fn reference_round(
+    updates: &[Vec<f32>],
+    seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+    bits_b: usize,
+) -> (Vec<usize>, Vec<i32>) {
+    let votes: Vec<BitVec> = updates
+        .iter()
+        .enumerate()
+        .map(|(i, u)| protocol::client_vote(u, k, seed, round, i))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = updates.iter().map(|u| compress::max_abs(u)).fold(f32::MIN_POSITIVE, f32::max);
+    let f = compress::scale_factor(bits_b, updates.len(), m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    for (i, u) in updates.iter().enumerate() {
+        let (q, _) = protocol::client_quantize(u, &mask, f, seed, round, i);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+    }
+    (indices, lanes)
+}
+
+/// Chaos matrix for the shard plane: every client↔shard path runs
+/// through its own decorrelated in-process chaos proxy (loss, dup,
+/// bounded reorder in BOTH directions), multi-round, N ∈ {2, 4} — and
+/// the reassembled rounds stay bit-exact.
+#[test]
+fn sharded_rounds_under_both_direction_chaos_stay_bit_exact() {
+    const ROUNDS: usize = 3;
+    let d = 640;
+    let seed = 41u64;
+    let n_clients = 2usize;
+    let k = protocol::votes_per_client(d, 0.05);
+    for n_shards in [2usize, 4] {
+        let shards = serve_sharded(&ServeOptions::default(), n_shards as u8).unwrap();
+        let servers = endpoints(&shards);
+        std::thread::scope(|scope| {
+            for client_id in 0..n_clients {
+                let servers = &servers;
+                scope.spawn(move || {
+                    let mut opts = ClientOptions::new(
+                        servers[0].clone(),
+                        900 + n_shards as u32,
+                        client_id as u16,
+                        d,
+                        n_clients as u16,
+                    );
+                    opts.threshold_a = 1;
+                    opts.k = k;
+                    opts.backend_seed = seed;
+                    opts.payload_budget = 16;
+                    opts.timeout = Duration::from_millis(150);
+                    opts.max_retries = 400;
+                    opts.chaos = Some(ChaosConfig::symmetric(
+                        57 + client_id as u64,
+                        ChaosDirection::lossy(0.20, 0.10, 0.30),
+                    ));
+                    let mut client = ShardedFediacClient::connect(servers, opts).unwrap();
+                    for round in 1..=ROUNDS {
+                        let update = synthetic_update(seed, d, client_id, round);
+                        let out = client.run_round(round, &update).unwrap();
+                        let updates: Vec<Vec<f32>> = (0..n_clients)
+                            .map(|c| synthetic_update(seed, d, c, round))
+                            .collect();
+                        let (ref_idx, ref_lanes) =
+                            reference_round(&updates, seed, round, k, 1, 12);
+                        assert_eq!(
+                            out.gia_indices, ref_idx,
+                            "N={n_shards} client {client_id} round {round}: consensus diverged"
+                        );
+                        assert_eq!(
+                            out.aggregate, ref_lanes,
+                            "N={n_shards} client {client_id} round {round}: aggregate diverged"
+                        );
+                    }
+                    // The chaos proxies really fired on this client's paths.
+                    let touched: u64 = client
+                        .shards()
+                        .iter()
+                        .filter_map(|c| c.chaos_snapshot())
+                        .map(|s| {
+                            s.up.dropped + s.down.dropped + s.up.reordered + s.down.reordered
+                        })
+                        .sum();
+                    assert!(touched > 0, "N={n_shards} client {client_id}: chaos never fired");
+                });
+            }
+        });
+        for (s, h) in shards.iter().enumerate() {
+            assert_eq!(
+                h.stats().rounds_completed,
+                ROUNDS as u64,
+                "N={n_shards} shard {s}: rounds did not close under chaos"
+            );
+        }
+        for h in shards {
+            h.shutdown();
+        }
+    }
+}
+
+/// The point of the shard plane: per-server register pressure drops. At
+/// fixed tiny `--memory`, the one server of an unsharded job processes
+/// the whole block space in waves; each of N shard servers owns 1/N of
+/// the blocks and must see strictly fewer `waves + register_stalls` —
+/// while the aggregation stays bit-exact.
+#[test]
+fn sharding_relieves_register_pressure_at_fixed_memory() {
+    let d = 2048;
+    let seed = 61u64;
+    let n_clients = 2usize;
+    let k = protocol::votes_per_client(d, 0.05);
+    let opts = ServeOptions {
+        // budget 16 → one 128-dim vote block costs 256 B of counters;
+        // 300 B of registers hold exactly one resident block.
+        profile: PsProfile { memory_bytes: 300, ..PsProfile::high() },
+        ..ServeOptions::default()
+    };
+
+    let mut pressure_per_n = Vec::new();
+    for n_shards in [1usize, 2, 4] {
+        let shards = serve_sharded(&opts, n_shards as u8).unwrap();
+        let servers = endpoints(&shards);
+        std::thread::scope(|scope| {
+            for client_id in 0..n_clients {
+                let servers = &servers;
+                scope.spawn(move || {
+                    let mut copts = ClientOptions::new(
+                        servers[0].clone(),
+                        700 + n_shards as u32,
+                        client_id as u16,
+                        d,
+                        n_clients as u16,
+                    );
+                    copts.threshold_a = 1;
+                    copts.k = k;
+                    copts.backend_seed = seed;
+                    copts.payload_budget = 16;
+                    copts.timeout = Duration::from_millis(300);
+                    copts.max_retries = 200;
+                    let mut client = ShardedFediacClient::connect(servers, copts).unwrap();
+                    let update = synthetic_update(seed, d, client_id, 1);
+                    let out = client.run_round(1, &update).unwrap();
+                    let updates: Vec<Vec<f32>> =
+                        (0..n_clients).map(|c| synthetic_update(seed, d, c, 1)).collect();
+                    let (ref_idx, ref_lanes) = reference_round(&updates, seed, 1, k, 1, 12);
+                    assert_eq!(out.gia_indices, ref_idx, "N={n_shards}: consensus diverged");
+                    assert_eq!(out.aggregate, ref_lanes, "N={n_shards}: aggregate diverged");
+                });
+            }
+        });
+        // Pressure = the busiest server's waves + register stalls.
+        let worst = shards
+            .iter()
+            .map(|h| {
+                let st = h.stats();
+                st.waves + st.register_stalls
+            })
+            .max()
+            .unwrap();
+        pressure_per_n.push((n_shards, worst));
+        for h in shards {
+            h.shutdown();
+        }
+    }
+
+    let baseline = pressure_per_n[0].1;
+    assert!(
+        baseline > 0,
+        "unsharded baseline saw no register pressure — the scenario is too easy"
+    );
+    for &(n_shards, worst) in &pressure_per_n[1..] {
+        assert!(
+            worst < baseline,
+            "N={n_shards}: per-server pressure {worst} not strictly below the \
+             single-server baseline {baseline}"
+        );
+    }
+}
+
+/// A shard whose sub-model wins no consensus must still close its round
+/// (zero-lane completion block + empty aggregate) while the other shards
+/// carry the real payload — the mixed empty/non-empty reassembly path.
+#[test]
+fn shard_with_empty_consensus_still_closes_the_round() {
+    let d = 512;
+    let n_clients = 2usize;
+    let shards = serve_sharded(&ServeOptions::default(), 2).unwrap();
+    let servers = endpoints(&shards);
+    let seed = 83u64;
+
+    let mut outcomes: Vec<Option<RoundOutcome>> = (0..n_clients).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (client_id, slot) in outcomes.iter_mut().enumerate() {
+            let servers = &servers;
+            scope.spawn(move || {
+                let mut opts = ClientOptions::new(
+                    servers[0].clone(),
+                    777,
+                    client_id as u16,
+                    d,
+                    n_clients as u16,
+                );
+                opts.threshold_a = 1;
+                opts.k = 8;
+                opts.backend_seed = seed;
+                // budget 16 → 128-dim blocks; with 2 shards, shard 0 owns
+                // blocks 0 and 2, shard 1 owns blocks 1 and 3.
+                opts.payload_budget = 16;
+                opts.timeout = Duration::from_millis(300);
+                opts.max_retries = 200;
+                let mut client = ShardedFediacClient::connect(servers, opts).unwrap();
+                // Hot |U| only inside block 0 (dims 0..100): the Gumbel
+                // vote scorer (∝ |U|) lands every vote there, so shard 1
+                // deduces an empty sub-GIA while shard 0 carries k_S.
+                let update: Vec<f32> =
+                    (0..d).map(|i| if i < 100 { 1.0 } else { 0.0 }).collect();
+                *slot = Some(client.run_round(1, &update).unwrap());
+            });
+        }
+    });
+    let out = outcomes[0].take().unwrap();
+    assert!(!out.gia_indices.is_empty(), "expected consensus in the hot block");
+    assert!(
+        out.gia_indices.iter().all(|&g| g < 128),
+        "votes leaked outside block 0: {:?}",
+        out.gia_indices
+    );
+    // Both shard servers closed the round — including the empty one.
+    for (s, h) in shards.iter().enumerate() {
+        assert_eq!(h.stats().rounds_completed, 1, "shard {s} never closed its round");
+    }
+    // Reference math agrees on the non-empty slice.
+    let updates: Vec<Vec<f32>> = (0..n_clients)
+        .map(|_| (0..d).map(|i| if i < 100 { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let (ref_idx, ref_lanes) = reference_round(&updates, seed, 1, 8, 1, 12);
+    assert_eq!(out.gia_indices, ref_idx);
+    assert_eq!(out.aggregate, ref_lanes);
+    for h in shards {
+        h.shutdown();
+    }
+}
