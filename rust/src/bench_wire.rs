@@ -1,0 +1,262 @@
+//! `fediac bench-wire`: drive real serve + client FediAC rounds over
+//! loopback UDP and report **rounds/s** and **bytes/round** per I/O
+//! backend (`--io threaded` vs `--io reactor`) — the first step of the
+//! ROADMAP "cross-machine benches" item. Unlike `benches/bench_round`,
+//! which times the in-process simulator, this exercises the whole wire
+//! stack: codec, daemon backend, retransmission timers and the client
+//! driver, on real sockets.
+//!
+//! Byte accounting is client-side ([`ClientStats::bytes_sent`] /
+//! [`ClientStats::bytes_received`]), so the number is what a deployment
+//! would meter at the edge: uplink data + downlink broadcasts +
+//! acks/polls + retransmissions.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::client::{ClientOptions, ClientStats, FediacClient};
+use crate::configx::PsProfile;
+use crate::server::{serve, IoBackend, ServeOptions, StatsSnapshot};
+use crate::util::Rng;
+use crate::wire::DEFAULT_PAYLOAD_BUDGET;
+
+/// Workload shape for one bench run (applied to every backend measured).
+#[derive(Debug, Clone)]
+pub struct BenchWireOptions {
+    /// Concurrent jobs (tenants) on the daemon.
+    pub jobs: usize,
+    /// FediAC rounds each job executes.
+    pub rounds: usize,
+    /// Clients per job (all must finish each round).
+    pub clients_per_job: u16,
+    /// Model dimension d per job.
+    pub d: usize,
+    /// Payload bytes per data frame.
+    pub payload_budget: usize,
+    /// Switch profile for the daemon (register memory drives waves).
+    pub profile: PsProfile,
+    /// Backends to measure, in order.
+    pub backends: Vec<IoBackend>,
+    /// Seed for the synthetic update streams (shared by every client of
+    /// a job, as the protocol requires).
+    pub seed: u64,
+}
+
+impl Default for BenchWireOptions {
+    fn default() -> Self {
+        BenchWireOptions {
+            jobs: 4,
+            rounds: 3,
+            clients_per_job: 2,
+            d: 4096,
+            payload_budget: DEFAULT_PAYLOAD_BUDGET,
+            profile: PsProfile::high(),
+            backends: vec![IoBackend::Threaded, IoBackend::Reactor],
+            seed: 7,
+        }
+    }
+}
+
+impl BenchWireOptions {
+    /// Tiny CI-friendly workload (`fediac bench-wire --smoke`): seconds,
+    /// not minutes, but still both backends end-to-end over sockets.
+    pub fn smoke() -> Self {
+        BenchWireOptions {
+            jobs: 2,
+            rounds: 1,
+            clients_per_job: 1,
+            d: 512,
+            payload_budget: 256,
+            ..BenchWireOptions::default()
+        }
+    }
+}
+
+/// One backend's measurements.
+#[derive(Debug, Clone)]
+pub struct BackendReport {
+    /// Backend name (`"threaded"` / `"reactor"`).
+    pub backend: &'static str,
+    /// Wall-clock seconds for the whole workload.
+    pub wall_s: f64,
+    /// Completed rounds (jobs × rounds) per wall-clock second.
+    pub rounds_per_s: f64,
+    /// Client-metered bytes (sent + received) per completed round.
+    pub bytes_per_round: f64,
+    /// Total client-metered bytes.
+    pub client_bytes: u64,
+    /// Frames retransmitted across all clients (loopback should be ~0).
+    pub retransmissions: u64,
+    /// The daemon's counters at the end of the workload.
+    pub server: StatsSnapshot,
+}
+
+/// A full bench run: the workload shape plus one report per backend.
+#[derive(Debug, Clone)]
+pub struct BenchWireReport {
+    /// The workload that produced these numbers.
+    pub opts: BenchWireOptions,
+    /// One entry per measured backend, in run order.
+    pub backends: Vec<BackendReport>,
+}
+
+impl BenchWireReport {
+    /// Serialise to the `BENCH_WIRE.json` schema (hand-rolled — the
+    /// crate builds offline without a JSON serializer).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"config\": {{\"jobs\": {}, \"rounds\": {}, \"clients_per_job\": {}, \
+             \"d\": {}, \"payload_budget\": {}, \"seed\": {}}},\n",
+            self.opts.jobs,
+            self.opts.rounds,
+            self.opts.clients_per_job,
+            self.opts.d,
+            self.opts.payload_budget,
+            self.opts.seed
+        ));
+        out.push_str("  \"backends\": [\n");
+        for (i, b) in self.backends.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"backend\": \"{}\", \"wall_s\": {:.6}, \"rounds_per_s\": {:.3}, \
+                 \"bytes_per_round\": {:.1}, \"client_bytes\": {}, \"retransmissions\": {}, \
+                 \"server_packets\": {}, \"rounds_completed\": {}, \"workers_spawned\": {}, \
+                 \"idle_wakeups\": {}}}{}\n",
+                b.backend,
+                b.wall_s,
+                b.rounds_per_s,
+                b.bytes_per_round,
+                b.client_bytes,
+                b.retransmissions,
+                b.server.packets,
+                b.server.rounds_completed,
+                b.server.workers_spawned,
+                b.server.idle_wakeups,
+                if i + 1 < self.backends.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Human-readable TSV block (the shape the other `bench_*` targets
+    /// print).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "# bench_wire: jobs={} rounds={} clients/job={} d={} payload={}\n\
+             backend\twall_s\trounds/s\tbytes/round\tretx\tserver_pkts\tworkers\tidle_wakes\n",
+            self.opts.jobs,
+            self.opts.rounds,
+            self.opts.clients_per_job,
+            self.opts.d,
+            self.opts.payload_budget
+        );
+        for b in &self.backends {
+            out.push_str(&format!(
+                "{}\t{:.3}\t{:.1}\t{:.0}\t{}\t{}\t{}\t{}\n",
+                b.backend,
+                b.wall_s,
+                b.rounds_per_s,
+                b.bytes_per_round,
+                b.retransmissions,
+                b.server.packets,
+                b.server.workers_spawned,
+                b.server.idle_wakeups
+            ));
+        }
+        out
+    }
+}
+
+/// Run the workload once per requested backend and collect the reports.
+pub fn run(opts: &BenchWireOptions) -> Result<BenchWireReport> {
+    anyhow::ensure!(opts.jobs > 0 && opts.rounds > 0, "jobs and rounds must be > 0");
+    anyhow::ensure!(opts.clients_per_job > 0, "clients_per_job must be > 0");
+    let mut backends = Vec::with_capacity(opts.backends.len());
+    for &backend in &opts.backends {
+        backends.push(run_backend(opts, backend)?);
+    }
+    Ok(BenchWireReport { opts: opts.clone(), backends })
+}
+
+fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendReport> {
+    let handle = serve(&ServeOptions {
+        profile: opts.profile.clone(),
+        io_backend: backend,
+        ..ServeOptions::default()
+    })
+    .with_context(|| format!("starting {} daemon", backend.name()))?;
+    let addr = handle.local_addr();
+
+    let started = Instant::now();
+    let mut per_client: Vec<ClientStats> = Vec::new();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for job in 0..opts.jobs {
+            for cid in 0..opts.clients_per_job {
+                handles.push(scope.spawn(move || -> Result<ClientStats> {
+                    drive_client(opts, addr, job as u32, cid)
+                }));
+            }
+        }
+        for h in handles {
+            per_client.push(h.join().expect("bench client panicked")?);
+        }
+        Ok(())
+    })?;
+    let wall_s = started.elapsed().as_secs_f64().max(f64::EPSILON);
+
+    let mut totals = ClientStats::default();
+    for s in &per_client {
+        totals.add(s);
+    }
+    let total_rounds = (opts.jobs * opts.rounds) as f64;
+    let client_bytes = totals.bytes_sent + totals.bytes_received;
+    let server = handle.stats();
+    handle.shutdown();
+    Ok(BackendReport {
+        backend: backend.name(),
+        wall_s,
+        rounds_per_s: total_rounds / wall_s,
+        bytes_per_round: client_bytes as f64 / total_rounds,
+        client_bytes,
+        retransmissions: totals.retransmissions,
+        server,
+    })
+}
+
+/// One client of one job: join, run every round on a deterministic
+/// synthetic update stream (residual folded in, Algorithm 1), return the
+/// driver counters.
+fn drive_client(
+    opts: &BenchWireOptions,
+    addr: std::net::SocketAddr,
+    job: u32,
+    cid: u16,
+) -> Result<ClientStats> {
+    // Every client of a job shares the job seed (the protocol requires
+    // agreement on the vote/quantise RNG streams' derivation root).
+    let job_seed = opts.seed ^ ((job as u64) << 16);
+    let mut copts =
+        ClientOptions::new(addr.to_string(), 1000 + job, cid, opts.d, opts.clients_per_job);
+    copts.threshold_a = 1;
+    copts.payload_budget = opts.payload_budget;
+    copts.backend_seed = job_seed;
+    let mut client = FediacClient::connect(copts)
+        .with_context(|| format!("connecting bench client {cid} of job {job}"))?;
+    let mut residual = vec![0.0f32; opts.d];
+    for round in 1..=opts.rounds {
+        let mut rng = Rng::new(job_seed ^ ((cid as u64) << 32) ^ round as u64);
+        let mut update: Vec<f32> =
+            (0..opts.d).map(|_| (rng.gaussian() * 0.01) as f32).collect();
+        for (u, r) in update.iter_mut().zip(&residual) {
+            *u += *r;
+        }
+        let out = client
+            .run_round(round, &update)
+            .with_context(|| format!("job {job} client {cid} round {round}"))?;
+        residual = out.residual;
+    }
+    Ok(client.stats)
+}

@@ -122,6 +122,11 @@ pub struct ClientStats {
     /// Broadcast streams restarted because interleaved frames disagreed
     /// on geometry (`n_blocks`) or the aux word.
     pub stream_resets: u64,
+    /// Datagram bytes handed to the socket (after the loss injector) —
+    /// the `fediac bench-wire` bytes/round numerator, uplink half.
+    pub bytes_sent: u64,
+    /// Datagram bytes received from the socket (before decoding).
+    pub bytes_received: u64,
 }
 
 impl ClientStats {
@@ -134,6 +139,8 @@ impl ClientStats {
         self.polls += other.polls;
         self.rejoins += other.rejoins;
         self.stream_resets += other.stream_resets;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_received += other.bytes_received;
     }
 }
 
@@ -255,7 +262,12 @@ impl FediacClient {
             self.stats.dropped_sends += 1;
             return;
         }
-        let _ = self.socket.send(bytes);
+        // Meter only what actually left the host: send() can fail on a
+        // connected UDP socket (ICMP-unreachable surfacing as
+        // ECONNRESET, ENOBUFS under load).
+        if self.socket.send(bytes).is_ok() {
+            self.stats.bytes_sent += bytes.len() as u64;
+        }
     }
 
     /// The (idempotent) registration frame for this client's job.
@@ -278,6 +290,7 @@ impl FediacClient {
         loop {
             match self.socket.recv(&mut buf) {
                 Ok(n) => {
+                    self.stats.bytes_received += n as u64;
                     let Ok(f) = decode_frame(&buf[..n]) else { continue };
                     if f.header.kind == WireKind::JoinAck && f.header.job == self.opts.job {
                         if f.header.aux == JOIN_OK {
@@ -391,6 +404,7 @@ impl FediacClient {
         loop {
             match self.socket.recv(&mut buf) {
                 Ok(n) => {
+                    self.stats.bytes_received += n as u64;
                     let Ok(frame) = decode_frame(&buf[..n]) else { continue };
                     let h = frame.header;
                     if h.job != self.opts.job {

@@ -10,12 +10,18 @@
 //! fediac fig3   [--ps …]
 //! fediac fig4   [--partition iid|dirichlet]
 //! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
-//! fediac serve  [--bind 0.0.0.0:7177] [--ps high|low] [--memory BYTES]
+//! fediac serve  [--bind 0.0.0.0:7177] [--io threaded|reactor]
+//!               [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-drop 0.0] [--down-dup 0.0]
 //!               [--down-reorder 0.0] [--down-corrupt 0.0] [--chaos-seed 0]
 //! fediac shard-serve [--bind-base 0.0.0.0:7177] [--shards 2]
-//!               [--ps high|low] [--memory BYTES] [--host-bytes BYTES]
-//!               [--down-*…] [--chaos-seed 0] [--stats-every 10]
+//!               [--io threaded|reactor] [--ps high|low] [--memory BYTES]
+//!               [--host-bytes BYTES] [--down-*…] [--chaos-seed 0]
+//!               [--stats-every 10]
+//! fediac bench-wire [--smoke] [--jobs 4] [--rounds 3] [--clients 2]
+//!               [--d 4096] [--payload 1408] [--io both|threaded|reactor]
+//!               [--ps high|low] [--memory BYTES] [--seed 7]
+//!               [--out BENCH_WIRE.json]
 //! fediac client [--server host:port | --shards host:p0,host:p1,…]
 //!               [--job 1] [--client-id 0]
 //!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
@@ -302,8 +308,22 @@ fn serve_options_from(
     let down = chaos_direction_from(args, "down")?;
     let downlink_chaos = (!down.is_clean()).then_some(down);
     let chaos_seed = args.get_u64("chaos-seed", 0)?;
+    // --io picks the event engine; default honours FEDIAC_IO, else the
+    // threaded backend (see DESIGN.md §6 for when to pick which).
+    let default_io = fediac::server::IoBackend::from_env();
+    let io_name = args.get_str("io", default_io.name());
+    let io_backend = fediac::server::IoBackend::parse(&io_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --io '{io_name}' (threaded|reactor)"))?;
     Ok((
-        fediac::server::ServeOptions { bind, profile, limits, downlink_chaos, chaos_seed },
+        fediac::server::ServeOptions {
+            bind,
+            profile,
+            limits,
+            downlink_chaos,
+            chaos_seed,
+            io_backend,
+            host_budget: None,
+        },
         stats_every,
     ))
 }
@@ -316,8 +336,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let handle = fediac::server::serve(&opts)?;
     eprintln!(
-        "[fediac] aggregation server listening on {} (ctrl-c to stop)",
-        handle.local_addr()
+        "[fediac] aggregation server listening on {} ({} backend; ctrl-c to stop)",
+        handle.local_addr(),
+        opts.io_backend.name()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
@@ -381,6 +402,37 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
             );
         }
     }
+}
+
+/// Measure rounds/s and bytes/round for real wire rounds over loopback,
+/// per I/O backend, and write the `BENCH_WIRE.json` artifact (the first
+/// step of the ROADMAP "cross-machine benches" item).
+fn cmd_bench_wire(args: &Args) -> Result<()> {
+    use fediac::bench_wire::{run, BenchWireOptions};
+    let mut opts =
+        if args.get_flag("smoke") { BenchWireOptions::smoke() } else { BenchWireOptions::default() };
+    opts.jobs = args.get_usize("jobs", opts.jobs)?;
+    opts.rounds = args.get_usize("rounds", opts.rounds)?;
+    opts.clients_per_job = args.get_u16("clients", opts.clients_per_job)?;
+    opts.d = args.get_usize("d", opts.d)?;
+    opts.payload_budget = args.get_usize("payload", opts.payload_budget)?;
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    let mut profile = ps_from(args)?;
+    profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
+    opts.profile = profile;
+    let io = args.get_str("io", "both");
+    if io != "both" {
+        let backend = fediac::server::IoBackend::parse(&io)
+            .ok_or_else(|| anyhow::anyhow!("unknown --io '{io}' (both|threaded|reactor)"))?;
+        opts.backends = vec![backend];
+    }
+    let out_path = args.get_str("out", "BENCH_WIRE.json");
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let report = run(&opts)?;
+    println!("{}", report.render());
+    save(&out_path, &report.to_json())?;
+    Ok(())
 }
 
 /// Run a standalone chaos proxy in front of an aggregation server until
@@ -563,8 +615,8 @@ fn cmd_client(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|chaos> \
-         [options]\n\
+        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|chaos|\
+         bench-wire> [options]\n\
          see README.md for the option reference"
     );
     std::process::exit(2);
@@ -583,6 +635,7 @@ fn main() -> Result<()> {
         Some("shard-serve") => cmd_shard_serve(&args),
         Some("client") => cmd_client(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("bench-wire") => cmd_bench_wire(&args),
         _ => usage(),
     }
 }

@@ -1,11 +1,13 @@
 //! Network substrate: packets, Poisson arrivals, M/G/1 queues, the
-//! synthetic cellular traces that drive client upload rates (§V-A2), and
-//! the deterministic chaos proxy for wire-path failure injection.
+//! synthetic cellular traces that drive client upload rates (§V-A2), the
+//! deterministic chaos proxy for wire-path failure injection, and the
+//! readiness/timer primitives behind the reactor I/O backend.
 
 pub mod chaos;
 pub mod mg1;
 pub mod packet;
 pub mod poisson;
+pub mod poll;
 pub mod trace;
 
 pub use chaos::{
@@ -15,4 +17,5 @@ pub use chaos::{
 pub use mg1::{pollaczek_khinchine, Mg1Queue};
 pub use packet::{elems_per_packet, frames_for_bits, packetize, Packet, Phase};
 pub use poisson::PoissonProcess;
+pub use poll::{wait_readable, TimerWheel};
 pub use trace::{client_rates, CellularTrace};

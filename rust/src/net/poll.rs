@@ -1,0 +1,295 @@
+//! Minimal readiness + timer substrate for the single-thread reactor
+//! backend ([`crate::server`]'s `--io reactor`).
+//!
+//! Two pieces, both dependency-free:
+//!
+//! * [`wait_readable`] — block until a UDP socket has a datagram to read
+//!   or a timeout elapses. On Unix this is a direct `poll(2)` call on the
+//!   socket's file descriptor (declared here by hand — the crate builds
+//!   offline without `libc`); elsewhere it degrades to a short bounded
+//!   sleep, which keeps the reactor correct (its socket is nonblocking,
+//!   so a spurious wake just reads `WouldBlock`) at the cost of latency.
+//! * [`TimerWheel`] — a coarse hashed timer wheel for the reactor's
+//!   retransmit/idle-reclaim deadlines: O(1) insert, O(slots) sweep,
+//!   firing accuracy bounded by the wheel granularity. Deadlines beyond
+//!   one wheel turn stay parked in their slot and are re-examined once
+//!   per turn — the classic cheap trade for a device that only needs
+//!   coarse deadlines (idle reclamation, chaos-lane flushes), not
+//!   high-resolution timers.
+
+use std::io;
+use std::net::UdpSocket;
+use std::time::{Duration, Instant};
+
+/// Wait until `socket` is readable or `timeout` elapses. `None` blocks
+/// indefinitely. Returns `Ok(true)` when the socket has an event pending
+/// (data, or an error condition a subsequent `recv_from` will surface)
+/// and `Ok(false)` on timeout. `EINTR` is retried internally.
+#[cfg(unix)]
+pub fn wait_readable(socket: &UdpSocket, timeout: Option<Duration>) -> io::Result<bool> {
+    use std::os::unix::io::AsRawFd;
+
+    // Hand-declared poll(2): the offline build has no libc crate. The
+    // layout matches POSIX `struct pollfd`; `nfds_t` is C `unsigned
+    // long`, which is `usize` on every Unix Rust targets.
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+    const POLLIN: i16 = 0x001;
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
+    }
+
+    let ms: i32 = match timeout {
+        None => -1,
+        // poll's timeout is an int of milliseconds; round a nonzero
+        // sub-millisecond wait up so it is a real wait, not a busy spin.
+        Some(d) => {
+            let ms = d.as_millis().min(i32::MAX as u128) as i32;
+            if ms == 0 && !d.is_zero() {
+                1
+            } else {
+                ms
+            }
+        }
+    };
+    let mut pfd = PollFd { fd: socket.as_raw_fd(), events: POLLIN, revents: 0 };
+    loop {
+        let rc = unsafe { poll(&mut pfd as *mut PollFd, 1, ms) };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(e);
+        }
+        // Any revents (POLLIN, POLLERR, POLLHUP) means "go recv": error
+        // conditions must be drained by the caller's read, not looped on
+        // here.
+        return Ok(rc > 0);
+    }
+}
+
+/// Portability fallback: a bounded sleep standing in for readiness. The
+/// reactor's socket is nonblocking, so waking without data is harmless
+/// (`recv_from` returns `WouldBlock`); the cap keeps timer latency sane.
+#[cfg(not(unix))]
+pub fn wait_readable(_socket: &UdpSocket, timeout: Option<Duration>) -> io::Result<bool> {
+    const CAP: Duration = Duration::from_millis(5);
+    std::thread::sleep(timeout.unwrap_or(CAP).min(CAP));
+    Ok(true)
+}
+
+/// A coarse hashed timer wheel: `n_slots` buckets of `granularity` each.
+/// Entries land in the slot their deadline falls in modulo one wheel
+/// turn; [`TimerWheel::pop_due`] sweeps the slots the cursor has passed
+/// and fires entries whose deadline has actually arrived (entries parked
+/// for a later turn stay put). Firing lateness is bounded by
+/// `granularity` plus however late the owner calls `pop_due`.
+#[derive(Debug)]
+pub struct TimerWheel<T> {
+    granularity: Duration,
+    /// `slots[tick % n]` holds entries as `(absolute tick, item)`.
+    slots: Vec<Vec<(u64, T)>>,
+    /// Wheel epoch; ticks count `granularity` steps since here.
+    base: Instant,
+    /// First tick not yet swept by [`TimerWheel::pop_due`].
+    next_tick: u64,
+    len: usize,
+}
+
+impl<T> TimerWheel<T> {
+    /// Empty wheel with its epoch at `now`. `granularity` must be
+    /// nonzero and `n_slots` ≥ 2.
+    pub fn new(granularity: Duration, n_slots: usize, now: Instant) -> Self {
+        assert!(!granularity.is_zero(), "timer wheel granularity must be nonzero");
+        assert!(n_slots >= 2, "timer wheel needs at least 2 slots");
+        TimerWheel {
+            granularity,
+            slots: (0..n_slots).map(|_| Vec::new()).collect(),
+            base: now,
+            next_tick: 0,
+            len: 0,
+        }
+    }
+
+    fn tick_of(&self, t: Instant) -> u64 {
+        (t.saturating_duration_since(self.base).as_nanos() / self.granularity.as_nanos()) as u64
+    }
+
+    /// Number of armed entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no entries are armed.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Arm `item` to fire at `deadline`. A deadline already in the past
+    /// (or inside the current tick) fires on the next [`Self::pop_due`].
+    pub fn insert(&mut self, deadline: Instant, item: T) {
+        let tick = self.tick_of(deadline).max(self.next_tick);
+        let slot = (tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push((tick, item));
+        self.len += 1;
+    }
+
+    /// Sweep the wheel up to `now` and return every fired entry. Sweeps
+    /// at most one full turn of slots per call regardless of how long the
+    /// caller slept, which still visits every bucket once.
+    pub fn pop_due(&mut self, now: Instant) -> Vec<T> {
+        let mut fired = Vec::new();
+        if self.len == 0 {
+            self.next_tick = self.tick_of(now) + 1;
+            return fired;
+        }
+        let now_tick = self.tick_of(now);
+        if now_tick < self.next_tick {
+            return fired;
+        }
+        let n = self.slots.len() as u64;
+        let span = now_tick - self.next_tick + 1;
+        if span >= n {
+            // Slept a full turn (or more): every slot's window has
+            // passed at least once — one linear pass over all buckets.
+            for slot in &mut self.slots {
+                let mut i = 0;
+                while i < slot.len() {
+                    if slot[i].0 <= now_tick {
+                        fired.push(slot.swap_remove(i).1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        } else {
+            for tick in self.next_tick..=now_tick {
+                let slot = &mut self.slots[(tick % n) as usize];
+                let mut i = 0;
+                while i < slot.len() {
+                    if slot[i].0 <= now_tick {
+                        fired.push(slot.swap_remove(i).1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        self.len -= fired.len();
+        self.next_tick = now_tick + 1;
+        fired
+    }
+
+    /// Earliest armed deadline (None when empty). Linear in armed
+    /// entries — the reactor holds at most one entry per job, so this is
+    /// cheap enough to call once per loop iteration.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let mut min: Option<u64> = None;
+        for slot in &self.slots {
+            for &(tick, _) in slot {
+                min = Some(min.map_or(tick, |m: u64| m.min(tick)));
+            }
+        }
+        min.map(|tick| {
+            // End of the entry's tick window, so sleeping exactly until
+            // the returned instant guarantees `pop_due` fires it.
+            let nanos = self.granularity.as_nanos().saturating_mul(tick as u128 + 1);
+            self.base + Duration::from_nanos(nanos.min(u64::MAX as u128) as u64)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G: Duration = Duration::from_millis(10);
+
+    #[test]
+    fn fires_in_deadline_order_within_granularity() {
+        let base = Instant::now();
+        let mut wheel: TimerWheel<u32> = TimerWheel::new(G, 8, base);
+        wheel.insert(base + Duration::from_millis(35), 3);
+        wheel.insert(base + Duration::from_millis(15), 1);
+        wheel.insert(base + Duration::from_millis(25), 2);
+        assert_eq!(wheel.len(), 3);
+
+        assert!(wheel.pop_due(base + Duration::from_millis(5)).is_empty());
+        assert_eq!(wheel.pop_due(base + Duration::from_millis(19)), vec![1]);
+        let rest = wheel.pop_due(base + Duration::from_millis(60));
+        assert_eq!(rest.len(), 2);
+        assert!(rest.contains(&2) && rest.contains(&3));
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn past_deadlines_fire_immediately() {
+        let base = Instant::now();
+        let mut wheel: TimerWheel<&str> = TimerWheel::new(G, 8, base);
+        // Sweep forward first, then arm something "in the past".
+        wheel.pop_due(base + Duration::from_millis(100));
+        wheel.insert(base + Duration::from_millis(20), "late");
+        assert_eq!(wheel.pop_due(base + Duration::from_millis(120)), vec!["late"]);
+    }
+
+    #[test]
+    fn far_deadlines_wait_their_turn() {
+        let base = Instant::now();
+        // 4 slots × 10 ms = one 40 ms turn; a 95 ms deadline shares a
+        // slot with early ticks but must not fire on the first pass.
+        let mut wheel: TimerWheel<u32> = TimerWheel::new(G, 4, base);
+        wheel.insert(base + Duration::from_millis(95), 9);
+        wheel.insert(base + Duration::from_millis(15), 1);
+        assert_eq!(wheel.pop_due(base + Duration::from_millis(20)), vec![1]);
+        assert!(wheel.pop_due(base + Duration::from_millis(60)).is_empty());
+        assert_eq!(wheel.pop_due(base + Duration::from_millis(100)), vec![9]);
+    }
+
+    #[test]
+    fn long_sleep_sweeps_every_slot_once() {
+        let base = Instant::now();
+        let mut wheel: TimerWheel<u32> = TimerWheel::new(G, 4, base);
+        for i in 0..8u32 {
+            wheel.insert(base + Duration::from_millis(10 * (i as u64 + 1)), i);
+        }
+        // Caller slept many turns: everything due fires in one call.
+        let mut fired = wheel.pop_due(base + Duration::from_secs(5));
+        fired.sort_unstable();
+        assert_eq!(fired, (0..8).collect::<Vec<_>>());
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn next_deadline_upper_bounds_the_earliest_entry() {
+        let base = Instant::now();
+        let mut wheel: TimerWheel<u32> = TimerWheel::new(G, 8, base);
+        assert!(wheel.next_deadline().is_none());
+        let deadline = base + Duration::from_millis(42);
+        wheel.insert(deadline, 1);
+        let nd = wheel.next_deadline().unwrap();
+        assert!(nd >= deadline.checked_sub(G).unwrap(), "deadline too early");
+        assert!(nd <= deadline + G, "deadline too late");
+    }
+
+    #[test]
+    fn wait_readable_times_out_then_sees_data() {
+        let socket = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let ready = wait_readable(&socket, Some(Duration::from_millis(20))).unwrap();
+        #[cfg(unix)]
+        assert!(!ready, "empty socket reported readable");
+        #[cfg(not(unix))]
+        let _ = ready;
+
+        let sender = UdpSocket::bind("127.0.0.1:0").unwrap();
+        sender.send_to(b"ping", socket.local_addr().unwrap()).unwrap();
+        assert!(wait_readable(&socket, Some(Duration::from_secs(2))).unwrap());
+        let mut buf = [0u8; 8];
+        let (n, _) = socket.recv_from(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+    }
+}

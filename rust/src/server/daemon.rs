@@ -1,27 +1,79 @@
-//! Threaded UDP front-end for the aggregation server.
+//! Front door of the aggregation server: configuration
+//! ([`ServeOptions`], [`IoBackend`]), the running-daemon handle, shard
+//! fan-out ([`serve_sharded`]) and the routing/admission rules shared by
+//! both I/O backends.
 //!
-//! One dispatch thread owns the socket's receive side and routes datagrams
-//! by job id (a cheap [`peek_route`] — no checksum work on the hot thread)
-//! to per-job worker threads over mpsc channels. Each worker owns its
-//! [`Job`] state exclusively (no locks on the aggregation path) and sends
-//! replies through a cloned socket handle. Jobs are therefore concurrent
-//! with each other and serialized internally — the same discipline a
-//! switch pipeline imposes per register block.
+//! [`serve`] binds the socket and hands it to the selected backend:
+//!
+//! * [`IoBackend::Threaded`] → [`crate::server::threaded`]: one dispatch
+//!   thread plus one worker thread per hosted job;
+//! * [`IoBackend::Reactor`] → [`crate::server::reactor`]: one thread,
+//!   zero per-job threads or channels — a nonblocking socket, readiness
+//!   polling and a coarse timer wheel multiplex every job.
+//!
+//! Both backends drive the same sans-I/O [`crate::server::Job`] state
+//! machine, so the choice is invisible on the wire (PROTOCOL.md) and
+//! bit-exact (`tests/wire_backend.rs`).
 
-use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, UdpSocket};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use crate::configx::PsProfile;
 use crate::net::chaos::{ChaosDirection, ChaosLane};
-use crate::server::job::{Job, JobLimits, JOIN_UNKNOWN_JOB};
-use crate::server::{ServerStats, StatsSnapshot};
-use crate::wire::{decode_frame, encode_frame, peek_route, Header, WireKind};
+use crate::server::job::{JobLimits, Outgoing, JOIN_UNKNOWN_JOB};
+use crate::server::{reactor, threaded, HostBudget, ServerStats, StatsSnapshot};
+use crate::wire::{encode_frame, Header, WireKind};
+
+/// Which event engine hosts the jobs. Both engines run the identical
+/// sans-I/O [`crate::server::Job`] core; they differ only in how
+/// datagrams and timer deadlines reach it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoBackend {
+    /// One dispatch thread + one worker thread (and channel) per job.
+    /// Jobs aggregate concurrently on multi-core hosts.
+    #[default]
+    Threaded,
+    /// One thread for everything: nonblocking socket, readiness poll
+    /// ([`crate::net::poll`]) and a coarse timer wheel. The switch-class
+    /// discipline — thousands of clients on a fixed compute budget.
+    Reactor,
+}
+
+impl IoBackend {
+    /// Parse a backend name (`"threaded"` / `"reactor"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "threaded" => Some(IoBackend::Threaded),
+            "reactor" => Some(IoBackend::Reactor),
+            _ => None,
+        }
+    }
+
+    /// The backend's CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoBackend::Threaded => "threaded",
+            IoBackend::Reactor => "reactor",
+        }
+    }
+
+    /// Backend selected by the `FEDIAC_IO` environment variable, falling
+    /// back to [`IoBackend::Threaded`] when unset. This is how CI runs
+    /// the whole wire test suite under the reactor without touching the
+    /// tests ([`ServeOptions::default`] consults it). An unparsable
+    /// value panics rather than silently running the wrong backend.
+    pub fn from_env() -> Self {
+        match std::env::var("FEDIAC_IO") {
+            Ok(v) => IoBackend::parse(&v)
+                .unwrap_or_else(|| panic!("FEDIAC_IO='{v}' is not 'threaded' or 'reactor'")),
+            Err(_) => IoBackend::default(),
+        }
+    }
+}
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -33,14 +85,23 @@ pub struct ServeOptions {
     /// Per-job abuse limits: host-memory budget enforced at `Join`, spill
     /// caps, idle register reclamation, and re-serve rate limiting.
     pub limits: JobLimits,
-    /// Downlink chaos injection point: run every worker-sent datagram
+    /// Downlink chaos injection point: run every server-sent datagram
     /// (GIA/aggregate multicasts, acks, re-serves) through a seeded
     /// [`ChaosLane`] — loss/dup/reorder/corruption on the server→client
-    /// path without an external proxy. Lanes are per worker, seeded from
+    /// path without an external proxy. Lanes are per job, seeded from
     /// `chaos_seed ^ job_id`.
     pub downlink_chaos: Option<ChaosDirection>,
     /// Root seed for `downlink_chaos` lanes.
     pub chaos_seed: u64,
+    /// Which I/O engine hosts the jobs (`--io` on the CLI; tests inherit
+    /// the `FEDIAC_IO` environment variable through `Default`).
+    pub io_backend: IoBackend,
+    /// Host-memory accountant to charge job reservations against.
+    /// `None` (the default) gives the daemon a private accountant with
+    /// [`JobLimits::host_bytes`] per tenant; [`serve_sharded`] injects
+    /// one shared accountant into every shard so a tenant's budget is
+    /// global across the deployment.
+    pub host_budget: Option<Arc<HostBudget>>,
 }
 
 impl Default for ServeOptions {
@@ -51,6 +112,8 @@ impl Default for ServeOptions {
             limits: JobLimits::default(),
             downlink_chaos: None,
             chaos_seed: 0,
+            io_backend: IoBackend::from_env(),
+            host_budget: None,
         }
     }
 }
@@ -74,7 +137,7 @@ impl ServerHandle {
         self.stats.snapshot()
     }
 
-    /// Stop the dispatch loop and join every worker.
+    /// Stop the event loop and join every backend thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.dispatch.take() {
@@ -92,13 +155,88 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Everything a backend loop needs besides the socket, bundled so the
+/// two backends cannot drift apart on configuration plumbing.
+pub(crate) struct BackendShared {
+    pub(crate) profile: PsProfile,
+    pub(crate) limits: JobLimits,
+    pub(crate) chaos: Option<ChaosDirection>,
+    pub(crate) chaos_seed: u64,
+    pub(crate) stats: Arc<ServerStats>,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) budget: Arc<HostBudget>,
+}
+
+/// Upper bound on concurrently hosted jobs (threaded: worker threads;
+/// reactor: job slots). Jobs are born only on `Join` frames, and when
+/// the cap is hit a job that never completed a valid `Join` (a forged or
+/// abandoned id) is evicted first, so spraying job ids can neither spawn
+/// unbounded state nor permanently lock new tenants out. The *policy*
+/// (cap + evict-unconfigured-first) is normative for both backends; the
+/// eviction *mechanics* are necessarily per-backend (the threaded one
+/// joins a worker thread via its `configured` flag, the reactor drops
+/// the slot after asking the job directly) — change them in lockstep.
+pub(crate) const MAX_JOBS: usize = 256;
+
+/// How long the threaded dispatch thread (and the reactor's sleep cap)
+/// waits before re-checking the stop flag.
+pub(crate) const STOP_POLL: Duration = Duration::from_millis(25);
+
+/// Front-door reply for a datagram whose job id is not hosted. Genuine
+/// uplink data kinds get the protocol's `JoinAck`/`UNKNOWN` nudge (the
+/// client driver re-joins on seeing it); server-bound spoofs of downlink
+/// kinds earn no reply at all — answering them would reflect traffic at
+/// forged sources. Shared by both backends so the admission behaviour
+/// cannot diverge.
+pub(crate) fn unknown_job_reply(
+    job_id: u32,
+    kind: WireKind,
+    stats: &ServerStats,
+) -> Option<Vec<u8>> {
+    if matches!(kind, WireKind::Vote | WireKind::Update | WireKind::Poll) {
+        let h = Header::control(WireKind::JoinAck, job_id, u16::MAX, 0, JOIN_UNKNOWN_JOB);
+        Some(encode_frame(&h, &[]))
+    } else {
+        ServerStats::bump(&stats.downlink_spoofs);
+        None
+    }
+}
+
+/// Send one [`crate::server::JobOutput`]'s frames, through the job's
+/// downlink chaos lane when one is attached. Send errors are ignored —
+/// UDP semantics, the client's retransmission recovers.
+pub(crate) fn transmit(
+    socket: &UdpSocket,
+    lane: &mut Option<ChaosLane<SocketAddr>>,
+    frames: Outgoing,
+    now: Instant,
+) {
+    for (bytes, dest) in frames {
+        match lane.as_mut() {
+            Some(l) => {
+                for (pkt, to) in l.process(&bytes, dest, now) {
+                    let _ = socket.send_to(&pkt, to);
+                }
+            }
+            None => {
+                let _ = socket.send_to(&bytes, dest);
+            }
+        }
+    }
+}
+
 /// Launch `n_shards` collaborating daemons in one process — shard `s` of
 /// the deployment PROTOCOL.md §8 describes listens on `base.bind`'s port
 /// plus `s` (an ephemeral port 0 in `base.bind` gives every shard its own
 /// ephemeral port instead). Each shard is a full, independent
-/// [`serve`] instance with its own socket, workers and stats; clients
-/// address shard `s` with a [`crate::wire::JobSpec`] whose `shard` field
-/// names slice `s`. Returns one handle per shard, index = shard id.
+/// [`serve`] instance with its own socket, workers and stats — except
+/// the host-memory accountant, which is **shared**: one
+/// [`HostBudget`] (from `base.host_budget`, or a fresh one sized by
+/// `base.limits.host_bytes`) is injected into every shard so a tenant's
+/// budget bounds the whole deployment instead of multiplying by N.
+/// Clients address shard `s` with a [`crate::wire::JobSpec`] whose
+/// `shard` field names slice `s`. Returns one handle per shard, index =
+/// shard id.
 pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<ServerHandle>> {
     if n_shards == 0 || n_shards > crate::wire::MAX_SHARDS {
         return Err(io::Error::new(
@@ -113,6 +251,10 @@ pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<Server
     let port: u16 = port
         .parse()
         .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "bind port must be a u16"))?;
+    let budget = base
+        .host_budget
+        .clone()
+        .unwrap_or_else(|| Arc::new(HostBudget::new(base.limits.host_bytes)));
     let mut handles = Vec::with_capacity(n_shards as usize);
     for s in 0..n_shards {
         let bind = if port == 0 {
@@ -128,6 +270,7 @@ pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<Server
             // Decorrelate per-shard downlink chaos streams the same way
             // the proxy decorrelates per-flow lanes.
             chaos_seed: base.chaos_seed ^ ((s as u64) << 32),
+            host_budget: Some(Arc::clone(&budget)),
             ..base.clone()
         };
         handles.push(serve(&opts)?);
@@ -135,221 +278,68 @@ pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<Server
     Ok(handles)
 }
 
-/// Bind a socket and start the dispatch + worker threads.
+/// Bind a socket and start the selected I/O backend.
 pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
     let socket = UdpSocket::bind(&opts.bind)?;
-    socket.set_read_timeout(Some(Duration::from_millis(25)))?;
     let addr = socket.local_addr()?;
     let stats = Arc::new(ServerStats::default());
     let stop = Arc::new(AtomicBool::new(false));
-
-    let dispatch = {
-        let stats = Arc::clone(&stats);
-        let stop = Arc::clone(&stop);
-        let profile = opts.profile.clone();
-        let limits = opts.limits;
-        let chaos = opts.downlink_chaos;
-        let chaos_seed = opts.chaos_seed;
-        thread::Builder::new().name("fediac-dispatch".into()).spawn(move || {
-            dispatch_loop(socket, profile, limits, chaos, chaos_seed, stats, stop);
-        })?
+    let shared = BackendShared {
+        profile: opts.profile.clone(),
+        limits: opts.limits,
+        chaos: opts.downlink_chaos,
+        chaos_seed: opts.chaos_seed,
+        stats: Arc::clone(&stats),
+        stop: Arc::clone(&stop),
+        budget: opts
+            .host_budget
+            .clone()
+            .unwrap_or_else(|| Arc::new(HostBudget::new(opts.limits.host_bytes))),
+    };
+    let dispatch = match opts.io_backend {
+        IoBackend::Threaded => {
+            socket.set_read_timeout(Some(STOP_POLL))?;
+            thread::Builder::new()
+                .name("fediac-dispatch".into())
+                .spawn(move || threaded::dispatch_loop(socket, shared))?
+        }
+        IoBackend::Reactor => {
+            socket.set_nonblocking(true)?;
+            thread::Builder::new()
+                .name("fediac-reactor".into())
+                .spawn(move || reactor::reactor_loop(socket, shared))?
+        }
     };
 
     Ok(ServerHandle { addr, stats, stop, dispatch: Some(dispatch) })
 }
 
-type WorkerTx = Sender<(Vec<u8>, SocketAddr)>;
-
-/// One spawned job worker: its input channel, its thread handle, and
-/// whether its `Job` has been configured by a valid `Join` (unconfigured
-/// workers are the eviction candidates under cap pressure).
-struct WorkerSlot {
-    tx: WorkerTx,
-    handle: JoinHandle<()>,
-    configured: Arc<AtomicBool>,
-}
-
-/// Upper bound on concurrently hosted jobs (= worker threads). Workers
-/// are born only on `Join` frames, and when the cap is hit a worker whose
-/// job never completed a valid `Join` (a forged or abandoned id) is
-/// evicted first, so spraying job ids can neither spawn unbounded OS
-/// threads nor permanently lock new tenants out.
-const MAX_JOBS: usize = 256;
-
-fn dispatch_loop(
-    socket: UdpSocket,
-    profile: PsProfile,
-    limits: JobLimits,
-    chaos: Option<ChaosDirection>,
-    chaos_seed: u64,
-    stats: Arc<ServerStats>,
-    stop: Arc<AtomicBool>,
-) {
-    let mut workers: HashMap<u32, WorkerSlot> = HashMap::new();
-    let mut buf = vec![0u8; 65536];
-    while !stop.load(Ordering::SeqCst) {
-        let (n, from) = match socket.recv_from(&mut buf) {
-            Ok(ok) => ok,
-            Err(e)
-                if e.kind() == io::ErrorKind::WouldBlock
-                    || e.kind() == io::ErrorKind::TimedOut =>
-            {
-                continue
-            }
-            Err(_) => break,
-        };
-        ServerStats::bump(&stats.packets);
-        let Some((job_id, kind)) = peek_route(&buf[..n]) else {
-            ServerStats::bump(&stats.decode_errors);
-            continue;
-        };
-        if !workers.contains_key(&job_id) {
-            // Workers are born only on Join. Genuine uplink data frames
-            // for unknown jobs get the protocol's JoinAck/UNKNOWN
-            // straight from this thread (the client driver re-joins on
-            // seeing it), so a sprayed job id cannot pin an OS thread.
-            // Server-bound spoofs of downlink kinds earn no reply at all
-            // — answering them would reflect traffic at forged sources.
-            if kind != WireKind::Join {
-                if matches!(kind, WireKind::Vote | WireKind::Update | WireKind::Poll) {
-                    let h =
-                        Header::control(WireKind::JoinAck, job_id, u16::MAX, 0, JOIN_UNKNOWN_JOB);
-                    let _ = socket.send_to(&encode_frame(&h, &[]), from);
-                } else {
-                    ServerStats::bump(&stats.downlink_spoofs);
-                }
-                continue;
-            }
-            if workers.len() >= MAX_JOBS && !evict_unconfigured(&mut workers) {
-                ServerStats::bump(&stats.jobs_rejected);
-                continue;
-            }
-        }
-        let worker = workers.entry(job_id).or_insert_with(|| {
-            spawn_worker(job_id, &socket, profile.clone(), limits, chaos, chaos_seed, Arc::clone(&stats))
-        });
-        if worker.tx.send((buf[..n].to_vec(), from)).is_err() {
-            // Worker died (should not happen); drop the datagram — the
-            // client's retransmission will respawn it.
-            workers.remove(&job_id);
-        }
-    }
-    for (_, slot) in workers {
-        drop(slot.tx);
-        let _ = slot.handle.join();
-    }
-}
-
-/// Drop one worker whose job was never configured by a valid `Join`.
-/// Returns false when every resident job is real (the cap then holds).
-fn evict_unconfigured(workers: &mut HashMap<u32, WorkerSlot>) -> bool {
-    let victim = workers
-        .iter()
-        .find(|(_, slot)| !slot.configured.load(Ordering::SeqCst))
-        .map(|(&id, _)| id);
-    let Some(id) = victim else {
-        return false;
-    };
-    if let Some(slot) = workers.remove(&id) {
-        drop(slot.tx);
-        let _ = slot.handle.join();
-    }
-    true
-}
-
-/// How often a chaos-enabled worker wakes to flush overdue held-back
-/// downlink datagrams.
-const CHAOS_TICK: Duration = Duration::from_millis(10);
-
-fn spawn_worker(
-    job_id: u32,
-    socket: &UdpSocket,
-    profile: PsProfile,
-    limits: JobLimits,
-    chaos: Option<ChaosDirection>,
-    chaos_seed: u64,
-    stats: Arc<ServerStats>,
-) -> WorkerSlot {
-    let (tx, rx) = mpsc::channel::<(Vec<u8>, SocketAddr)>();
-    let out = socket.try_clone().expect("cloning UDP socket for worker");
-    let configured = Arc::new(AtomicBool::new(false));
-    let flag = Arc::clone(&configured);
-    let handle = thread::Builder::new()
-        .name(format!("fediac-job-{job_id}"))
-        .spawn(move || {
-            let mut job = Job::with_limits(job_id, profile, limits, Arc::clone(&stats));
-            // Downlink chaos lane (None = send straight through). Held
-            // copies carry their destination as lane metadata.
-            let mut lane: Option<ChaosLane<SocketAddr>> =
-                chaos.map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64));
-            loop {
-                // With a lane attached the worker must wake on idle to
-                // release overdue reordered datagrams; without one it
-                // blocks cheaply on the channel.
-                let msg = if lane.is_some() {
-                    match rx.recv_timeout(CHAOS_TICK) {
-                        Ok(m) => Some(m),
-                        Err(RecvTimeoutError::Timeout) => None,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                } else {
-                    match rx.recv() {
-                        Ok(m) => Some(m),
-                        Err(_) => break,
-                    }
-                };
-                if let Some((datagram, from)) = msg {
-                    match decode_frame(&datagram) {
-                        Ok(frame) => {
-                            for (dest, bytes) in job.handle(&frame, from) {
-                                match lane.as_mut() {
-                                    Some(l) => {
-                                        for (pkt, to) in l.process(&bytes, dest, Instant::now()) {
-                                            let _ = out.send_to(&pkt, to);
-                                        }
-                                    }
-                                    None => {
-                                        let _ = out.send_to(&bytes, dest);
-                                    }
-                                }
-                            }
-                            if !flag.load(Ordering::SeqCst) && job.is_configured() {
-                                flag.store(true, Ordering::SeqCst);
-                            }
-                        }
-                        Err(_) => ServerStats::bump(&stats.decode_errors),
-                    }
-                }
-                if let Some(l) = lane.as_mut() {
-                    for (pkt, to) in l.flush_due(Instant::now()) {
-                        let _ = out.send_to(&pkt, to);
-                    }
-                }
-            }
-        })
-        .expect("spawning job worker");
-    WorkerSlot { tx, handle, configured }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::wire::{encode_frame, Header, JobSpec, ShardPlan, WireKind};
+    use crate::wire::{decode_frame, encode_frame, Header, JobSpec, ShardPlan, WireKind};
 
-    #[test]
-    fn daemon_starts_acks_join_and_shuts_down() {
-        let handle = serve(&ServeOptions::default()).unwrap();
-        let addr = handle.local_addr();
+    fn opts_for(backend: IoBackend) -> ServeOptions {
+        ServeOptions { io_backend: backend, ..ServeOptions::default() }
+    }
 
-        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
-        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
-        let spec = JobSpec {
+    fn join_spec() -> JobSpec {
+        JobSpec {
             d: 64,
             n_clients: 1,
             threshold_a: 1,
             payload_budget: 8,
             shard: ShardPlan::single(),
-        };
+        }
+    }
+
+    fn daemon_smoke(backend: IoBackend) {
+        let handle = serve(&opts_for(backend)).unwrap();
+        let addr = handle.local_addr();
+
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let spec = join_spec();
         let join = encode_frame(&Header::control(WireKind::Join, 5, 0, 0, 0), &spec.encode());
         client.send_to(&join, addr).unwrap();
 
@@ -361,14 +351,14 @@ mod tests {
 
         // Garbage is counted, not fatal.
         client.send_to(b"not a frame", addr).unwrap();
-        // A second job spins up its own worker.
+        // A second job is hosted alongside the first.
         let join2 = encode_frame(&Header::control(WireKind::Join, 6, 0, 0, 0), &spec.encode());
         client.send_to(&join2, addr).unwrap();
         let (n, _) = client.recv_from(&mut buf).unwrap();
         assert_eq!(decode_frame(&buf[..n]).unwrap().header.job, 6);
 
         // A data frame for a job nobody joined is answered straight from
-        // the dispatch thread — no worker slot is spent on it.
+        // the front door — no job slot is spent on it.
         let stray = encode_frame(
             &Header {
                 kind: WireKind::Vote,
@@ -414,7 +404,21 @@ mod tests {
         assert_eq!(stats.jobs_created, 2);
         assert!(stats.decode_errors >= 1);
         assert!(stats.downlink_spoofs >= 1);
+        match backend {
+            IoBackend::Threaded => assert_eq!(stats.workers_spawned, 2),
+            IoBackend::Reactor => assert_eq!(stats.workers_spawned, 0),
+        }
         handle.shutdown();
+    }
+
+    #[test]
+    fn threaded_daemon_starts_acks_join_and_shuts_down() {
+        daemon_smoke(IoBackend::Threaded);
+    }
+
+    #[test]
+    fn reactor_daemon_starts_acks_join_and_shuts_down() {
+        daemon_smoke(IoBackend::Reactor);
     }
 
     #[test]
@@ -453,28 +457,153 @@ mod tests {
     }
 
     #[test]
-    fn downlink_chaos_lane_reaches_worker_sends() {
-        // Full downlink drop: the worker's JoinAck never escapes.
+    fn sharded_serve_shares_one_host_budget() {
+        // A tenant whose per-shard worst case fits the budget once must
+        // not get it N times over: the same job joining both shards is
+        // admitted on the first and refused on the second. The budget is
+        // sized to one reservation + slack so the order of shard joins
+        // cannot matter.
+        let spec = JobSpec {
+            d: 10_000,
+            n_clients: 2,
+            threshold_a: 1,
+            payload_budget: 8,
+            shard: ShardPlan { n_shards: 2, shard_id: 0 },
+        };
+        let worst_fits_once =
+            spec.host_bytes_per_round() * crate::server::job::MAX_LIVE_ROUNDS + 1024;
+        let base = ServeOptions {
+            limits: JobLimits { host_bytes: worst_fits_once, ..JobLimits::default() },
+            ..ServeOptions::default()
+        };
+        let handles = serve_sharded(&base, 2).unwrap();
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut statuses = Vec::new();
+        for (s, h) in handles.iter().enumerate() {
+            let shard_spec =
+                JobSpec { shard: ShardPlan { n_shards: 2, shard_id: s as u8 }, ..spec };
+            let join = encode_frame(
+                &Header::control(WireKind::Join, 21, 0, 0, 0),
+                &shard_spec.encode(),
+            );
+            client.send_to(&join, h.local_addr()).unwrap();
+            let mut buf = [0u8; 256];
+            let (n, _) = client.recv_from(&mut buf).unwrap();
+            statuses.push(decode_frame(&buf[..n]).unwrap().header.aux);
+        }
+        assert_eq!(statuses[0], crate::server::JOIN_OK, "first shard must admit");
+        assert_eq!(
+            statuses[1],
+            crate::server::JOIN_BAD_SPEC,
+            "second shard must see the tenant's deployment-wide budget spent"
+        );
+        for h in handles {
+            h.shutdown();
+        }
+    }
+
+    fn downlink_chaos_drop(backend: IoBackend) {
+        // Full downlink drop: the JoinAck never escapes the daemon.
         let handle = serve(&ServeOptions {
             downlink_chaos: Some(ChaosDirection::lossy(1.0, 0.0, 0.0)),
             chaos_seed: 5,
+            io_backend: backend,
             ..ServeOptions::default()
         })
         .unwrap();
         let client = UdpSocket::bind("127.0.0.1:0").unwrap();
         client.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
-        let spec = JobSpec {
-            d: 64,
-            n_clients: 1,
-            threshold_a: 1,
-            payload_budget: 8,
-            shard: ShardPlan::single(),
-        };
-        let join = encode_frame(&Header::control(WireKind::Join, 8, 0, 0, 0), &spec.encode());
+        let join =
+            encode_frame(&Header::control(WireKind::Join, 8, 0, 0, 0), &join_spec().encode());
         client.send_to(&join, handle.local_addr()).unwrap();
         let mut buf = [0u8; 256];
         assert!(client.recv_from(&mut buf).is_err(), "dropped JoinAck arrived");
         assert_eq!(handle.stats().joins, 1, "join itself must still register");
         handle.shutdown();
+    }
+
+    #[test]
+    fn downlink_chaos_lane_reaches_threaded_sends() {
+        downlink_chaos_drop(IoBackend::Threaded);
+    }
+
+    #[test]
+    fn downlink_chaos_lane_reaches_reactor_sends() {
+        downlink_chaos_drop(IoBackend::Reactor);
+    }
+
+    fn idle_reclaim_without_traffic(backend: IoBackend) {
+        // One vote block of a two-block round stalls a job with resident
+        // registers; the backend must reclaim them off the job's OWN
+        // timer deadline — no follow-up traffic, no fixed polling tick.
+        let handle = serve(&ServeOptions {
+            profile: PsProfile { memory_bytes: 1 << 20, ..PsProfile::high() },
+            limits: JobLimits {
+                idle_release_after: Duration::from_millis(100),
+                ..JobLimits::default()
+            },
+            io_backend: backend,
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let spec = JobSpec {
+            d: 128,
+            n_clients: 2,
+            threshold_a: 2,
+            payload_budget: 8,
+            shard: ShardPlan::single(),
+        };
+        let join = encode_frame(&Header::control(WireKind::Join, 9, 0, 0, 0), &spec.encode());
+        client.send_to(&join, handle.local_addr()).unwrap();
+        let mut buf = [0u8; 256];
+        let (n, _) = client.recv_from(&mut buf).unwrap();
+        assert_eq!(decode_frame(&buf[..n]).unwrap().header.aux, crate::server::JOIN_OK);
+        // One valid vote block (of 2) allocates a wave, then silence.
+        let vote = encode_frame(
+            &Header {
+                kind: WireKind::Vote,
+                client: 0,
+                job: 9,
+                round: 0,
+                block: 0,
+                n_blocks: 2,
+                elems: 64,
+                aux: 1.0f32.to_bits(),
+            },
+            &[0xFFu8; 8],
+        );
+        client.send_to(&vote, handle.local_addr()).unwrap();
+        // Wait past the idle deadline with zero traffic.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        loop {
+            let s = handle.stats();
+            if s.idle_releases >= 1 {
+                assert!(s.idle_wakeups >= 1, "reclaim must come from a timer wakeup");
+                // The fix's point: a deadline-driven backend wakes a
+                // handful of times, not once per polling tick.
+                assert!(
+                    s.idle_wakeups <= 8,
+                    "{} idle wakeups — backend is busy-polling",
+                    s.idle_wakeups
+                );
+                break;
+            }
+            assert!(Instant::now() < deadline, "idle registers never reclaimed");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn threaded_idle_reclaim_is_timer_driven() {
+        idle_reclaim_without_traffic(IoBackend::Threaded);
+    }
+
+    #[test]
+    fn reactor_idle_reclaim_is_timer_driven() {
+        idle_reclaim_without_traffic(IoBackend::Reactor);
     }
 }

@@ -19,6 +19,16 @@
 //! form of §III-B's "process the index space in waves" behaviour. The
 //! per-wave [`crate::switch::Scoreboard`] (inside the aggregators) drops
 //! retransmitted duplicates so lossy links never double-count.
+//!
+//! **Sans-I/O.** A `Job` owns no socket and never reads a clock: every
+//! input arrives through [`Job::handle`] (one decoded frame plus the
+//! caller's `now`) or [`Job::on_tick`] (a timer deadline arriving), and
+//! every effect comes back as a [`JobOutput`] — datagrams to transmit
+//! and the next deadline to call `on_tick` at. The threaded and reactor
+//! backends ([`crate::server::daemon`]) are thin drivers over this state
+//! machine, which is also why it is testable without sockets
+//! (`tests/job_machine.rs`) and why both backends are bit-exact with
+//! each other by construction.
 
 use std::collections::{BTreeMap, HashMap};
 use std::net::SocketAddr;
@@ -27,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use crate::compress::golomb;
 use crate::configx::PsProfile;
-use crate::server::ServerStats;
+use crate::server::{HostBudget, ServerStats};
 use crate::switch::{alu, window_blocks, Mark, RegisterFile, UpdateAggregator, VoteAggregator};
 use crate::util::BitVec;
 use crate::wire::{
@@ -44,8 +54,22 @@ pub const JOIN_UNKNOWN_JOB: u32 = 2;
 /// memory, or exceeds the server's per-job host-memory budget.
 pub const JOIN_BAD_SPEC: u32 = 3;
 
-/// Datagrams to transmit in response to one handled frame.
-pub type Outgoing = Vec<(SocketAddr, Vec<u8>)>;
+/// Datagrams to transmit in response to one handled input, as
+/// `(bytes, destination)` pairs.
+pub type Outgoing = Vec<(Vec<u8>, SocketAddr)>;
+
+/// Everything a backend must act on after feeding the job one input:
+/// the datagrams to transmit now, and the deadline (if any) at which
+/// [`Job::on_tick`] wants to run next. The job never touches a socket
+/// or a clock itself — that is the whole sans-I/O contract.
+#[derive(Debug, Default)]
+pub struct JobOutput {
+    /// Datagrams to transmit, in order.
+    pub frames: Outgoing,
+    /// Earliest pending deadline (idle register reclamation); `None`
+    /// when the job is quiescent and needs no wakeup at all.
+    pub timer: Option<Instant>,
+}
 
 /// Abuse limits for one job — everything an unauthenticated UDP sender
 /// could otherwise inflate. Defaults are generous for legitimate jobs;
@@ -55,7 +79,10 @@ pub struct JobLimits {
     /// Host bytes one job may pin across its `MAX_LIVE_ROUNDS` live
     /// rounds (vote counters, GIA, update accumulators); a `Join` whose
     /// spec would exceed it is refused with [`JOIN_BAD_SPEC`]. The
-    /// daemon-wide worst case is `MAX_JOBS ×` this figure.
+    /// daemon-wide worst case is `MAX_JOBS ×` this figure. Enforced
+    /// through a [`HostBudget`] accountant; a sharded deployment shares
+    /// one accountant across the shard set, so this is the tenant's
+    /// budget for the *whole* deployment, not per shard.
     pub host_bytes: usize,
     /// Spilled payload bytes one phase of one round may hold; beyond the
     /// derived entry cap, spill is dropped (and counted) — the client's
@@ -157,7 +184,7 @@ struct RoundState {
 }
 
 impl RoundState {
-    fn new(spec: &JobSpec, memory_bytes: usize, spill_cap: usize) -> Self {
+    fn new(spec: &JobSpec, memory_bytes: usize, spill_cap: usize, now: Instant) -> Self {
         let d = spec.d as usize;
         let n_blocks = spec.vote_n_blocks();
         let window = window_blocks(memory_bytes, spec.vote_block_bits() * 2).min(n_blocks);
@@ -175,7 +202,7 @@ impl RoundState {
             agg_done: false,
             spill_cap,
             serves: HashMap::new(),
-            last_touch: Instant::now(),
+            last_touch: now,
         }
     }
 
@@ -240,6 +267,7 @@ impl RoundState {
         elems: u32,
         payload: &[u8],
         local_max: f32,
+        now: Instant,
     ) -> bool {
         let d = spec.d as usize;
         let epb = spec.vote_block_bits();
@@ -260,7 +288,7 @@ impl RoundState {
         }
         // Only a frame that survives validation (and isn't a stale-block
         // replay) counts as traffic for idle register reclamation.
-        self.last_touch = Instant::now();
+        self.last_touch = now;
         // Make sure the resident wave has registers (lazy allocation also
         // drains any spill that became resident).
         if self.vote_agg.is_none() && self.pump_vote(spec, rf, stats) {
@@ -395,6 +423,7 @@ impl RoundState {
         block: u32,
         elems: u32,
         payload: &[u8],
+        now: Instant,
     ) -> bool {
         let k_s = self.upd_acc.len();
         let epb = spec.update_block_lanes();
@@ -413,7 +442,7 @@ impl RoundState {
             return false;
         }
         // See vote_packet: validated, non-stale traffic only.
-        self.last_touch = Instant::now();
+        self.last_touch = now;
         if self.upd_agg.is_none() && self.pump_update(spec, rf, stats) {
             return true;
         }
@@ -514,6 +543,11 @@ pub struct Job {
     profile: PsProfile,
     limits: JobLimits,
     stats: Arc<ServerStats>,
+    /// Host-memory accountant this job's worst-case round footprint is
+    /// reserved against at configure time (shared across a shard set).
+    budget: Arc<HostBudget>,
+    /// Bytes currently reserved in `budget` (released on drop).
+    reserved: usize,
     state: Option<JobState>,
 }
 
@@ -521,8 +555,11 @@ pub struct Job {
 const ROUND_HISTORY: u32 = 3;
 /// Hard cap on simultaneously live round states per job: bounds memory
 /// against a participant spraying round numbers without letting one bogus
-/// frame wedge in-progress rounds (oldest-first eviction).
-const MAX_LIVE_ROUNDS: usize = 8;
+/// frame wedge in-progress rounds (oldest-first eviction). Crate-visible
+/// because the `Join`-time [`HostBudget`] reservation is
+/// `host_bytes_per_round × MAX_LIVE_ROUNDS` and tests size budgets
+/// from the same figure.
+pub(crate) const MAX_LIVE_ROUNDS: usize = 8;
 
 impl Job {
     /// Unconfigured job with default [`JobLimits`] (configured by the
@@ -531,14 +568,30 @@ impl Job {
         Self::with_limits(id, profile, JobLimits::default(), stats)
     }
 
-    /// Unconfigured job with explicit abuse limits.
+    /// Unconfigured job with explicit abuse limits (and a private
+    /// host-byte accountant derived from them).
     pub fn with_limits(
         id: u32,
         profile: PsProfile,
         limits: JobLimits,
         stats: Arc<ServerStats>,
     ) -> Self {
-        Job { id, profile, limits, stats, state: None }
+        let budget = Arc::new(HostBudget::new(limits.host_bytes));
+        Self::with_budget(id, profile, limits, budget, stats)
+    }
+
+    /// Unconfigured job charging its host-memory reservation against a
+    /// shared accountant — the shard-set form: every shard daemon of one
+    /// deployment passes the same [`HostBudget`], so a tenant's
+    /// `host_bytes` is a global budget rather than a per-shard one.
+    pub fn with_budget(
+        id: u32,
+        profile: PsProfile,
+        limits: JobLimits,
+        budget: Arc<HostBudget>,
+        stats: Arc<ServerStats>,
+    ) -> Self {
+        Job { id, profile, limits, stats, budget, reserved: 0, state: None }
     }
 
     /// True once a valid `Join` has fixed the job's spec.
@@ -564,8 +617,38 @@ impl Job {
         rs.agg_done.then_some(rs.upd_acc.as_slice())
     }
 
-    /// Handle one decoded frame; returns the datagrams to send.
-    pub fn handle(&mut self, frame: &Frame<'_>, from: SocketAddr) -> Outgoing {
+    /// Handle one decoded frame at time `now`; returns the datagrams to
+    /// send plus the job's next timer deadline. Pure with respect to
+    /// I/O: the caller owns the socket and the clock.
+    pub fn handle(&mut self, frame: &Frame<'_>, from: SocketAddr, now: Instant) -> JobOutput {
+        let frames = self.handle_frames(frame, from, now);
+        JobOutput { frames, timer: self.next_timer() }
+    }
+
+    /// A timer deadline arrived: reclaim register aggregators from
+    /// rounds whose traffic went idle. Backends call this when the
+    /// `timer` of an earlier [`JobOutput`] expires — and only then, so
+    /// an idle job costs zero wakeups (see `ServerStats::idle_wakeups`).
+    pub fn on_tick(&mut self, now: Instant) -> JobOutput {
+        if let Some(st) = self.state.as_mut() {
+            Self::reap_idle(st, None, now, &self.limits, &self.stats);
+        }
+        JobOutput { frames: Vec::new(), timer: self.next_timer() }
+    }
+
+    /// Earliest idle-reclaim deadline across this job's rounds, `None`
+    /// when no round holds register aggregators (nothing to reclaim, so
+    /// nothing to wake for).
+    pub fn next_timer(&self) -> Option<Instant> {
+        let st = self.state.as_ref()?;
+        st.rounds
+            .values()
+            .filter(|rs| rs.vote_agg.is_some() || rs.upd_agg.is_some())
+            .map(|rs| rs.last_touch + self.limits.idle_release_after)
+            .min()
+    }
+
+    fn handle_frames(&mut self, frame: &Frame<'_>, from: SocketAddr, now: Instant) -> Outgoing {
         let h = frame.header;
         // Downlink kinds arriving at the server are reflections or
         // server-bound spoofs. They must be dropped *silently* — even a
@@ -581,14 +664,14 @@ impl Job {
         match h.kind {
             WireKind::Join => self.on_join(h, frame.payload, from),
             _ if self.state.is_none() => vec![(
-                from,
                 encode_frame(
                     &Header::control(WireKind::JoinAck, self.id, h.client, h.round, JOIN_UNKNOWN_JOB),
                     &[],
                 ),
+                from,
             )],
-            WireKind::Vote => self.on_vote(h, frame.payload),
-            WireKind::Update => self.on_update(h, frame.payload),
+            WireKind::Vote => self.on_vote(h, frame.payload, now),
+            WireKind::Update => self.on_update(h, frame.payload, now),
             WireKind::Poll => self.on_poll(h, from),
             // Unreachable: every uplink kind is matched above.
             _ => Vec::new(),
@@ -597,8 +680,8 @@ impl Job {
 
     fn ack(&self, client: u16, round: u32, status: u32, to: SocketAddr) -> Outgoing {
         vec![(
-            to,
             encode_frame(&Header::control(WireKind::JoinAck, self.id, client, round, status), &[]),
+            to,
         )]
     }
 
@@ -613,17 +696,21 @@ impl Job {
         if min_block > self.profile.memory_bytes || h.client >= spec.n_clients {
             return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
         }
-        // Bound host-side allocation from an untrusted spec: every live
-        // round pins counters/GIA/accumulator memory proportional to d,
-        // and rounds are created by unauthenticated data frames.
-        let worst = spec.host_bytes_per_round().saturating_mul(MAX_LIVE_ROUNDS);
-        if worst > self.limits.host_bytes {
-            return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
-        }
         if self.state.as_ref().is_some_and(|st| st.spec != spec) {
             return self.ack(h.client, h.round, JOIN_SPEC_MISMATCH, from);
         }
         if self.state.is_none() {
+            // Bound host-side allocation from an untrusted spec: every
+            // live round pins counters/GIA/accumulator memory
+            // proportional to d, and rounds are created by
+            // unauthenticated data frames. The reservation goes through
+            // the (possibly shard-shared) accountant, so in a sharded
+            // deployment the tenant's shards draw on ONE budget.
+            let worst = spec.host_bytes_per_round().saturating_mul(MAX_LIVE_ROUNDS);
+            if !self.budget.try_reserve(self.id, worst) {
+                return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
+            }
+            self.reserved = worst;
             self.state = Some(JobState {
                 spec,
                 registers: RegisterFile::new(self.profile.memory_bytes),
@@ -641,12 +728,18 @@ impl Job {
     /// rounds age out by round distance (a single frame with a huge round
     /// number must not wedge in-progress rounds); total live rounds are
     /// bounded by oldest-first eviction.
-    fn ensure_round(st: &mut JobState, round: u32, memory_bytes: usize, limits: &JobLimits) {
+    fn ensure_round(
+        st: &mut JobState,
+        round: u32,
+        memory_bytes: usize,
+        limits: &JobLimits,
+        now: Instant,
+    ) {
         if st.rounds.contains_key(&round) {
             return;
         }
         let cap = spill_cap(limits, &st.spec);
-        st.rounds.insert(round, RoundState::new(&st.spec, memory_bytes, cap));
+        st.rounds.insert(round, RoundState::new(&st.spec, memory_bytes, cap, now));
         let newest = *st.rounds.keys().next_back().unwrap();
         let cutoff = newest.saturating_sub(ROUND_HISTORY);
         let stale: Vec<u32> = st
@@ -675,11 +768,16 @@ impl Job {
     /// register file hostage while other rounds spill forever. The round's
     /// host state survives; if its clients return, their retransmissions
     /// rebuild the reclaimed wave through a fresh aggregator.
-    fn reap_idle(st: &mut JobState, current: u32, limits: &JobLimits, stats: &ServerStats) {
-        let now = Instant::now();
+    fn reap_idle(
+        st: &mut JobState,
+        current: Option<u32>,
+        now: Instant,
+        limits: &JobLimits,
+        stats: &ServerStats,
+    ) {
         let JobState { registers, rounds, .. } = st;
         for (&r, rs) in rounds.iter_mut() {
-            if r == current || (rs.vote_agg.is_none() && rs.upd_agg.is_none()) {
+            if Some(r) == current || (rs.vote_agg.is_none() && rs.upd_agg.is_none()) {
                 continue;
             }
             if now.duration_since(rs.last_touch) < limits.idle_release_after {
@@ -696,7 +794,7 @@ impl Job {
         }
     }
 
-    fn on_vote(&mut self, h: Header, payload: &[u8]) -> Outgoing {
+    fn on_vote(&mut self, h: Header, payload: &[u8], now: Instant) -> Outgoing {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
@@ -711,8 +809,8 @@ impl Job {
             ServerStats::bump(&self.stats.non_finite_aux);
             return Vec::new();
         }
-        Self::reap_idle(st, h.round, &self.limits, &self.stats);
-        Self::ensure_round(st, h.round, self.profile.memory_bytes, &self.limits);
+        Self::reap_idle(st, Some(h.round), now, &self.limits, &self.stats);
+        Self::ensure_round(st, h.round, self.profile.memory_bytes, &self.limits, now);
         let JobState { spec, registers, rounds, clients } = st;
         let spec = *spec;
         let rs = rounds.get_mut(&h.round).unwrap();
@@ -733,6 +831,7 @@ impl Job {
             h.elems,
             payload,
             local_max,
+            now,
         );
         if !done {
             return Vec::new();
@@ -748,13 +847,13 @@ impl Job {
         Self::to_all(clients, &frames)
     }
 
-    fn on_update(&mut self, h: Header, payload: &[u8]) -> Outgoing {
+    fn on_update(&mut self, h: Header, payload: &[u8], now: Instant) -> Outgoing {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
             return Vec::new();
         }
-        Self::reap_idle(st, h.round, &self.limits, &self.stats);
+        Self::reap_idle(st, Some(h.round), now, &self.limits, &self.stats);
         let JobState { spec, registers, rounds, clients } = st;
         let spec = *spec;
         let Some(rs) = rounds.get_mut(&h.round) else {
@@ -783,6 +882,7 @@ impl Job {
             h.block,
             h.elems,
             payload,
+            now,
         );
         if !done {
             return Vec::new();
@@ -802,11 +902,11 @@ impl Job {
         let JobState { spec, rounds, clients, .. } = st;
         let spec = *spec;
         let not_ready = vec![(
-            from,
             encode_frame(
                 &Header::control(WireKind::NotReady, self.id, h.client, h.round, h.aux),
                 &[],
             ),
+            from,
         )];
         let Some(rs) = rounds.get_mut(&h.round) else {
             return not_ready;
@@ -880,7 +980,7 @@ impl Job {
 
     /// Address one pre-encoded frame set to a single receiver.
     fn to_one(addr: SocketAddr, frames: Vec<Vec<u8>>) -> Outgoing {
-        frames.into_iter().map(|b| (addr, b)).collect()
+        frames.into_iter().map(|b| (b, addr)).collect()
     }
 
     /// Fan one pre-encoded frame set out to every registered client.
@@ -888,10 +988,21 @@ impl Job {
         let mut out = Vec::with_capacity(clients.len() * frames.len());
         for &addr in clients.values() {
             for frame in frames {
-                out.push((addr, frame.clone()));
+                out.push((frame.clone(), addr));
             }
         }
         out
+    }
+}
+
+impl Drop for Job {
+    fn drop(&mut self) {
+        // Hand the configure-time reservation back to the accountant so
+        // an evicted or retired job frees its tenant's budget (matters
+        // when the accountant is shared across a shard set).
+        if self.reserved > 0 {
+            self.budget.release(self.id, self.reserved);
+        }
     }
 }
 
@@ -973,7 +1084,7 @@ mod tests {
 
     fn feed(job: &mut Job, datagram: &[u8], from: SocketAddr) -> Outgoing {
         let frame = decode_frame(datagram).unwrap();
-        job.handle(&frame, from)
+        job.handle(&frame, from, Instant::now()).frames
     }
 
     fn make_job(spec: &JobSpec, memory: usize) -> Job {
@@ -981,7 +1092,7 @@ mod tests {
         let mut job = Job::new(9, profile(memory), stats);
         for c in 0..spec.n_clients {
             let out = feed(&mut job, &join_frame(9, c, spec), addr(4000 + c));
-            let ackf = decode_frame(&out[0].1).unwrap();
+            let ackf = decode_frame(&out[0].0).unwrap();
             assert_eq!(ackf.header.kind, WireKind::JoinAck);
             assert_eq!(ackf.header.aux, JOIN_OK);
         }
@@ -1009,9 +1120,9 @@ mod tests {
 
         // Reassemble one client's copy and check it Golomb-decodes.
         let mut asm = ChunkAssembler::new(
-            decode_frame(&gia_out[0].1).unwrap().header.n_blocks as usize,
+            decode_frame(&gia_out[0].0).unwrap().header.n_blocks as usize,
         );
-        for (to, bytes) in &gia_out {
+        for (bytes, to) in &gia_out {
             let f = decode_frame(bytes).unwrap();
             if *to == addr(4000) && f.header.kind == WireKind::Gia {
                 asm.insert(f.header.block as usize, f.payload);
@@ -1090,7 +1201,7 @@ mod tests {
         );
         let replay = feed(&mut job, &poll, addr(4000));
         assert!(!replay.is_empty(), "poll should re-serve the GIA");
-        assert_eq!(decode_frame(&replay[0].1).unwrap().header.kind, WireKind::Gia);
+        assert_eq!(decode_frame(&replay[0].0).unwrap().header.kind, WireKind::Gia);
         // Counters only saw each contribution once.
         assert_eq!(job.round_gia(0).unwrap().count_ones(), 3);
     }
@@ -1102,21 +1213,21 @@ mod tests {
         // Budget too large for 100 B of registers (needs 16·budget).
         let spec = mkspec(64, 2, 1, 64);
         let out = feed(&mut job, &join_frame(1, 0, &spec), addr(5000));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_BAD_SPEC);
         assert!(!job.is_configured());
 
         // Valid spec creates the job; a conflicting re-join is refused.
         let ok = mkspec(64, 2, 1, 4);
         let out = feed(&mut job, &join_frame(1, 0, &ok), addr(5000));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
         let conflicting = JobSpec { threshold_a: 2, ..ok };
         let out = feed(&mut job, &join_frame(1, 1, &conflicting), addr(5001));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_SPEC_MISMATCH);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_SPEC_MISMATCH);
         // Data for an unconfigured job id elsewhere gets JOIN_UNKNOWN_JOB.
         let mut fresh = Job::new(2, profile(1 << 20), Arc::new(ServerStats::default()));
         let v = BitVec::from_indices(64, &[0]);
         let out = feed(&mut fresh, &vote_frames(2, 0, 0, &v, &ok)[0], addr(5002));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_UNKNOWN_JOB);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_UNKNOWN_JOB);
     }
 
     #[test]
@@ -1130,16 +1241,16 @@ mod tests {
         let shard0 =
             JobSpec { shard: ShardPlan { n_shards: 2, shard_id: 0 }, ..mkspec(64, 2, 1, 8) };
         let out = feed(&mut job, &join_frame(7, 0, &shard0), addr(4300));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
         let other = JobSpec { shard: ShardPlan { n_shards: 2, shard_id: 1 }, ..shard0 };
         let out = feed(&mut job, &join_frame(7, 1, &other), addr(4301));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_SPEC_MISMATCH);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_SPEC_MISMATCH);
         let unsharded = JobSpec { shard: ShardPlan::single(), ..shard0 };
         let out = feed(&mut job, &join_frame(7, 1, &unsharded), addr(4301));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_SPEC_MISMATCH);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_SPEC_MISMATCH);
         // The matching plan joins fine.
         let out = feed(&mut job, &join_frame(7, 1, &shard0), addr(4301));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
     }
 
     #[test]
@@ -1160,13 +1271,13 @@ mod tests {
             &[],
         );
         let out = feed(&mut job, &poll, addr(4000));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.kind, WireKind::NotReady);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.kind, WireKind::NotReady);
         let v = BitVec::from_indices(64, &[7]);
         for c in 0..2u16 {
             feed(&mut job, &vote_frames(9, c, 0, &v, &spec)[0], addr(4000 + c));
         }
         let out = feed(&mut job, &poll, addr(4000));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.kind, WireKind::Gia);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.kind, WireKind::Gia);
     }
 
     fn stat(counter: &std::sync::atomic::AtomicU64) -> u64 {
@@ -1180,7 +1291,7 @@ mod tests {
         let mut job = Job::new(3, profile(1 << 20), Arc::new(ServerStats::default()));
         let huge = mkspec(u32::MAX, 2, 1, 256);
         let out = feed(&mut job, &join_frame(3, 0, &huge), addr(4100));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_BAD_SPEC);
         assert!(!job.is_configured());
 
         // A tighter configured budget rejects a spec the default accepts.
@@ -1189,10 +1300,10 @@ mod tests {
         let mut tight =
             Job::with_limits(4, profile(1 << 20), limits, Arc::new(ServerStats::default()));
         let out = feed(&mut tight, &join_frame(4, 0, &spec), addr(4101));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_BAD_SPEC);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_BAD_SPEC);
         let mut roomy = Job::new(5, profile(1 << 20), Arc::new(ServerStats::default()));
         let out = feed(&mut roomy, &join_frame(5, 0, &spec), addr(4102));
-        assert_eq!(decode_frame(&out[0].1).unwrap().header.aux, JOIN_OK);
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
     }
 
     #[test]
@@ -1286,7 +1397,7 @@ mod tests {
         assert!(feed(&mut job, &vote_frames(9, 0, 0, &v0, &spec)[0], addr(4000)).is_empty());
         let out = feed(&mut job, &vote_frames(9, 1, 0, &v1, &spec)[0], addr(4001));
         let kinds: Vec<WireKind> =
-            out.iter().map(|(_, b)| decode_frame(b).unwrap().header.kind).collect();
+            out.iter().map(|(b, _)| decode_frame(b).unwrap().header.kind).collect();
         assert!(kinds.contains(&WireKind::Gia), "no GIA in completion multicast");
         assert!(kinds.contains(&WireKind::Aggregate), "empty aggregate not multicast");
         assert_eq!(job.round_gia(0).unwrap().count_ones(), 0);
@@ -1294,7 +1405,7 @@ mod tests {
         assert_eq!(job.stats.rounds_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
         let agg = out
             .iter()
-            .map(|(_, b)| decode_frame(b).unwrap())
+            .map(|(b, _)| decode_frame(b).unwrap())
             .find(|f| f.header.kind == WireKind::Aggregate)
             .unwrap();
         assert_eq!((agg.header.n_blocks, agg.header.elems, agg.header.aux), (1, 0, 0));
@@ -1342,7 +1453,7 @@ mod tests {
             &[],
         );
         let out = feed(&mut job, &poll, addr(4000));
-        let gia = decode_frame(&out[0].1).unwrap();
+        let gia = decode_frame(&out[0].0).unwrap();
         assert_eq!(gia.header.kind, WireKind::Gia);
         let m = f32::from_bits(gia.header.aux);
         assert!(m.is_finite(), "NaN leaked into the folded global max");
@@ -1379,6 +1490,83 @@ mod tests {
         assert!(feed(&mut job, &forged(WireKind::Aggregate, 9), addr(7000)).is_empty());
         assert!(feed(&mut job, &forged(WireKind::NotReady, 9), addr(7000)).is_empty());
         assert_eq!(job.stats.downlink_spoofs.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn timer_drives_idle_reclamation_without_traffic() {
+        // Sans-I/O discipline: after a round stalls with a resident
+        // aggregator, `handle` arms a timer; `on_tick` at that deadline
+        // reclaims the registers with NO further traffic (the busy-wake
+        // fix — backends sleep until the deadline instead of polling).
+        let spec = mkspec(100, 2, 2, 8);
+        let stats = Arc::new(ServerStats::default());
+        let limits =
+            JobLimits { idle_release_after: Duration::from_millis(50), ..JobLimits::default() };
+        let mut job = Job::with_limits(9, profile(200), limits, Arc::clone(&stats));
+        for c in 0..spec.n_clients {
+            feed(&mut job, &join_frame(9, c, &spec), addr(4000 + c));
+        }
+        let v = BitVec::from_indices(100, &[1, 50, 80]);
+        let t0 = Instant::now();
+        let datagram = vote_frames(9, 0, 0, &v, &spec)[0].clone();
+        let frame = decode_frame(&datagram).unwrap();
+        let out = job.handle(&frame, addr(4000), t0);
+        let deadline = out.timer.expect("resident aggregator must arm the idle timer");
+        assert_eq!(deadline, t0 + Duration::from_millis(50));
+        assert!(job.state.as_ref().unwrap().registers.used() > 0);
+        // Before the deadline a tick is a no-op and the timer stays armed.
+        let out = job.on_tick(t0 + Duration::from_millis(10));
+        assert!(out.frames.is_empty());
+        assert!(out.timer.is_some());
+        assert!(job.state.as_ref().unwrap().registers.used() > 0);
+        // At the deadline the registers come back and the timer disarms.
+        let out = job.on_tick(deadline);
+        assert!(out.timer.is_none(), "quiescent job must not ask for wakeups");
+        assert_eq!(job.state.as_ref().unwrap().registers.used(), 0);
+        assert_eq!(stat(&stats.idle_releases), 1);
+    }
+
+    #[test]
+    fn shared_budget_is_global_per_tenant_across_daemons() {
+        // Two Jobs with the same id (= one tenant hosted by two shard
+        // daemons) draw on ONE accountant: the second configure is
+        // refused once the tenant's budget is spent, an idempotent
+        // re-join does not double-charge, another tenant is unaffected,
+        // and dropping a job hands its reservation back.
+        let spec = mkspec(10_000, 2, 1, 8);
+        let worst = spec.host_bytes_per_round() * MAX_LIVE_ROUNDS;
+        let limits = JobLimits { host_bytes: worst + worst / 2, ..JobLimits::default() };
+        let budget = Arc::new(HostBudget::new(limits.host_bytes));
+        let mk = |id: u32| {
+            Job::with_budget(
+                id,
+                profile(1 << 20),
+                limits,
+                Arc::clone(&budget),
+                Arc::new(ServerStats::default()),
+            )
+        };
+        let mut shard0 = mk(4);
+        let mut shard1 = mk(4);
+        let out = feed(&mut shard0, &join_frame(4, 0, &spec), addr(4700));
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
+        let out = feed(&mut shard1, &join_frame(4, 0, &spec), addr(4701));
+        assert_eq!(
+            decode_frame(&out[0].0).unwrap().header.aux,
+            JOIN_BAD_SPEC,
+            "second shard configure must see the tenant's budget spent"
+        );
+        // Re-joining the configured shard is idempotent (no extra charge).
+        let out = feed(&mut shard0, &join_frame(4, 1, &spec), addr(4702));
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
+        // A different tenant has its own tally under the same accountant.
+        let mut other = mk(5);
+        let out = feed(&mut other, &join_frame(5, 0, &spec), addr(4703));
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
+        // Retiring the first shard's job releases the tenant's bytes.
+        drop(shard0);
+        let out = feed(&mut shard1, &join_frame(4, 0, &spec), addr(4701));
+        assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
     }
 
     #[test]

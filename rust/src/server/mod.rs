@@ -1,16 +1,15 @@
-//! The switch daemon: a threaded UDP aggregation server hosting multiple
+//! The switch daemon: a UDP aggregation server hosting multiple
 //! concurrent FL jobs (multi-tenant), each job running FediAC's two-phase
 //! protocol over the [`crate::wire`] format.
 //!
-//! Architecture:
+//! Architecture (sans-I/O core + pluggable I/O backends, DESIGN.md §6):
 //!
-//! * [`daemon`] — socket front-end: one dispatch thread routes datagrams
-//!   by job id ([`crate::wire::peek_route`]) to per-job worker threads,
-//!   so independent jobs aggregate concurrently while each job's state
-//!   stays single-threaded (the same invariant a real switch pipeline
-//!   gives per-register-block).
-//! * [`job`] — the per-job protocol state machine: per-round vote
-//!   counters and update accumulators backed by the existing
+//! * [`job`] — the per-job protocol state machine, **sans-I/O**: it owns
+//!   no socket and reads no clock. Inputs are decoded frames plus the
+//!   caller's `now` ([`Job::handle`]) or timer expiries ([`Job::on_tick`]);
+//!   outputs are a [`job::JobOutput`] — datagrams to transmit and the
+//!   next deadline to wake at. Per-round vote counters and update
+//!   accumulators are backed by the existing
 //!   [`crate::switch::RegisterFile`] byte accounting. When a phase's
 //!   register demand exceeds the [`crate::configx::PsProfile`] capacity
 //!   the block space is processed in *waves*: only a window of blocks is
@@ -18,14 +17,93 @@
 //!   retired waves copy their partial aggregates out — §III-B's memory
 //!   pressure made operational. Duplicate suppression reuses the
 //!   [`crate::switch::Scoreboard`] inside the wave aggregators.
+//! * [`daemon`] — the front door ([`ServeOptions`], [`serve`],
+//!   [`serve_sharded`]) plus the frame-routing/admission rules both
+//!   backends share ([`crate::wire::peek_route`], the job cap, the
+//!   unknown-job `JoinAck`).
+//! * [`threaded`] — the thread-per-job backend: one dispatch thread
+//!   routes datagrams to per-job worker threads over channels. Jobs are
+//!   concurrent with each other and serialized internally.
+//! * [`reactor`] — the single-thread backend: a nonblocking socket, a
+//!   readiness poll ([`crate::net::poll`]) and a coarse timer wheel
+//!   drive *every* job from one thread — zero per-job threads or
+//!   channels, the switch-class resource discipline the paper assumes.
+//!
+//! Backend choice is wire-invisible: both drive the same [`Job`] state
+//! machine, so their GIA/aggregate outputs are bit-identical
+//! (`tests/wire_backend.rs` enforces this against the simulator too).
 
 pub mod daemon;
 pub mod job;
+pub mod reactor;
+pub mod threaded;
 
-pub use daemon::{serve, serve_sharded, ServeOptions, ServerHandle};
-pub use job::{Job, JobLimits, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB};
+pub use daemon::{serve, serve_sharded, IoBackend, ServeOptions, ServerHandle};
+pub use job::{
+    Job, JobLimits, JobOutput, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB,
+};
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Host-memory accountant: per-tenant (job-id-keyed) byte reservations
+/// against one cap. Each daemon normally owns a private accountant, but
+/// [`serve_sharded`] hands one `Arc<HostBudget>` to every shard daemon
+/// of a deployment so a tenant's [`JobLimits::host_bytes`] bounds its
+/// footprint across the *whole* shard set — previously each shard
+/// enforced the budget independently, quietly multiplying it by N.
+#[derive(Debug)]
+pub struct HostBudget {
+    cap: usize,
+    by_job: Mutex<HashMap<u32, usize>>,
+}
+
+impl HostBudget {
+    /// Accountant allowing up to `cap` bytes per tenant.
+    pub fn new(cap: usize) -> Self {
+        HostBudget { cap, by_job: Mutex::new(HashMap::new()) }
+    }
+
+    /// The per-tenant byte cap.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Bytes currently reserved by tenant `job`.
+    pub fn reserved(&self, job: u32) -> usize {
+        self.by_job.lock().unwrap().get(&job).copied().unwrap_or(0)
+    }
+
+    /// Reserve `bytes` for tenant `job`; false when the tenant's total
+    /// would exceed the cap (nothing is charged then). A refused or
+    /// zero-byte reservation leaves no map entry behind — unauthenticated
+    /// Join sprays with over-budget specs must not grow this table.
+    pub fn try_reserve(&self, job: u32, bytes: usize) -> bool {
+        let mut m = self.by_job.lock().unwrap();
+        let cur = m.get(&job).copied().unwrap_or(0);
+        match cur.checked_add(bytes) {
+            Some(total) if total <= self.cap => {
+                if total > 0 {
+                    m.insert(job, total);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Return `bytes` of tenant `job`'s reservation.
+    pub fn release(&self, job: u32, bytes: usize) {
+        let mut m = self.by_job.lock().unwrap();
+        if let Some(cur) = m.get_mut(&job) {
+            *cur = cur.saturating_sub(bytes);
+            if *cur == 0 {
+                m.remove(&job);
+            }
+        }
+    }
+}
 
 /// Cross-thread daemon counters (lock-free; workers update directly).
 #[derive(Debug, Default)]
@@ -71,6 +149,16 @@ pub struct ServerStats {
     pub jobs_rejected: AtomicU64,
     /// Rounds whose phase-2 aggregate completed (or closed empty).
     pub rounds_completed: AtomicU64,
+    /// Worker threads spawned by the threaded backend. The reactor
+    /// backend never bumps this — one thread serves every job
+    /// (`tests/wire_backend.rs` asserts zero per-job spawns through it).
+    pub workers_spawned: AtomicU64,
+    /// Backend wakeups driven by a [`Job`] timer deadline rather than by
+    /// traffic (idle register reclamation). The busy-wake regression
+    /// guard: an idle daemon must not accumulate these, because backends
+    /// sleep until the job's own deadline instead of polling on a fixed
+    /// tick.
+    pub idle_wakeups: AtomicU64,
 }
 
 /// Point-in-time copy of [`ServerStats`] for reporting.
@@ -108,6 +196,10 @@ pub struct StatsSnapshot {
     pub jobs_rejected: u64,
     /// See [`ServerStats::rounds_completed`].
     pub rounds_completed: u64,
+    /// See [`ServerStats::workers_spawned`].
+    pub workers_spawned: u64,
+    /// See [`ServerStats::idle_wakeups`].
+    pub idle_wakeups: u64,
 }
 
 impl ServerStats {
@@ -142,6 +234,8 @@ impl ServerStats {
             jobs_created: self.jobs_created.load(Ordering::Relaxed),
             jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
             rounds_completed: self.rounds_completed.load(Ordering::Relaxed),
+            workers_spawned: self.workers_spawned.load(Ordering::Relaxed),
+            idle_wakeups: self.idle_wakeups.load(Ordering::Relaxed),
         }
     }
 }

@@ -1,0 +1,204 @@
+//! Single-thread reactor I/O backend: every hosted job is multiplexed
+//! onto ONE event loop — a nonblocking `std::net::UdpSocket`, readiness
+//! polling through [`crate::net::poll::wait_readable`] (a thin `poll(2)`
+//! wrapper), and a coarse [`crate::net::poll::TimerWheel`] for the jobs'
+//! idle-reclaim deadlines. Zero per-job threads, zero channels, zero
+//! allocations on the idle path — the switch-class resource discipline
+//! the paper's aggregation point assumes, and the shape a smart-NIC
+//! front-end takes (one fixed compute budget, thousands of clients).
+//!
+//! The loop is a classic readiness reactor:
+//!
+//! ```text
+//! loop {
+//!   sleep until: socket readable | earliest wheel deadline
+//!                | chaos flush tick (only while copies are held)
+//!   drain the socket (bounded batch), feeding Job::handle
+//!   fire due wheel entries, feeding Job::on_tick
+//!   flush chaos lanes holding overdue reordered copies
+//! }
+//! ```
+//!
+//! Routing and admission (job cap, unconfigured-job eviction, the
+//! unknown-job `JoinAck`, downlink-spoof silence) are shared with the
+//! threaded backend through [`crate::server::daemon`], and both backends
+//! feed the same sans-I/O [`Job`] core — the two are bit-exact on the
+//! wire by construction (`tests/wire_backend.rs` proves it anyway).
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, UdpSocket};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::net::chaos::ChaosLane;
+use crate::net::poll::{wait_readable, TimerWheel};
+use crate::server::daemon::{transmit, unknown_job_reply, BackendShared, MAX_JOBS, STOP_POLL};
+use crate::server::job::Job;
+use crate::server::ServerStats;
+use crate::wire::{decode_frame, peek_route, WireKind};
+
+/// Wheel geometry: 10 ms × 512 slots ≈ a 5 s turn. Idle-reclaim
+/// deadlines (tens of seconds by default) park for a few turns; firing
+/// lateness is bounded by the granularity.
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(10);
+const WHEEL_SLOTS: usize = 512;
+/// Chaos lanes holding reordered copies are flushed at this cadence
+/// (lanes with nothing held cost no wakeups).
+const CHAOS_TICK: Duration = Duration::from_millis(10);
+/// Datagrams drained per readiness event before timers are serviced, so
+/// a flood cannot starve deadline work.
+const RECV_BATCH: usize = 256;
+
+/// One hosted job: its sans-I/O state machine, its downlink chaos lane,
+/// and the deadline currently armed for it in the wheel (`None` = no
+/// pending wheel entry; at most one entry per job is live at a time).
+struct Slot {
+    job: Job,
+    lane: Option<ChaosLane<SocketAddr>>,
+    armed: Option<Instant>,
+}
+
+pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
+    let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget } = shared;
+    let mut slots: HashMap<u32, Slot> = HashMap::new();
+    let mut wheel: TimerWheel<u32> =
+        TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS, Instant::now());
+    let mut buf = vec![0u8; 65536];
+    while !stop.load(Ordering::SeqCst) {
+        // ---- sleep until something needs doing -------------------------
+        let now = Instant::now();
+        let mut wake = now + STOP_POLL;
+        if let Some(t) = wheel.next_deadline() {
+            wake = wake.min(t);
+        }
+        if slots.values().any(|s| s.lane.as_ref().is_some_and(|l| l.held_len() > 0)) {
+            wake = wake.min(now + CHAOS_TICK);
+        }
+        let timeout = wake.saturating_duration_since(now);
+        let readable = match wait_readable(&socket, Some(timeout)) {
+            Ok(r) => r,
+            // Transient poll failure: back off briefly, keep serving.
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(1));
+                false
+            }
+        };
+
+        // ---- drain the socket ------------------------------------------
+        let now = Instant::now();
+        if readable {
+            for _ in 0..RECV_BATCH {
+                let (n, from) = match socket.recv_from(&mut buf) {
+                    Ok(ok) => ok,
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        break
+                    }
+                    // E.g. an ICMP unreachable surfacing as ECONNRESET:
+                    // not fatal for the other flows.
+                    Err(_) => break,
+                };
+                ServerStats::bump(&stats.packets);
+                let Some((job_id, kind)) = peek_route(&buf[..n]) else {
+                    ServerStats::bump(&stats.decode_errors);
+                    continue;
+                };
+                if !slots.contains_key(&job_id) {
+                    // Jobs are born only on Join; everything else gets
+                    // the shared front-door treatment.
+                    if kind != WireKind::Join {
+                        if let Some(reply) = unknown_job_reply(job_id, kind, &stats) {
+                            let _ = socket.send_to(&reply, from);
+                        }
+                        continue;
+                    }
+                    if slots.len() >= MAX_JOBS && !evict_unconfigured(&mut slots) {
+                        ServerStats::bump(&stats.jobs_rejected);
+                        continue;
+                    }
+                    slots.insert(
+                        job_id,
+                        Slot {
+                            job: Job::with_budget(
+                                job_id,
+                                profile.clone(),
+                                limits,
+                                Arc::clone(&budget),
+                                Arc::clone(&stats),
+                            ),
+                            lane: chaos
+                                .map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64)),
+                            armed: None,
+                        },
+                    );
+                }
+                let slot = slots.get_mut(&job_id).expect("slot just ensured");
+                match decode_frame(&buf[..n]) {
+                    Ok(frame) => {
+                        let outp = slot.job.handle(&frame, from, now);
+                        transmit(&socket, &mut slot.lane, outp.frames, now);
+                        // Arm the wheel only on the None→Some edge: job
+                        // deadlines never tighten (traffic only pushes
+                        // them out), so one live entry per job suffices
+                        // — a fire re-arms at the then-current deadline.
+                        if let (None, Some(t)) = (slot.armed, outp.timer) {
+                            wheel.insert(t, job_id);
+                            slot.armed = Some(t);
+                        }
+                    }
+                    Err(_) => ServerStats::bump(&stats.decode_errors),
+                }
+            }
+        }
+
+        // ---- fire due timers -------------------------------------------
+        let now = Instant::now();
+        for job_id in wheel.pop_due(now) {
+            let Some(slot) = slots.get_mut(&job_id) else {
+                continue; // evicted since arming
+            };
+            if slot.armed.is_none() {
+                continue; // stale entry (job re-admitted after eviction)
+            }
+            slot.armed = None;
+            ServerStats::bump(&stats.idle_wakeups);
+            // `on_tick` may run a wheel-granularity early for the job's
+            // true deadline; it reaps only what is actually overdue and
+            // returns the next deadline, which we re-arm.
+            let outp = slot.job.on_tick(now);
+            transmit(&socket, &mut slot.lane, outp.frames, now);
+            if let Some(t) = outp.timer {
+                wheel.insert(t, job_id);
+                slot.armed = Some(t);
+            }
+        }
+
+        // ---- flush chaos lanes -----------------------------------------
+        for slot in slots.values_mut() {
+            if let Some(l) = slot.lane.as_mut() {
+                for (pkt, to) in l.flush_due(now) {
+                    let _ = socket.send_to(&pkt, to);
+                }
+            }
+        }
+    }
+}
+
+/// Drop one slot whose job was never configured by a valid `Join`.
+/// Returns false when every resident job is real (the cap then holds).
+/// The dropped `Job` releases any budget reservation on drop.
+fn evict_unconfigured(slots: &mut HashMap<u32, Slot>) -> bool {
+    let victim =
+        slots.iter().find(|(_, s)| !s.job.is_configured()).map(|(&id, _)| id);
+    match victim {
+        Some(id) => {
+            slots.remove(&id);
+            true
+        }
+        None => false,
+    }
+}

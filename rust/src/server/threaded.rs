@@ -1,0 +1,210 @@
+//! Thread-per-job I/O backend: one dispatch thread owns the socket's
+//! receive side and routes datagrams by job id (a cheap
+//! [`crate::wire::peek_route`] — no checksum work on the hot thread) to
+//! per-job worker threads over mpsc channels. Each worker owns its
+//! [`Job`] exclusively (no locks on the aggregation path) and transmits
+//! the [`crate::server::JobOutput`] frames through a cloned socket
+//! handle. Jobs are therefore concurrent with each other and serialized
+//! internally — the same discipline a switch pipeline imposes per
+//! register block.
+//!
+//! Workers are event-driven, not polled: each blocks on its channel
+//! until traffic arrives, the job's own timer deadline expires (idle
+//! register reclamation — counted in `ServerStats::idle_wakeups`), or an
+//! attached chaos lane is holding reordered copies that need a flush
+//! tick. An idle job costs zero wakeups.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, UdpSocket};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::configx::PsProfile;
+use crate::net::chaos::ChaosLane;
+use crate::server::daemon::{transmit, unknown_job_reply, BackendShared, MAX_JOBS};
+use crate::server::job::{Job, JobLimits};
+use crate::server::{HostBudget, ServerStats};
+use crate::wire::{decode_frame, peek_route, WireKind};
+
+type WorkerTx = Sender<(Vec<u8>, SocketAddr)>;
+
+/// One spawned job worker: its input channel, its thread handle, and
+/// whether its `Job` has been configured by a valid `Join` (unconfigured
+/// workers are the eviction candidates under cap pressure).
+struct WorkerSlot {
+    tx: WorkerTx,
+    handle: JoinHandle<()>,
+    configured: Arc<AtomicBool>,
+}
+
+/// How often a worker whose chaos lane is holding reordered copies wakes
+/// to flush the overdue ones. Lanes with nothing held cost no wakeups.
+const CHAOS_TICK: Duration = Duration::from_millis(10);
+
+pub(crate) fn dispatch_loop(socket: UdpSocket, shared: BackendShared) {
+    let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget } = shared;
+    let mut workers: HashMap<u32, WorkerSlot> = HashMap::new();
+    let mut buf = vec![0u8; 65536];
+    while !stop.load(Ordering::SeqCst) {
+        let (n, from) = match socket.recv_from(&mut buf) {
+            Ok(ok) => ok,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        };
+        ServerStats::bump(&stats.packets);
+        let Some((job_id, kind)) = peek_route(&buf[..n]) else {
+            ServerStats::bump(&stats.decode_errors);
+            continue;
+        };
+        if !workers.contains_key(&job_id) {
+            // Workers are born only on Join; everything else gets the
+            // shared front-door treatment (JoinAck/UNKNOWN for genuine
+            // uplink kinds, silence for downlink spoofs).
+            if kind != WireKind::Join {
+                if let Some(reply) = unknown_job_reply(job_id, kind, &stats) {
+                    let _ = socket.send_to(&reply, from);
+                }
+                continue;
+            }
+            if workers.len() >= MAX_JOBS && !evict_unconfigured(&mut workers) {
+                ServerStats::bump(&stats.jobs_rejected);
+                continue;
+            }
+        }
+        let worker = workers.entry(job_id).or_insert_with(|| {
+            spawn_worker(
+                job_id,
+                &socket,
+                profile.clone(),
+                limits,
+                chaos,
+                chaos_seed,
+                Arc::clone(&stats),
+                Arc::clone(&budget),
+            )
+        });
+        if worker.tx.send((buf[..n].to_vec(), from)).is_err() {
+            // Worker died (should not happen); drop the datagram — the
+            // client's retransmission will respawn it.
+            workers.remove(&job_id);
+        }
+    }
+    for (_, slot) in workers {
+        drop(slot.tx);
+        let _ = slot.handle.join();
+    }
+}
+
+/// Drop one worker whose job was never configured by a valid `Join`.
+/// Returns false when every resident job is real (the cap then holds).
+fn evict_unconfigured(workers: &mut HashMap<u32, WorkerSlot>) -> bool {
+    let victim = workers
+        .iter()
+        .find(|(_, slot)| !slot.configured.load(Ordering::SeqCst))
+        .map(|(&id, _)| id);
+    let Some(id) = victim else {
+        return false;
+    };
+    if let Some(slot) = workers.remove(&id) {
+        drop(slot.tx);
+        let _ = slot.handle.join();
+    }
+    true
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    job_id: u32,
+    socket: &UdpSocket,
+    profile: PsProfile,
+    limits: JobLimits,
+    chaos: Option<crate::net::chaos::ChaosDirection>,
+    chaos_seed: u64,
+    stats: Arc<ServerStats>,
+    budget: Arc<HostBudget>,
+) -> WorkerSlot {
+    let (tx, rx) = mpsc::channel::<(Vec<u8>, SocketAddr)>();
+    let out = socket.try_clone().expect("cloning UDP socket for worker");
+    let configured = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&configured);
+    ServerStats::bump(&stats.workers_spawned);
+    let handle = thread::Builder::new()
+        .name(format!("fediac-job-{job_id}"))
+        .spawn(move || {
+            let mut job = Job::with_budget(job_id, profile, limits, budget, Arc::clone(&stats));
+            // Downlink chaos lane (None = send straight through). Held
+            // copies carry their destination as lane metadata.
+            let mut lane: Option<ChaosLane<SocketAddr>> =
+                chaos.map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64));
+            // The deadline the job most recently asked to be ticked at.
+            let mut timer: Option<Instant> = None;
+            loop {
+                // Sleep until traffic, the job's timer, or (only while a
+                // chaos lane holds reordered copies) the flush tick —
+                // never a fixed polling interval.
+                let chaos_due = lane
+                    .as_ref()
+                    .and_then(|l| (l.held_len() > 0).then(|| Instant::now() + CHAOS_TICK));
+                let deadline = match (timer, chaos_due) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                let msg = match deadline {
+                    None => match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    },
+                    Some(d) => {
+                        let wait = d.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(wait) {
+                            Ok(m) => Some(m),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                };
+                let now = Instant::now();
+                // An overdue job deadline fires regardless of how the
+                // wait ended: `recv_timeout(0)` keeps returning frames
+                // while the channel is non-empty, so a sustained flood
+                // (e.g. unauthenticated Polls) must not defer idle
+                // register reclamation forever. Chaos flush ticks are
+                // not idle wakeups; only the job's own deadline is.
+                if timer.is_some_and(|t| t <= now) {
+                    ServerStats::bump(&stats.idle_wakeups);
+                    let outp = job.on_tick(now);
+                    transmit(&out, &mut lane, outp.frames, now);
+                    timer = outp.timer;
+                }
+                if let Some((datagram, from)) = msg {
+                    match decode_frame(&datagram) {
+                        Ok(frame) => {
+                            let outp = job.handle(&frame, from, now);
+                            transmit(&out, &mut lane, outp.frames, now);
+                            timer = outp.timer;
+                            if !flag.load(Ordering::SeqCst) && job.is_configured() {
+                                flag.store(true, Ordering::SeqCst);
+                            }
+                        }
+                        Err(_) => ServerStats::bump(&stats.decode_errors),
+                    }
+                }
+                if let Some(l) = lane.as_mut() {
+                    for (pkt, to) in l.flush_due(Instant::now()) {
+                        let _ = out.send_to(&pkt, to);
+                    }
+                }
+            }
+        })
+        .expect("spawning job worker");
+    WorkerSlot { tx, handle, configured }
+}

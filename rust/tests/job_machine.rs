@@ -1,0 +1,320 @@
+//! Table-driven tests of the sans-I/O [`Job`] state machine: frame
+//! sequences fed straight into `Job::handle` — **no sockets, no
+//! threads, no clock** — with the expected transmissions checked step by
+//! step. Locks in the behaviours PROTOCOL.md §5–§7 specify: the
+//! empty-consensus round closing at phase 1, duplicate/spill discipline
+//! under register pressure, and re-serve budget exhaustion
+//! (anti-reflection).
+
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fediac::configx::PsProfile;
+use fediac::server::{Job, JobLimits, ServerStats};
+use fediac::util::BitVec;
+use fediac::wire::{
+    decode_frame, encode_frame, update_chunks, vote_chunks, Header, JobSpec, ShardPlan, WireKind,
+};
+
+fn addr(port: u16) -> SocketAddr {
+    format!("127.0.0.1:{port}").parse().unwrap()
+}
+
+fn mkspec(d: u32, n_clients: u16, threshold_a: u16, payload_budget: u16) -> JobSpec {
+    JobSpec { d, n_clients, threshold_a, payload_budget, shard: ShardPlan::single() }
+}
+
+fn profile(memory: usize) -> PsProfile {
+    PsProfile { memory_bytes: memory, ..PsProfile::high() }
+}
+
+fn join_frame(job: u32, client: u16, spec: &JobSpec) -> Vec<u8> {
+    encode_frame(&Header::control(WireKind::Join, job, client, 0, 0), &spec.encode())
+}
+
+fn vote_frame(job: u32, client: u16, round: u32, bits: &BitVec, spec: &JobSpec, block: usize) -> Vec<u8> {
+    let chunks = vote_chunks(bits, spec.payload_budget as usize);
+    let (dims, bytes) = &chunks[block];
+    encode_frame(
+        &Header {
+            kind: WireKind::Vote,
+            client,
+            job,
+            round,
+            block: block as u32,
+            n_blocks: chunks.len() as u32,
+            elems: *dims as u32,
+            aux: 1.0f32.to_bits(),
+        },
+        bytes,
+    )
+}
+
+fn update_frame(
+    job: u32,
+    client: u16,
+    round: u32,
+    lanes: &[i32],
+    spec: &JobSpec,
+    block: usize,
+) -> Vec<u8> {
+    let chunks = update_chunks(lanes, spec.payload_budget as usize);
+    let (n, bytes) = &chunks[block];
+    encode_frame(
+        &Header {
+            kind: WireKind::Update,
+            client,
+            job,
+            round,
+            block: block as u32,
+            n_blocks: chunks.len() as u32,
+            elems: *n as u32,
+            aux: 0,
+        },
+        bytes,
+    )
+}
+
+fn poll_frame(job: u32, client: u16, round: u32, want: WireKind) -> Vec<u8> {
+    encode_frame(
+        &Header {
+            kind: WireKind::Poll,
+            client,
+            job,
+            round,
+            block: 0,
+            n_blocks: 0,
+            elems: 0,
+            aux: want as u32,
+        },
+        &[],
+    )
+}
+
+/// What one step of a script must transmit.
+enum Expect {
+    /// No datagrams at all.
+    Silence,
+    /// Exactly these kinds, in multiset terms (order-free — multicast
+    /// fan-out order is an implementation detail).
+    Kinds(&'static [WireKind]),
+}
+
+struct Step {
+    desc: &'static str,
+    datagram: Vec<u8>,
+    from: SocketAddr,
+    expect: Expect,
+}
+
+/// Feed a script into the job and check each step's transmissions.
+fn run_script(job: &mut Job, steps: Vec<Step>) {
+    let now = Instant::now();
+    for step in steps {
+        let frame = decode_frame(&step.datagram).expect(step.desc);
+        let out = job.handle(&frame, step.from, now);
+        let mut kinds: Vec<WireKind> = out
+            .frames
+            .iter()
+            .map(|(bytes, _)| decode_frame(bytes).expect(step.desc).header.kind)
+            .collect();
+        match step.expect {
+            Expect::Silence => {
+                assert!(kinds.is_empty(), "{}: expected silence, sent {kinds:?}", step.desc)
+            }
+            Expect::Kinds(want) => {
+                let mut want: Vec<WireKind> = want.to_vec();
+                let sort = |v: &mut Vec<WireKind>| v.sort_by_key(|k| *k as u8);
+                sort(&mut kinds);
+                sort(&mut want);
+                assert_eq!(kinds, want, "{}: wrong transmissions", step.desc);
+            }
+        }
+    }
+}
+
+fn stat(counter: &std::sync::atomic::AtomicU64) -> u64 {
+    counter.load(Ordering::Relaxed)
+}
+
+#[test]
+fn empty_consensus_round_closes_at_phase_one() {
+    // PROTOCOL §5: a = N = 2 with disjoint votes → empty GIA; the
+    // completion multicast must carry BOTH the GIA and the zero-lane
+    // aggregate (to each of the 2 clients), and the round is closed —
+    // late updates are duplicates, polls re-serve.
+    let spec = mkspec(64, 2, 2, 8);
+    let stats = Arc::new(ServerStats::default());
+    let mut job = Job::with_limits(9, profile(1 << 20), JobLimits::default(), Arc::clone(&stats));
+    let v0 = BitVec::from_indices(64, &[1, 2]);
+    let v1 = BitVec::from_indices(64, &[10, 20]);
+    run_script(
+        &mut job,
+        vec![
+            Step {
+                desc: "client 0 joins",
+                datagram: join_frame(9, 0, &spec),
+                from: addr(4000),
+                expect: Expect::Kinds(&[WireKind::JoinAck]),
+            },
+            Step {
+                desc: "client 1 joins",
+                datagram: join_frame(9, 1, &spec),
+                from: addr(4001),
+                expect: Expect::Kinds(&[WireKind::JoinAck]),
+            },
+            Step {
+                desc: "first vote: phase 1 incomplete",
+                datagram: vote_frame(9, 0, 0, &v0, &spec, 0),
+                from: addr(4000),
+                expect: Expect::Silence,
+            },
+            Step {
+                desc: "second vote: empty consensus multicasts GIA + empty aggregate",
+                datagram: vote_frame(9, 1, 0, &v1, &spec, 0),
+                from: addr(4001),
+                expect: Expect::Kinds(&[
+                    WireKind::Gia,
+                    WireKind::Gia,
+                    WireKind::Aggregate,
+                    WireKind::Aggregate,
+                ]),
+            },
+            Step {
+                desc: "zero-lane update after the close is a duplicate",
+                datagram: update_frame(9, 0, 0, &[], &spec, 0),
+                from: addr(4000),
+                expect: Expect::Silence,
+            },
+            Step {
+                desc: "poll re-serves the empty aggregate to the asker only",
+                datagram: poll_frame(9, 0, 0, WireKind::Aggregate),
+                from: addr(4000),
+                expect: Expect::Kinds(&[WireKind::Aggregate]),
+            },
+        ],
+    );
+    assert_eq!(job.round_gia(0).unwrap().count_ones(), 0);
+    assert_eq!(job.round_aggregate(0), Some(&[][..]), "round did not close");
+    assert_eq!(stat(&stats.rounds_completed), 1);
+    assert_eq!(stat(&stats.duplicates), 1);
+}
+
+#[test]
+fn duplicate_spill_is_deduped_and_capped() {
+    // PROTOCOL §7: with one resident 64-dim wave (200 B of registers)
+    // and a spill budget clamped to 16 entries, out-of-window blocks
+    // spill once each, retransmissions of spilled blocks are duplicates
+    // (never re-buffered), and blocks beyond the cap are dropped.
+    let spec = mkspec(64 * 40, 2, 2, 8);
+    let stats = Arc::new(ServerStats::default());
+    let limits = JobLimits { spill_bytes: 1, ..JobLimits::default() };
+    let mut job = Job::with_limits(9, profile(200), limits, Arc::clone(&stats));
+    let v = BitVec::from_indices(spec.d as usize, &[1]);
+    let mut steps = vec![Step {
+        desc: "client 0 joins",
+        datagram: join_frame(9, 0, &spec),
+        from: addr(4000),
+        expect: Expect::Kinds(&[WireKind::JoinAck]),
+    }];
+    // Blocks 1..=20 all land beyond the (stalled-at-0) window.
+    for block in 1..=20 {
+        steps.push(Step {
+            desc: "out-of-window block spills or drops at the cap",
+            datagram: vote_frame(9, 0, 0, &v, &spec, block),
+            from: addr(4000),
+            expect: Expect::Silence,
+        });
+    }
+    // Retransmissions of an already-spilled block are duplicates.
+    steps.push(Step {
+        desc: "retransmitted spilled block is a duplicate",
+        datagram: vote_frame(9, 0, 0, &v, &spec, 1),
+        from: addr(4000),
+        expect: Expect::Silence,
+    });
+    run_script(&mut job, steps);
+    assert_eq!(stat(&stats.spilled), 16, "spill cap must clamp to 16 entries");
+    assert_eq!(stat(&stats.spill_dropped), 4, "beyond-cap blocks must drop");
+    assert_eq!(stat(&stats.duplicates), 1, "re-spill must dedup");
+}
+
+#[test]
+fn reserve_budget_exhaustion_suppresses_reflection() {
+    // PROTOCOL §6–§7: only Poll triggers a re-serve; each source gets
+    // `reserve_budget` full-set re-serves per round (4× for addresses
+    // registered through Join), after which the server goes silent.
+    let spec = mkspec(64, 2, 1, 8);
+    let stats = Arc::new(ServerStats::default());
+    let limits = JobLimits { reserve_budget: 2, ..JobLimits::default() };
+    let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
+    let v = BitVec::from_indices(64, &[1, 2]);
+    let spoofed = addr(6666);
+    let mut steps = vec![
+        Step {
+            desc: "client 0 joins",
+            datagram: join_frame(9, 0, &spec),
+            from: addr(4000),
+            expect: Expect::Kinds(&[WireKind::JoinAck]),
+        },
+        Step {
+            desc: "client 1 joins",
+            datagram: join_frame(9, 1, &spec),
+            from: addr(4001),
+            expect: Expect::Kinds(&[WireKind::JoinAck]),
+        },
+        Step {
+            desc: "vote 0",
+            datagram: vote_frame(9, 0, 0, &v, &spec, 0),
+            from: addr(4000),
+            expect: Expect::Silence,
+        },
+        Step {
+            desc: "vote 1 completes phase 1 (a=1): GIA to both clients",
+            datagram: vote_frame(9, 1, 0, &v, &spec, 0),
+            from: addr(4001),
+            expect: Expect::Kinds(&[WireKind::Gia, WireKind::Gia]),
+        },
+        Step {
+            desc: "late data frame reflects nothing",
+            datagram: vote_frame(9, 0, 0, &v, &spec, 0),
+            from: spoofed,
+            expect: Expect::Silence,
+        },
+    ];
+    // A spoofed source gets exactly `reserve_budget` re-serves.
+    for expect in [
+        Expect::Kinds(&[WireKind::Gia][..]),
+        Expect::Kinds(&[WireKind::Gia][..]),
+        Expect::Silence,
+        Expect::Silence,
+    ] {
+        steps.push(Step {
+            desc: "spoofed poll against the re-serve budget",
+            datagram: poll_frame(9, 0, 0, WireKind::Gia),
+            from: spoofed,
+            expect,
+        });
+    }
+    // Join-registered sources keep 4× headroom: 8 polls all serve.
+    for _ in 0..8 {
+        steps.push(Step {
+            desc: "registered client re-serve within 4x budget",
+            datagram: poll_frame(9, 0, 0, WireKind::Gia),
+            from: addr(4000),
+            expect: Expect::Kinds(&[WireKind::Gia]),
+        });
+    }
+    // The 9th registered poll exhausts 4 × 2 and goes silent too.
+    steps.push(Step {
+        desc: "registered client beyond 4x budget",
+        datagram: poll_frame(9, 0, 0, WireKind::Gia),
+        from: addr(4000),
+        expect: Expect::Silence,
+    });
+    run_script(&mut job, steps);
+    assert_eq!(stat(&stats.reserves_suppressed), 3);
+    assert_eq!(stat(&stats.joins), 2);
+}

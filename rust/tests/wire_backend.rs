@@ -1,0 +1,348 @@
+//! I/O-backend equivalence tests: the threaded (thread-per-job) and
+//! reactor (single-thread event loop) backends must be **bit-exact**
+//! with each other and with the in-process `algorithms::fediac`
+//! simulation — single-server and N=2 sharded, clean and under
+//! both-direction chaos. Plus the reactor's whole point: ≥ 64 concurrent
+//! jobs served correctly from one thread with zero per-job spawns
+//! (asserted through `ServerStats::workers_spawned`).
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use fediac::algorithms::{common, fediac::FediAc, Algorithm};
+use fediac::client::{
+    protocol, ClientOptions, FediacClient, RoundOutcome, ShardedFediacClient,
+};
+use fediac::compress::{self, deduce_gia};
+use fediac::configx::{DatasetKind, ExperimentConfig, Partition, PsProfile};
+use fediac::data::synth;
+use fediac::fl::{FlEnv, NativeBackend};
+use fediac::net::{ChaosConfig, ChaosDirection};
+use fediac::server::{serve, serve_sharded, IoBackend, ServeOptions};
+use fediac::util::{BitVec, Rng};
+
+const N_CLIENTS: usize = 4;
+const BACKENDS: [IoBackend; 2] = [IoBackend::Threaded, IoBackend::Reactor];
+
+// ---- simulation harness (the wire_loopback recipe) ------------------------
+
+fn make_env(seed: u64, n_switches: usize) -> FlEnv {
+    let cfg = ExperimentConfig {
+        num_clients: N_CLIENTS,
+        num_switches: n_switches,
+        seed,
+        ..ExperimentConfig::preset(DatasetKind::Tiny, Partition::Iid)
+    };
+    let fd = synth::generate(cfg.dataset, cfg.partition, N_CLIENTS, 40, cfg.seed);
+    let backend = Box::new(NativeBackend::new(fd, 16, cfg.local_iters, 8, cfg.seed));
+    let mut env = FlEnv::new(cfg, backend);
+    env.init_model();
+    env
+}
+
+struct SimRound {
+    seed: u64,
+    d: usize,
+    k: usize,
+    threshold_a: u16,
+    bits_b: usize,
+    updates: Vec<Vec<f32>>,
+    params_before: Vec<f32>,
+    params_after: Vec<f32>,
+}
+
+/// Bootstrap + round 1 of the simulated FediAC (with `n_switches`
+/// collaborating PSes), capturing round-1 inputs and the ground truth.
+fn run_sim_round(seed: u64, n_switches: usize) -> SimRound {
+    let mut env = make_env(seed, n_switches);
+    let mut alg = FediAc::new(&env.cfg, env.d());
+    alg.run_round(&mut env, 0).unwrap();
+    let params_before = env.params.clone();
+    let bits_b = alg.bits().expect("bootstrap sets b");
+    alg.run_round(&mut env, 1).unwrap();
+    let params_after = env.params.clone();
+
+    let mut env2 = make_env(seed, n_switches);
+    let mut alg2 = FediAc::new(&env2.cfg, env2.d());
+    alg2.run_round(&mut env2, 0).unwrap();
+    assert_eq!(env2.params, params_before, "twin env diverged in bootstrap");
+    let d = env2.d();
+    let lr = env2.cfg.lr.at(1) as f32;
+    let zero_residuals = vec![vec![0.0f32; d]; N_CLIENTS];
+    let local = common::local_training(&mut env2, 1, lr, Some(&zero_residuals));
+
+    SimRound {
+        seed,
+        d,
+        k: protocol::votes_per_client(d, env2.cfg.fediac.k_frac),
+        threshold_a: env2.cfg.fediac.threshold_a as u16,
+        bits_b,
+        updates: local.updates,
+        params_before,
+        params_after,
+    }
+}
+
+fn client_opts(server: String, job: u32, id: u16, sim: &SimRound) -> ClientOptions {
+    let mut opts = ClientOptions::new(server, job, id, sim.d, N_CLIENTS as u16);
+    opts.threshold_a = sim.threshold_a;
+    opts.k = sim.k;
+    opts.bits_b = sim.bits_b;
+    opts.backend_seed = sim.seed;
+    opts.payload_budget = 16; // enough blocks to exercise chunking
+    opts.timeout = Duration::from_millis(300);
+    opts.max_retries = 200;
+    opts
+}
+
+/// Run the 4 clients of one job concurrently against one daemon.
+fn run_clients_plain(server: SocketAddr, job: u32, sim: &SimRound) -> Vec<RoundOutcome> {
+    let mut outcomes: Vec<Option<RoundOutcome>> = (0..N_CLIENTS).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (i, slot) in outcomes.iter_mut().enumerate() {
+            let update = &sim.updates[i];
+            scope.spawn(move || {
+                let opts = client_opts(server.to_string(), job, i as u16, sim);
+                let mut client = FediacClient::connect(opts).unwrap();
+                *slot = Some(client.run_round(1, update).unwrap());
+            });
+        }
+    });
+    outcomes.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run the 4 clients of one job against a sharded endpoint list.
+fn run_clients_sharded(servers: &[String], job: u32, sim: &SimRound) -> Vec<RoundOutcome> {
+    let mut outcomes: Vec<Option<RoundOutcome>> = (0..N_CLIENTS).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (i, slot) in outcomes.iter_mut().enumerate() {
+            let update = &sim.updates[i];
+            scope.spawn(move || {
+                let opts = client_opts(servers[0].clone(), job, i as u16, sim);
+                let mut client = ShardedFediacClient::connect(servers, opts).unwrap();
+                *slot = Some(client.run_round(1, update).unwrap());
+            });
+        }
+    });
+    outcomes.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Every client must agree; the applied round must reproduce the
+/// simulated post-round model bit-for-bit.
+fn assert_matches_sim(outcomes: &[RoundOutcome], sim: &SimRound, label: &str) {
+    for o in outcomes.iter().skip(1) {
+        assert_eq!(o.gia, outcomes[0].gia, "{label}: GIA differs across clients");
+        assert_eq!(
+            o.aggregate, outcomes[0].aggregate,
+            "{label}: aggregate differs across clients"
+        );
+    }
+    assert!(!outcomes[0].gia_indices.is_empty(), "{label}: empty consensus");
+    let m = common::global_max_abs(&sim.updates);
+    assert_eq!(outcomes[0].global_max, m, "{label}: global max differs");
+    let mut params = sim.params_before.clone();
+    outcomes[0].apply(&mut params);
+    assert_eq!(params, sim.params_after, "{label}: diverged from algorithms::fediac");
+}
+
+// ---- single server, clean -------------------------------------------------
+
+#[test]
+fn backends_bit_exact_single_server_vs_simulation() {
+    let sim = run_sim_round(7, 1);
+    let mut per_backend: Vec<Vec<RoundOutcome>> = Vec::new();
+    for backend in BACKENDS {
+        let handle =
+            serve(&ServeOptions { io_backend: backend, ..ServeOptions::default() }).unwrap();
+        let outcomes = run_clients_plain(handle.local_addr(), 501, &sim);
+        assert_matches_sim(&outcomes, &sim, backend.name());
+        let stats = handle.stats();
+        assert_eq!(stats.jobs_created, 1);
+        assert_eq!(stats.rounds_completed, 1, "{} backend", backend.name());
+        if backend == IoBackend::Reactor {
+            assert_eq!(stats.workers_spawned, 0, "reactor spawned a worker");
+        }
+        handle.shutdown();
+        per_backend.push(outcomes);
+    }
+    // Backend vs backend, client by client.
+    for (a, b) in per_backend[0].iter().zip(&per_backend[1]) {
+        assert_eq!(a.gia, b.gia, "threaded and reactor GIAs differ");
+        assert_eq!(a.aggregate, b.aggregate, "threaded and reactor aggregates differ");
+        assert_eq!(a.global_max, b.global_max);
+    }
+}
+
+// ---- N=2 sharded, clean ---------------------------------------------------
+
+#[test]
+fn backends_bit_exact_sharded_n2_vs_simulation() {
+    let sim = run_sim_round(21, 2);
+    let mut per_backend: Vec<Vec<RoundOutcome>> = Vec::new();
+    for backend in BACKENDS {
+        let handles = serve_sharded(
+            &ServeOptions { io_backend: backend, ..ServeOptions::default() },
+            2,
+        )
+        .unwrap();
+        let servers: Vec<String> =
+            handles.iter().map(|h| h.local_addr().to_string()).collect();
+        let outcomes = run_clients_sharded(&servers, 502, &sim);
+        assert_matches_sim(&outcomes, &sim, &format!("sharded {}", backend.name()));
+        for (s, h) in handles.iter().enumerate() {
+            let stats = h.stats();
+            assert_eq!(stats.rounds_completed, 1, "shard {s} under {}", backend.name());
+            if backend == IoBackend::Reactor {
+                assert_eq!(stats.workers_spawned, 0, "shard {s} spawned a worker");
+            }
+        }
+        for h in handles {
+            h.shutdown();
+        }
+        per_backend.push(outcomes);
+    }
+    for (a, b) in per_backend[0].iter().zip(&per_backend[1]) {
+        assert_eq!(a.gia, b.gia, "sharded: threaded and reactor GIAs differ");
+        assert_eq!(a.aggregate, b.aggregate, "sharded: aggregates differ");
+    }
+}
+
+// ---- chaos (both directions), synthetic reference -------------------------
+
+fn synthetic_update(seed: u64, d: usize, client: usize, round: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ (client as u64) << 16 ^ (round as u64) << 40);
+    (0..d).map(|_| (rng.gaussian() * 0.02) as f32).collect()
+}
+
+fn reference_round(
+    updates: &[Vec<f32>],
+    seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+) -> (Vec<usize>, Vec<i32>) {
+    let votes: Vec<BitVec> = updates
+        .iter()
+        .enumerate()
+        .map(|(i, u)| protocol::client_vote(u, k, seed, round, i))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = updates.iter().map(|u| compress::max_abs(u)).fold(f32::MIN_POSITIVE, f32::max);
+    let f = compress::scale_factor(12, updates.len(), m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    for (i, u) in updates.iter().enumerate() {
+        let (q, _) = protocol::client_quantize(u, &mask, f, seed, round, i);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+    }
+    (indices, lanes)
+}
+
+#[test]
+fn backends_bit_exact_under_both_direction_chaos() {
+    // 15% loss / 10% dup / 25% reorder on the client's both-direction
+    // proxy, PLUS a 10% downlink-drop lane inside the daemon itself.
+    // Chaos may cost retransmissions, never bits — under either backend.
+    let d = 600;
+    let seed = 99u64;
+    let k = protocol::votes_per_client(d, 0.05);
+    const ROUNDS: usize = 3;
+    for backend in BACKENDS {
+        let handle = serve(&ServeOptions {
+            downlink_chaos: Some(ChaosDirection::lossy(0.10, 0.0, 0.0)),
+            chaos_seed: 11,
+            io_backend: backend,
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let server = handle.local_addr();
+        std::thread::scope(|scope| {
+            for client_id in 0..N_CLIENTS {
+                scope.spawn(move || {
+                    let mut opts =
+                        ClientOptions::new(server.to_string(), 73, client_id as u16, d, N_CLIENTS as u16);
+                    opts.threshold_a = 2;
+                    opts.k = k;
+                    opts.backend_seed = seed;
+                    opts.payload_budget = 64;
+                    opts.timeout = Duration::from_millis(150);
+                    opts.max_retries = 400;
+                    opts.chaos = Some(ChaosConfig::symmetric(
+                        5 + client_id as u64,
+                        ChaosDirection::lossy(0.15, 0.10, 0.25),
+                    ));
+                    let mut client = FediacClient::connect(opts).unwrap();
+                    for round in 1..=ROUNDS {
+                        let update = synthetic_update(seed, d, client_id, round);
+                        let out = client.run_round(round, &update).unwrap();
+                        let updates: Vec<Vec<f32>> = (0..N_CLIENTS)
+                            .map(|c| synthetic_update(seed, d, c, round))
+                            .collect();
+                        let (ref_idx, ref_lanes) =
+                            reference_round(&updates, seed, round, k, 2);
+                        assert_eq!(
+                            out.gia_indices,
+                            ref_idx,
+                            "{} client {client_id} round {round}: consensus diverged",
+                            backend.name()
+                        );
+                        assert_eq!(
+                            out.aggregate,
+                            ref_lanes,
+                            "{} client {client_id} round {round}: aggregate diverged",
+                            backend.name()
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(handle.stats().rounds_completed as usize, ROUNDS);
+        handle.shutdown();
+    }
+}
+
+// ---- reactor scale: 64 jobs, one thread -----------------------------------
+
+#[test]
+fn reactor_serves_64_jobs_from_one_thread() {
+    const JOBS: usize = 64;
+    let d = 256;
+    let handle = serve(&ServeOptions {
+        io_backend: IoBackend::Reactor,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let server = handle.local_addr();
+    std::thread::scope(|scope| {
+        for job in 0..JOBS {
+            scope.spawn(move || {
+                let seed = 1000 + job as u64;
+                let mut opts =
+                    ClientOptions::new(server.to_string(), 7000 + job as u32, 0, d, 1);
+                opts.threshold_a = 1;
+                opts.backend_seed = seed;
+                opts.payload_budget = 64;
+                opts.timeout = Duration::from_millis(300);
+                opts.max_retries = 100;
+                let k = opts.k;
+                let mut client = FediacClient::connect(opts).unwrap();
+                let update = synthetic_update(seed, d, 0, 1);
+                let out = client.run_round(1, &update).unwrap();
+                // N = 1, a = 1: the GIA is exactly this client's votes.
+                let votes = protocol::client_vote(&update, k, seed, 1, 0);
+                assert_eq!(out.gia, votes, "job {job}: wrong consensus");
+            });
+        }
+    });
+    let stats = handle.stats();
+    assert_eq!(stats.jobs_created as usize, JOBS, "not every job was hosted");
+    assert_eq!(stats.rounds_completed as usize, JOBS, "not every round completed");
+    assert_eq!(
+        stats.workers_spawned, 0,
+        "the reactor must not spawn per-job workers"
+    );
+    handle.shutdown();
+}
