@@ -1,0 +1,382 @@
+//! `fediac bench-codec`: microbenchmarks of the data-plane hot-path
+//! kernels, each measured against its scalar reference oracle **in the
+//! same run** — the codec-level perf baseline the wire benches build on.
+//!
+//! Four kernel pairs plus the frame emitter:
+//!
+//! * `golomb_encode` / `golomb_decode` — word-parallel bit I/O
+//!   ([`crate::compress::golomb`]) vs the per-bit `scalar` oracle;
+//! * `vote_absorb` — [`crate::switch::alu::add_vote_bits`] (set-bit
+//!   iteration over u64 words) vs the per-bit walk;
+//! * `lane_add` — [`crate::switch::alu::add_i32_sat`] (branchless
+//!   autovectorizable saturation) vs the branching loop;
+//! * `threshold` — [`crate::switch::alu::threshold_votes`] word packing
+//!   vs per-bit read-modify-write;
+//! * `frame_encode` — pooled [`crate::wire::FrameScratch`] emission vs a
+//!   fresh allocation per frame, asserting `pool_misses == 0` once warm.
+//!
+//! Emits `BENCH_CODEC.json` (CI runs `--smoke` so the perf trajectory
+//! accumulates next to `BENCH_WIRE.json`).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compress::golomb;
+use crate::switch::alu;
+use crate::util::{BitVec, Rng};
+use crate::wire::{encode_frame, FrameScratch, Header, WireKind};
+
+/// Workload shape for one bench-codec run.
+#[derive(Debug, Clone)]
+pub struct BenchCodecOptions {
+    /// Model dimension d for bitmaps / counters / lane vectors.
+    pub d: usize,
+    /// Vote density (the paper's phase-1 k/d; 0.05 default).
+    pub density: f64,
+    /// Timed iterations per kernel (after warm-up).
+    pub iters: usize,
+    /// Payload bytes per frame in the frame-encode bench.
+    pub payload_budget: usize,
+    /// Frames emitted per iteration of the frame-encode bench.
+    pub frames_per_iter: usize,
+    /// Seed for the synthetic bitmaps and lane vectors.
+    pub seed: u64,
+}
+
+impl Default for BenchCodecOptions {
+    fn default() -> Self {
+        BenchCodecOptions {
+            d: 1 << 20,
+            density: 0.05,
+            iters: 40,
+            payload_budget: 1408,
+            frames_per_iter: 64,
+            seed: 7,
+        }
+    }
+}
+
+impl BenchCodecOptions {
+    /// Tiny CI-friendly workload (`fediac bench-codec --smoke`).
+    pub fn smoke() -> Self {
+        BenchCodecOptions { d: 1 << 16, iters: 8, ..BenchCodecOptions::default() }
+    }
+}
+
+/// One kernel's fast-vs-oracle measurement.
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    /// Kernel name (`golomb_decode`, `vote_absorb`, …).
+    pub name: &'static str,
+    /// Logical elements processed per iteration (bits or lanes).
+    pub elems_per_iter: usize,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Wall seconds for the word-parallel kernel.
+    pub fast_s: f64,
+    /// Wall seconds for the scalar oracle over the identical input.
+    pub scalar_s: f64,
+    /// `scalar_s / fast_s` — the headline speedup.
+    pub speedup: f64,
+    /// Word-parallel throughput in mega-elements per second.
+    pub fast_melems_s: f64,
+}
+
+/// The frame-emission measurement (pool vs per-frame allocation).
+#[derive(Debug, Clone)]
+pub struct FrameReport {
+    /// Frames emitted per timed pass.
+    pub frames: usize,
+    /// Wall seconds for pooled emission ([`FrameScratch`]).
+    pub pooled_s: f64,
+    /// Wall seconds for fresh-allocation emission (`encode_frame`).
+    pub alloc_s: f64,
+    /// `alloc_s / pooled_s`.
+    pub speedup: f64,
+    /// Pool misses during the timed (steady-state) passes — the
+    /// allocation-free claim is exactly `== 0`.
+    pub steady_misses: u64,
+    /// Pool hits during the timed passes.
+    pub steady_hits: u64,
+}
+
+/// A full bench-codec run.
+#[derive(Debug, Clone)]
+pub struct BenchCodecReport {
+    /// The workload that produced these numbers.
+    pub opts: BenchCodecOptions,
+    /// One entry per kernel pair.
+    pub kernels: Vec<KernelReport>,
+    /// The frame-emission measurement.
+    pub frame: FrameReport,
+}
+
+impl BenchCodecReport {
+    /// Serialise to the `BENCH_CODEC.json` schema (hand-rolled — the
+    /// crate builds offline without a JSON serializer).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"config\": {{\"d\": {}, \"density\": {}, \"iters\": {}, \
+             \"payload_budget\": {}, \"frames_per_iter\": {}, \"seed\": {}}},\n",
+            self.opts.d,
+            self.opts.density,
+            self.opts.iters,
+            self.opts.payload_budget,
+            self.opts.frames_per_iter,
+            self.opts.seed
+        ));
+        out.push_str("  \"kernels\": [\n");
+        for (i, k) in self.kernels.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"elems_per_iter\": {}, \"iters\": {}, \
+                 \"fast_s\": {:.6}, \"scalar_s\": {:.6}, \"speedup\": {:.2}, \
+                 \"fast_melems_s\": {:.1}}}{}\n",
+                k.name,
+                k.elems_per_iter,
+                k.iters,
+                k.fast_s,
+                k.scalar_s,
+                k.speedup,
+                k.fast_melems_s,
+                if i + 1 < self.kernels.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"frame_encode\": {{\"frames\": {}, \"pooled_s\": {:.6}, \"alloc_s\": {:.6}, \
+             \"speedup\": {:.2}, \"steady_misses\": {}, \"steady_hits\": {}}}\n",
+            self.frame.frames,
+            self.frame.pooled_s,
+            self.frame.alloc_s,
+            self.frame.speedup,
+            self.frame.steady_misses,
+            self.frame.steady_hits
+        ));
+        out.push_str("}\n");
+        out
+    }
+
+    /// Human-readable TSV block (the shape the other `bench_*` targets
+    /// print).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "# bench_codec: d={} density={} iters={} payload={} seed={}\n\
+             kernel\telems/iter\tword_s\tscalar_s\tspeedup\tword_Melems/s\n",
+            self.opts.d, self.opts.density, self.opts.iters, self.opts.payload_budget,
+            self.opts.seed
+        );
+        for k in &self.kernels {
+            out.push_str(&format!(
+                "{}\t{}\t{:.4}\t{:.4}\t{:.2}x\t{:.1}\n",
+                k.name, k.elems_per_iter, k.fast_s, k.scalar_s, k.speedup, k.fast_melems_s
+            ));
+        }
+        out.push_str(&format!(
+            "frame_encode\t{} frames\t{:.4}\t{:.4}\t{:.2}x\tsteady_misses={}\n",
+            self.frame.frames,
+            self.frame.pooled_s,
+            self.frame.alloc_s,
+            self.frame.speedup,
+            self.frame.steady_misses
+        ));
+        out
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` untimed ones.
+fn time_loop(iters: usize, warmup: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_secs_f64().max(f64::EPSILON)
+}
+
+fn paper_bitmap(rng: &mut Rng, d: usize, density: f64) -> BitVec {
+    let mut bv = BitVec::zeros(d);
+    for i in 0..d {
+        if rng.f64() < density {
+            bv.set(i, true);
+        }
+    }
+    bv
+}
+
+fn report(
+    name: &'static str,
+    elems_per_iter: usize,
+    iters: usize,
+    fast_s: f64,
+    scalar_s: f64,
+) -> KernelReport {
+    KernelReport {
+        name,
+        elems_per_iter,
+        iters,
+        fast_s,
+        scalar_s,
+        speedup: scalar_s / fast_s,
+        fast_melems_s: (elems_per_iter as f64 * iters as f64) / fast_s / 1e6,
+    }
+}
+
+/// Run the whole suite and collect the report.
+pub fn run(opts: &BenchCodecOptions) -> Result<BenchCodecReport> {
+    anyhow::ensure!(opts.d > 0 && opts.iters > 0, "d and iters must be > 0");
+    let mut rng = Rng::new(opts.seed);
+    let d = opts.d;
+    let iters = opts.iters;
+    let warmup = (iters / 4).max(1);
+    let bv = paper_bitmap(&mut rng, d, opts.density);
+    let mut kernels = Vec::new();
+
+    // --- golomb encode ---------------------------------------------------
+    let fast_s = time_loop(iters, warmup, || {
+        black_box(golomb::encode(black_box(&bv)));
+    });
+    let scalar_s = time_loop(iters, warmup, || {
+        black_box(golomb::scalar::encode(black_box(&bv)));
+    });
+    kernels.push(report("golomb_encode", d, iters, fast_s, scalar_s));
+
+    // --- golomb decode ---------------------------------------------------
+    let encoded = golomb::encode(&bv);
+    debug_assert_eq!(encoded, golomb::scalar::encode(&bv));
+    let fast_s = time_loop(iters, warmup, || {
+        black_box(golomb::decode_with_limit(black_box(&encoded), d)).unwrap();
+    });
+    let scalar_s = time_loop(iters, warmup, || {
+        black_box(golomb::scalar::decode_with_limit(black_box(&encoded), d)).unwrap();
+    });
+    kernels.push(report("golomb_decode", d, iters, fast_s, scalar_s));
+
+    // --- vote absorb -----------------------------------------------------
+    // Saturating counters, so repeated absorption needs no reset; both
+    // sides chew the identical payload the same number of times.
+    let payload = bv.to_bytes();
+    let mut counters_fast = vec![0u16; d];
+    let mut counters_slow = vec![0u16; d];
+    let fast_s = time_loop(iters, warmup, || {
+        alu::add_vote_bits(black_box(&mut counters_fast), black_box(&payload));
+    });
+    let scalar_s = time_loop(iters, warmup, || {
+        alu::scalar::add_vote_bits(black_box(&mut counters_slow), black_box(&payload));
+    });
+    anyhow::ensure!(counters_fast == counters_slow, "vote kernels diverged in-bench");
+    kernels.push(report("vote_absorb", d, iters, fast_s, scalar_s));
+
+    // --- threshold -------------------------------------------------------
+    let mut gia_fast = vec![0u8; d.div_ceil(8)];
+    let mut gia_slow = vec![0u8; d.div_ceil(8)];
+    let fast_s = time_loop(iters, warmup, || {
+        alu::threshold_votes(black_box(&counters_fast), 3, black_box(&mut gia_fast));
+    });
+    let scalar_s = time_loop(iters, warmup, || {
+        alu::scalar::threshold_votes(black_box(&counters_slow), 3, black_box(&mut gia_slow));
+    });
+    anyhow::ensure!(gia_fast == gia_slow, "threshold kernels diverged in-bench");
+    kernels.push(report("threshold", d, iters, fast_s, scalar_s));
+
+    // --- lane add --------------------------------------------------------
+    let lanes: Vec<i32> = (0..d).map(|_| (rng.next_u32() as i32) >> 12).collect();
+    let mut acc_fast = vec![0i32; d];
+    let mut acc_slow = vec![0i32; d];
+    let fast_s = time_loop(iters, warmup, || {
+        black_box(alu::add_i32_sat(black_box(&mut acc_fast), black_box(&lanes)));
+    });
+    let scalar_s = time_loop(iters, warmup, || {
+        black_box(alu::scalar::add_i32_sat(black_box(&mut acc_slow), black_box(&lanes)));
+    });
+    anyhow::ensure!(acc_fast == acc_slow, "lane kernels diverged in-bench");
+    kernels.push(report("lane_add", d, iters, fast_s, scalar_s));
+
+    // --- frame encode: pooled vs per-frame allocation --------------------
+    let payload: Vec<u8> = (0..opts.payload_budget).map(|_| rng.next_u32() as u8).collect();
+    let header = Header {
+        kind: WireKind::Update,
+        client: 1,
+        job: 7,
+        round: 1,
+        block: 0,
+        n_blocks: 1,
+        elems: (opts.payload_budget / 4) as u32,
+        aux: 0,
+    };
+    fn emit_pooled(
+        pool: &mut FrameScratch,
+        burst: &mut Vec<Vec<u8>>,
+        frames: usize,
+        header: &Header,
+        payload: &[u8],
+    ) {
+        for _ in 0..frames {
+            burst.push(pool.encode(header, payload));
+        }
+        for b in burst.drain(..) {
+            pool.give(b);
+        }
+    }
+    let frames = opts.frames_per_iter;
+    let mut pool = FrameScratch::new();
+    let mut burst: Vec<Vec<u8>> = Vec::with_capacity(frames);
+    // Warm the pool, then zero the counters so the timed passes measure
+    // pure steady state.
+    for _ in 0..warmup {
+        emit_pooled(&mut pool, &mut burst, frames, &header, &payload);
+    }
+    pool.drain_counters();
+    let start = Instant::now();
+    for _ in 0..iters {
+        emit_pooled(&mut pool, &mut burst, frames, &header, &payload);
+    }
+    let pooled_s = start.elapsed().as_secs_f64().max(f64::EPSILON);
+    let (steady_hits, steady_misses) = pool.drain_counters();
+    let alloc_s = time_loop(iters, warmup, || {
+        for _ in 0..frames {
+            black_box(encode_frame(&header, &payload));
+        }
+    });
+    let frame = FrameReport {
+        frames: frames * iters,
+        pooled_s,
+        alloc_s,
+        speedup: alloc_s / pooled_s,
+        steady_misses,
+        steady_hits,
+    };
+
+    Ok(BenchCodecReport { opts: opts.clone(), kernels, frame })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_consistent_report() {
+        let mut opts = BenchCodecOptions::smoke();
+        opts.d = 1 << 12;
+        opts.iters = 2;
+        let rep = run(&opts).unwrap();
+        assert_eq!(rep.kernels.len(), 5);
+        for k in &rep.kernels {
+            assert!(k.fast_s > 0.0 && k.scalar_s > 0.0, "{}", k.name);
+            assert!(k.speedup.is_finite());
+        }
+        assert_eq!(
+            rep.frame.steady_misses, 0,
+            "steady-state frame emission allocated"
+        );
+        assert!(rep.frame.steady_hits > 0);
+        let json = rep.to_json();
+        assert!(json.contains("\"golomb_decode\""));
+        assert!(json.contains("\"steady_misses\": 0"));
+        assert!(rep.render().contains("vote_absorb"));
+    }
+}

@@ -15,9 +15,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::client::{ClientOptions, ClientStats, FediacClient};
+use crate::client::{ClientOptions, ClientStats, FediacClient, ShardedFediacClient};
 use crate::configx::PsProfile;
-use crate::server::{serve, IoBackend, ServeOptions, StatsSnapshot};
+use crate::server::{serve, serve_sharded, IoBackend, ServeOptions, StatsSnapshot};
 use crate::util::Rng;
 use crate::wire::DEFAULT_PAYLOAD_BUDGET;
 
@@ -38,6 +38,11 @@ pub struct BenchWireOptions {
     pub profile: PsProfile,
     /// Backends to measure, in order.
     pub backends: Vec<IoBackend>,
+    /// Collaborating shard servers (1 = a single daemon; N > 1 drives
+    /// `serve_sharded` + the sharded fan-out client and reports
+    /// per-shard stats). `d` at `payload_budget` must give every shard
+    /// at least one vote block.
+    pub shards: u8,
     /// Seed for the synthetic update streams (shared by every client of
     /// a job, as the protocol requires).
     pub seed: u64,
@@ -53,6 +58,7 @@ impl Default for BenchWireOptions {
             payload_budget: DEFAULT_PAYLOAD_BUDGET,
             profile: PsProfile::high(),
             backends: vec![IoBackend::Threaded, IoBackend::Reactor],
+            shards: 1,
             seed: 7,
         }
     }
@@ -88,8 +94,12 @@ pub struct BackendReport {
     pub client_bytes: u64,
     /// Frames retransmitted across all clients (loopback should be ~0).
     pub retransmissions: u64,
-    /// The daemon's counters at the end of the workload.
+    /// Deployment-wide daemon counters (summed across shards).
     pub server: StatsSnapshot,
+    /// Per-shard daemon counters, index = shard id (one entry for an
+    /// unsharded run). Each shard completes every client round, so its
+    /// `rounds_completed / wall_s` is that shard's rounds/s.
+    pub per_shard: Vec<StatsSnapshot>,
 }
 
 /// A full bench run: the workload shape plus one report per backend.
@@ -108,21 +118,38 @@ impl BenchWireReport {
         let mut out = String::from("{\n");
         out.push_str(&format!(
             "  \"config\": {{\"jobs\": {}, \"rounds\": {}, \"clients_per_job\": {}, \
-             \"d\": {}, \"payload_budget\": {}, \"seed\": {}}},\n",
+             \"d\": {}, \"payload_budget\": {}, \"shards\": {}, \"seed\": {}}},\n",
             self.opts.jobs,
             self.opts.rounds,
             self.opts.clients_per_job,
             self.opts.d,
             self.opts.payload_budget,
+            self.opts.shards,
             self.opts.seed
         ));
         out.push_str("  \"backends\": [\n");
         for (i, b) in self.backends.iter().enumerate() {
+            let per_shard: Vec<String> = b
+                .per_shard
+                .iter()
+                .enumerate()
+                .map(|(s, st)| {
+                    format!(
+                        "{{\"shard\": {s}, \"rounds_per_s\": {:.3}, \"packets\": {}, \
+                         \"rounds_completed\": {}, \"pool_misses\": {}}}",
+                        st.rounds_completed as f64 / b.wall_s,
+                        st.packets,
+                        st.rounds_completed,
+                        st.pool_misses
+                    )
+                })
+                .collect();
             out.push_str(&format!(
                 "    {{\"backend\": \"{}\", \"wall_s\": {:.6}, \"rounds_per_s\": {:.3}, \
                  \"bytes_per_round\": {:.1}, \"client_bytes\": {}, \"retransmissions\": {}, \
                  \"server_packets\": {}, \"rounds_completed\": {}, \"workers_spawned\": {}, \
-                 \"idle_wakeups\": {}}}{}\n",
+                 \"idle_wakeups\": {}, \"frames_pooled\": {}, \"pool_misses\": {}, \
+                 \"per_shard\": [{}]}}{}\n",
                 b.backend,
                 b.wall_s,
                 b.rounds_per_s,
@@ -133,6 +160,9 @@ impl BenchWireReport {
                 b.server.rounds_completed,
                 b.server.workers_spawned,
                 b.server.idle_wakeups,
+                b.server.frames_pooled,
+                b.server.pool_misses,
+                per_shard.join(", "),
                 if i + 1 < self.backends.len() { "," } else { "" }
             ));
         }
@@ -144,17 +174,19 @@ impl BenchWireReport {
     /// print).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "# bench_wire: jobs={} rounds={} clients/job={} d={} payload={}\n\
-             backend\twall_s\trounds/s\tbytes/round\tretx\tserver_pkts\tworkers\tidle_wakes\n",
+            "# bench_wire: jobs={} rounds={} clients/job={} d={} payload={} shards={}\n\
+             backend\twall_s\trounds/s\tbytes/round\tretx\tserver_pkts\tworkers\tidle_wakes\
+             \tpool_miss\n",
             self.opts.jobs,
             self.opts.rounds,
             self.opts.clients_per_job,
             self.opts.d,
-            self.opts.payload_budget
+            self.opts.payload_budget,
+            self.opts.shards
         );
         for b in &self.backends {
             out.push_str(&format!(
-                "{}\t{:.3}\t{:.1}\t{:.0}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.3}\t{:.1}\t{:.0}\t{}\t{}\t{}\t{}\t{}\n",
                 b.backend,
                 b.wall_s,
                 b.rounds_per_s,
@@ -162,8 +194,19 @@ impl BenchWireReport {
                 b.retransmissions,
                 b.server.packets,
                 b.server.workers_spawned,
-                b.server.idle_wakeups
+                b.server.idle_wakeups,
+                b.server.pool_misses
             ));
+            if b.per_shard.len() > 1 {
+                for (s, st) in b.per_shard.iter().enumerate() {
+                    out.push_str(&format!(
+                        "  shard{}\t\t{:.1}\t\t\t{}\t\t\n",
+                        s,
+                        st.rounds_completed as f64 / b.wall_s,
+                        st.packets
+                    ));
+                }
+            }
         }
         out
     }
@@ -173,6 +216,11 @@ impl BenchWireReport {
 pub fn run(opts: &BenchWireOptions) -> Result<BenchWireReport> {
     anyhow::ensure!(opts.jobs > 0 && opts.rounds > 0, "jobs and rounds must be > 0");
     anyhow::ensure!(opts.clients_per_job > 0, "clients_per_job must be > 0");
+    anyhow::ensure!(
+        (1..=crate::wire::MAX_SHARDS).contains(&opts.shards),
+        "shards must be in [1, {}]",
+        crate::wire::MAX_SHARDS
+    );
     let mut backends = Vec::with_capacity(opts.backends.len());
     for &backend in &opts.backends {
         backends.push(run_backend(opts, backend)?);
@@ -181,26 +229,34 @@ pub fn run(opts: &BenchWireOptions) -> Result<BenchWireReport> {
 }
 
 fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendReport> {
-    let handle = serve(&ServeOptions {
+    let serve_opts = ServeOptions {
         profile: opts.profile.clone(),
         io_backend: backend,
         ..ServeOptions::default()
-    })
-    .with_context(|| format!("starting {} daemon", backend.name()))?;
-    let addr = handle.local_addr();
+    };
+    // One daemon, or a collaborating shard set on consecutive sockets.
+    let handles = if opts.shards > 1 {
+        serve_sharded(&serve_opts, opts.shards)
+            .with_context(|| format!("starting {} shard set", backend.name()))?
+    } else {
+        vec![serve(&serve_opts)
+            .with_context(|| format!("starting {} daemon", backend.name()))?]
+    };
+    let addrs: Vec<String> = handles.iter().map(|h| h.local_addr().to_string()).collect();
 
     let started = Instant::now();
     let mut per_client: Vec<ClientStats> = Vec::new();
     std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
+        let mut join_handles = Vec::new();
+        let addrs = &addrs;
         for job in 0..opts.jobs {
             for cid in 0..opts.clients_per_job {
-                handles.push(scope.spawn(move || -> Result<ClientStats> {
-                    drive_client(opts, addr, job as u32, cid)
+                join_handles.push(scope.spawn(move || -> Result<ClientStats> {
+                    drive_client(opts, addrs, job as u32, cid)
                 }));
             }
         }
-        for h in handles {
+        for h in join_handles {
             per_client.push(h.join().expect("bench client panicked")?);
         }
         Ok(())
@@ -213,8 +269,14 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
     }
     let total_rounds = (opts.jobs * opts.rounds) as f64;
     let client_bytes = totals.bytes_sent + totals.bytes_received;
-    let server = handle.stats();
-    handle.shutdown();
+    let per_shard: Vec<StatsSnapshot> = handles.iter().map(|h| h.stats()).collect();
+    let mut server = StatsSnapshot::default();
+    for st in &per_shard {
+        server.merge(st);
+    }
+    for h in handles {
+        h.shutdown();
+    }
     Ok(BackendReport {
         backend: backend.name(),
         wall_s,
@@ -223,15 +285,16 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
         client_bytes,
         retransmissions: totals.retransmissions,
         server,
+        per_shard,
     })
 }
 
-/// One client of one job: join, run every round on a deterministic
-/// synthetic update stream (residual folded in, Algorithm 1), return the
-/// driver counters.
+/// One client of one job: join (one server or the whole shard set), run
+/// every round on a deterministic synthetic update stream (residual
+/// folded in, Algorithm 1), return the driver counters.
 fn drive_client(
     opts: &BenchWireOptions,
-    addr: std::net::SocketAddr,
+    addrs: &[String],
     job: u32,
     cid: u16,
 ) -> Result<ClientStats> {
@@ -239,12 +302,25 @@ fn drive_client(
     // agreement on the vote/quantise RNG streams' derivation root).
     let job_seed = opts.seed ^ ((job as u64) << 16);
     let mut copts =
-        ClientOptions::new(addr.to_string(), 1000 + job, cid, opts.d, opts.clients_per_job);
+        ClientOptions::new(addrs[0].clone(), 1000 + job, cid, opts.d, opts.clients_per_job);
     copts.threshold_a = 1;
     copts.payload_budget = opts.payload_budget;
     copts.backend_seed = job_seed;
-    let mut client = FediacClient::connect(copts)
-        .with_context(|| format!("connecting bench client {cid} of job {job}"))?;
+    enum AnyClient {
+        Single(FediacClient),
+        Sharded(ShardedFediacClient),
+    }
+    let mut client = if addrs.len() > 1 {
+        AnyClient::Sharded(
+            ShardedFediacClient::connect(addrs, copts)
+                .with_context(|| format!("connecting sharded bench client {cid} of job {job}"))?,
+        )
+    } else {
+        AnyClient::Single(
+            FediacClient::connect(copts)
+                .with_context(|| format!("connecting bench client {cid} of job {job}"))?,
+        )
+    };
     let mut residual = vec![0.0f32; opts.d];
     for round in 1..=opts.rounds {
         let mut rng = Rng::new(job_seed ^ ((cid as u64) << 32) ^ round as u64);
@@ -253,10 +329,15 @@ fn drive_client(
         for (u, r) in update.iter_mut().zip(&residual) {
             *u += *r;
         }
-        let out = client
-            .run_round(round, &update)
-            .with_context(|| format!("job {job} client {cid} round {round}"))?;
+        let out = match &mut client {
+            AnyClient::Single(c) => c.run_round(round, &update),
+            AnyClient::Sharded(c) => c.run_round(round, &update),
+        }
+        .with_context(|| format!("job {job} client {cid} round {round}"))?;
         residual = out.residual;
     }
-    Ok(client.stats)
+    Ok(match &client {
+        AnyClient::Single(c) => c.stats,
+        AnyClient::Sharded(c) => c.stats(),
+    })
 }

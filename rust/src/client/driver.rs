@@ -11,6 +11,7 @@
 //! the `chaos` option interposes a full [`crate::net::chaos`] proxy
 //! (loss, duplication, reordering, corruption — both directions).
 
+use std::collections::VecDeque;
 use std::net::UdpSocket;
 use std::time::Duration;
 
@@ -19,16 +20,21 @@ use anyhow::{bail, Context, Result};
 use crate::client::protocol;
 use crate::compress::{self, golomb};
 use crate::net::chaos::{chaos_proxy, ChaosConfig, ChaosHandle, ChaosProxyOptions, ChaosSnapshot};
+use crate::net::poll;
 use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
 use crate::util::{BitVec, Rng};
 use crate::wire::{
-    decode_frame, decode_lanes, encode_frame, update_chunks, vote_chunks, ChunkAssembler,
-    Header, JobSpec, ShardPlan, WireKind, DEFAULT_PAYLOAD_BUDGET,
+    decode_frame, decode_lanes, encode_frame, encode_lanes_into, update_chunk_bounds,
+    vote_chunk_bounds, ChunkAssembler, FrameScratch, Header, JobSpec, ShardPlan, WireKind,
+    DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAX_DATAGRAM,
 };
 
 /// Broadcast frames of the *other* phase kept aside during a wait (see
 /// [`FediacClient::exchange`]); bounds memory against a babbling server.
 const PENDING_CAP: usize = 256;
+/// Frames flushed per `sendmmsg(2)` burst on the upload path, and
+/// datagrams drained per `recvmmsg(2)` call on the receive path.
+const CLIENT_BATCH: usize = 32;
 
 /// Everything a client needs to participate in one job.
 #[derive(Debug, Clone)]
@@ -185,11 +191,42 @@ pub struct FediacClient {
     /// Keeps the per-client chaos proxy (if any) alive for the client's
     /// lifetime.
     chaos: Option<ChaosHandle>,
+    /// Datagram-buffer pool for *outgoing* frames: steady-state rounds
+    /// encode into recycled buffers instead of allocating.
+    scratch: FrameScratch,
+    /// Reused serialisation buffers (vote bitmap bytes / lane bytes).
+    bitmap_buf: Vec<u8>,
+    lane_buf: Vec<u8>,
+    /// Pool of *receive* buffers. These stay at full `recv_len` length
+    /// for their whole life (datagram size travels alongside as a
+    /// separate count), so reuse never re-zeroes the buffer.
+    recv_pool: Vec<Vec<u8>>,
+    /// Datagrams drained ahead of need by the batched receive
+    /// ([`FediacClient::recv_datagram`]), as `(buffer, datagram_len)`;
+    /// served before the socket.
+    recv_queue: VecDeque<(Vec<u8>, usize)>,
+    /// Reusable `recvmmsg` batch (bounded by [`CLIENT_BATCH`] buffers of
+    /// [`FediacClient::recv_buf_len`] bytes each).
+    batch: poll::RecvBatch,
+    /// Every receive buffer's size, from one constant — see
+    /// [`FediacClient::recv_buf_len`].
+    recv_len: usize,
     /// Cumulative driver counters.
     pub stats: ClientStats,
 }
 
 impl FediacClient {
+    /// Receive-buffer size for a job with the given payload budget: the
+    /// largest frame the job's server can legitimately emit (header +
+    /// one full payload budget), capped by what an IPv4/UDP datagram
+    /// can physically carry. Every receive path — join wait, exchange
+    /// wait, batched drain — is sized from this ONE derivation;
+    /// historically the join path used a hardcoded 2048-byte buffer
+    /// that silently truncated (and so dropped) any larger frame
+    /// arriving during a re-registration.
+    pub(crate) fn recv_buf_len(payload_budget: usize) -> usize {
+        (HEADER_LEN + payload_budget).min(MAX_DATAGRAM)
+    }
     /// Bind an ephemeral socket, connect and register with the server.
     pub fn connect(opts: ClientOptions) -> Result<Self> {
         // `JobSpec` narrows these fields; reject values that would
@@ -235,12 +272,20 @@ impl FediacClient {
         socket.connect(&target).with_context(|| format!("connecting to {target}"))?;
         socket.set_read_timeout(Some(opts.timeout))?;
         let loss_rng = Rng::new(opts.backend_seed ^ (opts.client_id as u64) << 40 ^ 0x10_55);
+        let recv_len = Self::recv_buf_len(opts.payload_budget);
         let mut client = FediacClient {
             socket,
             opts,
             loss_rng,
             pending: Vec::new(),
             chaos,
+            scratch: FrameScratch::new(),
+            bitmap_buf: Vec::new(),
+            lane_buf: Vec::new(),
+            recv_pool: Vec::new(),
+            recv_queue: VecDeque::new(),
+            batch: poll::RecvBatch::new(CLIENT_BATCH, recv_len),
+            recv_len,
             stats: ClientStats::default(),
         };
         client.join()?;
@@ -270,6 +315,104 @@ impl FediacClient {
         }
     }
 
+    /// Upload a phase's frame set, flushing in `sendmmsg` bursts of
+    /// [`CLIENT_BATCH`] (a plain per-frame loop off Linux). Loss
+    /// injection still decides per frame *before* batching, drawing the
+    /// RNG in the same per-frame order as the unbatched path, and bytes
+    /// are metered only for frames the kernel confirmed sent — the
+    /// batch changes syscall count, nothing observable.
+    fn send_frames(&mut self, frames: &[Vec<u8>]) {
+        let mut refs: Vec<&[u8]> = Vec::with_capacity(frames.len());
+        for f in frames {
+            if self.opts.send_loss > 0.0 && self.loss_rng.f64() < self.opts.send_loss {
+                self.stats.dropped_sends += 1;
+            } else {
+                refs.push(f);
+            }
+        }
+        let mut start = 0usize;
+        while start < refs.len() {
+            let burst = &refs[start..(start + CLIENT_BATCH).min(refs.len())];
+            match poll::send_batch_connected(&self.socket, burst) {
+                Ok(sent) => {
+                    for b in &burst[..sent] {
+                        self.stats.bytes_sent += b.len() as u64;
+                    }
+                    if sent < burst.len() {
+                        // The frame after the sent prefix was refused:
+                        // skip it (one attempt per frame, like the
+                        // unbatched loop) and keep going.
+                        start += sent + 1;
+                    } else {
+                        start += burst.len();
+                    }
+                }
+                // Head frame refused outright; skip it.
+                Err(_) => start += 1,
+            }
+        }
+    }
+
+    /// Pop a full-length receive buffer (allocated and zeroed once,
+    /// then reused as-is — the kernel overwrites the prefix and the
+    /// datagram length travels separately, so reuse costs no memset).
+    fn take_recv_buf(&mut self) -> Vec<u8> {
+        self.recv_pool.pop().unwrap_or_else(|| vec![0u8; self.recv_len])
+    }
+
+    /// Return a receive buffer for reuse (bounded; wrong-length buffers
+    /// — impossible today — are dropped rather than poisoning the pool).
+    fn give_recv_buf(&mut self, buf: Vec<u8>) {
+        if buf.len() == self.recv_len && self.recv_pool.len() < 2 * CLIENT_BATCH {
+            self.recv_pool.push(buf);
+        }
+    }
+
+    /// One received datagram as `(buffer, datagram_len)`, from the
+    /// drain queue or the socket. The first datagram blocks up to the
+    /// socket timeout (`WouldBlock` / `TimedOut` on expiry, exactly
+    /// like a bare `recv`); where `recvmmsg` is native, everything
+    /// already queued behind it drains in one extra syscall and feeds
+    /// subsequent calls without touching the socket. Buffers come from
+    /// (and should return to, via [`FediacClient::give_recv_buf`]) the
+    /// receive pool.
+    fn recv_datagram(&mut self) -> std::io::Result<(Vec<u8>, usize)> {
+        if let Some(pair) = self.recv_queue.pop_front() {
+            return Ok(pair);
+        }
+        let mut first = self.take_recv_buf();
+        let n = match self.socket.recv(&mut first) {
+            Ok(n) => {
+                self.stats.bytes_received += n as u64;
+                n
+            }
+            Err(e) => {
+                self.give_recv_buf(first);
+                return Err(e);
+            }
+        };
+        if poll::MMSG_NATIVE {
+            // Opportunistic nonblocking drain: anything the kernel has
+            // already queued comes out with one recvmmsg. (Skipped on
+            // platforms where the fallback would block.)
+            if let Ok(got) = poll::recv_batch(&self.socket, &mut self.batch) {
+                for i in 0..got {
+                    let (bytes, _) = self.batch.datagram(i);
+                    self.stats.bytes_received += bytes.len() as u64;
+                    // Copy into a pooled full-length buffer (batch
+                    // buffers are `recv_len`-sized, so this always fits).
+                    let mut copy = match self.recv_pool.pop() {
+                        Some(b) => b,
+                        None => vec![0u8; self.recv_len],
+                    };
+                    copy[..bytes.len()].copy_from_slice(bytes);
+                    self.recv_queue.push_back((copy, bytes.len()));
+                }
+            }
+        }
+        Ok((first, n))
+    }
+
     /// The (idempotent) registration frame for this client's job.
     fn join_frame(&self) -> Vec<u8> {
         encode_frame(
@@ -284,19 +427,19 @@ impl FediacClient {
     /// flight.
     fn join(&mut self) -> Result<()> {
         let frame = self.join_frame();
-        let mut buf = vec![0u8; 2048];
         let mut timeouts = 0usize;
         self.send_datagram(&frame);
         loop {
-            match self.socket.recv(&mut buf) {
-                Ok(n) => {
-                    self.stats.bytes_received += n as u64;
-                    let Ok(f) = decode_frame(&buf[..n]) else { continue };
-                    if f.header.kind == WireKind::JoinAck && f.header.job == self.opts.job {
-                        if f.header.aux == JOIN_OK {
+            match self.recv_datagram() {
+                Ok((buf, n)) => {
+                    let decoded = decode_frame(&buf[..n]).map(|f| f.header);
+                    self.give_recv_buf(buf);
+                    let Ok(h) = decoded else { continue };
+                    if h.kind == WireKind::JoinAck && h.job == self.opts.job {
+                        if h.aux == JOIN_OK {
                             return Ok(());
                         }
-                        bail!("server refused join: status {}", f.header.aux);
+                        bail!("server refused join: status {}", h.aux);
                     }
                     // Stray broadcast from an earlier round — ignore.
                 }
@@ -313,48 +456,51 @@ impl FediacClient {
         }
     }
 
-    fn vote_frames(&self, round: u32, votes: &BitVec, local_max: f32) -> Vec<Vec<u8>> {
-        let chunks = vote_chunks(votes, self.opts.payload_budget);
-        let n_blocks = chunks.len() as u32;
-        chunks
-            .iter()
-            .enumerate()
-            .map(|(i, (dims, bytes))| {
-                let header = Header {
-                    kind: WireKind::Vote,
-                    client: self.opts.client_id,
-                    job: self.opts.job,
-                    round,
-                    block: i as u32,
-                    n_blocks,
-                    elems: *dims as u32,
-                    aux: local_max.to_bits(),
-                };
-                encode_frame(&header, bytes)
-            })
-            .collect()
+    /// Encode one phase's vote frames into pooled buffers (recycled by
+    /// the phase driver once the exchange completes).
+    fn vote_frames(&mut self, round: u32, votes: &BitVec, local_max: f32) -> Vec<Vec<u8>> {
+        votes.copy_bytes_into(&mut self.bitmap_buf);
+        let budget = self.opts.payload_budget;
+        let n_blocks = vote_chunk_bounds(votes.len(), budget).count() as u32;
+        let mut frames = Vec::with_capacity(n_blocks as usize);
+        for (i, (dims, lo, hi)) in vote_chunk_bounds(votes.len(), budget).enumerate() {
+            let header = Header {
+                kind: WireKind::Vote,
+                client: self.opts.client_id,
+                job: self.opts.job,
+                round,
+                block: i as u32,
+                n_blocks,
+                elems: dims as u32,
+                aux: local_max.to_bits(),
+            };
+            frames.push(self.scratch.encode(&header, &self.bitmap_buf[lo..hi]));
+        }
+        frames
     }
 
-    fn update_frames(&self, round: u32, lanes: &[i32], f: f32) -> Vec<Vec<u8>> {
-        let chunks = update_chunks(lanes, self.opts.payload_budget);
-        let n_blocks = chunks.len() as u32;
-        chunks
-            .iter()
-            .enumerate()
-            .map(|(i, (n, bytes))| {
-                let header = Header {
-                    kind: WireKind::Update,
-                    client: self.opts.client_id,
-                    job: self.opts.job,
-                    round,
-                    block: i as u32,
-                    n_blocks,
-                    elems: *n as u32,
-                    aux: f.to_bits(),
-                };
-                encode_frame(&header, bytes)
-            })
-            .collect()
+    /// Encode one phase's update frames into pooled buffers, packing
+    /// each block's lanes through one reused serialisation buffer
+    /// instead of a fresh `encode_lanes` allocation per block.
+    fn update_frames(&mut self, round: u32, lanes: &[i32], f: f32) -> Vec<Vec<u8>> {
+        let budget = self.opts.payload_budget;
+        let n_blocks = update_chunk_bounds(lanes.len(), budget).count() as u32;
+        let mut frames = Vec::with_capacity(n_blocks as usize);
+        for (i, (lo, hi)) in update_chunk_bounds(lanes.len(), budget).enumerate() {
+            encode_lanes_into(&mut self.lane_buf, &lanes[lo..hi]);
+            let header = Header {
+                kind: WireKind::Update,
+                client: self.opts.client_id,
+                job: self.opts.job,
+                round,
+                block: i as u32,
+                n_blocks,
+                elems: (hi - lo) as u32,
+                aux: f.to_bits(),
+            };
+            frames.push(self.scratch.encode(&header, &self.lane_buf));
+        }
+        frames
     }
 
     /// Largest broadcast block count this job could legitimately need:
@@ -394,69 +540,74 @@ impl FediacClient {
                 return Ok(done);
             }
         }
-        for f in frames {
-            self.send_datagram(f);
-        }
+        self.send_frames(frames);
         let join_frame = self.join_frame();
         let mut rejoining = false;
-        let mut buf = vec![0u8; 65536];
         let mut timeouts = 0usize;
         loop {
-            match self.socket.recv(&mut buf) {
-                Ok(n) => {
-                    self.stats.bytes_received += n as u64;
-                    let Ok(frame) = decode_frame(&buf[..n]) else { continue };
-                    let h = frame.header;
-                    if h.job != self.opts.job {
-                        continue;
-                    }
-                    if h.kind == want && h.round == round {
-                        if let Some(done) =
-                            ingest_chunk(&mut asm, max_blocks, &h, frame.payload, &mut self.stats)
+            match self.recv_datagram() {
+                Ok((buf, n)) => {
+                    // `'done: Some(v)` completes the exchange; any other
+                    // path falls through so the buffer recycles first.
+                    let done = 'frame: {
+                        let Ok(frame) = decode_frame(&buf[..n]) else { break 'frame None };
+                        let h = frame.header;
+                        if h.job != self.opts.job {
+                            break 'frame None;
+                        }
+                        if h.kind == want && h.round == round {
+                            break 'frame ingest_chunk(
+                                &mut asm,
+                                max_blocks,
+                                &h,
+                                frame.payload,
+                                &mut self.stats,
+                            );
+                        } else if (h.kind == WireKind::Gia || h.kind == WireKind::Aggregate)
+                            && h.round == round
                         {
-                            return Ok(done);
-                        }
-                    } else if (h.kind == WireKind::Gia || h.kind == WireKind::Aggregate)
-                        && h.round == round
-                    {
-                        // The other phase's broadcast for this round:
-                        // keep it for the next exchange.
-                        if self.pending.len() < PENDING_CAP {
-                            self.pending.push((h, frame.payload.to_vec()));
-                        }
-                    } else if h.kind == WireKind::JoinAck {
-                        match h.aux {
-                            JOIN_UNKNOWN_JOB => {
-                                // Server lost (or never had) our
-                                // registration; re-join without leaving
-                                // this receive loop.
-                                if !rejoining {
-                                    rejoining = true;
-                                    self.stats.rejoins += 1;
-                                    self.send_datagram(&join_frame);
+                            // The other phase's broadcast for this round:
+                            // keep it for the next exchange.
+                            if self.pending.len() < PENDING_CAP {
+                                self.pending.push((h, frame.payload.to_vec()));
+                            }
+                        } else if h.kind == WireKind::JoinAck {
+                            match h.aux {
+                                JOIN_UNKNOWN_JOB => {
+                                    // Server lost (or never had) our
+                                    // registration; re-join without leaving
+                                    // this receive loop.
+                                    if !rejoining {
+                                        rejoining = true;
+                                        self.stats.rejoins += 1;
+                                        self.send_datagram(&join_frame);
+                                    }
                                 }
-                            }
-                            JOIN_OK if rejoining => {
-                                // Re-registered. The server may have lost
-                                // every round state too — re-upload this
-                                // phase's frames.
-                                rejoining = false;
-                                self.stats.retransmissions += frames.len() as u64;
-                                for f in frames {
-                                    self.send_datagram(f);
+                                JOIN_OK if rejoining => {
+                                    // Re-registered. The server may have lost
+                                    // every round state too — re-upload this
+                                    // phase's frames.
+                                    rejoining = false;
+                                    self.stats.retransmissions += frames.len() as u64;
+                                    self.send_frames(frames);
                                 }
+                                JOIN_OK => {} // duplicate ack of an earlier join
+                                status if rejoining => {
+                                    bail!("server refused re-join: status {status}")
+                                }
+                                // Unsolicited non-OK ack (spoof or stale):
+                                // only a refusal of *our* in-flight re-join
+                                // may kill the round.
+                                _ => {}
                             }
-                            JOIN_OK => {} // duplicate ack of an earlier join
-                            status if rejoining => {
-                                bail!("server refused re-join: status {status}")
-                            }
-                            // Unsolicited non-OK ack (spoof or stale):
-                            // only a refusal of *our* in-flight re-join
-                            // may kill the round.
-                            _ => {}
                         }
+                        // NotReady / stale rounds / other phases: keep waiting.
+                        None
+                    };
+                    self.give_recv_buf(buf);
+                    if let Some(done) = done {
+                        return Ok(done);
                     }
-                    // NotReady / stale rounds / other phases: keep waiting.
                 }
                 Err(e) if is_timeout(&e) => {
                     timeouts += 1;
@@ -473,24 +624,21 @@ impl FediacClient {
                         self.send_datagram(&join_frame);
                     }
                     self.stats.retransmissions += frames.len() as u64;
-                    for f in frames {
-                        self.send_datagram(f);
-                    }
+                    self.send_frames(frames);
                     self.stats.polls += 1;
-                    let poll = encode_frame(
-                        &Header {
-                            kind: WireKind::Poll,
-                            client: self.opts.client_id,
-                            job: self.opts.job,
-                            round,
-                            block: 0,
-                            n_blocks: 0,
-                            elems: 0,
-                            aux: want as u32,
-                        },
-                        &[],
-                    );
-                    self.send_datagram(&poll);
+                    let poll_hdr = Header {
+                        kind: WireKind::Poll,
+                        client: self.opts.client_id,
+                        job: self.opts.job,
+                        round,
+                        block: 0,
+                        n_blocks: 0,
+                        elems: 0,
+                        aux: want as u32,
+                    };
+                    let poll_frame = self.scratch.encode(&poll_hdr, &[]);
+                    self.send_datagram(&poll_frame);
+                    self.scratch.give(poll_frame);
                 }
                 Err(e) => return Err(e.into()),
             }
@@ -517,7 +665,11 @@ impl FediacClient {
             self.opts.d
         );
         let vote_frames = self.vote_frames(round, votes, local_max);
-        let (gia_bytes, gia_aux) = self.exchange(round, &vote_frames, WireKind::Gia)?;
+        let exchanged = self.exchange(round, &vote_frames, WireKind::Gia);
+        for f in vote_frames {
+            self.scratch.give(f);
+        }
+        let (gia_bytes, gia_aux) = exchanged?;
         let gia = golomb::decode_with_limit(&gia_bytes, self.opts.d)
             .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
         anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
@@ -537,7 +689,11 @@ impl FediacClient {
     /// round happened at all.
     pub fn update_phase(&mut self, round: u32, lanes: &[i32], f: f32) -> Result<Vec<i32>> {
         let update_frames = self.update_frames(round, lanes, f);
-        let (agg_bytes, agg_aux) = self.exchange(round, &update_frames, WireKind::Aggregate)?;
+        let exchanged = self.exchange(round, &update_frames, WireKind::Aggregate);
+        for f in update_frames {
+            self.scratch.give(f);
+        }
+        let (agg_bytes, agg_aux) = exchanged?;
         let aggregate = decode_lanes(&agg_bytes)
             .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
         anyhow::ensure!(
@@ -708,6 +864,63 @@ mod tests {
         assert!(asm.is_none());
         assert!(ingest_chunk(&mut asm, 64, &bcast_header(0, 0, 0), &[], &mut stats).is_none());
         assert!(asm.is_none());
+    }
+
+    #[test]
+    fn recv_buffer_constant_admits_a_max_size_frame() {
+        use crate::wire::MAX_WIRE_PAYLOAD;
+        // The largest frame a job at this budget can emit must round-trip
+        // a real socket through a buffer of exactly the derived size. The
+        // old join path hardcoded 2048 bytes, which would have truncated
+        // (and so silently dropped) this frame.
+        let budget = 60_000usize;
+        let frame = encode_frame(
+            &Header {
+                kind: WireKind::Gia,
+                client: u16::MAX,
+                job: 1,
+                round: 1,
+                block: 0,
+                n_blocks: 1,
+                elems: budget as u32,
+                aux: 0,
+            },
+            &vec![0xAB; budget],
+        );
+        assert!(frame.len() > 2048, "frame too small to regress the old path");
+        assert!(frame.len() <= FediacClient::recv_buf_len(budget));
+        let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        rx.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        tx.send_to(&frame, rx.local_addr().unwrap()).unwrap();
+        let mut buf = vec![0u8; FediacClient::recv_buf_len(budget)];
+        let (n, _) = rx.recv_from(&mut buf).unwrap();
+        assert_eq!(n, frame.len(), "frame truncated by the derived buffer size");
+        let decoded = decode_frame(&buf[..n]).unwrap();
+        assert_eq!(decoded.payload.len(), budget);
+        // The derivation is capped by what UDP/IPv4 can physically carry,
+        // so no budget can ever outgrow the buffer.
+        assert!(FediacClient::recv_buf_len(MAX_WIRE_PAYLOAD) <= crate::wire::MAX_DATAGRAM);
+        assert!(crate::wire::HEADER_LEN + MAX_WIRE_PAYLOAD <= crate::wire::MAX_DATAGRAM);
+    }
+
+    #[test]
+    fn round_with_frames_beyond_the_old_join_buffer() {
+        // End-to-end round whose vote/GIA/aggregate frames all exceed the
+        // old 2048-byte join-path buffer: every receive path must use the
+        // shared sizing or the round stalls on truncated broadcasts.
+        let handle = serve(&ServeOptions::default()).unwrap();
+        let mut opts =
+            ClientOptions::new(handle.local_addr().to_string(), 81, 0, 80_000, 1);
+        opts.threshold_a = 1;
+        opts.payload_budget = 4096;
+        opts.backend_seed = 21;
+        let mut client = FediacClient::connect(opts).unwrap();
+        let update: Vec<f32> = (0..80_000).map(|i| ((i as f32) * 0.01).sin() * 0.01).collect();
+        let out = client.run_round(1, &update).unwrap();
+        assert!(!out.gia_indices.is_empty());
+        assert_eq!(out.aggregate.len(), out.gia_indices.len());
+        handle.shutdown();
     }
 
     #[test]

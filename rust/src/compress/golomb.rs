@@ -6,62 +6,200 @@
 //! code. We use the Rice restriction (M = 2^r) for cheap shifts — the
 //! same trade-off a switch/NIC implementation would make.
 //!
-//! `bench_compress` (E8) compares raw bitmap vs RLE vs Golomb–Rice.
+//! The bit I/O is **word-parallel**: the writer packs bits into a u64
+//! accumulator and flushes eight bytes at a time, and the reader refills
+//! a u64 accumulator and decodes unary runs with one `trailing_ones`
+//! count per word instead of one branch per bit. The stream format is
+//! bit-identical to the original per-bit implementation (kept in
+//! [`scalar`] as the reference oracle — property tests assert equality
+//! on both encode and decode, and `tests/wire_fuzz.rs` hammers the
+//! refill and word-edge paths).
+//!
+//! `bench_compress` (E8) compares raw bitmap vs RLE vs Golomb–Rice;
+//! `fediac bench-codec` measures the word-parallel speedup.
 
 use crate::util::BitVec;
 
-/// Bit-granular writer.
+#[inline]
+fn mask(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Bit-granular writer over a u64 accumulator. Bits occupy bytes
+/// little-endian-first (bit j of the stream is bit j%8 of byte j/8),
+/// exactly the layout the original per-byte writer produced.
 struct BitWriter {
     bytes: Vec<u8>,
-    bit: u8,
+    acc: u64,
+    /// Bits currently buffered in `acc` (always < 64 between calls).
+    nbits: u32,
 }
 
 impl BitWriter {
     fn new() -> Self {
-        BitWriter { bytes: Vec::new(), bit: 0 }
+        BitWriter { bytes: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    /// Append the low `n` bits of `v` in LSB-first stream order.
+    fn append_raw(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        debug_assert!(n == 64 || v & !mask(n) == 0, "append_raw got dirty high bits");
+        if n == 0 {
+            return;
+        }
+        self.acc |= v << self.nbits;
+        if self.nbits + n >= 64 {
+            self.bytes.extend_from_slice(&self.acc.to_le_bytes());
+            let consumed = 64 - self.nbits;
+            let rem = n - consumed;
+            self.acc = if rem == 0 { 0 } else { v >> consumed };
+            self.nbits = rem;
+        } else {
+            self.nbits += n;
+        }
     }
 
     fn push_bit(&mut self, b: bool) {
-        if self.bit == 0 {
-            self.bytes.push(0);
-        }
-        if b {
-            *self.bytes.last_mut().unwrap() |= 1 << self.bit;
-        }
-        self.bit = (self.bit + 1) & 7;
+        self.append_raw(b as u64, 1);
     }
 
+    /// Append `value`'s low `n` bits MSB-first (the header/remainder
+    /// order the format has always used).
     fn push_bits(&mut self, value: u64, n: u32) {
-        for i in (0..n).rev() {
-            self.push_bit((value >> i) & 1 == 1);
+        if n == 0 {
+            return;
         }
+        // Reversing the low n bits turns MSB-first emission into one
+        // LSB-first append.
+        let rev = (value << (64 - n)).reverse_bits();
+        self.append_raw(rev, n);
     }
 
-    fn finish(self) -> Vec<u8> {
+    /// Append a unary-coded quotient: `q` one-bits then a zero.
+    fn push_unary(&mut self, mut q: u64) {
+        while q >= 63 {
+            self.append_raw(mask(63), 63);
+            q -= 63;
+        }
+        self.append_raw(mask(q as u32), q as u32 + 1);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let tail_bytes = self.nbits.div_ceil(8) as usize;
+        if tail_bytes > 0 {
+            self.bytes.extend_from_slice(&self.acc.to_le_bytes()[..tail_bytes]);
+        }
         self.bytes
     }
 }
 
-/// Bit-granular reader.
+/// Bit-granular reader over a u64 accumulator refilled from the byte
+/// stream (eight bytes per refill on the aligned fast path).
 struct BitReader<'a> {
     bytes: &'a [u8],
-    pos: usize,
+    /// Next byte not yet loaded into `acc`.
+    next: usize,
+    acc: u64,
+    /// Valid bits in `acc` (LSB-first).
+    avail: u32,
 }
 
 impl<'a> BitReader<'a> {
-    fn read_bit(&mut self) -> Option<bool> {
-        let byte = *self.bytes.get(self.pos >> 3)?;
-        let b = (byte >> (self.pos & 7)) & 1 == 1;
-        self.pos += 1;
-        Some(b)
+    fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, next: 0, acc: 0, avail: 0 }
     }
 
-    fn read_bits(&mut self, n: u32) -> Option<u64> {
-        let mut v = 0u64;
-        for _ in 0..n {
-            v = (v << 1) | self.read_bit()? as u64;
+    fn refill(&mut self) {
+        if self.avail == 0 && self.next + 8 <= self.bytes.len() {
+            self.acc =
+                u64::from_le_bytes(self.bytes[self.next..self.next + 8].try_into().unwrap());
+            self.avail = 64;
+            self.next += 8;
+            return;
         }
-        Some(v)
+        while self.avail <= 56 && self.next < self.bytes.len() {
+            self.acc |= (self.bytes[self.next] as u64) << self.avail;
+            self.avail += 8;
+            self.next += 1;
+        }
+    }
+
+    /// Take `n` bits in LSB-first stream order; `None` when fewer remain.
+    fn read_bits_lsb(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Some(0);
+        }
+        if self.avail < n {
+            self.refill();
+        }
+        if self.avail >= n {
+            let v = self.acc & mask(n);
+            self.acc = if n == 64 { 0 } else { self.acc >> n };
+            self.avail -= n;
+            return Some(v);
+        }
+        // Straddling a refill boundary (or near EOF): take what is
+        // buffered, refill, take the rest.
+        let have = self.avail;
+        let lo = self.acc;
+        self.acc = 0;
+        self.avail = 0;
+        self.refill();
+        let need = n - have;
+        if self.avail < need {
+            return None;
+        }
+        let hi = self.acc & mask(need);
+        self.acc >>= need;
+        self.avail -= need;
+        Some(lo | (hi << have))
+    }
+
+    /// Read `n` bits MSB-first (header/remainder order); `None` at EOF.
+    fn read_bits(&mut self, n: u32) -> Option<u64> {
+        if n == 0 {
+            return Some(0);
+        }
+        let v = self.read_bits_lsb(n)?;
+        Some(v.reverse_bits() >> (64 - n))
+    }
+
+    /// Decode one unary run (count of consecutive one-bits up to the
+    /// terminating zero) with one `trailing_ones` per buffered word.
+    /// `None` at EOF mid-run or once the count exceeds `limit` — the
+    /// same early bail the per-bit oracle applies one bit at a time.
+    fn read_unary(&mut self, limit: u64) -> Option<u64> {
+        let mut q = 0u64;
+        loop {
+            if self.avail == 0 {
+                self.refill();
+                if self.avail == 0 {
+                    return None;
+                }
+            }
+            let window = self.acc & mask(self.avail);
+            let ones = (window.trailing_ones()).min(self.avail);
+            q += ones as u64;
+            if q > limit {
+                return None;
+            }
+            if ones == self.avail {
+                // The whole buffered word is ones: the run continues
+                // across the refill boundary.
+                self.acc = 0;
+                self.avail = 0;
+                continue;
+            }
+            let consume = ones + 1; // the run plus its zero terminator
+            self.acc = if consume == 64 { 0 } else { self.acc >> consume };
+            self.avail -= consume;
+            return Some(q);
+        }
     }
 }
 
@@ -76,23 +214,21 @@ pub fn rice_param(d: usize, ones: usize) -> u32 {
 
 /// Encode: header (d, count, r as LEB128-ish u32s) + Rice-coded gaps.
 pub fn encode(bv: &BitVec) -> Vec<u8> {
-    let ones: Vec<usize> = bv.iter_ones().collect();
-    let r = rice_param(bv.len(), ones.len());
+    let ones = bv.count_ones();
+    let r = rice_param(bv.len(), ones);
     let mut w = BitWriter::new();
     w.push_bits(bv.len() as u64, 32);
-    w.push_bits(ones.len() as u64, 32);
+    w.push_bits(ones as u64, 32);
     w.push_bits(r as u64, 6);
     let mut prev = 0usize;
-    for (i, &idx) in ones.iter().enumerate() {
-        let gap = if i == 0 { idx } else { idx - prev - 1 } as u64;
+    let mut first = true;
+    for idx in bv.iter_ones() {
+        let gap = if first { idx } else { idx - prev - 1 } as u64;
+        first = false;
         prev = idx;
         // Rice: quotient unary + r remainder bits.
-        let q = gap >> r;
-        for _ in 0..q {
-            w.push_bit(true);
-        }
-        w.push_bit(false);
-        w.push_bits(gap & ((1u64 << r) - 1).max(0), r);
+        w.push_unary(gap >> r);
+        w.push_bits(gap & mask(r), r);
     }
     w.finish()
 }
@@ -109,7 +245,7 @@ pub fn decode(bytes: &[u8]) -> Option<BitVec> {
 /// 512 MB allocation per call. The wire client passes its own `d`, so a
 /// stream that disagrees is rejected before any allocation.
 pub fn decode_with_limit(bytes: &[u8], max_d: usize) -> Option<BitVec> {
-    let mut rd = BitReader { bytes, pos: 0 };
+    let mut rd = BitReader::new(bytes);
     let d = rd.read_bits(32)? as usize;
     let count = rd.read_bits(32)? as usize;
     let r = rd.read_bits(6)? as u32;
@@ -125,16 +261,7 @@ pub fn decode_with_limit(bytes: &[u8], max_d: usize) -> Option<BitVec> {
     let mut bv = BitVec::zeros(d);
     let mut prev: Option<usize> = None;
     for _ in 0..count {
-        let mut q = 0u64;
-        loop {
-            match rd.read_bit()? {
-                true => q += 1,
-                false => break,
-            }
-            if q as usize > d {
-                return None;
-            }
-        }
+        let q = rd.read_unary(d as u64)?;
         let rem = rd.read_bits(r)?;
         // `q << r` would silently discard high bits for q ≥ 2^(64−r),
         // letting a forged stream alias an astronomical gap down to an
@@ -165,6 +292,150 @@ pub fn decode_with_limit(bytes: &[u8], max_d: usize) -> Option<BitVec> {
 /// Encoded size in bytes.
 pub fn encoded_bytes(bv: &BitVec) -> usize {
     encode(bv).len()
+}
+
+/// The original per-bit encoder/decoder, kept as the reference oracle
+/// for the word-parallel bit I/O above: property tests assert byte- and
+/// bit-exact agreement, and `fediac bench-codec` measures the speedup
+/// against these in the same run. Semantics (including every rejection
+/// path for forged streams) are identical by construction.
+pub mod scalar {
+    use super::rice_param;
+    use crate::util::BitVec;
+
+    /// Per-bit writer (one byte-level read-modify-write per bit).
+    pub struct BitWriter {
+        bytes: Vec<u8>,
+        bit: u8,
+    }
+
+    impl Default for BitWriter {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl BitWriter {
+        /// Empty writer.
+        pub fn new() -> Self {
+            BitWriter { bytes: Vec::new(), bit: 0 }
+        }
+
+        /// Append one bit.
+        pub fn push_bit(&mut self, b: bool) {
+            if self.bit == 0 {
+                self.bytes.push(0);
+            }
+            if b {
+                *self.bytes.last_mut().unwrap() |= 1 << self.bit;
+            }
+            self.bit = (self.bit + 1) & 7;
+        }
+
+        /// Append `value`'s low `n` bits MSB-first.
+        pub fn push_bits(&mut self, value: u64, n: u32) {
+            for i in (0..n).rev() {
+                self.push_bit((value >> i) & 1 == 1);
+            }
+        }
+
+        /// The finished byte stream.
+        pub fn finish(self) -> Vec<u8> {
+            self.bytes
+        }
+    }
+
+    /// Per-bit reader.
+    struct BitReader<'a> {
+        bytes: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> BitReader<'a> {
+        fn read_bit(&mut self) -> Option<bool> {
+            let byte = *self.bytes.get(self.pos >> 3)?;
+            let b = (byte >> (self.pos & 7)) & 1 == 1;
+            self.pos += 1;
+            Some(b)
+        }
+
+        fn read_bits(&mut self, n: u32) -> Option<u64> {
+            let mut v = 0u64;
+            for _ in 0..n {
+                v = (v << 1) | self.read_bit()? as u64;
+            }
+            Some(v)
+        }
+    }
+
+    /// Reference [`super::encode`] (identical output bytes).
+    pub fn encode(bv: &BitVec) -> Vec<u8> {
+        let ones: Vec<usize> = bv.iter_ones().collect();
+        let r = rice_param(bv.len(), ones.len());
+        let mut w = BitWriter::new();
+        w.push_bits(bv.len() as u64, 32);
+        w.push_bits(ones.len() as u64, 32);
+        w.push_bits(r as u64, 6);
+        let mut prev = 0usize;
+        for (i, &idx) in ones.iter().enumerate() {
+            let gap = if i == 0 { idx } else { idx - prev - 1 } as u64;
+            prev = idx;
+            let q = gap >> r;
+            for _ in 0..q {
+                w.push_bit(true);
+            }
+            w.push_bit(false);
+            w.push_bits(gap & ((1u64 << r) - 1).max(0), r);
+        }
+        w.finish()
+    }
+
+    /// Reference [`super::decode_with_limit`] (identical accept/reject
+    /// behaviour and output).
+    pub fn decode_with_limit(bytes: &[u8], max_d: usize) -> Option<BitVec> {
+        let mut rd = BitReader { bytes, pos: 0 };
+        let d = rd.read_bits(32)? as usize;
+        let count = rd.read_bits(32)? as usize;
+        let r = rd.read_bits(6)? as u32;
+        if d > max_d || count > d {
+            return None;
+        }
+        if count > bytes.len().saturating_mul(8) {
+            return None;
+        }
+        let mut bv = BitVec::zeros(d);
+        let mut prev: Option<usize> = None;
+        for _ in 0..count {
+            let mut q = 0u64;
+            loop {
+                match rd.read_bit()? {
+                    true => q += 1,
+                    false => break,
+                }
+                if q as usize > d {
+                    return None;
+                }
+            }
+            let rem = rd.read_bits(r)?;
+            if r > 0 && q >= 1u64 << (64 - r) {
+                return None;
+            }
+            let gap = (q << r) | rem;
+            if gap >= d as u64 {
+                return None;
+            }
+            let idx = match prev {
+                None => gap as usize,
+                Some(p) => p + 1 + gap as usize,
+            };
+            if idx >= d {
+                return None;
+            }
+            bv.set(idx, true);
+            prev = Some(idx);
+        }
+        Some(bv)
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +473,84 @@ mod tests {
             crate::prop_assert!(dec == bv, "golomb roundtrip d={d}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn word_encoder_matches_scalar_byte_for_byte() {
+        prop::check("golomb_word_vs_scalar", prop::default_cases(), |rng| {
+            let d = prop::gen_dim(rng);
+            let density = rng.f64() * rng.f64();
+            let mut bv = BitVec::zeros(d);
+            for i in 0..d {
+                if rng.f64() < density {
+                    bv.set(i, true);
+                }
+            }
+            let word = encode(&bv);
+            let slow = scalar::encode(&bv);
+            crate::prop_assert!(word == slow, "encoders diverged at d={d}");
+            // Both decoders agree on the valid stream…
+            let a = decode_with_limit(&word, d);
+            let b = scalar::decode_with_limit(&word, d);
+            crate::prop_assert!(a == b, "decoders diverged on valid stream d={d}");
+            crate::prop_assert!(a.as_ref() == Some(&bv), "roundtrip lost bits d={d}");
+            // …and on a mutated one (accept AND reject must match).
+            let mut evil = word.clone();
+            if !evil.is_empty() {
+                let bit = rng.below(evil.len() * 8);
+                evil[bit / 8] ^= 1 << (bit % 8);
+            }
+            let a = decode_with_limit(&evil, d);
+            let b = scalar::decode_with_limit(&evil, d);
+            crate::prop_assert!(a == b, "decoders diverged on mutated stream d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unary_runs_spanning_word_edges_match_scalar() {
+        // Streams CRAFTED with an explicit r = 0 header, so each gap is
+        // coded as a pure unary run of `gap` one-bits — `encode()` would
+        // pick r > 0 at these densities and keep every run short. The
+        // 70-bit header means every run starts mid-word, so runs of
+        // 50..=200 bits cross the reader's u64 refill boundary (the
+        // `ones == avail` continuation branch), which is exactly the
+        // machinery under test.
+        for gap in [50usize, 55, 56, 57, 58, 62, 63, 64, 65, 70, 126, 127, 128, 129, 200] {
+            let d = 3 * gap + 8;
+            // Index `gap` (run of `gap` ones) then index `2·gap + 1`
+            // (another `gap`-long run starting unaligned).
+            let mut body = vec![true; gap];
+            body.push(false);
+            body.extend(vec![true; gap]);
+            body.push(false);
+            let enc = craft(d as u64, 2, 0, &body);
+            let want = BitVec::from_indices(d, &[gap, 2 * gap + 1]);
+            assert_eq!(decode_with_limit(&enc, d).unwrap(), want, "gap {gap} word decode");
+            assert_eq!(
+                scalar::decode_with_limit(&enc, d).unwrap(),
+                want,
+                "gap {gap} scalar decode"
+            );
+            // Truncating anywhere inside the runs must fail identically
+            // (EOF mid-run straddling the refill boundary).
+            for cut in 9..enc.len() {
+                assert_eq!(
+                    decode_with_limit(&enc[..cut], d),
+                    scalar::decode_with_limit(&enc[..cut], d),
+                    "gap {gap} cut {cut}"
+                );
+            }
+        }
+        // The encode()-chosen r > 0 path on the same index patterns
+        // (short runs + remainders) stays byte- and decode-identical too.
+        for gap in [57usize, 64, 129] {
+            let d = 3 * gap + 8;
+            let bv = BitVec::from_indices(d, &[gap, 2 * gap + 1]);
+            let enc = encode(&bv);
+            assert_eq!(enc, scalar::encode(&bv), "gap {gap} encode");
+            assert_eq!(decode_with_limit(&enc, d).unwrap(), bv, "gap {gap} roundtrip");
+        }
     }
 
     #[test]
@@ -247,7 +596,7 @@ mod tests {
 
     /// Craft a raw stream: header (d, count, r) + explicit payload bits.
     fn craft(d: u64, count: u64, r: u32, body: &[bool]) -> Vec<u8> {
-        let mut w = BitWriter::new();
+        let mut w = scalar::BitWriter::new();
         w.push_bits(d, 32);
         w.push_bits(count, 32);
         w.push_bits(r as u64, 6);
@@ -308,5 +657,16 @@ mod tests {
         let enc = encode(&bv);
         assert_eq!(decode_with_limit(&enc, 1000).unwrap(), bv);
         assert!(decode_with_limit(&enc, 999).is_none());
+    }
+
+    #[test]
+    fn overlong_unary_run_rejected_by_both_decoders() {
+        // A run of d+2 ones never terminated by a zero: both decoders
+        // must bail at the `q > d` guard, not walk the whole stream.
+        let d = 256u64;
+        let body = vec![true; d as usize + 2];
+        let evil = craft(d, 1, 0, &body);
+        assert!(decode_with_limit(&evil, 1 << 16).is_none());
+        assert!(scalar::decode_with_limit(&evil, 1 << 16).is_none());
     }
 }

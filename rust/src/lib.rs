@@ -11,6 +11,7 @@
 #![warn(missing_docs)]
 
 pub mod algorithms;
+pub mod bench_codec;
 pub mod bench_wire;
 pub mod cli;
 pub mod client;

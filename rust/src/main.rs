@@ -21,7 +21,9 @@
 //! fediac bench-wire [--smoke] [--jobs 4] [--rounds 3] [--clients 2]
 //!               [--d 4096] [--payload 1408] [--io both|threaded|reactor]
 //!               [--ps high|low] [--memory BYTES] [--seed 7]
-//!               [--out BENCH_WIRE.json]
+//!               [--shards N] [--out BENCH_WIRE.json]
+//! fediac bench-codec [--smoke] [--d 1048576] [--iters 40] [--density 0.05]
+//!               [--payload 1408] [--seed 7] [--out BENCH_CODEC.json]
 //! fediac client [--server host:port | --shards host:p0,host:p1,…]
 //!               [--job 1] [--client-id 0]
 //!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
@@ -345,7 +347,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let s = handle.stats();
         eprintln!(
             "[fediac] pkts={} jobs={} rounds={} dup={} spill={} spill_drop={} waves={} \
-             stalls={} idle_rel={} reserve_sup={} spoof={} bad_aux={} err={}",
+             stalls={} idle_rel={} reserve_sup={} spoof={} bad_aux={} err={} pooled={} \
+             pool_miss={}",
             s.packets,
             s.jobs_created,
             s.rounds_completed,
@@ -358,7 +361,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.reserves_suppressed,
             s.downlink_spoofs,
             s.non_finite_aux,
-            s.decode_errors
+            s.decode_errors,
+            s.frames_pooled,
+            s.pool_misses
         );
     }
 }
@@ -404,6 +409,27 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// Measure the data-plane kernels (golomb bit I/O, vote absorb, lane
+/// add, thresholding, pooled frame emission) against their scalar
+/// oracles and write the `BENCH_CODEC.json` artifact.
+fn cmd_bench_codec(args: &Args) -> Result<()> {
+    use fediac::bench_codec::{run, BenchCodecOptions};
+    let mut opts =
+        if args.get_flag("smoke") { BenchCodecOptions::smoke() } else { BenchCodecOptions::default() };
+    opts.d = args.get_usize("d", opts.d)?;
+    opts.iters = args.get_usize("iters", opts.iters)?;
+    opts.density = args.get_f64("density", opts.density)?;
+    opts.payload_budget = args.get_usize("payload", opts.payload_budget)?;
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    let out_path = args.get_str("out", "BENCH_CODEC.json");
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let report = run(&opts)?;
+    println!("{}", report.render());
+    save(&out_path, &report.to_json())?;
+    Ok(())
+}
+
 /// Measure rounds/s and bytes/round for real wire rounds over loopback,
 /// per I/O backend, and write the `BENCH_WIRE.json` artifact (the first
 /// step of the ROADMAP "cross-machine benches" item).
@@ -417,6 +443,12 @@ fn cmd_bench_wire(args: &Args) -> Result<()> {
     opts.d = args.get_usize("d", opts.d)?;
     opts.payload_budget = args.get_usize("payload", opts.payload_budget)?;
     opts.seed = args.get_u64("seed", opts.seed)?;
+    // --shards N: drive a serve_sharded deployment through the sharded
+    // fan-out client and report per-shard rounds/s (d at the payload
+    // budget must give every shard at least one vote block).
+    let shards = args.get_usize("shards", opts.shards as usize)?;
+    opts.shards = u8::try_from(shards)
+        .map_err(|_| anyhow::anyhow!("--shards {shards} out of range (max 16)"))?;
     let mut profile = ps_from(args)?;
     profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
     opts.profile = profile;
@@ -616,7 +648,7 @@ fn cmd_client(args: &Args) -> Result<()> {
 fn usage() -> ! {
     eprintln!(
         "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|chaos|\
-         bench-wire> [options]\n\
+         bench-wire|bench-codec> [options]\n\
          see README.md for the option reference"
     );
     std::process::exit(2);
@@ -636,6 +668,7 @@ fn main() -> Result<()> {
         Some("client") => cmd_client(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("bench-wire") => cmd_bench_wire(&args),
+        Some("bench-codec") => cmd_bench_codec(&args),
         _ => usage(),
     }
 }

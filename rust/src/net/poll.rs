@@ -1,12 +1,13 @@
-//! Minimal readiness + timer substrate for the single-thread reactor
-//! backend ([`crate::server`]'s `--io reactor`).
+//! Minimal readiness + timer + batched-syscall substrate for the
+//! single-thread reactor backend ([`crate::server`]'s `--io reactor`)
+//! and the client driver's poll loop.
 //!
-//! Two pieces, both dependency-free:
+//! All dependency-free (the crate builds offline without `libc`; every
+//! syscall used here is declared by hand):
 //!
 //! * [`wait_readable`] — block until a UDP socket has a datagram to read
 //!   or a timeout elapses. On Unix this is a direct `poll(2)` call on the
-//!   socket's file descriptor (declared here by hand — the crate builds
-//!   offline without `libc`); elsewhere it degrades to a short bounded
+//!   socket's file descriptor; elsewhere it degrades to a short bounded
 //!   sleep, which keeps the reactor correct (its socket is nonblocking,
 //!   so a spurious wake just reads `WouldBlock`) at the cost of latency.
 //! * [`TimerWheel`] — a coarse hashed timer wheel for the reactor's
@@ -16,9 +17,15 @@
 //!   per turn — the classic cheap trade for a device that only needs
 //!   coarse deadlines (idle reclamation, chaos-lane flushes), not
 //!   high-resolution timers.
+//! * [`recv_batch`] / [`send_batch`] / [`send_batch_connected`] —
+//!   `recvmmsg(2)` / `sendmmsg(2)` wrappers on Linux, so the reactor
+//!   drains and the emitters flush up to a whole burst of datagrams per
+//!   syscall instead of one; elsewhere they degrade to single-datagram
+//!   loops with identical semantics (the batch is a throughput
+//!   optimisation, never a behaviour change).
 
 use std::io;
-use std::net::UdpSocket;
+use std::net::{SocketAddr, UdpSocket};
 use std::time::{Duration, Instant};
 
 /// Wait until `socket` is readable or `timeout` elapses. `None` blocks
@@ -204,6 +211,349 @@ impl<T> TimerWheel<T> {
     }
 }
 
+/// True when [`recv_batch`]/[`send_batch`] are kernel-batched
+/// (`recvmmsg`/`sendmmsg`); false where they degrade to single-datagram
+/// fallbacks. Callers that would change *blocking* behaviour by issuing
+/// an extra nonblocking drain (the client driver) consult this.
+pub const MMSG_NATIVE: bool = cfg!(target_os = "linux");
+
+/// Bytes reserved per raw C sockaddr (sockaddr_in6 needs 28; padded).
+const SOCKADDR_BUF: usize = 32;
+
+/// Reusable receive-side batch: `depth` preallocated datagram buffers
+/// plus per-datagram lengths, source addresses and raw sockaddr
+/// storage, filled by [`recv_batch`]. One struct lives for the life of
+/// a reactor / client so the per-datagram storage is reused; the
+/// per-call `iovec`/`mmsghdr` arrays are rebuilt each syscall (they
+/// hold raw pointers, which would otherwise cost the batch its `Send`)
+/// — a few small allocations amortised over a whole batch of
+/// datagrams.
+#[derive(Debug)]
+pub struct RecvBatch {
+    bufs: Vec<Vec<u8>>,
+    lens: Vec<usize>,
+    addrs: Vec<SocketAddr>,
+    /// Kernel-filled raw sockaddr storage, one slot per buffer.
+    names: Vec<[u8; SOCKADDR_BUF]>,
+    count: usize,
+}
+
+impl RecvBatch {
+    /// Batch of `depth` buffers of `buf_size` bytes each (size every
+    /// buffer for the largest datagram the wire can carry —
+    /// [`crate::wire::MAX_DATAGRAM`] — or shorter datagrams truncate).
+    pub fn new(depth: usize, buf_size: usize) -> Self {
+        assert!(depth >= 1, "batch depth must be at least 1");
+        RecvBatch {
+            bufs: (0..depth).map(|_| vec![0u8; buf_size]).collect(),
+            lens: vec![0; depth],
+            addrs: vec![SocketAddr::from(([0, 0, 0, 0], 0)); depth],
+            names: vec![[0u8; SOCKADDR_BUF]; depth],
+            count: 0,
+        }
+    }
+
+    /// Maximum datagrams one [`recv_batch`] call can deliver.
+    pub fn depth(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Datagrams delivered by the most recent [`recv_batch`] call.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Datagram `i` of the most recent fill (bytes, source address).
+    pub fn datagram(&self, i: usize) -> (&[u8], SocketAddr) {
+        debug_assert!(i < self.count);
+        (&self.bufs[i][..self.lens[i]], self.addrs[i])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Linux: hand-declared recvmmsg/sendmmsg (no libc crate). Struct
+// layouts match the glibc/musl C ABI on 64-bit Linux: `#[repr(C)]`
+// inserts the same padding after the u32 `namelen` and the i32 `flags`
+// that the C compiler does.
+// ---------------------------------------------------------------------
+#[cfg(target_os = "linux")]
+mod mmsg {
+    use std::io;
+    use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, UdpSocket};
+    use std::os::unix::io::AsRawFd;
+
+    #[repr(C)]
+    struct IoVec {
+        base: *mut u8,
+        len: usize,
+    }
+
+    #[repr(C)]
+    struct MsgHdr {
+        name: *mut u8,
+        namelen: u32,
+        iov: *mut IoVec,
+        iovlen: usize,
+        control: *mut u8,
+        controllen: usize,
+        flags: i32,
+    }
+
+    #[repr(C)]
+    struct MMsgHdr {
+        hdr: MsgHdr,
+        len: u32,
+    }
+
+    extern "C" {
+        fn recvmmsg(fd: i32, msgvec: *mut MMsgHdr, vlen: u32, flags: i32, timeout: *mut u8)
+            -> i32;
+        fn sendmmsg(fd: i32, msgvec: *mut MMsgHdr, vlen: u32, flags: i32) -> i32;
+    }
+
+    const MSG_DONTWAIT: i32 = 0x40;
+    const AF_INET: u16 = 2;
+    const AF_INET6: u16 = 10;
+    use super::SOCKADDR_BUF;
+
+    /// Serialise a SocketAddr into a C sockaddr buffer; returns the
+    /// meaningful length (sockaddr_in: 16, sockaddr_in6: 28).
+    fn write_sockaddr(addr: &SocketAddr, buf: &mut [u8; SOCKADDR_BUF]) -> u32 {
+        *buf = [0; SOCKADDR_BUF];
+        match addr {
+            SocketAddr::V4(a) => {
+                buf[0..2].copy_from_slice(&AF_INET.to_ne_bytes());
+                buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+                buf[4..8].copy_from_slice(&a.ip().octets());
+                16
+            }
+            SocketAddr::V6(a) => {
+                buf[0..2].copy_from_slice(&AF_INET6.to_ne_bytes());
+                buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+                buf[4..8].copy_from_slice(&a.flowinfo().to_be_bytes());
+                buf[8..24].copy_from_slice(&a.ip().octets());
+                buf[24..28].copy_from_slice(&a.scope_id().to_ne_bytes());
+                28
+            }
+        }
+    }
+
+    /// Parse a kernel-filled sockaddr buffer back into a SocketAddr.
+    fn read_sockaddr(buf: &[u8; SOCKADDR_BUF]) -> Option<SocketAddr> {
+        let family = u16::from_ne_bytes([buf[0], buf[1]]);
+        if family == AF_INET {
+            let port = u16::from_be_bytes([buf[2], buf[3]]);
+            let ip = Ipv4Addr::new(buf[4], buf[5], buf[6], buf[7]);
+            Some(SocketAddr::new(IpAddr::V4(ip), port))
+        } else if family == AF_INET6 {
+            let port = u16::from_be_bytes([buf[2], buf[3]]);
+            let mut octets = [0u8; 16];
+            octets.copy_from_slice(&buf[8..24]);
+            Some(SocketAddr::new(IpAddr::V6(Ipv6Addr::from(octets)), port))
+        } else {
+            None
+        }
+    }
+
+    pub(super) fn recv_batch(socket: &UdpSocket, batch: &mut super::RecvBatch) -> io::Result<usize> {
+        batch.count = 0;
+        let depth = batch.bufs.len();
+        let mut iovs: Vec<IoVec> = batch
+            .bufs
+            .iter_mut()
+            .map(|b| IoVec { base: b.as_mut_ptr(), len: b.len() })
+            .collect();
+        let mut hdrs: Vec<MMsgHdr> = (0..depth)
+            .map(|i| MMsgHdr {
+                hdr: MsgHdr {
+                    name: batch.names[i].as_mut_ptr(),
+                    namelen: SOCKADDR_BUF as u32,
+                    iov: &mut iovs[i],
+                    iovlen: 1,
+                    control: std::ptr::null_mut(),
+                    controllen: 0,
+                    flags: 0,
+                },
+                len: 0,
+            })
+            .collect();
+        let rc = unsafe {
+            recvmmsg(
+                socket.as_raw_fd(),
+                hdrs.as_mut_ptr(),
+                depth as u32,
+                MSG_DONTWAIT,
+                std::ptr::null_mut(),
+            )
+        };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let got = rc as usize;
+        for i in 0..got {
+            batch.lens[i] = hdrs[i].len as usize;
+            // An unparsable family (never expected for UDP) degrades to
+            // a zero address; the frame router drops what it can't peek.
+            batch.addrs[i] = read_sockaddr(&batch.names[i])
+                .unwrap_or_else(|| SocketAddr::from(([0, 0, 0, 0], 0)));
+        }
+        batch.count = got;
+        Ok(got)
+    }
+
+    /// Send `msgs` with explicit destinations; returns how many of the
+    /// *leading* messages the kernel confirmed sent.
+    pub(super) fn send_batch(
+        socket: &UdpSocket,
+        msgs: &[(Vec<u8>, SocketAddr)],
+    ) -> io::Result<usize> {
+        let mut names = vec![[0u8; SOCKADDR_BUF]; msgs.len()];
+        let mut lens = vec![0u32; msgs.len()];
+        for (i, (_, addr)) in msgs.iter().enumerate() {
+            lens[i] = write_sockaddr(addr, &mut names[i]);
+        }
+        let mut iovs: Vec<IoVec> = msgs
+            .iter()
+            .map(|(b, _)| IoVec { base: b.as_ptr() as *mut u8, len: b.len() })
+            .collect();
+        let mut hdrs: Vec<MMsgHdr> = (0..msgs.len())
+            .map(|i| MMsgHdr {
+                hdr: MsgHdr {
+                    name: names[i].as_mut_ptr(),
+                    namelen: lens[i],
+                    iov: &mut iovs[i],
+                    iovlen: 1,
+                    control: std::ptr::null_mut(),
+                    controllen: 0,
+                    flags: 0,
+                },
+                len: 0,
+            })
+            .collect();
+        let rc =
+            unsafe { sendmmsg(socket.as_raw_fd(), hdrs.as_mut_ptr(), msgs.len() as u32, 0) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(rc as usize)
+    }
+
+    /// Send pre-encoded frames on a *connected* socket (null name — the
+    /// kernel routes to the connected peer).
+    pub(super) fn send_batch_connected(socket: &UdpSocket, frames: &[&[u8]]) -> io::Result<usize> {
+        let mut iovs: Vec<IoVec> = frames
+            .iter()
+            .map(|b| IoVec { base: b.as_ptr() as *mut u8, len: b.len() })
+            .collect();
+        let mut hdrs: Vec<MMsgHdr> = (0..frames.len())
+            .map(|i| MMsgHdr {
+                hdr: MsgHdr {
+                    name: std::ptr::null_mut(),
+                    namelen: 0,
+                    iov: &mut iovs[i],
+                    iovlen: 1,
+                    control: std::ptr::null_mut(),
+                    controllen: 0,
+                    flags: 0,
+                },
+                len: 0,
+            })
+            .collect();
+        let rc =
+            unsafe { sendmmsg(socket.as_raw_fd(), hdrs.as_mut_ptr(), frames.len() as u32, 0) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(rc as usize)
+    }
+}
+
+/// Drain up to `batch.depth()` datagrams with one syscall (Linux:
+/// `recvmmsg` with `MSG_DONTWAIT`; elsewhere: a single nonblocking
+/// `recv_from`). Returns how many datagrams were filled; `WouldBlock`
+/// when the socket is empty. Intended for nonblocking sockets (the
+/// reactor) or after a readiness wait (the client driver).
+pub fn recv_batch(socket: &UdpSocket, batch: &mut RecvBatch) -> io::Result<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        mmsg::recv_batch(socket, batch)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        batch.count = 0;
+        let (n, from) = socket.recv_from(&mut batch.bufs[0])?;
+        batch.lens[0] = n;
+        batch.addrs[0] = from;
+        batch.count = 1;
+        Ok(1)
+    }
+}
+
+/// Transmit a burst of `(bytes, destination)` datagrams, batching the
+/// syscalls where the platform allows (`sendmmsg` on Linux; a plain
+/// `send_to` loop elsewhere). `sendmmsg` stops at the first refused
+/// datagram and reports the sent prefix (the refusal itself surfaces as
+/// an error on the *next* call), so the loop here retries the unsent
+/// tail and skips exactly one datagram per hard error — identical
+/// per-datagram semantics to the naive send loop. Errors are swallowed
+/// per frame; UDP callers rely on retransmission anyway. Returns the
+/// count of datagrams confirmed sent.
+pub fn send_batch(socket: &UdpSocket, msgs: &[(Vec<u8>, SocketAddr)]) -> io::Result<usize> {
+    let mut sent_total = 0usize;
+    let mut start = 0usize;
+    while start < msgs.len() {
+        let rest = &msgs[start..];
+        #[cfg(target_os = "linux")]
+        let attempt = mmsg::send_batch(socket, rest);
+        #[cfg(not(target_os = "linux"))]
+        let attempt = {
+            let (bytes, dest) = &rest[0];
+            socket.send_to(bytes, dest).map(|_| 1)
+        };
+        match attempt {
+            Ok(0) => start += 1, // defensive: never spin in place
+            Ok(sent) => {
+                sent_total += sent;
+                start += sent;
+            }
+            Err(_) => start += 1, // head datagram refused: skip it
+        }
+    }
+    Ok(sent_total)
+}
+
+/// One batched send attempt on a *connected* socket (the client
+/// driver): frames go to the connected peer. Unlike [`send_batch`] this
+/// does NOT loop — it returns the count of *leading* frames confirmed
+/// sent, so the caller can meter exactly which bytes hit the wire and
+/// drive its own retry/skip policy. The contract on BOTH platforms:
+/// `Ok(sent)` with `sent < frames.len()` means frames `0..sent` were
+/// sent and frame `sent` was attempted and refused (`sendmmsg` stops at
+/// the first failing datagram; the portable loop stops at the first
+/// failing `send`), so the caller may skip exactly that frame. An
+/// `Err` means the head frame was refused and nothing was sent.
+pub fn send_batch_connected(socket: &UdpSocket, frames: &[&[u8]]) -> io::Result<usize> {
+    if frames.is_empty() {
+        return Ok(0);
+    }
+    #[cfg(target_os = "linux")]
+    {
+        mmsg::send_batch_connected(socket, frames)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let mut sent = 0usize;
+        for f in frames {
+            match socket.send(f) {
+                Ok(_) => sent += 1,
+                Err(e) if sent == 0 => return Err(e),
+                Err(_) => break,
+            }
+        }
+        Ok(sent)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +624,72 @@ mod tests {
         let nd = wheel.next_deadline().unwrap();
         assert!(nd >= deadline.checked_sub(G).unwrap(), "deadline too early");
         assert!(nd <= deadline + G, "deadline too late");
+    }
+
+    #[test]
+    fn send_batch_and_recv_batch_roundtrip_many_datagrams() {
+        let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        rx.set_nonblocking(true).unwrap();
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let dest = rx.local_addr().unwrap();
+        let msgs: Vec<(Vec<u8>, std::net::SocketAddr)> =
+            (0..10u8).map(|i| (vec![i; (i as usize + 1) * 3], dest)).collect();
+        assert_eq!(send_batch(&tx, &msgs).unwrap(), 10);
+
+        // Drain with a batch smaller than the burst: two+ calls, every
+        // datagram intact and correctly sized, source address right.
+        let mut batch = RecvBatch::new(4, 2048);
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while got.len() < 10 {
+            assert!(Instant::now() < deadline, "only {} of 10 datagrams", got.len());
+            match recv_batch(&rx, &mut batch) {
+                Ok(n) => {
+                    assert!((1..=batch.depth()).contains(&n));
+                    for i in 0..n {
+                        let (bytes, from) = batch.datagram(i);
+                        assert_eq!(from, tx.local_addr().unwrap());
+                        got.push(bytes.to_vec());
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => panic!("recv_batch: {e}"),
+            }
+        }
+        got.sort();
+        let mut want: Vec<Vec<u8>> = msgs.into_iter().map(|(b, _)| b).collect();
+        want.sort();
+        assert_eq!(got, want);
+        // Empty socket reports WouldBlock, not a phantom datagram.
+        assert!(matches!(
+            recv_batch(&rx, &mut batch),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock
+        ));
+    }
+
+    #[test]
+    fn send_batch_connected_reports_sent_prefix() {
+        let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        rx.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        tx.connect(rx.local_addr().unwrap()).unwrap();
+        let frames: Vec<Vec<u8>> = (0..5u8).map(|i| vec![0x40 | i; 8]).collect();
+        let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+        let sent = send_batch_connected(&tx, &refs).unwrap();
+        assert_eq!(sent, 5);
+        let mut buf = [0u8; 64];
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            let (n, _) = rx.recv_from(&mut buf).unwrap();
+            got.push(buf[..n].to_vec());
+        }
+        got.sort();
+        let mut want = frames.clone();
+        want.sort();
+        assert_eq!(got, want);
+        assert_eq!(send_batch_connected(&tx, &[]).unwrap(), 0);
     }
 
     #[test]

@@ -204,23 +204,29 @@ pub(crate) fn unknown_job_reply(
 
 /// Send one [`crate::server::JobOutput`]'s frames, through the job's
 /// downlink chaos lane when one is attached. Send errors are ignored —
-/// UDP semantics, the client's retransmission recovers.
+/// UDP semantics, the client's retransmission recovers. The frames are
+/// borrowed, not consumed, so the caller can hand the buffers back to
+/// the job's pool ([`crate::server::Job::recycle`]) afterwards. The
+/// clean (no-chaos) path flushes through one
+/// [`crate::net::poll::send_batch`] call — `sendmmsg(2)` bursts on
+/// Linux (the kernel caps each call at UIO_MAXIOV and the wrapper
+/// loops over the remainder), a plain send loop elsewhere.
 pub(crate) fn transmit(
     socket: &UdpSocket,
     lane: &mut Option<ChaosLane<SocketAddr>>,
-    frames: Outgoing,
+    frames: &Outgoing,
     now: Instant,
 ) {
-    for (bytes, dest) in frames {
-        match lane.as_mut() {
-            Some(l) => {
-                for (pkt, to) in l.process(&bytes, dest, now) {
+    match lane.as_mut() {
+        Some(l) => {
+            for (bytes, dest) in frames {
+                for (pkt, to) in l.process(bytes, *dest, now) {
                     let _ = socket.send_to(&pkt, to);
                 }
             }
-            None => {
-                let _ = socket.send_to(&bytes, dest);
-            }
+        }
+        None => {
+            let _ = crate::net::poll::send_batch(socket, frames);
         }
     }
 }

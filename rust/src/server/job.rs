@@ -41,7 +41,8 @@ use crate::server::{HostBudget, ServerStats};
 use crate::switch::{alu, window_blocks, Mark, RegisterFile, UpdateAggregator, VoteAggregator};
 use crate::util::BitVec;
 use crate::wire::{
-    byte_chunks, encode_frame, lanes_iter, update_chunks, Frame, Header, JobSpec, WireKind,
+    byte_chunk_bounds, encode_lanes_into, lanes_iter, update_chunk_bounds, Frame, FrameScratch,
+    Header, JobSpec, WireKind,
 };
 
 /// `JoinAck` status: registered (or re-registered) successfully.
@@ -62,6 +63,12 @@ pub type Outgoing = Vec<(Vec<u8>, SocketAddr)>;
 /// the datagrams to transmit now, and the deadline (if any) at which
 /// [`Job::on_tick`] wants to run next. The job never touches a socket
 /// or a clock itself — that is the whole sans-I/O contract.
+///
+/// The frame buffers come from the job's [`FrameScratch`] pool: a
+/// backend that hands them back through [`Job::recycle`] after
+/// transmitting keeps steady-state emission allocation-free (tracked by
+/// `ServerStats::{frames_pooled, pool_misses}`). Not recycling is
+/// correct too — it merely re-allocates.
 #[derive(Debug, Default)]
 pub struct JobOutput {
     /// Datagrams to transmit, in order.
@@ -548,8 +555,24 @@ pub struct Job {
     budget: Arc<HostBudget>,
     /// Bytes currently reserved in `budget` (released on drop).
     reserved: usize,
+    /// Datagram-buffer pool every emitted frame draws on; backends feed
+    /// transmitted buffers back through [`Job::recycle`].
+    scratch: FrameScratch,
+    /// Reused holder for a broadcast's per-chunk template frames
+    /// (encoded once, fanned out per destination).
+    templates: Vec<Vec<u8>>,
+    /// Reused destination list for multicast fan-out.
+    dests: Vec<SocketAddr>,
+    /// Reused lane-serialisation buffer for aggregate chunks.
+    lane_buf: Vec<u8>,
+    /// Reused outer `Outgoing` vectors (returned by [`Job::recycle`]).
+    out_pool: Vec<Outgoing>,
     state: Option<JobState>,
 }
+
+/// Outer `Outgoing` vectors kept for reuse (one per in-flight
+/// [`JobOutput`]; backends hold at most a couple at a time).
+const MAX_OUT_POOL: usize = 8;
 
 /// How many completed rounds a job keeps for retransmitted polls.
 const ROUND_HISTORY: u32 = 3;
@@ -591,7 +614,20 @@ impl Job {
         budget: Arc<HostBudget>,
         stats: Arc<ServerStats>,
     ) -> Self {
-        Job { id, profile, limits, stats, budget, reserved: 0, state: None }
+        Job {
+            id,
+            profile,
+            limits,
+            stats,
+            budget,
+            reserved: 0,
+            scratch: FrameScratch::new(),
+            templates: Vec::new(),
+            dests: Vec::new(),
+            lane_buf: Vec::new(),
+            out_pool: Vec::new(),
+            state: None,
+        }
     }
 
     /// True once a valid `Join` has fixed the job's spec.
@@ -619,9 +655,12 @@ impl Job {
 
     /// Handle one decoded frame at time `now`; returns the datagrams to
     /// send plus the job's next timer deadline. Pure with respect to
-    /// I/O: the caller owns the socket and the clock.
+    /// I/O: the caller owns the socket and the clock. The returned
+    /// buffers are pooled — see [`Job::recycle`].
     pub fn handle(&mut self, frame: &Frame<'_>, from: SocketAddr, now: Instant) -> JobOutput {
-        let frames = self.handle_frames(frame, from, now);
+        let mut frames = self.out_pool.pop().unwrap_or_default();
+        self.handle_frames(frame, from, now, &mut frames);
+        self.sync_pool_stats();
         JobOutput { frames, timer: self.next_timer() }
     }
 
@@ -633,7 +672,32 @@ impl Job {
         if let Some(st) = self.state.as_mut() {
             Self::reap_idle(st, None, now, &self.limits, &self.stats);
         }
-        JobOutput { frames: Vec::new(), timer: self.next_timer() }
+        JobOutput { frames: self.out_pool.pop().unwrap_or_default(), timer: self.next_timer() }
+    }
+
+    /// Hand a transmitted [`JobOutput`]'s buffers back to the pool so
+    /// the next emission reuses them instead of allocating. Optional —
+    /// a caller that drops the output instead merely costs allocations
+    /// (counted in `ServerStats::pool_misses`).
+    pub fn recycle(&mut self, mut frames: Outgoing) {
+        for (buf, _) in frames.drain(..) {
+            self.scratch.give(buf);
+        }
+        if self.out_pool.len() < MAX_OUT_POOL {
+            self.out_pool.push(frames);
+        }
+    }
+
+    /// Fold the scratch pool's since-last-call hit/miss counters into
+    /// the shared daemon stats.
+    fn sync_pool_stats(&mut self) {
+        let (hits, misses) = self.scratch.drain_counters();
+        if hits > 0 {
+            ServerStats::add(&self.stats.frames_pooled, hits);
+        }
+        if misses > 0 {
+            ServerStats::add(&self.stats.pool_misses, misses);
+        }
     }
 
     /// Earliest idle-reclaim deadline across this job's rounds, `None`
@@ -648,7 +712,13 @@ impl Job {
             .min()
     }
 
-    fn handle_frames(&mut self, frame: &Frame<'_>, from: SocketAddr, now: Instant) -> Outgoing {
+    fn handle_frames(
+        &mut self,
+        frame: &Frame<'_>,
+        from: SocketAddr,
+        now: Instant,
+        out: &mut Outgoing,
+    ) {
         let h = frame.header;
         // Downlink kinds arriving at the server are reflections or
         // server-bound spoofs. They must be dropped *silently* — even a
@@ -659,45 +729,39 @@ impl Job {
             WireKind::JoinAck | WireKind::Gia | WireKind::Aggregate | WireKind::NotReady
         ) {
             ServerStats::bump(&self.stats.downlink_spoofs);
-            return Vec::new();
+            return;
         }
         match h.kind {
-            WireKind::Join => self.on_join(h, frame.payload, from),
-            _ if self.state.is_none() => vec![(
-                encode_frame(
-                    &Header::control(WireKind::JoinAck, self.id, h.client, h.round, JOIN_UNKNOWN_JOB),
-                    &[],
-                ),
-                from,
-            )],
-            WireKind::Vote => self.on_vote(h, frame.payload, now),
-            WireKind::Update => self.on_update(h, frame.payload, now),
-            WireKind::Poll => self.on_poll(h, from),
+            WireKind::Join => self.on_join(h, frame.payload, from, out),
+            _ if self.state.is_none() => {
+                self.ack(h.client, h.round, JOIN_UNKNOWN_JOB, from, out)
+            }
+            WireKind::Vote => self.on_vote(h, frame.payload, now, out),
+            WireKind::Update => self.on_update(h, frame.payload, now, out),
+            WireKind::Poll => self.on_poll(h, from, out),
             // Unreachable: every uplink kind is matched above.
-            _ => Vec::new(),
+            _ => {}
         }
     }
 
-    fn ack(&self, client: u16, round: u32, status: u32, to: SocketAddr) -> Outgoing {
-        vec![(
-            encode_frame(&Header::control(WireKind::JoinAck, self.id, client, round, status), &[]),
-            to,
-        )]
+    fn ack(&mut self, client: u16, round: u32, status: u32, to: SocketAddr, out: &mut Outgoing) {
+        let h = Header::control(WireKind::JoinAck, self.id, client, round, status);
+        out.push((self.scratch.encode(&h, &[]), to));
     }
 
-    fn on_join(&mut self, h: Header, payload: &[u8], from: SocketAddr) -> Outgoing {
+    fn on_join(&mut self, h: Header, payload: &[u8], from: SocketAddr, out: &mut Outgoing) {
         let spec = match JobSpec::decode(payload) {
             Ok(s) => s,
-            Err(_) => return self.ack(h.client, h.round, JOIN_BAD_SPEC, from),
+            Err(_) => return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out),
         };
         // One resident block of either phase must fit this switch's
         // register file (vote: 2 bytes per dimension, update: the lanes).
         let min_block = (spec.vote_block_bits() * 2).max(spec.payload_budget as usize);
         if min_block > self.profile.memory_bytes || h.client >= spec.n_clients {
-            return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
+            return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out);
         }
         if self.state.as_ref().is_some_and(|st| st.spec != spec) {
-            return self.ack(h.client, h.round, JOIN_SPEC_MISMATCH, from);
+            return self.ack(h.client, h.round, JOIN_SPEC_MISMATCH, from, out);
         }
         if self.state.is_none() {
             // Bound host-side allocation from an untrusted spec: every
@@ -708,7 +772,7 @@ impl Job {
             // deployment the tenant's shards draw on ONE budget.
             let worst = spec.host_bytes_per_round().saturating_mul(MAX_LIVE_ROUNDS);
             if !self.budget.try_reserve(self.id, worst) {
-                return self.ack(h.client, h.round, JOIN_BAD_SPEC, from);
+                return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out);
             }
             self.reserved = worst;
             self.state = Some(JobState {
@@ -721,7 +785,7 @@ impl Job {
         }
         self.state.as_mut().unwrap().clients.insert(h.client, from);
         ServerStats::bump(&self.stats.joins);
-        self.ack(h.client, h.round, JOIN_OK, from)
+        self.ack(h.client, h.round, JOIN_OK, from, out)
     }
 
     /// Create the round lazily and prune retired history. Only *completed*
@@ -794,11 +858,11 @@ impl Job {
         }
     }
 
-    fn on_vote(&mut self, h: Header, payload: &[u8], now: Instant) -> Outgoing {
+    fn on_vote(&mut self, h: Header, payload: &[u8], now: Instant, out: &mut Outgoing) {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
-            return Vec::new();
+            return;
         }
         // The aux word is this client's local max-|U|, folded with max
         // into the global m every client later derives f from. A single
@@ -807,7 +871,7 @@ impl Job {
         let local_max = f32::from_bits(h.aux);
         if !local_max.is_finite() {
             ServerStats::bump(&self.stats.non_finite_aux);
-            return Vec::new();
+            return;
         }
         Self::reap_idle(st, Some(h.round), now, &self.limits, &self.stats);
         Self::ensure_round(st, h.round, self.profile.memory_bytes, &self.limits, now);
@@ -820,7 +884,7 @@ impl Job {
             // under the per-source budget — answering every retransmitted
             // data frame with the full set would be a reflection vector.
             ServerStats::bump(&self.stats.duplicates);
-            return Vec::new();
+            return;
         }
         let done = rs.vote_packet(
             &spec,
@@ -834,24 +898,34 @@ impl Job {
             now,
         );
         if !done {
-            return Vec::new();
+            return;
         }
         rs.finish_phase1(&spec, self.profile.memory_bytes, &self.stats);
-        let mut frames = Self::gia_frames(self.id, h.round, rs, &spec);
+        Self::gia_templates(&mut self.scratch, &mut self.templates, self.id, h.round, rs, &spec);
         if rs.agg_done {
             // Empty consensus: phase 2 closed inside finish_phase1, so
             // this multicast is the only chance to answer the clients'
             // (empty) aggregate wait without costing each a poll cycle.
-            frames.extend(Self::agg_frames(self.id, h.round, rs, &spec));
+            Self::agg_templates(
+                &mut self.scratch,
+                &mut self.lane_buf,
+                &mut self.templates,
+                self.id,
+                h.round,
+                rs,
+                &spec,
+            );
         }
-        Self::to_all(clients, &frames)
+        self.dests.clear();
+        self.dests.extend(clients.values().copied());
+        Self::fan_out(&mut self.scratch, &mut self.templates, &self.dests, out);
     }
 
-    fn on_update(&mut self, h: Header, payload: &[u8], now: Instant) -> Outgoing {
+    fn on_update(&mut self, h: Header, payload: &[u8], now: Instant, out: &mut Outgoing) {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
-            return Vec::new();
+            return;
         }
         Self::reap_idle(st, Some(h.round), now, &self.limits, &self.stats);
         let JobState { spec, registers, rounds, clients } = st;
@@ -860,19 +934,19 @@ impl Job {
             // Updates for an unknown round (e.g. pruned): nothing to join
             // them to — the client's poll will get NotReady.
             ServerStats::bump(&self.stats.decode_errors);
-            return Vec::new();
+            return;
         };
         if rs.gia.is_none() {
             // Phase 2 data before phase 1 finished — protocol violation or
             // heavy reordering; drop and let the client retransmit.
             ServerStats::bump(&self.stats.decode_errors);
-            return Vec::new();
+            return;
         }
         if rs.agg_done {
             // Round already closed: as with late votes, recovery goes
             // through the budgeted Poll path, not data-frame echoes.
             ServerStats::bump(&self.stats.duplicates);
-            return Vec::new();
+            return;
         }
         let done = rs.update_packet(
             &spec,
@@ -885,113 +959,155 @@ impl Job {
             now,
         );
         if !done {
-            return Vec::new();
+            return;
         }
         rs.agg_done = true;
         ServerStats::bump(&self.stats.rounds_completed);
-        let frames = Self::agg_frames(self.id, h.round, rs, &spec);
-        Self::to_all(clients, &frames)
+        Self::agg_templates(
+            &mut self.scratch,
+            &mut self.lane_buf,
+            &mut self.templates,
+            self.id,
+            h.round,
+            rs,
+            &spec,
+        );
+        self.dests.clear();
+        self.dests.extend(clients.values().copied());
+        Self::fan_out(&mut self.scratch, &mut self.templates, &self.dests, out);
     }
 
-    fn on_poll(&mut self, h: Header, from: SocketAddr) -> Outgoing {
+    fn on_poll(&mut self, h: Header, from: SocketAddr, out: &mut Outgoing) {
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
-            return Vec::new();
+            return;
         }
         let JobState { spec, rounds, clients, .. } = st;
         let spec = *spec;
-        let not_ready = vec![(
-            encode_frame(
-                &Header::control(WireKind::NotReady, self.id, h.client, h.round, h.aux),
-                &[],
-            ),
-            from,
-        )];
+        let not_ready = Header::control(WireKind::NotReady, self.id, h.client, h.round, h.aux);
         let Some(rs) = rounds.get_mut(&h.round) else {
-            return not_ready;
+            out.push((self.scratch.encode(&not_ready, &[]), from));
+            return;
         };
         let serving = (h.aux == WireKind::Gia as u32 && rs.gia.is_some())
             || (h.aux == WireKind::Aggregate as u32 && rs.agg_done);
         if !serving {
-            return not_ready;
+            out.push((self.scratch.encode(&not_ready, &[]), from));
+            return;
         }
         // A poll's reply is the full multi-frame set — charge it to the
         // per-source reflection budget. Addresses that came through Join
         // keep a seat at the table and get extra budget headroom.
         let registered = clients.values().any(|a| *a == from);
         if !rs.charge_reserve(from, registered, &self.limits, &self.stats) {
-            return Vec::new();
+            return;
         }
         if h.aux == WireKind::Gia as u32 {
-            Self::to_one(from, Self::gia_frames(self.id, h.round, rs, &spec))
+            Self::gia_templates(&mut self.scratch, &mut self.templates, self.id, h.round, rs, &spec);
         } else {
-            Self::to_one(from, Self::agg_frames(self.id, h.round, rs, &spec))
+            Self::agg_templates(
+                &mut self.scratch,
+                &mut self.lane_buf,
+                &mut self.templates,
+                self.id,
+                h.round,
+                rs,
+                &spec,
+            );
+        }
+        self.dests.clear();
+        self.dests.push(from);
+        Self::fan_out(&mut self.scratch, &mut self.templates, &self.dests, out);
+    }
+
+    /// Encode the GIA broadcast once into pooled template buffers;
+    /// clients ignore the destination field on downlink frames, so one
+    /// template set serves every receiver via [`Self::fan_out`].
+    fn gia_templates(
+        scratch: &mut FrameScratch,
+        templates: &mut Vec<Vec<u8>>,
+        job: u32,
+        round: u32,
+        rs: &RoundState,
+        spec: &JobSpec,
+    ) {
+        let ready = rs.gia.as_ref().expect("gia ready");
+        let budget = spec.payload_budget as usize;
+        let n_blocks = byte_chunk_bounds(ready.encoded.len(), budget).count() as u32;
+        for (i, (lo, hi)) in byte_chunk_bounds(ready.encoded.len(), budget).enumerate() {
+            let chunk = &ready.encoded[lo..hi];
+            let header = Header {
+                kind: WireKind::Gia,
+                client: u16::MAX,
+                job,
+                round,
+                block: i as u32,
+                n_blocks,
+                elems: chunk.len() as u32,
+                aux: ready.global_max.to_bits(),
+            };
+            templates.push(scratch.encode(&header, chunk));
         }
     }
 
-    /// Encode the GIA broadcast once; clients ignore the destination field
-    /// on downlink frames, so one frame set serves every receiver.
-    fn gia_frames(job: u32, round: u32, rs: &RoundState, spec: &JobSpec) -> Vec<Vec<u8>> {
-        let ready = rs.gia.as_ref().expect("gia ready");
-        let chunks = byte_chunks(&ready.encoded, spec.payload_budget as usize);
-        let n_blocks = chunks.len() as u32;
-        chunks
-            .iter()
-            .enumerate()
-            .map(|(i, chunk)| {
-                let header = Header {
-                    kind: WireKind::Gia,
-                    client: u16::MAX,
-                    job,
-                    round,
-                    block: i as u32,
-                    n_blocks,
-                    elems: chunk.len() as u32,
-                    aux: ready.global_max.to_bits(),
-                };
-                encode_frame(&header, chunk)
-            })
-            .collect()
+    /// Encode the aggregate broadcast once into pooled template buffers
+    /// (see [`Self::gia_templates`]).
+    fn agg_templates(
+        scratch: &mut FrameScratch,
+        lane_buf: &mut Vec<u8>,
+        templates: &mut Vec<Vec<u8>>,
+        job: u32,
+        round: u32,
+        rs: &RoundState,
+        spec: &JobSpec,
+    ) {
+        let budget = spec.payload_budget as usize;
+        let n_blocks = update_chunk_bounds(rs.upd_acc.len(), budget).count() as u32;
+        for (i, (lo, hi)) in update_chunk_bounds(rs.upd_acc.len(), budget).enumerate() {
+            encode_lanes_into(lane_buf, &rs.upd_acc[lo..hi]);
+            let header = Header {
+                kind: WireKind::Aggregate,
+                client: u16::MAX,
+                job,
+                round,
+                block: i as u32,
+                n_blocks,
+                elems: (hi - lo) as u32,
+                aux: rs.upd_acc.len() as u32,
+            };
+            templates.push(scratch.encode(&header, lane_buf));
+        }
     }
 
-    /// Encode the aggregate broadcast once (see [`Self::gia_frames`]).
-    fn agg_frames(job: u32, round: u32, rs: &RoundState, spec: &JobSpec) -> Vec<Vec<u8>> {
-        let chunks = update_chunks(&rs.upd_acc, spec.payload_budget as usize);
-        let n_blocks = chunks.len() as u32;
-        chunks
-            .iter()
-            .enumerate()
-            .map(|(i, (lanes, bytes))| {
-                let header = Header {
-                    kind: WireKind::Aggregate,
-                    client: u16::MAX,
-                    job,
-                    round,
-                    block: i as u32,
-                    n_blocks,
-                    elems: *lanes as u32,
-                    aux: rs.upd_acc.len() as u32,
-                };
-                encode_frame(&header, bytes)
-            })
-            .collect()
-    }
-
-    /// Address one pre-encoded frame set to a single receiver.
-    fn to_one(addr: SocketAddr, frames: Vec<Vec<u8>>) -> Outgoing {
-        frames.into_iter().map(|b| (b, addr)).collect()
-    }
-
-    /// Fan one pre-encoded frame set out to every registered client.
-    fn to_all(clients: &HashMap<u16, SocketAddr>, frames: &[Vec<u8>]) -> Outgoing {
-        let mut out = Vec::with_capacity(clients.len() * frames.len());
-        for &addr in clients.values() {
-            for frame in frames {
-                out.push((frame.clone(), addr));
+    /// Address the template frame set to every destination, preserving
+    /// the historical order (per destination: the full set in block
+    /// order). Every destination but the last copies through the pool;
+    /// the last takes ownership, so the templates drain back to byte
+    /// buffers with zero waste. No destinations ⇒ templates recycle.
+    fn fan_out(
+        scratch: &mut FrameScratch,
+        templates: &mut Vec<Vec<u8>>,
+        dests: &[SocketAddr],
+        out: &mut Outgoing,
+    ) {
+        match dests.split_last() {
+            None => {
+                for t in templates.drain(..) {
+                    scratch.give(t);
+                }
+            }
+            Some((&last, rest)) => {
+                for &dest in rest {
+                    for t in templates.iter() {
+                        out.push((scratch.copy(t), dest));
+                    }
+                }
+                for t in templates.drain(..) {
+                    out.push((t, last));
+                }
             }
         }
-        out
     }
 }
 
@@ -1010,7 +1126,9 @@ impl Drop for Job {
 mod tests {
     use super::*;
     use crate::compress::deduce_gia;
-    use crate::wire::{decode_frame, vote_chunks, ChunkAssembler, ShardPlan};
+    use crate::wire::{
+        decode_frame, encode_frame, update_chunks, vote_chunks, ChunkAssembler, ShardPlan,
+    };
 
     fn addr(port: u16) -> SocketAddr {
         format!("127.0.0.1:{port}").parse().unwrap()
@@ -1567,6 +1685,48 @@ mod tests {
         drop(shard0);
         let out = feed(&mut shard1, &join_frame(4, 0, &spec), addr(4701));
         assert_eq!(decode_frame(&out[0].0).unwrap().header.aux, JOIN_OK);
+    }
+
+    #[test]
+    fn steady_state_rounds_emit_from_the_pool() {
+        // Round 0 warms the frame pool (misses allowed); every later
+        // round must emit entirely from recycled buffers — the
+        // allocation-free steady state the backends get by calling
+        // `recycle` after each transmit.
+        let spec = mkspec(256, 2, 1, 8);
+        let mut job = make_job(&spec, 1 << 20);
+        let run_round = |job: &mut Job, round: u32| {
+            let votes = BitVec::from_indices(256, &[1, 7, 100]);
+            for c in 0..2u16 {
+                for f in vote_frames(9, c, round, &votes, &spec) {
+                    let frame = decode_frame(&f).unwrap();
+                    let out = job.handle(&frame, addr(4000 + c), Instant::now());
+                    job.recycle(out.frames);
+                }
+            }
+            let k_s = job.round_gia(round).unwrap().count_ones();
+            let lanes: Vec<i32> = (0..k_s as i32).collect();
+            for c in 0..2u16 {
+                for f in update_frames(9, c, round, &lanes, &spec) {
+                    let frame = decode_frame(&f).unwrap();
+                    let out = job.handle(&frame, addr(4000 + c), Instant::now());
+                    job.recycle(out.frames);
+                }
+            }
+            assert!(job.round_aggregate(round).is_some(), "round {round} incomplete");
+        };
+        run_round(&mut job, 0);
+        let warmup_misses = stat(&job.stats.pool_misses);
+        assert!(warmup_misses > 0, "warm-up must populate the pool");
+        for r in 1..4 {
+            run_round(&mut job, r);
+        }
+        assert_eq!(
+            stat(&job.stats.pool_misses),
+            warmup_misses,
+            "steady-state rounds allocated fresh frame buffers"
+        );
+        assert!(stat(&job.stats.frames_pooled) > 0, "pool never served a frame");
     }
 
     #[test]

@@ -159,6 +159,13 @@ pub struct ServerStats {
     /// sleep until the job's own deadline instead of polling on a fixed
     /// tick.
     pub idle_wakeups: AtomicU64,
+    /// Outgoing frame buffers served from the per-job
+    /// [`crate::wire::FrameScratch`] pool (recycled, no allocation).
+    pub frames_pooled: AtomicU64,
+    /// Outgoing frame buffers freshly allocated because the pool was
+    /// empty. Grows during warm-up only: steady-state rounds must hold
+    /// this flat (`fediac bench-codec` / `bench-wire` assert it).
+    pub pool_misses: AtomicU64,
 }
 
 /// Point-in-time copy of [`ServerStats`] for reporting.
@@ -200,6 +207,38 @@ pub struct StatsSnapshot {
     pub workers_spawned: u64,
     /// See [`ServerStats::idle_wakeups`].
     pub idle_wakeups: u64,
+    /// See [`ServerStats::frames_pooled`].
+    pub frames_pooled: u64,
+    /// See [`ServerStats::pool_misses`].
+    pub pool_misses: u64,
+}
+
+impl StatsSnapshot {
+    /// Fold another daemon's counters in — the single place that knows
+    /// every field, so multi-shard aggregation (the shard-aware wire
+    /// bench) cannot silently drop a counter added later.
+    pub fn merge(&mut self, other: &StatsSnapshot) {
+        self.packets += other.packets;
+        self.decode_errors += other.decode_errors;
+        self.duplicates += other.duplicates;
+        self.spilled += other.spilled;
+        self.spill_dropped += other.spill_dropped;
+        self.waves += other.waves;
+        self.overflow_lanes += other.overflow_lanes;
+        self.register_stalls += other.register_stalls;
+        self.reserves_suppressed += other.reserves_suppressed;
+        self.idle_releases += other.idle_releases;
+        self.downlink_spoofs += other.downlink_spoofs;
+        self.non_finite_aux += other.non_finite_aux;
+        self.joins += other.joins;
+        self.jobs_created += other.jobs_created;
+        self.jobs_rejected += other.jobs_rejected;
+        self.rounds_completed += other.rounds_completed;
+        self.workers_spawned += other.workers_spawned;
+        self.idle_wakeups += other.idle_wakeups;
+        self.frames_pooled += other.frames_pooled;
+        self.pool_misses += other.pool_misses;
+    }
 }
 
 impl ServerStats {
@@ -236,6 +275,8 @@ impl ServerStats {
             rounds_completed: self.rounds_completed.load(Ordering::Relaxed),
             workers_spawned: self.workers_spawned.load(Ordering::Relaxed),
             idle_wakeups: self.idle_wakeups.load(Ordering::Relaxed),
+            frames_pooled: self.frames_pooled.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
         }
     }
 }

@@ -13,11 +13,20 @@
 //! loop {
 //!   sleep until: socket readable | earliest wheel deadline
 //!                | chaos flush tick (only while copies are held)
-//!   drain the socket (bounded batch), feeding Job::handle
+//!   drain the socket (recvmmsg batches, bounded budget), feeding Job::handle
 //!   fire due wheel entries, feeding Job::on_tick
 //!   flush chaos lanes holding overdue reordered copies
 //! }
 //! ```
+//!
+//! I/O is batched on both sides: receives pull up to `RECV_BATCH_DEPTH`
+//! datagrams per `recvmmsg(2)` call and clean-path transmits flush
+//! through `sendmmsg(2)` bursts (the shared `daemon::transmit`).
+//! Emitted frame buffers recycle through the per-job
+//! [`crate::wire::FrameScratch`] pool, so steady-state frame emission
+//! allocates nothing (`pool_misses` stays flat); what remains per burst
+//! is a few small `iovec`/`mmsghdr` scratch vectors inside the mmsg
+//! wrappers, amortised across the whole batch.
 //!
 //! Routing and admission (job cap, unconfigured-job eviction, the
 //! unknown-job `JoinAck`, downlink-spoof silence) are shared with the
@@ -33,11 +42,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::net::chaos::ChaosLane;
-use crate::net::poll::{wait_readable, TimerWheel};
+use crate::net::poll::{recv_batch, wait_readable, RecvBatch, TimerWheel};
 use crate::server::daemon::{transmit, unknown_job_reply, BackendShared, MAX_JOBS, STOP_POLL};
 use crate::server::job::Job;
 use crate::server::ServerStats;
-use crate::wire::{decode_frame, peek_route, WireKind};
+use crate::wire::{decode_frame, peek_route, WireKind, MAX_DATAGRAM};
 
 /// Wheel geometry: 10 ms × 512 slots ≈ a 5 s turn. Idle-reclaim
 /// deadlines (tens of seconds by default) park for a few turns; firing
@@ -49,7 +58,9 @@ const WHEEL_SLOTS: usize = 512;
 const CHAOS_TICK: Duration = Duration::from_millis(10);
 /// Datagrams drained per readiness event before timers are serviced, so
 /// a flood cannot starve deadline work.
-const RECV_BATCH: usize = 256;
+const RECV_BUDGET: usize = 256;
+/// Datagrams pulled per `recvmmsg(2)` syscall within that budget.
+const RECV_BATCH_DEPTH: usize = 32;
 
 /// One hosted job: its sans-I/O state machine, its downlink chaos lane,
 /// and the deadline currently armed for it in the wheel (`None` = no
@@ -65,7 +76,9 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
     let mut slots: HashMap<u32, Slot> = HashMap::new();
     let mut wheel: TimerWheel<u32> =
         TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS, Instant::now());
-    let mut buf = vec![0u8; 65536];
+    // Batched receive: up to RECV_BATCH_DEPTH datagrams per syscall,
+    // every buffer sized so no legitimate frame can be truncated.
+    let mut batch = RecvBatch::new(RECV_BATCH_DEPTH, MAX_DATAGRAM);
     while !stop.load(Ordering::SeqCst) {
         // ---- sleep until something needs doing -------------------------
         let now = Instant::now();
@@ -89,9 +102,10 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
         // ---- drain the socket ------------------------------------------
         let now = Instant::now();
         if readable {
-            for _ in 0..RECV_BATCH {
-                let (n, from) = match socket.recv_from(&mut buf) {
-                    Ok(ok) => ok,
+            let mut drained = 0usize;
+            while drained < RECV_BUDGET {
+                let got = match recv_batch(&socket, &mut batch) {
+                    Ok(n) => n,
                     Err(e)
                         if e.kind() == io::ErrorKind::WouldBlock
                             || e.kind() == io::ErrorKind::TimedOut =>
@@ -102,55 +116,63 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
                     // not fatal for the other flows.
                     Err(_) => break,
                 };
-                ServerStats::bump(&stats.packets);
-                let Some((job_id, kind)) = peek_route(&buf[..n]) else {
-                    ServerStats::bump(&stats.decode_errors);
-                    continue;
-                };
-                if !slots.contains_key(&job_id) {
-                    // Jobs are born only on Join; everything else gets
-                    // the shared front-door treatment.
-                    if kind != WireKind::Join {
-                        if let Some(reply) = unknown_job_reply(job_id, kind, &stats) {
-                            let _ = socket.send_to(&reply, from);
+                drained += got;
+                for i in 0..got {
+                    let (datagram, from) = batch.datagram(i);
+                    ServerStats::bump(&stats.packets);
+                    let Some((job_id, kind)) = peek_route(datagram) else {
+                        ServerStats::bump(&stats.decode_errors);
+                        continue;
+                    };
+                    if !slots.contains_key(&job_id) {
+                        // Jobs are born only on Join; everything else gets
+                        // the shared front-door treatment.
+                        if kind != WireKind::Join {
+                            if let Some(reply) = unknown_job_reply(job_id, kind, &stats) {
+                                let _ = socket.send_to(&reply, from);
+                            }
+                            continue;
                         }
-                        continue;
+                        if slots.len() >= MAX_JOBS && !evict_unconfigured(&mut slots) {
+                            ServerStats::bump(&stats.jobs_rejected);
+                            continue;
+                        }
+                        slots.insert(
+                            job_id,
+                            Slot {
+                                job: Job::with_budget(
+                                    job_id,
+                                    profile.clone(),
+                                    limits,
+                                    Arc::clone(&budget),
+                                    Arc::clone(&stats),
+                                ),
+                                lane: chaos
+                                    .map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64)),
+                                armed: None,
+                            },
+                        );
                     }
-                    if slots.len() >= MAX_JOBS && !evict_unconfigured(&mut slots) {
-                        ServerStats::bump(&stats.jobs_rejected);
-                        continue;
+                    let slot = slots.get_mut(&job_id).expect("slot just ensured");
+                    match decode_frame(datagram) {
+                        Ok(frame) => {
+                            let outp = slot.job.handle(&frame, from, now);
+                            transmit(&socket, &mut slot.lane, &outp.frames, now);
+                            slot.job.recycle(outp.frames);
+                            // Arm the wheel only on the None→Some edge: job
+                            // deadlines never tighten (traffic only pushes
+                            // them out), so one live entry per job suffices
+                            // — a fire re-arms at the then-current deadline.
+                            if let (None, Some(t)) = (slot.armed, outp.timer) {
+                                wheel.insert(t, job_id);
+                                slot.armed = Some(t);
+                            }
+                        }
+                        Err(_) => ServerStats::bump(&stats.decode_errors),
                     }
-                    slots.insert(
-                        job_id,
-                        Slot {
-                            job: Job::with_budget(
-                                job_id,
-                                profile.clone(),
-                                limits,
-                                Arc::clone(&budget),
-                                Arc::clone(&stats),
-                            ),
-                            lane: chaos
-                                .map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64)),
-                            armed: None,
-                        },
-                    );
                 }
-                let slot = slots.get_mut(&job_id).expect("slot just ensured");
-                match decode_frame(&buf[..n]) {
-                    Ok(frame) => {
-                        let outp = slot.job.handle(&frame, from, now);
-                        transmit(&socket, &mut slot.lane, outp.frames, now);
-                        // Arm the wheel only on the None→Some edge: job
-                        // deadlines never tighten (traffic only pushes
-                        // them out), so one live entry per job suffices
-                        // — a fire re-arms at the then-current deadline.
-                        if let (None, Some(t)) = (slot.armed, outp.timer) {
-                            wheel.insert(t, job_id);
-                            slot.armed = Some(t);
-                        }
-                    }
-                    Err(_) => ServerStats::bump(&stats.decode_errors),
+                if got < batch.depth() {
+                    break; // socket drained
                 }
             }
         }
@@ -170,7 +192,8 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
             // true deadline; it reaps only what is actually overdue and
             // returns the next deadline, which we re-arm.
             let outp = slot.job.on_tick(now);
-            transmit(&socket, &mut slot.lane, outp.frames, now);
+            transmit(&socket, &mut slot.lane, &outp.frames, now);
+            slot.job.recycle(outp.frames);
             if let Some(t) = outp.timer {
                 wheel.insert(t, job_id);
                 slot.armed = Some(t);

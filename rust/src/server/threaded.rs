@@ -28,7 +28,7 @@ use crate::net::chaos::ChaosLane;
 use crate::server::daemon::{transmit, unknown_job_reply, BackendShared, MAX_JOBS};
 use crate::server::job::{Job, JobLimits};
 use crate::server::{HostBudget, ServerStats};
-use crate::wire::{decode_frame, peek_route, WireKind};
+use crate::wire::{decode_frame, peek_route, WireKind, MAX_DATAGRAM};
 
 type WorkerTx = Sender<(Vec<u8>, SocketAddr)>;
 
@@ -48,7 +48,8 @@ const CHAOS_TICK: Duration = Duration::from_millis(10);
 pub(crate) fn dispatch_loop(socket: UdpSocket, shared: BackendShared) {
     let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget } = shared;
     let mut workers: HashMap<u32, WorkerSlot> = HashMap::new();
-    let mut buf = vec![0u8; 65536];
+    // Sized so no legitimate frame can be truncated by a short recv.
+    let mut buf = vec![0u8; MAX_DATAGRAM];
     while !stop.load(Ordering::SeqCst) {
         let (n, from) = match socket.recv_from(&mut buf) {
             Ok(ok) => ok,
@@ -182,14 +183,16 @@ fn spawn_worker(
                 if timer.is_some_and(|t| t <= now) {
                     ServerStats::bump(&stats.idle_wakeups);
                     let outp = job.on_tick(now);
-                    transmit(&out, &mut lane, outp.frames, now);
+                    transmit(&out, &mut lane, &outp.frames, now);
+                    job.recycle(outp.frames);
                     timer = outp.timer;
                 }
                 if let Some((datagram, from)) = msg {
                     match decode_frame(&datagram) {
                         Ok(frame) => {
                             let outp = job.handle(&frame, from, now);
-                            transmit(&out, &mut lane, outp.frames, now);
+                            transmit(&out, &mut lane, &outp.frames, now);
+                            job.recycle(outp.frames);
                             timer = outp.timer;
                             if !flag.load(Ordering::SeqCst) && job.is_configured() {
                                 flag.store(true, Ordering::SeqCst);

@@ -87,12 +87,21 @@ impl BitVec {
     /// Serialise to little-endian bytes (wire format).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.payload_bytes());
+        self.copy_bytes_into(&mut out);
+        out
+    }
+
+    /// Serialise into a reused buffer (cleared first) — the
+    /// allocation-free twin of [`BitVec::to_bytes`] for per-round hot
+    /// paths (identical bytes).
+    pub fn copy_bytes_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.payload_bytes());
         for (wi, w) in self.words.iter().enumerate() {
             let remaining = self.payload_bytes().saturating_sub(wi * 8);
             let take = remaining.min(8);
             out.extend_from_slice(&w.to_le_bytes()[..take]);
         }
-        out
     }
 
     /// Parse from wire bytes.

@@ -37,6 +37,16 @@ pub const HEADER_LEN: usize = 40;
 /// stays under a 1500-byte MTU, and the budget is a multiple of 4 so i32
 /// lanes pack without padding.
 pub const DEFAULT_PAYLOAD_BUDGET: usize = 1408;
+/// Largest UDP payload an IPv4 datagram can carry (65535 minus the 20-byte
+/// IP and 8-byte UDP headers) — the hard ceiling on any frame's wire size,
+/// whatever `payload_budget` a spec declares. Every receive buffer in the
+/// daemon and the client driver is sized from this one constant so no
+/// legitimate frame can ever be silently truncated by a short `recv`.
+pub const MAX_DATAGRAM: usize = 65_507;
+/// Largest frame payload that can actually transit the wire
+/// ([`MAX_DATAGRAM`] minus the fixed header, rounded down to the 4-byte
+/// lane alignment `JobSpec` requires of payload budgets).
+pub const MAX_WIRE_PAYLOAD: usize = (MAX_DATAGRAM - HEADER_LEN) & !3;
 
 /// Message kind carried in the header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -166,6 +176,16 @@ fn u16_at(buf: &[u8], off: usize) -> u16 {
 /// Encode one frame into a fresh datagram buffer.
 pub fn encode_frame(h: &Header, payload: &[u8]) -> Vec<u8> {
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_frame_into(&mut buf, h, payload);
+    buf
+}
+
+/// Encode one frame into a reused buffer (cleared first) — the
+/// allocation-free twin of [`encode_frame`] the server's frame pool and
+/// the client driver emit through. Identical bytes by construction.
+pub fn encode_frame_into(buf: &mut Vec<u8>, h: &Header, payload: &[u8]) {
+    buf.clear();
+    buf.reserve(HEADER_LEN + payload.len());
     buf.extend_from_slice(&MAGIC.to_le_bytes());
     buf.push(VERSION);
     buf.push(h.kind as u8);
@@ -177,10 +197,9 @@ pub fn encode_frame(h: &Header, payload: &[u8]) -> Vec<u8> {
     buf.extend_from_slice(&h.elems.to_le_bytes());
     buf.extend_from_slice(&h.aux.to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    let crc = crc32(&[&buf, payload]);
+    let crc = crc32(&[&buf[..], payload]);
     buf.extend_from_slice(&crc.to_le_bytes());
     buf.extend_from_slice(payload);
-    buf
 }
 
 /// Strict zero-copy decode of one datagram.
@@ -341,6 +360,27 @@ mod tests {
         assert_eq!(WireKind::Gia.sim_phase(), Some(Phase::Broadcast));
         assert_eq!(WireKind::Aggregate.sim_phase(), Some(Phase::Broadcast));
         assert_eq!(WireKind::Join.sim_phase(), None);
+    }
+
+    #[test]
+    fn encode_into_reused_buffer_is_identical() {
+        let mut buf = vec![0xEEu8; 300]; // dirty, larger than the frame
+        encode_frame_into(&mut buf, &header(), &[1, 2, 3, 4]);
+        assert_eq!(buf, encode_frame(&header(), &[1, 2, 3, 4]));
+        // Reuse with a different payload leaves no residue.
+        encode_frame_into(&mut buf, &header(), &[]);
+        assert_eq!(buf, encode_frame(&header(), &[]));
+        assert!(decode_frame(&buf).is_ok());
+    }
+
+    #[test]
+    fn wire_size_constants_are_consistent() {
+        // The max payload fits one IPv4 datagram with the header on, and
+        // respects the 4-byte lane alignment specs require.
+        assert!(HEADER_LEN + MAX_WIRE_PAYLOAD <= MAX_DATAGRAM);
+        assert_eq!(MAX_WIRE_PAYLOAD % 4, 0);
+        assert!(MAX_WIRE_PAYLOAD <= u16::MAX as usize);
+        assert!(DEFAULT_PAYLOAD_BUDGET <= MAX_WIRE_PAYLOAD);
     }
 
     #[test]

@@ -21,16 +21,18 @@
 
 pub mod frame;
 pub mod payload;
+pub mod pool;
 pub mod shard;
 
 pub use frame::{
-    crc32, decode_frame, encode_frame, peek_route, Frame, Header, WireKind,
-    DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAGIC, VERSION,
+    crc32, decode_frame, encode_frame, encode_frame_into, peek_route, Frame, Header, WireKind,
+    DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAGIC, MAX_DATAGRAM, MAX_WIRE_PAYLOAD, VERSION,
 };
 pub use payload::{
-    byte_chunks, decode_lanes, encode_lanes, lanes_iter, update_chunks, vote_chunks,
-    ChunkAssembler, JobSpec,
+    byte_chunk_bounds, byte_chunks, decode_lanes, encode_lanes, encode_lanes_into, lanes_iter,
+    update_chunk_bounds, update_chunks, vote_chunk_bounds, vote_chunks, ChunkAssembler, JobSpec,
 };
+pub use pool::FrameScratch;
 pub use shard::{ShardLayout, ShardPlan, MAX_SHARDS};
 
 /// Strict decode errors — every way a datagram can be malformed.

@@ -13,10 +13,19 @@ use crate::wire::{ShardPlan, WireError};
 /// Pack i32 lanes little-endian.
 pub fn encode_lanes(lanes: &[i32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(lanes.len() * 4);
+    encode_lanes_into(&mut out, lanes);
+    out
+}
+
+/// Pack i32 lanes little-endian into a reused buffer (cleared first) —
+/// the allocation-free twin of [`encode_lanes`] the frame-pool emitters
+/// use on the per-block hot path.
+pub fn encode_lanes_into(out: &mut Vec<u8>, lanes: &[i32]) {
+    out.clear();
+    out.reserve(lanes.len() * 4);
     for &v in lanes {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    out
 }
 
 /// Zero-copy lane reader over a payload slice.
@@ -153,23 +162,65 @@ impl JobSpec {
     }
 }
 
+/// Vote-phase chunk geometry: for a `d`-bit bitmap at `budget` payload
+/// bytes per frame, yields one `(dims_in_block, byte_lo, byte_hi)` per
+/// block over the bitmap's wire bytes. The single source of truth for
+/// vote chunking — [`vote_chunks`] and the pooled client emitter both
+/// iterate it, so their geometry cannot drift.
+pub fn vote_chunk_bounds(
+    d: usize,
+    budget: usize,
+) -> impl Iterator<Item = (usize, usize, usize)> {
+    let dims_per_block = budget * 8;
+    let n_blocks = d.div_ceil(dims_per_block).max(1);
+    let total_bytes = d.div_ceil(8);
+    (0..n_blocks).map(move |b| {
+        let lo_dim = b * dims_per_block;
+        let dims = dims_per_block.min(d - lo_dim);
+        let lo = b * budget;
+        let hi = (lo + dims.div_ceil(8)).min(total_bytes);
+        (dims, lo, hi)
+    })
+}
+
+/// Update-phase chunk geometry: `(lane_lo, lane_hi)` per block of
+/// `budget/4` lanes over a `n_lanes`-long stream; a zero-lane stream
+/// still yields one empty block (the phase-completion signal). Single
+/// source of truth for [`update_chunks`] and the pooled emitters.
+pub fn update_chunk_bounds(
+    n_lanes: usize,
+    budget: usize,
+) -> impl Iterator<Item = (usize, usize)> {
+    let per_block = (budget / 4).max(1);
+    let n_blocks = n_lanes.div_ceil(per_block).max(1);
+    (0..n_blocks).map(move |b| {
+        let lo = b * per_block;
+        let hi = (lo + per_block).min(n_lanes);
+        (lo, hi)
+    })
+}
+
+/// Opaque-stream chunk geometry: `(byte_lo, byte_hi)` per broadcast chunk
+/// of at most `budget` bytes; always at least one (possibly empty) chunk.
+/// Single source of truth for [`byte_chunks`] and the pooled GIA emitter.
+pub fn byte_chunk_bounds(len: usize, budget: usize) -> impl Iterator<Item = (usize, usize)> {
+    let budget = budget.max(1);
+    let n_blocks = len.div_ceil(budget).max(1);
+    (0..n_blocks).map(move |b| {
+        let lo = b * budget;
+        let hi = (lo + budget).min(len);
+        (lo, hi)
+    })
+}
+
 /// Split a full d-bit vote bitmap into per-block byte payloads of at most
 /// `budget` bytes. Returns `(dims_in_block, bytes)` per block; every block
 /// but the last covers exactly `8·budget` dimensions, so block i from any
 /// client aligns with block i from every other client.
 pub fn vote_chunks(bits: &BitVec, budget: usize) -> Vec<(usize, Vec<u8>)> {
-    let d = bits.len();
     let bytes = bits.to_bytes();
-    let dims_per_block = budget * 8;
-    let n_blocks = d.div_ceil(dims_per_block).max(1);
-    (0..n_blocks)
-        .map(|b| {
-            let lo_dim = b * dims_per_block;
-            let dims = dims_per_block.min(d - lo_dim);
-            let lo = b * budget;
-            let hi = (lo + dims.div_ceil(8)).min(bytes.len());
-            (dims, bytes[lo..hi].to_vec())
-        })
+    vote_chunk_bounds(bits.len(), budget)
+        .map(|(dims, lo, hi)| (dims, bytes[lo..hi].to_vec()))
         .collect()
 }
 
@@ -177,24 +228,15 @@ pub fn vote_chunks(bits: &BitVec, budget: usize) -> Vec<(usize, Vec<u8>)> {
 /// `(lanes_in_block, bytes)` per block; a zero-lane stream still yields one
 /// empty block so the phase has a completion signal.
 pub fn update_chunks(lanes: &[i32], budget: usize) -> Vec<(usize, Vec<u8>)> {
-    let per_block = (budget / 4).max(1);
-    let n_blocks = lanes.len().div_ceil(per_block).max(1);
-    (0..n_blocks)
-        .map(|b| {
-            let lo = b * per_block;
-            let hi = (lo + per_block).min(lanes.len());
-            (hi - lo, encode_lanes(&lanes[lo..hi]))
-        })
+    update_chunk_bounds(lanes.len(), budget)
+        .map(|(lo, hi)| (hi - lo, encode_lanes(&lanes[lo..hi])))
         .collect()
 }
 
 /// Split an opaque byte stream (e.g. a Golomb-coded GIA) into broadcast
 /// chunks of at most `budget` bytes; always at least one (possibly empty).
 pub fn byte_chunks(data: &[u8], budget: usize) -> Vec<Vec<u8>> {
-    if data.is_empty() {
-        return vec![Vec::new()];
-    }
-    data.chunks(budget.max(1)).map(|c| c.to_vec()).collect()
+    byte_chunk_bounds(data.len(), budget).map(|(lo, hi)| data[lo..hi].to_vec()).collect()
 }
 
 /// Reassemble a chunked stream from out-of-order, possibly duplicated

@@ -1,0 +1,134 @@
+//! Reusable datagram-buffer arena for allocation-free frame emission.
+//!
+//! Every outgoing frame is one owned `Vec<u8>` (backends hand buffers to
+//! the socket and possibly a chaos lane, so borrowing is not an option).
+//! Pre-pool, the server allocated one fresh `Vec` per frame per
+//! destination per round; [`FrameScratch`] recycles those buffers
+//! instead: [`FrameScratch::take`] pops a cleared buffer from the free
+//! list (counting a *hit*) or allocates when the list is empty (a
+//! *miss*), and [`FrameScratch::give`] returns a transmitted buffer. In
+//! steady state every round's emission is served entirely from the pool
+//! — `ServerStats::pool_misses` stops moving, which `fediac bench-codec`
+//! and `bench-wire` assert.
+//!
+//! Pooling is an implementation detail of one endpoint: nothing about it
+//! is visible on the wire (PROTOCOL.md conformance note).
+
+use crate::wire::{encode_frame_into, Header};
+
+/// Buffers kept on the free list (beyond this, returned buffers are
+/// dropped). Bounds worst-case idle memory at `MAX_POOLED` × the largest
+/// frame the job emits; generous enough that a full multicast burst
+/// (≤ 64 clients × a multi-chunk broadcast) recycles without misses.
+const MAX_POOLED: usize = 1024;
+
+/// A free list of datagram buffers with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct FrameScratch {
+    free: Vec<Vec<u8>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl FrameScratch {
+    /// Empty pool (first emissions will miss; steady state will not).
+    pub fn new() -> Self {
+        FrameScratch::default()
+    }
+
+    /// Pop a cleared buffer, or allocate one when the pool is empty.
+    pub fn take(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(buf) => {
+                self.hits += 1;
+                buf
+            }
+            None => {
+                self.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer to the pool (cleared; dropped beyond the cap).
+    pub fn give(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < MAX_POOLED {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// Encode one frame into a pooled buffer — the hot-path twin of
+    /// [`crate::wire::encode_frame`].
+    pub fn encode(&mut self, h: &Header, payload: &[u8]) -> Vec<u8> {
+        let mut buf = self.take();
+        encode_frame_into(&mut buf, h, payload);
+        buf
+    }
+
+    /// Copy raw bytes into a pooled buffer (multicast fan-out: the frame
+    /// is encoded once, then cloned per destination through the pool).
+    pub fn copy(&mut self, bytes: &[u8]) -> Vec<u8> {
+        let mut buf = self.take();
+        buf.extend_from_slice(bytes);
+        buf
+    }
+
+    /// Buffers currently parked on the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take-and-zero the (hits, misses) counters accumulated since the
+    /// last drain — owners fold these into their stats periodically.
+    pub fn drain_counters(&mut self) -> (u64, u64) {
+        let out = (self.hits, self.misses);
+        self.hits = 0;
+        self.misses = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::{decode_frame, WireKind};
+
+    #[test]
+    fn steady_state_has_no_misses() {
+        let mut pool = FrameScratch::new();
+        let h = Header::control(WireKind::Poll, 1, 0, 0, 4);
+        // Warm-up: the first burst allocates.
+        let burst: Vec<Vec<u8>> = (0..8).map(|_| pool.encode(&h, &[7; 32])).collect();
+        let (_, misses) = pool.drain_counters();
+        assert_eq!(misses, 8);
+        for b in burst {
+            pool.give(b);
+        }
+        // Steady state: same burst size, zero allocations.
+        for _ in 0..10 {
+            let burst: Vec<Vec<u8>> = (0..8).map(|_| pool.encode(&h, &[9; 32])).collect();
+            for b in &burst {
+                assert_eq!(decode_frame(b).unwrap().header.kind, WireKind::Poll);
+            }
+            for b in burst {
+                pool.give(b);
+            }
+        }
+        let (hits, misses) = pool.drain_counters();
+        assert_eq!(misses, 0, "steady state allocated");
+        assert_eq!(hits, 80);
+    }
+
+    #[test]
+    fn copy_reproduces_bytes_and_reuses_buffers() {
+        let mut pool = FrameScratch::new();
+        let a = pool.copy(&[1, 2, 3]);
+        assert_eq!(a, vec![1, 2, 3]);
+        pool.give(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.copy(&[4, 5]);
+        assert_eq!(b, vec![4, 5], "stale bytes leaked through the pool");
+        assert_eq!(pool.pooled(), 0);
+    }
+}

@@ -200,6 +200,104 @@ fn mutated_frames_never_panic_any_decoder() {
 }
 
 #[test]
+fn golomb_word_reader_matches_scalar_under_refill_targeted_mutation() {
+    // Differential fuzz of the word-based bit reader against the per-bit
+    // scalar oracle, with the corpus and mutations both aimed at the u64
+    // machinery: streams whose unary quotient runs span 64-bit word
+    // edges (the 70-bit header guarantees every run starts mid-word),
+    // and bit flips concentrated on the first refill boundaries. Accept
+    // AND reject must agree bit-for-bit on every mutation — a stricter
+    // bar than "no panic". Runs at the full ≥100k-mutation budget.
+    let mut rng = Rng::new(0x60B0_ED6E);
+    let mut corpus: Vec<(Vec<u8>, usize)> = Vec::new();
+    // Valid streams crafted with an explicit r = 0 header, so each gap
+    // is one pure unary run of `gap` one-bits (`encode()` would pick
+    // r > 0 here and keep runs short): runs of 50..=130 bits genuinely
+    // span the reader's u64 refill edges before any mutation lands.
+    let craft_unary = |d: u64, gaps: &[u64]| -> Vec<u8> {
+        let mut w = golomb::scalar::BitWriter::new();
+        w.push_bits(d, 32);
+        w.push_bits(gaps.len() as u64, 32);
+        w.push_bits(0, 6);
+        for &g in gaps {
+            for _ in 0..g {
+                w.push_bit(true);
+            }
+            w.push_bit(false);
+        }
+        w.finish()
+    };
+    for gap in [50u64, 55, 57, 58, 62, 63, 64, 65, 70, 126, 127, 128, 129, 130] {
+        let d = 3 * gap as usize + 8;
+        let stream = craft_unary(d as u64, &[gap, gap]);
+        // Sanity: the corpus entry is valid and boundary-crossing.
+        assert_eq!(
+            golomb::decode_with_limit(&stream, d).expect("corpus stream must decode"),
+            BitVec::from_indices(d, &[gap as usize, 2 * gap as usize + 1]),
+        );
+        corpus.push((stream, d));
+    }
+    // A long multi-run stream: every refill path (aligned 8-byte fast
+    // path and the byte-wise tail) gets exercised.
+    let mut bv = BitVec::zeros(50_000);
+    for i in 0..50_000 {
+        if rng.f64() < 0.002 {
+            bv.set(i, true);
+        }
+    }
+    corpus.push((golomb::encode(&bv), 50_000));
+
+    let total = fuzz_frames();
+    let mut accepted = 0u64;
+    for _ in 0..total {
+        let (base, d) = &corpus[rng.below(corpus.len())];
+        let mut evil = base.clone();
+        match rng.below(4) {
+            // Bit flips biased into bytes 8..24 — the first u64 refill
+            // boundary and the word edge after the 70-bit header.
+            0 => {
+                for _ in 0..(1 + rng.below(4)) {
+                    let hot_zone = evil.len().clamp(9, 24);
+                    let byte = 8 + rng.below(hot_zone - 8);
+                    evil[byte] ^= 1 << rng.below(8);
+                }
+            }
+            // Truncation at word-boundary-adjacent lengths.
+            1 => {
+                let cuts = [8usize, 9, 15, 16, 17, 23, 24];
+                let cut = cuts[rng.below(cuts.len())].min(evil.len());
+                evil.truncate(cut);
+            }
+            // Splice ones into the run region to lengthen/merge runs.
+            2 => {
+                if evil.len() > 9 {
+                    let start = 9 + rng.below(evil.len() - 9);
+                    let len = (1 + rng.below(4)).min(evil.len() - start);
+                    for b in &mut evil[start..start + len] {
+                        *b = 0xFF;
+                    }
+                }
+            }
+            // Unbiased flips anywhere (header included).
+            _ => {
+                let bit = rng.below(evil.len() * 8);
+                evil[bit / 8] ^= 1 << (bit % 8);
+            }
+        }
+        let word = golomb::decode_with_limit(&evil, *d);
+        let scalar = golomb::scalar::decode_with_limit(&evil, *d);
+        assert_eq!(
+            word, scalar,
+            "word reader diverged from scalar oracle on a mutated stream (d={d})"
+        );
+        if word.is_some() {
+            accepted += 1;
+        }
+    }
+    eprintln!("[wire_fuzz] {total} refill-targeted mutations, {accepted} decoded by both");
+}
+
+#[test]
 fn golomb_mutation_storm_never_panics() {
     // Focused storm on the trickiest decoder: mutate real Golomb streams
     // (header fields d/count/r live in the first 9 bytes, so bit flips
