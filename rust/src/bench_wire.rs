@@ -18,6 +18,7 @@ use anyhow::{Context, Result};
 use crate::client::{ClientOptions, ClientStats, FediacClient, ShardedFediacClient};
 use crate::configx::PsProfile;
 use crate::server::{serve, serve_sharded, IoBackend, ServeOptions, StatsSnapshot};
+use crate::telemetry::HistSummary;
 use crate::util::Rng;
 use crate::wire::DEFAULT_PAYLOAD_BUDGET;
 
@@ -94,6 +95,10 @@ pub struct BackendReport {
     pub client_bytes: u64,
     /// Frames retransmitted across all clients (loopback should be ~0).
     pub retransmissions: u64,
+    /// Client-observed end-to-end round latency (one sample per
+    /// completed `run_round` call, merged across every client of every
+    /// job) — the p50/p99/max the JSON report quotes per backend.
+    pub round_latency: HistSummary,
     /// Deployment-wide daemon counters (summed across shards).
     pub server: StatsSnapshot,
     /// Per-shard daemon counters, index = shard id (one entry for an
@@ -109,6 +114,19 @@ pub struct BenchWireReport {
     pub opts: BenchWireOptions,
     /// One entry per measured backend, in run order.
     pub backends: Vec<BackendReport>,
+}
+
+/// Render a latency summary as the JSON object the report embeds:
+/// `{"count": …, "p50": …, "p90": …, "p99": …, "max": …}` (microseconds).
+fn hist_json(h: &HistSummary) -> String {
+    format!(
+        "{{\"count\": {}, \"p50\": {}, \"p90\": {}, \"p99\": {}, \"max\": {}}}",
+        h.count(),
+        h.quantile(0.50),
+        h.quantile(0.90),
+        h.quantile(0.99),
+        h.max
+    )
 }
 
 impl BenchWireReport {
@@ -136,11 +154,13 @@ impl BenchWireReport {
                 .map(|(s, st)| {
                     format!(
                         "{{\"shard\": {s}, \"rounds_per_s\": {:.3}, \"packets\": {}, \
-                         \"rounds_completed\": {}, \"pool_misses\": {}}}",
+                         \"rounds_completed\": {}, \"pool_misses\": {}, \
+                         \"round_latency_us\": {}}}",
                         st.rounds_completed as f64 / b.wall_s,
                         st.packets,
                         st.rounds_completed,
-                        st.pool_misses
+                        st.pool_misses,
+                        hist_json(&st.hist_round_latency)
                     )
                 })
                 .collect();
@@ -149,7 +169,7 @@ impl BenchWireReport {
                  \"bytes_per_round\": {:.1}, \"client_bytes\": {}, \"retransmissions\": {}, \
                  \"server_packets\": {}, \"rounds_completed\": {}, \"workers_spawned\": {}, \
                  \"idle_wakeups\": {}, \"frames_pooled\": {}, \"pool_misses\": {}, \
-                 \"per_shard\": [{}]}}{}\n",
+                 \"round_latency_us\": {}, \"per_shard\": [{}]}}{}\n",
                 b.backend,
                 b.wall_s,
                 b.rounds_per_s,
@@ -162,6 +182,7 @@ impl BenchWireReport {
                 b.server.idle_wakeups,
                 b.server.frames_pooled,
                 b.server.pool_misses,
+                hist_json(&b.round_latency),
                 per_shard.join(", "),
                 if i + 1 < self.backends.len() { "," } else { "" }
             ));
@@ -176,7 +197,7 @@ impl BenchWireReport {
         let mut out = format!(
             "# bench_wire: jobs={} rounds={} clients/job={} d={} payload={} shards={}\n\
              backend\twall_s\trounds/s\tbytes/round\tretx\tserver_pkts\tworkers\tidle_wakes\
-             \tpool_miss\n",
+             \tpool_miss\tp50_us\tp99_us\tmax_us\n",
             self.opts.jobs,
             self.opts.rounds,
             self.opts.clients_per_job,
@@ -186,7 +207,7 @@ impl BenchWireReport {
         );
         for b in &self.backends {
             out.push_str(&format!(
-                "{}\t{:.3}\t{:.1}\t{:.0}\t{}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.3}\t{:.1}\t{:.0}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
                 b.backend,
                 b.wall_s,
                 b.rounds_per_s,
@@ -195,7 +216,10 @@ impl BenchWireReport {
                 b.server.packets,
                 b.server.workers_spawned,
                 b.server.idle_wakeups,
-                b.server.pool_misses
+                b.server.pool_misses,
+                b.round_latency.quantile(0.50),
+                b.round_latency.quantile(0.99),
+                b.round_latency.max
             ));
             if b.per_shard.len() > 1 {
                 for (s, st) in b.per_shard.iter().enumerate() {
@@ -245,13 +269,13 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
     let addrs: Vec<String> = handles.iter().map(|h| h.local_addr().to_string()).collect();
 
     let started = Instant::now();
-    let mut per_client: Vec<ClientStats> = Vec::new();
+    let mut per_client: Vec<(ClientStats, HistSummary)> = Vec::new();
     std::thread::scope(|scope| -> Result<()> {
         let mut join_handles = Vec::new();
         let addrs = &addrs;
         for job in 0..opts.jobs {
             for cid in 0..opts.clients_per_job {
-                join_handles.push(scope.spawn(move || -> Result<ClientStats> {
+                join_handles.push(scope.spawn(move || -> Result<(ClientStats, HistSummary)> {
                     drive_client(opts, addrs, job as u32, cid)
                 }));
             }
@@ -264,8 +288,10 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
     let wall_s = started.elapsed().as_secs_f64().max(f64::EPSILON);
 
     let mut totals = ClientStats::default();
-    for s in &per_client {
+    let mut round_latency = HistSummary::default();
+    for (s, lat) in &per_client {
         totals.add(s);
+        round_latency.merge(lat);
     }
     let total_rounds = (opts.jobs * opts.rounds) as f64;
     let client_bytes = totals.bytes_sent + totals.bytes_received;
@@ -284,6 +310,7 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
         bytes_per_round: client_bytes as f64 / total_rounds,
         client_bytes,
         retransmissions: totals.retransmissions,
+        round_latency,
         server,
         per_shard,
     })
@@ -291,13 +318,14 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
 
 /// One client of one job: join (one server or the whole shard set), run
 /// every round on a deterministic synthetic update stream (residual
-/// folded in, Algorithm 1), return the driver counters.
+/// folded in, Algorithm 1), return the driver counters plus a per-round
+/// end-to-end latency histogram (one sample per `run_round` call).
 fn drive_client(
     opts: &BenchWireOptions,
     addrs: &[String],
     job: u32,
     cid: u16,
-) -> Result<ClientStats> {
+) -> Result<(ClientStats, HistSummary)> {
     // Every client of a job shares the job seed (the protocol requires
     // agreement on the vote/quantise RNG streams' derivation root).
     let job_seed = opts.seed ^ ((job as u64) << 16);
@@ -322,6 +350,7 @@ fn drive_client(
         )
     };
     let mut residual = vec![0.0f32; opts.d];
+    let mut latency = HistSummary::default();
     for round in 1..=opts.rounds {
         let mut rng = Rng::new(job_seed ^ ((cid as u64) << 32) ^ round as u64);
         let mut update: Vec<f32> =
@@ -329,15 +358,18 @@ fn drive_client(
         for (u, r) in update.iter_mut().zip(&residual) {
             *u += *r;
         }
+        let t0 = Instant::now();
         let out = match &mut client {
             AnyClient::Single(c) => c.run_round(round, &update),
             AnyClient::Sharded(c) => c.run_round(round, &update),
         }
         .with_context(|| format!("job {job} client {cid} round {round}"))?;
+        latency.record_micros(t0.elapsed());
         residual = out.residual;
     }
-    Ok(match &client {
+    let stats = match &client {
         AnyClient::Single(c) => c.stats,
         AnyClient::Sharded(c) => c.stats(),
-    })
+    };
+    Ok((stats, latency))
 }

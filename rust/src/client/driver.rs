@@ -13,7 +13,7 @@
 
 use std::collections::VecDeque;
 use std::net::UdpSocket;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -22,6 +22,7 @@ use crate::compress::{self, golomb};
 use crate::net::chaos::{chaos_proxy, ChaosConfig, ChaosHandle, ChaosProxyOptions, ChaosSnapshot};
 use crate::net::poll;
 use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
+use crate::telemetry::HistSummary;
 use crate::util::{BitVec, Rng};
 use crate::wire::{
     decode_frame, decode_lanes, encode_frame, encode_lanes_into, update_chunk_bounds,
@@ -133,6 +134,12 @@ pub struct ClientStats {
     pub bytes_sent: u64,
     /// Datagram bytes received from the socket (before decoding).
     pub bytes_received: u64,
+    /// Vote-phase round trips as seen from this endpoint: first vote
+    /// frame sent → GIA decoded (retransmission cycles included).
+    pub vote_rtt_us: HistSummary,
+    /// Update-phase round trips: first lane frame sent → aggregate
+    /// decoded.
+    pub update_rtt_us: HistSummary,
 }
 
 impl ClientStats {
@@ -147,6 +154,8 @@ impl ClientStats {
         self.stream_resets += other.stream_resets;
         self.bytes_sent += other.bytes_sent;
         self.bytes_received += other.bytes_received;
+        self.vote_rtt_us.merge(&other.vote_rtt_us);
+        self.update_rtt_us.merge(&other.update_rtt_us);
     }
 }
 
@@ -580,6 +589,12 @@ impl FediacClient {
                                     if !rejoining {
                                         rejoining = true;
                                         self.stats.rejoins += 1;
+                                        crate::debug!(
+                                            "job={} client={} round={round} re-joining after \
+                                             UNKNOWN_JOB",
+                                            self.opts.job,
+                                            self.opts.client_id
+                                        );
                                         self.send_datagram(&join_frame);
                                     }
                                 }
@@ -618,6 +633,13 @@ impl FediacClient {
                             self.opts.client_id
                         );
                     }
+                    crate::debug!(
+                        "job={} client={} round={round} timeout #{timeouts}: retransmitting \
+                         {} frames and polling for {want:?}",
+                        self.opts.job,
+                        self.opts.client_id,
+                        frames.len()
+                    );
                     if rejoining {
                         // The in-flight Join (or its ack) was lost.
                         self.stats.retransmissions += 1;
@@ -664,12 +686,14 @@ impl FediacClient {
             votes.len(),
             self.opts.d
         );
+        let t0 = Instant::now();
         let vote_frames = self.vote_frames(round, votes, local_max);
         let exchanged = self.exchange(round, &vote_frames, WireKind::Gia);
         for f in vote_frames {
             self.scratch.give(f);
         }
         let (gia_bytes, gia_aux) = exchanged?;
+        self.stats.vote_rtt_us.record_micros(t0.elapsed());
         let gia = golomb::decode_with_limit(&gia_bytes, self.opts.d)
             .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
         anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
@@ -688,12 +712,14 @@ impl FediacClient {
     /// skipping it would leave the two sides disagreeing on whether the
     /// round happened at all.
     pub fn update_phase(&mut self, round: u32, lanes: &[i32], f: f32) -> Result<Vec<i32>> {
+        let t0 = Instant::now();
         let update_frames = self.update_frames(round, lanes, f);
         let exchanged = self.exchange(round, &update_frames, WireKind::Aggregate);
         for f in update_frames {
             self.scratch.give(f);
         }
         let (agg_bytes, agg_aux) = exchanged?;
+        self.stats.update_rtt_us.record_micros(t0.elapsed());
         let aggregate = decode_lanes(&agg_bytes)
             .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
         anyhow::ensure!(
@@ -778,6 +804,12 @@ fn ingest_chunk(
     }
     if asm.as_ref().is_some_and(|(a, aux)| a.n_blocks() != n_blocks || *aux != h.aux) {
         stats.stream_resets += 1;
+        crate::debug!(
+            "job={} round={} {:?} stream reset: interleaved broadcast disagrees on geometry/aux",
+            h.job,
+            h.round,
+            h.kind
+        );
         *asm = None;
     }
     let (a, _) = asm.get_or_insert_with(|| (ChunkAssembler::new(n_blocks), h.aux));

@@ -26,6 +26,7 @@ pub mod runtime;
 pub mod server;
 pub mod sim;
 pub mod switch;
+pub mod telemetry;
 pub mod theory;
 pub mod util;
 pub mod wire;

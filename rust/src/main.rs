@@ -14,10 +14,11 @@
 //!               [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-drop 0.0] [--down-dup 0.0]
 //!               [--down-reorder 0.0] [--down-corrupt 0.0] [--chaos-seed 0]
+//!               [--stats-every 10] [--metrics-interval 0] [--trace-dump PATH]
 //! fediac shard-serve [--bind-base 0.0.0.0:7177] [--shards 2]
 //!               [--io threaded|reactor] [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-*…] [--chaos-seed 0]
-//!               [--stats-every 10]
+//!               [--stats-every 10] [--metrics-interval 0] [--trace-dump PATH]
 //! fediac bench-wire [--smoke] [--jobs 4] [--rounds 3] [--clients 2]
 //!               [--d 4096] [--payload 1408] [--io both|threaded|reactor]
 //!               [--ps high|low] [--memory BYTES] [--seed 7]
@@ -105,7 +106,7 @@ fn save(path: &str, contents: &str) -> Result<()> {
         std::fs::create_dir_all(parent)?;
     }
     std::fs::write(path, contents)?;
-    eprintln!("[fediac] wrote {path}");
+    fediac::info!("wrote {path}");
     Ok(())
 }
 
@@ -139,8 +140,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rec = experiments::run(&cfg, &opts)?;
     println!("{}", rec.to_csv());
     let best = rec.best_accuracy().unwrap_or(0.0);
-    eprintln!(
-        "[fediac] {}: best_acc={:.4} total_traffic={:.2} MB sim_time={:.1} s",
+    fediac::info!(
+        "{}: best_acc={:.4} total_traffic={:.2} MB sim_time={:.1} s",
         cfg.label(),
         best,
         rec.total_traffic().total_mb(),
@@ -291,17 +292,40 @@ fn chaos_direction_from(args: &Args, prefix: &str) -> Result<fediac::net::ChaosD
     })
 }
 
+/// `--trace-dump` target: the daemon-attached flight recorder plus the
+/// path its ring is rewritten to on every stats tick.
+type TraceDump = Option<(std::sync::Arc<fediac::telemetry::FlightRecorder>, String)>;
+
+/// Telemetry/cadence knobs parsed alongside [`fediac::server::ServeOptions`]:
+/// the human-readable stats cadence, the machine-readable JSON-lines
+/// metrics cadence (0 = off), and the flight-recorder dump target
+/// (recorder + path) when `--trace-dump` is given.
+struct ServeTelemetry {
+    stats_every: u64,
+    metrics_interval: u64,
+    trace_dump: TraceDump,
+}
+
 /// Parse the serve-family options shared by `serve` and `shard-serve`
 /// (profile, register memory, host-byte limits, downlink chaos, seed)
-/// plus the stats-print cadence — one list, so the two subcommands
-/// cannot grow divergent CLI surfaces.
+/// plus the stats/metrics cadences and the flight-recorder dump — one
+/// list, so the two subcommands cannot grow divergent CLI surfaces.
 fn serve_options_from(
     args: &Args,
     bind: String,
-) -> Result<(fediac::server::ServeOptions, u64)> {
+) -> Result<(fediac::server::ServeOptions, ServeTelemetry)> {
     let mut profile = ps_from(args)?;
     profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
     let stats_every = args.get_u64("stats-every", 10)?;
+    let metrics_interval = args.get_u64("metrics-interval", 0)?;
+    // --trace-dump PATH: attach a flight recorder to the daemon and
+    // rewrite its ring as JSON lines at PATH on every stats tick.
+    let trace_dump = args.get_opt_str("trace-dump").map(|path| {
+        let rec = std::sync::Arc::new(fediac::telemetry::FlightRecorder::new(
+            fediac::telemetry::DEFAULT_EVENTS,
+        ));
+        (rec, path)
+    });
     let defaults = fediac::server::JobLimits::default();
     let limits = fediac::server::JobLimits {
         host_bytes: args.get_usize("host-bytes", defaults.host_bytes)?,
@@ -325,30 +349,54 @@ fn serve_options_from(
             chaos_seed,
             io_backend,
             host_budget: None,
+            trace: trace_dump.as_ref().map(|(rec, _)| std::sync::Arc::clone(rec)),
         },
-        stats_every,
+        ServeTelemetry { stats_every, metrics_interval, trace_dump },
     ))
+}
+
+/// Rewrite the flight-recorder dump file, logging (but not dying) on
+/// I/O errors — telemetry must never take the daemon down.
+fn rewrite_trace_dump(trace: &TraceDump) {
+    if let Some((rec, path)) = trace {
+        if let Err(e) = rec.dump_to(path) {
+            fediac::warn!("trace dump to {path} failed: {e}");
+        }
+    }
 }
 
 /// Run the networked aggregation daemon until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
     let bind = args.get_str("bind", "0.0.0.0:7177");
-    let (opts, stats_every) = serve_options_from(args, bind)?;
+    let (opts, telemetry) = serve_options_from(args, bind)?;
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let handle = fediac::server::serve(&opts)?;
-    eprintln!(
-        "[fediac] aggregation server listening on {} ({} backend; ctrl-c to stop)",
+    fediac::info!(
+        "aggregation server listening on {} ({} backend; ctrl-c to stop)",
         handle.local_addr(),
         opts.io_backend.name()
     );
+    // One-second ticks drive both cadences: the human-readable stats
+    // line every --stats-every seconds and (when --metrics-interval > 0)
+    // a machine-readable JSON-lines snapshot on stderr. The JSON goes
+    // through raw eprintln, not the logger, so scrapers see bare lines.
+    let mut tick = 0u64;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        tick += 1;
+        if telemetry.metrics_interval > 0 && tick % telemetry.metrics_interval == 0 {
+            eprintln!("{}", handle.stats().to_json());
+        }
+        if tick % telemetry.stats_every.max(1) != 0 {
+            continue;
+        }
+        rewrite_trace_dump(&telemetry.trace_dump);
         let s = handle.stats();
-        eprintln!(
-            "[fediac] pkts={} jobs={} rounds={} dup={} spill={} spill_drop={} waves={} \
+        fediac::info!(
+            "pkts={} jobs={} rounds={} dup={} spill={} spill_drop={} waves={} \
              stalls={} idle_rel={} reserve_sup={} spoof={} bad_aux={} err={} pooled={} \
-             pool_miss={}",
+             pool_miss={} round_p50_us={} round_p99_us={}",
             s.packets,
             s.jobs_created,
             s.rounds_completed,
@@ -363,7 +411,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.non_finite_aux,
             s.decode_errors,
             s.frames_pooled,
-            s.pool_misses
+            s.pool_misses,
+            s.hist_round_latency.quantile(0.50),
+            s.hist_round_latency.quantile(0.99)
         );
     }
 }
@@ -376,26 +426,38 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
     let n_shards = args.get_usize("shards", 2)?;
     let n_shards = u8::try_from(n_shards)
         .map_err(|_| anyhow::anyhow!("--shards {n_shards} out of range (max 16)"))?;
-    let (opts, stats_every) = serve_options_from(args, bind)?;
+    let (opts, telemetry) = serve_options_from(args, bind)?;
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let handles = fediac::server::serve_sharded(&opts, n_shards)?;
     let endpoints: Vec<String> = handles.iter().map(|h| h.local_addr().to_string()).collect();
     for (s, addr) in endpoints.iter().enumerate() {
-        eprintln!("[fediac] shard {s}/{n_shards} listening on {addr}");
+        fediac::info!("shard {s}/{n_shards} listening on {addr}");
     }
-    eprintln!(
-        "[fediac] sharded deployment up (ctrl-c to stop); clients connect with \
-         --shards {}",
+    fediac::info!(
+        "sharded deployment up (ctrl-c to stop); clients connect with --shards {}",
         endpoints.join(",")
     );
+    let mut tick = 0u64;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        tick += 1;
+        // One JSON line per shard per metrics interval, each tagged with
+        // its shard id so scrapers can tell the streams apart.
+        if telemetry.metrics_interval > 0 && tick % telemetry.metrics_interval == 0 {
+            for (s, h) in handles.iter().enumerate() {
+                eprintln!("{{\"shard\":{s},\"stats\":{}}}", h.stats().to_json());
+            }
+        }
+        if tick % telemetry.stats_every.max(1) != 0 {
+            continue;
+        }
+        rewrite_trace_dump(&telemetry.trace_dump);
         for (s, h) in handles.iter().enumerate() {
             let st = h.stats();
-            eprintln!(
-                "[fediac] shard {s}: pkts={} jobs={} rounds={} dup={} spill={} waves={} \
-                 stalls={} err={}",
+            fediac::info!(
+                "shard {s}: pkts={} jobs={} rounds={} dup={} spill={} waves={} \
+                 stalls={} err={} round_p50_us={} round_p99_us={}",
                 st.packets,
                 st.jobs_created,
                 st.rounds_completed,
@@ -403,7 +465,9 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
                 st.spilled,
                 st.waves,
                 st.register_stalls,
-                st.decode_errors
+                st.decode_errors,
+                st.hist_round_latency.quantile(0.50),
+                st.hist_round_latency.quantile(0.99)
             );
         }
     }
@@ -484,15 +548,15 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         upstream: upstream.clone(),
         config: fediac::net::ChaosConfig { seed, uplink, downlink },
     })?;
-    eprintln!(
-        "[fediac] chaos proxy on {} → {upstream} (seed {seed}; ctrl-c to stop)",
+    fediac::info!(
+        "chaos proxy on {} → {upstream} (seed {seed}; ctrl-c to stop)",
         handle.local_addr()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(stats_every.max(1)));
         let s = handle.snapshot();
-        eprintln!(
-            "[fediac] flows={} (rejected={}) up: fwd={} drop={} dup={} reord={} corrupt={} | \
+        fediac::info!(
+            "flows={} (rejected={}) up: fwd={} drop={} dup={} reord={} corrupt={} | \
              down: fwd={} drop={} dup={} reord={} corrupt={}",
             s.flows,
             s.flows_rejected,
@@ -579,8 +643,8 @@ fn cmd_client(args: &Args) -> Result<()> {
                 .filter(|s| !s.is_empty())
                 .collect();
             let c = ShardedFediacClient::connect(&servers, opts)?;
-            eprintln!(
-                "[fediac] client {client_id} joined job {job} across {} shards \
+            fediac::info!(
+                "job={job} client {client_id} joined across {} shards \
                  ({n_clients} clients, d={d})",
                 c.n_shards()
             );
@@ -588,7 +652,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         None => {
             let c = FediacClient::connect(opts)?;
-            eprintln!("[fediac] client {client_id} joined job {job} ({n_clients} clients, d={d})");
+            fediac::info!("job={job} client {client_id} joined ({n_clients} clients, d={d})");
             AnyClient::Single(c)
         }
     };
@@ -624,8 +688,8 @@ fn cmd_client(args: &Args) -> Result<()> {
             .collect(),
     };
     for (label, snap) in snapshots {
-        eprintln!(
-            "[fediac] chaos{label}: up drop={} dup={} reord={} corrupt={} | \
+        fediac::info!(
+            "job={job} chaos{label}: up drop={} dup={} reord={} corrupt={} | \
              down drop={} dup={} reord={} corrupt={}",
             snap.up.dropped,
             snap.up.duplicated,
@@ -638,9 +702,16 @@ fn cmd_client(args: &Args) -> Result<()> {
         );
     }
     let s = client.stats();
-    eprintln!(
-        "[fediac] client {client_id} done: retx={} dropped={} polls={} rejoins={} resets={}",
-        s.retransmissions, s.dropped_sends, s.polls, s.rejoins, s.stream_resets
+    fediac::info!(
+        "job={job} client {client_id} done: retx={} dropped={} polls={} rejoins={} \
+         resets={} vote_p99_us={} update_p99_us={}",
+        s.retransmissions,
+        s.dropped_sends,
+        s.polls,
+        s.rejoins,
+        s.stream_resets,
+        s.vote_rtt_us.quantile(0.99),
+        s.update_rtt_us.quantile(0.99)
     );
     Ok(())
 }

@@ -26,6 +26,7 @@ use crate::configx::PsProfile;
 use crate::net::chaos::{ChaosDirection, ChaosLane};
 use crate::server::job::{JobLimits, Outgoing, JOIN_UNKNOWN_JOB};
 use crate::server::{reactor, threaded, HostBudget, ServerStats, StatsSnapshot};
+use crate::telemetry::{FlightRecorder, TraceNote};
 use crate::wire::{encode_frame, Header, WireKind};
 
 /// Which event engine hosts the jobs. Both engines run the identical
@@ -102,6 +103,13 @@ pub struct ServeOptions {
     /// one shared accountant into every shard so a tenant's budget is
     /// global across the deployment.
     pub host_budget: Option<Arc<HostBudget>>,
+    /// Flight recorder every hosted job and the dispatch path record
+    /// protocol events into (`None`, the default, turns recording off —
+    /// the hot path then pays one branch). The CLI's `--trace-dump`
+    /// wires one in; wire tests attach one to dump the protocol
+    /// timeline when they fail. Telemetry is observer-only: nothing on
+    /// the wire changes either way (PROTOCOL.md §10).
+    pub trace: Option<Arc<FlightRecorder>>,
 }
 
 impl Default for ServeOptions {
@@ -114,6 +122,7 @@ impl Default for ServeOptions {
             chaos_seed: 0,
             io_backend: IoBackend::from_env(),
             host_budget: None,
+            trace: None,
         }
     }
 }
@@ -165,6 +174,7 @@ pub(crate) struct BackendShared {
     pub(crate) stats: Arc<ServerStats>,
     pub(crate) stop: Arc<AtomicBool>,
     pub(crate) budget: Arc<HostBudget>,
+    pub(crate) recorder: Option<Arc<FlightRecorder>>,
 }
 
 /// Upper bound on concurrently hosted jobs (threaded: worker threads;
@@ -199,6 +209,22 @@ pub(crate) fn unknown_job_reply(
     } else {
         ServerStats::bump(&stats.downlink_spoofs);
         None
+    }
+}
+
+/// Record a front-door verdict — a datagram refused by the dispatch path
+/// before any job saw it. `kind` is `None` for undecodable datagrams;
+/// the round and client are unknown at this layer.
+pub(crate) fn trace_front(
+    rec: Option<&FlightRecorder>,
+    job_id: u32,
+    kind: Option<WireKind>,
+    peer: SocketAddr,
+    note: TraceNote,
+    now: Instant,
+) {
+    if let Some(r) = rec {
+        r.note(job_id, 0, kind, u16::MAX, Some(peer), note, now);
     }
 }
 
@@ -301,7 +327,9 @@ pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
             .host_budget
             .clone()
             .unwrap_or_else(|| Arc::new(HostBudget::new(opts.limits.host_bytes))),
+        recorder: opts.trace.clone(),
     };
+    crate::debug!("bound {addr} backend={}", opts.io_backend.name());
     let dispatch = match opts.io_backend {
         IoBackend::Threaded => {
             socket.set_read_timeout(Some(STOP_POLL))?;

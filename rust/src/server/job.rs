@@ -39,6 +39,7 @@ use crate::compress::golomb;
 use crate::configx::PsProfile;
 use crate::server::{HostBudget, ServerStats};
 use crate::switch::{alu, window_blocks, Mark, RegisterFile, UpdateAggregator, VoteAggregator};
+use crate::telemetry::{FlightRecorder, TraceNote};
 use crate::util::BitVec;
 use crate::wire::{
     byte_chunk_bounds, encode_lanes_into, lanes_iter, update_chunk_bounds, Frame, FrameScratch,
@@ -165,6 +166,70 @@ struct GiaReady {
     global_max: f32,
 }
 
+/// What became of one ingested data block. Drives both the caller's
+/// completion handling and the flight-recorder verdict for the frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PacketFate {
+    /// Folded into the round state; the phase is still open.
+    Accepted,
+    /// This packet completed the phase.
+    PhaseDone,
+    /// Dropped as an already-counted contribution.
+    Duplicate,
+    /// Dropped for impossible geometry.
+    BadFrame,
+    /// Parked in the host spill buffer (beyond the register window).
+    Spilled,
+    /// Dropped because the spill buffer is at its cap.
+    SpillDropped,
+}
+
+impl PacketFate {
+    /// The recorder verdict for this fate (phase completion is reported
+    /// per phase by the caller, which knows which phase closed).
+    fn note(self, done: TraceNote) -> TraceNote {
+        match self {
+            PacketFate::Accepted => TraceNote::Accepted,
+            PacketFate::PhaseDone => done,
+            PacketFate::Duplicate => TraceNote::Duplicate,
+            PacketFate::BadFrame => TraceNote::BadFrame,
+            PacketFate::Spilled => TraceNote::Spilled,
+            PacketFate::SpillDropped => TraceNote::SpillDropped,
+        }
+    }
+}
+
+/// Record one frame verdict into an attached flight recorder. A no-op
+/// without a recorder; never allocates either way.
+fn trace(
+    rec: Option<&FlightRecorder>,
+    job: u32,
+    h: &Header,
+    peer: Option<SocketAddr>,
+    note: TraceNote,
+    now: Instant,
+) {
+    if let Some(r) = rec {
+        r.note(job, h.round, Some(h.kind), h.client, peer, note, now);
+    }
+}
+
+/// Completed phase timings of one round, measured purely from the `now`
+/// values the caller fed into [`Job::handle`] — the sans-I/O job never
+/// reads a clock, so scripted tests control these durations exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RoundTiming {
+    /// First data frame of the round → GIA multicast (`None` while
+    /// phase 1 is open).
+    pub vote: Option<Duration>,
+    /// GIA multicast → aggregate multicast (`None` while phase 2 is
+    /// open; zero for rounds that close at phase 1 on empty consensus).
+    pub update: Option<Duration>,
+    /// First data frame → aggregate multicast (`None` until the round
+    /// closes).
+    pub total: Option<Duration>,
+}
+
 /// One round's aggregation state.
 struct RoundState {
     // Phase 1: host-side counter mirror (retired waves land here) plus the
@@ -188,6 +253,17 @@ struct RoundState {
     /// Last *validated* data-path packet (idle register reclamation —
     /// garbage or stale-block replays must not count as traffic).
     last_touch: Instant,
+    /// When this round's state was created (first data frame observed) —
+    /// the zero point for every per-round duration.
+    started: Instant,
+    /// When phase 1 closed (the GIA multicast moment).
+    vote_done_at: Option<Instant>,
+    /// Completed phase durations, exported via [`Job::round_timing`].
+    timing: RoundTiming,
+    /// First register-allocation failure of the current stall, if the
+    /// round is stalled; drained into `hist_register_stall` when a wave
+    /// next allocates.
+    stall_since: Option<Instant>,
 }
 
 impl RoundState {
@@ -210,7 +286,30 @@ impl RoundState {
             spill_cap,
             serves: HashMap::new(),
             last_touch: now,
+            started: now,
+            vote_done_at: None,
+            timing: RoundTiming::default(),
+            stall_since: None,
         }
+    }
+
+    /// Stamp phase-1 completion and record the vote-phase duration.
+    fn mark_vote_done(&mut self, stats: &ServerStats, now: Instant) {
+        let vote = now.saturating_duration_since(self.started);
+        self.timing.vote = Some(vote);
+        self.vote_done_at = Some(now);
+        stats.hist_vote_phase.record_micros(vote);
+    }
+
+    /// Stamp round close: record the update-phase duration and the
+    /// end-to-end round latency.
+    fn mark_round_done(&mut self, stats: &ServerStats, now: Instant) {
+        let upd = now.saturating_duration_since(self.vote_done_at.unwrap_or(self.started));
+        let total = now.saturating_duration_since(self.started);
+        self.timing.update = Some(upd);
+        self.timing.total = Some(total);
+        stats.hist_update_phase.record_micros(upd);
+        stats.hist_round_latency.record_micros(total);
     }
 
     /// Charge one full GIA/aggregate frame-set re-serve to `from`'s
@@ -262,7 +361,8 @@ impl RoundState {
 
     // ---- phase 1 ---------------------------------------------------------
 
-    /// Ingest one vote block; returns true when phase 1 just completed.
+    /// Ingest one vote block; [`PacketFate::PhaseDone`] means phase 1
+    /// just completed.
     #[allow(clippy::too_many_arguments)]
     fn vote_packet(
         &mut self,
@@ -275,44 +375,47 @@ impl RoundState {
         payload: &[u8],
         local_max: f32,
         now: Instant,
-    ) -> bool {
+    ) -> PacketFate {
         let d = spec.d as usize;
         let epb = spec.vote_block_bits();
         let block = block as usize;
         if block >= self.vote_wave.n_blocks {
             ServerStats::bump(&stats.decode_errors);
-            return false;
+            return PacketFate::BadFrame;
         }
         let expect = epb.min(d - block * epb);
         if elems as usize != expect || payload.len() != expect.div_ceil(8) {
             ServerStats::bump(&stats.decode_errors);
-            return false;
+            return PacketFate::BadFrame;
         }
         self.local_max = self.local_max.max(local_max);
         if block < self.vote_wave.start {
             ServerStats::bump(&stats.duplicates);
-            return false;
+            return PacketFate::Duplicate;
         }
         // Only a frame that survives validation (and isn't a stale-block
-        // replay) counts as traffic for idle register reclamation.
+        // replay) counts as traffic for idle register reclamation. The
+        // previous touch is the phase's final inter-arrival wait if this
+        // packet completes it — the straggler gap.
+        let prev_touch = self.last_touch;
         self.last_touch = now;
         // Make sure the resident wave has registers (lazy allocation also
         // drains any spill that became resident).
-        if self.vote_agg.is_none() && self.pump_vote(spec, rf, stats) {
-            return true;
+        if self.vote_agg.is_none() && self.pump_vote(spec, rf, stats, now) {
+            return Self::phase_done(stats, prev_touch, now);
         }
         if block < self.vote_wave.start {
             // The pump advanced past this block on drained spill — the
             // packet is a duplicate of an already-aggregated contribution.
             ServerStats::bump(&stats.duplicates);
-            return false;
+            return PacketFate::Duplicate;
         }
         if self.vote_agg.is_some() && block < self.vote_wave.end() {
             let rel = block - self.vote_wave.start;
             let mark = self.vote_agg.as_mut().unwrap().ingest(client as usize, rel, payload);
             if mark == Mark::Duplicate {
                 ServerStats::bump(&stats.duplicates);
-                return false;
+                return PacketFate::Duplicate;
             }
         } else {
             // Beyond the register window (or the window is stalled on
@@ -323,20 +426,38 @@ impl RoundState {
             let key = (block as u32, client);
             if self.vote_spill.contains_key(&key) {
                 ServerStats::bump(&stats.duplicates);
+                return PacketFate::Duplicate;
             } else if self.vote_spill.len() >= self.spill_cap {
                 ServerStats::bump(&stats.spill_dropped);
-            } else {
-                self.vote_spill.insert(key, payload.to_vec());
-                ServerStats::bump(&stats.spilled);
+                return PacketFate::SpillDropped;
             }
-            return false;
+            self.vote_spill.insert(key, payload.to_vec());
+            ServerStats::bump(&stats.spilled);
+            return PacketFate::Spilled;
         }
-        self.pump_vote(spec, rf, stats)
+        if self.pump_vote(spec, rf, stats, now) {
+            Self::phase_done(stats, prev_touch, now)
+        } else {
+            PacketFate::Accepted
+        }
+    }
+
+    /// A data packet just completed its phase: record the straggler gap
+    /// (the wait for this final contribution) and report the fate.
+    fn phase_done(stats: &ServerStats, prev_touch: Instant, now: Instant) -> PacketFate {
+        stats.hist_straggler_gap.record_micros(now.saturating_duration_since(prev_touch));
+        PacketFate::PhaseDone
     }
 
     /// Allocate/retire vote waves until progress stops. Returns true when
     /// the whole vote block space has been aggregated.
-    fn pump_vote(&mut self, spec: &JobSpec, rf: &mut RegisterFile, stats: &ServerStats) -> bool {
+    fn pump_vote(
+        &mut self,
+        spec: &JobSpec,
+        rf: &mut RegisterFile,
+        stats: &ServerStats,
+        now: Instant,
+    ) -> bool {
         let d = spec.d as usize;
         let epb = spec.vote_block_bits();
         loop {
@@ -357,11 +478,13 @@ impl RoundState {
                         if self.vote_wave.start > 0 {
                             ServerStats::bump(&stats.waves);
                         }
+                        self.end_stall(stats, now);
                         self.vote_agg = Some(agg);
                         self.drain_vote_spill(stats);
                     }
                     Err(_) => {
                         ServerStats::bump(&stats.register_stalls);
+                        self.stall_since.get_or_insert(now);
                         return false;
                     }
                 }
@@ -375,6 +498,14 @@ impl RoundState {
             self.counters[lo_dim..lo_dim + wave_dims].copy_from_slice(agg.counters());
             agg.release(rf);
             self.vote_wave.start = self.vote_wave.end();
+        }
+    }
+
+    /// A wave just won registers: if the round was stalled on the
+    /// register file, record how long the stall spanned.
+    fn end_stall(&mut self, stats: &ServerStats, now: Instant) {
+        if let Some(t0) = self.stall_since.take() {
+            stats.hist_register_stall.record_micros(now.saturating_duration_since(t0));
         }
     }
 
@@ -396,7 +527,13 @@ impl RoundState {
     }
 
     /// Threshold the finished counters into the GIA and arm phase 2.
-    fn finish_phase1(&mut self, spec: &JobSpec, memory_bytes: usize, stats: &ServerStats) {
+    fn finish_phase1(
+        &mut self,
+        spec: &JobSpec,
+        memory_bytes: usize,
+        stats: &ServerStats,
+        now: Instant,
+    ) {
         let d = spec.d as usize;
         let mut bytes = vec![0u8; d.div_ceil(8)];
         alu::threshold_votes(&self.counters, spec.threshold_a, &mut bytes);
@@ -407,11 +544,14 @@ impl RoundState {
         let window = window_blocks(memory_bytes, spec.payload_budget as usize).min(n_blocks);
         self.upd_acc = vec![0i32; k_s];
         self.upd_wave = Wave { n_blocks, window, start: 0 };
+        self.mark_vote_done(stats, now);
         if k_s == 0 {
             // Nothing passed the consensus threshold: the round's data
-            // phase is trivially complete.
+            // phase is trivially complete (and its update phase lasted
+            // zero time, which the latency histograms record as such).
             self.upd_wave.start = self.upd_wave.n_blocks;
             self.agg_done = true;
+            self.mark_round_done(stats, now);
             ServerStats::bump(&stats.rounds_completed);
         }
         self.gia = Some(GiaReady { gia, encoded, global_max: self.local_max });
@@ -419,7 +559,8 @@ impl RoundState {
 
     // ---- phase 2 ---------------------------------------------------------
 
-    /// Ingest one update block; returns true when phase 2 just completed.
+    /// Ingest one update block; [`PacketFate::PhaseDone`] means phase 2
+    /// just completed.
     #[allow(clippy::too_many_arguments)]
     fn update_packet(
         &mut self,
@@ -431,31 +572,32 @@ impl RoundState {
         elems: u32,
         payload: &[u8],
         now: Instant,
-    ) -> bool {
+    ) -> PacketFate {
         let k_s = self.upd_acc.len();
         let epb = spec.update_block_lanes();
         let block = block as usize;
         if block >= self.upd_wave.n_blocks {
             ServerStats::bump(&stats.decode_errors);
-            return false;
+            return PacketFate::BadFrame;
         }
         let expect = epb.min(k_s - (block * epb).min(k_s));
         if elems as usize != expect || payload.len() != expect * 4 {
             ServerStats::bump(&stats.decode_errors);
-            return false;
+            return PacketFate::BadFrame;
         }
         if block < self.upd_wave.start {
             ServerStats::bump(&stats.duplicates);
-            return false;
+            return PacketFate::Duplicate;
         }
         // See vote_packet: validated, non-stale traffic only.
+        let prev_touch = self.last_touch;
         self.last_touch = now;
-        if self.upd_agg.is_none() && self.pump_update(spec, rf, stats) {
-            return true;
+        if self.upd_agg.is_none() && self.pump_update(spec, rf, stats, now) {
+            return Self::phase_done(stats, prev_touch, now);
         }
         if block < self.upd_wave.start {
             ServerStats::bump(&stats.duplicates);
-            return false;
+            return PacketFate::Duplicate;
         }
         if self.upd_agg.is_some() && block < self.upd_wave.end() {
             let lanes: Vec<i32> = lanes_iter(payload).collect();
@@ -463,26 +605,37 @@ impl RoundState {
             let mark = self.upd_agg.as_mut().unwrap().ingest(client as usize, rel, &lanes);
             if mark == Mark::Duplicate {
                 ServerStats::bump(&stats.duplicates);
-                return false;
+                return PacketFate::Duplicate;
             }
         } else {
             // Same dedup + cap discipline as the vote spill.
             let key = (block as u32, client);
             if self.upd_spill.contains_key(&key) {
                 ServerStats::bump(&stats.duplicates);
+                return PacketFate::Duplicate;
             } else if self.upd_spill.len() >= self.spill_cap {
                 ServerStats::bump(&stats.spill_dropped);
-            } else {
-                let lanes: Vec<i32> = lanes_iter(payload).collect();
-                self.upd_spill.insert(key, lanes);
-                ServerStats::bump(&stats.spilled);
+                return PacketFate::SpillDropped;
             }
-            return false;
+            let lanes: Vec<i32> = lanes_iter(payload).collect();
+            self.upd_spill.insert(key, lanes);
+            ServerStats::bump(&stats.spilled);
+            return PacketFate::Spilled;
         }
-        self.pump_update(spec, rf, stats)
+        if self.pump_update(spec, rf, stats, now) {
+            Self::phase_done(stats, prev_touch, now)
+        } else {
+            PacketFate::Accepted
+        }
     }
 
-    fn pump_update(&mut self, spec: &JobSpec, rf: &mut RegisterFile, stats: &ServerStats) -> bool {
+    fn pump_update(
+        &mut self,
+        spec: &JobSpec,
+        rf: &mut RegisterFile,
+        stats: &ServerStats,
+        now: Instant,
+    ) -> bool {
         let k_s = self.upd_acc.len();
         let epb = spec.update_block_lanes();
         loop {
@@ -497,11 +650,13 @@ impl RoundState {
                         if self.upd_wave.start > 0 {
                             ServerStats::bump(&stats.waves);
                         }
+                        self.end_stall(stats, now);
                         self.upd_agg = Some(agg);
                         self.drain_update_spill(stats);
                     }
                     Err(_) => {
                         ServerStats::bump(&stats.register_stalls);
+                        self.stall_since.get_or_insert(now);
                         return false;
                     }
                 }
@@ -567,6 +722,10 @@ pub struct Job {
     lane_buf: Vec<u8>,
     /// Reused outer `Outgoing` vectors (returned by [`Job::recycle`]).
     out_pool: Vec<Outgoing>,
+    /// Optional flight recorder; when attached, every frame verdict is
+    /// recorded (a branch and an atomic-free ring write — no per-frame
+    /// allocation either way).
+    recorder: Option<Arc<FlightRecorder>>,
     state: Option<JobState>,
 }
 
@@ -626,8 +785,15 @@ impl Job {
             dests: Vec::new(),
             lane_buf: Vec::new(),
             out_pool: Vec::new(),
+            recorder: None,
             state: None,
         }
+    }
+
+    /// Attach a flight recorder: from here on every handled frame's
+    /// verdict is recorded (ring overwrite, no steady-state allocation).
+    pub fn attach_recorder(&mut self, recorder: Arc<FlightRecorder>) {
+        self.recorder = Some(recorder);
     }
 
     /// True once a valid `Join` has fixed the job's spec.
@@ -651,6 +817,14 @@ impl Job {
         let st = self.state.as_ref()?;
         let rs = st.rounds.get(&round)?;
         rs.agg_done.then_some(rs.upd_acc.as_slice())
+    }
+
+    /// Phase timings of a round, measured from the `now` values the
+    /// caller fed in (None for a round this job never saw). Fields fill
+    /// in as phases complete.
+    pub fn round_timing(&self, round: u32) -> Option<RoundTiming> {
+        let st = self.state.as_ref()?;
+        st.rounds.get(&round).map(|rs| rs.timing)
     }
 
     /// Handle one decoded frame at time `now`; returns the datagrams to
@@ -724,21 +898,24 @@ impl Job {
         // server-bound spoofs. They must be dropped *silently* — even a
         // small JoinAck/UNKNOWN reply would let a forged Gia/Aggregate
         // frame bounce traffic off this daemon at a victim address.
+        let rec = self.recorder.as_deref();
         if matches!(
             h.kind,
             WireKind::JoinAck | WireKind::Gia | WireKind::Aggregate | WireKind::NotReady
         ) {
             ServerStats::bump(&self.stats.downlink_spoofs);
+            trace(rec, self.id, &h, Some(from), TraceNote::DownlinkSpoof, now);
             return;
         }
         match h.kind {
-            WireKind::Join => self.on_join(h, frame.payload, from, out),
+            WireKind::Join => self.on_join(h, frame.payload, from, now, out),
             _ if self.state.is_none() => {
+                trace(rec, self.id, &h, Some(from), TraceNote::UnknownJob, now);
                 self.ack(h.client, h.round, JOIN_UNKNOWN_JOB, from, out)
             }
-            WireKind::Vote => self.on_vote(h, frame.payload, now, out),
-            WireKind::Update => self.on_update(h, frame.payload, now, out),
-            WireKind::Poll => self.on_poll(h, from, out),
+            WireKind::Vote => self.on_vote(h, frame.payload, from, now, out),
+            WireKind::Update => self.on_update(h, frame.payload, from, now, out),
+            WireKind::Poll => self.on_poll(h, from, now, out),
             // Unreachable: every uplink kind is matched above.
             _ => {}
         }
@@ -749,18 +926,35 @@ impl Job {
         out.push((self.scratch.encode(&h, &[]), to));
     }
 
-    fn on_join(&mut self, h: Header, payload: &[u8], from: SocketAddr, out: &mut Outgoing) {
+    fn on_join(
+        &mut self,
+        h: Header,
+        payload: &[u8],
+        from: SocketAddr,
+        now: Instant,
+        out: &mut Outgoing,
+    ) {
+        // Clone the recorder handle so the trace closure borrows no part
+        // of `self` (Join is rare — one Arc bump is nothing).
+        let rec = self.recorder.clone();
+        let id = self.id;
+        let verdict = move |note| trace(rec.as_deref(), id, &h, Some(from), note, now);
         let spec = match JobSpec::decode(payload) {
             Ok(s) => s,
-            Err(_) => return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out),
+            Err(_) => {
+                verdict(TraceNote::JoinRefused);
+                return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out);
+            }
         };
         // One resident block of either phase must fit this switch's
         // register file (vote: 2 bytes per dimension, update: the lanes).
         let min_block = (spec.vote_block_bits() * 2).max(spec.payload_budget as usize);
         if min_block > self.profile.memory_bytes || h.client >= spec.n_clients {
+            verdict(TraceNote::JoinRefused);
             return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out);
         }
         if self.state.as_ref().is_some_and(|st| st.spec != spec) {
+            verdict(TraceNote::JoinRefused);
             return self.ack(h.client, h.round, JOIN_SPEC_MISMATCH, from, out);
         }
         if self.state.is_none() {
@@ -772,6 +966,7 @@ impl Job {
             // deployment the tenant's shards draw on ONE budget.
             let worst = spec.host_bytes_per_round().saturating_mul(MAX_LIVE_ROUNDS);
             if !self.budget.try_reserve(self.id, worst) {
+                verdict(TraceNote::JoinRefused);
                 return self.ack(h.client, h.round, JOIN_BAD_SPEC, from, out);
             }
             self.reserved = worst;
@@ -785,6 +980,7 @@ impl Job {
         }
         self.state.as_mut().unwrap().clients.insert(h.client, from);
         ServerStats::bump(&self.stats.joins);
+        verdict(TraceNote::JoinAccepted);
         self.ack(h.client, h.round, JOIN_OK, from, out)
     }
 
@@ -858,10 +1054,19 @@ impl Job {
         }
     }
 
-    fn on_vote(&mut self, h: Header, payload: &[u8], now: Instant, out: &mut Outgoing) {
+    fn on_vote(
+        &mut self,
+        h: Header,
+        payload: &[u8],
+        from: SocketAddr,
+        now: Instant,
+        out: &mut Outgoing,
+    ) {
+        let rec = self.recorder.as_deref();
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
+            trace(rec, self.id, &h, Some(from), TraceNote::BadFrame, now);
             return;
         }
         // The aux word is this client's local max-|U|, folded with max
@@ -871,6 +1076,7 @@ impl Job {
         let local_max = f32::from_bits(h.aux);
         if !local_max.is_finite() {
             ServerStats::bump(&self.stats.non_finite_aux);
+            trace(rec, self.id, &h, Some(from), TraceNote::NonFiniteAux, now);
             return;
         }
         Self::reap_idle(st, Some(h.round), now, &self.limits, &self.stats);
@@ -884,9 +1090,10 @@ impl Job {
             // under the per-source budget — answering every retransmitted
             // data frame with the full set would be a reflection vector.
             ServerStats::bump(&self.stats.duplicates);
+            trace(rec, self.id, &h, Some(from), TraceNote::Duplicate, now);
             return;
         }
-        let done = rs.vote_packet(
+        let fate = rs.vote_packet(
             &spec,
             registers,
             &self.stats,
@@ -897,15 +1104,17 @@ impl Job {
             local_max,
             now,
         );
-        if !done {
+        trace(rec, self.id, &h, Some(from), fate.note(TraceNote::PhaseOneDone), now);
+        if fate != PacketFate::PhaseDone {
             return;
         }
-        rs.finish_phase1(&spec, self.profile.memory_bytes, &self.stats);
+        rs.finish_phase1(&spec, self.profile.memory_bytes, &self.stats, now);
         Self::gia_templates(&mut self.scratch, &mut self.templates, self.id, h.round, rs, &spec);
         if rs.agg_done {
             // Empty consensus: phase 2 closed inside finish_phase1, so
             // this multicast is the only chance to answer the clients'
             // (empty) aggregate wait without costing each a poll cycle.
+            trace(rec, self.id, &h, Some(from), TraceNote::RoundDone, now);
             Self::agg_templates(
                 &mut self.scratch,
                 &mut self.lane_buf,
@@ -921,10 +1130,19 @@ impl Job {
         Self::fan_out(&mut self.scratch, &mut self.templates, &self.dests, out);
     }
 
-    fn on_update(&mut self, h: Header, payload: &[u8], now: Instant, out: &mut Outgoing) {
+    fn on_update(
+        &mut self,
+        h: Header,
+        payload: &[u8],
+        from: SocketAddr,
+        now: Instant,
+        out: &mut Outgoing,
+    ) {
+        let rec = self.recorder.as_deref();
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
+            trace(rec, self.id, &h, Some(from), TraceNote::BadFrame, now);
             return;
         }
         Self::reap_idle(st, Some(h.round), now, &self.limits, &self.stats);
@@ -934,21 +1152,24 @@ impl Job {
             // Updates for an unknown round (e.g. pruned): nothing to join
             // them to — the client's poll will get NotReady.
             ServerStats::bump(&self.stats.decode_errors);
+            trace(rec, self.id, &h, Some(from), TraceNote::BadFrame, now);
             return;
         };
         if rs.gia.is_none() {
             // Phase 2 data before phase 1 finished — protocol violation or
             // heavy reordering; drop and let the client retransmit.
             ServerStats::bump(&self.stats.decode_errors);
+            trace(rec, self.id, &h, Some(from), TraceNote::BadFrame, now);
             return;
         }
         if rs.agg_done {
             // Round already closed: as with late votes, recovery goes
             // through the budgeted Poll path, not data-frame echoes.
             ServerStats::bump(&self.stats.duplicates);
+            trace(rec, self.id, &h, Some(from), TraceNote::Duplicate, now);
             return;
         }
-        let done = rs.update_packet(
+        let fate = rs.update_packet(
             &spec,
             registers,
             &self.stats,
@@ -958,10 +1179,12 @@ impl Job {
             payload,
             now,
         );
-        if !done {
+        trace(rec, self.id, &h, Some(from), fate.note(TraceNote::RoundDone), now);
+        if fate != PacketFate::PhaseDone {
             return;
         }
         rs.agg_done = true;
+        rs.mark_round_done(&self.stats, now);
         ServerStats::bump(&self.stats.rounds_completed);
         Self::agg_templates(
             &mut self.scratch,
@@ -977,22 +1200,26 @@ impl Job {
         Self::fan_out(&mut self.scratch, &mut self.templates, &self.dests, out);
     }
 
-    fn on_poll(&mut self, h: Header, from: SocketAddr, out: &mut Outgoing) {
+    fn on_poll(&mut self, h: Header, from: SocketAddr, now: Instant, out: &mut Outgoing) {
+        let rec = self.recorder.as_deref();
         let st = self.state.as_mut().unwrap();
         if h.client >= st.spec.n_clients {
             ServerStats::bump(&self.stats.decode_errors);
+            trace(rec, self.id, &h, Some(from), TraceNote::BadFrame, now);
             return;
         }
         let JobState { spec, rounds, clients, .. } = st;
         let spec = *spec;
         let not_ready = Header::control(WireKind::NotReady, self.id, h.client, h.round, h.aux);
         let Some(rs) = rounds.get_mut(&h.round) else {
+            trace(rec, self.id, &h, Some(from), TraceNote::NotReady, now);
             out.push((self.scratch.encode(&not_ready, &[]), from));
             return;
         };
         let serving = (h.aux == WireKind::Gia as u32 && rs.gia.is_some())
             || (h.aux == WireKind::Aggregate as u32 && rs.agg_done);
         if !serving {
+            trace(rec, self.id, &h, Some(from), TraceNote::NotReady, now);
             out.push((self.scratch.encode(&not_ready, &[]), from));
             return;
         }
@@ -1001,8 +1228,10 @@ impl Job {
         // keep a seat at the table and get extra budget headroom.
         let registered = clients.values().any(|a| *a == from);
         if !rs.charge_reserve(from, registered, &self.limits, &self.stats) {
+            trace(rec, self.id, &h, Some(from), TraceNote::PollSuppressed, now);
             return;
         }
+        trace(rec, self.id, &h, Some(from), TraceNote::PollServed, now);
         if h.aux == WireKind::Gia as u32 {
             Self::gia_templates(&mut self.scratch, &mut self.templates, self.id, h.round, rs, &spec);
         } else {

@@ -40,12 +40,16 @@ pub mod threaded;
 
 pub use daemon::{serve, serve_sharded, IoBackend, ServeOptions, ServerHandle};
 pub use job::{
-    Job, JobLimits, JobOutput, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH, JOIN_UNKNOWN_JOB,
+    Job, JobLimits, JobOutput, RoundTiming, JOIN_BAD_SPEC, JOIN_OK, JOIN_SPEC_MISMATCH,
+    JOIN_UNKNOWN_JOB,
 };
 
 use std::collections::HashMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::telemetry::{Hist, HistSummary};
 
 /// Host-memory accountant: per-tenant (job-id-keyed) byte reservations
 /// against one cap. Each daemon normally owns a private accountant, but
@@ -166,6 +170,21 @@ pub struct ServerStats {
     /// empty. Grows during warm-up only: steady-state rounds must hold
     /// this flat (`fediac bench-codec` / `bench-wire` assert it).
     pub pool_misses: AtomicU64,
+    /// End-to-end round latency (first data frame of the round to the
+    /// aggregate multicast), microseconds.
+    pub hist_round_latency: Hist,
+    /// Vote-phase duration (first data frame to the GIA multicast),
+    /// microseconds.
+    pub hist_vote_phase: Hist,
+    /// Update-phase duration (GIA multicast to the aggregate multicast),
+    /// microseconds.
+    pub hist_update_phase: Hist,
+    /// Register-stall duration: how long a round's wave allocation kept
+    /// being refused before registers freed up, microseconds.
+    pub hist_register_stall: Hist,
+    /// Straggler gap: how long a completing phase sat one contribution
+    /// short waiting for its final data frame, microseconds.
+    pub hist_straggler_gap: Hist,
 }
 
 /// Point-in-time copy of [`ServerStats`] for reporting.
@@ -211,6 +230,16 @@ pub struct StatsSnapshot {
     pub frames_pooled: u64,
     /// See [`ServerStats::pool_misses`].
     pub pool_misses: u64,
+    /// See [`ServerStats::hist_round_latency`].
+    pub hist_round_latency: HistSummary,
+    /// See [`ServerStats::hist_vote_phase`].
+    pub hist_vote_phase: HistSummary,
+    /// See [`ServerStats::hist_update_phase`].
+    pub hist_update_phase: HistSummary,
+    /// See [`ServerStats::hist_register_stall`].
+    pub hist_register_stall: HistSummary,
+    /// See [`ServerStats::hist_straggler_gap`].
+    pub hist_straggler_gap: HistSummary,
 }
 
 impl StatsSnapshot {
@@ -238,6 +267,61 @@ impl StatsSnapshot {
         self.idle_wakeups += other.idle_wakeups;
         self.frames_pooled += other.frames_pooled;
         self.pool_misses += other.pool_misses;
+        self.hist_round_latency.merge(&other.hist_round_latency);
+        self.hist_vote_phase.merge(&other.hist_vote_phase);
+        self.hist_update_phase.merge(&other.hist_update_phase);
+        self.hist_register_stall.merge(&other.hist_register_stall);
+        self.hist_straggler_gap.merge(&other.hist_straggler_gap);
+    }
+
+    /// Render one JSON object (a single line, no trailing newline) with
+    /// every counter plus p50/p90/p99/max summaries of each latency
+    /// histogram — the payload of `fediac serve --metrics-interval`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        let mut counter = |k: &str, v: u64| {
+            let _ = write!(out, "\"{k}\":{v},");
+        };
+        counter("packets", self.packets);
+        counter("decode_errors", self.decode_errors);
+        counter("duplicates", self.duplicates);
+        counter("spilled", self.spilled);
+        counter("spill_dropped", self.spill_dropped);
+        counter("waves", self.waves);
+        counter("overflow_lanes", self.overflow_lanes);
+        counter("register_stalls", self.register_stalls);
+        counter("reserves_suppressed", self.reserves_suppressed);
+        counter("idle_releases", self.idle_releases);
+        counter("downlink_spoofs", self.downlink_spoofs);
+        counter("non_finite_aux", self.non_finite_aux);
+        counter("joins", self.joins);
+        counter("jobs_created", self.jobs_created);
+        counter("jobs_rejected", self.jobs_rejected);
+        counter("rounds_completed", self.rounds_completed);
+        counter("workers_spawned", self.workers_spawned);
+        counter("idle_wakeups", self.idle_wakeups);
+        counter("frames_pooled", self.frames_pooled);
+        counter("pool_misses", self.pool_misses);
+        for (key, h) in [
+            ("round_latency_us", &self.hist_round_latency),
+            ("vote_phase_us", &self.hist_vote_phase),
+            ("update_phase_us", &self.hist_update_phase),
+            ("register_stall_us", &self.hist_register_stall),
+            ("straggler_gap_us", &self.hist_straggler_gap),
+        ] {
+            let _ = write!(
+                out,
+                "\"{key}\":{{\"count\":{},\"p50\":{},\"p90\":{},\"p99\":{},\"max\":{}}},",
+                h.count(),
+                h.quantile(0.50),
+                h.quantile(0.90),
+                h.quantile(0.99),
+                h.max
+            );
+        }
+        out.pop(); // trailing comma
+        out.push('}');
+        out
     }
 }
 
@@ -277,6 +361,173 @@ impl ServerStats {
             idle_wakeups: self.idle_wakeups.load(Ordering::Relaxed),
             frames_pooled: self.frames_pooled.load(Ordering::Relaxed),
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            hist_round_latency: self.hist_round_latency.summary(),
+            hist_vote_phase: self.hist_vote_phase.summary(),
+            hist_update_phase: self.hist_update_phase.summary(),
+            hist_register_stall: self.hist_register_stall.summary(),
+            hist_straggler_gap: self.hist_straggler_gap.summary(),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    /// Build a `ServerStats` with every counter holding a distinct value
+    /// and one distinct sample in every histogram.
+    fn distinct_stats() -> ServerStats {
+        let stats = ServerStats::default();
+        let counters = [
+            &stats.packets,
+            &stats.decode_errors,
+            &stats.duplicates,
+            &stats.spilled,
+            &stats.spill_dropped,
+            &stats.waves,
+            &stats.overflow_lanes,
+            &stats.register_stalls,
+            &stats.reserves_suppressed,
+            &stats.idle_releases,
+            &stats.downlink_spoofs,
+            &stats.non_finite_aux,
+            &stats.joins,
+            &stats.jobs_created,
+            &stats.jobs_rejected,
+            &stats.rounds_completed,
+            &stats.workers_spawned,
+            &stats.idle_wakeups,
+            &stats.frames_pooled,
+            &stats.pool_misses,
+        ];
+        for (i, c) in counters.iter().enumerate() {
+            c.store(i as u64 + 1, Ordering::Relaxed);
+        }
+        let hists = [
+            &stats.hist_round_latency,
+            &stats.hist_vote_phase,
+            &stats.hist_update_phase,
+            &stats.hist_register_stall,
+            &stats.hist_straggler_gap,
+        ];
+        for (i, h) in hists.iter().enumerate() {
+            h.record(1u64 << (2 * i)); // 1, 4, 16, 64, 256: distinct buckets
+        }
+        stats
+    }
+
+    /// Completeness guard: every `ServerStats` field must survive
+    /// `snapshot()` and double under a self-`merge()`. A field added to
+    /// the struct but forgotten in either path makes one of these
+    /// comparisons fail, so sharded aggregation can't silently drop it.
+    #[test]
+    fn snapshot_and_merge_carry_every_field() {
+        let snap = distinct_stats().snapshot();
+
+        let fields = [
+            ("packets", snap.packets),
+            ("decode_errors", snap.decode_errors),
+            ("duplicates", snap.duplicates),
+            ("spilled", snap.spilled),
+            ("spill_dropped", snap.spill_dropped),
+            ("waves", snap.waves),
+            ("overflow_lanes", snap.overflow_lanes),
+            ("register_stalls", snap.register_stalls),
+            ("reserves_suppressed", snap.reserves_suppressed),
+            ("idle_releases", snap.idle_releases),
+            ("downlink_spoofs", snap.downlink_spoofs),
+            ("non_finite_aux", snap.non_finite_aux),
+            ("joins", snap.joins),
+            ("jobs_created", snap.jobs_created),
+            ("jobs_rejected", snap.jobs_rejected),
+            ("rounds_completed", snap.rounds_completed),
+            ("workers_spawned", snap.workers_spawned),
+            ("idle_wakeups", snap.idle_wakeups),
+            ("frames_pooled", snap.frames_pooled),
+            ("pool_misses", snap.pool_misses),
+        ];
+        for (i, (name, v)) in fields.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1, "snapshot dropped or shuffled `{name}`");
+        }
+        let hists = [
+            ("hist_round_latency", &snap.hist_round_latency, 1u64),
+            ("hist_vote_phase", &snap.hist_vote_phase, 4),
+            ("hist_update_phase", &snap.hist_update_phase, 16),
+            ("hist_register_stall", &snap.hist_register_stall, 64),
+            ("hist_straggler_gap", &snap.hist_straggler_gap, 256),
+        ];
+        for (name, h, v) in hists {
+            assert_eq!(h.count(), 1, "snapshot dropped `{name}`");
+            assert_eq!(h.max, v, "snapshot shuffled `{name}`");
+        }
+
+        // merge(): identity from zero, then doubling under self-merge.
+        let mut from_zero = StatsSnapshot::default();
+        from_zero.merge(&snap);
+        assert_eq!(from_zero, snap, "merge from zero must be the identity");
+        let mut doubled = snap;
+        doubled.merge(&snap);
+        for (i, (name, _)) in fields.iter().enumerate() {
+            let fields2 = [
+                doubled.packets,
+                doubled.decode_errors,
+                doubled.duplicates,
+                doubled.spilled,
+                doubled.spill_dropped,
+                doubled.waves,
+                doubled.overflow_lanes,
+                doubled.register_stalls,
+                doubled.reserves_suppressed,
+                doubled.idle_releases,
+                doubled.downlink_spoofs,
+                doubled.non_finite_aux,
+                doubled.joins,
+                doubled.jobs_created,
+                doubled.jobs_rejected,
+                doubled.rounds_completed,
+                doubled.workers_spawned,
+                doubled.idle_wakeups,
+                doubled.frames_pooled,
+                doubled.pool_misses,
+            ];
+            assert_eq!(fields2[i], 2 * (i as u64 + 1), "merge dropped `{name}`");
+        }
+        for (name, h, _) in [
+            ("hist_round_latency", &doubled.hist_round_latency, 0u64),
+            ("hist_vote_phase", &doubled.hist_vote_phase, 0),
+            ("hist_update_phase", &doubled.hist_update_phase, 0),
+            ("hist_register_stall", &doubled.hist_register_stall, 0),
+            ("hist_straggler_gap", &doubled.hist_straggler_gap, 0),
+        ] {
+            assert_eq!(h.count(), 2, "merge dropped `{name}`");
+        }
+    }
+
+    /// The metrics JSON line parses with the in-tree parser and carries
+    /// every counter key plus the quantile summaries.
+    #[test]
+    fn metrics_json_line_is_complete_and_parseable() {
+        let snap = distinct_stats().snapshot();
+        let line = snap.to_json();
+        assert!(!line.contains('\n'), "must be a single JSON line");
+        let doc = json::parse(&line).unwrap();
+        assert_eq!(doc.get("packets").unwrap().as_usize(), Some(1));
+        assert_eq!(doc.get("pool_misses").unwrap().as_usize(), Some(20));
+        for key in [
+            "round_latency_us",
+            "vote_phase_us",
+            "update_phase_us",
+            "register_stall_us",
+            "straggler_gap_us",
+        ] {
+            let h = doc.get(key).unwrap_or_else(|| panic!("missing `{key}`"));
+            assert_eq!(h.get("count").unwrap().as_usize(), Some(1), "{key}");
+            for q in ["p50", "p90", "p99", "max"] {
+                assert!(h.get(q).is_some(), "{key} missing `{q}`");
+            }
+        }
+        let obj = doc.as_obj().unwrap();
+        assert_eq!(obj.len(), 25, "20 counters + 5 histograms");
     }
 }

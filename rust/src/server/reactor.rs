@@ -43,9 +43,12 @@ use std::time::{Duration, Instant};
 
 use crate::net::chaos::ChaosLane;
 use crate::net::poll::{recv_batch, wait_readable, RecvBatch, TimerWheel};
-use crate::server::daemon::{transmit, unknown_job_reply, BackendShared, MAX_JOBS, STOP_POLL};
+use crate::server::daemon::{
+    trace_front, transmit, unknown_job_reply, BackendShared, MAX_JOBS, STOP_POLL,
+};
 use crate::server::job::Job;
 use crate::server::ServerStats;
+use crate::telemetry::TraceNote;
 use crate::wire::{decode_frame, peek_route, WireKind, MAX_DATAGRAM};
 
 /// Wheel geometry: 10 ms × 512 slots ≈ a 5 s turn. Idle-reclaim
@@ -72,7 +75,8 @@ struct Slot {
 }
 
 pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
-    let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget } = shared;
+    let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget, recorder } =
+        shared;
     let mut slots: HashMap<u32, Slot> = HashMap::new();
     let mut wheel: TimerWheel<u32> =
         TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS, Instant::now());
@@ -120,33 +124,68 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
                 for i in 0..got {
                     let (datagram, from) = batch.datagram(i);
                     ServerStats::bump(&stats.packets);
+                    let rec = recorder.as_deref();
                     let Some((job_id, kind)) = peek_route(datagram) else {
                         ServerStats::bump(&stats.decode_errors);
+                        trace_front(rec, 0, None, from, TraceNote::DecodeError, now);
                         continue;
                     };
                     if !slots.contains_key(&job_id) {
                         // Jobs are born only on Join; everything else gets
                         // the shared front-door treatment.
                         if kind != WireKind::Join {
-                            if let Some(reply) = unknown_job_reply(job_id, kind, &stats) {
-                                let _ = socket.send_to(&reply, from);
+                            match unknown_job_reply(job_id, kind, &stats) {
+                                Some(reply) => {
+                                    trace_front(
+                                        rec,
+                                        job_id,
+                                        Some(kind),
+                                        from,
+                                        TraceNote::UnknownJob,
+                                        now,
+                                    );
+                                    let _ = socket.send_to(&reply, from);
+                                }
+                                None => trace_front(
+                                    rec,
+                                    job_id,
+                                    Some(kind),
+                                    from,
+                                    TraceNote::DownlinkSpoof,
+                                    now,
+                                ),
                             }
                             continue;
                         }
                         if slots.len() >= MAX_JOBS && !evict_unconfigured(&mut slots) {
                             ServerStats::bump(&stats.jobs_rejected);
+                            trace_front(
+                                rec,
+                                job_id,
+                                Some(kind),
+                                from,
+                                TraceNote::CapRejected,
+                                now,
+                            );
+                            crate::warn!(
+                                "job={job_id} rejected: {MAX_JOBS}-job cap, all slots configured"
+                            );
                             continue;
+                        }
+                        let mut job = Job::with_budget(
+                            job_id,
+                            profile.clone(),
+                            limits,
+                            Arc::clone(&budget),
+                            Arc::clone(&stats),
+                        );
+                        if let Some(r) = recorder.clone() {
+                            job.attach_recorder(r);
                         }
                         slots.insert(
                             job_id,
                             Slot {
-                                job: Job::with_budget(
-                                    job_id,
-                                    profile.clone(),
-                                    limits,
-                                    Arc::clone(&budget),
-                                    Arc::clone(&stats),
-                                ),
+                                job,
                                 lane: chaos
                                     .map(|cfg| ChaosLane::new(cfg, chaos_seed ^ job_id as u64)),
                                 armed: None,
@@ -168,7 +207,10 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
                                 slot.armed = Some(t);
                             }
                         }
-                        Err(_) => ServerStats::bump(&stats.decode_errors),
+                        Err(_) => {
+                            ServerStats::bump(&stats.decode_errors);
+                            trace_front(rec, job_id, None, from, TraceNote::DecodeError, now);
+                        }
                     }
                 }
                 if got < batch.depth() {
@@ -220,6 +262,7 @@ fn evict_unconfigured(slots: &mut HashMap<u32, Slot>) -> bool {
     match victim {
         Some(id) => {
             slots.remove(&id);
+            crate::debug!("job={id} evicted (never configured) to admit a new tenant");
             true
         }
         None => false,

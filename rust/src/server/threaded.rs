@@ -25,9 +25,10 @@ use std::time::{Duration, Instant};
 
 use crate::configx::PsProfile;
 use crate::net::chaos::ChaosLane;
-use crate::server::daemon::{transmit, unknown_job_reply, BackendShared, MAX_JOBS};
+use crate::server::daemon::{trace_front, transmit, unknown_job_reply, BackendShared, MAX_JOBS};
 use crate::server::job::{Job, JobLimits};
 use crate::server::{HostBudget, ServerStats};
+use crate::telemetry::{FlightRecorder, TraceNote};
 use crate::wire::{decode_frame, peek_route, WireKind, MAX_DATAGRAM};
 
 type WorkerTx = Sender<(Vec<u8>, SocketAddr)>;
@@ -46,7 +47,8 @@ struct WorkerSlot {
 const CHAOS_TICK: Duration = Duration::from_millis(10);
 
 pub(crate) fn dispatch_loop(socket: UdpSocket, shared: BackendShared) {
-    let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget } = shared;
+    let BackendShared { profile, limits, chaos, chaos_seed, stats, stop, budget, recorder } =
+        shared;
     let mut workers: HashMap<u32, WorkerSlot> = HashMap::new();
     // Sized so no legitimate frame can be truncated by a short recv.
     let mut buf = vec![0u8; MAX_DATAGRAM];
@@ -62,8 +64,10 @@ pub(crate) fn dispatch_loop(socket: UdpSocket, shared: BackendShared) {
             Err(_) => break,
         };
         ServerStats::bump(&stats.packets);
+        let now = Instant::now();
         let Some((job_id, kind)) = peek_route(&buf[..n]) else {
             ServerStats::bump(&stats.decode_errors);
+            trace_front(recorder.as_deref(), 0, None, from, TraceNote::DecodeError, now);
             continue;
         };
         if !workers.contains_key(&job_id) {
@@ -71,13 +75,29 @@ pub(crate) fn dispatch_loop(socket: UdpSocket, shared: BackendShared) {
             // shared front-door treatment (JoinAck/UNKNOWN for genuine
             // uplink kinds, silence for downlink spoofs).
             if kind != WireKind::Join {
-                if let Some(reply) = unknown_job_reply(job_id, kind, &stats) {
-                    let _ = socket.send_to(&reply, from);
+                let rec = recorder.as_deref();
+                match unknown_job_reply(job_id, kind, &stats) {
+                    Some(reply) => {
+                        trace_front(rec, job_id, Some(kind), from, TraceNote::UnknownJob, now);
+                        let _ = socket.send_to(&reply, from);
+                    }
+                    None => {
+                        trace_front(rec, job_id, Some(kind), from, TraceNote::DownlinkSpoof, now)
+                    }
                 }
                 continue;
             }
             if workers.len() >= MAX_JOBS && !evict_unconfigured(&mut workers) {
                 ServerStats::bump(&stats.jobs_rejected);
+                trace_front(
+                    recorder.as_deref(),
+                    job_id,
+                    Some(kind),
+                    from,
+                    TraceNote::CapRejected,
+                    now,
+                );
+                crate::warn!("job={job_id} rejected: {MAX_JOBS}-job cap, all slots configured");
                 continue;
             }
         }
@@ -91,11 +111,13 @@ pub(crate) fn dispatch_loop(socket: UdpSocket, shared: BackendShared) {
                 chaos_seed,
                 Arc::clone(&stats),
                 Arc::clone(&budget),
+                recorder.clone(),
             )
         });
         if worker.tx.send((buf[..n].to_vec(), from)).is_err() {
             // Worker died (should not happen); drop the datagram — the
             // client's retransmission will respawn it.
+            crate::warn!("job={job_id} worker channel closed; dropping datagram");
             workers.remove(&job_id);
         }
     }
@@ -119,6 +141,7 @@ fn evict_unconfigured(workers: &mut HashMap<u32, WorkerSlot>) -> bool {
         drop(slot.tx);
         let _ = slot.handle.join();
     }
+    crate::debug!("job={id} evicted (never configured) to admit a new tenant");
     true
 }
 
@@ -132,6 +155,7 @@ fn spawn_worker(
     chaos_seed: u64,
     stats: Arc<ServerStats>,
     budget: Arc<HostBudget>,
+    recorder: Option<Arc<FlightRecorder>>,
 ) -> WorkerSlot {
     let (tx, rx) = mpsc::channel::<(Vec<u8>, SocketAddr)>();
     let out = socket.try_clone().expect("cloning UDP socket for worker");
@@ -142,6 +166,9 @@ fn spawn_worker(
         .name(format!("fediac-job-{job_id}"))
         .spawn(move || {
             let mut job = Job::with_budget(job_id, profile, limits, budget, Arc::clone(&stats));
+            if let Some(rec) = recorder.clone() {
+                job.attach_recorder(rec);
+            }
             // Downlink chaos lane (None = send straight through). Held
             // copies carry their destination as lane metadata.
             let mut lane: Option<ChaosLane<SocketAddr>> =
@@ -198,7 +225,17 @@ fn spawn_worker(
                                 flag.store(true, Ordering::SeqCst);
                             }
                         }
-                        Err(_) => ServerStats::bump(&stats.decode_errors),
+                        Err(_) => {
+                            ServerStats::bump(&stats.decode_errors);
+                            trace_front(
+                                recorder.as_deref(),
+                                job_id,
+                                None,
+                                from,
+                                TraceNote::DecodeError,
+                                now,
+                            );
+                        }
                     }
                 }
                 if let Some(l) = lane.as_mut() {

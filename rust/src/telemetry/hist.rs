@@ -1,0 +1,332 @@
+//! Lock-free log2-bucketed latency histograms.
+//!
+//! One bucket per power of two: bucket 0 holds the value 0 and bucket
+//! `k ≥ 1` holds `[2^(k-1), 2^k)`, so 65 buckets cover the full `u64`
+//! range with a fixed-size array and ≤ 2× relative quantile error. Two
+//! forms share the layout:
+//!
+//! * [`Hist`] — atomic buckets for concurrent recording on the data
+//!   plane (one relaxed `fetch_add` per sample, no locks, no
+//!   allocation).
+//! * [`HistSummary`] — a plain `Copy` snapshot that merges, compares
+//!   (`Eq`), travels inside `StatsSnapshot`/`ClientStats`, and answers
+//!   quantile queries.
+//!
+//! The accuracy contract is pinned by [`oracle_quantile`], the exact
+//! sorted-vector nearest-rank percentile kept in-tree (the repo's
+//! oracle culture): a histogram quantile always lands in the same
+//! power-of-two bucket as the oracle value, never below it, and never
+//! above the recorded maximum. The maximum itself is tracked exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 buckets: the value 0 plus one bucket per power of two.
+pub const N_BUCKETS: usize = 65;
+
+/// Bucket index of a value: 0 for 0, else `floor(log2(v)) + 1`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Largest value a bucket can hold (`u64::MAX` for the top bucket).
+#[inline]
+pub fn bucket_ceil(bucket: usize) -> u64 {
+    match bucket {
+        0 => 0,
+        1..=63 => (1u64 << bucket) - 1,
+        _ => u64::MAX,
+    }
+}
+
+/// Exact nearest-rank quantile over an ascending-sorted slice: the
+/// smallest element with at least `⌈q·n⌉` elements ≤ it (0 on empty
+/// input). This is the scalar oracle the histogram is property-tested
+/// against.
+pub fn oracle_quantile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Plain log2-bucketed histogram snapshot: recordable, mergeable,
+/// `Copy`, and byte-for-byte comparable (`Eq`) so it can ride inside
+/// the repo's stats structs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Sample count per log2 bucket (see [`bucket_of`]).
+    pub buckets: [u64; N_BUCKETS],
+    /// Saturating sum of all recorded values.
+    pub sum: u64,
+    /// Exact maximum recorded value (0 when empty).
+    pub max: u64,
+}
+
+impl Default for HistSummary {
+    fn default() -> Self {
+        HistSummary { buckets: [0; N_BUCKETS], sum: 0, max: 0 }
+    }
+}
+
+impl HistSummary {
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a duration in microseconds (saturating past `u64::MAX` µs).
+    pub fn record_micros(&mut self, d: Duration) {
+        self.record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&b| b == 0)
+    }
+
+    /// Fold another summary into this one (element-wise bucket add,
+    /// saturating sum, max of maxima).
+    pub fn merge(&mut self, other: &HistSummary) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b = b.saturating_add(*o);
+        }
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile estimate, `q ∈ [0, 1]`: the ceiling of the
+    /// bucket holding the rank, clamped to the exact recorded maximum
+    /// (0 when empty). `quantile(1.0)` is therefore the exact max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (bucket, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_ceil(bucket).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Lock-free histogram for concurrent recording: atomic buckets with
+/// relaxed ordering, an atomic sum (wrapping in theory; overflowing it
+/// would take ~585 millennia of recorded microseconds), and an exact
+/// `fetch_max` maximum.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Hist {
+    /// Record one value (lock-free, allocation-free).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds (saturating past `u64::MAX` µs).
+    pub fn record_micros(&self, d: Duration) {
+        self.record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Materialise a mergeable/queryable snapshot of the current state.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    /// Values spread across all magnitudes: a raw u64 right-shifted by a
+    /// uniform 0..64 amount hits every bucket with similar probability.
+    fn gen_values(rng: &mut crate::util::Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.next_u64() >> rng.below(65).min(63)).collect()
+    }
+
+    fn summarize(values: &[u64]) -> HistSummary {
+        let mut h = HistSummary::default();
+        for &v in values {
+            h.record(v);
+        }
+        h
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_ceil(0), 0);
+        assert_eq!(bucket_ceil(1), 1);
+        assert_eq!(bucket_ceil(2), 3);
+        assert_eq!(bucket_ceil(64), u64::MAX);
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1 << 20, u64::MAX - 1, u64::MAX] {
+            assert!(v <= bucket_ceil(bucket_of(v)), "{v}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_answers_zero() {
+        let h = HistSummary::default();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max, 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0);
+        }
+    }
+
+    #[test]
+    fn quantile_tracks_sorted_oracle_bucket() {
+        prop::check("hist_quantile_vs_oracle", prop::default_cases(), |rng| {
+            let n = rng.below(400);
+            let values = gen_values(rng, n);
+            let h = summarize(&values);
+            let mut sorted = values.clone();
+            sorted.sort_unstable();
+            prop_assert!(h.count() == n as u64, "count {} != {n}", h.count());
+            prop_assert!(
+                h.max == sorted.last().copied().unwrap_or(0),
+                "max {} != {:?}",
+                h.max,
+                sorted.last()
+            );
+            for q in [0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let exact = oracle_quantile(&sorted, q);
+                let est = h.quantile(q);
+                if n == 0 {
+                    prop_assert!(est == 0, "empty quantile {est}");
+                    continue;
+                }
+                prop_assert!(
+                    bucket_of(est) == bucket_of(exact) && est >= exact && est <= h.max,
+                    "q={q}: est {est} vs oracle {exact} (buckets {} vs {})",
+                    bucket_of(est),
+                    bucket_of(exact)
+                );
+            }
+            prop_assert!(h.quantile(1.0) == h.max, "p100 must be the exact max");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        prop::check("hist_single_sample_exact", prop::default_cases(), |rng| {
+            // Include both u64 extremes alongside random magnitudes.
+            let v = match rng.below(8) {
+                0 => 0,
+                1 => u64::MAX,
+                _ => rng.next_u64() >> rng.below(64),
+            };
+            let h = summarize(&[v]);
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                prop_assert!(h.quantile(q) == v, "q={q}: {} != {v}", h.quantile(q));
+            }
+            prop_assert!(h.max == v && h.sum == v && h.count() == 1, "scalar fields");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        prop::check("hist_merge_is_concat", prop::default_cases(), |rng| {
+            let a = gen_values(rng, rng.below(200));
+            let b = gen_values(rng, rng.below(200));
+            let mut merged = summarize(&a);
+            merged.merge(&summarize(&b));
+            let mut both = a.clone();
+            both.extend_from_slice(&b);
+            prop_assert!(merged == summarize(&both), "merge must equal concatenation");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn saturating_samples_stay_exact_at_the_top() {
+        let mut h = HistSummary::default();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        h.record(1 << 63);
+        // The sum saturates instead of wrapping; max and quantiles stay exact.
+        assert_eq!(h.sum, u64::MAX);
+        assert_eq!(h.max, u64::MAX);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert_eq!(bucket_of(h.quantile(0.1)), 64);
+        // Saturating durations land in the top bucket too.
+        h.record_micros(Duration::MAX);
+        assert_eq!(h.buckets[64], 4);
+    }
+
+    #[test]
+    fn atomic_hist_matches_plain_summary() {
+        prop::check("hist_atomic_matches_plain", prop::default_cases(), |rng| {
+            let values = gen_values(rng, rng.below(300));
+            let atomic = Hist::default();
+            for &v in &values {
+                atomic.record(v);
+            }
+            prop_assert!(atomic.summary() == summarize(&values), "atomic != plain");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = std::sync::Arc::new(Hist::default());
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let h = std::sync::Arc::clone(&h);
+                scope.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record((t + 1) << (i % 8));
+                    }
+                });
+            }
+        });
+        let s = h.summary();
+        assert_eq!(s.count(), 40_000);
+        assert_eq!(s.max, 4 << 7);
+    }
+}

@@ -1,0 +1,22 @@
+//! Telemetry plane: latency distributions and a protocol flight
+//! recorder, threaded through every layer **without touching the wire
+//! format or the allocation-free hot path**.
+//!
+//! * [`hist`] — lock-free log2-bucketed histograms ([`Hist`]) and their
+//!   plain mergeable snapshots ([`HistSummary`]), property-tested
+//!   against an exact sorted-vector oracle.
+//! * [`recorder`] — the [`FlightRecorder`]: a fixed-capacity ring of
+//!   protocol events with zero steady-state allocation, dumpable as
+//!   JSON lines.
+//!
+//! The consumers live elsewhere: `server::Job` times its phases with
+//! the `now` it already receives and records frame verdicts;
+//! `ServerStats`/`StatsSnapshot` and `ClientStats` carry histogram
+//! summaries; `bench-wire` turns per-round latencies into the
+//! p50/p99/max columns of BENCH_WIRE.json.
+
+pub mod hist;
+pub mod recorder;
+
+pub use hist::{bucket_ceil, bucket_of, oracle_quantile, Hist, HistSummary, N_BUCKETS};
+pub use recorder::{FlightRecorder, PanicDump, TraceEvent, TraceNote, DEFAULT_EVENTS};

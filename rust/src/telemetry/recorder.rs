@@ -1,0 +1,368 @@
+//! Protocol flight recorder: a fixed-capacity ring of the last N
+//! protocol events (timestamp, job, round, frame kind, peer,
+//! accept/drop verdict), recorded by the sans-I/O [`Job`] and the
+//! dispatch path of both I/O backends.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero steady-state allocation.** Events are plain `Copy` records
+//!    written into a pre-allocated ring; once the ring is full, new
+//!    events overwrite the oldest. Nothing on the data path formats a
+//!    string or grows a buffer.
+//! 2. **Cheap enough to leave on.** One short mutex hold per event (the
+//!    ring is shared across worker threads); recording is optional —
+//!    a `Job` without a recorder attached pays a single branch.
+//! 3. **Dumpable after the fact.** [`FlightRecorder::to_json_lines`]
+//!    renders the ring oldest-first as JSON lines for `fediac serve
+//!    --trace-dump <path>`, and [`FlightRecorder::dump_on_panic`]
+//!    arms a guard that prints the ring to stderr when a test thread
+//!    panics mid-round — the black box for chaos-run post-mortems.
+//!
+//! Telemetry is observational only: nothing here is wire-visible
+//! (PROTOCOL.md conformance map).
+//!
+//! [`Job`]: crate::server::Job
+
+use std::fmt::Write as _;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::wire::WireKind;
+
+/// Default ring capacity used by `fediac serve --trace-dump`.
+pub const DEFAULT_EVENTS: usize = 4096;
+
+/// The verdict a recorded protocol event carries: what the server did
+/// with the frame (or why it refused it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceNote {
+    /// Data block validated and folded into the round state.
+    Accepted,
+    /// This frame completed phase 1 (GIA multicast follows).
+    PhaseOneDone,
+    /// This frame completed the round (aggregate multicast follows).
+    RoundDone,
+    /// Redundant frame (retransmission, already-counted block, or data
+    /// for a closed phase); dropped without effect.
+    Duplicate,
+    /// Malformed geometry or protocol-order violation; dropped.
+    BadFrame,
+    /// Out-of-window block parked in the host spill buffer.
+    Spilled,
+    /// Out-of-window block dropped because the spill buffer is full.
+    SpillDropped,
+    /// Vote frame with a non-finite local-max aux; dropped.
+    NonFiniteAux,
+    /// Server-only frame kind arriving on the uplink; dropped.
+    DownlinkSpoof,
+    /// Join accepted (ack carries the agreed spec).
+    JoinAccepted,
+    /// Join refused (spec mismatch, bad geometry, or capacity).
+    JoinRefused,
+    /// Poll answered with the requested phase result.
+    PollServed,
+    /// Poll answered with `NotReady` (phase still open).
+    NotReady,
+    /// Poll ignored: the source exhausted its re-serve budget.
+    PollSuppressed,
+    /// Frame for a job this daemon has no state for.
+    UnknownJob,
+    /// Datagram the front door could not parse.
+    DecodeError,
+    /// Join refused because the daemon is at its job cap.
+    CapRejected,
+}
+
+impl TraceNote {
+    /// Stable snake_case name used in the JSON dump.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceNote::Accepted => "accepted",
+            TraceNote::PhaseOneDone => "phase1_done",
+            TraceNote::RoundDone => "round_done",
+            TraceNote::Duplicate => "duplicate",
+            TraceNote::BadFrame => "bad_frame",
+            TraceNote::Spilled => "spilled",
+            TraceNote::SpillDropped => "spill_dropped",
+            TraceNote::NonFiniteAux => "non_finite_aux",
+            TraceNote::DownlinkSpoof => "downlink_spoof",
+            TraceNote::JoinAccepted => "join_accepted",
+            TraceNote::JoinRefused => "join_refused",
+            TraceNote::PollServed => "poll_served",
+            TraceNote::NotReady => "not_ready",
+            TraceNote::PollSuppressed => "poll_suppressed",
+            TraceNote::UnknownJob => "unknown_job",
+            TraceNote::DecodeError => "decode_error",
+            TraceNote::CapRejected => "cap_rejected",
+        }
+    }
+}
+
+/// One recorded protocol event. Plain `Copy` data — building one never
+/// allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Microseconds since the recorder was created.
+    pub at_us: u64,
+    /// Job the event belongs to (0 when unknown, e.g. decode errors).
+    pub job: u32,
+    /// Round the event belongs to (0 when not applicable).
+    pub round: u32,
+    /// Frame kind that triggered the event; `None` when the datagram
+    /// never parsed far enough to have one.
+    pub kind: Option<WireKind>,
+    /// Claimed client id (`u16::MAX` when unknown).
+    pub client: u16,
+    /// Source address, where the recording site knows it.
+    pub peer: Option<SocketAddr>,
+    /// What the server did with the frame.
+    pub note: TraceNote,
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<TraceEvent>,
+    next: usize,
+    total: u64,
+}
+
+/// Shared fixed-capacity event ring. Clone the `Arc` freely; all
+/// recording sites append into the same ring.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    capacity: usize,
+    ring: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    /// A recorder keeping the most recent `capacity` events (min 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            epoch: Instant::now(),
+            capacity,
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(capacity), next: 0, total: 0 }),
+        }
+    }
+
+    /// The instant event timestamps are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Microseconds between the epoch and `now` (0 for pre-epoch instants).
+    pub fn stamp(&self, now: Instant) -> u64 {
+        u64::try_from(now.saturating_duration_since(self.epoch).as_micros()).unwrap_or(u64::MAX)
+    }
+
+    /// Append one event, overwriting the oldest once the ring is full.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() < self.capacity {
+            ring.buf.push(ev);
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = ev;
+        }
+        ring.next = (ring.next + 1) % self.capacity;
+        ring.total += 1;
+    }
+
+    /// Compose and append one event stamped at `now`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn note(
+        &self,
+        job: u32,
+        round: u32,
+        kind: Option<WireKind>,
+        client: u16,
+        peer: Option<SocketAddr>,
+        note: TraceNote,
+        now: Instant,
+    ) {
+        self.record(TraceEvent { at_us: self.stamp(now), job, round, kind, client, peer, note });
+    }
+
+    /// Events currently held, oldest first (allocates; dump path only).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        if ring.buf.len() < self.capacity {
+            ring.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.capacity);
+            out.extend_from_slice(&ring.buf[ring.next..]);
+            out.extend_from_slice(&ring.buf[..ring.next]);
+            out
+        }
+    }
+
+    /// Number of events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn total_recorded(&self) -> u64 {
+        self.ring.lock().unwrap().total
+    }
+
+    /// Render the ring as JSON lines, oldest event first.
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            let _ = write!(
+                out,
+                "{{\"at_us\":{},\"job\":{},\"round\":{},\"kind\":",
+                ev.at_us, ev.job, ev.round
+            );
+            match ev.kind {
+                Some(k) => {
+                    let _ = write!(out, "\"{k:?}\"");
+                }
+                None => out.push_str("null"),
+            }
+            let _ = write!(out, ",\"client\":{},\"peer\":", ev.client);
+            match ev.peer {
+                Some(p) => {
+                    let _ = write!(out, "\"{p}\"");
+                }
+                None => out.push_str("null"),
+            }
+            let _ = writeln!(out, ",\"note\":\"{}\"}}", ev.note.name());
+        }
+        out
+    }
+
+    /// Write the JSON-lines dump to `path` (whole-file rewrite).
+    pub fn dump_to(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_lines())
+    }
+
+    /// Arm a guard that dumps this recorder to stderr if the current
+    /// thread unwinds with a panic while the guard is live — gives
+    /// failing wire tests an automatic protocol post-mortem.
+    pub fn dump_on_panic(self: &Arc<Self>) -> PanicDump {
+        PanicDump(Arc::clone(self))
+    }
+}
+
+/// Drop guard from [`FlightRecorder::dump_on_panic`].
+#[derive(Debug)]
+pub struct PanicDump(Arc<FlightRecorder>);
+
+impl Drop for PanicDump {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "--- flight recorder: last {} of {} events ---\n{}--- end flight recorder ---",
+                self.0.len(),
+                self.0.total_recorded(),
+                self.0.to_json_lines()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use std::time::Duration;
+
+    fn ev(at_us: u64, note: TraceNote) -> TraceEvent {
+        TraceEvent {
+            at_us,
+            job: 7,
+            round: 3,
+            kind: Some(WireKind::Vote),
+            client: 1,
+            peer: Some("127.0.0.1:4000".parse().unwrap()),
+            note,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_events_in_order() {
+        let rec = FlightRecorder::new(4);
+        for i in 0..6 {
+            rec.record(ev(i, TraceNote::Accepted));
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.total_recorded(), 6);
+        let at: Vec<u64> = rec.events().iter().map(|e| e.at_us).collect();
+        assert_eq!(at, vec![2, 3, 4, 5], "oldest-first, pre-wrap events evicted");
+    }
+
+    #[test]
+    fn stamps_are_monotonic_from_the_epoch() {
+        let rec = FlightRecorder::new(8);
+        let e = rec.epoch();
+        assert_eq!(rec.stamp(e), 0);
+        assert_eq!(rec.stamp(e - Duration::from_secs(1)), 0, "pre-epoch clamps to 0");
+        assert_eq!(rec.stamp(e + Duration::from_millis(3)), 3_000);
+    }
+
+    #[test]
+    fn json_lines_parse_and_carry_every_field() {
+        let rec = FlightRecorder::new(8);
+        rec.record(ev(11, TraceNote::Duplicate));
+        rec.record(TraceEvent {
+            at_us: 12,
+            job: 0,
+            round: 0,
+            kind: None,
+            client: u16::MAX,
+            peer: None,
+            note: TraceNote::DecodeError,
+        });
+        let dump = rec.to_json_lines();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("at_us").unwrap().as_usize(), Some(11));
+        assert_eq!(first.get("job").unwrap().as_usize(), Some(7));
+        assert_eq!(first.get("round").unwrap().as_usize(), Some(3));
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("Vote"));
+        assert_eq!(first.get("client").unwrap().as_usize(), Some(1));
+        assert_eq!(first.get("peer").unwrap().as_str(), Some("127.0.0.1:4000"));
+        assert_eq!(first.get("note").unwrap().as_str(), Some("duplicate"));
+        let second = json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("kind").unwrap(), &json::Json::Null);
+        assert_eq!(second.get("peer").unwrap(), &json::Json::Null);
+        assert_eq!(second.get("note").unwrap().as_str(), Some("decode_error"));
+    }
+
+    #[test]
+    fn panic_guard_is_silent_on_clean_drop() {
+        let rec = Arc::new(FlightRecorder::new(4));
+        rec.record(ev(1, TraceNote::Accepted));
+        let _guard = rec.dump_on_panic();
+        // Dropping without a panic must not print or disturb the ring.
+        drop(_guard);
+        assert_eq!(rec.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_recording_never_loses_counts() {
+        let rec = Arc::new(FlightRecorder::new(64));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let rec = Arc::clone(&rec);
+                scope.spawn(move || {
+                    for i in 0..1000 {
+                        rec.record(ev(i, TraceNote::Accepted));
+                    }
+                });
+            }
+        });
+        assert_eq!(rec.total_recorded(), 4000);
+        assert_eq!(rec.len(), 64);
+    }
+}

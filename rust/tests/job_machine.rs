@@ -9,10 +9,12 @@
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fediac::configx::PsProfile;
+use fediac::net::chaos::{ChaosDirection, ChaosLane};
 use fediac::server::{Job, JobLimits, ServerStats};
+use fediac::telemetry::{FlightRecorder, TraceNote};
 use fediac::util::BitVec;
 use fediac::wire::{
     decode_frame, encode_frame, update_chunks, vote_chunks, Header, JobSpec, ShardPlan, WireKind,
@@ -317,4 +319,158 @@ fn reserve_budget_exhaustion_suppresses_reflection() {
     run_script(&mut job, steps);
     assert_eq!(stat(&stats.reserves_suppressed), 3);
     assert_eq!(stat(&stats.joins), 2);
+}
+
+/// Feed one datagram at `t0 + at_ms`, discarding transmissions — the
+/// timed scripts below assert on timing and recorder state instead.
+fn feed_at(job: &mut Job, t0: Instant, at_ms: u64, datagram: &[u8], from: SocketAddr) {
+    let frame = decode_frame(datagram).expect("timed frame");
+    job.handle(&frame, from, t0 + Duration::from_millis(at_ms));
+}
+
+#[test]
+fn phase_durations_follow_the_scripted_clock_exactly() {
+    // The Job clocks rounds purely from the `now` values handed to
+    // `handle`, so a scripted timeline pins exact durations: votes at
+    // +10/+30 ms (vote phase = 20 ms from round creation), updates at
+    // +50/+70 ms (update phase = 40 ms, round total = 60 ms), and a
+    // 20 ms straggler gap at each phase close.
+    let spec = mkspec(64, 2, 1, 8);
+    let stats = Arc::new(ServerStats::default());
+    let mut job = Job::with_limits(9, profile(1 << 20), JobLimits::default(), Arc::clone(&stats));
+    let t0 = Instant::now();
+    let v = BitVec::from_indices(64, &[1, 2]);
+    let lanes = [3i32, -4];
+    feed_at(&mut job, t0, 0, &join_frame(9, 0, &spec), addr(4000));
+    feed_at(&mut job, t0, 0, &join_frame(9, 1, &spec), addr(4001));
+    feed_at(&mut job, t0, 10, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
+    feed_at(&mut job, t0, 30, &vote_frame(9, 1, 0, &v, &spec, 0), addr(4001));
+    let mid = job.round_timing(0).expect("round 0 must exist after votes");
+    assert_eq!(mid.vote, Some(Duration::from_millis(20)), "vote phase duration");
+    assert_eq!(mid.update, None, "update phase still open");
+    assert_eq!(mid.total, None, "round still open");
+    feed_at(&mut job, t0, 50, &update_frame(9, 0, 0, &lanes, &spec, 0), addr(4000));
+    feed_at(&mut job, t0, 70, &update_frame(9, 1, 0, &lanes, &spec, 0), addr(4001));
+    let timing = job.round_timing(0).expect("round 0 must exist after close");
+    assert_eq!(timing.vote, Some(Duration::from_millis(20)));
+    assert_eq!(timing.update, Some(Duration::from_millis(40)));
+    assert_eq!(timing.total, Some(Duration::from_millis(60)));
+    // The server histograms see the same durations, in microseconds.
+    let vote = stats.hist_vote_phase.summary();
+    let upd = stats.hist_update_phase.summary();
+    let total = stats.hist_round_latency.summary();
+    let gap = stats.hist_straggler_gap.summary();
+    assert_eq!((vote.count(), vote.max), (1, 20_000), "vote-phase histogram");
+    assert_eq!((upd.count(), upd.max), (1, 40_000), "update-phase histogram");
+    assert_eq!((total.count(), total.max), (1, 60_000), "round-latency histogram");
+    assert_eq!((gap.count(), gap.max), (2, 20_000), "one straggler gap per closed phase");
+    assert!(stats.hist_register_stall.summary().is_empty(), "no register stall occurred");
+}
+
+#[test]
+fn flight_recorder_captures_the_protocol_timeline_in_order() {
+    let spec = mkspec(64, 2, 1, 8);
+    let stats = Arc::new(ServerStats::default());
+    let rec = Arc::new(FlightRecorder::new(64));
+    let mut job = Job::with_limits(9, profile(1 << 20), JobLimits::default(), Arc::clone(&stats));
+    job.attach_recorder(Arc::clone(&rec));
+    let t0 = Instant::now();
+    let v = BitVec::from_indices(64, &[1, 2]);
+    let lanes = [3i32, -4];
+    feed_at(&mut job, t0, 0, &join_frame(9, 0, &spec), addr(4000));
+    feed_at(&mut job, t0, 0, &join_frame(9, 1, &spec), addr(4001));
+    feed_at(&mut job, t0, 10, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
+    feed_at(&mut job, t0, 30, &vote_frame(9, 1, 0, &v, &spec, 0), addr(4001));
+    // Retransmission after phase 1 closed: recorded as a duplicate.
+    feed_at(&mut job, t0, 40, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
+    feed_at(&mut job, t0, 50, &update_frame(9, 0, 0, &lanes, &spec, 0), addr(4000));
+    feed_at(&mut job, t0, 70, &update_frame(9, 1, 0, &lanes, &spec, 0), addr(4001));
+    feed_at(&mut job, t0, 80, &poll_frame(9, 0, 0, WireKind::Aggregate), addr(4000));
+    let notes: Vec<TraceNote> = rec.events().iter().map(|e| e.note).collect();
+    assert_eq!(
+        notes,
+        vec![
+            TraceNote::JoinAccepted,
+            TraceNote::JoinAccepted,
+            TraceNote::Accepted,
+            TraceNote::PhaseOneDone,
+            TraceNote::Duplicate,
+            TraceNote::Accepted,
+            TraceNote::RoundDone,
+            TraceNote::PollServed,
+        ],
+        "one verdict per handled frame, in arrival order"
+    );
+    // Every event carries its frame's protocol coordinates and the
+    // exact scripted timestamp (measured from the recorder's epoch).
+    let phase1 = rec.events()[3];
+    assert_eq!(phase1.job, 9);
+    assert_eq!(phase1.round, 0);
+    assert_eq!(phase1.kind, Some(WireKind::Vote));
+    assert_eq!(phase1.client, 1);
+    assert_eq!(phase1.peer, Some(addr(4001)));
+    assert_eq!(phase1.at_us, rec.stamp(t0 + Duration::from_millis(30)));
+    let stamps: Vec<u64> = rec.events().iter().map(|e| e.at_us).collect();
+    assert!(stamps.windows(2).all(|w| w[0] <= w[1]), "stamps monotone along the script");
+}
+
+/// Recorded (job, round, kind, client, note) tuples, arrival order.
+type ChaosEvents = Vec<(u32, u32, Option<WireKind>, u16, TraceNote)>;
+
+/// One seeded uplink chaos run: two rounds of both clients' multi-block
+/// votes pass through a drop/dup [`ChaosLane`] before reaching the job.
+/// Returns the recorded event sequence plus the lane's drop/dup
+/// counters.
+fn chaos_leg(seed: u64) -> (ChaosEvents, u64, u64) {
+    let spec = mkspec(1024, 2, 1, 8);
+    let stats = Arc::new(ServerStats::default());
+    let rec = Arc::new(FlightRecorder::new(1024));
+    let mut job = Job::with_limits(9, profile(1 << 20), JobLimits::default(), Arc::clone(&stats));
+    job.attach_recorder(Arc::clone(&rec));
+    let now = Instant::now();
+    // Drop and duplicate only — no reordering holds, no corruption —
+    // so every surviving copy still parses and arrives immediately.
+    let mut lane: ChaosLane<SocketAddr> =
+        ChaosLane::new(ChaosDirection::lossy(0.2, 0.3, 0.0), seed);
+    // Joins bypass the lane so the job is always configured.
+    feed_at(&mut job, now, 0, &join_frame(9, 0, &spec), addr(4000));
+    feed_at(&mut job, now, 0, &join_frame(9, 1, &spec), addr(4001));
+    let v = BitVec::from_indices(1024, &[1, 2, 3]);
+    let blocks = vote_chunks(&v, spec.payload_budget as usize).len();
+    for round in 0..2u32 {
+        for client in 0..2u16 {
+            for block in 0..blocks {
+                let datagram = vote_frame(9, client, round, &v, &spec, block);
+                for (bytes, from) in lane.process(&datagram, addr(4000 + client), now) {
+                    let frame = decode_frame(&bytes).expect("chaos keeps frames parseable");
+                    job.handle(&frame, from, now);
+                }
+            }
+        }
+    }
+    let events =
+        rec.events().iter().map(|e| (e.job, e.round, e.kind, e.client, e.note)).collect();
+    let dropped = lane.stats().dropped.load(Ordering::Relaxed);
+    let duplicated = lane.stats().duplicated.load(Ordering::Relaxed);
+    (events, dropped, duplicated)
+}
+
+#[test]
+fn chaos_drop_dup_events_reach_the_recorder_deterministically() {
+    // The lane's RNG stream is fully determined by its seed, and the
+    // Job is a pure state machine — so the whole recorded timeline must
+    // replay bit-for-bit, and the lane's duplicated copies must each
+    // surface as a recorded duplicate verdict.
+    let (first, dropped, duplicated) = chaos_leg(42);
+    let (second, dropped2, duplicated2) = chaos_leg(42);
+    assert_eq!(first, second, "same seed must record the identical event sequence");
+    assert_eq!((dropped, duplicated), (dropped2, duplicated2), "lane counters replay too");
+    assert!(dropped > 0, "seed 42 must exercise the drop knob");
+    assert!(duplicated > 0, "seed 42 must exercise the dup knob");
+    let dup_notes =
+        first.iter().filter(|(_, _, _, _, note)| *note == TraceNote::Duplicate).count();
+    assert_eq!(
+        dup_notes as u64, duplicated,
+        "every lane duplicate must be recorded as a duplicate verdict"
+    );
 }

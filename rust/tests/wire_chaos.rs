@@ -10,12 +10,14 @@
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use fediac::client::{protocol, ClientOptions, FediacClient};
 use fediac::compress::{self, deduce_gia};
 use fediac::net::{chaos_proxy, ChaosConfig, ChaosDirection, ChaosProxyOptions};
 use fediac::server::{serve, ServeOptions, ServerHandle};
+use fediac::telemetry::{FlightRecorder, PanicDump, DEFAULT_EVENTS};
 use fediac::util::{BitVec, Rng};
 
 const ROUNDS: usize = 5;
@@ -127,8 +129,19 @@ fn run_job(server: SocketAddr, setup: &JobSetup, retx: &AtomicU64) {
     });
 }
 
-fn start_server() -> ServerHandle {
-    serve(&ServeOptions::default()).unwrap()
+/// Serve with a flight recorder attached and its panic guard armed: if
+/// any assertion in the calling test fails, the last protocol events
+/// dump to stderr automatically — the black box for chaos post-mortems.
+/// Telemetry is observer-only, so bit-exactness is unaffected.
+fn start_traced_server(mut opts: ServeOptions) -> (ServerHandle, PanicDump) {
+    let rec = Arc::new(FlightRecorder::new(DEFAULT_EVENTS));
+    let guard = rec.dump_on_panic();
+    opts.trace = Some(rec);
+    (serve(&opts).unwrap(), guard)
+}
+
+fn start_server() -> (ServerHandle, PanicDump) {
+    start_traced_server(ServeOptions::default())
 }
 
 fn start_proxy(upstream: SocketAddr, config: ChaosConfig) -> fediac::net::ChaosHandle {
@@ -144,7 +157,7 @@ fn start_proxy(upstream: SocketAddr, config: ChaosConfig) -> fediac::net::ChaosH
 /// concurrently through one shared proxy, 5 rounds each, bit-exact.
 #[test]
 fn both_direction_chaos_two_jobs_five_rounds_bit_exact() {
-    let server = start_server();
+    let (server, _trace_guard) = start_server();
     let chaos = ChaosDirection::lossy(0.20, 0.10, 0.30);
     let proxy = start_proxy(
         server.local_addr(),
@@ -209,7 +222,7 @@ fn per_direction_and_corruption_matrix_stays_bit_exact() {
         ("corrupt-both", ChaosConfig { seed: 83, uplink: corrupting, downlink: corrupting }),
     ];
     for (name, config) in matrix {
-        let server = start_server();
+        let (server, _trace_guard) = start_server();
         let proxy = start_proxy(server.local_addr(), config);
         let setup = JobSetup {
             job: 600,
@@ -242,7 +255,7 @@ fn per_direction_and_corruption_matrix_stays_bit_exact() {
 /// instead of pinning a live-round slot until idle-release.
 #[test]
 fn unreachable_threshold_rounds_complete_without_wedging() {
-    let server = start_server();
+    let (server, _trace_guard) = start_server();
     let d = 512;
     let n_clients = 2usize;
     let retx = AtomicU64::new(0);
@@ -313,14 +326,13 @@ fn chaos_under_register_pressure_stays_bit_exact() {
     // budget 16 → one 128-dim vote block = 256 B of counters; 300 B of
     // registers hold exactly one block, so d = 1024 (8 blocks) forces
     // waves on every round.
-    let server = serve(&ServeOptions {
+    let (server, _trace_guard) = start_traced_server(ServeOptions {
         profile: fediac::configx::PsProfile {
             memory_bytes: 300,
             ..fediac::configx::PsProfile::high()
         },
         ..ServeOptions::default()
-    })
-    .unwrap();
+    });
     let heavy_reorder = ChaosDirection {
         drop: 0.10,
         duplicate: 0.10,
@@ -362,7 +374,7 @@ fn chaos_under_register_pressure_stays_bit_exact() {
 /// reordering proxy.
 #[test]
 fn server_restart_rejoin_under_chaos_stays_exact() {
-    let first = start_server();
+    let (first, _trace_guard) = start_server();
     let addr = first.local_addr();
     let proxy = start_proxy(
         addr,
@@ -395,11 +407,10 @@ fn server_restart_rejoin_under_chaos_stays_exact() {
     // address (UDP rebinds immediately; the proxy's upstream sockets
     // keep pointing at it).
     first.shutdown();
-    let second = serve(&ServeOptions {
+    let (second, _second_guard) = start_traced_server(ServeOptions {
         bind: addr.to_string(),
         ..ServeOptions::default()
-    })
-    .unwrap();
+    });
     assert_eq!(second.local_addr(), addr);
 
     run_and_check(&mut client, 2);
