@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::client::swarm::{self, SwarmOptions, SwarmReport};
 use crate::client::{ClientOptions, ClientStats, FediacClient, ShardedFediacClient};
 use crate::configx::PsProfile;
 use crate::server::{serve, serve_sharded, IoBackend, ServeOptions, StatsSnapshot};
@@ -47,6 +48,13 @@ pub struct BenchWireOptions {
     /// Seed for the synthetic update streams (shared by every client of
     /// a job, as the protocol requires).
     pub seed: u64,
+    /// Also measure the swarm multiplexer (`--swarm`): the same
+    /// jobs × clients_per_job workload hosted by ONE client thread over
+    /// [`BenchWireOptions::swarm_sockets`] sockets against a reactor
+    /// daemon (unsharded — the swarm is a single-server backend).
+    pub swarm: bool,
+    /// UDP sockets the swarm leg spreads its jobs over.
+    pub swarm_sockets: usize,
 }
 
 impl Default for BenchWireOptions {
@@ -61,6 +69,8 @@ impl Default for BenchWireOptions {
             backends: vec![IoBackend::Threaded, IoBackend::Reactor],
             shards: 1,
             seed: 7,
+            swarm: false,
+            swarm_sockets: swarm::MAX_SWARM_SOCKETS,
         }
     }
 }
@@ -107,6 +117,22 @@ pub struct BackendReport {
     pub per_shard: Vec<StatsSnapshot>,
 }
 
+/// The swarm leg's measurements (`--swarm`): one client thread hosting
+/// the whole fleet, reported alongside the thread-per-client backends.
+#[derive(Debug, Clone)]
+pub struct SwarmLegReport {
+    /// The multiplexer's own report (fleet size, latency, counters).
+    pub report: SwarmReport,
+    /// Completed job-rounds (jobs × rounds) per wall-clock second — the
+    /// same definition the [`BackendReport`]s use, so the columns
+    /// compare directly.
+    pub rounds_per_s: f64,
+    /// Client-metered bytes (sent + received) per completed job-round.
+    pub bytes_per_round: f64,
+    /// Daemon counters behind the swarm (always the reactor backend).
+    pub server: StatsSnapshot,
+}
+
 /// A full bench run: the workload shape plus one report per backend.
 #[derive(Debug, Clone)]
 pub struct BenchWireReport {
@@ -114,6 +140,8 @@ pub struct BenchWireReport {
     pub opts: BenchWireOptions,
     /// One entry per measured backend, in run order.
     pub backends: Vec<BackendReport>,
+    /// The swarm-multiplexer leg, when `--swarm` was requested.
+    pub swarm: Option<SwarmLegReport>,
 }
 
 /// Render a latency summary as the JSON object the report embeds:
@@ -187,7 +215,29 @@ impl BenchWireReport {
                 if i + 1 < self.backends.len() { "," } else { "" }
             ));
         }
-        out.push_str("  ]\n}\n");
+        out.push_str("  ]");
+        if let Some(s) = &self.swarm {
+            let r = &s.report;
+            out.push_str(&format!(
+                ",\n  \"swarm\": {{\"clients_hosted\": {}, \"jobs\": {}, \"sockets\": {}, \
+                 \"wall_s\": {:.6}, \"rounds_per_s\": {:.3}, \"bytes_per_round\": {:.1}, \
+                 \"client_rounds\": {}, \"retransmissions\": {}, \"pending_dropped\": {}, \
+                 \"server_packets\": {}, \"workers_spawned\": {}, \"round_latency_us\": {}}}",
+                r.clients_hosted,
+                r.jobs,
+                r.sockets_used,
+                r.wall_s,
+                s.rounds_per_s,
+                s.bytes_per_round,
+                r.rounds_completed,
+                r.stats.retransmissions,
+                r.stats.pending_dropped,
+                s.server.packets,
+                s.server.workers_spawned,
+                hist_json(&r.round_latency)
+            ));
+        }
+        out.push_str("\n}\n");
         out
     }
 
@@ -232,6 +282,25 @@ impl BenchWireReport {
                 }
             }
         }
+        if let Some(s) = &self.swarm {
+            let r = &s.report;
+            out.push_str(&format!(
+                "swarm({}c/{}s)\t{:.3}\t{:.1}\t{:.0}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                r.clients_hosted,
+                r.sockets_used,
+                r.wall_s,
+                s.rounds_per_s,
+                s.bytes_per_round,
+                r.stats.retransmissions,
+                s.server.packets,
+                s.server.workers_spawned,
+                s.server.idle_wakeups,
+                s.server.pool_misses,
+                r.round_latency.quantile(0.50),
+                r.round_latency.quantile(0.99),
+                r.round_latency.max,
+            ));
+        }
         out
     }
 }
@@ -249,7 +318,45 @@ pub fn run(opts: &BenchWireOptions) -> Result<BenchWireReport> {
     for &backend in &opts.backends {
         backends.push(run_backend(opts, backend)?);
     }
-    Ok(BenchWireReport { opts: opts.clone(), backends })
+    let swarm = if opts.swarm {
+        anyhow::ensure!(opts.shards == 1, "--swarm is a single-server backend (shards must be 1)");
+        Some(run_swarm_leg(opts)?)
+    } else {
+        None
+    };
+    Ok(BenchWireReport { opts: opts.clone(), backends, swarm })
+}
+
+/// The `--swarm` leg: the same jobs × clients_per_job synthetic workload
+/// the thread-per-client backends run, but hosted by the single-thread
+/// swarm multiplexer against a reactor daemon.
+fn run_swarm_leg(opts: &BenchWireOptions) -> Result<SwarmLegReport> {
+    let serve_opts = ServeOptions {
+        profile: opts.profile.clone(),
+        io_backend: IoBackend::Reactor,
+        ..ServeOptions::default()
+    };
+    let handle = serve(&serve_opts).context("starting swarm-leg reactor daemon")?;
+    let mut sopts = SwarmOptions::new(handle.local_addr().to_string(), opts.d);
+    sopts.jobs = swarm::plan_fleet(
+        opts.jobs * opts.clients_per_job as usize,
+        opts.clients_per_job,
+        opts.seed,
+    );
+    sopts.rounds = opts.rounds;
+    sopts.payload_budget = opts.payload_budget;
+    sopts.sockets = opts.swarm_sockets;
+    let report = swarm::run(&sopts).context("swarm bench leg")?;
+    let server = handle.stats();
+    handle.shutdown();
+    let total_rounds = (opts.jobs * opts.rounds) as f64;
+    let client_bytes = report.stats.bytes_sent + report.stats.bytes_received;
+    Ok(SwarmLegReport {
+        rounds_per_s: total_rounds / report.wall_s,
+        bytes_per_round: client_bytes as f64 / total_rounds,
+        server,
+        report,
+    })
 }
 
 fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendReport> {

@@ -1,0 +1,905 @@
+//! The sans-I/O client protocol core: every FediAC client-side protocol
+//! decision — join/re-join, vote upload, GIA reassembly, quantised
+//! update upload, aggregate reassembly, timeout retransmission and
+//! `Poll` — as a pure state machine with **no sockets, clocks or
+//! sleeps**, mirroring [`crate::server::Job`] on the other side of the
+//! wire.
+//!
+//! The contract: callers own the I/O and the clock. Feed every received
+//! datagram to [`ClientCore::handle`] (or a pre-decoded frame to
+//! [`ClientCore::handle_frame`]) with the current time, call
+//! [`ClientCore::on_tick`] when the returned deadline arrives, and send
+//! whatever [`ClientOutput::frames`] comes back. Phase transitions
+//! surface as [`Progress`] events; the round *math* (voting,
+//! quantisation — [`crate::client::protocol`]) stays with the caller,
+//! which is what keeps one core definition shared by the blocking
+//! driver ([`crate::client::FediacClient`]), the sharded fan-out and
+//! the swarm multiplexer ([`crate::client::swarm`]) — three backends,
+//! one protocol implementation, bit-exact on the wire.
+//!
+//! Timer semantics match the blocking driver's socket timeout exactly:
+//! the retransmit deadline slides to `now + timeout` on **every**
+//! datagram received while a wait is armed (even an undecodable one —
+//! a blocking `recv` with a fresh timeout behaves the same way), and an
+//! expiry past the retry budget fails the client.
+
+use std::time::{Duration, Instant};
+
+use crate::compress::golomb;
+use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
+use crate::telemetry::HistSummary;
+use crate::util::BitVec;
+use crate::wire::{
+    decode_frame, decode_lanes, update_chunk_bounds, vote_chunk_bounds, ChunkAssembler,
+    FrameScratch, Header, JobSpec, ShardPlan, WireKind,
+};
+
+/// Broadcast frames of the *other* phase kept aside during a wait (an
+/// empty-consensus round multicasts GIA and aggregate back-to-back;
+/// reordering can also deliver them interleaved); bounds memory against
+/// a babbling server. Overflow is counted in
+/// [`ClientStats::pending_dropped`].
+pub(crate) const PENDING_CAP: usize = 256;
+
+/// Cumulative client counters. The protocol-visible counters
+/// (retransmissions, polls, rejoins, stream resets, pending drops, RTT
+/// histograms) are maintained by [`ClientCore`]; the I/O-side counters
+/// (bytes, loss-lane drops) by whichever driver owns the sockets.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Frames re-sent after a timeout.
+    pub retransmissions: u64,
+    /// Frames dropped by the uplink loss lane (never hit the wire).
+    pub dropped_sends: u64,
+    /// Poll frames sent.
+    pub polls: u64,
+    /// Mid-round re-registrations after a `JOIN_UNKNOWN_JOB` (e.g. the
+    /// server restarted or evicted the job).
+    pub rejoins: u64,
+    /// Broadcast streams restarted because interleaved frames disagreed
+    /// on geometry (`n_blocks`) or the aux word.
+    pub stream_resets: u64,
+    /// Sidelined other-phase broadcasts discarded because the pending
+    /// stash was full ([`PENDING_CAP`]) — nonzero means a babbling (or
+    /// heavily replaying) server overflowed the bound, and the client
+    /// may have paid a poll cycle to recover the dropped broadcast.
+    pub pending_dropped: u64,
+    /// Datagram bytes handed to the socket (after the loss lane) — the
+    /// `fediac bench-wire` bytes/round numerator, uplink half.
+    pub bytes_sent: u64,
+    /// Datagram bytes received from the socket (before decoding).
+    pub bytes_received: u64,
+    /// Vote-phase round trips as seen from this endpoint: first vote
+    /// frame sent → GIA decoded (retransmission cycles included).
+    pub vote_rtt_us: HistSummary,
+    /// Update-phase round trips: first lane frame sent → aggregate
+    /// decoded.
+    pub update_rtt_us: HistSummary,
+}
+
+impl ClientStats {
+    /// Fold another endpoint's counters in — the single place that knows
+    /// every field, so multi-endpoint aggregation (the sharded driver,
+    /// the swarm) cannot silently drop a counter added later.
+    pub fn add(&mut self, other: &ClientStats) {
+        self.retransmissions += other.retransmissions;
+        self.dropped_sends += other.dropped_sends;
+        self.polls += other.polls;
+        self.rejoins += other.rejoins;
+        self.stream_resets += other.stream_resets;
+        self.pending_dropped += other.pending_dropped;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_received += other.bytes_received;
+        self.vote_rtt_us.merge(&other.vote_rtt_us);
+        self.update_rtt_us.merge(&other.update_rtt_us);
+    }
+}
+
+/// Everything the protocol core needs to know about its endpoint — the
+/// transport-relevant subset of [`crate::client::ClientOptions`] (no
+/// server address, no chaos knobs, no round math parameters).
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    /// Job id shared by every client of the job.
+    pub job: u32,
+    /// This client's id in `[0, n_clients)`.
+    pub client_id: u16,
+    /// Total clients N in the job (all must agree).
+    pub n_clients: u16,
+    /// Model dimension d this endpoint uploads (the sub-model d for a
+    /// shard endpoint).
+    pub d: usize,
+    /// Voting threshold a (part of the registered spec).
+    pub threshold_a: u16,
+    /// Payload bytes per data frame (must match across the job).
+    pub payload_budget: usize,
+    /// Silence tolerated before a retransmit cycle.
+    pub timeout: Duration,
+    /// Timeouts tolerated per wait before the client fails.
+    pub max_retries: usize,
+    /// Which slice of a sharded deployment this endpoint talks to.
+    pub shard: ShardPlan,
+}
+
+impl CoreConfig {
+    /// The job spec this endpoint registers.
+    pub fn spec(&self) -> JobSpec {
+        JobSpec {
+            d: self.d as u32,
+            n_clients: self.n_clients,
+            threshold_a: self.threshold_a,
+            payload_budget: self.payload_budget as u16,
+            shard: self.shard,
+        }
+    }
+}
+
+/// A phase-transition event surfaced by the core. At most one per
+/// [`ClientOutput`]; `Failed` is terminal (the core goes dead).
+#[derive(Debug, Clone)]
+pub enum Progress {
+    /// The initial registration was acknowledged with `JOIN_OK`.
+    Joined,
+    /// The vote wait completed: the round's GIA broadcast reassembled,
+    /// Golomb-decoded and validated.
+    GiaReady {
+        /// The round the GIA belongs to.
+        round: u32,
+        /// The global important-index bitmap over this endpoint's d.
+        gia: BitVec,
+        /// Server-folded global max-|U| (the m every client derives the
+        /// scale factor f from), already checked finite and positive.
+        global_max: f32,
+    },
+    /// The update wait completed: the aggregate broadcast reassembled,
+    /// decoded and length-checked against the uploaded lane count.
+    AggregateReady {
+        /// The round the aggregate belongs to.
+        round: u32,
+        /// Aggregated i32 lanes in GIA order (length = uploaded k_S).
+        lanes: Vec<i32>,
+    },
+    /// The client is dead: retry budget exhausted, a refused (re-)join,
+    /// or an invalid completed broadcast. The reason is the same text
+    /// the blocking driver has always surfaced as its error.
+    Failed {
+        /// Human-readable cause.
+        reason: String,
+    },
+}
+
+/// What one core call asks its driver to do: send `frames` (in order),
+/// schedule [`ClientCore::on_tick`] for `timer`, and act on `progress`.
+#[derive(Debug, Default)]
+pub struct ClientOutput {
+    /// Encoded datagrams to transmit, in order. Buffers come from the
+    /// core's pool — hand them back via [`ClientCore::recycle`] after
+    /// sending to keep steady-state emission allocation-free.
+    pub frames: Vec<Vec<u8>>,
+    /// When to call [`ClientCore::on_tick`] next (`None`: no wait is
+    /// armed). The deadline *slides* on every received datagram; a tick
+    /// that arrives early is harmless (the core re-reports the live
+    /// deadline and does nothing else).
+    pub timer: Option<Instant>,
+    /// At most one phase-transition event.
+    pub progress: Option<Progress>,
+}
+
+/// Where the core is in the protocol.
+enum Phase {
+    /// Nothing in flight (before `start_join`, between phases, or all
+    /// done).
+    Idle,
+    /// Initial registration: join sent, waiting for the ack.
+    Joining,
+    /// A phase wait: upload sent, reassembling the `want` broadcast.
+    Waiting {
+        /// The round being exchanged.
+        round: u32,
+        /// Broadcast kind that completes this wait (`Gia`/`Aggregate`).
+        want: WireKind,
+        /// The phase's upload frames, retained for retransmission.
+        frames: Vec<Vec<u8>>,
+        /// Lanes uploaded (aggregate length check); 0 for a vote wait.
+        expect_lanes: usize,
+        /// In-progress reassembly, keyed by the stream's aux word.
+        asm: Option<(ChunkAssembler, u32)>,
+        /// A `JOIN_UNKNOWN_JOB` arrived and our re-join is in flight.
+        rejoining: bool,
+        /// When the wait began (RTT histogram sample on completion).
+        started: Instant,
+    },
+    /// Terminal: a `Failed` progress was emitted; inputs are ignored.
+    Dead,
+}
+
+/// The sans-I/O FediAC client state machine. See the module docs for
+/// the driving contract.
+pub struct ClientCore {
+    cfg: CoreConfig,
+    phase: Phase,
+    /// Earliest time `on_tick` should fire, while a wait is armed.
+    deadline: Option<Instant>,
+    /// Timeouts burned in the current wait (reset by every `start_*`).
+    timeouts: usize,
+    /// Registration confirmed at least once.
+    joined: bool,
+    /// Broadcast frames of the current round's other phase, captured
+    /// while waiting (served to the next `start_*` before the wire).
+    pending: Vec<(Header, Vec<u8>)>,
+    /// Largest broadcast block count this job could legitimately need —
+    /// derived once from the config, see `max_broadcast_blocks`.
+    max_blocks: usize,
+    /// Datagram-buffer pool: steady-state emission recycles buffers
+    /// instead of allocating (callers return them via `recycle`).
+    scratch: FrameScratch,
+    /// Reused serialisation buffers (vote bitmap bytes / lane bytes).
+    bitmap_buf: Vec<u8>,
+    lane_buf: Vec<u8>,
+    /// Protocol-side counters (see [`ClientStats`] for the split).
+    pub stats: ClientStats,
+}
+
+impl ClientCore {
+    /// A fresh core in the idle state. Call [`ClientCore::start_join`]
+    /// to begin. The config is trusted (validate upstream — the drivers
+    /// run `JobSpec::validate` plus their own range checks).
+    pub fn new(cfg: CoreConfig) -> Self {
+        // Largest broadcast block count this job could legitimately
+        // need: the aggregate is at most 4·d lane bytes and the Golomb
+        // GIA stays under 2 bits per dimension plus its header for any
+        // density the server-side Rice parameter produces. A frame
+        // declaring more blocks is forged or stale — sizing the
+        // assembler from it would pin unbounded memory.
+        let max_blocks = (16 + 4 * cfg.d).div_ceil(cfg.payload_budget).max(1) + 1;
+        ClientCore {
+            cfg,
+            phase: Phase::Idle,
+            deadline: None,
+            timeouts: 0,
+            joined: false,
+            pending: Vec::new(),
+            max_blocks,
+            scratch: FrameScratch::new(),
+            bitmap_buf: Vec::new(),
+            lane_buf: Vec::new(),
+            stats: ClientStats::default(),
+        }
+    }
+
+    /// The configuration this core was built with.
+    pub fn config(&self) -> &CoreConfig {
+        &self.cfg
+    }
+
+    /// Registration has been acknowledged at least once.
+    pub fn is_joined(&self) -> bool {
+        self.joined
+    }
+
+    /// A `Failed` progress was emitted; the core ignores further input.
+    pub fn is_failed(&self) -> bool {
+        matches!(self.phase, Phase::Dead)
+    }
+
+    /// The deadline the driver should call [`ClientCore::on_tick`] at
+    /// (`None` when no wait is armed) — same contract as
+    /// `server::Job::next_timer`.
+    pub fn next_timer(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// The round a phase wait is in progress for, if any. A multiplexer
+    /// hosting many cores on one socket uses this to deliver a
+    /// broadcast copy only to the clients it can still matter to (the
+    /// server fans every broadcast out once per registered client, so
+    /// co-hosted clients see each other's copies).
+    pub fn waiting_round(&self) -> Option<u32> {
+        match &self.phase {
+            Phase::Waiting { round, .. } => Some(*round),
+            _ => None,
+        }
+    }
+
+    /// Hand an emitted frame buffer back to the pool after sending.
+    pub fn recycle(&mut self, buf: Vec<u8>) {
+        self.scratch.give(buf);
+    }
+
+    /// Begin the initial registration: emits the Join frame and arms the
+    /// retransmit timer. Completion surfaces as [`Progress::Joined`].
+    pub fn start_join(&mut self, now: Instant) -> ClientOutput {
+        debug_assert!(matches!(self.phase, Phase::Idle), "start_join while busy");
+        self.phase = Phase::Joining;
+        self.timeouts = 0;
+        self.deadline = Some(now + self.cfg.timeout);
+        let frame = self.join_datagram();
+        ClientOutput { frames: vec![frame], timer: self.deadline, progress: None }
+    }
+
+    /// Begin phase 1 of `round`: emits the vote upload (bitmap blocks,
+    /// `local_max` in the aux word) and waits for the GIA broadcast.
+    /// Completion surfaces as [`Progress::GiaReady`]; if the stash
+    /// already holds the whole broadcast, nothing is uploaded at all
+    /// (exactly like the blocking driver's pre-send pending drain).
+    pub fn start_vote(
+        &mut self,
+        round: u32,
+        votes: &BitVec,
+        local_max: f32,
+        now: Instant,
+    ) -> ClientOutput {
+        debug_assert!(matches!(self.phase, Phase::Idle), "start_vote while busy");
+        if votes.len() != self.cfg.d {
+            let reason = format!("vote bitmap length {} != d {}", votes.len(), self.cfg.d);
+            return ClientOutput { frames: Vec::new(), timer: None, progress: Some(self.fail(reason)) };
+        }
+        let frames = self.vote_frames(round, votes, local_max);
+        self.enter_wait(round, WireKind::Gia, frames, 0, now)
+    }
+
+    /// Begin phase 2 of `round`: emits the GIA-aligned quantised lane
+    /// upload (`f` in the aux word) and waits for the aggregate
+    /// broadcast. An empty `lanes` still uploads the zero-lane
+    /// completion block and awaits the empty aggregate — skipping it
+    /// would leave the two sides disagreeing on whether the round
+    /// happened at all. Completion surfaces as
+    /// [`Progress::AggregateReady`].
+    pub fn start_update(
+        &mut self,
+        round: u32,
+        lanes: &[i32],
+        f: f32,
+        now: Instant,
+    ) -> ClientOutput {
+        debug_assert!(matches!(self.phase, Phase::Idle), "start_update while busy");
+        let frames = self.update_frames(round, lanes, f);
+        self.enter_wait(round, WireKind::Aggregate, frames, lanes.len(), now)
+    }
+
+    /// Feed one received datagram. Undecodable bytes still slide the
+    /// retransmit deadline (a blocking recv's timeout resets on any
+    /// traffic); everything else goes through
+    /// [`ClientCore::handle_frame`].
+    pub fn handle(&mut self, datagram: &[u8], now: Instant) -> ClientOutput {
+        match decode_frame(datagram) {
+            Ok(frame) => {
+                let h = frame.header;
+                self.handle_frame(&h, frame.payload, now)
+            }
+            Err(_) => {
+                self.touch(now);
+                ClientOutput { frames: Vec::new(), timer: self.deadline, progress: None }
+            }
+        }
+    }
+
+    /// Feed one already-decoded frame (the swarm decodes each datagram
+    /// once, then routes the frame to every addressed core).
+    pub fn handle_frame(&mut self, h: &Header, payload: &[u8], now: Instant) -> ClientOutput {
+        self.touch(now);
+        match self.phase {
+            Phase::Dead => ClientOutput { frames: Vec::new(), timer: None, progress: None },
+            Phase::Idle => {
+                // Between phases. A broadcast landing here (the empty-
+                // consensus GIA+aggregate multicast races the caller's
+                // next `start_*`) is stashed exactly as it would be
+                // mid-wait — the blocking driver gets this for free from
+                // its receive queue, which replays queued datagrams into
+                // the next exchange.
+                if h.job == self.cfg.job
+                    && (h.kind == WireKind::Gia || h.kind == WireKind::Aggregate)
+                {
+                    self.stash(h, payload);
+                }
+                ClientOutput { frames: Vec::new(), timer: self.deadline, progress: None }
+            }
+            Phase::Joining => self.handle_joining(h),
+            Phase::Waiting { .. } => self.handle_waiting(h, payload, now),
+        }
+    }
+
+    /// Fire the retransmit timer. Early calls (deadline slid later, or
+    /// none armed) report the live deadline and do nothing else; a due
+    /// call burns one timeout — failing the client past the budget —
+    /// and re-emits the wait's frames plus a `Poll`.
+    pub fn on_tick(&mut self, now: Instant) -> ClientOutput {
+        let Some(deadline) = self.deadline else {
+            return ClientOutput::default();
+        };
+        if now < deadline {
+            return ClientOutput { frames: Vec::new(), timer: Some(deadline), progress: None };
+        }
+        self.timeouts += 1;
+        // Pull the Copy facts out of the phase first so the retransmit
+        // actions below can borrow `self` freely.
+        enum Due {
+            Join,
+            Wait { round: u32, want: WireKind, rejoining: bool, n_frames: usize },
+        }
+        let due = match &self.phase {
+            Phase::Joining => Due::Join,
+            Phase::Waiting { round, want, rejoining, frames, .. } => Due::Wait {
+                round: *round,
+                want: *want,
+                rejoining: *rejoining,
+                n_frames: frames.len(),
+            },
+            _ => unreachable!("deadline armed outside a wait"),
+        };
+        if self.timeouts > self.cfg.max_retries {
+            let reason = match due {
+                Due::Join => format!("join timed out after {} attempts", self.timeouts),
+                Due::Wait { round, want, .. } => format!(
+                    "client {} timed out waiting for {want:?} of round {round} after {} timeouts",
+                    self.cfg.client_id, self.timeouts
+                ),
+            };
+            return ClientOutput {
+                frames: Vec::new(),
+                timer: None,
+                progress: Some(self.fail(reason)),
+            };
+        }
+        let mut out_frames = Vec::new();
+        match due {
+            Due::Join => {
+                self.stats.retransmissions += 1;
+                out_frames.push(self.join_datagram());
+            }
+            Due::Wait { round, want, rejoining, n_frames } => {
+                crate::debug!(
+                    "job={} client={} round={round} timeout #{}: retransmitting {n_frames} \
+                     frames and polling for {want:?}",
+                    self.cfg.job,
+                    self.cfg.client_id,
+                    self.timeouts
+                );
+                if rejoining {
+                    // The in-flight Join (or its ack) was lost.
+                    self.stats.retransmissions += 1;
+                    out_frames.push(self.join_datagram());
+                }
+                self.stats.retransmissions += n_frames as u64;
+                let Phase::Waiting { frames, .. } = &self.phase else { unreachable!() };
+                for f in frames.iter() {
+                    out_frames.push(self.scratch.copy(f));
+                }
+                self.stats.polls += 1;
+                let poll_hdr = Header {
+                    kind: WireKind::Poll,
+                    client: self.cfg.client_id,
+                    job: self.cfg.job,
+                    round,
+                    block: 0,
+                    n_blocks: 0,
+                    elems: 0,
+                    aux: want as u32,
+                };
+                out_frames.push(self.scratch.encode(&poll_hdr, &[]));
+            }
+        }
+        self.deadline = Some(now + self.cfg.timeout);
+        ClientOutput { frames: out_frames, timer: self.deadline, progress: None }
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    /// Slide the retransmit deadline on received traffic (any datagram
+    /// while a wait is armed, decodable or not).
+    fn touch(&mut self, now: Instant) {
+        if self.deadline.is_some() && !matches!(self.phase, Phase::Dead) {
+            self.deadline = Some(now + self.cfg.timeout);
+        }
+    }
+
+    /// Terminal failure: go dead, disarm, emit the reason.
+    fn fail(&mut self, reason: String) -> Progress {
+        self.phase = Phase::Dead;
+        self.deadline = None;
+        Progress::Failed { reason }
+    }
+
+    /// Sideline a broadcast frame for a later wait (bounded by
+    /// [`PENDING_CAP`]; overflow is counted, not silent). An exact
+    /// duplicate of a block already stashed is skipped — reassembly is
+    /// idempotent, so only the first copy can matter, and swarm-hosted
+    /// clients see one fan-out copy per co-hosted client of the job.
+    fn stash(&mut self, h: &Header, payload: &[u8]) {
+        if self.pending.iter().any(|(p, _)| {
+            p.kind == h.kind
+                && p.round == h.round
+                && p.block == h.block
+                && p.n_blocks == h.n_blocks
+                && p.aux == h.aux
+        }) {
+            return;
+        }
+        if self.pending.len() < PENDING_CAP {
+            self.pending.push((*h, payload.to_vec()));
+        } else {
+            self.stats.pending_dropped += 1;
+            crate::debug!(
+                "job={} client={} round={} pending stash full: dropping sidelined {:?} broadcast",
+                self.cfg.job,
+                self.cfg.client_id,
+                h.round,
+                h.kind
+            );
+        }
+    }
+
+    /// The (idempotent) registration frame for this client's job.
+    fn join_datagram(&mut self) -> Vec<u8> {
+        let h = Header::control(WireKind::Join, self.cfg.job, self.cfg.client_id, 0, 0);
+        self.scratch.encode(&h, &self.cfg.spec().encode())
+    }
+
+    /// Encode one phase's vote frames into pooled buffers (retained for
+    /// retransmission; recycled when the wait completes).
+    fn vote_frames(&mut self, round: u32, votes: &BitVec, local_max: f32) -> Vec<Vec<u8>> {
+        votes.copy_bytes_into(&mut self.bitmap_buf);
+        let budget = self.cfg.payload_budget;
+        let n_blocks = vote_chunk_bounds(votes.len(), budget).count() as u32;
+        let mut frames = Vec::with_capacity(n_blocks as usize);
+        for (i, (dims, lo, hi)) in vote_chunk_bounds(votes.len(), budget).enumerate() {
+            let header = Header {
+                kind: WireKind::Vote,
+                client: self.cfg.client_id,
+                job: self.cfg.job,
+                round,
+                block: i as u32,
+                n_blocks,
+                elems: dims as u32,
+                aux: local_max.to_bits(),
+            };
+            frames.push(self.scratch.encode(&header, &self.bitmap_buf[lo..hi]));
+        }
+        frames
+    }
+
+    /// Encode one phase's update frames into pooled buffers, packing
+    /// each block's lanes through one reused serialisation buffer.
+    fn update_frames(&mut self, round: u32, lanes: &[i32], f: f32) -> Vec<Vec<u8>> {
+        let budget = self.cfg.payload_budget;
+        let n_blocks = update_chunk_bounds(lanes.len(), budget).count() as u32;
+        let mut frames = Vec::with_capacity(n_blocks as usize);
+        for (i, (lo, hi)) in update_chunk_bounds(lanes.len(), budget).enumerate() {
+            crate::wire::encode_lanes_into(&mut self.lane_buf, &lanes[lo..hi]);
+            let header = Header {
+                kind: WireKind::Update,
+                client: self.cfg.client_id,
+                job: self.cfg.job,
+                round,
+                block: i as u32,
+                n_blocks,
+                elems: (hi - lo) as u32,
+                aux: f.to_bits(),
+            };
+            frames.push(self.scratch.encode(&header, &self.lane_buf));
+        }
+        frames
+    }
+
+    /// Common wait entry: drain the stash (frames of this round's
+    /// `want` kind captured during the previous wait complete the phase
+    /// *without any upload*, exactly like the blocking driver's
+    /// pre-send pending drain), else emit the upload and arm the timer.
+    fn enter_wait(
+        &mut self,
+        round: u32,
+        want: WireKind,
+        frames: Vec<Vec<u8>>,
+        expect_lanes: usize,
+        now: Instant,
+    ) -> ClientOutput {
+        let mut asm: Option<(ChunkAssembler, u32)> = None;
+        // Drain stashed frames from the previous wait of this round.
+        self.pending.retain(|(h, _)| h.round == round);
+        let (mine, keep): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.pending).into_iter().partition(|(h, _)| h.kind == want);
+        self.pending = keep;
+        for (h, payload) in mine {
+            if let Some(done) =
+                ingest_chunk(&mut asm, self.max_blocks, &h, &payload, &mut self.stats)
+            {
+                for f in frames {
+                    self.scratch.give(f);
+                }
+                self.deadline = None;
+                let progress = self.complete(round, want, expect_lanes, done, now, now);
+                return ClientOutput { frames: Vec::new(), timer: None, progress: Some(progress) };
+            }
+        }
+        // Emit pooled copies; the originals stay behind for retransmits.
+        let out_frames: Vec<Vec<u8>> = frames.iter().map(|f| self.scratch.copy(f)).collect();
+        self.phase =
+            Phase::Waiting { round, want, frames, expect_lanes, asm, rejoining: false, started: now };
+        self.timeouts = 0;
+        self.deadline = Some(now + self.cfg.timeout);
+        ClientOutput { frames: out_frames, timer: self.deadline, progress: None }
+    }
+
+    /// A completed broadcast: record the RTT, decode and validate, and
+    /// surface the phase's event (or a terminal failure — the same
+    /// conditions the blocking driver has always treated as fatal).
+    fn complete(
+        &mut self,
+        round: u32,
+        want: WireKind,
+        expect_lanes: usize,
+        (bytes, aux): (Vec<u8>, u32),
+        started: Instant,
+        now: Instant,
+    ) -> Progress {
+        match want {
+            WireKind::Gia => {
+                self.stats.vote_rtt_us.record_micros(now.duration_since(started));
+                let Some(gia) = golomb::decode_with_limit(&bytes, self.cfg.d) else {
+                    return self.fail("GIA broadcast failed to Golomb-decode".to_string());
+                };
+                if gia.len() != self.cfg.d {
+                    return self.fail(format!("GIA length {} != d", gia.len()));
+                }
+                let global_max = f32::from_bits(aux);
+                if !(global_max.is_finite() && global_max > 0.0) {
+                    return self.fail(format!(
+                        "GIA broadcast carried a non-finite global max ({global_max})"
+                    ));
+                }
+                Progress::GiaReady { round, gia, global_max }
+            }
+            WireKind::Aggregate => {
+                self.stats.update_rtt_us.record_micros(now.duration_since(started));
+                let lanes = match decode_lanes(&bytes) {
+                    Ok(l) => l,
+                    Err(e) => return self.fail(format!("aggregate broadcast: {e}")),
+                };
+                if lanes.len() != expect_lanes || aux as usize != expect_lanes {
+                    return self.fail(format!(
+                        "aggregate has {} lanes, expected k_S = {}",
+                        lanes.len(),
+                        expect_lanes
+                    ));
+                }
+                Progress::AggregateReady { round, lanes }
+            }
+            _ => unreachable!("waits only complete on broadcast kinds"),
+        }
+    }
+
+    /// A frame while in the Joining phase.
+    fn handle_joining(&mut self, h: &Header) -> ClientOutput {
+        let mut progress = None;
+        if h.kind == WireKind::JoinAck && h.job == self.cfg.job {
+            if h.aux == JOIN_OK {
+                self.joined = true;
+                self.phase = Phase::Idle;
+                self.deadline = None;
+                progress = Some(Progress::Joined);
+            } else {
+                progress = Some(self.fail(format!("server refused join: status {}", h.aux)));
+            }
+        }
+        // Stray broadcasts from an earlier round — ignore.
+        ClientOutput { frames: Vec::new(), timer: self.deadline, progress }
+    }
+
+    /// A frame while a phase wait is armed. Robustness here (all
+    /// chaos-matrix-proven):
+    /// * mixed streams — a frame disagreeing with the in-progress
+    ///   assembly on `n_blocks` or `aux` restarts the assembler instead
+    ///   of completing with garbage;
+    /// * re-join — a `JOIN_UNKNOWN_JOB` ack triggers an *inline* Join so
+    ///   wanted broadcast frames arriving meanwhile still count;
+    /// * phase overlap — broadcast frames of this round's other phase
+    ///   are stashed in `pending` for the next wait instead of being
+    ///   dropped into a retransmission cycle.
+    fn handle_waiting(&mut self, h: &Header, payload: &[u8], now: Instant) -> ClientOutput {
+        let mut out_frames = Vec::new();
+        let mut progress = None;
+
+        enum Action {
+            Ingest,
+            Stash,
+            Rejoin,
+            Reupload,
+            Refuse(u32),
+            Ignore,
+        }
+        let action = {
+            let Phase::Waiting { round, want, rejoining, .. } = &self.phase else {
+                unreachable!()
+            };
+            if h.job != self.cfg.job {
+                Action::Ignore
+            } else if h.kind == *want && h.round == *round {
+                Action::Ingest
+            } else if (h.kind == WireKind::Gia || h.kind == WireKind::Aggregate)
+                && h.round == *round
+            {
+                // The other phase's broadcast for this round: keep it
+                // for the next wait.
+                Action::Stash
+            } else if h.kind == WireKind::JoinAck {
+                match h.aux {
+                    JOIN_UNKNOWN_JOB if !*rejoining => Action::Rejoin,
+                    // Repeated UNKNOWN_JOB while our re-join is already
+                    // in flight: the timer path retransmits the Join.
+                    JOIN_UNKNOWN_JOB => Action::Ignore,
+                    JOIN_OK if *rejoining => Action::Reupload,
+                    JOIN_OK => Action::Ignore, // duplicate ack of an earlier join
+                    status if *rejoining => Action::Refuse(status),
+                    // Unsolicited non-OK ack (spoof or stale): only a
+                    // refusal of *our* in-flight re-join may kill the
+                    // round.
+                    _ => Action::Ignore,
+                }
+            } else {
+                // NotReady / stale rounds / other phases: keep waiting.
+                Action::Ignore
+            }
+        };
+
+        match action {
+            Action::Ignore => {}
+            Action::Ingest => {
+                let Phase::Waiting { asm, .. } = &mut self.phase else { unreachable!() };
+                if let Some(done) =
+                    ingest_chunk(asm, self.max_blocks, h, payload, &mut self.stats)
+                {
+                    let Phase::Waiting { round, want, frames, expect_lanes, started, .. } =
+                        std::mem::replace(&mut self.phase, Phase::Idle)
+                    else {
+                        unreachable!()
+                    };
+                    for f in frames {
+                        self.scratch.give(f);
+                    }
+                    self.deadline = None;
+                    progress = Some(self.complete(round, want, expect_lanes, done, started, now));
+                }
+            }
+            Action::Stash => self.stash(h, payload),
+            Action::Rejoin => {
+                // Server lost (or never had) our registration; re-join
+                // without leaving this wait.
+                let Phase::Waiting { round, rejoining, .. } = &mut self.phase else {
+                    unreachable!()
+                };
+                *rejoining = true;
+                let round = *round;
+                self.stats.rejoins += 1;
+                crate::debug!(
+                    "job={} client={} round={round} re-joining after UNKNOWN_JOB",
+                    self.cfg.job,
+                    self.cfg.client_id
+                );
+                out_frames.push(self.join_datagram());
+            }
+            Action::Reupload => {
+                // Re-registered. The server may have lost every round
+                // state too — re-upload this phase's frames.
+                let Phase::Waiting { frames, rejoining, .. } = &mut self.phase else {
+                    unreachable!()
+                };
+                *rejoining = false;
+                self.stats.retransmissions += frames.len() as u64;
+                let Phase::Waiting { frames, .. } = &self.phase else { unreachable!() };
+                for f in frames.iter() {
+                    out_frames.push(self.scratch.copy(f));
+                }
+            }
+            Action::Refuse(status) => {
+                progress = Some(self.fail(format!("server refused re-join: status {status}")));
+            }
+        }
+        ClientOutput { frames: out_frames, timer: self.deadline, progress }
+    }
+}
+
+/// Feed one broadcast chunk into the (lazily created) assembler. Frames
+/// are cross-checked against the stream in progress: a different
+/// `n_blocks` or aux word means two broadcasts are interleaved (a stale
+/// or truncated-spec stream mixed with the real one) — the assembler
+/// restarts from the newer frame instead of completing with chunks from
+/// both. Implausibly large geometry is ignored outright. Returns the
+/// reassembled payload and aux once complete.
+pub(crate) fn ingest_chunk(
+    asm: &mut Option<(ChunkAssembler, u32)>,
+    max_blocks: usize,
+    h: &Header,
+    payload: &[u8],
+    stats: &mut ClientStats,
+) -> Option<(Vec<u8>, u32)> {
+    let n_blocks = h.n_blocks as usize;
+    if n_blocks == 0 || n_blocks > max_blocks {
+        return None;
+    }
+    if asm.as_ref().is_some_and(|(a, aux)| a.n_blocks() != n_blocks || *aux != h.aux) {
+        stats.stream_resets += 1;
+        crate::debug!(
+            "job={} round={} {:?} stream reset: interleaved broadcast disagrees on geometry/aux",
+            h.job,
+            h.round,
+            h.kind
+        );
+        *asm = None;
+    }
+    let (a, _) = asm.get_or_insert_with(|| (ChunkAssembler::new(n_blocks), h.aux));
+    a.insert(h.block as usize, payload);
+    if a.is_complete() {
+        let (a, aux) = asm.take().expect("assembler just used");
+        Some((a.assemble(), aux))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::byte_chunks;
+
+    fn bcast_header(n_blocks: u32, block: u32, aux: u32) -> Header {
+        Header {
+            kind: WireKind::Gia,
+            client: u16::MAX,
+            job: 1,
+            round: 1,
+            block,
+            n_blocks,
+            elems: 0,
+            aux,
+        }
+    }
+
+    #[test]
+    fn ingest_chunk_resets_on_mixed_streams() {
+        let mut stats = ClientStats::default();
+        let data: Vec<u8> = (0..=89u8).collect();
+        let chunks = byte_chunks(&data, 30); // 3 chunks
+        let mut asm: Option<(ChunkAssembler, u32)> = None;
+
+        // Two chunks of the real stream…
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(3, 0, 7), &chunks[0], &mut stats)
+            .is_none());
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(3, 2, 7), &chunks[2], &mut stats)
+            .is_none());
+        // …then a stale broadcast with different geometry interleaves:
+        // the assembler must restart, not mix chunks from both streams.
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(2, 0, 7), &[1, 2], &mut stats)
+            .is_none());
+        assert_eq!(stats.stream_resets, 1);
+        // A frame agreeing on geometry but not on aux also resets.
+        assert!(ingest_chunk(&mut asm, 100, &bcast_header(2, 1, 9), &[3, 4], &mut stats)
+            .is_none());
+        assert_eq!(stats.stream_resets, 2);
+        // The real stream, uninterrupted, completes with the right bytes
+        // (nothing from the interleaved impostors survives).
+        for (i, c) in chunks.iter().enumerate() {
+            if let Some(done) =
+                ingest_chunk(&mut asm, 100, &bcast_header(3, i as u32, 7), c, &mut stats)
+            {
+                assert_eq!(i, 2, "completed early");
+                assert_eq!(done, (data.clone(), 7));
+                assert_eq!(stats.stream_resets, 3);
+                return;
+            }
+        }
+        panic!("real stream never completed");
+    }
+
+    #[test]
+    fn ingest_chunk_ignores_implausible_geometry() {
+        let mut stats = ClientStats::default();
+        let mut asm: Option<(ChunkAssembler, u32)> = None;
+        // A forged frame declaring 2^31 blocks must not size the
+        // assembler (that would be a multi-gigabyte allocation).
+        let h = bcast_header(1 << 31, 0, 0);
+        assert!(ingest_chunk(&mut asm, 64, &h, &[], &mut stats).is_none());
+        assert!(asm.is_none());
+        assert!(ingest_chunk(&mut asm, 64, &bcast_header(0, 0, 0), &[], &mut stats).is_none());
+        assert!(asm.is_none());
+    }
+}

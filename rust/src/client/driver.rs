@@ -1,38 +1,39 @@
-//! The networked FediAC client: one UDP socket, two phases, timeout-based
-//! retransmission.
+//! The blocking FediAC client driver: one UDP socket, one
+//! [`ClientCore`], timeout-based retransmission.
 //!
-//! A round is: upload vote blocks → await the Golomb-coded GIA broadcast →
-//! quantise against the GIA → upload aligned i32 lanes → await the
-//! aggregate broadcast. Every wait retransmits the phase's frames (and a
-//! `Poll`) on timeout; the server's scoreboards make retransmission
-//! idempotent, so the driver is safe on lossy links — the `send_loss`
-//! option injects exactly the lossy-uplink behaviour `net::trace`
-//! scenarios model in simulation, making them runnable end-to-end, and
-//! the `chaos` option interposes a full [`crate::net::chaos`] proxy
-//! (loss, duplication, reordering, corruption — both directions).
+//! Since the sans-I/O refactor every protocol decision — join/re-join,
+//! phase uploads, broadcast reassembly, retransmission and `Poll` —
+//! lives in [`crate::client::core`]; this file only owns the socket,
+//! the clock and the buffers. A round is: feed the core's emitted
+//! frames to the socket (through the optional loss lane), feed received
+//! datagrams back to the core, and surface the core's [`Progress`]
+//! events as the same public API (`join`/`vote_phase`/`update_phase`/
+//! `run_round`) the driver has always had. The server's scoreboards
+//! make retransmission idempotent, so the driver is safe on lossy
+//! links — the `send_loss` option is now a thin alias for an uplink
+//! [`crate::net::chaos::ChaosLane`] with only the drop knob set (one
+//! loss implementation in the tree), and the `chaos` option interposes
+//! a full [`crate::net::chaos`] proxy (loss, duplication, reordering,
+//! corruption — both directions).
 
 use std::collections::VecDeque;
 use std::net::UdpSocket;
+use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::client::core::{ClientCore, ClientOutput, ClientStats, CoreConfig, Progress};
 use crate::client::protocol;
-use crate::compress::{self, golomb};
-use crate::net::chaos::{chaos_proxy, ChaosConfig, ChaosHandle, ChaosProxyOptions, ChaosSnapshot};
-use crate::net::poll;
-use crate::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
-use crate::telemetry::HistSummary;
-use crate::util::{BitVec, Rng};
-use crate::wire::{
-    decode_frame, decode_lanes, encode_frame, encode_lanes_into, update_chunk_bounds,
-    vote_chunk_bounds, ChunkAssembler, FrameScratch, Header, JobSpec, ShardPlan, WireKind,
-    DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAX_DATAGRAM,
+use crate::compress;
+use crate::net::chaos::{
+    chaos_proxy, ChaosConfig, ChaosDirection, ChaosHandle, ChaosLane, ChaosProxyOptions,
+    ChaosSnapshot,
 };
+use crate::net::poll;
+use crate::util::BitVec;
+use crate::wire::{JobSpec, ShardPlan, DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAX_DATAGRAM};
 
-/// Broadcast frames of the *other* phase kept aside during a wait (see
-/// [`FediacClient::exchange`]); bounds memory against a babbling server.
-const PENDING_CAP: usize = 256;
 /// Frames flushed per `sendmmsg(2)` burst on the upload path, and
 /// datagrams drained per `recvmmsg(2)` call on the receive path.
 const CLIENT_BATCH: usize = 32;
@@ -66,7 +67,9 @@ pub struct ClientOptions {
     /// Timeouts tolerated per wait before giving up.
     pub max_retries: usize,
     /// Probability of dropping an outgoing datagram (lossy-uplink
-    /// emulation for tests; 0.0 = reliable).
+    /// emulation for tests; 0.0 = reliable). A config alias for a
+    /// drop-only uplink [`ChaosLane`] — the drops land in
+    /// [`ClientStats::dropped_sends`] straight from the lane's counters.
     pub send_loss: f64,
     /// Run this client through an in-process chaos proxy: loss,
     /// duplication, bounded reordering and bit corruption in either
@@ -112,50 +115,22 @@ impl ClientOptions {
             shard: self.shard,
         }
     }
-}
 
-/// Cumulative driver counters.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ClientStats {
-    /// Frames re-sent after a timeout.
-    pub retransmissions: u64,
-    /// Frames dropped by the loss injector (never hit the wire).
-    pub dropped_sends: u64,
-    /// Poll frames sent.
-    pub polls: u64,
-    /// Mid-round re-registrations after a `JOIN_UNKNOWN_JOB` (e.g. the
-    /// server restarted or evicted the job).
-    pub rejoins: u64,
-    /// Broadcast streams restarted because interleaved frames disagreed
-    /// on geometry (`n_blocks`) or the aux word.
-    pub stream_resets: u64,
-    /// Datagram bytes handed to the socket (after the loss injector) —
-    /// the `fediac bench-wire` bytes/round numerator, uplink half.
-    pub bytes_sent: u64,
-    /// Datagram bytes received from the socket (before decoding).
-    pub bytes_received: u64,
-    /// Vote-phase round trips as seen from this endpoint: first vote
-    /// frame sent → GIA decoded (retransmission cycles included).
-    pub vote_rtt_us: HistSummary,
-    /// Update-phase round trips: first lane frame sent → aggregate
-    /// decoded.
-    pub update_rtt_us: HistSummary,
-}
-
-impl ClientStats {
-    /// Fold another endpoint's counters in — the single place that knows
-    /// every field, so multi-endpoint aggregation (the sharded driver)
-    /// cannot silently drop a counter added later.
-    pub fn add(&mut self, other: &ClientStats) {
-        self.retransmissions += other.retransmissions;
-        self.dropped_sends += other.dropped_sends;
-        self.polls += other.polls;
-        self.rejoins += other.rejoins;
-        self.stream_resets += other.stream_resets;
-        self.bytes_sent += other.bytes_sent;
-        self.bytes_received += other.bytes_received;
-        self.vote_rtt_us.merge(&other.vote_rtt_us);
-        self.update_rtt_us.merge(&other.update_rtt_us);
+    /// The transport subset of these options, as the [`ClientCore`]
+    /// config (drops the server address, round math and chaos knobs —
+    /// those belong to whichever driver owns the I/O).
+    pub fn core_config(&self) -> CoreConfig {
+        CoreConfig {
+            job: self.job,
+            client_id: self.client_id,
+            n_clients: self.n_clients,
+            d: self.d,
+            threshold_a: self.threshold_a,
+            payload_budget: self.payload_budget,
+            timeout: self.timeout,
+            max_retries: self.max_retries,
+            shard: self.shard,
+        }
     }
 }
 
@@ -188,24 +163,21 @@ impl RoundOutcome {
     }
 }
 
-/// A connected (joined) FediAC client.
+/// A connected (joined) FediAC client: the blocking driver over one
+/// [`ClientCore`]. All protocol behaviour lives in the core; this
+/// struct only moves bytes and time.
 pub struct FediacClient {
     socket: UdpSocket,
     opts: ClientOptions,
-    loss_rng: Rng,
-    /// Broadcast frames of this round's other phase, captured while
-    /// waiting (an empty-consensus round multicasts GIA and aggregate
-    /// back-to-back; reordering can also deliver them interleaved).
-    pending: Vec<(Header, Vec<u8>)>,
+    /// The sans-I/O protocol state machine.
+    core: ClientCore,
+    /// Uplink loss injection (`send_loss` alias): a drop-only
+    /// [`ChaosLane`], present only when the knob is nonzero so the
+    /// reliable path stays copy-free.
+    loss_lane: Option<ChaosLane<()>>,
     /// Keeps the per-client chaos proxy (if any) alive for the client's
     /// lifetime.
     chaos: Option<ChaosHandle>,
-    /// Datagram-buffer pool for *outgoing* frames: steady-state rounds
-    /// encode into recycled buffers instead of allocating.
-    scratch: FrameScratch,
-    /// Reused serialisation buffers (vote bitmap bytes / lane bytes).
-    bitmap_buf: Vec<u8>,
-    lane_buf: Vec<u8>,
     /// Pool of *receive* buffers. These stay at full `recv_len` length
     /// for their whole life (datagram size travels alongside as a
     /// separate count), so reuse never re-zeroes the buffer.
@@ -220,7 +192,12 @@ pub struct FediacClient {
     /// Every receive buffer's size, from one constant — see
     /// [`FediacClient::recv_buf_len`].
     recv_len: usize,
-    /// Cumulative driver counters.
+    /// Datagram bytes confirmed sent / received by this socket (the
+    /// I/O half of [`ClientStats`]; the core owns the protocol half).
+    io_bytes_sent: u64,
+    io_bytes_received: u64,
+    /// Cumulative driver counters, refreshed from the core + the I/O
+    /// meters at every public-API boundary.
     pub stats: ClientStats,
 }
 
@@ -280,21 +257,28 @@ impl FediacClient {
         let socket = UdpSocket::bind("0.0.0.0:0").context("binding client socket")?;
         socket.connect(&target).with_context(|| format!("connecting to {target}"))?;
         socket.set_read_timeout(Some(opts.timeout))?;
-        let loss_rng = Rng::new(opts.backend_seed ^ (opts.client_id as u64) << 40 ^ 0x10_55);
+        // `send_loss` rides the generic chaos lane (drop knob only),
+        // seeded exactly as the old bespoke injector was.
+        let loss_lane = (opts.send_loss > 0.0).then(|| {
+            ChaosLane::new(
+                ChaosDirection { drop: opts.send_loss, ..ChaosDirection::clean() },
+                opts.backend_seed ^ (opts.client_id as u64) << 40 ^ 0x10_55,
+            )
+        });
         let recv_len = Self::recv_buf_len(opts.payload_budget);
+        let core = ClientCore::new(opts.core_config());
         let mut client = FediacClient {
             socket,
             opts,
-            loss_rng,
-            pending: Vec::new(),
+            core,
+            loss_lane,
             chaos,
-            scratch: FrameScratch::new(),
-            bitmap_buf: Vec::new(),
-            lane_buf: Vec::new(),
             recv_pool: Vec::new(),
             recv_queue: VecDeque::new(),
             batch: poll::RecvBatch::new(CLIENT_BATCH, recv_len),
             recv_len,
+            io_bytes_sent: 0,
+            io_bytes_received: 0,
             stats: ClientStats::default(),
         };
         client.join()?;
@@ -311,46 +295,61 @@ impl FediacClient {
         self.chaos.as_ref().map(|h| h.snapshot())
     }
 
-    fn send_datagram(&mut self, bytes: &[u8]) {
-        if self.opts.send_loss > 0.0 && self.loss_rng.f64() < self.opts.send_loss {
-            self.stats.dropped_sends += 1;
+    /// Refresh the public `stats` field: protocol counters from the
+    /// core, byte meters from the socket path, drops from the loss
+    /// lane. Called at every public-API boundary so tests can keep
+    /// reading `client.stats` directly.
+    fn sync_stats(&mut self) {
+        let mut s = self.core.stats;
+        s.bytes_sent = self.io_bytes_sent;
+        s.bytes_received = self.io_bytes_received;
+        s.dropped_sends =
+            self.loss_lane.as_ref().map_or(0, |l| l.stats().dropped.load(Ordering::Relaxed));
+        self.stats = s;
+    }
+
+    /// Transmit the core's emitted frames: per-frame loss-lane verdicts
+    /// in emission order, then `sendmmsg` bursts of [`CLIENT_BATCH`] (a
+    /// plain loop off Linux). Bytes are metered only for frames the
+    /// kernel confirmed sent; a refused frame is skipped (one attempt
+    /// per frame), and every buffer goes back to the core's pool.
+    fn transmit(&mut self, frames: Vec<Vec<u8>>) {
+        if frames.is_empty() {
             return;
         }
-        // Meter only what actually left the host: send() can fail on a
-        // connected UDP socket (ICMP-unreachable surfacing as
-        // ECONNRESET, ENOBUFS under load).
-        if self.socket.send(bytes).is_ok() {
-            self.stats.bytes_sent += bytes.len() as u64;
+        if self.loss_lane.is_some() {
+            let now = Instant::now();
+            let mut wire: Vec<Vec<u8>> = Vec::with_capacity(frames.len());
+            let lane = self.loss_lane.as_mut().expect("just checked");
+            for f in &frames {
+                // Drop-only lane: 0 or 1 packets out, never held.
+                wire.extend(lane.process(f, (), now).into_iter().map(|(pkt, ())| pkt));
+            }
+            let refs: Vec<&[u8]> = wire.iter().map(|v| v.as_slice()).collect();
+            self.send_refs(&refs);
+        } else {
+            let refs: Vec<&[u8]> = frames.iter().map(|v| v.as_slice()).collect();
+            self.send_refs(&refs);
+        }
+        for f in frames {
+            self.core.recycle(f);
         }
     }
 
-    /// Upload a phase's frame set, flushing in `sendmmsg` bursts of
-    /// [`CLIENT_BATCH`] (a plain per-frame loop off Linux). Loss
-    /// injection still decides per frame *before* batching, drawing the
-    /// RNG in the same per-frame order as the unbatched path, and bytes
-    /// are metered only for frames the kernel confirmed sent — the
-    /// batch changes syscall count, nothing observable.
-    fn send_frames(&mut self, frames: &[Vec<u8>]) {
-        let mut refs: Vec<&[u8]> = Vec::with_capacity(frames.len());
-        for f in frames {
-            if self.opts.send_loss > 0.0 && self.loss_rng.f64() < self.opts.send_loss {
-                self.stats.dropped_sends += 1;
-            } else {
-                refs.push(f);
-            }
-        }
+    /// Burst-send pre-encoded datagrams on the connected socket,
+    /// metering confirmed bytes.
+    fn send_refs(&mut self, refs: &[&[u8]]) {
         let mut start = 0usize;
         while start < refs.len() {
             let burst = &refs[start..(start + CLIENT_BATCH).min(refs.len())];
             match poll::send_batch_connected(&self.socket, burst) {
                 Ok(sent) => {
                     for b in &burst[..sent] {
-                        self.stats.bytes_sent += b.len() as u64;
+                        self.io_bytes_sent += b.len() as u64;
                     }
                     if sent < burst.len() {
                         // The frame after the sent prefix was refused:
-                        // skip it (one attempt per frame, like the
-                        // unbatched loop) and keep going.
+                        // skip it (one attempt per frame) and keep going.
                         start += sent + 1;
                     } else {
                         start += burst.len();
@@ -392,7 +391,7 @@ impl FediacClient {
         let mut first = self.take_recv_buf();
         let n = match self.socket.recv(&mut first) {
             Ok(n) => {
-                self.stats.bytes_received += n as u64;
+                self.io_bytes_received += n as u64;
                 n
             }
             Err(e) => {
@@ -407,7 +406,7 @@ impl FediacClient {
             if let Ok(got) = poll::recv_batch(&self.socket, &mut self.batch) {
                 for i in 0..got {
                     let (bytes, _) = self.batch.datagram(i);
-                    self.stats.bytes_received += bytes.len() as u64;
+                    self.io_bytes_received += bytes.len() as u64;
                     // Copy into a pooled full-length buffer (batch
                     // buffers are `recv_len`-sized, so this always fits).
                     let mut copy = match self.recv_pool.pop() {
@@ -422,248 +421,44 @@ impl FediacClient {
         Ok((first, n))
     }
 
-    /// The (idempotent) registration frame for this client's job.
-    fn join_frame(&self) -> Vec<u8> {
-        encode_frame(
-            &Header::control(WireKind::Join, self.opts.job, self.opts.client_id, 0, 0),
-            &self.opts.spec().encode(),
-        )
+    /// Drive the core until it surfaces a progress event: send what it
+    /// emits, feed it received datagrams, tick it on socket timeouts.
+    /// A [`Progress::Failed`] becomes this driver's error (same
+    /// messages the pre-refactor driver produced inline).
+    fn drive(&mut self, mut out: ClientOutput) -> Result<Progress> {
+        loop {
+            self.transmit(std::mem::take(&mut out.frames));
+            if let Some(progress) = out.progress.take() {
+                self.sync_stats();
+                if let Progress::Failed { reason } = progress {
+                    bail!(reason);
+                }
+                return Ok(progress);
+            }
+            out = match self.recv_datagram() {
+                Ok((buf, n)) => {
+                    let o = self.core.handle(&buf[..n], Instant::now());
+                    self.give_recv_buf(buf);
+                    o
+                }
+                Err(e) if is_timeout(&e) => self.core.on_tick(Instant::now()),
+                Err(e) => {
+                    self.sync_stats();
+                    return Err(e.into());
+                }
+            };
+        }
     }
 
     /// Initial registration with the server. Mid-round re-registration
-    /// does NOT use this loop — `exchange` re-joins inline so broadcast
+    /// does NOT use this path — the core re-joins inline so broadcast
     /// frames of the awaited round keep counting while the Join is in
     /// flight.
     fn join(&mut self) -> Result<()> {
-        let frame = self.join_frame();
-        let mut timeouts = 0usize;
-        self.send_datagram(&frame);
-        loop {
-            match self.recv_datagram() {
-                Ok((buf, n)) => {
-                    let decoded = decode_frame(&buf[..n]).map(|f| f.header);
-                    self.give_recv_buf(buf);
-                    let Ok(h) = decoded else { continue };
-                    if h.kind == WireKind::JoinAck && h.job == self.opts.job {
-                        if h.aux == JOIN_OK {
-                            return Ok(());
-                        }
-                        bail!("server refused join: status {}", h.aux);
-                    }
-                    // Stray broadcast from an earlier round — ignore.
-                }
-                Err(e) if is_timeout(&e) => {
-                    timeouts += 1;
-                    if timeouts > self.opts.max_retries {
-                        bail!("join timed out after {timeouts} attempts");
-                    }
-                    self.stats.retransmissions += 1;
-                    self.send_datagram(&frame);
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-    }
-
-    /// Encode one phase's vote frames into pooled buffers (recycled by
-    /// the phase driver once the exchange completes).
-    fn vote_frames(&mut self, round: u32, votes: &BitVec, local_max: f32) -> Vec<Vec<u8>> {
-        votes.copy_bytes_into(&mut self.bitmap_buf);
-        let budget = self.opts.payload_budget;
-        let n_blocks = vote_chunk_bounds(votes.len(), budget).count() as u32;
-        let mut frames = Vec::with_capacity(n_blocks as usize);
-        for (i, (dims, lo, hi)) in vote_chunk_bounds(votes.len(), budget).enumerate() {
-            let header = Header {
-                kind: WireKind::Vote,
-                client: self.opts.client_id,
-                job: self.opts.job,
-                round,
-                block: i as u32,
-                n_blocks,
-                elems: dims as u32,
-                aux: local_max.to_bits(),
-            };
-            frames.push(self.scratch.encode(&header, &self.bitmap_buf[lo..hi]));
-        }
-        frames
-    }
-
-    /// Encode one phase's update frames into pooled buffers, packing
-    /// each block's lanes through one reused serialisation buffer
-    /// instead of a fresh `encode_lanes` allocation per block.
-    fn update_frames(&mut self, round: u32, lanes: &[i32], f: f32) -> Vec<Vec<u8>> {
-        let budget = self.opts.payload_budget;
-        let n_blocks = update_chunk_bounds(lanes.len(), budget).count() as u32;
-        let mut frames = Vec::with_capacity(n_blocks as usize);
-        for (i, (lo, hi)) in update_chunk_bounds(lanes.len(), budget).enumerate() {
-            encode_lanes_into(&mut self.lane_buf, &lanes[lo..hi]);
-            let header = Header {
-                kind: WireKind::Update,
-                client: self.opts.client_id,
-                job: self.opts.job,
-                round,
-                block: i as u32,
-                n_blocks,
-                elems: (hi - lo) as u32,
-                aux: f.to_bits(),
-            };
-            frames.push(self.scratch.encode(&header, &self.lane_buf));
-        }
-        frames
-    }
-
-    /// Largest broadcast block count this job could legitimately need:
-    /// the aggregate is at most 4·d lane bytes and the Golomb GIA stays
-    /// under 2 bits per dimension plus its header for any density the
-    /// server-side Rice parameter produces. A frame declaring more
-    /// blocks is forged or stale — sizing the assembler from it would
-    /// pin unbounded memory.
-    fn max_broadcast_blocks(&self) -> usize {
-        (16 + 4 * self.opts.d).div_ceil(self.opts.payload_budget).max(1) + 1
-    }
-
-    /// Upload `frames`, then wait for the complete `want` broadcast of
-    /// `round`, retransmitting on every timeout. Returns (reassembled
-    /// payload bytes, the broadcast's aux word).
-    ///
-    /// Robustness in this loop (all chaos-matrix-proven):
-    /// * mixed streams — a frame disagreeing with the in-progress
-    ///   assembly on `n_blocks` or `aux` restarts the assembler instead
-    ///   of completing with garbage;
-    /// * re-join — a `JOIN_UNKNOWN_JOB` ack triggers an *inline* Join so
-    ///   wanted broadcast frames arriving meanwhile still count;
-    /// * phase overlap — broadcast frames of this round's other phase
-    ///   are stashed in `pending` for the next wait instead of being
-    ///   dropped into a retransmission cycle.
-    fn exchange(&mut self, round: u32, frames: &[Vec<u8>], want: WireKind) -> Result<(Vec<u8>, u32)> {
-        let max_blocks = self.max_broadcast_blocks();
-        let mut asm: Option<(ChunkAssembler, u32)> = None;
-        // Drain stashed frames from the previous wait of this round.
-        self.pending.retain(|(h, _)| h.round == round);
-        let (mine, keep): (Vec<_>, Vec<_>) =
-            std::mem::take(&mut self.pending).into_iter().partition(|(h, _)| h.kind == want);
-        self.pending = keep;
-        for (h, payload) in mine {
-            if let Some(done) = ingest_chunk(&mut asm, max_blocks, &h, &payload, &mut self.stats)
-            {
-                return Ok(done);
-            }
-        }
-        self.send_frames(frames);
-        let join_frame = self.join_frame();
-        let mut rejoining = false;
-        let mut timeouts = 0usize;
-        loop {
-            match self.recv_datagram() {
-                Ok((buf, n)) => {
-                    // `'done: Some(v)` completes the exchange; any other
-                    // path falls through so the buffer recycles first.
-                    let done = 'frame: {
-                        let Ok(frame) = decode_frame(&buf[..n]) else { break 'frame None };
-                        let h = frame.header;
-                        if h.job != self.opts.job {
-                            break 'frame None;
-                        }
-                        if h.kind == want && h.round == round {
-                            break 'frame ingest_chunk(
-                                &mut asm,
-                                max_blocks,
-                                &h,
-                                frame.payload,
-                                &mut self.stats,
-                            );
-                        } else if (h.kind == WireKind::Gia || h.kind == WireKind::Aggregate)
-                            && h.round == round
-                        {
-                            // The other phase's broadcast for this round:
-                            // keep it for the next exchange.
-                            if self.pending.len() < PENDING_CAP {
-                                self.pending.push((h, frame.payload.to_vec()));
-                            }
-                        } else if h.kind == WireKind::JoinAck {
-                            match h.aux {
-                                JOIN_UNKNOWN_JOB => {
-                                    // Server lost (or never had) our
-                                    // registration; re-join without leaving
-                                    // this receive loop.
-                                    if !rejoining {
-                                        rejoining = true;
-                                        self.stats.rejoins += 1;
-                                        crate::debug!(
-                                            "job={} client={} round={round} re-joining after \
-                                             UNKNOWN_JOB",
-                                            self.opts.job,
-                                            self.opts.client_id
-                                        );
-                                        self.send_datagram(&join_frame);
-                                    }
-                                }
-                                JOIN_OK if rejoining => {
-                                    // Re-registered. The server may have lost
-                                    // every round state too — re-upload this
-                                    // phase's frames.
-                                    rejoining = false;
-                                    self.stats.retransmissions += frames.len() as u64;
-                                    self.send_frames(frames);
-                                }
-                                JOIN_OK => {} // duplicate ack of an earlier join
-                                status if rejoining => {
-                                    bail!("server refused re-join: status {status}")
-                                }
-                                // Unsolicited non-OK ack (spoof or stale):
-                                // only a refusal of *our* in-flight re-join
-                                // may kill the round.
-                                _ => {}
-                            }
-                        }
-                        // NotReady / stale rounds / other phases: keep waiting.
-                        None
-                    };
-                    self.give_recv_buf(buf);
-                    if let Some(done) = done {
-                        return Ok(done);
-                    }
-                }
-                Err(e) if is_timeout(&e) => {
-                    timeouts += 1;
-                    if timeouts > self.opts.max_retries {
-                        bail!(
-                            "client {} timed out waiting for {want:?} of round {round} \
-                             after {timeouts} timeouts",
-                            self.opts.client_id
-                        );
-                    }
-                    crate::debug!(
-                        "job={} client={} round={round} timeout #{timeouts}: retransmitting \
-                         {} frames and polling for {want:?}",
-                        self.opts.job,
-                        self.opts.client_id,
-                        frames.len()
-                    );
-                    if rejoining {
-                        // The in-flight Join (or its ack) was lost.
-                        self.stats.retransmissions += 1;
-                        self.send_datagram(&join_frame);
-                    }
-                    self.stats.retransmissions += frames.len() as u64;
-                    self.send_frames(frames);
-                    self.stats.polls += 1;
-                    let poll_hdr = Header {
-                        kind: WireKind::Poll,
-                        client: self.opts.client_id,
-                        job: self.opts.job,
-                        round,
-                        block: 0,
-                        n_blocks: 0,
-                        elems: 0,
-                        aux: want as u32,
-                    };
-                    let poll_frame = self.scratch.encode(&poll_hdr, &[]);
-                    self.send_datagram(&poll_frame);
-                    self.scratch.give(poll_frame);
-                }
-                Err(e) => return Err(e.into()),
-            }
+        let out = self.core.start_join(Instant::now());
+        match self.drive(out)? {
+            Progress::Joined => Ok(()),
+            p => bail!("unexpected join progress: {p:?}"),
         }
     }
 
@@ -686,23 +481,11 @@ impl FediacClient {
             votes.len(),
             self.opts.d
         );
-        let t0 = Instant::now();
-        let vote_frames = self.vote_frames(round, votes, local_max);
-        let exchanged = self.exchange(round, &vote_frames, WireKind::Gia);
-        for f in vote_frames {
-            self.scratch.give(f);
+        let out = self.core.start_vote(round, votes, local_max, Instant::now());
+        match self.drive(out)? {
+            Progress::GiaReady { gia, global_max, .. } => Ok((gia, global_max)),
+            p => bail!("unexpected vote-phase progress: {p:?}"),
         }
-        let (gia_bytes, gia_aux) = exchanged?;
-        self.stats.vote_rtt_us.record_micros(t0.elapsed());
-        let gia = golomb::decode_with_limit(&gia_bytes, self.opts.d)
-            .ok_or_else(|| anyhow::anyhow!("GIA broadcast failed to Golomb-decode"))?;
-        anyhow::ensure!(gia.len() == self.opts.d, "GIA length {} != d", gia.len());
-        let global_max = f32::from_bits(gia_aux);
-        anyhow::ensure!(
-            global_max.is_finite() && global_max > 0.0,
-            "GIA broadcast carried a non-finite global max ({global_max})"
-        );
-        Ok((gia, global_max))
     }
 
     /// Run phase 2 over the wire: upload the GIA-aligned quantised lanes,
@@ -712,23 +495,11 @@ impl FediacClient {
     /// skipping it would leave the two sides disagreeing on whether the
     /// round happened at all.
     pub fn update_phase(&mut self, round: u32, lanes: &[i32], f: f32) -> Result<Vec<i32>> {
-        let t0 = Instant::now();
-        let update_frames = self.update_frames(round, lanes, f);
-        let exchanged = self.exchange(round, &update_frames, WireKind::Aggregate);
-        for f in update_frames {
-            self.scratch.give(f);
+        let out = self.core.start_update(round, lanes, f, Instant::now());
+        match self.drive(out)? {
+            Progress::AggregateReady { lanes, .. } => Ok(lanes),
+            p => bail!("unexpected update-phase progress: {p:?}"),
         }
-        let (agg_bytes, agg_aux) = exchanged?;
-        self.stats.update_rtt_us.record_micros(t0.elapsed());
-        let aggregate = decode_lanes(&agg_bytes)
-            .map_err(|e| anyhow::anyhow!("aggregate broadcast: {e}"))?;
-        anyhow::ensure!(
-            aggregate.len() == lanes.len() && agg_aux as usize == lanes.len(),
-            "aggregate has {} lanes, expected k_S = {}",
-            aggregate.len(),
-            lanes.len()
-        );
-        Ok(aggregate)
     }
 
     /// Execute both FediAC phases for `round` on this client's update
@@ -740,7 +511,7 @@ impl FediacClient {
             update.len(),
             self.opts.d
         );
-        let retx_before = self.stats.retransmissions;
+        let retx_before = self.core.stats.retransmissions;
         let round_u = round as u32;
         let cid = self.opts.client_id as usize;
 
@@ -775,7 +546,7 @@ impl FediacClient {
             aggregate,
             delta,
             residual,
-            retransmissions: self.stats.retransmissions - retx_before,
+            retransmissions: self.core.stats.retransmissions - retx_before,
         })
     }
 }
@@ -784,118 +555,17 @@ fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
-/// Feed one broadcast chunk into the (lazily created) assembler. Frames
-/// are cross-checked against the stream in progress: a different
-/// `n_blocks` or aux word means two broadcasts are interleaved (a stale
-/// or truncated-spec stream mixed with the real one) — the assembler
-/// restarts from the newer frame instead of completing with chunks from
-/// both. Implausibly large geometry is ignored outright. Returns the
-/// reassembled payload and aux once complete.
-fn ingest_chunk(
-    asm: &mut Option<(ChunkAssembler, u32)>,
-    max_blocks: usize,
-    h: &Header,
-    payload: &[u8],
-    stats: &mut ClientStats,
-) -> Option<(Vec<u8>, u32)> {
-    let n_blocks = h.n_blocks as usize;
-    if n_blocks == 0 || n_blocks > max_blocks {
-        return None;
-    }
-    if asm.as_ref().is_some_and(|(a, aux)| a.n_blocks() != n_blocks || *aux != h.aux) {
-        stats.stream_resets += 1;
-        crate::debug!(
-            "job={} round={} {:?} stream reset: interleaved broadcast disagrees on geometry/aux",
-            h.job,
-            h.round,
-            h.kind
-        );
-        *asm = None;
-    }
-    let (a, _) = asm.get_or_insert_with(|| (ChunkAssembler::new(n_blocks), h.aux));
-    a.insert(h.block as usize, payload);
-    if a.is_complete() {
-        let (a, aux) = asm.take().expect("assembler just used");
-        Some((a.assemble(), aux))
-    } else {
-        None
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::chaos::ChaosDirection;
     use crate::server::{serve, ServeOptions};
-    use crate::wire::byte_chunks;
+    use crate::wire::{decode_frame, encode_frame, Header, WireKind};
 
     #[test]
     fn options_produce_valid_spec() {
         let opts = ClientOptions::new("127.0.0.1:1", 3, 0, 1000, 4);
         assert!(opts.spec().validate().is_ok());
         assert_eq!(opts.k, 50);
-    }
-
-    fn bcast_header(n_blocks: u32, block: u32, aux: u32) -> Header {
-        Header {
-            kind: WireKind::Gia,
-            client: u16::MAX,
-            job: 1,
-            round: 1,
-            block,
-            n_blocks,
-            elems: 0,
-            aux,
-        }
-    }
-
-    #[test]
-    fn ingest_chunk_resets_on_mixed_streams() {
-        let mut stats = ClientStats::default();
-        let data: Vec<u8> = (0..=89u8).collect();
-        let chunks = byte_chunks(&data, 30); // 3 chunks
-        let mut asm: Option<(ChunkAssembler, u32)> = None;
-
-        // Two chunks of the real stream…
-        assert!(ingest_chunk(&mut asm, 100, &bcast_header(3, 0, 7), &chunks[0], &mut stats)
-            .is_none());
-        assert!(ingest_chunk(&mut asm, 100, &bcast_header(3, 2, 7), &chunks[2], &mut stats)
-            .is_none());
-        // …then a stale broadcast with different geometry interleaves:
-        // the assembler must restart, not mix chunks from both streams.
-        assert!(ingest_chunk(&mut asm, 100, &bcast_header(2, 0, 7), &[1, 2], &mut stats)
-            .is_none());
-        assert_eq!(stats.stream_resets, 1);
-        // A frame agreeing on geometry but not on aux also resets.
-        assert!(ingest_chunk(&mut asm, 100, &bcast_header(2, 1, 9), &[3, 4], &mut stats)
-            .is_none());
-        assert_eq!(stats.stream_resets, 2);
-        // The real stream, uninterrupted, completes with the right bytes
-        // (nothing from the interleaved impostors survives).
-        for (i, c) in chunks.iter().enumerate() {
-            if let Some(done) =
-                ingest_chunk(&mut asm, 100, &bcast_header(3, i as u32, 7), c, &mut stats)
-            {
-                assert_eq!(i, 2, "completed early");
-                assert_eq!(done, (data.clone(), 7));
-                assert_eq!(stats.stream_resets, 3);
-                return;
-            }
-        }
-        panic!("real stream never completed");
-    }
-
-    #[test]
-    fn ingest_chunk_ignores_implausible_geometry() {
-        let mut stats = ClientStats::default();
-        let mut asm: Option<(ChunkAssembler, u32)> = None;
-        // A forged frame declaring 2^31 blocks must not size the
-        // assembler (that would be a multi-gigabyte allocation).
-        let h = bcast_header(1 << 31, 0, 0);
-        assert!(ingest_chunk(&mut asm, 64, &h, &[], &mut stats).is_none());
-        assert!(asm.is_none());
-        assert!(ingest_chunk(&mut asm, 64, &bcast_header(0, 0, 0), &[], &mut stats).is_none());
-        assert!(asm.is_none());
     }
 
     #[test]
@@ -979,6 +649,34 @@ mod tests {
         let want: Vec<i32> = out.gia_indices.iter().map(|&g| q[g]).collect();
         assert_eq!(out.aggregate, want);
         assert_eq!(out.delta.len(), out.aggregate.len());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn send_loss_rides_the_chaos_lane() {
+        // The `send_loss` alias must inject real drops (visible as
+        // retransmissions) and reconcile `dropped_sends` with the
+        // underlying lane's own counter.
+        let handle = serve(&ServeOptions::default()).unwrap();
+        let mut opts = ClientOptions::new(handle.local_addr().to_string(), 79, 0, 400, 1);
+        opts.threshold_a = 1;
+        opts.payload_budget = 16; // many small frames → many loss draws
+        opts.backend_seed = 13;
+        opts.timeout = Duration::from_millis(50);
+        opts.max_retries = 400;
+        opts.send_loss = 0.3;
+        let mut client = FediacClient::connect(opts).unwrap();
+        let update: Vec<f32> = (0..400).map(|i| ((i as f32) * 0.3).sin() * 0.01).collect();
+        for round in 1..=3 {
+            client.run_round(round, &update).unwrap();
+        }
+        assert!(client.stats.dropped_sends > 0, "30% loss over ~75 frames never dropped");
+        let lane_drops = client
+            .loss_lane
+            .as_ref()
+            .map(|l| l.stats().dropped.load(Ordering::Relaxed))
+            .unwrap();
+        assert_eq!(client.stats.dropped_sends, lane_drops, "stats diverged from the lane");
         handle.shutdown();
     }
 

@@ -1,25 +1,40 @@
-//! FediAC client driver: both protocol phases over a real UDP socket.
+//! FediAC client stack: one sans-I/O protocol core, three backends.
 //!
 //! * [`protocol`] — the deterministic client-side round math (vote
 //!   selection and Eq.-1 quantisation with the canonical seed derivation).
 //!   [`crate::algorithms::fediac`] drives the *simulated* round through the
 //!   same functions, so a networked round and an in-process round produce
 //!   bit-identical aggregation content for the same inputs.
-//! * [`driver`] — the socket state machine: join, upload vote blocks,
-//!   await the Golomb-coded GIA broadcast, upload aligned quantised
-//!   updates, await the aggregate; every wait uses timeout-based
-//!   retransmission (the server's scoreboards drop the duplicates), so
-//!   lossy links only cost time, never correctness.
-//! * [`sharded`] — the multi-server fan-out: the same round math spread
-//!   over N collaborating shard servers along the
-//!   [`crate::wire::ShardLayout`] block-ownership map, phases running
-//!   concurrently per shard and the GIA/aggregate reassembled from the
-//!   per-shard broadcasts (PROTOCOL.md §8).
+//! * [`core`] — the sans-I/O client state machine: join/rejoin, vote
+//!   upload, GIA reassembly, quantised-update upload, aggregate
+//!   reassembly, timeout retransmission and Poll, all as pure
+//!   `handle(frame, now)` / `on_tick(now)` transitions returning
+//!   [`core::ClientOutput`] — no sockets, no clocks, no sleeps. Every
+//!   wait uses timeout-based retransmission (the server's scoreboards
+//!   drop the duplicates), so lossy links only cost time, never
+//!   correctness.
+//! * [`driver`] — the blocking backend: one [`core::ClientCore`] driven
+//!   over one connected UDP socket (one thread per client). This is the
+//!   operator-facing `fediac client` path.
+//! * [`sharded`] — the multi-server fan-out: one blocking driver per
+//!   collaborating shard server along the [`crate::wire::ShardLayout`]
+//!   block-ownership map, phases running concurrently per shard and the
+//!   GIA/aggregate reassembled from the per-shard broadcasts
+//!   (PROTOCOL.md §8).
+//! * [`swarm`] — the scale backend: a single-thread multiplexer hosting
+//!   thousands of [`core::ClientCore`]s over ≤ 8 sockets (poll(2) +
+//!   timer wheel + recvmmsg/sendmmsg), exposed as `fediac swarm` and
+//!   `bench-wire --swarm`. Not wire-visible: the server cannot tell a
+//!   swarm client from a blocking one.
 
+pub mod core;
 pub mod driver;
 pub mod protocol;
 pub mod sharded;
+pub mod swarm;
 
-pub use driver::{ClientOptions, ClientStats, FediacClient, RoundOutcome};
+pub use self::core::{ClientCore, ClientOutput, ClientStats, CoreConfig, Progress};
+pub use driver::{ClientOptions, FediacClient, RoundOutcome};
 pub use protocol::{client_quantize, client_vote, compress_seed, vote_seed, votes_per_client};
 pub use sharded::ShardedFediacClient;
+pub use swarm::{plan_fleet, SwarmJobPlan, SwarmOptions, SwarmReport, UpdateSource};

@@ -3,7 +3,10 @@
 //!
 //! The round math is *identical* to the single-server
 //! [`FediacClient`] — one global vote, one global quantisation — only
-//! the transport fans out: the vote bitmap is scattered into per-shard
+//! the transport fans out. Each shard endpoint gets its own blocking
+//! thin driver (and thus its own [`crate::client::ClientCore`] protocol
+//! state machine); this module owns only the scatter/gather, never the
+//! protocol: the vote bitmap is scattered into per-shard
 //! sub-bitmaps along the [`ShardLayout`] block-ownership map, each shard
 //! runs its two phases concurrently (a thread per endpoint, so one slow
 //! or lossy shard overlaps the others' waits), and the full GIA and
@@ -17,7 +20,8 @@ use std::thread;
 
 use anyhow::Result;
 
-use crate::client::driver::{ClientOptions, ClientStats, FediacClient, RoundOutcome};
+use crate::client::core::ClientStats;
+use crate::client::driver::{ClientOptions, FediacClient, RoundOutcome};
 use crate::client::protocol;
 use crate::compress;
 use crate::util::BitVec;

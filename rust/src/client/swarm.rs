@@ -1,0 +1,799 @@
+//! The swarm multiplexer: thousands of [`ClientCore`] instances driven
+//! by ONE thread over a configurable handful of UDP sockets.
+//!
+//! This is the client-side twin of the server's single-thread reactor
+//! (`server/reactor.rs`), and the payoff of the sans-I/O split: the
+//! blocking driver burns a thread and a socket per client, which proves
+//! bit-exactness but not scale; the swarm hosts 10k+ simulated clients
+//! on ≤ 8 sockets by multiplexing every core's frames, timers and round
+//! math through one event loop —
+//!
+//! ```text
+//!   wait_readable_many(≤8 sockets) ──► recvmmsg drain ──► decode once
+//!        ▲                                   │
+//!        │                        demux: directed → one core
+//!        │                               broadcast → cores waiting on
+//!        │                                           that round
+//!   TimerWheel (1 entry/client) ◄── ClientOutput{frames,timer,progress}
+//!        │                                   │
+//!        └── on_tick → retransmit      sendmmsg bursts (per socket)
+//! ```
+//!
+//! Protocol behaviour is *identical* to the blocking driver — both
+//! drive the same [`ClientCore`] — so a swarm round is bit-exact
+//! against `algorithms::fediac` exactly like a driver round is
+//! (asserted in `tests/wire_backend.rs`). Jobs are routed to sockets
+//! round-robin; all clients of a job share one socket, so the server's
+//! per-client broadcast fan-out lands as n copies on that socket and
+//! the demux forwards each copy only to the cores still waiting on the
+//! round it belongs to (reassembly is idempotent, duplicates are
+//! harmless). Uplink chaos is injected per socket through the same
+//! [`ChaosLane`] the blocking driver's `send_loss` alias uses.
+
+use std::collections::HashMap;
+use std::net::UdpSocket;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::client::core::{ClientCore, ClientOutput, ClientStats, CoreConfig, Progress};
+use crate::client::driver::RoundOutcome;
+use crate::client::protocol;
+use crate::compress;
+use crate::net::chaos::{ChaosDirection, ChaosLane};
+use crate::net::poll::{self, RecvBatch, TimerWheel};
+use crate::telemetry::HistSummary;
+use crate::util::{BitVec, Rng};
+use crate::wire::{decode_frame, ShardPlan, DEFAULT_PAYLOAD_BUDGET, HEADER_LEN, MAX_DATAGRAM};
+
+/// Most sockets a swarm may spread its jobs over (the ISSUE target:
+/// 10k+ clients on a *handful* of sockets).
+pub const MAX_SWARM_SOCKETS: usize = 8;
+/// Datagrams drained per `recvmmsg` call and frames flushed per
+/// `sendmmsg` burst (same batch depth as the blocking driver).
+const SWARM_BATCH: usize = 32;
+/// Batches drained per socket per loop iteration before yielding to
+/// timers and the other sockets (256 datagrams — the reactor's budget).
+const RECV_BUDGET_BATCHES: usize = 8;
+/// Timer wheel shape: 10 ms × 512 slots, one entry per waiting client
+/// (the reactor uses the same granularity for its per-job timers).
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(10);
+const WHEEL_SLOTS: usize = 512;
+/// Longest readiness wait when no timer is armed (keeps the loop
+/// responsive to chaos-lane holds and shutdown even when idle).
+const IDLE_WAIT: Duration = Duration::from_millis(25);
+/// Readiness wait cap while an uplink chaos lane holds reordered
+/// frames (they must be released on time, traffic or not).
+const HOLD_WAIT: Duration = Duration::from_millis(5);
+
+/// Where a swarm job's per-round client updates come from.
+#[derive(Debug, Clone)]
+pub enum UpdateSource {
+    /// The bench-wire synthetic stream: round r of client c draws from
+    /// `Rng::new(backend_seed ^ (c << 32) ^ r)`, scaled Gaussian, with
+    /// the client's running residual folded in (Algorithm 1) — byte-for
+    /// byte the stream `fediac bench-wire` drives through the blocking
+    /// driver, so swarm and driver benches measure the same workload.
+    Synthetic,
+    /// Explicit updates, indexed `[round - 1][client]`, each of length
+    /// d, used exactly as given (no residual folding — the caller owns
+    /// the stream, as with [`crate::client::FediacClient::run_round`]).
+    Explicit(Vec<Vec<Vec<f32>>>),
+}
+
+/// One job (tenant) hosted by the swarm.
+#[derive(Debug, Clone)]
+pub struct SwarmJobPlan {
+    /// Wire job id.
+    pub job: u32,
+    /// Clients N of this job (all hosted by this swarm).
+    pub n_clients: u16,
+    /// The job's shared seed root (vote/quantise RNG streams).
+    pub backend_seed: u64,
+    /// Per-round update streams.
+    pub updates: UpdateSource,
+}
+
+/// Swarm shape: the fleet, the protocol parameters shared by every job,
+/// and the I/O budget.
+#[derive(Debug, Clone)]
+pub struct SwarmOptions {
+    /// Server address, e.g. "127.0.0.1:7177".
+    pub server: String,
+    /// The hosted jobs. Total clients = Σ `n_clients`.
+    pub jobs: Vec<SwarmJobPlan>,
+    /// Model dimension d (shared — one fleet, one model shape).
+    pub d: usize,
+    /// Voting threshold a.
+    pub threshold_a: u16,
+    /// Votes per client k (paper: 5%·d).
+    pub k: usize,
+    /// Quantisation bits b.
+    pub bits_b: usize,
+    /// Payload bytes per data frame.
+    pub payload_budget: usize,
+    /// Rounds every client executes.
+    pub rounds: usize,
+    /// UDP sockets to spread jobs over (1..= [`MAX_SWARM_SOCKETS`]).
+    pub sockets: usize,
+    /// Per-wait silence tolerated before a retransmit cycle.
+    pub timeout: Duration,
+    /// Timeouts tolerated per wait before a client fails the swarm.
+    pub max_retries: usize,
+    /// Uplink chaos (loss/dup/reorder/corrupt) applied per socket on
+    /// the way out — the swarm-side equivalent of the driver's
+    /// `send_loss`/chaos-proxy uplink. `None` = reliable uplink.
+    pub uplink_chaos: Option<ChaosDirection>,
+    /// Seed for the uplink chaos lanes (decorrelated per socket).
+    pub chaos_seed: u64,
+    /// Keep every client's [`RoundOutcome`]s for equivalence checks.
+    /// Costs memory (outcomes hold the GIA + lanes per round) — leave
+    /// off for large fleets.
+    pub collect_outcomes: bool,
+}
+
+impl SwarmOptions {
+    /// Defaults matching [`crate::client::ClientOptions::new`] where the
+    /// knobs overlap; the fleet starts empty — push [`SwarmJobPlan`]s or
+    /// use [`plan_fleet`].
+    pub fn new(server: impl Into<String>, d: usize) -> Self {
+        SwarmOptions {
+            server: server.into(),
+            jobs: Vec::new(),
+            d,
+            threshold_a: 1,
+            k: protocol::votes_per_client(d, 0.05),
+            bits_b: 12,
+            payload_budget: DEFAULT_PAYLOAD_BUDGET,
+            rounds: 1,
+            sockets: MAX_SWARM_SOCKETS,
+            timeout: Duration::from_millis(200),
+            max_retries: 50,
+            uplink_chaos: None,
+            chaos_seed: 0,
+            collect_outcomes: false,
+        }
+    }
+}
+
+/// Carve `total_clients` into bench-wire-shaped jobs: ids `1000 + j`,
+/// per-job seed `seed ^ (j << 16)`, `clients_per_job` clients each (the
+/// last job takes the remainder), synthetic update streams — the same
+/// workload `fediac bench-wire` runs through the blocking driver.
+pub fn plan_fleet(total_clients: usize, clients_per_job: u16, seed: u64) -> Vec<SwarmJobPlan> {
+    assert!(clients_per_job > 0, "clients_per_job must be > 0");
+    let per = clients_per_job as usize;
+    let mut plans = Vec::new();
+    let mut remaining = total_clients;
+    let mut j = 0u64;
+    while remaining > 0 {
+        let n = remaining.min(per) as u16;
+        plans.push(SwarmJobPlan {
+            job: 1000 + j as u32,
+            n_clients: n,
+            backend_seed: seed ^ (j << 16),
+            updates: UpdateSource::Synthetic,
+        });
+        remaining -= n as usize;
+        j += 1;
+    }
+    plans
+}
+
+/// What a completed swarm run measured.
+#[derive(Debug, Clone)]
+pub struct SwarmReport {
+    /// Clients hosted (Σ of every job's N).
+    pub clients_hosted: usize,
+    /// Jobs hosted.
+    pub jobs: usize,
+    /// Sockets actually used.
+    pub sockets_used: usize,
+    /// Client-rounds completed (clients_hosted × rounds on success).
+    pub rounds_completed: u64,
+    /// Wall-clock seconds, join through last aggregate.
+    pub wall_s: f64,
+    /// Per-client-round end-to-end latency (vote upload → aggregate
+    /// decoded), one sample per client per round — the swarm twin of
+    /// bench-wire's per-`run_round` histogram.
+    pub round_latency: HistSummary,
+    /// Folded counters of every hosted client, plus the swarm's socket
+    /// byte meters and uplink-lane drops.
+    pub stats: ClientStats,
+    /// Every client's round outcomes, indexed `[job][client][round-1]`
+    /// — only when [`SwarmOptions::collect_outcomes`] was set.
+    pub outcomes: Option<Vec<Vec<Vec<RoundOutcome>>>>,
+}
+
+/// One hosted client: its protocol core plus the round math the
+/// blocking driver's `run_round` performs between phases.
+struct SwarmClient {
+    core: ClientCore,
+    job_idx: usize,
+    sock_idx: usize,
+    cid: u16,
+    /// Round currently executing (1-based; 0 = still joining).
+    round: usize,
+    /// This round's update (residual already folded for synthetic
+    /// streams) — kept for the phase-2 quantisation.
+    update: Vec<f32>,
+    /// Residual carried across rounds (synthetic streams).
+    residual: Vec<f32>,
+    /// Phase-1 results held while phase 2 is in flight.
+    ctx: Option<RoundCtx>,
+    /// `core.stats.retransmissions` at round start (per-round delta).
+    retx_at_round_start: u64,
+    /// When this round's vote upload went out (latency sample).
+    round_started: Instant,
+    /// An entry for this client is sitting in the timer wheel.
+    armed: bool,
+    /// All rounds finished.
+    done: bool,
+    /// Collected outcomes (only with `collect_outcomes`).
+    outcomes: Vec<RoundOutcome>,
+}
+
+/// Phase-1 results a client needs to finish the round at aggregate time.
+struct RoundCtx {
+    gia: BitVec,
+    gia_indices: Vec<usize>,
+    global_max: f32,
+    scale_f: f32,
+    residual_next: Vec<f32>,
+}
+
+impl SwarmClient {
+    /// Compute this round's update and votes and start phase 1.
+    fn begin_round(&mut self, opts: &SwarmOptions, now: Instant) -> Result<ClientOutput> {
+        let plan = &opts.jobs[self.job_idx];
+        let round = self.round;
+        self.update = match &plan.updates {
+            UpdateSource::Synthetic => {
+                let seed = plan.backend_seed ^ ((self.cid as u64) << 32) ^ round as u64;
+                let mut rng = Rng::new(seed);
+                let mut update: Vec<f32> =
+                    (0..opts.d).map(|_| (rng.gaussian() * 0.01) as f32).collect();
+                for (u, r) in update.iter_mut().zip(&self.residual) {
+                    *u += *r;
+                }
+                update
+            }
+            UpdateSource::Explicit(rounds) => {
+                let per_round = rounds.get(round - 1).with_context(|| {
+                    format!("job {} has no explicit updates for round {round}", plan.job)
+                })?;
+                let u = per_round.get(self.cid as usize).with_context(|| {
+                    format!("job {} round {round} has no update for client {}", plan.job, self.cid)
+                })?;
+                anyhow::ensure!(
+                    u.len() == opts.d,
+                    "job {} round {round} client {}: update dimension {} != d {}",
+                    plan.job,
+                    round,
+                    self.cid,
+                    u.len(),
+                    opts.d
+                );
+                u.clone()
+            }
+        };
+        let votes = protocol::client_vote(
+            &self.update,
+            opts.k,
+            plan.backend_seed,
+            round,
+            self.cid as usize,
+        );
+        let local_max = compress::max_abs(&self.update);
+        self.retx_at_round_start = self.core.stats.retransmissions;
+        self.round_started = now;
+        Ok(self.core.start_vote(round as u32, &votes, local_max, now))
+    }
+
+    /// Phase 1 done: quantise against the GIA and start phase 2 —
+    /// the same math as the blocking driver's `run_round`.
+    fn on_gia(
+        &mut self,
+        opts: &SwarmOptions,
+        gia: BitVec,
+        global_max: f32,
+        now: Instant,
+    ) -> ClientOutput {
+        let plan = &opts.jobs[self.job_idx];
+        let f = compress::scale_factor(opts.bits_b, plan.n_clients as usize, global_max);
+        let (q, residual_next) = protocol::client_quantize(
+            &self.update,
+            &gia.to_f32_mask(),
+            f,
+            plan.backend_seed,
+            self.round,
+            self.cid as usize,
+        );
+        let gia_indices: Vec<usize> = gia.iter_ones().collect();
+        let selected: Vec<i32> = gia_indices.iter().map(|&g| q[g]).collect();
+        self.ctx = Some(RoundCtx { gia, gia_indices, global_max, scale_f: f, residual_next });
+        self.core.start_update(self.round as u32, &selected, f, now)
+    }
+
+    /// Phase 2 done: close the round (residual carry, optional outcome
+    /// capture), advance to the next round or finish.
+    fn on_aggregate(
+        &mut self,
+        opts: &SwarmOptions,
+        lanes: Vec<i32>,
+        latency: &mut HistSummary,
+        rounds_completed: &mut u64,
+        now: Instant,
+    ) -> Result<Option<ClientOutput>> {
+        let plan = &opts.jobs[self.job_idx];
+        let ctx = self.ctx.take().expect("aggregate without a phase-1 context");
+        latency.record_micros(now.duration_since(self.round_started));
+        *rounds_completed += 1;
+        if opts.collect_outcomes {
+            let delta =
+                compress::dequantize_aggregate(&lanes, plan.n_clients as usize, ctx.scale_f);
+            self.outcomes.push(RoundOutcome {
+                gia: ctx.gia,
+                gia_indices: ctx.gia_indices,
+                global_max: ctx.global_max,
+                scale_f: ctx.scale_f,
+                aggregate: lanes,
+                delta,
+                residual: ctx.residual_next.clone(),
+                retransmissions: self.core.stats.retransmissions - self.retx_at_round_start,
+            });
+        }
+        self.residual = ctx.residual_next;
+        if self.round >= opts.rounds {
+            self.done = true;
+            return Ok(None);
+        }
+        self.round += 1;
+        self.begin_round(opts, now).map(Some)
+    }
+}
+
+/// Per-socket I/O state: connected nonblocking socket, receive batch,
+/// outgoing frame queue (with owning client, for buffer recycling) and
+/// optional uplink chaos lane.
+struct SockState {
+    socket: UdpSocket,
+    batch: RecvBatch,
+    /// Outgoing `(frame, owner client idx)` queue, flushed each loop.
+    txq: Vec<(Vec<u8>, usize)>,
+    lane: Option<ChaosLane<()>>,
+}
+
+/// Run the swarm to completion: join every client, execute every round,
+/// return the measurements. One thread, no spawns — everything happens
+/// on the caller's thread.
+pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
+    // The same admission checks the blocking driver performs, once per
+    // shape instead of once per client.
+    anyhow::ensure!(!opts.jobs.is_empty(), "swarm has no jobs");
+    anyhow::ensure!(
+        (1..=MAX_SWARM_SOCKETS).contains(&opts.sockets),
+        "sockets must be in [1, {MAX_SWARM_SOCKETS}]"
+    );
+    anyhow::ensure!(opts.rounds > 0, "rounds must be > 0");
+    anyhow::ensure!(
+        opts.payload_budget <= u16::MAX as usize,
+        "payload_budget {} exceeds the wire maximum {}",
+        opts.payload_budget,
+        u16::MAX
+    );
+    anyhow::ensure!(opts.d <= u32::MAX as usize, "d {} exceeds the wire maximum", opts.d);
+    for plan in &opts.jobs {
+        anyhow::ensure!(plan.n_clients > 0, "job {} has no clients", plan.job);
+        anyhow::ensure!(
+            (2..=31).contains(&opts.bits_b) && (1i64 << (opts.bits_b - 1)) > plan.n_clients as i64,
+            "bits_b={} too small for N={} (job {})",
+            opts.bits_b,
+            plan.n_clients,
+            plan.job
+        );
+        make_core_config(opts, plan, 0)
+            .spec()
+            .validate()
+            .map_err(|e| anyhow::anyhow!("bad swarm options for job {}: {e}", plan.job))?;
+    }
+
+    let sockets_used = opts.sockets.min(opts.jobs.len());
+    let recv_len = (HEADER_LEN + opts.payload_budget).min(MAX_DATAGRAM);
+    let mut socks: Vec<SockState> = Vec::with_capacity(sockets_used);
+    for s in 0..sockets_used {
+        let socket = UdpSocket::bind("0.0.0.0:0").context("binding swarm socket")?;
+        socket
+            .connect(&opts.server)
+            .with_context(|| format!("connecting swarm socket to {}", opts.server))?;
+        socket.set_nonblocking(true)?;
+        // Decorrelate the lanes so co-hosted jobs don't lose the same
+        // frames in lockstep.
+        let lane = opts
+            .uplink_chaos
+            .filter(|c| !c.is_clean())
+            .map(|c| ChaosLane::new(c, opts.chaos_seed ^ ((s as u64) << 24) ^ 0x5A_4A));
+        socks.push(SockState {
+            socket,
+            batch: RecvBatch::new(SWARM_BATCH, recv_len),
+            txq: Vec::new(),
+            lane,
+        });
+    }
+
+    // Build the fleet: job j lives on socket j % sockets_used; clients
+    // are contiguous in one flat Vec, indexed by `base[job_idx] + cid`.
+    let mut clients: Vec<SwarmClient> = Vec::new();
+    // job id → (job_idx, first client idx, n_clients).
+    let mut jobs_by_id: HashMap<u32, (usize, usize, u16)> = HashMap::new();
+    for (job_idx, plan) in opts.jobs.iter().enumerate() {
+        let base = clients.len();
+        anyhow::ensure!(
+            jobs_by_id.insert(plan.job, (job_idx, base, plan.n_clients)).is_none(),
+            "duplicate job id {}",
+            plan.job
+        );
+        for cid in 0..plan.n_clients {
+            clients.push(SwarmClient {
+                core: ClientCore::new(make_core_config(opts, plan, cid)),
+                job_idx,
+                sock_idx: job_idx % sockets_used,
+                cid,
+                round: 0,
+                update: Vec::new(),
+                residual: vec![0.0f32; opts.d],
+                ctx: None,
+                retx_at_round_start: 0,
+                round_started: Instant::now(),
+                armed: false,
+                done: false,
+                outcomes: Vec::new(),
+            });
+        }
+    }
+    let n_clients = clients.len();
+    crate::info!(
+        "swarm: {} clients across {} jobs on {} sockets, {} rounds",
+        n_clients,
+        opts.jobs.len(),
+        sockets_used,
+        opts.rounds
+    );
+
+    let started = Instant::now();
+    let mut wheel: TimerWheel<usize> = TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS, started);
+    let mut latency = HistSummary::default();
+    let mut rounds_completed = 0u64;
+    let mut io_bytes_received = 0u64;
+    let mut io_bytes_sent = 0u64;
+    let mut remaining = n_clients;
+
+    // Kick every client's join.
+    for idx in 0..n_clients {
+        let out = clients[idx].core.start_join(started);
+        process_output(
+            idx,
+            out,
+            opts,
+            &mut clients,
+            &mut socks,
+            &mut wheel,
+            &mut latency,
+            &mut rounds_completed,
+            &mut remaining,
+            started,
+        )?;
+    }
+    flush_tx(&mut socks, &mut clients, &mut io_bytes_sent);
+
+    let mut ready: Vec<usize> = Vec::with_capacity(sockets_used);
+    while remaining > 0 {
+        let now = Instant::now();
+
+        // 1. Fire due client timers (retransmit cycles / failures).
+        for idx in wheel.pop_due(now) {
+            clients[idx].armed = false;
+            if clients[idx].done || clients[idx].core.is_failed() {
+                continue; // stale entry of a finished client
+            }
+            let out = clients[idx].core.on_tick(now);
+            process_output(
+                idx,
+                out,
+                opts,
+                &mut clients,
+                &mut socks,
+                &mut wheel,
+                &mut latency,
+                &mut rounds_completed,
+                &mut remaining,
+                now,
+            )?;
+        }
+
+        // 2. Release chaos-lane holds whose deadline passed.
+        for s in 0..socks.len() {
+            if socks[s].lane.as_ref().is_some_and(|l| l.held_len() > 0) {
+                let released = socks[s].lane.as_mut().expect("held implies lane").flush_due(now);
+                send_wire(&socks[s].socket, released, &mut io_bytes_sent);
+            }
+        }
+
+        // 3. Drain readable sockets and demux into the cores.
+        for s in 0..socks.len() {
+            drain_socket(
+                s,
+                opts,
+                &mut clients,
+                &mut socks,
+                &jobs_by_id,
+                &mut wheel,
+                &mut latency,
+                &mut rounds_completed,
+                &mut remaining,
+                &mut io_bytes_received,
+            )?;
+        }
+
+        // 4. Flush everything the cores emitted this iteration.
+        flush_tx(&mut socks, &mut clients, &mut io_bytes_sent);
+        if remaining == 0 {
+            break;
+        }
+
+        // 5. Sleep until traffic, the next timer, or a lane hold.
+        let now = Instant::now();
+        let mut wait = wheel
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(now))
+            .unwrap_or(IDLE_WAIT)
+            .min(IDLE_WAIT);
+        if socks.iter().any(|s| s.lane.as_ref().is_some_and(|l| l.held_len() > 0)) {
+            wait = wait.min(HOLD_WAIT);
+        }
+        let refs: Vec<&UdpSocket> = socks.iter().map(|s| &s.socket).collect();
+        poll::wait_readable_many(&refs, Some(wait), &mut ready).context("swarm readiness wait")?;
+    }
+
+    let wall_s = started.elapsed().as_secs_f64().max(f64::EPSILON);
+    let mut stats = ClientStats::default();
+    for c in &clients {
+        stats.add(&c.core.stats);
+    }
+    stats.bytes_sent = io_bytes_sent;
+    stats.bytes_received = io_bytes_received;
+    stats.dropped_sends = socks
+        .iter()
+        .filter_map(|s| s.lane.as_ref())
+        .map(|l| l.stats().dropped.load(Ordering::Relaxed))
+        .sum();
+    let outcomes = opts.collect_outcomes.then(|| {
+        let mut per_job: Vec<Vec<Vec<RoundOutcome>>> =
+            opts.jobs.iter().map(|p| Vec::with_capacity(p.n_clients as usize)).collect();
+        for c in clients {
+            per_job[c.job_idx].push(c.outcomes);
+        }
+        per_job
+    });
+    Ok(SwarmReport {
+        clients_hosted: n_clients,
+        jobs: opts.jobs.len(),
+        sockets_used,
+        rounds_completed,
+        wall_s,
+        round_latency: latency,
+        stats,
+        outcomes,
+    })
+}
+
+/// The core config for one hosted client.
+fn make_core_config(opts: &SwarmOptions, plan: &SwarmJobPlan, cid: u16) -> CoreConfig {
+    CoreConfig {
+        job: plan.job,
+        client_id: cid,
+        n_clients: plan.n_clients,
+        d: opts.d,
+        threshold_a: opts.threshold_a,
+        payload_budget: opts.payload_budget,
+        timeout: opts.timeout,
+        max_retries: opts.max_retries,
+        shard: ShardPlan::single(),
+    }
+}
+
+/// Drain one socket's receive queue (bounded) and feed every datagram
+/// to the cores it concerns: directed frames to their addressed client,
+/// broadcast copies to every client of the job still waiting on that
+/// round (decode happens ONCE per datagram, not per client).
+#[allow(clippy::too_many_arguments)]
+fn drain_socket(
+    s: usize,
+    opts: &SwarmOptions,
+    clients: &mut [SwarmClient],
+    socks: &mut [SockState],
+    jobs_by_id: &HashMap<u32, (usize, usize, u16)>,
+    wheel: &mut TimerWheel<usize>,
+    latency: &mut HistSummary,
+    rounds_completed: &mut u64,
+    remaining: &mut usize,
+    io_bytes_received: &mut u64,
+) -> Result<()> {
+    // Indices to deliver to, computed per datagram (tiny: 1 for a
+    // directed frame, the waiting subset of one job for a broadcast).
+    let mut targets: Vec<usize> = Vec::new();
+    // Payload copy per datagram — the batch buffer can't stay borrowed
+    // while the cores (behind `&mut clients`) consume the frame.
+    let mut payload_buf: Vec<u8> = Vec::new();
+    for _ in 0..RECV_BUDGET_BATCHES {
+        let got = {
+            let st = &mut socks[s];
+            match poll::recv_batch(&st.socket, &mut st.batch) {
+                Ok(0) => return Ok(()),
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                // Connected UDP sockets surface ICMP errors on reads;
+                // skip and let retransmission recover.
+                Err(_) => return Ok(()),
+            }
+        };
+        let now = Instant::now();
+        for i in 0..got {
+            targets.clear();
+            let h = {
+                let (bytes, _) = socks[s].batch.datagram(i);
+                *io_bytes_received += bytes.len() as u64;
+                let Ok(frame) = decode_frame(bytes) else { continue };
+                let h = frame.header;
+                let Some(&(_, base, n)) = jobs_by_id.get(&h.job) else { continue };
+                if h.client != u16::MAX {
+                    // Directed (JoinAck / NotReady): exactly one owner.
+                    if h.client < n {
+                        targets.push(base + h.client as usize);
+                    }
+                } else {
+                    // Broadcast copy: every client of the job still
+                    // waiting on this round can use it (the rest would
+                    // ignore or re-stash a duplicate anyway).
+                    for idx in base..base + n as usize {
+                        if clients[idx].core.waiting_round() == Some(h.round) {
+                            targets.push(idx);
+                        }
+                    }
+                }
+                payload_buf.clear();
+                payload_buf.extend_from_slice(frame.payload);
+                h
+            };
+            for &idx in &targets {
+                let out = clients[idx].core.handle_frame(&h, &payload_buf, now);
+                process_output(
+                    idx,
+                    out,
+                    opts,
+                    clients,
+                    socks,
+                    wheel,
+                    latency,
+                    rounds_completed,
+                    remaining,
+                    now,
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Act on one [`ClientOutput`]: queue its frames on the owner's socket,
+/// keep the one-entry-per-client timer invariant, and chase progress
+/// events through the round state machine (a progress usually starts
+/// the next phase, which yields another output — loop until quiet).
+#[allow(clippy::too_many_arguments)]
+fn process_output(
+    idx: usize,
+    mut out: ClientOutput,
+    opts: &SwarmOptions,
+    clients: &mut [SwarmClient],
+    socks: &mut [SockState],
+    wheel: &mut TimerWheel<usize>,
+    latency: &mut HistSummary,
+    rounds_completed: &mut u64,
+    remaining: &mut usize,
+    now: Instant,
+) -> Result<()> {
+    loop {
+        let sock_idx = clients[idx].sock_idx;
+        for f in out.frames.drain(..) {
+            socks[sock_idx].txq.push((f, idx));
+        }
+        if let Some(deadline) = out.timer {
+            // One wheel entry per client, ever: a stale (early) entry
+            // re-arms itself via `on_tick`, so a second insert would
+            // only multiply wakeups.
+            if !clients[idx].armed {
+                wheel.insert(deadline, idx);
+                clients[idx].armed = true;
+            }
+        }
+        let Some(progress) = out.progress.take() else { return Ok(()) };
+        let c = &mut clients[idx];
+        out = match progress {
+            Progress::Joined => {
+                c.round = 1;
+                c.begin_round(opts, now)?
+            }
+            Progress::GiaReady { gia, global_max, .. } => c.on_gia(opts, gia, global_max, now),
+            Progress::AggregateReady { lanes, .. } => {
+                match c.on_aggregate(opts, lanes, latency, rounds_completed, now)? {
+                    Some(next) => next,
+                    None => {
+                        *remaining -= 1;
+                        return Ok(());
+                    }
+                }
+            }
+            Progress::Failed { reason } => {
+                let plan = &opts.jobs[c.job_idx];
+                bail!("swarm client {} of job {}: {reason}", c.cid, plan.job);
+            }
+        };
+    }
+}
+
+/// Flush every socket's outgoing queue: uplink chaos verdicts per frame
+/// (in emission order), `sendmmsg` bursts, buffers recycled to their
+/// owning core.
+fn flush_tx(socks: &mut [SockState], clients: &mut [SwarmClient], io_bytes_sent: &mut u64) {
+    for st in socks.iter_mut() {
+        if st.txq.is_empty() {
+            continue;
+        }
+        let txq = std::mem::take(&mut st.txq);
+        if let Some(lane) = st.lane.as_mut() {
+            let now = Instant::now();
+            let mut wire: Vec<(Vec<u8>, ())> = Vec::with_capacity(txq.len());
+            for (f, _) in &txq {
+                wire.extend(lane.process(f, (), now));
+            }
+            send_wire(&st.socket, wire, io_bytes_sent);
+        } else {
+            let mut start = 0usize;
+            let refs: Vec<&[u8]> = txq.iter().map(|(f, _)| f.as_slice()).collect();
+            while start < refs.len() {
+                let burst = &refs[start..(start + SWARM_BATCH).min(refs.len())];
+                match poll::send_batch_connected(&st.socket, burst) {
+                    Ok(sent) => {
+                        for b in &burst[..sent] {
+                            *io_bytes_sent += b.len() as u64;
+                        }
+                        start += if sent < burst.len() { sent + 1 } else { burst.len() };
+                    }
+                    Err(_) => start += 1,
+                }
+            }
+        }
+        for (f, owner) in txq {
+            clients[owner].core.recycle(f);
+        }
+    }
+}
+
+/// Send chaos-lane output (owned copies — they recycle nowhere).
+fn send_wire(socket: &UdpSocket, wire: Vec<(Vec<u8>, ())>, io_bytes_sent: &mut u64) {
+    let refs: Vec<&[u8]> = wire.iter().map(|(f, ())| f.as_slice()).collect();
+    let mut start = 0usize;
+    while start < refs.len() {
+        let burst = &refs[start..(start + SWARM_BATCH).min(refs.len())];
+        match poll::send_batch_connected(socket, burst) {
+            Ok(sent) => {
+                for b in &burst[..sent] {
+                    *io_bytes_sent += b.len() as u64;
+                }
+                start += if sent < burst.len() { sent + 1 } else { burst.len() };
+            }
+            Err(_) => start += 1,
+        }
+    }
+}

@@ -22,7 +22,8 @@
 //! fediac bench-wire [--smoke] [--jobs 4] [--rounds 3] [--clients 2]
 //!               [--d 4096] [--payload 1408] [--io both|threaded|reactor]
 //!               [--ps high|low] [--memory BYTES] [--seed 7]
-//!               [--shards N] [--out BENCH_WIRE.json]
+//!               [--shards N] [--swarm] [--swarm-sockets 8]
+//!               [--out BENCH_WIRE.json]
 //! fediac bench-codec [--smoke] [--d 1048576] [--iters 40] [--density 0.05]
 //!               [--payload 1408] [--seed 7] [--out BENCH_CODEC.json]
 //! fediac client [--server host:port | --shards host:p0,host:p1,…]
@@ -31,6 +32,10 @@
 //!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
 //!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
 //!               [--chaos-corrupt 0.0] [--chaos-seed 1]
+//! fediac swarm  [--server host:port] [--clients 10000] [--clients-per-job 64]
+//!               [--sockets 8] [--rounds 1] [--d 1024] [--a 3] [--b 12]
+//!               [--k-frac 0.05] [--payload 1408] [--timeout-ms 200]
+//!               [--max-retries 50] [--seed 7] [--json PATH]
 //! fediac chaos  [--listen 127.0.0.1:7178] [--upstream 127.0.0.1:7177]
 //!               [--seed 1] [--up-drop 0.0] [--up-dup 0.0] [--up-reorder 0.0]
 //!               [--up-corrupt 0.0] [--up-depth 4] [--up-hold-ms 40]
@@ -522,6 +527,10 @@ fn cmd_bench_wire(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown --io '{io}' (both|threaded|reactor)"))?;
         opts.backends = vec![backend];
     }
+    // --swarm: also measure the single-thread swarm multiplexer hosting
+    // the same fleet (reactor daemon, ≤ --swarm-sockets sockets).
+    opts.swarm = args.get_flag("swarm");
+    opts.swarm_sockets = args.get_usize("swarm-sockets", opts.swarm_sockets)?;
     let out_path = args.get_str("out", "BENCH_WIRE.json");
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -704,21 +713,92 @@ fn cmd_client(args: &Args) -> Result<()> {
     let s = client.stats();
     fediac::info!(
         "job={job} client {client_id} done: retx={} dropped={} polls={} rejoins={} \
-         resets={} vote_p99_us={} update_p99_us={}",
+         resets={} pending_dropped={} vote_p99_us={} update_p99_us={}",
         s.retransmissions,
         s.dropped_sends,
         s.polls,
         s.rejoins,
         s.stream_resets,
+        s.pending_dropped,
         s.vote_rtt_us.quantile(0.99),
         s.update_rtt_us.quantile(0.99)
     );
     Ok(())
 }
 
+/// Host a fleet of simulated clients on ONE thread over a handful of
+/// sockets (the swarm multiplexer) against a running aggregation server.
+fn cmd_swarm(args: &Args) -> Result<()> {
+    use fediac::client::swarm::{self, SwarmOptions};
+
+    let server = args.get_str("server", "127.0.0.1:7177");
+    let clients = args.get_usize("clients", 10_000)?;
+    let per_job = args.get_u16("clients-per-job", 64)?;
+    let d = args.get_usize("d", 1024)?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut opts = SwarmOptions::new(server, d);
+    opts.rounds = args.get_usize("rounds", 1)?;
+    opts.sockets = args.get_usize("sockets", swarm::MAX_SWARM_SOCKETS)?;
+    opts.threshold_a = args.get_u16("a", 3)?;
+    opts.bits_b = args.get_usize("b", opts.bits_b)?;
+    opts.k = fediac::client::protocol::votes_per_client(d, args.get_f64("k-frac", 0.05)?);
+    opts.payload_budget = args.get_usize("payload", opts.payload_budget)?;
+    opts.timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 200)?);
+    opts.max_retries = args.get_usize("max-retries", 50)?;
+    opts.jobs = swarm::plan_fleet(clients, per_job, seed);
+    let json_out = args.get_opt_str("json");
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let report = swarm::run(&opts)?;
+    let s = &report.stats;
+    println!(
+        "# fediac swarm: {} clients / {} jobs / {} sockets / {} rounds\n\
+         wall_s\tclient_rounds\trounds/s\tretx\tpending_drop\tp50_us\tp99_us\tmax_us\n\
+         {:.3}\t{}\t{:.1}\t{}\t{}\t{}\t{}\t{}",
+        report.clients_hosted,
+        report.jobs,
+        report.sockets_used,
+        opts.rounds,
+        report.wall_s,
+        report.rounds_completed,
+        report.rounds_completed as f64 / report.wall_s,
+        s.retransmissions,
+        s.pending_dropped,
+        report.round_latency.quantile(0.50),
+        report.round_latency.quantile(0.99),
+        report.round_latency.max
+    );
+    if let Some(path) = json_out {
+        let h = &report.round_latency;
+        let json = format!(
+            "{{\"clients_hosted\": {}, \"jobs\": {}, \"sockets\": {}, \"rounds\": {}, \
+             \"wall_s\": {:.6}, \"client_rounds\": {}, \"rounds_per_s\": {:.3}, \
+             \"retransmissions\": {}, \"pending_dropped\": {}, \
+             \"round_latency_us\": {{\"count\": {}, \"p50\": {}, \"p90\": {}, \"p99\": {}, \
+             \"max\": {}}}}}\n",
+            report.clients_hosted,
+            report.jobs,
+            report.sockets_used,
+            opts.rounds,
+            report.wall_s,
+            report.rounds_completed,
+            report.rounds_completed as f64 / report.wall_s,
+            s.retransmissions,
+            s.pending_dropped,
+            h.count(),
+            h.quantile(0.50),
+            h.quantile(0.90),
+            h.quantile(0.99),
+            h.max
+        );
+        save(&path, &json)?;
+    }
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
-        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|chaos|\
+        "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|swarm|chaos|\
          bench-wire|bench-codec> [options]\n\
          see README.md for the option reference"
     );
@@ -737,6 +817,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("shard-serve") => cmd_shard_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("swarm") => cmd_swarm(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("bench-wire") => cmd_bench_wire(&args),
         Some("bench-codec") => cmd_bench_codec(&args),

@@ -28,32 +28,30 @@ use std::io;
 use std::net::{SocketAddr, UdpSocket};
 use std::time::{Duration, Instant};
 
-/// Wait until `socket` is readable or `timeout` elapses. `None` blocks
-/// indefinitely. Returns `Ok(true)` when the socket has an event pending
-/// (data, or an error condition a subsequent `recv_from` will surface)
-/// and `Ok(false)` on timeout. `EINTR` is retried internally.
+// Hand-declared poll(2): the offline build has no libc crate. The
+// layout matches POSIX `struct pollfd`; `nfds_t` is C `unsigned
+// long`, which is `usize` on every Unix Rust targets.
 #[cfg(unix)]
-pub fn wait_readable(socket: &UdpSocket, timeout: Option<Duration>) -> io::Result<bool> {
-    use std::os::unix::io::AsRawFd;
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+#[cfg(unix)]
+const POLLIN: i16 = 0x001;
+#[cfg(unix)]
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
+}
 
-    // Hand-declared poll(2): the offline build has no libc crate. The
-    // layout matches POSIX `struct pollfd`; `nfds_t` is C `unsigned
-    // long`, which is `usize` on every Unix Rust targets.
-    #[repr(C)]
-    struct PollFd {
-        fd: i32,
-        events: i16,
-        revents: i16,
-    }
-    const POLLIN: i16 = 0x001;
-    extern "C" {
-        fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
-    }
-
-    let ms: i32 = match timeout {
+/// Clamp a `wait_readable` timeout to poll(2)'s millisecond int: `None`
+/// blocks (-1); a nonzero sub-millisecond wait rounds up so it is a
+/// real wait, not a busy spin.
+#[cfg(unix)]
+fn poll_timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
         None => -1,
-        // poll's timeout is an int of milliseconds; round a nonzero
-        // sub-millisecond wait up so it is a real wait, not a busy spin.
         Some(d) => {
             let ms = d.as_millis().min(i32::MAX as u128) as i32;
             if ms == 0 && !d.is_zero() {
@@ -62,7 +60,18 @@ pub fn wait_readable(socket: &UdpSocket, timeout: Option<Duration>) -> io::Resul
                 ms
             }
         }
-    };
+    }
+}
+
+/// Wait until `socket` is readable or `timeout` elapses. `None` blocks
+/// indefinitely. Returns `Ok(true)` when the socket has an event pending
+/// (data, or an error condition a subsequent `recv_from` will surface)
+/// and `Ok(false)` on timeout. `EINTR` is retried internally.
+#[cfg(unix)]
+pub fn wait_readable(socket: &UdpSocket, timeout: Option<Duration>) -> io::Result<bool> {
+    use std::os::unix::io::AsRawFd;
+
+    let ms = poll_timeout_ms(timeout);
     let mut pfd = PollFd { fd: socket.as_raw_fd(), events: POLLIN, revents: 0 };
     loop {
         let rc = unsafe { poll(&mut pfd as *mut PollFd, 1, ms) };
@@ -80,6 +89,48 @@ pub fn wait_readable(socket: &UdpSocket, timeout: Option<Duration>) -> io::Resul
     }
 }
 
+/// Wait until any of `sockets` is readable or `timeout` elapses — the
+/// multi-socket sibling of [`wait_readable`], one `poll(2)` call over
+/// the whole descriptor set (the client-side swarm multiplexer blocks
+/// here across its handful of sockets). Indices of the sockets with an
+/// event pending (data or an error condition the next recv will
+/// surface) are appended to `ready` (cleared first); returns how many.
+/// `EINTR` is retried internally.
+#[cfg(unix)]
+pub fn wait_readable_many(
+    sockets: &[&UdpSocket],
+    timeout: Option<Duration>,
+    ready: &mut Vec<usize>,
+) -> io::Result<usize> {
+    use std::os::unix::io::AsRawFd;
+
+    ready.clear();
+    if sockets.is_empty() {
+        return Ok(0);
+    }
+    let ms = poll_timeout_ms(timeout);
+    let mut pfds: Vec<PollFd> = sockets
+        .iter()
+        .map(|s| PollFd { fd: s.as_raw_fd(), events: POLLIN, revents: 0 })
+        .collect();
+    loop {
+        let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len(), ms) };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(e);
+        }
+        for (i, p) in pfds.iter().enumerate() {
+            if p.revents != 0 {
+                ready.push(i);
+            }
+        }
+        return Ok(ready.len());
+    }
+}
+
 /// Portability fallback: a bounded sleep standing in for readiness. The
 /// reactor's socket is nonblocking, so waking without data is harmless
 /// (`recv_from` returns `WouldBlock`); the cap keeps timer latency sane.
@@ -88,6 +139,22 @@ pub fn wait_readable(_socket: &UdpSocket, timeout: Option<Duration>) -> io::Resu
     const CAP: Duration = Duration::from_millis(5);
     std::thread::sleep(timeout.unwrap_or(CAP).min(CAP));
     Ok(true)
+}
+
+/// Portability fallback for the multi-socket wait: a bounded sleep that
+/// reports every socket ready — callers' sockets are nonblocking, so a
+/// spurious wake just reads `WouldBlock` on each (see [`wait_readable`]).
+#[cfg(not(unix))]
+pub fn wait_readable_many(
+    sockets: &[&UdpSocket],
+    timeout: Option<Duration>,
+    ready: &mut Vec<usize>,
+) -> io::Result<usize> {
+    const CAP: Duration = Duration::from_millis(5);
+    ready.clear();
+    std::thread::sleep(timeout.unwrap_or(CAP).min(CAP));
+    ready.extend(0..sockets.len());
+    Ok(ready.len())
 }
 
 /// A coarse hashed timer wheel: `n_slots` buckets of `granularity` each.
@@ -690,6 +757,40 @@ mod tests {
         want.sort();
         assert_eq!(got, want);
         assert_eq!(send_batch_connected(&tx, &[]).unwrap(), 0);
+    }
+
+    #[test]
+    fn wait_readable_many_reports_the_ready_subset() {
+        let a = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let b = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let mut ready = Vec::new();
+        // Empty socket set: trivially nothing ready.
+        assert_eq!(wait_readable_many(&[], Some(Duration::from_millis(1)), &mut ready).unwrap(), 0);
+        // Both sockets idle: a bounded wait reports none ready (on Unix;
+        // the portable fallback deliberately reports all).
+        let n =
+            wait_readable_many(&[&a, &b], Some(Duration::from_millis(20)), &mut ready).unwrap();
+        #[cfg(unix)]
+        assert_eq!((n, ready.len()), (0, 0));
+        #[cfg(not(unix))]
+        let _ = n;
+
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        tx.send_to(b"x", b.local_addr().unwrap()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let n = wait_readable_many(&[&a, &b], Some(Duration::from_millis(50)), &mut ready)
+                .unwrap();
+            if n > 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "datagram never surfaced");
+        }
+        #[cfg(unix)]
+        assert_eq!(ready, vec![1], "wrong socket reported ready");
+        let mut buf = [0u8; 8];
+        let (n, _) = b.recv_from(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"x");
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Table-driven tests of the sans-I/O [`ClientCore`] state machine:
+//! frame scripts fed straight into `ClientCore::handle` with a
+//! **scripted clock** — no sockets, no threads, no sleeps — mirroring
+//! `tests/job_machine.rs` on the server side. Locks in the
+//! chaos-matrix-proven client behaviours: join-ack races, mid-phase
+//! re-join, GIA stream resets, retransmit budget exhaustion, the
+//! empty-consensus round and the bounded pending stash.
+
+use std::time::{Duration, Instant};
+
+use fediac::client::{ClientCore, ClientOutput, CoreConfig, Progress};
+use fediac::compress::golomb;
+use fediac::server::{JOIN_OK, JOIN_UNKNOWN_JOB};
+use fediac::util::BitVec;
+use fediac::wire::{
+    byte_chunks, decode_frame, encode_frame, encode_lanes, Header, ShardPlan, WireKind,
+};
+
+const JOB: u32 = 9;
+const TIMEOUT: Duration = Duration::from_millis(100);
+
+fn mk_core(d: usize, payload_budget: usize, max_retries: usize) -> ClientCore {
+    ClientCore::new(CoreConfig {
+        job: JOB,
+        client_id: 0,
+        n_clients: 2,
+        d,
+        threshold_a: 1,
+        payload_budget,
+        timeout: TIMEOUT,
+        max_retries,
+        shard: ShardPlan::single(),
+    })
+}
+
+fn join_ack(job: u32, client: u16, status: u32) -> Vec<u8> {
+    encode_frame(&Header::control(WireKind::JoinAck, job, client, 0, status), &[])
+}
+
+/// The server's broadcast chunks for an opaque byte stream.
+fn bcast_frames(
+    kind: WireKind,
+    round: u32,
+    bytes: &[u8],
+    aux: u32,
+    budget: usize,
+) -> Vec<Vec<u8>> {
+    let chunks = byte_chunks(bytes, budget);
+    let n_blocks = chunks.len() as u32;
+    chunks
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            encode_frame(
+                &Header {
+                    kind,
+                    client: u16::MAX,
+                    job: JOB,
+                    round,
+                    block: i as u32,
+                    n_blocks,
+                    elems: c.len() as u32,
+                    aux,
+                },
+                c,
+            )
+        })
+        .collect()
+}
+
+fn gia_frames(round: u32, gia: &BitVec, global_max: f32, budget: usize) -> Vec<Vec<u8>> {
+    bcast_frames(WireKind::Gia, round, &golomb::encode(gia), global_max.to_bits(), budget)
+}
+
+fn agg_frames(round: u32, lanes: &[i32], budget: usize) -> Vec<Vec<u8>> {
+    bcast_frames(WireKind::Aggregate, round, &encode_lanes(lanes), lanes.len() as u32, budget)
+}
+
+/// The kinds of an output's emitted frames, in order.
+fn kinds(out: &ClientOutput) -> Vec<WireKind> {
+    out.frames.iter().map(|f| decode_frame(f).expect("emitted frame decodes").header.kind).collect()
+}
+
+/// Join a fresh core at `now` (one ack, no races).
+fn joined(core: &mut ClientCore, now: Instant) {
+    let out = core.start_join(now);
+    assert_eq!(kinds(&out), [WireKind::Join]);
+    let out = core.handle(&join_ack(JOB, 0, JOIN_OK), now);
+    assert!(matches!(out.progress, Some(Progress::Joined)));
+    assert!(out.timer.is_none(), "join ack disarms the timer");
+    assert!(core.is_joined());
+}
+
+/// Drive a full clean vote phase for `round` and return the decoded GIA.
+fn vote_to_gia(core: &mut ClientCore, round: u32, gia: &BitVec, budget: usize, now: Instant) {
+    let votes = BitVec::from_indices(gia.len(), &[0]);
+    let out = core.start_vote(round, &votes, 1.0, now);
+    assert!(kinds(&out).iter().all(|k| *k == WireKind::Vote));
+    assert_eq!(core.waiting_round(), Some(round));
+    let frames = gia_frames(round, gia, 2.0, budget);
+    let (last, head) = frames.split_last().expect("at least one GIA chunk");
+    for f in head {
+        let out = core.handle(f, now);
+        assert!(out.progress.is_none(), "incomplete stream must not complete");
+    }
+    let out = core.handle(last, now);
+    match out.progress {
+        Some(Progress::GiaReady { round: r, gia: got, global_max }) => {
+            assert_eq!(r, round);
+            assert_eq!(&got, gia);
+            assert_eq!(global_max, 2.0);
+        }
+        other => panic!("expected GiaReady, got {other:?}"),
+    }
+    assert!(out.timer.is_none(), "completed wait disarms the timer");
+    assert_eq!(core.waiting_round(), None);
+}
+
+#[test]
+fn join_ack_races_are_harmless() {
+    let t0 = Instant::now();
+    let mut core = mk_core(64, 32, 3);
+    let out = core.start_join(t0);
+    assert_eq!(kinds(&out), [WireKind::Join]);
+    assert!(out.timer.is_some());
+
+    // An ack for some other job: ignored, still joining.
+    let out = core.handle(&join_ack(JOB + 1, 0, JOIN_OK), t0);
+    assert!(out.progress.is_none());
+    assert!(!core.is_joined());
+
+    // The real ack.
+    let out = core.handle(&join_ack(JOB, 0, JOIN_OK), t0);
+    assert!(matches!(out.progress, Some(Progress::Joined)));
+
+    // A duplicate ack while idle: no progress, no frames, no timer.
+    let out = core.handle(&join_ack(JOB, 0, JOIN_OK), t0);
+    assert!(out.progress.is_none() && out.frames.is_empty() && out.timer.is_none());
+
+    // A duplicate ack mid-wait (the retransmitted join's second ack
+    // arriving after the first already moved us on): ignored, and the
+    // wanted broadcast still completes the phase.
+    let gia = BitVec::from_indices(64, &[3, 17]);
+    let votes = BitVec::from_indices(64, &[0]);
+    core.start_vote(1, &votes, 1.0, t0);
+    let out = core.handle(&join_ack(JOB, 0, JOIN_OK), t0);
+    assert!(out.progress.is_none() && out.frames.is_empty());
+    assert_eq!(core.waiting_round(), Some(1));
+    for f in gia_frames(1, &gia, 2.0, 32) {
+        core.handle(&f, t0);
+    }
+    assert_eq!(core.waiting_round(), None, "GIA completed the wait");
+
+    // A refused *initial* join is terminal.
+    let mut refused = mk_core(64, 32, 3);
+    refused.start_join(t0);
+    let out = refused.handle(&join_ack(JOB, 0, 3), t0);
+    match out.progress {
+        Some(Progress::Failed { reason }) => {
+            assert!(reason.contains("refused join"), "{reason}")
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert!(refused.is_failed());
+}
+
+#[test]
+fn mid_phase_rejoin_reuploads_and_completes() {
+    let t0 = Instant::now();
+    let mut core = mk_core(64, 32, 3);
+    joined(&mut core, t0);
+
+    let votes = BitVec::from_indices(64, &[0, 9]);
+    let out = core.start_vote(1, &votes, 1.0, t0);
+    let n_vote_frames = out.frames.len();
+
+    // Server evicted the job: UNKNOWN_JOB triggers an inline re-join
+    // without leaving the wait.
+    let out = core.handle(&join_ack(JOB, 0, JOIN_UNKNOWN_JOB), t0);
+    assert_eq!(kinds(&out), [WireKind::Join]);
+    assert_eq!(core.stats.rejoins, 1);
+    assert_eq!(core.waiting_round(), Some(1), "still waiting through the re-join");
+
+    // A repeated UNKNOWN_JOB while the re-join is in flight: the timer
+    // path owns the retransmit — no second join, no failure.
+    let out = core.handle(&join_ack(JOB, 0, JOIN_UNKNOWN_JOB), t0);
+    assert!(out.frames.is_empty() && out.progress.is_none());
+    assert_eq!(core.stats.rejoins, 1);
+
+    // Re-registration confirmed: the phase's upload is re-sent in full
+    // (the server may have lost the round state too).
+    let out = core.handle(&join_ack(JOB, 0, JOIN_OK), t0);
+    assert_eq!(out.frames.len(), n_vote_frames);
+    assert!(kinds(&out).iter().all(|k| *k == WireKind::Vote));
+    assert_eq!(core.stats.retransmissions, n_vote_frames as u64);
+
+    // The wanted broadcast still lands.
+    let gia = BitVec::from_indices(64, &[9]);
+    let mut done = false;
+    for f in gia_frames(1, &gia, 2.0, 32) {
+        done = core.handle(&f, t0).progress.is_some();
+    }
+    assert!(done, "GIA must complete after the re-join");
+
+    // A *refused* re-join, by contrast, is terminal.
+    let mut core = mk_core(64, 32, 3);
+    joined(&mut core, t0);
+    core.start_vote(1, &votes, 1.0, t0);
+    core.handle(&join_ack(JOB, 0, JOIN_UNKNOWN_JOB), t0);
+    let out = core.handle(&join_ack(JOB, 0, 5), t0);
+    match out.progress {
+        Some(Progress::Failed { reason }) => {
+            assert!(reason.contains("refused re-join: status 5"), "{reason}")
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+}
+
+#[test]
+fn gia_stream_reset_discards_the_stale_stream() {
+    let t0 = Instant::now();
+    // Dense GIA over d=512 at an 8-byte budget: several chunks, so a
+    // stale stream can interleave mid-reassembly.
+    let d = 512;
+    let budget = 8;
+    let mut core = mk_core(d, budget, 3);
+    joined(&mut core, t0);
+    let votes = BitVec::from_indices(d, &[0]);
+    core.start_vote(1, &votes, 1.0, t0);
+
+    let gia = BitVec::from_indices(d, &(0..d).step_by(2).collect::<Vec<_>>());
+    let real = gia_frames(1, &gia, 2.0, budget);
+    assert!(real.len() >= 2, "test needs a multi-chunk GIA stream");
+
+    // Chunk 0 of the real stream…
+    assert!(core.handle(&real[0], t0).progress.is_none());
+    // …then a stale GIA broadcast for the same round disagreeing on the
+    // aux word (a different global max — e.g. a replayed pre-restart
+    // stream): the assembler restarts rather than completing with
+    // chunks from both.
+    let stale = gia_frames(1, &gia, 9.0, budget);
+    assert!(core.handle(&stale[0], t0).progress.is_none());
+    assert_eq!(core.stats.stream_resets, 1);
+
+    // The real stream, re-delivered in full, completes with the real
+    // aux (one more reset as it displaces the stale stream).
+    let mut completed = None;
+    for f in &real {
+        if let Some(p) = core.handle(f, t0).progress {
+            completed = Some(p);
+        }
+    }
+    match completed {
+        Some(Progress::GiaReady { gia: got, global_max, .. }) => {
+            assert_eq!(got, gia);
+            assert_eq!(global_max, 2.0, "stale stream's aux must not survive");
+        }
+        other => panic!("expected GiaReady, got {other:?}"),
+    }
+    assert_eq!(core.stats.stream_resets, 2);
+}
+
+#[test]
+fn retransmit_budget_exhaustion_fails_the_wait() {
+    let t0 = Instant::now();
+    let mut core = mk_core(64, 32, 2);
+    joined(&mut core, t0);
+    let votes = BitVec::from_indices(64, &[0]);
+    let out = core.start_vote(1, &votes, 1.0, t0);
+    let n_vote_frames = out.frames.len();
+    let deadline = out.timer.expect("wait arms the timer");
+
+    // An early tick is a no-op that re-reports the live deadline.
+    let out = core.on_tick(t0 + Duration::from_millis(1));
+    assert!(out.frames.is_empty());
+    assert_eq!(out.timer, Some(deadline));
+
+    // Each due tick within budget retransmits the upload and polls.
+    for burned in 1..=2u64 {
+        let out = core.on_tick(t0 + TIMEOUT * 3 * burned as u32);
+        let ks = kinds(&out);
+        assert_eq!(ks.len(), n_vote_frames + 1);
+        assert_eq!(*ks.last().unwrap(), WireKind::Poll);
+        assert_eq!(core.stats.polls, burned);
+        assert!(out.timer.is_some());
+    }
+    // The tick past the budget is terminal.
+    let out = core.on_tick(t0 + TIMEOUT * 12);
+    match out.progress {
+        Some(Progress::Failed { reason }) => {
+            assert!(reason.contains("timed out waiting for Gia of round 1"), "{reason}")
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert!(out.timer.is_none());
+    assert!(core.is_failed());
+    // A dead core ignores everything.
+    let out = core.handle(&join_ack(JOB, 0, JOIN_OK), t0 + TIMEOUT * 13);
+    assert!(out.frames.is_empty() && out.progress.is_none() && out.timer.is_none());
+
+    // Join waits exhaust the same way.
+    let mut core = mk_core(64, 32, 1);
+    core.start_join(t0);
+    assert!(core.on_tick(t0 + TIMEOUT).progress.is_none());
+    let out = core.on_tick(t0 + TIMEOUT * 4);
+    match out.progress {
+        Some(Progress::Failed { reason }) => {
+            assert!(reason.contains("join timed out"), "{reason}")
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+}
+
+#[test]
+fn empty_consensus_round_completes_without_an_aggregate_wait() {
+    let t0 = Instant::now();
+    let d = 64;
+    let budget = 32;
+    let mut core = mk_core(d, budget, 3);
+    joined(&mut core, t0);
+
+    // No dimension reached the threshold: the GIA is all zeros and the
+    // server multicasts GIA and the empty aggregate back-to-back.
+    let gia = BitVec::zeros(d);
+    vote_to_gia(&mut core, 1, &gia, budget, t0);
+
+    // The empty aggregate lands while the caller is still between
+    // phases (Idle): it must be stashed, not dropped.
+    for f in agg_frames(1, &[], budget) {
+        let out = core.handle(&f, t0);
+        assert!(out.progress.is_none());
+    }
+
+    // start_update with zero lanes then completes from the stash
+    // immediately — no upload, no timer, no extra wait.
+    let out = core.start_update(1, &[], 1.0, t0);
+    assert!(out.frames.is_empty(), "stash-served wait must not upload");
+    assert!(out.timer.is_none());
+    match out.progress {
+        Some(Progress::AggregateReady { round, lanes }) => {
+            assert_eq!(round, 1);
+            assert!(lanes.is_empty());
+        }
+        other => panic!("expected AggregateReady, got {other:?}"),
+    }
+}
+
+#[test]
+fn pending_stash_overflow_is_counted_not_silent() {
+    let t0 = Instant::now();
+    let mut core = mk_core(64, 32, 3);
+    joined(&mut core, t0);
+    let votes = BitVec::from_indices(64, &[0]);
+    core.start_vote(1, &votes, 1.0, t0);
+
+    // A babbling server floods this round's *other*-phase broadcast
+    // with distinct blocks (dedup only skips exact duplicates). The
+    // stash holds 256 and counts the overflow.
+    let flood = 300u32;
+    for block in 0..flood {
+        let f = encode_frame(
+            &Header {
+                kind: WireKind::Aggregate,
+                client: u16::MAX,
+                job: JOB,
+                round: 1,
+                block,
+                n_blocks: flood,
+                elems: 0,
+                aux: 0,
+            },
+            &[0, 0, 0, 0],
+        );
+        let out = core.handle(&f, t0);
+        assert!(out.progress.is_none(), "sidelined frames never complete the vote wait");
+    }
+    assert_eq!(core.stats.pending_dropped, 44, "300 stashed − 256 capacity");
+
+    // Exact duplicates are skipped silently — they neither occupy the
+    // stash nor count as drops.
+    let dup = encode_frame(
+        &Header {
+            kind: WireKind::Aggregate,
+            client: u16::MAX,
+            job: JOB,
+            round: 1,
+            block: 0,
+            n_blocks: flood,
+            elems: 0,
+            aux: 0,
+        },
+        &[0, 0, 0, 0],
+    );
+    core.handle(&dup, t0);
+    assert_eq!(core.stats.pending_dropped, 44);
+}

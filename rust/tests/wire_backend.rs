@@ -4,14 +4,17 @@
 //! simulation — single-server and N=2 sharded, clean and under
 //! both-direction chaos. Plus the reactor's whole point: ≥ 64 concurrent
 //! jobs served correctly from one thread with zero per-job spawns
-//! (asserted through `ServerStats::workers_spawned`).
+//! (asserted through `ServerStats::workers_spawned`) — and its client
+//! twin, the swarm multiplexer: bit-exact against the blocking driver
+//! and the simulation, clean and under chaos, 1k clients on one thread.
 
 use std::net::SocketAddr;
 use std::time::Duration;
 
 use fediac::algorithms::{common, fediac::FediAc, Algorithm};
+use fediac::client::swarm::{SwarmJobPlan, SwarmOptions, UpdateSource};
 use fediac::client::{
-    protocol, ClientOptions, FediacClient, RoundOutcome, ShardedFediacClient,
+    protocol, swarm, ClientOptions, FediacClient, RoundOutcome, ShardedFediacClient,
 };
 use fediac::compress::{self, deduce_gia};
 use fediac::configx::{DatasetKind, ExperimentConfig, Partition, PsProfile};
@@ -302,6 +305,174 @@ fn backends_bit_exact_under_both_direction_chaos() {
         assert_eq!(handle.stats().rounds_completed as usize, ROUNDS);
         handle.shutdown();
     }
+}
+
+// ---- swarm multiplexer: bit-exactness and one-thread scale ----------------
+
+/// Swarm options mirroring `client_opts` for one explicit-update job.
+fn swarm_opts(server: String, job: u32, sim: &SimRound) -> SwarmOptions {
+    let mut opts = SwarmOptions::new(server, sim.d);
+    opts.jobs = vec![SwarmJobPlan {
+        job,
+        n_clients: N_CLIENTS as u16,
+        backend_seed: sim.seed,
+        updates: UpdateSource::Explicit(vec![sim.updates.clone()]),
+    }];
+    opts.threshold_a = sim.threshold_a;
+    opts.k = sim.k;
+    opts.bits_b = sim.bits_b;
+    opts.payload_budget = 16;
+    opts.rounds = 1;
+    opts.sockets = 2;
+    opts.timeout = Duration::from_millis(300);
+    opts.max_retries = 200;
+    opts.collect_outcomes = true;
+    opts
+}
+
+#[test]
+fn swarm_bit_exact_vs_driver_and_simulation() {
+    let sim = run_sim_round(7, 1);
+    for backend in BACKENDS {
+        // The blocking thin drivers…
+        let handle =
+            serve(&ServeOptions { io_backend: backend, ..ServeOptions::default() }).unwrap();
+        let driver_outcomes = run_clients_plain(handle.local_addr(), 601, &sim);
+        assert_matches_sim(&driver_outcomes, &sim, &format!("driver/{}", backend.name()));
+        handle.shutdown();
+
+        // …and the swarm multiplexer must produce the same round.
+        let handle =
+            serve(&ServeOptions { io_backend: backend, ..ServeOptions::default() }).unwrap();
+        let report =
+            swarm::run(&swarm_opts(handle.local_addr().to_string(), 601, &sim)).unwrap();
+        assert_eq!(report.clients_hosted, N_CLIENTS);
+        let per_client = &report.outcomes.as_ref().expect("collect_outcomes was set")[0];
+        let outcomes: Vec<RoundOutcome> =
+            per_client.iter().map(|rounds| rounds[0].clone()).collect();
+        assert_matches_sim(&outcomes, &sim, &format!("swarm/{}", backend.name()));
+        handle.shutdown();
+
+        // Driver and swarm, client by client: the two client backends
+        // are indistinguishable on the wire.
+        for (a, b) in driver_outcomes.iter().zip(&outcomes) {
+            assert_eq!(a.gia, b.gia, "driver and swarm GIAs differ");
+            assert_eq!(a.aggregate, b.aggregate, "driver and swarm aggregates differ");
+            assert_eq!(a.delta, b.delta, "driver and swarm deltas differ");
+            assert_eq!(a.residual, b.residual, "driver and swarm residuals differ");
+        }
+    }
+}
+
+#[test]
+fn swarm_bit_exact_under_both_direction_chaos() {
+    // The same chaos matrix the driver leg runs: 10% downlink drop in
+    // the daemon, 15%/10%/25% loss/dup/reorder on the swarm's uplink.
+    let d = 600;
+    let seed = 99u64;
+    let k = protocol::votes_per_client(d, 0.05);
+    const ROUNDS: usize = 3;
+    let handle = serve(&ServeOptions {
+        downlink_chaos: Some(ChaosDirection::lossy(0.10, 0.0, 0.0)),
+        chaos_seed: 11,
+        io_backend: IoBackend::Reactor,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let updates_by_round: Vec<Vec<Vec<f32>>> = (1..=ROUNDS)
+        .map(|round| (0..N_CLIENTS).map(|c| synthetic_update(seed, d, c, round)).collect())
+        .collect();
+    let mut opts = SwarmOptions::new(handle.local_addr().to_string(), d);
+    opts.jobs = vec![SwarmJobPlan {
+        job: 74,
+        n_clients: N_CLIENTS as u16,
+        backend_seed: seed,
+        updates: UpdateSource::Explicit(updates_by_round.clone()),
+    }];
+    opts.threshold_a = 2;
+    opts.k = k;
+    opts.payload_budget = 64;
+    opts.rounds = ROUNDS;
+    opts.sockets = 1;
+    opts.timeout = Duration::from_millis(150);
+    opts.max_retries = 400;
+    opts.uplink_chaos = Some(ChaosDirection::lossy(0.15, 0.10, 0.25));
+    opts.chaos_seed = 5;
+    opts.collect_outcomes = true;
+    let report = swarm::run(&opts).unwrap();
+    assert_eq!(handle.stats().rounds_completed as usize, ROUNDS);
+    handle.shutdown();
+
+    let per_client = &report.outcomes.expect("collect_outcomes was set")[0];
+    for (round, updates) in (1..=ROUNDS).zip(&updates_by_round) {
+        let (ref_idx, ref_lanes) = reference_round(updates, seed, round, k, 2);
+        for (c, rounds) in per_client.iter().enumerate() {
+            let out = &rounds[round - 1];
+            assert_eq!(
+                out.gia_indices, ref_idx,
+                "swarm client {c} round {round}: consensus diverged under chaos"
+            );
+            assert_eq!(
+                out.aggregate, ref_lanes,
+                "swarm client {c} round {round}: aggregate diverged under chaos"
+            );
+        }
+    }
+}
+
+/// Threads of this process, from /proc (Linux only).
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("/proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line")
+}
+
+#[test]
+fn swarm_hosts_1k_clients_on_one_thread() {
+    const JOBS: usize = 16;
+    const PER_JOB: u16 = 64;
+    let d = 64;
+    let handle = serve(&ServeOptions {
+        io_backend: IoBackend::Reactor,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    #[cfg(target_os = "linux")]
+    let threads_before = thread_count();
+
+    let mut opts = SwarmOptions::new(handle.local_addr().to_string(), d);
+    opts.jobs = swarm::plan_fleet(JOBS * PER_JOB as usize, PER_JOB, 5);
+    opts.threshold_a = 1;
+    opts.payload_budget = 64;
+    opts.rounds = 1;
+    opts.sockets = 8;
+    opts.timeout = Duration::from_millis(500);
+    opts.max_retries = 100;
+    let report = swarm::run(&opts).unwrap();
+
+    // The whole fleet ran on the calling thread: the process thread
+    // count is unchanged (no client threads), and the reactor daemon
+    // spawned no per-job workers either.
+    #[cfg(target_os = "linux")]
+    assert_eq!(thread_count(), threads_before, "the swarm must not spawn client threads");
+    assert_eq!(report.clients_hosted, JOBS * PER_JOB as usize);
+    assert_eq!(report.jobs, JOBS);
+    assert_eq!(report.sockets_used, 8);
+    assert_eq!(report.rounds_completed, (JOBS * PER_JOB as usize) as u64);
+    assert_eq!(
+        report.round_latency.count(),
+        (JOBS * PER_JOB as usize) as u64,
+        "one latency sample per client round"
+    );
+    let stats = handle.stats();
+    assert_eq!(stats.jobs_created as usize, JOBS);
+    assert_eq!(stats.rounds_completed as usize, JOBS);
+    assert_eq!(stats.workers_spawned, 0, "reactor spawned a worker");
+    handle.shutdown();
 }
 
 // ---- reactor scale: 64 jobs, one thread -----------------------------------
