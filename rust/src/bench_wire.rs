@@ -18,6 +18,7 @@ use anyhow::{Context, Result};
 use crate::client::swarm::{self, SwarmOptions, SwarmReport};
 use crate::client::{ClientOptions, ClientStats, FediacClient, ShardedFediacClient};
 use crate::configx::PsProfile;
+use crate::net::ChaosDirection;
 use crate::server::{serve, serve_sharded, IoBackend, ServeOptions, StatsSnapshot};
 use crate::telemetry::HistSummary;
 use crate::util::Rng;
@@ -55,6 +56,13 @@ pub struct BenchWireOptions {
     pub swarm: bool,
     /// UDP sockets the swarm leg spreads its jobs over.
     pub swarm_sockets: usize,
+    /// Downlink chaos at the daemon (`--down-*`): measure under seeded
+    /// loss/dup/reorder/corruption instead of a clean loopback. `None`
+    /// = clean (the trend-gated CI configuration).
+    pub downlink_chaos: Option<ChaosDirection>,
+    /// Seed for the chaos lanes (`--chaos-seed`; defaults to the
+    /// workload seed so one number replays workload and faults).
+    pub chaos_seed: u64,
 }
 
 impl Default for BenchWireOptions {
@@ -71,6 +79,8 @@ impl Default for BenchWireOptions {
             seed: 7,
             swarm: false,
             swarm_sockets: swarm::MAX_SWARM_SOCKETS,
+            downlink_chaos: None,
+            chaos_seed: 7,
         }
     }
 }
@@ -334,6 +344,8 @@ fn run_swarm_leg(opts: &BenchWireOptions) -> Result<SwarmLegReport> {
     let serve_opts = ServeOptions {
         profile: opts.profile.clone(),
         io_backend: IoBackend::Reactor,
+        downlink_chaos: opts.downlink_chaos,
+        chaos_seed: opts.chaos_seed,
         ..ServeOptions::default()
     };
     let handle = serve(&serve_opts).context("starting swarm-leg reactor daemon")?;
@@ -346,6 +358,7 @@ fn run_swarm_leg(opts: &BenchWireOptions) -> Result<SwarmLegReport> {
     sopts.rounds = opts.rounds;
     sopts.payload_budget = opts.payload_budget;
     sopts.sockets = opts.swarm_sockets;
+    sopts.chaos_seed = opts.chaos_seed;
     let report = swarm::run(&sopts).context("swarm bench leg")?;
     let server = handle.stats();
     handle.shutdown();
@@ -363,6 +376,8 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
     let serve_opts = ServeOptions {
         profile: opts.profile.clone(),
         io_backend: backend,
+        downlink_chaos: opts.downlink_chaos,
+        chaos_seed: opts.chaos_seed,
         ..ServeOptions::default()
     };
     // One daemon, or a collaborating shard set on consecutive sockets.

@@ -4,7 +4,10 @@
 //! described by an [`ExperimentConfig`]; presets reproduce the paper's
 //! §V-A settings and can be overridden from TOML files or CLI flags.
 
+pub mod preset;
 pub mod toml;
+
+pub use preset::{load_preset, ChaosKnobs, DeployPreset, PresetLimits, PresetMix, BUILTIN_PRESETS};
 
 use crate::configx::toml::Table;
 

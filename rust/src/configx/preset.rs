@@ -1,0 +1,630 @@
+//! Deployment presets: one TOML document describes a whole deployment
+//! scenario — shards, I/O backend, switch profile, [`JobLimits`],
+//! chaos profile and client mix — so `fediac serve|shard-serve|swarm
+//! --preset datacenter` replaces a paragraph of flags. CLI flags still
+//! win over preset values (the subcommands overlay them afterwards).
+//!
+//! Four builtin presets ship inside the binary via `include_str!`
+//! (the CrabFetch/chabeau pattern); `--preset PATH.toml` loads a
+//! user-supplied file through the same strict parser. Unlike the
+//! lenient [`ExperimentConfig`] overlay, preset parsing is *strict*:
+//! unknown keys, type mismatches and out-of-range values are errors,
+//! because presets feed the daemon's admission limits.
+//!
+//! Presets are hosting-side configuration only — nothing here is
+//! wire-visible (PROTOCOL.md §10).
+//!
+//! [`ExperimentConfig`]: crate::configx::ExperimentConfig
+//! [`JobLimits`]: crate::server::JobLimits
+
+use std::time::Duration;
+
+use crate::configx::toml::{self, Table, Value};
+use crate::configx::{ConfigError, PsProfile};
+use crate::net::ChaosDirection;
+use crate::server::JobLimits;
+
+/// Names of the presets compiled into the binary, in listing order.
+pub const BUILTIN_PRESETS: [&str; 4] = ["datacenter", "edge", "adversarial", "paper"];
+
+/// The TOML source of a builtin preset, `None` for unknown names.
+/// Exposed so the config fuzzer can mutate real preset documents.
+pub fn builtin_text(name: &str) -> Option<&'static str> {
+    Some(match name {
+        "datacenter" => include_str!("presets/datacenter.toml"),
+        "edge" => include_str!("presets/edge.toml"),
+        "adversarial" => include_str!("presets/adversarial.toml"),
+        "paper" => include_str!("presets/paper.toml"),
+        _ => return None,
+    })
+}
+
+/// One direction's packet-chaos knobs as plain preset data
+/// (mirrors [`ChaosDirection`], with the hold expressed in ms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosKnobs {
+    /// Probability a datagram is dropped.
+    pub drop: f64,
+    /// Probability a datagram is duplicated.
+    pub duplicate: f64,
+    /// Probability a datagram is held back for reordering.
+    pub reorder: f64,
+    /// Probability a datagram is bit-corrupted.
+    pub corrupt: f64,
+    /// Held-datagram queue depth for reordering.
+    pub reorder_depth: usize,
+    /// Longest a held datagram may wait, in milliseconds.
+    pub max_hold_ms: u64,
+}
+
+impl Default for ChaosKnobs {
+    fn default() -> Self {
+        let d = ChaosDirection::default();
+        ChaosKnobs {
+            drop: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            corrupt: 0.0,
+            reorder_depth: d.reorder_depth,
+            max_hold_ms: d.max_hold.as_millis() as u64,
+        }
+    }
+}
+
+impl ChaosKnobs {
+    /// True when every fault probability is zero.
+    pub fn is_clean(&self) -> bool {
+        self.direction().is_clean()
+    }
+
+    /// Convert to the runtime [`ChaosDirection`].
+    pub fn direction(&self) -> ChaosDirection {
+        ChaosDirection {
+            drop: self.drop,
+            duplicate: self.duplicate,
+            reorder: self.reorder,
+            corrupt: self.corrupt,
+            reorder_depth: self.reorder_depth,
+            max_hold: Duration::from_millis(self.max_hold_ms),
+        }
+    }
+
+    fn from_table(t: &Table, prefix: &str) -> Result<Self, ConfigError> {
+        let d = ChaosKnobs::default();
+        let knobs = ChaosKnobs {
+            drop: get_f64(t, &format!("{prefix}.drop"), d.drop)?,
+            duplicate: get_f64(t, &format!("{prefix}.duplicate"), d.duplicate)?,
+            reorder: get_f64(t, &format!("{prefix}.reorder"), d.reorder)?,
+            corrupt: get_f64(t, &format!("{prefix}.corrupt"), d.corrupt)?,
+            reorder_depth: get_usize(t, &format!("{prefix}.depth"), d.reorder_depth)?,
+            max_hold_ms: get_u64(t, &format!("{prefix}.hold_ms"), d.max_hold_ms)?,
+        };
+        for (key, p) in [
+            ("drop", knobs.drop),
+            ("duplicate", knobs.duplicate),
+            ("reorder", knobs.reorder),
+            ("corrupt", knobs.corrupt),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(ConfigError::Invalid(format!(
+                    "preset key '{prefix}.{key}' must be a probability in [0, 1], got {p}"
+                )));
+            }
+        }
+        Ok(knobs)
+    }
+}
+
+/// Per-job admission limits as plain preset data (mirrors
+/// [`JobLimits`], with the idle deadline expressed in ms).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PresetLimits {
+    /// Host bytes one job may pin across its live rounds.
+    pub host_bytes: usize,
+    /// Spilled payload bytes one phase of one round may hold.
+    pub spill_bytes: usize,
+    /// Idle-round register reclamation deadline, in milliseconds.
+    pub idle_release_ms: u64,
+    /// Full re-serves allowed per source address per round.
+    pub reserve_budget: u32,
+}
+
+impl Default for PresetLimits {
+    fn default() -> Self {
+        let d = JobLimits::default();
+        PresetLimits {
+            host_bytes: d.host_bytes,
+            spill_bytes: d.spill_bytes,
+            idle_release_ms: d.idle_release_after.as_millis() as u64,
+            reserve_budget: d.reserve_budget,
+        }
+    }
+}
+
+impl PresetLimits {
+    /// Convert to the runtime [`JobLimits`].
+    pub fn limits(&self) -> JobLimits {
+        JobLimits {
+            host_bytes: self.host_bytes,
+            spill_bytes: self.spill_bytes,
+            idle_release_after: Duration::from_millis(self.idle_release_ms),
+            reserve_budget: self.reserve_budget,
+        }
+    }
+
+    fn from_table(t: &Table) -> Result<Self, ConfigError> {
+        let d = PresetLimits::default();
+        Ok(PresetLimits {
+            host_bytes: get_usize(t, "limits.host_bytes", d.host_bytes)?,
+            spill_bytes: get_usize(t, "limits.spill_bytes", d.spill_bytes)?,
+            idle_release_ms: get_u64(t, "limits.idle_release_ms", d.idle_release_ms)?,
+            reserve_budget: u32::try_from(get_usize(
+                t,
+                "limits.reserve_budget",
+                d.reserve_budget as usize,
+            )?)
+            .map_err(|_| {
+                ConfigError::Invalid("preset key 'limits.reserve_budget' out of range".into())
+            })?,
+        })
+    }
+}
+
+/// The client-fleet shape a preset drives (used by `fediac soak` and as
+/// `fediac swarm` defaults; `serve`/`shard-serve` ignore it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PresetMix {
+    /// Concurrent tenant jobs.
+    pub jobs: usize,
+    /// Clients per job (the protocol's N).
+    pub clients_per_job: u16,
+    /// Model dimension d.
+    pub d: usize,
+    /// FediAC rounds per episode.
+    pub rounds: usize,
+    /// Per-frame payload budget in bytes.
+    pub payload: usize,
+    /// Vote fraction k/d.
+    pub k_frac: f64,
+    /// Consensus vote threshold a.
+    pub threshold_a: u16,
+    /// Quantisation bit width b.
+    pub bits_b: usize,
+    /// Client retransmission timeout, in milliseconds.
+    pub timeout_ms: u64,
+    /// Client retransmission budget per phase.
+    pub max_retries: usize,
+    /// Host the fleet on the one-thread swarm multiplexer.
+    pub swarm: bool,
+    /// Total swarm clients (split into jobs of `clients_per_job`).
+    pub swarm_clients: usize,
+    /// Sockets the swarm spreads jobs over (1..=8).
+    pub swarm_sockets: usize,
+}
+
+impl Default for PresetMix {
+    fn default() -> Self {
+        PresetMix {
+            jobs: 2,
+            clients_per_job: 3,
+            d: 4096,
+            rounds: 3,
+            payload: crate::wire::DEFAULT_PAYLOAD_BUDGET,
+            k_frac: 0.05,
+            threshold_a: 2,
+            bits_b: 12,
+            timeout_ms: 200,
+            max_retries: 50,
+            swarm: false,
+            swarm_clients: 128,
+            swarm_sockets: crate::client::swarm::MAX_SWARM_SOCKETS,
+        }
+    }
+}
+
+impl PresetMix {
+    fn from_table(t: &Table) -> Result<Self, ConfigError> {
+        let d = PresetMix::default();
+        let mix = PresetMix {
+            jobs: get_usize(t, "mix.jobs", d.jobs)?,
+            clients_per_job: get_u16(t, "mix.clients_per_job", d.clients_per_job)?,
+            d: get_usize(t, "mix.d", d.d)?,
+            rounds: get_usize(t, "mix.rounds", d.rounds)?,
+            payload: get_usize(t, "mix.payload", d.payload)?,
+            k_frac: get_f64(t, "mix.k_frac", d.k_frac)?,
+            threshold_a: get_u16(t, "mix.threshold_a", d.threshold_a)?,
+            bits_b: get_usize(t, "mix.bits_b", d.bits_b)?,
+            timeout_ms: get_u64(t, "mix.timeout_ms", d.timeout_ms)?,
+            max_retries: get_usize(t, "mix.max_retries", d.max_retries)?,
+            swarm: get_bool(t, "mix.swarm", d.swarm)?,
+            swarm_clients: get_usize(t, "mix.swarm_clients", d.swarm_clients)?,
+            swarm_sockets: get_usize(t, "mix.swarm_sockets", d.swarm_sockets)?,
+        };
+        mix.validate()?;
+        Ok(mix)
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |msg: String| Err(ConfigError::Invalid(msg));
+        if self.jobs == 0 || self.rounds == 0 || self.d == 0 {
+            return bad("preset mix: jobs, rounds and d must all be >= 1".into());
+        }
+        if self.clients_per_job == 0 {
+            return bad("preset key 'mix.clients_per_job' must be >= 1".into());
+        }
+        if self.threshold_a == 0 || self.threshold_a > self.clients_per_job {
+            return bad(format!(
+                "preset key 'mix.threshold_a' must be in [1, clients_per_job={}]",
+                self.clients_per_job
+            ));
+        }
+        if !(2..=31).contains(&self.bits_b) {
+            return bad("preset key 'mix.bits_b' must be in [2, 31]".into());
+        }
+        if !(0.0..=1.0).contains(&self.k_frac) || self.k_frac == 0.0 {
+            return bad("preset key 'mix.k_frac' must be in (0, 1]".into());
+        }
+        if !(64..=crate::wire::MAX_WIRE_PAYLOAD).contains(&self.payload) {
+            return bad(format!(
+                "preset key 'mix.payload' must be in [64, {}]",
+                crate::wire::MAX_WIRE_PAYLOAD
+            ));
+        }
+        if !(1..=crate::client::swarm::MAX_SWARM_SOCKETS).contains(&self.swarm_sockets) {
+            return bad(format!(
+                "preset key 'mix.swarm_sockets' must be in [1, {}]",
+                crate::client::swarm::MAX_SWARM_SOCKETS
+            ));
+        }
+        if self.swarm && self.swarm_clients == 0 {
+            return bad("preset key 'mix.swarm_clients' must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// A complete parsed deployment scenario. See the module docs for the
+/// TOML grammar; every field has a default, so `{}` is a valid (if
+/// boring) preset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployPreset {
+    /// Preset name (defaults to the `--preset` argument).
+    pub name: String,
+    /// One-line human description.
+    pub summary: String,
+    /// I/O backend name: `threaded` or `reactor`.
+    pub io: String,
+    /// Shard daemons to run (1 = single server).
+    pub shards: u8,
+    /// Switch profile name: `high` or `low`.
+    pub profile: String,
+    /// Register-memory override in bytes (None = profile default).
+    pub memory_bytes: Option<usize>,
+    /// Per-job admission limits.
+    pub limits: PresetLimits,
+    /// Chaos lane seed.
+    pub chaos_seed: u64,
+    /// Uplink (client → server) chaos knobs.
+    pub up: ChaosKnobs,
+    /// Downlink (server → client) chaos knobs.
+    pub down: ChaosKnobs,
+    /// Client-fleet shape for soak/swarm.
+    pub mix: PresetMix,
+}
+
+/// Every dotted key a preset document may contain; anything else is a
+/// hard error (presets feed admission limits — typos must not pass).
+const ALLOWED_KEYS: &[&str] = &[
+    "name",
+    "summary",
+    "deploy.io",
+    "deploy.shards",
+    "deploy.profile",
+    "deploy.memory",
+    "limits.host_bytes",
+    "limits.spill_bytes",
+    "limits.idle_release_ms",
+    "limits.reserve_budget",
+    "chaos.seed",
+    "chaos.up.drop",
+    "chaos.up.duplicate",
+    "chaos.up.reorder",
+    "chaos.up.corrupt",
+    "chaos.up.depth",
+    "chaos.up.hold_ms",
+    "chaos.down.drop",
+    "chaos.down.duplicate",
+    "chaos.down.reorder",
+    "chaos.down.corrupt",
+    "chaos.down.depth",
+    "chaos.down.hold_ms",
+    "mix.jobs",
+    "mix.clients_per_job",
+    "mix.d",
+    "mix.rounds",
+    "mix.payload",
+    "mix.k_frac",
+    "mix.threshold_a",
+    "mix.bits_b",
+    "mix.timeout_ms",
+    "mix.max_retries",
+    "mix.swarm",
+    "mix.swarm_clients",
+    "mix.swarm_sockets",
+];
+
+impl DeployPreset {
+    /// Parse a preset document; `name_hint` names the preset when the
+    /// document has no `name` key (and in error messages).
+    pub fn parse_str(name_hint: &str, text: &str) -> Result<Self, ConfigError> {
+        let t = toml::parse(text)?;
+        DeployPreset::from_table(name_hint, &t)
+    }
+
+    /// Build a preset from an already-parsed table, strictly: unknown
+    /// keys, type mismatches and out-of-range values are all errors.
+    pub fn from_table(name_hint: &str, t: &Table) -> Result<Self, ConfigError> {
+        for key in t.entries.keys() {
+            if !ALLOWED_KEYS.contains(&key.as_str()) {
+                return Err(ConfigError::Unknown {
+                    field: "preset key",
+                    value: key.clone(),
+                });
+            }
+        }
+        let io = get_str(t, "deploy.io", "threaded")?;
+        if crate::server::IoBackend::parse(&io).is_none() {
+            return Err(ConfigError::Invalid(format!(
+                "preset key 'deploy.io' must be threaded|reactor, got '{io}'"
+            )));
+        }
+        let profile = get_str(t, "deploy.profile", "high")?;
+        if PsProfile::parse(&profile).is_none() {
+            return Err(ConfigError::Invalid(format!(
+                "preset key 'deploy.profile' must be high|low, got '{profile}'"
+            )));
+        }
+        let shards = get_usize(t, "deploy.shards", 1)?;
+        if !(1..=16).contains(&shards) {
+            return Err(ConfigError::Invalid(format!(
+                "preset key 'deploy.shards' must be in [1, 16], got {shards}"
+            )));
+        }
+        let memory_bytes = match t.get("deploy.memory") {
+            None => None,
+            Some(_) => Some(get_usize(t, "deploy.memory", 0)?),
+        };
+        let preset = DeployPreset {
+            name: get_str(t, "name", name_hint)?,
+            summary: get_str(t, "summary", "")?,
+            io,
+            shards: shards as u8,
+            profile,
+            memory_bytes,
+            limits: PresetLimits::from_table(t)?,
+            chaos_seed: get_u64(t, "chaos.seed", 0)?,
+            up: ChaosKnobs::from_table(t, "chaos.up")?,
+            down: ChaosKnobs::from_table(t, "chaos.down")?,
+            mix: PresetMix::from_table(t)?,
+        };
+        // A sharded deployment needs every shard to own at least one
+        // vote block, or the fan-out client has idle shards.
+        let vote_blocks = preset.mix.d.div_ceil(8 * preset.mix.payload);
+        if vote_blocks < preset.shards as usize {
+            return Err(ConfigError::Invalid(format!(
+                "preset mix: d={} at payload={} yields {} vote block(s) < {} shards",
+                preset.mix.d, preset.mix.payload, vote_blocks, preset.shards
+            )));
+        }
+        Ok(preset)
+    }
+
+    /// The switch profile with any `deploy.memory` override applied.
+    pub fn ps_profile(&self) -> PsProfile {
+        // Name validity was checked in from_table.
+        let mut p = PsProfile::parse(&self.profile).unwrap_or_else(PsProfile::high);
+        if let Some(m) = self.memory_bytes {
+            p.memory_bytes = m;
+        }
+        p
+    }
+
+    /// True when neither chaos direction injects faults.
+    pub fn is_clean(&self) -> bool {
+        self.up.is_clean() && self.down.is_clean()
+    }
+}
+
+/// Resolve `--preset NAME`: a builtin name, else a TOML file path.
+pub fn load_preset(name: &str) -> Result<DeployPreset, ConfigError> {
+    if let Some(text) = builtin_text(name) {
+        return DeployPreset::parse_str(name, text);
+    }
+    if std::path::Path::new(name).is_file() {
+        let text = std::fs::read_to_string(name)?;
+        let stem = std::path::Path::new(name)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(name)
+            .to_string();
+        return DeployPreset::parse_str(&stem, &text);
+    }
+    Err(ConfigError::Invalid(format!(
+        "unknown preset '{name}' (builtins: {}; or a .toml file path)",
+        BUILTIN_PRESETS.join(", ")
+    )))
+}
+
+// ---- strict typed getters ----------------------------------------------
+//
+// `Table`'s `*_or` helpers silently fall back to the default on a type
+// mismatch, which is right for the lenient experiment overlay and wrong
+// here: a preset author who writes `shards = "2"` must hear about it.
+
+fn type_err(key: &str, want: &str, got: &Value) -> ConfigError {
+    let found = match got {
+        Value::Str(_) => "string",
+        Value::Int(_) => "integer",
+        Value::Float(_) => "float",
+        Value::Bool(_) => "bool",
+        Value::Array(_) => "array",
+    };
+    ConfigError::Invalid(format!("preset key '{key}' must be a {want}, got a {found}"))
+}
+
+fn get_str(t: &Table, key: &str, default: &str) -> Result<String, ConfigError> {
+    match t.get(key) {
+        None => Ok(default.to_string()),
+        Some(Value::Str(s)) => Ok(s.clone()),
+        Some(other) => Err(type_err(key, "string", other)),
+    }
+}
+
+fn get_f64(t: &Table, key: &str, default: f64) -> Result<f64, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| type_err(key, "number", v)),
+    }
+}
+
+fn get_i64(t: &Table, key: &str) -> Result<Option<i64>, ConfigError> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(Value::Int(i)) => Ok(Some(*i)),
+        Some(other) => Err(type_err(key, "integer", other)),
+    }
+}
+
+fn get_usize(t: &Table, key: &str, default: usize) -> Result<usize, ConfigError> {
+    match get_i64(t, key)? {
+        None => Ok(default),
+        Some(i) => usize::try_from(i).map_err(|_| {
+            ConfigError::Invalid(format!("preset key '{key}' must be a non-negative integer"))
+        }),
+    }
+}
+
+fn get_u64(t: &Table, key: &str, default: u64) -> Result<u64, ConfigError> {
+    match get_i64(t, key)? {
+        None => Ok(default),
+        Some(i) => u64::try_from(i).map_err(|_| {
+            ConfigError::Invalid(format!("preset key '{key}' must be a non-negative integer"))
+        }),
+    }
+}
+
+fn get_u16(t: &Table, key: &str, default: u16) -> Result<u16, ConfigError> {
+    match get_i64(t, key)? {
+        None => Ok(default),
+        Some(i) => u16::try_from(i).map_err(|_| {
+            ConfigError::Invalid(format!("preset key '{key}' must be in [0, 65535]"))
+        }),
+    }
+}
+
+fn get_bool(t: &Table, key: &str, default: bool) -> Result<bool, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(Value::Bool(b)) => Ok(*b),
+        Some(other) => Err(type_err(key, "bool", other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_parses_and_validates() {
+        for name in BUILTIN_PRESETS {
+            let text = builtin_text(name).expect("builtin text");
+            let p = DeployPreset::parse_str(name, text)
+                .unwrap_or_else(|e| panic!("builtin preset '{name}': {e}"));
+            assert_eq!(p.name, name, "builtin '{name}' must self-name");
+            assert!(!p.summary.is_empty(), "builtin '{name}' needs a summary");
+            // Runtime conversions must hold for every builtin.
+            let _ = p.ps_profile();
+            let _ = p.limits.limits();
+            let _ = (p.up.direction(), p.down.direction());
+        }
+    }
+
+    #[test]
+    fn builtins_cover_the_scenario_matrix() {
+        let by_name = |n: &str| load_preset(n).unwrap();
+        let dc = by_name("datacenter");
+        assert_eq!(dc.io, "reactor");
+        assert!(dc.shards >= 2, "datacenter must exercise the shard plane");
+        assert!(dc.is_clean());
+        let edge = by_name("edge");
+        assert_eq!(edge.shards, 1);
+        assert!(!edge.is_clean(), "edge must inject light chaos");
+        assert!(edge.mix.swarm, "edge hosts its fleet on the swarm");
+        let adv = by_name("adversarial");
+        assert!(adv.down.corrupt > 0.0 || adv.up.corrupt > 0.0);
+        assert!(adv.memory_bytes.unwrap() < 4096, "adversarial starves registers");
+        let paper = by_name("paper");
+        assert_eq!(paper.mix.clients_per_job, 20, "paper §V-A uses N=20");
+        assert_eq!(paper.mix.threshold_a, 3);
+        assert_eq!(paper.mix.bits_b, 12);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let err = DeployPreset::parse_str("x", "shardz = 2\n").unwrap_err();
+        assert!(err.to_string().contains("shardz"), "{err}");
+        let err = DeployPreset::parse_str("x", "[deploy]\nio = \"reactor\"\ntypo = 1\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("deploy.typo"), "{err}");
+    }
+
+    #[test]
+    fn type_and_range_mismatches_are_errors_not_defaults() {
+        let cases = [
+            "[deploy]\nshards = \"2\"\n",
+            "[deploy]\nio = 3\n",
+            "[deploy]\nio = \"uring\"\n",
+            "[deploy]\nshards = 0\n",
+            "[deploy]\nshards = 17\n",
+            "[chaos.up]\ndrop = 1.5\n",
+            "[chaos.down]\ncorrupt = -0.1\n",
+            "[mix]\nbits_b = 1\n",
+            "[mix]\nthreshold_a = 9\nclients_per_job = 4\n",
+            "[mix]\nk_frac = 0.0\n",
+            "[mix]\npayload = 7\n",
+            "[mix]\nswarm_sockets = 9\n",
+            "[limits]\nhost_bytes = -1\n",
+        ];
+        for doc in cases {
+            assert!(
+                DeployPreset::parse_str("x", doc).is_err(),
+                "expected rejection of {doc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_preset_must_give_every_shard_a_vote_block() {
+        // d=1024 at payload=1408 is a single vote block — 2 shards can't
+        // both own work, so the preset is rejected up front.
+        let doc = "[deploy]\nshards = 2\n[mix]\nd = 1024\npayload = 1408\n";
+        let err = DeployPreset::parse_str("x", doc).unwrap_err();
+        assert!(err.to_string().contains("vote block"), "{err}");
+    }
+
+    #[test]
+    fn load_preset_falls_back_to_file_paths() {
+        let err = load_preset("no-such-preset").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("datacenter"), "{msg}");
+        let dir = std::env::temp_dir().join("fediac_preset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mini.toml");
+        std::fs::write(&path, "summary = \"file preset\"\n[deploy]\nio = \"reactor\"\n")
+            .unwrap();
+        let p = load_preset(path.to_str().unwrap()).unwrap();
+        assert_eq!(p.name, "mini");
+        assert_eq!(p.io, "reactor");
+        std::fs::remove_file(&path).ok();
+    }
+}

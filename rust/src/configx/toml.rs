@@ -198,7 +198,10 @@ pub fn parse(text: &str) -> Result<Table, TomlError> {
         } else {
             format!("{section}.{key}")
         };
-        table.entries.insert(full_key, parse_scalar(value, line_no)?);
+        let parsed = parse_scalar(value, line_no)?;
+        if table.entries.insert(full_key.clone(), parsed).is_some() {
+            return Err(TomlError::Parse(line_no, format!("duplicate key '{full_key}'")));
+        }
     }
     Ok(table)
 }
@@ -260,6 +263,20 @@ mod tests {
         assert_eq!(t.usize_or("rounds", 7), 7);
         assert_eq!(t.str_or("x", "d"), "d");
         assert!(!t.bool_or("b", false));
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_with_line_context() {
+        // Same bare key twice.
+        let err = parse("a = 1\na = 2\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate key 'a'"), "{msg}");
+        // Same dotted key reached through a re-opened section.
+        let err = parse("[s]\nk = 1\n[s]\nk = 2\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 4"), "{msg}");
+        assert!(msg.contains("duplicate key 's.k'"), "{msg}");
     }
 
     #[test]

@@ -25,8 +25,53 @@ pub mod net;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod soak;
 pub mod switch;
 pub mod telemetry;
 pub mod theory;
+pub mod trendgate;
 pub mod util;
 pub mod wire;
+
+#[cfg(test)]
+mod test_registration {
+    //! Guard against silently unregistered integration tests: the crate
+    //! sets `autotests = false` (every suite is an explicit `[[test]]`
+    //! target), so a file landing in `tests/` without a manifest entry
+    //! would never compile in CI — exactly how `tests/client_machine.rs`
+    //! shipped dark for a full release cycle.
+
+    use std::collections::BTreeSet;
+    use std::path::Path;
+
+    #[test]
+    fn every_tests_file_is_a_cargo_test_target_and_vice_versa() {
+        let manifest_dir = env!("CARGO_MANIFEST_DIR");
+        let manifest =
+            std::fs::read_to_string(Path::new(manifest_dir).join("Cargo.toml")).unwrap();
+        let registered: BTreeSet<String> = manifest
+            .lines()
+            .filter_map(|l| l.trim().strip_prefix("path = "))
+            .filter_map(|v| v.trim().strip_prefix('"')?.strip_suffix('"'))
+            .filter_map(|p| p.strip_prefix("tests/"))
+            .map(|p| p.to_string())
+            .collect();
+        let on_disk: BTreeSet<String> = std::fs::read_dir(Path::new(manifest_dir).join("tests"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".rs"))
+            .collect();
+        let unregistered: Vec<&String> = on_disk.difference(&registered).collect();
+        assert!(
+            unregistered.is_empty(),
+            "tests/ files missing a [[test]] entry in Cargo.toml (they never run): \
+             {unregistered:?}"
+        );
+        let missing: Vec<&String> = registered.difference(&on_disk).collect();
+        assert!(
+            missing.is_empty(),
+            "Cargo.toml [[test]] entries with no file under tests/: {missing:?}"
+        );
+    }
+}

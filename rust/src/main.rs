@@ -10,12 +10,13 @@
 //! fediac fig3   [--ps …]
 //! fediac fig4   [--partition iid|dirichlet]
 //! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
-//! fediac serve  [--bind 0.0.0.0:7177] [--io threaded|reactor]
+//! fediac serve  [--preset datacenter|edge|adversarial|paper|FILE.toml]
+//!               [--bind 0.0.0.0:7177] [--io threaded|reactor]
 //!               [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-drop 0.0] [--down-dup 0.0]
 //!               [--down-reorder 0.0] [--down-corrupt 0.0] [--chaos-seed 0]
 //!               [--stats-every 10] [--metrics-interval 0] [--trace-dump PATH]
-//! fediac shard-serve [--bind-base 0.0.0.0:7177] [--shards 2]
+//! fediac shard-serve [--preset NAME] [--bind-base 0.0.0.0:7177] [--shards 2]
 //!               [--io threaded|reactor] [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-*…] [--chaos-seed 0]
 //!               [--stats-every 10] [--metrics-interval 0] [--trace-dump PATH]
@@ -23,6 +24,8 @@
 //!               [--d 4096] [--payload 1408] [--io both|threaded|reactor]
 //!               [--ps high|low] [--memory BYTES] [--seed 7]
 //!               [--shards N] [--swarm] [--swarm-sockets 8]
+//!               [--down-drop 0.0] [--down-dup 0.0] [--down-reorder 0.0]
+//!               [--down-corrupt 0.0] [--chaos-seed SEED]
 //!               [--out BENCH_WIRE.json]
 //! fediac bench-codec [--smoke] [--d 1048576] [--iters 40] [--density 0.05]
 //!               [--payload 1408] [--seed 7] [--out BENCH_CODEC.json]
@@ -32,10 +35,19 @@
 //!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
 //!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
 //!               [--chaos-corrupt 0.0] [--chaos-seed 1]
-//! fediac swarm  [--server host:port] [--clients 10000] [--clients-per-job 64]
+//! fediac swarm  [--preset NAME] [--server host:port] [--clients 10000]
+//!               [--clients-per-job 64]
 //!               [--sockets 8] [--rounds 1] [--d 1024] [--a 3] [--b 12]
 //!               [--k-frac 0.05] [--payload 1408] [--timeout-ms 200]
-//!               [--max-retries 50] [--seed 7] [--json PATH]
+//!               [--max-retries 50] [--seed 7]
+//!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
+//!               [--chaos-corrupt 0.0] [--chaos-seed SEED] [--json PATH]
+//! fediac soak   [--episodes 8] [--duration 300] [--seed 7]
+//!               [--episode-seed SEED] [--presets a,b,…] [--out SOAK.json]
+//! fediac trend-gate [--baseline bench_baseline.json]
+//!               [--current BENCH_WIRE.json] [--baseline-codec PATH]
+//!               [--current-codec PATH] [--tol-throughput 0.5]
+//!               [--tol-latency 4.0]
 //! fediac chaos  [--listen 127.0.0.1:7178] [--upstream 127.0.0.1:7177]
 //!               [--seed 1] [--up-drop 0.0] [--up-dup 0.0] [--up-reorder 0.0]
 //!               [--up-corrupt 0.0] [--up-depth 4] [--up-hold-ms 40]
@@ -282,19 +294,40 @@ fn cmd_theory(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Read one chaos direction's knobs from `--<prefix>-*` options.
-fn chaos_direction_from(args: &Args, prefix: &str) -> Result<fediac::net::ChaosDirection> {
-    let defaults = fediac::net::ChaosDirection::default();
+/// Read one chaos direction's knobs from `--<prefix>-*` options on top
+/// of `base` defaults (all-zero probabilities for plain CLI use, or a
+/// deployment preset's knobs so flags override the preset per field).
+fn chaos_direction_over(
+    args: &Args,
+    prefix: &str,
+    base: fediac::net::ChaosDirection,
+) -> Result<fediac::net::ChaosDirection> {
     Ok(fediac::net::ChaosDirection {
-        drop: args.get_f64(&format!("{prefix}-drop"), 0.0)?,
-        duplicate: args.get_f64(&format!("{prefix}-dup"), 0.0)?,
-        reorder: args.get_f64(&format!("{prefix}-reorder"), 0.0)?,
-        corrupt: args.get_f64(&format!("{prefix}-corrupt"), 0.0)?,
-        reorder_depth: args.get_usize(&format!("{prefix}-depth"), defaults.reorder_depth)?,
+        drop: args.get_f64(&format!("{prefix}-drop"), base.drop)?,
+        duplicate: args.get_f64(&format!("{prefix}-dup"), base.duplicate)?,
+        reorder: args.get_f64(&format!("{prefix}-reorder"), base.reorder)?,
+        corrupt: args.get_f64(&format!("{prefix}-corrupt"), base.corrupt)?,
+        reorder_depth: args.get_usize(&format!("{prefix}-depth"), base.reorder_depth)?,
         max_hold: std::time::Duration::from_millis(
-            args.get_u64(&format!("{prefix}-hold-ms"), defaults.max_hold.as_millis() as u64)?,
+            args.get_u64(&format!("{prefix}-hold-ms"), base.max_hold.as_millis() as u64)?,
         ),
     })
+}
+
+/// Read one chaos direction's knobs from `--<prefix>-*` options
+/// (defaults: no faults).
+fn chaos_direction_from(args: &Args, prefix: &str) -> Result<fediac::net::ChaosDirection> {
+    chaos_direction_over(args, prefix, fediac::net::ChaosDirection::default())
+}
+
+/// Resolve `--preset NAME` (builtin name or TOML path) when given.
+fn preset_from(args: &Args) -> Result<Option<fediac::configx::DeployPreset>> {
+    args.get_opt_str("preset")
+        .map(|name| {
+            fediac::configx::load_preset(&name)
+                .map_err(|e| anyhow::anyhow!("--preset {name}: {e}"))
+        })
+        .transpose()
 }
 
 /// `--trace-dump` target: the daemon-attached flight recorder plus the
@@ -315,11 +348,22 @@ struct ServeTelemetry {
 /// (profile, register memory, host-byte limits, downlink chaos, seed)
 /// plus the stats/metrics cadences and the flight-recorder dump — one
 /// list, so the two subcommands cannot grow divergent CLI surfaces.
+///
+/// `--preset` (when given) supplies the defaults for every knob here;
+/// explicit flags override it field by field. The resolved preset is
+/// returned so callers can consume its deployment shape too (e.g.
+/// `shard-serve` takes its shard count).
 fn serve_options_from(
     args: &Args,
     bind: String,
-) -> Result<(fediac::server::ServeOptions, ServeTelemetry)> {
-    let mut profile = ps_from(args)?;
+) -> Result<(fediac::server::ServeOptions, ServeTelemetry, Option<fediac::configx::DeployPreset>)>
+{
+    let preset = preset_from(args)?;
+    let mut profile = match args.get_opt_str("ps") {
+        Some(name) => PsProfile::parse(&name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --ps '{name}'"))?,
+        None => preset.as_ref().map(|p| p.ps_profile()).unwrap_or_else(PsProfile::high),
+    };
     profile.memory_bytes = args.get_usize("memory", profile.memory_bytes)?;
     let stats_every = args.get_u64("stats-every", 10)?;
     let metrics_interval = args.get_u64("metrics-interval", 0)?;
@@ -331,17 +375,28 @@ fn serve_options_from(
         ));
         (rec, path)
     });
-    let defaults = fediac::server::JobLimits::default();
+    let defaults = preset
+        .as_ref()
+        .map(|p| p.limits.limits())
+        .unwrap_or_default();
     let limits = fediac::server::JobLimits {
         host_bytes: args.get_usize("host-bytes", defaults.host_bytes)?,
         ..defaults
     };
-    let down = chaos_direction_from(args, "down")?;
+    let down_base = preset
+        .as_ref()
+        .map(|p| p.down.direction())
+        .unwrap_or_default();
+    let down = chaos_direction_over(args, "down", down_base)?;
     let downlink_chaos = (!down.is_clean()).then_some(down);
-    let chaos_seed = args.get_u64("chaos-seed", 0)?;
-    // --io picks the event engine; default honours FEDIAC_IO, else the
-    // threaded backend (see DESIGN.md §6 for when to pick which).
-    let default_io = fediac::server::IoBackend::from_env();
+    let chaos_seed =
+        args.get_u64("chaos-seed", preset.as_ref().map(|p| p.chaos_seed).unwrap_or(0))?;
+    // --io picks the event engine; default honours the preset, then
+    // FEDIAC_IO, else the threaded backend (DESIGN.md §6).
+    let default_io = preset
+        .as_ref()
+        .and_then(|p| fediac::server::IoBackend::parse(&p.io))
+        .unwrap_or_else(fediac::server::IoBackend::from_env);
     let io_name = args.get_str("io", default_io.name());
     let io_backend = fediac::server::IoBackend::parse(&io_name)
         .ok_or_else(|| anyhow::anyhow!("unknown --io '{io_name}' (threaded|reactor)"))?;
@@ -357,6 +412,7 @@ fn serve_options_from(
             trace: trace_dump.as_ref().map(|(rec, _)| std::sync::Arc::clone(rec)),
         },
         ServeTelemetry { stats_every, metrics_interval, trace_dump },
+        preset,
     ))
 }
 
@@ -373,10 +429,13 @@ fn rewrite_trace_dump(trace: &TraceDump) {
 /// Run the networked aggregation daemon until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
     let bind = args.get_str("bind", "0.0.0.0:7177");
-    let (opts, telemetry) = serve_options_from(args, bind)?;
+    let (opts, telemetry, preset) = serve_options_from(args, bind)?;
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let handle = fediac::server::serve(&opts)?;
+    if let Some(p) = &preset {
+        fediac::info!("preset '{}': {}", p.name, p.summary);
+    }
     fediac::info!(
         "aggregation server listening on {} ({} backend; ctrl-c to stop)",
         handle.local_addr(),
@@ -428,12 +487,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// clients at the full endpoint list with `fediac client --shards`.
 fn cmd_shard_serve(args: &Args) -> Result<()> {
     let bind = args.get_str("bind-base", "0.0.0.0:7177");
-    let n_shards = args.get_usize("shards", 2)?;
+    let (opts, telemetry, preset) = serve_options_from(args, bind)?;
+    let default_shards = preset.as_ref().map(|p| p.shards as usize).unwrap_or(2);
+    let n_shards = args.get_usize("shards", default_shards)?;
     let n_shards = u8::try_from(n_shards)
         .map_err(|_| anyhow::anyhow!("--shards {n_shards} out of range (max 16)"))?;
-    let (opts, telemetry) = serve_options_from(args, bind)?;
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
+    if let Some(p) = &preset {
+        fediac::info!("preset '{}': {}", p.name, p.summary);
+    }
     let handles = fediac::server::serve_sharded(&opts, n_shards)?;
     let endpoints: Vec<String> = handles.iter().map(|h| h.local_addr().to_string()).collect();
     for (s, addr) in endpoints.iter().enumerate() {
@@ -531,6 +594,11 @@ fn cmd_bench_wire(args: &Args) -> Result<()> {
     // the same fleet (reactor daemon, ≤ --swarm-sockets sockets).
     opts.swarm = args.get_flag("swarm");
     opts.swarm_sockets = args.get_usize("swarm-sockets", opts.swarm_sockets)?;
+    // --down-*: measure under seeded downlink chaos (replayable — the
+    // lanes derive from --chaos-seed, default the workload seed).
+    let down = chaos_direction_from(args, "down")?;
+    opts.downlink_chaos = (!down.is_clean()).then_some(down);
+    opts.chaos_seed = args.get_u64("chaos-seed", opts.seed)?;
     let out_path = args.get_str("out", "BENCH_WIRE.json");
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -731,20 +799,51 @@ fn cmd_client(args: &Args) -> Result<()> {
 fn cmd_swarm(args: &Args) -> Result<()> {
     use fediac::client::swarm::{self, SwarmOptions};
 
+    // --preset: a deployment preset's [mix] supplies the fleet shape
+    // and its [chaos.up] the uplink fault defaults; flags override.
+    let preset = preset_from(args)?;
+    let mix = preset.as_ref().map(|p| p.mix.clone());
     let server = args.get_str("server", "127.0.0.1:7177");
-    let clients = args.get_usize("clients", 10_000)?;
-    let per_job = args.get_u16("clients-per-job", 64)?;
-    let d = args.get_usize("d", 1024)?;
+    let clients = args.get_usize(
+        "clients",
+        mix.as_ref().map(|m| m.swarm_clients).unwrap_or(10_000),
+    )?;
+    let per_job = args.get_u16(
+        "clients-per-job",
+        mix.as_ref().map(|m| m.clients_per_job).unwrap_or(64),
+    )?;
+    let d = args.get_usize("d", mix.as_ref().map(|m| m.d).unwrap_or(1024))?;
     let seed = args.get_u64("seed", 7)?;
     let mut opts = SwarmOptions::new(server, d);
-    opts.rounds = args.get_usize("rounds", 1)?;
-    opts.sockets = args.get_usize("sockets", swarm::MAX_SWARM_SOCKETS)?;
-    opts.threshold_a = args.get_u16("a", 3)?;
-    opts.bits_b = args.get_usize("b", opts.bits_b)?;
-    opts.k = fediac::client::protocol::votes_per_client(d, args.get_f64("k-frac", 0.05)?);
-    opts.payload_budget = args.get_usize("payload", opts.payload_budget)?;
-    opts.timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 200)?);
-    opts.max_retries = args.get_usize("max-retries", 50)?;
+    opts.rounds = args.get_usize("rounds", mix.as_ref().map(|m| m.rounds).unwrap_or(1))?;
+    opts.sockets = args.get_usize(
+        "sockets",
+        mix.as_ref().map(|m| m.swarm_sockets).unwrap_or(swarm::MAX_SWARM_SOCKETS),
+    )?;
+    opts.threshold_a =
+        args.get_u16("a", mix.as_ref().map(|m| m.threshold_a).unwrap_or(3))?;
+    opts.bits_b = args.get_usize("b", mix.as_ref().map(|m| m.bits_b).unwrap_or(opts.bits_b))?;
+    let k_frac = args.get_f64("k-frac", mix.as_ref().map(|m| m.k_frac).unwrap_or(0.05))?;
+    opts.k = fediac::client::protocol::votes_per_client(d, k_frac);
+    opts.payload_budget = args.get_usize(
+        "payload",
+        mix.as_ref().map(|m| m.payload).unwrap_or(opts.payload_budget),
+    )?;
+    opts.timeout = std::time::Duration::from_millis(
+        args.get_u64("timeout-ms", mix.as_ref().map(|m| m.timeout_ms).unwrap_or(200))?,
+    );
+    opts.max_retries =
+        args.get_usize("max-retries", mix.as_ref().map(|m| m.max_retries).unwrap_or(50))?;
+    // --chaos-*: seeded uplink chaos on the swarm sockets, replayable
+    // from --chaos-seed (default: the workload seed, so one --seed
+    // replays workload AND faults).
+    let up_base = preset.as_ref().map(|p| p.up.direction()).unwrap_or_default();
+    let up = chaos_direction_over(args, "chaos", up_base)?;
+    opts.uplink_chaos = (!up.is_clean()).then_some(up);
+    opts.chaos_seed = args.get_u64(
+        "chaos-seed",
+        preset.as_ref().map(|p| p.chaos_seed).unwrap_or(seed),
+    )?;
     opts.jobs = swarm::plan_fleet(clients, per_job, seed);
     let json_out = args.get_opt_str("json");
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -796,10 +895,102 @@ fn cmd_swarm(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run randomized preset×chaos×backend soak episodes until the episode
+/// or duration budget runs out, appending one JSON ledger line per
+/// episode (see `fediac::soak`).
+fn cmd_soak(args: &Args) -> Result<()> {
+    let defaults = fediac::soak::SoakOptions::default();
+    let episode_seed = match args.get_opt_str("episode-seed") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--episode-seed '{s}' is not a u64"))?,
+        ),
+        None => None,
+    };
+    let presets = match args.get_opt_str("presets") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => defaults.presets.clone(),
+    };
+    let opts = fediac::soak::SoakOptions {
+        episodes: args.get_usize("episodes", defaults.episodes)?,
+        duration_s: args.get_f64("duration", defaults.duration_s)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        episode_seed,
+        presets,
+        out: args.get_str("out", &defaults.out),
+    };
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let report = fediac::soak::run(&opts)?;
+    fediac::info!(
+        "soak passed: {} episode(s) in {:.1} s (ledger at {})",
+        report.episodes,
+        report.wall_s,
+        opts.out
+    );
+    Ok(())
+}
+
+/// Compare fresh bench JSONs against committed baselines and exit
+/// nonzero on any tolerance-band violation (see `fediac::trendgate`).
+/// Refresh the baseline with `cp BENCH_WIRE.json bench_baseline.json`.
+fn cmd_trend_gate(args: &Args) -> Result<()> {
+    use fediac::trendgate::{gate_codec, gate_wire, GateConfig};
+
+    fn load_json(path: &str) -> Result<fediac::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        fediac::util::json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    }
+
+    let baseline_path = args.get_str("baseline", "bench_baseline.json");
+    let current_path = args.get_str("current", "BENCH_WIRE.json");
+    let codec_baseline = args.get_opt_str("baseline-codec");
+    let codec_current = args.get_opt_str("current-codec");
+    let defaults = GateConfig::default();
+    let cfg = GateConfig {
+        max_throughput_drop: args.get_f64("tol-throughput", defaults.max_throughput_drop)?,
+        max_latency_ratio: args.get_f64("tol-latency", defaults.max_latency_ratio)?,
+    };
+    args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut findings = gate_wire(&load_json(&baseline_path)?, &load_json(&current_path)?, &cfg)?;
+    match (&codec_baseline, &codec_current) {
+        (Some(bp), Some(cp)) => {
+            findings.extend(gate_codec(&load_json(bp)?, &load_json(cp)?, &cfg)?);
+        }
+        (None, None) => {}
+        _ => anyhow::bail!("--baseline-codec and --current-codec must be given together"),
+    }
+    for f in &findings {
+        eprintln!("TREND-GATE FAIL: {f}");
+    }
+    if !findings.is_empty() {
+        anyhow::bail!(
+            "{} perf regression(s) beyond tolerance (throughput drop > {:.0}% or p99 > {:.1}x); \
+             if intentional, refresh with: cp {current_path} {baseline_path}",
+            findings.len(),
+            100.0 * cfg.max_throughput_drop,
+            cfg.max_latency_ratio
+        );
+    }
+    println!(
+        "trend-gate OK: {current_path} within tolerance of {baseline_path} \
+         (throughput drop <= {:.0}%, p99 <= {:.1}x)",
+        100.0 * cfg.max_throughput_drop,
+        cfg.max_latency_ratio
+    );
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
         "usage: fediac <train|fig2|table|fig3|fig4|theory|serve|shard-serve|client|swarm|chaos|\
-         bench-wire|bench-codec> [options]\n\
+         soak|trend-gate|bench-wire|bench-codec> [options]\n\
          see README.md for the option reference"
     );
     std::process::exit(2);
@@ -819,6 +1010,8 @@ fn main() -> Result<()> {
         Some("client") => cmd_client(&args),
         Some("swarm") => cmd_swarm(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("soak") => cmd_soak(&args),
+        Some("trend-gate") => cmd_trend_gate(&args),
         Some("bench-wire") => cmd_bench_wire(&args),
         Some("bench-codec") => cmd_bench_codec(&args),
         _ => usage(),

@@ -530,4 +530,81 @@ mod tests {
         let obj = doc.as_obj().unwrap();
         assert_eq!(obj.len(), 25, "20 counters + 5 histograms");
     }
+
+    fn counter_refs(s: &ServerStats) -> [&AtomicU64; 20] {
+        [
+            &s.packets,
+            &s.decode_errors,
+            &s.duplicates,
+            &s.spilled,
+            &s.spill_dropped,
+            &s.waves,
+            &s.overflow_lanes,
+            &s.register_stalls,
+            &s.reserves_suppressed,
+            &s.idle_releases,
+            &s.downlink_spoofs,
+            &s.non_finite_aux,
+            &s.joins,
+            &s.jobs_created,
+            &s.jobs_rejected,
+            &s.rounds_completed,
+            &s.workers_spawned,
+            &s.idle_wakeups,
+            &s.frames_pooled,
+            &s.pool_misses,
+        ]
+    }
+
+    fn hist_refs(s: &ServerStats) -> [&Hist; 5] {
+        [
+            &s.hist_round_latency,
+            &s.hist_vote_phase,
+            &s.hist_update_phase,
+            &s.hist_register_stall,
+            &s.hist_straggler_gap,
+        ]
+    }
+
+    /// Sharded-aggregation oracle: merging K independently-built
+    /// snapshots must equal the snapshot of a single server that saw
+    /// the union of every counter bump and histogram sample, and the
+    /// fold order must not matter — exactly the guarantee
+    /// `serve_sharded` aggregation and `bench-wire --shards` rely on.
+    #[test]
+    fn k_way_merge_equals_union_of_samples_in_any_order() {
+        let mut rng = crate::util::Rng::new(0x57A7_5u64);
+        for k in [2usize, 3, 5, 8] {
+            let union = ServerStats::default();
+            let mut snaps = Vec::with_capacity(k);
+            for _ in 0..k {
+                let part = ServerStats::default();
+                for (pc, uc) in counter_refs(&part).iter().zip(counter_refs(&union)) {
+                    let v = rng.below(1 << 20) as u64;
+                    pc.store(v, Ordering::Relaxed);
+                    uc.fetch_add(v, Ordering::Relaxed);
+                }
+                for (ph, uh) in hist_refs(&part).iter().zip(hist_refs(&union)) {
+                    for _ in 0..rng.below(32) {
+                        // Samples spanning the full bucket range.
+                        let sample = rng.next_u64() >> rng.below(64);
+                        ph.record(sample);
+                        uh.record(sample);
+                    }
+                }
+                snaps.push(part.snapshot());
+            }
+            let expected = union.snapshot();
+            let mut forward = StatsSnapshot::default();
+            for s in &snaps {
+                forward.merge(s);
+            }
+            assert_eq!(forward, expected, "k={k}: merge fold diverged from the union");
+            let mut reverse = StatsSnapshot::default();
+            for s in snaps.iter().rev() {
+                reverse.merge(s);
+            }
+            assert_eq!(reverse, expected, "k={k}: merge must be fold-order independent");
+        }
+    }
 }

@@ -1,0 +1,994 @@
+//! `fediac soak`: seeded randomized preset×chaos×backend episodes.
+//!
+//! Each episode samples a deployment preset (`configx::preset`), an I/O
+//! backend and a chaos coin from a single 64-bit episode seed, stands
+//! the deployment up on loopback, drives the preset's client mix
+//! through real wire rounds, and asserts the invariants the rest of the
+//! suite proves one at a time:
+//!
+//! * **bit-exactness** — every client's GIA and aggregate equal the
+//!   pure `algorithms::fediac`-style reference recomputation;
+//! * **budget hygiene** — the shared [`HostBudget`] returns to zero for
+//!   every job once the daemons shut down;
+//! * **no wedged rounds** — clean episodes complete with zero
+//!   `idle_releases` (no round sat past its idle-reclaim deadline);
+//! * **pool steady state** — clean driver episodes add zero
+//!   `pool_misses` after the warm-up round;
+//! * and the episode's flight-recorder ring is dumped to
+//!   `SOAK_FAIL_ep<N>.trace.jsonl` on any failure.
+//!
+//! Every episode appends one JSON line to the `SOAK.json` ledger whose
+//! `replay` field is a complete `fediac soak --episode-seed …` command:
+//! the whole episode — preset pick, backend, chaos coin, client mix,
+//! chaos lanes — derives from the seed alone, so a failure reproduces
+//! from its ledger line. Episode scheduling stratifies seeds so a
+//! 4-episode smoke covers {threaded, reactor} × {clean, chaos} ×
+//! {1, N shards}.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::client::swarm::{self, SwarmJobPlan, SwarmOptions, UpdateSource};
+use crate::client::{protocol, ClientOptions, FediacClient, ShardedFediacClient};
+use crate::compress::{self, deduce_gia};
+use crate::configx::{load_preset, DeployPreset, BUILTIN_PRESETS};
+use crate::net::{ChaosConfig, ChaosDirection};
+use crate::server::{
+    serve, serve_sharded, HostBudget, IoBackend, ServeOptions, ServerHandle, StatsSnapshot,
+};
+use crate::telemetry::{FlightRecorder, DEFAULT_EVENTS};
+use crate::util::{BitVec, Rng};
+
+/// What `fediac soak` runs.
+#[derive(Debug, Clone)]
+pub struct SoakOptions {
+    /// Episodes to run (0 = until the duration budget runs out).
+    pub episodes: usize,
+    /// Wall-clock budget in seconds; no new episode starts past it
+    /// (0 = no time budget).
+    pub duration_s: f64,
+    /// Root seed for episode scheduling.
+    pub seed: u64,
+    /// Replay exactly one episode from its ledger seed instead of
+    /// scheduling from the root seed.
+    pub episode_seed: Option<u64>,
+    /// Preset names (or TOML paths) to sample episodes from.
+    pub presets: Vec<String>,
+    /// Ledger path, one JSON line per episode.
+    pub out: String,
+}
+
+impl Default for SoakOptions {
+    fn default() -> Self {
+        SoakOptions {
+            episodes: 8,
+            duration_s: 300.0,
+            seed: 7,
+            episode_seed: None,
+            presets: BUILTIN_PRESETS.iter().map(|s| s.to_string()).collect(),
+            out: "SOAK.json".to_string(),
+        }
+    }
+}
+
+/// A fully sampled episode: everything below derives from `seed` (plus
+/// the preset list), so a ledger line's seed replays the episode.
+#[derive(Debug, Clone)]
+pub struct EpisodePlan {
+    /// The episode seed every draw below came from.
+    pub seed: u64,
+    /// The `--presets` argument that was picked (name or path).
+    pub preset_arg: String,
+    /// The loaded preset.
+    pub preset: DeployPreset,
+    /// Daemon I/O backend for this episode (a soak axis — it overrides
+    /// the preset's `deploy.io`).
+    pub backend: IoBackend,
+    /// Whether the preset's chaos knobs are applied this episode.
+    pub chaos: bool,
+    /// Host the fleet on the swarm multiplexer instead of one thread
+    /// per client (preset `mix.swarm`, single-shard deployments only).
+    pub swarm: bool,
+    /// Shard daemons (from the preset).
+    pub shards: u8,
+    /// Concurrent jobs (driver mode).
+    pub jobs: usize,
+    /// Clients per job.
+    pub clients: u16,
+    /// Model dimension (preset `mix.d`, possibly halved by the seed).
+    pub d: usize,
+    /// Rounds per client.
+    pub rounds: usize,
+    /// Payload budget in bytes.
+    pub payload: usize,
+    /// Consensus threshold a (clamped to the client count).
+    pub threshold_a: u16,
+    /// Votes per client k.
+    pub k: usize,
+}
+
+impl EpisodePlan {
+    /// `driver` (one thread per client) or `swarm` (one thread total).
+    pub fn mode(&self) -> &'static str {
+        if self.swarm {
+            "swarm"
+        } else {
+            "driver"
+        }
+    }
+
+    /// The complete replay command for this episode.
+    pub fn replay_command(&self) -> String {
+        format!(
+            "fediac soak --episodes 1 --episode-seed {} --presets {}",
+            self.seed, self.preset_arg
+        )
+    }
+}
+
+/// Counters an episode leaves behind for its ledger line.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpisodeCounters {
+    /// Server stats merged across shards at episode end.
+    pub server: StatsSnapshot,
+    /// Client-side retransmissions summed over the fleet.
+    pub client_retx: u64,
+    /// Client-rounds completed (clients × rounds).
+    pub client_rounds: u64,
+    /// `pool_misses` right after the warm-up round (driver mode; clean
+    /// episodes assert the final count equals this).
+    pub warm_pool_misses: u64,
+}
+
+/// One ledger entry (one line of SOAK.json).
+#[derive(Debug, Clone)]
+pub struct EpisodeRecord {
+    /// Episode index within the soak run.
+    pub episode: usize,
+    /// The sampled plan.
+    pub plan: EpisodePlan,
+    /// Episode wall time in seconds.
+    pub wall_s: f64,
+    /// End-of-episode counters (zeroed when the episode failed early).
+    pub counters: EpisodeCounters,
+    /// Whether every invariant held.
+    pub ok: bool,
+    /// The failing invariant, when `ok` is false.
+    pub failure: Option<String>,
+}
+
+/// What a completed soak run did.
+#[derive(Debug, Clone, Copy)]
+pub struct SoakReport {
+    /// Episodes that ran and passed.
+    pub episodes: usize,
+    /// Wall time of the whole run in seconds.
+    pub wall_s: f64,
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Sample the episode fully determined by `seed`. Every draw goes
+/// through [`Rng::fork`], whose parent advance is independent of what
+/// the child stream is used for — so replaying with `--presets` narrowed
+/// to the one picked preset reproduces the same backend, chaos coin and
+/// mix draws.
+pub fn sample_episode(seed: u64, presets: &[String]) -> Result<EpisodePlan> {
+    ensure!(!presets.is_empty(), "soak needs at least one preset");
+    let mut root = Rng::new(seed);
+    let pick = root.fork(1).below(presets.len());
+    let preset_arg = presets[pick].clone();
+    let preset = load_preset(&preset_arg).map_err(|e| anyhow!("preset '{preset_arg}': {e}"))?;
+    let backend = if root.fork(2).below(2) == 0 {
+        IoBackend::Threaded
+    } else {
+        IoBackend::Reactor
+    };
+    // 3-in-4 chaos when the preset has knobs to apply; a clean preset
+    // always runs clean.
+    let chaos = !preset.is_clean() && root.fork(3).below(4) > 0;
+    let mut mix_rng = root.fork(4);
+    // Halve d on a coin flip for workload variety, but never below the
+    // point where a shard would own zero vote blocks.
+    let mut d = preset.mix.d;
+    if mix_rng.below(2) == 1 {
+        let half = (d / 2).max(512);
+        if half.div_ceil(8 * preset.mix.payload) >= preset.shards as usize {
+            d = half;
+        }
+    }
+    let k = protocol::votes_per_client(d, preset.mix.k_frac).max(1);
+    let plan = EpisodePlan {
+        seed,
+        preset_arg,
+        backend,
+        chaos,
+        swarm: preset.mix.swarm && preset.shards == 1,
+        shards: preset.shards,
+        jobs: preset.mix.jobs,
+        clients: preset.mix.clients_per_job,
+        d,
+        rounds: preset.mix.rounds,
+        payload: preset.mix.payload,
+        threshold_a: preset.mix.threshold_a.min(preset.mix.clients_per_job),
+        k,
+        preset,
+    };
+    Ok(plan)
+}
+
+/// Episode seed for slot `idx` of a soak run: a deterministic salt
+/// search over `mix64` candidates until the sampled episode lands in
+/// the stratum slot `idx` targets — preset `idx % presets`, backend
+/// alternating, chaos on a `[clean, chaos, chaos, clean]` cycle. Four
+/// episodes over the builtin presets therefore cover {threaded,
+/// reactor} × {clean, chaos} × {1, N shards}, while each returned seed
+/// alone still replays its episode.
+pub fn schedule_seed(root: u64, idx: usize, presets: &[String]) -> Result<u64> {
+    ensure!(!presets.is_empty(), "soak needs at least one preset");
+    let target_preset = &presets[idx % presets.len()];
+    let want_backend =
+        if idx % 2 == 0 { IoBackend::Threaded } else { IoBackend::Reactor };
+    let want_chaos = matches!(idx % 4, 1 | 2);
+    let base = root ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for salt in 0..4096u64 {
+        let seed = mix64(base ^ salt.wrapping_mul(0xD1B5_4A32_D192_ED03));
+        let plan = sample_episode(seed, presets)?;
+        let chaos_ok = if plan.preset.is_clean() {
+            !plan.chaos
+        } else {
+            plan.chaos == want_chaos
+        };
+        if plan.preset_arg == *target_preset && plan.backend == want_backend && chaos_ok {
+            return Ok(seed);
+        }
+    }
+    // ~(1 - 1/32)^4096 ≈ 1e-56; unreachable in practice, but a soak
+    // must degrade to "less stratified", never die on scheduling.
+    Ok(mix64(base))
+}
+
+/// One reference round recomputed from first principles (the pure
+/// oracle `tests/wire_backend.rs` proves the wire path against):
+/// votes → GIA deduction → shared scale → stochastic quantisation →
+/// lane sums at the GIA indices. Returns the per-client residuals so
+/// driver-mode oracles can fold them into the next round's updates.
+#[allow(clippy::type_complexity)]
+fn reference_round(
+    updates: &[Vec<f32>],
+    job_seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+    bits_b: usize,
+) -> (Vec<usize>, Vec<i32>, Vec<Vec<f32>>) {
+    let votes: Vec<BitVec> = updates
+        .iter()
+        .enumerate()
+        .map(|(c, u)| protocol::client_vote(u, k, job_seed, round, c))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = updates.iter().map(|u| compress::max_abs(u)).fold(f32::MIN_POSITIVE, f32::max);
+    let f = compress::scale_factor(bits_b, updates.len(), m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    let mut residuals = Vec::with_capacity(updates.len());
+    for (c, u) in updates.iter().enumerate() {
+        let (q, residual) = protocol::client_quantize(u, &mask, f, job_seed, round, c);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+        residuals.push(residual);
+    }
+    (indices, lanes, residuals)
+}
+
+/// The synthetic update stream every episode drives — byte-identical to
+/// `fediac bench-wire` / `fediac client`: round r of client c draws
+/// Gaussians from `Rng::new(job_seed ^ (c << 32) ^ r)` scaled by 0.01.
+fn synthetic_update(job_seed: u64, cid: usize, round: usize, d: usize) -> Vec<f32> {
+    let mut rng = Rng::new(job_seed ^ ((cid as u64) << 32) ^ round as u64);
+    (0..d).map(|_| (rng.gaussian() * 0.01) as f32).collect()
+}
+
+fn job_id(job_idx: usize) -> u32 {
+    1000 + job_idx as u32
+}
+
+fn job_seed(plan_seed: u64, job_idx: usize) -> u64 {
+    plan_seed ^ ((job_idx as u64) << 16)
+}
+
+fn merged_stats(handles: &[ServerHandle]) -> StatsSnapshot {
+    let mut merged = StatsSnapshot::default();
+    for h in handles {
+        merged.merge(&h.stats());
+    }
+    merged
+}
+
+/// Either client transport, as in `fediac client`.
+enum EpisodeClient {
+    Single(FediacClient),
+    Sharded(ShardedFediacClient),
+}
+
+/// Drive one client through rounds `lo..=hi`, folding `residual` in as
+/// Algorithm 1 requires. Returns the per-round (GIA indices, aggregate)
+/// pairs, the final residual (for the next pass) and the client's
+/// retransmission count.
+#[allow(clippy::type_complexity)]
+fn drive_client(
+    plan: &EpisodePlan,
+    addrs: &[String],
+    job_idx: usize,
+    cid: u16,
+    lo: usize,
+    hi: usize,
+    mut residual: Vec<f32>,
+) -> Result<(Vec<(Vec<usize>, Vec<i32>)>, Vec<f32>, u64)> {
+    let preset = &plan.preset;
+    let seed = job_seed(plan.seed, job_idx);
+    let mut copts =
+        ClientOptions::new(addrs[0].clone(), job_id(job_idx), cid, plan.d, plan.clients);
+    copts.threshold_a = plan.threshold_a;
+    copts.k = plan.k;
+    copts.bits_b = preset.mix.bits_b;
+    copts.payload_budget = plan.payload;
+    copts.backend_seed = seed;
+    copts.timeout = Duration::from_millis(preset.mix.timeout_ms);
+    copts.max_retries = preset.mix.max_retries;
+    if plan.chaos && !preset.up.is_clean() {
+        // Uplink chaos lives client-side (an in-process proxy lane);
+        // downlink chaos lives in the daemon, so leave it clean here.
+        copts.chaos = Some(ChaosConfig {
+            seed: plan.seed ^ ((job_idx as u64) << 8) ^ (cid as u64) ^ 0x50AC,
+            uplink: preset.up.direction(),
+            downlink: ChaosDirection::default(),
+        });
+    }
+    let mut client = if addrs.len() > 1 {
+        EpisodeClient::Sharded(ShardedFediacClient::connect(addrs, copts)?)
+    } else {
+        EpisodeClient::Single(FediacClient::connect(copts)?)
+    };
+    let mut got = Vec::with_capacity(hi + 1 - lo);
+    for round in lo..=hi {
+        let mut update = synthetic_update(seed, cid as usize, round, plan.d);
+        for (u, r) in update.iter_mut().zip(&residual) {
+            *u += *r;
+        }
+        let out = match &mut client {
+            EpisodeClient::Single(c) => c.run_round(round, &update)?,
+            EpisodeClient::Sharded(c) => c.run_round(round, &update)?,
+        };
+        residual = out.residual;
+        got.push((out.gia_indices, out.aggregate));
+    }
+    let retx = match &client {
+        EpisodeClient::Single(c) => c.stats.retransmissions,
+        EpisodeClient::Sharded(c) => c.stats().retransmissions,
+    };
+    Ok((got, residual, retx))
+}
+
+/// Run rounds `lo..=hi` for the whole fleet, one thread per client
+/// (fresh connections each pass — pass 2 exercises inline re-join).
+#[allow(clippy::type_complexity)]
+fn run_pass(
+    plan: &EpisodePlan,
+    addrs: &[String],
+    lo: usize,
+    hi: usize,
+    residuals: &mut [Vec<Vec<f32>>],
+    outcomes: &mut [Vec<Vec<(Vec<usize>, Vec<i32>)>>],
+) -> Result<u64> {
+    let clients = plan.clients as usize;
+    let results: Vec<Vec<Result<(Vec<(Vec<usize>, Vec<i32>)>, Vec<f32>, u64)>>> =
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(plan.jobs);
+            for (j, job_residuals) in residuals.iter().enumerate().take(plan.jobs) {
+                let mut row = Vec::with_capacity(clients);
+                for (c, residual) in job_residuals.iter().enumerate().take(clients) {
+                    let residual = residual.clone();
+                    row.push(s.spawn(move || {
+                        drive_client(plan, addrs, j, c as u16, lo, hi, residual)
+                    }));
+                }
+                handles.push(row);
+            }
+            handles
+                .into_iter()
+                .map(|row| {
+                    row.into_iter()
+                        .map(|h| {
+                            h.join().unwrap_or_else(|_| {
+                                Err(anyhow!("client thread panicked"))
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        });
+    let mut retx = 0u64;
+    for (j, row) in results.into_iter().enumerate() {
+        for (c, res) in row.into_iter().enumerate() {
+            let (got, residual, r) =
+                res.with_context(|| format!("job {j} client {c} rounds {lo}..={hi}"))?;
+            outcomes[j][c].extend(got);
+            residuals[j][c] = residual;
+            retx += r;
+        }
+    }
+    Ok(retx)
+}
+
+/// Stand the deployment up and run a driver-mode episode (one blocking
+/// client per thread, as `fediac client` does), then check every
+/// invariant. See the module docs for the invariant list.
+fn run_driver_episode(plan: &EpisodePlan, recorder: &Arc<FlightRecorder>) -> Result<EpisodeCounters> {
+    let preset = &plan.preset;
+    let limits = preset.limits.limits();
+    let budget = Arc::new(HostBudget::new(limits.host_bytes));
+    let base = ServeOptions {
+        bind: "127.0.0.1:0".to_string(),
+        profile: preset.ps_profile(),
+        limits,
+        downlink_chaos: (plan.chaos && !preset.down.is_clean())
+            .then(|| preset.down.direction()),
+        chaos_seed: plan.seed,
+        io_backend: plan.backend,
+        host_budget: Some(Arc::clone(&budget)),
+        trace: Some(Arc::clone(recorder)),
+    };
+    let handles = if plan.shards > 1 {
+        serve_sharded(&base, plan.shards)?
+    } else {
+        vec![serve(&base)?]
+    };
+    let addrs: Vec<String> = handles.iter().map(|h| h.local_addr().to_string()).collect();
+
+    let clients = plan.clients as usize;
+    let mut residuals: Vec<Vec<Vec<f32>>> =
+        vec![vec![vec![0.0f32; plan.d]; clients]; plan.jobs];
+    let mut outcomes: Vec<Vec<Vec<(Vec<usize>, Vec<i32>)>>> =
+        vec![vec![Vec::new(); clients]; plan.jobs];
+
+    // Pass 1 (round 1) warms the frame pools; pass 2 re-joins fresh
+    // client sessions and must not allocate a single new pool frame on
+    // a clean network.
+    let mut client_retx = run_pass(plan, &addrs, 1, 1, &mut residuals, &mut outcomes)?;
+    let warm = merged_stats(&handles);
+    if plan.rounds > 1 {
+        client_retx +=
+            run_pass(plan, &addrs, 2, plan.rounds, &mut residuals, &mut outcomes)?;
+    }
+    let server = merged_stats(&handles);
+    for h in handles {
+        h.shutdown();
+    }
+
+    // Invariant: the shared HostBudget returns to zero per job once the
+    // daemons (and so every Job) are gone.
+    for j in 0..plan.jobs {
+        let held = budget.reserved(job_id(j));
+        ensure!(
+            held == 0,
+            "HostBudget leak: job {} still holds {held} bytes after shutdown",
+            job_id(j)
+        );
+    }
+
+    // Invariant: bit-exactness vs the pure reference recomputation,
+    // with residuals evolving exactly as Algorithm 1 prescribes.
+    for j in 0..plan.jobs {
+        let seed = job_seed(plan.seed, j);
+        let mut oracle_residuals = vec![vec![0.0f32; plan.d]; clients];
+        for round in 1..=plan.rounds {
+            let updates: Vec<Vec<f32>> = (0..clients)
+                .map(|c| {
+                    let mut u = synthetic_update(seed, c, round, plan.d);
+                    for (x, r) in u.iter_mut().zip(&oracle_residuals[c]) {
+                        *x += *r;
+                    }
+                    u
+                })
+                .collect();
+            let (exp_idx, exp_lanes, next_residuals) = reference_round(
+                &updates,
+                seed,
+                round,
+                plan.k,
+                plan.threshold_a as usize,
+                preset.mix.bits_b,
+            );
+            oracle_residuals = next_residuals;
+            for c in 0..clients {
+                let (got_idx, got_lanes) = &outcomes[j][c][round - 1];
+                ensure!(
+                    *got_idx == exp_idx,
+                    "job {j} client {c} round {round}: GIA diverged from reference \
+                     ({} vs {} indices)",
+                    got_idx.len(),
+                    exp_idx.len()
+                );
+                ensure!(
+                    *got_lanes == exp_lanes,
+                    "job {j} client {c} round {round}: aggregate diverged from reference"
+                );
+            }
+        }
+    }
+
+    check_server_invariants(plan, &server, Some(warm.pool_misses))?;
+    Ok(EpisodeCounters {
+        server,
+        client_retx,
+        client_rounds: (plan.jobs * clients * plan.rounds) as u64,
+        warm_pool_misses: warm.pool_misses,
+    })
+}
+
+/// Stand the deployment up and run a swarm-mode episode: the whole
+/// fleet multiplexed on one thread with explicit per-round update
+/// streams, outcomes collected for the reference comparison.
+fn run_swarm_episode(plan: &EpisodePlan, recorder: &Arc<FlightRecorder>) -> Result<EpisodeCounters> {
+    let preset = &plan.preset;
+    let limits = preset.limits.limits();
+    let budget = Arc::new(HostBudget::new(limits.host_bytes));
+    let base = ServeOptions {
+        bind: "127.0.0.1:0".to_string(),
+        profile: preset.ps_profile(),
+        limits,
+        downlink_chaos: (plan.chaos && !preset.down.is_clean())
+            .then(|| preset.down.direction()),
+        chaos_seed: plan.seed,
+        io_backend: plan.backend,
+        host_budget: Some(Arc::clone(&budget)),
+        trace: Some(Arc::clone(recorder)),
+    };
+    let handle = serve(&base)?;
+
+    // Carve the fleet into jobs with explicit update streams, so the
+    // reference recomputation sees exactly what each client uploaded.
+    let per = plan.clients as usize;
+    let mut job_plans = Vec::new();
+    let mut remaining = preset.mix.swarm_clients;
+    let mut j = 0usize;
+    let mut min_n = per;
+    while remaining > 0 {
+        let n = remaining.min(per);
+        min_n = min_n.min(n);
+        let seed = job_seed(plan.seed, j);
+        let updates: Vec<Vec<Vec<f32>>> = (1..=plan.rounds)
+            .map(|round| {
+                (0..n).map(|c| synthetic_update(seed, c, round, plan.d)).collect()
+            })
+            .collect();
+        job_plans.push(SwarmJobPlan {
+            job: job_id(j),
+            n_clients: n as u16,
+            backend_seed: seed,
+            updates: UpdateSource::Explicit(updates),
+        });
+        remaining -= n;
+        j += 1;
+    }
+    let n_jobs = job_plans.len();
+    let threshold_a = plan.threshold_a.min(min_n as u16).max(1);
+
+    let mut sopts = SwarmOptions::new(handle.local_addr().to_string(), plan.d);
+    sopts.jobs = job_plans.clone();
+    sopts.threshold_a = threshold_a;
+    sopts.k = plan.k;
+    sopts.bits_b = preset.mix.bits_b;
+    sopts.payload_budget = plan.payload;
+    sopts.rounds = plan.rounds;
+    sopts.sockets = preset.mix.swarm_sockets;
+    sopts.timeout = Duration::from_millis(preset.mix.timeout_ms);
+    sopts.max_retries = preset.mix.max_retries;
+    sopts.uplink_chaos =
+        (plan.chaos && !preset.up.is_clean()).then(|| preset.up.direction());
+    sopts.chaos_seed = plan.seed;
+    sopts.collect_outcomes = true;
+
+    let report = swarm::run(&sopts)?;
+    let server = handle.stats();
+    handle.shutdown();
+
+    for jp in &job_plans {
+        let held = budget.reserved(jp.job);
+        ensure!(
+            held == 0,
+            "HostBudget leak: job {} still holds {held} bytes after shutdown",
+            jp.job
+        );
+    }
+
+    let outcomes = report
+        .outcomes
+        .as_ref()
+        .ok_or_else(|| anyhow!("swarm run did not collect outcomes"))?;
+    ensure!(outcomes.len() == n_jobs, "swarm outcomes lost a job");
+    for (ji, jp) in job_plans.iter().enumerate() {
+        let UpdateSource::Explicit(rounds_updates) = &jp.updates else {
+            unreachable!("soak builds explicit streams only");
+        };
+        for round in 1..=plan.rounds {
+            let updates = &rounds_updates[round - 1];
+            let (exp_idx, exp_lanes, _) = reference_round(
+                updates,
+                jp.backend_seed,
+                round,
+                plan.k,
+                threshold_a as usize,
+                preset.mix.bits_b,
+            );
+            for c in 0..updates.len() {
+                let out = &outcomes[ji][c][round - 1];
+                ensure!(
+                    out.gia_indices == exp_idx,
+                    "swarm job {} client {c} round {round}: GIA diverged from reference",
+                    jp.job
+                );
+                ensure!(
+                    out.aggregate == exp_lanes,
+                    "swarm job {} client {c} round {round}: aggregate diverged from reference",
+                    jp.job
+                );
+            }
+        }
+    }
+
+    let client_rounds = (preset.mix.swarm_clients * plan.rounds) as u64;
+    ensure!(
+        report.rounds_completed == client_rounds,
+        "swarm completed {} client-rounds, expected {client_rounds}",
+        report.rounds_completed
+    );
+    // The swarm drives one continuous session, so there is no warm-up
+    // boundary to assert the pool against; record the final count.
+    check_server_invariants_for(plan, &server, None, n_jobs)?;
+    Ok(EpisodeCounters {
+        server,
+        client_retx: report.stats.retransmissions,
+        client_rounds,
+        warm_pool_misses: server.pool_misses,
+    })
+}
+
+fn check_server_invariants(
+    plan: &EpisodePlan,
+    server: &StatsSnapshot,
+    warm_pool_misses: Option<u64>,
+) -> Result<()> {
+    check_server_invariants_for(plan, server, warm_pool_misses, plan.jobs)
+}
+
+/// Round-count, idle-reclaim and pool-steady-state invariants shared by
+/// both episode modes. `warm_pool_misses` is `Some` when the episode
+/// had a warm-up boundary to compare against.
+fn check_server_invariants_for(
+    plan: &EpisodePlan,
+    server: &StatsSnapshot,
+    warm_pool_misses: Option<u64>,
+    n_jobs: usize,
+) -> Result<()> {
+    let expected_rounds = (plan.shards as u64) * (n_jobs as u64) * (plan.rounds as u64);
+    if plan.chaos {
+        ensure!(
+            server.rounds_completed >= expected_rounds,
+            "server completed {} rounds, expected at least {expected_rounds}",
+            server.rounds_completed
+        );
+    } else {
+        ensure!(
+            server.rounds_completed == expected_rounds,
+            "server completed {} rounds, expected exactly {expected_rounds}",
+            server.rounds_completed
+        );
+        // A clean episode that trips idle reclamation had a wedged
+        // round sitting past its deadline.
+        ensure!(
+            server.idle_releases == 0,
+            "clean episode tripped idle reclamation {} time(s) — wedged round",
+            server.idle_releases
+        );
+        if let Some(warm) = warm_pool_misses {
+            ensure!(
+                server.pool_misses == warm,
+                "steady-state pool misses grew after warm-up: {warm} -> {}",
+                server.pool_misses
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run one episode, dumping the flight recorder to `trace_path` when
+/// any invariant fails.
+fn run_episode(plan: &EpisodePlan, trace_path: &str) -> Result<EpisodeCounters> {
+    let recorder = Arc::new(FlightRecorder::new(DEFAULT_EVENTS));
+    let result = if plan.swarm {
+        run_swarm_episode(plan, &recorder)
+    } else {
+        run_driver_episode(plan, &recorder)
+    };
+    if result.is_err() {
+        if let Err(e) = recorder.dump_to(trace_path) {
+            crate::warn!("soak: trace dump to {trace_path} failed: {e}");
+        } else {
+            crate::warn!("soak: flight recorder dumped to {trace_path}");
+        }
+    }
+    result
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one SOAK.json ledger line (newline-terminated JSON object).
+pub fn ledger_line(rec: &EpisodeRecord) -> String {
+    let p = &rec.plan;
+    let s = &rec.counters.server;
+    let failure = match &rec.failure {
+        Some(f) => format!("\"{}\"", json_escape(f)),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"episode\": {}, \"seed\": {}, \"preset\": \"{}\", \"backend\": \"{}\", \
+         \"shards\": {}, \"chaos\": {}, \"mode\": \"{}\", \"jobs\": {}, \
+         \"clients_per_job\": {}, \"d\": {}, \"rounds\": {}, \"payload\": {}, \
+         \"wall_s\": {:.3}, \"client_rounds\": {}, \"rounds_completed\": {}, \
+         \"retransmissions\": {}, \"frames_pooled\": {}, \"pool_misses\": {}, \
+         \"warm_pool_misses\": {}, \"idle_releases\": {}, \"spilled\": {}, \
+         \"decode_errors\": {}, \"ok\": {}, \"failure\": {failure}, \
+         \"replay\": \"{}\"}}\n",
+        rec.episode,
+        p.seed,
+        json_escape(&p.preset_arg),
+        p.backend.name(),
+        p.shards,
+        p.chaos,
+        p.mode(),
+        p.jobs,
+        p.clients,
+        p.d,
+        p.rounds,
+        p.payload,
+        rec.wall_s,
+        rec.counters.client_rounds,
+        s.rounds_completed,
+        rec.counters.client_retx,
+        s.frames_pooled,
+        s.pool_misses,
+        rec.counters.warm_pool_misses,
+        s.idle_releases,
+        s.spilled,
+        s.decode_errors,
+        rec.ok,
+        json_escape(&p.replay_command()),
+    )
+}
+
+/// Run a soak: schedule episodes from the root seed (or replay one
+/// `--episode-seed`), append a ledger line per episode to `opts.out`,
+/// and fail fast — the first broken invariant dumps its flight-recorder
+/// trace, writes its ledger line and aborts the run with the replay
+/// command in the error.
+pub fn run(opts: &SoakOptions) -> Result<SoakReport> {
+    use std::io::Write as _;
+    ensure!(!opts.presets.is_empty(), "soak needs at least one preset");
+    let started = Instant::now();
+    if let Some(parent) = std::path::Path::new(&opts.out).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut ledger = std::fs::File::create(&opts.out)
+        .with_context(|| format!("creating soak ledger {}", opts.out))?;
+    let mut passed = 0usize;
+    let mut idx = 0usize;
+    loop {
+        let seed = match opts.episode_seed {
+            Some(s) => {
+                if idx >= 1 {
+                    break;
+                }
+                s
+            }
+            None => {
+                if opts.episodes > 0 && idx >= opts.episodes {
+                    break;
+                }
+                if opts.duration_s > 0.0
+                    && started.elapsed().as_secs_f64() >= opts.duration_s
+                {
+                    crate::info!(
+                        "soak: duration budget ({} s) reached after {idx} episode(s)",
+                        opts.duration_s
+                    );
+                    break;
+                }
+                schedule_seed(opts.seed, idx, &opts.presets)?
+            }
+        };
+        let plan = sample_episode(seed, &opts.presets)?;
+        crate::info!(
+            "soak episode {idx}: preset={} backend={} shards={} chaos={} mode={} \
+             jobs={} clients={} d={} rounds={} (seed {seed})",
+            plan.preset_arg,
+            plan.backend.name(),
+            plan.shards,
+            plan.chaos,
+            plan.mode(),
+            plan.jobs,
+            plan.clients,
+            plan.d,
+            plan.rounds
+        );
+        let trace_path = format!("SOAK_FAIL_ep{idx}.trace.jsonl");
+        let t0 = Instant::now();
+        let result = run_episode(&plan, &trace_path);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let (counters, ok, failure) = match &result {
+            Ok(c) => (*c, true, None),
+            Err(e) => (EpisodeCounters::default(), false, Some(e.to_string())),
+        };
+        let record =
+            EpisodeRecord { episode: idx, plan, wall_s, counters, ok, failure };
+        ledger.write_all(ledger_line(&record).as_bytes())?;
+        ledger.flush()?;
+        if let Err(e) = result {
+            bail!(
+                "soak episode {idx} failed: {e}\n  replay: {}\n  trace: {trace_path}\n  \
+                 ledger: {}",
+                record.plan.replay_command(),
+                opts.out
+            );
+        }
+        crate::info!(
+            "soak episode {idx} ok in {wall_s:.2} s: {} client-rounds, {} retx, \
+             {} pool misses",
+            record.counters.client_rounds,
+            record.counters.client_retx,
+            record.counters.server.pool_misses
+        );
+        passed += 1;
+        idx += 1;
+    }
+    Ok(SoakReport { episodes: passed, wall_s: started.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn builtin_args() -> Vec<String> {
+        BUILTIN_PRESETS.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_replays_with_narrowed_presets() {
+        let presets = builtin_args();
+        for seed in [1u64, 7, 0xDEAD_BEEF, u64::MAX] {
+            let a = sample_episode(seed, &presets).unwrap();
+            let b = sample_episode(seed, &presets).unwrap();
+            assert_eq!(a.preset_arg, b.preset_arg);
+            assert_eq!(a.backend, b.backend);
+            assert_eq!((a.chaos, a.d, a.rounds, a.k), (b.chaos, b.d, b.rounds, b.k));
+            // The replay property: narrowing --presets to the picked one
+            // must reproduce every other draw (fork-based sampling).
+            let replay = sample_episode(seed, &[a.preset_arg.clone()]).unwrap();
+            assert_eq!(a.preset_arg, replay.preset_arg);
+            assert_eq!(a.backend, replay.backend);
+            assert_eq!(a.chaos, replay.chaos);
+            assert_eq!(a.d, replay.d);
+        }
+    }
+
+    #[test]
+    fn plans_respect_wire_constraints() {
+        let presets = builtin_args();
+        for case in 0..64u64 {
+            let plan = sample_episode(mix64(0xA5A5 ^ case), &presets).unwrap();
+            assert!(plan.threshold_a >= 1);
+            assert!(plan.threshold_a <= plan.clients);
+            assert!(plan.k >= 1 && plan.k <= plan.d);
+            // Every shard must own at least one vote block.
+            let blocks = plan.d.div_ceil(8 * plan.payload);
+            assert!(
+                blocks >= plan.shards as usize,
+                "{}: {} blocks < {} shards",
+                plan.preset_arg,
+                blocks,
+                plan.shards
+            );
+            if plan.swarm {
+                assert_eq!(plan.shards, 1, "swarm episodes are single-shard");
+            }
+        }
+    }
+
+    #[test]
+    fn four_scheduled_episodes_cover_the_matrix() {
+        let presets = builtin_args();
+        let plans: Vec<EpisodePlan> = (0..4)
+            .map(|i| {
+                let seed = schedule_seed(7, i, &presets).unwrap();
+                sample_episode(seed, &presets).unwrap()
+            })
+            .collect();
+        assert!(plans.iter().any(|p| p.backend == IoBackend::Threaded));
+        assert!(plans.iter().any(|p| p.backend == IoBackend::Reactor));
+        assert!(plans.iter().any(|p| p.chaos), "no chaos episode scheduled");
+        assert!(plans.iter().any(|p| !p.chaos), "no clean episode scheduled");
+        assert!(plans.iter().any(|p| p.shards == 1));
+        assert!(plans.iter().any(|p| p.shards >= 2));
+        // And the schedule is itself deterministic.
+        let again = schedule_seed(7, 2, &presets).unwrap();
+        assert_eq!(again, schedule_seed(7, 2, &presets).unwrap());
+    }
+
+    #[test]
+    fn ledger_lines_parse_and_carry_the_replay_seed() {
+        let presets = builtin_args();
+        let plan = sample_episode(schedule_seed(3, 1, &presets).unwrap(), &presets).unwrap();
+        let seed = plan.seed;
+        let rec = EpisodeRecord {
+            episode: 1,
+            plan,
+            wall_s: 0.25,
+            counters: EpisodeCounters::default(),
+            ok: false,
+            failure: Some("aggregate diverged \"badly\"".to_string()),
+        };
+        let line = ledger_line(&rec);
+        let json = crate::util::json::parse(line.trim()).unwrap();
+        assert_eq!(json.get("episode").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(json.get("seed").and_then(|v| v.as_f64()), Some(seed as f64));
+        assert_eq!(
+            json.get("ok").map(|v| *v == crate::util::json::Json::Bool(false)),
+            Some(true)
+        );
+        let replay = json.get("replay").and_then(|v| v.as_str()).unwrap();
+        assert!(replay.contains("--episode-seed"), "{replay}");
+        assert!(replay.contains(&seed.to_string()), "{replay}");
+        let failure = json.get("failure").and_then(|v| v.as_str()).unwrap();
+        assert!(failure.contains("diverged"), "{failure}");
+    }
+
+    #[test]
+    fn reference_round_matches_the_wire_backend_oracle_shape() {
+        // Smoke the oracle itself: indices sorted and in range, lanes
+        // aligned with indices, residual shape preserved.
+        let d = 256;
+        let updates: Vec<Vec<f32>> = (0..3).map(|c| synthetic_update(9, c, 1, d)).collect();
+        let (idx, lanes, residuals) = reference_round(&updates, 9, 1, 12, 2, 12);
+        assert_eq!(idx.len(), lanes.len());
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted");
+        assert!(idx.iter().all(|&g| g < d));
+        assert_eq!(residuals.len(), 3);
+        assert!(residuals.iter().all(|r| r.len() == d));
+    }
+}

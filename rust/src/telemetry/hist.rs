@@ -283,6 +283,45 @@ mod tests {
     }
 
     #[test]
+    fn n_way_merge_matches_the_union_of_samples_oracle() {
+        // The multi-shard / multi-client aggregation shape: K independent
+        // histograms folded into one must behave exactly as if one
+        // histogram had recorded the union of all samples — bucket
+        // counts, sum, max, and every quantile against the sorted-union
+        // oracle. Folding order must not matter.
+        prop::check("hist_n_way_merge_vs_union", prop::default_cases(), |rng| {
+            let k = 2 + rng.below(7);
+            let parts: Vec<Vec<u64>> = (0..k).map(|_| gen_values(rng, rng.below(120))).collect();
+            let mut forward = HistSummary::default();
+            for p in &parts {
+                forward.merge(&summarize(p));
+            }
+            let mut reverse = HistSummary::default();
+            for p in parts.iter().rev() {
+                reverse.merge(&summarize(p));
+            }
+            let mut union: Vec<u64> = parts.iter().flatten().copied().collect();
+            let direct = summarize(&union);
+            prop_assert!(forward == direct, "{k}-way merge != union summary");
+            prop_assert!(forward == reverse, "{k}-way merge is order-sensitive");
+            union.sort_unstable();
+            for q in [0.25, 0.5, 0.9, 0.99, 1.0] {
+                let exact = oracle_quantile(&union, q);
+                let est = forward.quantile(q);
+                if union.is_empty() {
+                    prop_assert!(est == 0, "empty union quantile {est}");
+                    continue;
+                }
+                prop_assert!(
+                    bucket_of(est) == bucket_of(exact) && est >= exact && est <= forward.max,
+                    "q={q}: merged est {est} vs union oracle {exact}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn saturating_samples_stay_exact_at_the_top() {
         let mut h = HistSummary::default();
         h.record(u64::MAX);

@@ -1,0 +1,317 @@
+//! Perf-trend gate: compare a fresh `BENCH_WIRE.json` /
+//! `BENCH_CODEC.json` against a committed baseline and fail CI when
+//! throughput or tail latency regresses beyond a tolerance band.
+//!
+//! The baseline is a plain copy of a known-good bench report (only the
+//! keys compared here are read, so a hand-written floor file works
+//! too). Refreshing it after an intentional perf change is one line:
+//!
+//! ```text
+//! cp BENCH_WIRE.json bench_baseline.json   # and commit
+//! ```
+//!
+//! Tolerances are deliberately wide (CI runners are noisy): the gate is
+//! a ratchet against *catastrophic* regressions — a halved rounds/s, a
+//! p99 that blows out past 4× — not a microbenchmark referee.
+//! `fediac trend-gate` is the CLI entry point.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Tolerance band for the trend comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct GateConfig {
+    /// Largest tolerated fractional throughput drop, e.g. 0.5 means a
+    /// leg may lose up to half its baseline rounds/s (or Melems/s).
+    pub max_throughput_drop: f64,
+    /// Largest tolerated p99-latency growth factor, e.g. 4.0 means the
+    /// current p99 may be at most 4× the baseline p99.
+    pub max_latency_ratio: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig { max_throughput_drop: 0.5, max_latency_ratio: 4.0 }
+    }
+}
+
+/// One tolerance-band violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Which report leg regressed (backend name, shard, kernel, swarm).
+    pub leg: String,
+    /// The compared metric, e.g. `rounds_per_s`.
+    pub metric: String,
+    /// The baseline value.
+    pub baseline: f64,
+    /// The freshly measured value.
+    pub current: f64,
+    /// The tolerance-band limit the current value violated.
+    pub limit: f64,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} regressed: baseline {:.2}, current {:.2}, limit {:.2}",
+            self.leg, self.metric, self.baseline, self.current, self.limit
+        )
+    }
+}
+
+fn field_f64(j: &Json, leg: &str, path: &[&str]) -> Result<f64> {
+    let mut cur = j;
+    for key in path {
+        cur = cur
+            .get(key)
+            .ok_or_else(|| anyhow!("leg '{leg}': report missing '{}'", path.join(".")))?;
+    }
+    cur.as_f64().ok_or_else(|| anyhow!("leg '{leg}': '{}' is not a number", path.join(".")))
+}
+
+/// Compare one leg's throughput (higher is better) and p99 latency
+/// (lower is better) against the baseline leg.
+fn gate_leg(
+    leg: &str,
+    base: &Json,
+    cur: &Json,
+    throughput_key: &str,
+    cfg: &GateConfig,
+    findings: &mut Vec<Finding>,
+) -> Result<()> {
+    let base_rps = field_f64(base, leg, &[throughput_key])?;
+    let cur_rps = field_f64(cur, leg, &[throughput_key])?;
+    let floor = base_rps * (1.0 - cfg.max_throughput_drop);
+    if cur_rps < floor {
+        findings.push(Finding {
+            leg: leg.to_string(),
+            metric: throughput_key.to_string(),
+            baseline: base_rps,
+            current: cur_rps,
+            limit: floor,
+        });
+    }
+    let base_p99 = field_f64(base, leg, &["round_latency_us", "p99"])?;
+    let cur_p99 = field_f64(cur, leg, &["round_latency_us", "p99"])?;
+    // A zero baseline p99 (sub-microsecond smoke rounds) gives no
+    // meaningful ratio; skip rather than divide by zero.
+    if base_p99 > 0.0 {
+        let ceil = base_p99 * cfg.max_latency_ratio;
+        if cur_p99 > ceil {
+            findings.push(Finding {
+                leg: leg.to_string(),
+                metric: "round_latency_us.p99".to_string(),
+                baseline: base_p99,
+                current: cur_p99,
+                limit: ceil,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Gate a fresh BENCH_WIRE.json against its baseline: every baseline
+/// backend leg (and the swarm leg, when the baseline has one) must
+/// exist in the current report and stay inside the tolerance band on
+/// rounds/s and p99 round latency. Returns the violations; malformed
+/// or structurally mismatched reports are hard `Err`s.
+pub fn gate_wire(baseline: &Json, current: &Json, cfg: &GateConfig) -> Result<Vec<Finding>> {
+    let base_legs = baseline
+        .get("backends")
+        .and_then(|b| b.as_arr())
+        .ok_or_else(|| anyhow!("baseline: missing 'backends' array"))?;
+    let cur_legs = current
+        .get("backends")
+        .and_then(|b| b.as_arr())
+        .ok_or_else(|| anyhow!("current: missing 'backends' array"))?;
+    if base_legs.is_empty() {
+        bail!("baseline: 'backends' is empty — refresh it from a real bench run");
+    }
+    let mut findings = Vec::new();
+    for base in base_legs {
+        let name = base
+            .get("backend")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("baseline: backend leg missing 'backend' name"))?;
+        let cur = cur_legs
+            .iter()
+            .find(|l| l.get("backend").and_then(|n| n.as_str()) == Some(name))
+            .ok_or_else(|| anyhow!("current report lost the '{name}' backend leg"))?;
+        gate_leg(name, base, cur, "rounds_per_s", cfg, &mut findings)?;
+    }
+    if let Some(base_swarm) = baseline.get("swarm") {
+        let cur_swarm =
+            current.get("swarm").ok_or_else(|| anyhow!("current report lost the swarm leg"))?;
+        gate_leg("swarm", base_swarm, cur_swarm, "rounds_per_s", cfg, &mut findings)?;
+    }
+    Ok(findings)
+}
+
+/// Gate a fresh BENCH_CODEC.json against its baseline: every baseline
+/// kernel must hold its `fast_melems_s` inside the throughput band, and
+/// `frame_encode.steady_misses` must stay zero when the baseline's was
+/// zero (the allocation-free emission guarantee).
+pub fn gate_codec(baseline: &Json, current: &Json, cfg: &GateConfig) -> Result<Vec<Finding>> {
+    let base_kernels = baseline
+        .get("kernels")
+        .and_then(|k| k.as_arr())
+        .ok_or_else(|| anyhow!("baseline: missing 'kernels' array"))?;
+    let cur_kernels = current
+        .get("kernels")
+        .and_then(|k| k.as_arr())
+        .ok_or_else(|| anyhow!("current: missing 'kernels' array"))?;
+    let mut findings = Vec::new();
+    for base in base_kernels {
+        let name = base
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("baseline: kernel entry missing 'name'"))?;
+        let cur = cur_kernels
+            .iter()
+            .find(|k| k.get("name").and_then(|n| n.as_str()) == Some(name))
+            .ok_or_else(|| anyhow!("current report lost the '{name}' kernel"))?;
+        let base_rate = field_f64(base, name, &["fast_melems_s"])?;
+        let cur_rate = field_f64(cur, name, &["fast_melems_s"])?;
+        let floor = base_rate * (1.0 - cfg.max_throughput_drop);
+        if cur_rate < floor {
+            findings.push(Finding {
+                leg: name.to_string(),
+                metric: "fast_melems_s".to_string(),
+                baseline: base_rate,
+                current: cur_rate,
+                limit: floor,
+            });
+        }
+    }
+    let base_misses = field_f64(baseline, "frame_encode", &["frame_encode", "steady_misses"])?;
+    let cur_misses = field_f64(current, "frame_encode", &["frame_encode", "steady_misses"])?;
+    if base_misses == 0.0 && cur_misses > 0.0 {
+        findings.push(Finding {
+            leg: "frame_encode".to_string(),
+            metric: "steady_misses".to_string(),
+            baseline: base_misses,
+            current: cur_misses,
+            limit: 0.0,
+        });
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn wire_report(threaded_rps: f64, reactor_rps: f64, threaded_p99: u64) -> Json {
+        json::parse(&format!(
+            r#"{{"backends": [
+                 {{"backend": "threaded", "rounds_per_s": {threaded_rps},
+                  "round_latency_us": {{"count": 4, "p50": 100, "p90": 200,
+                                        "p99": {threaded_p99}, "max": 9000}}}},
+                 {{"backend": "reactor", "rounds_per_s": {reactor_rps},
+                  "round_latency_us": {{"count": 4, "p50": 100, "p90": 200,
+                                        "p99": 400, "max": 9000}}}}],
+                "swarm": {{"rounds_per_s": 500.0,
+                           "round_latency_us": {{"count": 64, "p50": 50, "p90": 90,
+                                                 "p99": 200, "max": 400}}}}}}"#,
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn clean_run_produces_no_findings() {
+        let base = wire_report(100.0, 120.0, 300);
+        let cur = wire_report(90.0, 130.0, 350);
+        let findings = gate_wire(&base, &cur, &GateConfig::default()).unwrap();
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn synthetic_throughput_regression_is_detected() {
+        let base = wire_report(100.0, 120.0, 300);
+        // The reactor leg loses 75% of its rounds/s — past the 50% band.
+        let cur = wire_report(95.0, 30.0, 300);
+        let findings = gate_wire(&base, &cur, &GateConfig::default()).unwrap();
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].leg, "reactor");
+        assert_eq!(findings[0].metric, "rounds_per_s");
+        assert!(findings[0].to_string().contains("regressed"));
+    }
+
+    #[test]
+    fn synthetic_latency_regression_is_detected() {
+        let base = wire_report(100.0, 120.0, 300);
+        // Threaded p99 blows out 10×, throughput unchanged.
+        let cur = wire_report(100.0, 120.0, 3000);
+        let findings = gate_wire(&base, &cur, &GateConfig::default()).unwrap();
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].leg, "threaded");
+        assert_eq!(findings[0].metric, "round_latency_us.p99");
+    }
+
+    #[test]
+    fn swarm_leg_regression_is_detected() {
+        let base = wire_report(100.0, 120.0, 300);
+        let mut cur = wire_report(100.0, 120.0, 300);
+        // Rebuild the current report with a collapsed swarm leg.
+        if let Json::Obj(map) = &mut cur {
+            map.insert(
+                "swarm".to_string(),
+                json::parse(
+                    r#"{"rounds_per_s": 10.0,
+                        "round_latency_us": {"count": 64, "p50": 50, "p90": 90,
+                                             "p99": 200, "max": 400}}"#,
+                )
+                .unwrap(),
+            );
+        }
+        let findings = gate_wire(&base, &cur, &GateConfig::default()).unwrap();
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].leg, "swarm");
+    }
+
+    #[test]
+    fn lost_backend_leg_is_a_hard_error() {
+        let base = wire_report(100.0, 120.0, 300);
+        let cur = json::parse(
+            r#"{"backends": [{"backend": "threaded", "rounds_per_s": 100.0,
+                "round_latency_us": {"p99": 300}}]}"#,
+        )
+        .unwrap();
+        let err = gate_wire(&base, &cur, &GateConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("reactor"), "{err}");
+    }
+
+    #[test]
+    fn zero_baseline_p99_skips_the_ratio_check() {
+        let base = wire_report(100.0, 120.0, 0);
+        let cur = wire_report(100.0, 120.0, 5000);
+        let findings = gate_wire(&base, &cur, &GateConfig::default()).unwrap();
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    fn codec_report(golomb: f64, misses: u64) -> Json {
+        json::parse(&format!(
+            r#"{{"kernels": [
+                 {{"name": "golomb_decode", "fast_melems_s": {golomb}}},
+                 {{"name": "lane_add", "fast_melems_s": 900.0}}],
+                "frame_encode": {{"steady_misses": {misses}}}}}"#,
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn codec_kernel_and_pool_regressions_are_detected() {
+        let base = codec_report(400.0, 0);
+        let ok = gate_codec(&base, &codec_report(380.0, 0), &GateConfig::default()).unwrap();
+        assert!(ok.is_empty(), "{ok:?}");
+        let slow = gate_codec(&base, &codec_report(100.0, 0), &GateConfig::default()).unwrap();
+        assert_eq!(slow.len(), 1, "{slow:?}");
+        assert_eq!(slow[0].leg, "golomb_decode");
+        let leak = gate_codec(&base, &codec_report(400.0, 3), &GateConfig::default()).unwrap();
+        assert_eq!(leak.len(), 1, "{leak:?}");
+        assert_eq!(leak[0].metric, "steady_misses");
+    }
+}

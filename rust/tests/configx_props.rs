@@ -1,0 +1,199 @@
+//! Seeded adversarial property tests for the configx TOML layer: no
+//! document — however mangled — may panic `configx::toml::parse` or
+//! `DeployPreset::parse_str`, and every parse-level rejection must be a
+//! `Result` carrying 1-based line context, never a silent default.
+//!
+//! Same style as `tests/wire_fuzz.rs`: a corpus of *valid* documents
+//! (the builtin deployment presets), seeded random mutations (byte
+//! flips, truncation, unknown-key injection, type swaps, duplicate
+//! keys/sections, garbage splices), deterministic replay via
+//! `FEDIAC_PROP_SEED`. Volume scales with `FEDIAC_PROP_CASES`.
+
+use fediac::configx::preset::builtin_text;
+use fediac::configx::{toml, DeployPreset, BUILTIN_PRESETS};
+use fediac::prop_assert;
+use fediac::util::{prop, Rng};
+
+/// A random builtin preset document (always valid as written).
+fn pick_corpus(rng: &mut Rng) -> &'static str {
+    builtin_text(BUILTIN_PRESETS[rng.below(BUILTIN_PRESETS.len())]).unwrap()
+}
+
+/// Keys the preset schema types as numbers (targets for type swaps).
+const NUMERIC_KEYS: [&str; 6] =
+    ["shards", "d", "rounds", "payload", "clients_per_job", "host_bytes"];
+
+/// Apply one random mutation to `text`, returning the mangled document.
+fn mutate(rng: &mut Rng, text: &str) -> String {
+    match rng.below(6) {
+        // Byte flips (may break UTF-8; lossy-decode like a file read of
+        // a corrupted config would).
+        0 => {
+            let mut bytes = text.as_bytes().to_vec();
+            for _ in 0..=rng.below(4) {
+                if bytes.is_empty() {
+                    break;
+                }
+                let i = rng.below(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            String::from_utf8_lossy(&bytes).into_owned()
+        }
+        // Truncation mid-document (partial write / torn download).
+        1 => {
+            let cut = rng.below(text.len() + 1);
+            text.chars().take(cut).collect()
+        }
+        // Unknown-key injection into a random line position.
+        2 => {
+            let mut lines: Vec<&str> = text.lines().collect();
+            let at = rng.below(lines.len() + 1);
+            lines.insert(at, "definitely_not_a_preset_key = 1");
+            lines.join("\n")
+        }
+        // Type swap on a known numeric key.
+        3 => {
+            let key = NUMERIC_KEYS[rng.below(NUMERIC_KEYS.len())];
+            let mut out = String::new();
+            for line in text.lines() {
+                if line.trim_start().starts_with(key) && line.contains('=') {
+                    out.push_str(&format!("{key} = \"not a number\"\n"));
+                } else {
+                    out.push_str(line);
+                    out.push('\n');
+                }
+            }
+            out
+        }
+        // Duplicate the whole document after itself: every key now
+        // appears twice, which the parser must reject (last-one-wins
+        // would silently change deployments).
+        4 => format!("{text}\n{text}"),
+        // Garbage splice: structured noise that is not key = value.
+        _ => {
+            let garbage = ["[", "= 3", "a = ", "x = [1, 2", "\"unterminated", "[sec", "a b c"];
+            let mut lines: Vec<&str> = text.lines().collect();
+            let at = rng.below(lines.len() + 1);
+            lines.insert(at, garbage[rng.below(garbage.len())]);
+            lines.join("\n")
+        }
+    }
+}
+
+#[test]
+fn mutated_preset_documents_never_panic_and_parse_errors_carry_line_context() {
+    prop::check("configx_mutation", prop::default_cases() * 8, |rng| {
+        let original = pick_corpus(rng);
+        let mut text = original.to_string();
+        for _ in 0..=rng.below(3) {
+            text = mutate(rng, &text);
+        }
+        // Layer 1: the TOML-subset parser. Must never panic; its only
+        // error form carries the 1-based offending line.
+        if let Err(e) = toml::parse(&text) {
+            let msg = e.to_string();
+            prop_assert!(
+                msg.starts_with("line "),
+                "toml error lost its line context: '{msg}'"
+            );
+        }
+        // Layer 2: the preset schema on top. Must never panic either;
+        // Ok or a typed ConfigError are both acceptable outcomes.
+        let _ = DeployPreset::parse_str("fuzzed", &text);
+        Ok(())
+    });
+}
+
+#[test]
+fn every_truncation_point_of_every_builtin_is_panic_free() {
+    for name in BUILTIN_PRESETS {
+        let text = builtin_text(name).unwrap();
+        for cut in 0..text.len() {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            let truncated = &text[..cut];
+            if let Err(e) = toml::parse(truncated) {
+                let msg = e.to_string();
+                assert!(
+                    msg.starts_with("line "),
+                    "{name} truncated at {cut}: error lost line context: '{msg}'"
+                );
+            }
+            let _ = DeployPreset::parse_str(name, truncated);
+        }
+    }
+}
+
+#[test]
+fn unknown_keys_are_rejected_not_defaulted() {
+    prop::check("configx_unknown_key", prop::default_cases(), |rng| {
+        let original = pick_corpus(rng);
+        let mut lines: Vec<&str> = original.lines().collect();
+        let at = rng.below(lines.len() + 1);
+        lines.insert(at, "zzz_injected_key = 42");
+        let text = lines.join("\n");
+        let res = DeployPreset::parse_str("fuzzed", &text);
+        prop_assert!(
+            res.is_err(),
+            "injected unknown key at line {} was silently accepted",
+            at + 1
+        );
+        let msg = res.unwrap_err().to_string();
+        prop_assert!(
+            msg.contains("zzz_injected_key") || msg.starts_with("line "),
+            "rejection names neither the key nor a line: '{msg}'"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn type_mismatches_on_real_keys_are_errors_not_defaults() {
+    prop::check("configx_type_swap", prop::default_cases(), |rng| {
+        let original = pick_corpus(rng);
+        let key = NUMERIC_KEYS[rng.below(NUMERIC_KEYS.len())];
+        if !original.lines().any(|l| l.trim_start().starts_with(key) && l.contains('=')) {
+            return Ok(()); // this preset doesn't set the key
+        }
+        let swapped: String = original
+            .lines()
+            .map(|line| {
+                if line.trim_start().starts_with(key) && line.contains('=') {
+                    format!("{key} = \"not a number\"\n")
+                } else {
+                    format!("{line}\n")
+                }
+            })
+            .collect();
+        let res = DeployPreset::parse_str("fuzzed", &swapped);
+        prop_assert!(res.is_err(), "string value for numeric '{key}' was accepted");
+        Ok(())
+    });
+}
+
+#[test]
+fn duplicate_keys_and_reopened_sections_are_rejected_with_line_context() {
+    for name in BUILTIN_PRESETS {
+        let text = builtin_text(name).unwrap();
+        let doubled = format!("{text}\n{text}");
+        let err = toml::parse(&doubled)
+            .expect_err("doubled document must trip the duplicate-key check");
+        let msg = err.to_string();
+        assert!(
+            msg.starts_with("line ") && msg.contains("duplicate key"),
+            "{name}: expected a line-numbered duplicate-key error, got '{msg}'"
+        );
+    }
+}
+
+#[test]
+fn all_builtin_presets_survive_the_fuzzer_untouched() {
+    // The corpus itself must stay valid — a mutation test over broken
+    // inputs proves nothing.
+    for name in BUILTIN_PRESETS {
+        let preset = DeployPreset::parse_str(name, builtin_text(name).unwrap())
+            .unwrap_or_else(|e| panic!("builtin '{name}' no longer parses: {e}"));
+        assert_eq!(preset.name, *name);
+    }
+}
