@@ -1,7 +1,9 @@
 //! `fediac bench-wire`: drive real serve + client FediAC rounds over
 //! loopback UDP and report **rounds/s** and **bytes/round** per I/O
-//! backend (`--io threaded` vs `--io reactor`) — the first step of the
-//! ROADMAP "cross-machine benches" item. Unlike `benches/bench_round`,
+//! backend (`--io threaded` / `reactor` / `fleet`) — the first step of
+//! the ROADMAP "cross-machine benches" item. The fleet leg
+//! (`--io fleet --cores N`) additionally reports per-core rounds/s and
+//! round-latency percentiles from each core's private stats block. Unlike `benches/bench_round`,
 //! which times the in-process simulator, this exercises the whole wire
 //! stack: codec, daemon backend, retransmission timers and the client
 //! driver, on real sockets.
@@ -41,6 +43,9 @@ pub struct BenchWireOptions {
     pub profile: PsProfile,
     /// Backends to measure, in order.
     pub backends: Vec<IoBackend>,
+    /// Fleet cores for the fleet legs (`--cores`; 0 = auto-size to the
+    /// host). Ignored by the single-socket backends.
+    pub cores: usize,
     /// Collaborating shard servers (1 = a single daemon; N > 1 drives
     /// `serve_sharded` + the sharded fan-out client and reports
     /// per-shard stats). `d` at `payload_budget` must give every shard
@@ -74,7 +79,8 @@ impl Default for BenchWireOptions {
             d: 4096,
             payload_budget: DEFAULT_PAYLOAD_BUDGET,
             profile: PsProfile::high(),
-            backends: vec![IoBackend::Threaded, IoBackend::Reactor],
+            backends: vec![IoBackend::Threaded, IoBackend::Reactor, IoBackend::Fleet],
+            cores: 0,
             shards: 1,
             seed: 7,
             swarm: false,
@@ -103,8 +109,10 @@ impl BenchWireOptions {
 /// One backend's measurements.
 #[derive(Debug, Clone)]
 pub struct BackendReport {
-    /// Backend name (`"threaded"` / `"reactor"`).
+    /// Backend name (`"threaded"` / `"reactor"` / `"fleet"`).
     pub backend: &'static str,
+    /// Event cores backing the daemon (1 except for the fleet).
+    pub cores: usize,
     /// Wall-clock seconds for the whole workload.
     pub wall_s: f64,
     /// Completed rounds (jobs × rounds) per wall-clock second.
@@ -125,6 +133,12 @@ pub struct BackendReport {
     /// unsharded run). Each shard completes every client round, so its
     /// `rounds_completed / wall_s` is that shard's rounds/s.
     pub per_shard: Vec<StatsSnapshot>,
+    /// Per-core daemon counters for an unsharded fleet leg, index =
+    /// core id (empty for the single-socket backends and for sharded
+    /// runs, where the per-shard split is the interesting axis). A
+    /// core's `rounds_completed / wall_s` is that core's rounds/s; its
+    /// histograms carry the core's own round-latency percentiles.
+    pub per_core: Vec<StatsSnapshot>,
 }
 
 /// The swarm leg's measurements (`--swarm`): one client thread hosting
@@ -202,13 +216,37 @@ impl BenchWireReport {
                     )
                 })
                 .collect();
+            // Per-core split of the fleet leg: each core's own counters
+            // and round-latency histogram (rounds complete on the job's
+            // owner core, so the rounds_per_s split is the ownership
+            // split).
+            let per_core: Vec<String> = b
+                .per_core
+                .iter()
+                .enumerate()
+                .map(|(c, st)| {
+                    format!(
+                        "{{\"core\": {c}, \"rounds_per_s\": {:.3}, \"packets\": {}, \
+                         \"rounds_completed\": {}, \"steered_frames\": {}, \
+                         \"round_latency_us\": {}}}",
+                        st.rounds_completed as f64 / b.wall_s,
+                        st.packets,
+                        st.rounds_completed,
+                        st.steered_frames,
+                        hist_json(&st.hist_round_latency)
+                    )
+                })
+                .collect();
             out.push_str(&format!(
-                "    {{\"backend\": \"{}\", \"wall_s\": {:.6}, \"rounds_per_s\": {:.3}, \
+                "    {{\"backend\": \"{}\", \"cores\": {}, \"wall_s\": {:.6}, \
+                 \"rounds_per_s\": {:.3}, \
                  \"bytes_per_round\": {:.1}, \"client_bytes\": {}, \"retransmissions\": {}, \
                  \"server_packets\": {}, \"rounds_completed\": {}, \"workers_spawned\": {}, \
                  \"idle_wakeups\": {}, \"frames_pooled\": {}, \"pool_misses\": {}, \
-                 \"round_latency_us\": {}, \"per_shard\": [{}]}}{}\n",
+                 \"steered_frames\": {}, \"round_latency_us\": {}, \"per_shard\": [{}], \
+                 \"per_core\": [{}]}}{}\n",
                 b.backend,
+                b.cores,
                 b.wall_s,
                 b.rounds_per_s,
                 b.bytes_per_round,
@@ -220,8 +258,10 @@ impl BenchWireReport {
                 b.server.idle_wakeups,
                 b.server.frames_pooled,
                 b.server.pool_misses,
+                b.server.steered_frames,
                 hist_json(&b.round_latency),
                 per_shard.join(", "),
+                per_core.join(", "),
                 if i + 1 < self.backends.len() { "," } else { "" }
             ));
         }
@@ -288,6 +328,19 @@ impl BenchWireReport {
                         s,
                         st.rounds_completed as f64 / b.wall_s,
                         st.packets
+                    ));
+                }
+            }
+            if b.per_core.len() > 1 {
+                for (c, st) in b.per_core.iter().enumerate() {
+                    out.push_str(&format!(
+                        "  core{}\t\t{:.1}\t\t\t{}\t\t\t\t\t{}\t{}\t{}\n",
+                        c,
+                        st.rounds_completed as f64 / b.wall_s,
+                        st.packets,
+                        st.hist_round_latency.quantile(0.50),
+                        st.hist_round_latency.quantile(0.99),
+                        st.hist_round_latency.max
                     ));
                 }
             }
@@ -376,6 +429,7 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
     let serve_opts = ServeOptions {
         profile: opts.profile.clone(),
         io_backend: backend,
+        cores: opts.cores,
         downlink_chaos: opts.downlink_chaos,
         chaos_seed: opts.chaos_seed,
         ..ServeOptions::default()
@@ -422,11 +476,20 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
     for st in &per_shard {
         server.merge(st);
     }
+    let cores = handles.iter().map(|h| h.cores()).max().unwrap_or(1);
+    // The per-core split is reported for the unsharded fleet leg (in a
+    // sharded run the per-shard split is the axis that matters).
+    let per_core = if backend == IoBackend::Fleet && handles.len() == 1 {
+        handles[0].per_core_stats()
+    } else {
+        Vec::new()
+    };
     for h in handles {
         h.shutdown();
     }
     Ok(BackendReport {
         backend: backend.name(),
+        cores,
         wall_s,
         rounds_per_s: total_rounds / wall_s,
         bytes_per_round: client_bytes as f64 / total_rounds,
@@ -435,6 +498,7 @@ fn run_backend(opts: &BenchWireOptions, backend: IoBackend) -> Result<BackendRep
         round_latency,
         server,
         per_shard,
+        per_core,
     })
 }
 

@@ -292,10 +292,13 @@ pub struct DeployPreset {
     pub name: String,
     /// One-line human description.
     pub summary: String,
-    /// I/O backend name: `threaded` or `reactor`.
+    /// I/O backend name: `threaded`, `reactor` or `fleet`.
     pub io: String,
     /// Shard daemons to run (1 = single server).
     pub shards: u8,
+    /// Reactor cores for the `fleet` backend (0 = auto-size to the
+    /// host). Ignored by the single-socket backends.
+    pub cores: usize,
     /// Switch profile name: `high` or `low`.
     pub profile: String,
     /// Register-memory override in bytes (None = profile default).
@@ -319,6 +322,7 @@ const ALLOWED_KEYS: &[&str] = &[
     "summary",
     "deploy.io",
     "deploy.shards",
+    "deploy.cores",
     "deploy.profile",
     "deploy.memory",
     "limits.host_bytes",
@@ -375,7 +379,7 @@ impl DeployPreset {
         let io = get_str(t, "deploy.io", "threaded")?;
         if crate::server::IoBackend::parse(&io).is_none() {
             return Err(ConfigError::Invalid(format!(
-                "preset key 'deploy.io' must be threaded|reactor, got '{io}'"
+                "preset key 'deploy.io' must be threaded|reactor|fleet, got '{io}'"
             )));
         }
         let profile = get_str(t, "deploy.profile", "high")?;
@@ -390,6 +394,14 @@ impl DeployPreset {
                 "preset key 'deploy.shards' must be in [1, 16], got {shards}"
             )));
         }
+        // 0 = auto-size; explicit counts are bounded by the fleet cap.
+        let cores = get_usize(t, "deploy.cores", 0)?;
+        if cores > crate::server::fleet::MAX_FLEET_CORES {
+            return Err(ConfigError::Invalid(format!(
+                "preset key 'deploy.cores' must be in [0, {}], got {cores}",
+                crate::server::fleet::MAX_FLEET_CORES
+            )));
+        }
         let memory_bytes = match t.get("deploy.memory") {
             None => None,
             Some(_) => Some(get_usize(t, "deploy.memory", 0)?),
@@ -399,6 +411,7 @@ impl DeployPreset {
             summary: get_str(t, "summary", "")?,
             io,
             shards: shards as u8,
+            cores,
             profile,
             memory_bytes,
             limits: PresetLimits::from_table(t)?,
@@ -553,7 +566,8 @@ mod tests {
     fn builtins_cover_the_scenario_matrix() {
         let by_name = |n: &str| load_preset(n).unwrap();
         let dc = by_name("datacenter");
-        assert_eq!(dc.io, "reactor");
+        assert_eq!(dc.io, "fleet", "datacenter must exercise the multi-core fleet");
+        assert_eq!(dc.cores, 2, "datacenter pins a reproducible fleet size");
         assert!(dc.shards >= 2, "datacenter must exercise the shard plane");
         assert!(dc.is_clean());
         let edge = by_name("edge");
@@ -586,6 +600,9 @@ mod tests {
             "[deploy]\nio = \"uring\"\n",
             "[deploy]\nshards = 0\n",
             "[deploy]\nshards = 17\n",
+            "[deploy]\ncores = \"2\"\n",
+            "[deploy]\ncores = 17\n",
+            "[deploy]\ncores = -1\n",
             "[chaos.up]\ndrop = 1.5\n",
             "[chaos.down]\ncorrupt = -0.1\n",
             "[mix]\nbits_b = 1\n",

@@ -11,17 +11,19 @@
 //! fediac fig4   [--partition iid|dirichlet]
 //! fediac theory [--d 100000] [--clients 20] [--a 3] [--b 12]
 //! fediac serve  [--preset datacenter|edge|adversarial|paper|FILE.toml]
-//!               [--bind 0.0.0.0:7177] [--io threaded|reactor]
-//!               [--ps high|low] [--memory BYTES]
+//!               [--bind 0.0.0.0:7177] [--io threaded|reactor|fleet]
+//!               [--cores N] [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-drop 0.0] [--down-dup 0.0]
 //!               [--down-reorder 0.0] [--down-corrupt 0.0] [--chaos-seed 0]
 //!               [--stats-every 10] [--metrics-interval 0] [--trace-dump PATH]
 //! fediac shard-serve [--preset NAME] [--bind-base 0.0.0.0:7177] [--shards 2]
-//!               [--io threaded|reactor] [--ps high|low] [--memory BYTES]
+//!               [--io threaded|reactor|fleet] [--cores N]
+//!               [--ps high|low] [--memory BYTES]
 //!               [--host-bytes BYTES] [--down-*…] [--chaos-seed 0]
 //!               [--stats-every 10] [--metrics-interval 0] [--trace-dump PATH]
 //! fediac bench-wire [--smoke] [--jobs 4] [--rounds 3] [--clients 2]
-//!               [--d 4096] [--payload 1408] [--io both|threaded|reactor]
+//!               [--d 4096] [--payload 1408]
+//!               [--io both|threaded|reactor|fleet] [--cores N]
 //!               [--ps high|low] [--memory BYTES] [--seed 7]
 //!               [--shards N] [--swarm] [--swarm-sockets 8]
 //!               [--down-drop 0.0] [--down-dup 0.0] [--down-reorder 0.0]
@@ -399,7 +401,11 @@ fn serve_options_from(
         .unwrap_or_else(fediac::server::IoBackend::from_env);
     let io_name = args.get_str("io", default_io.name());
     let io_backend = fediac::server::IoBackend::parse(&io_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown --io '{io_name}' (threaded|reactor)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown --io '{io_name}' (threaded|reactor|fleet)"))?;
+    // --cores sizes the fleet backend (0 = auto); default honours the
+    // preset's deploy.cores, same precedence as --io above.
+    let default_cores = preset.as_ref().map(|p| p.cores).unwrap_or(0);
+    let cores = args.get_usize("cores", default_cores)?;
     Ok((
         fediac::server::ServeOptions {
             bind,
@@ -408,6 +414,7 @@ fn serve_options_from(
             downlink_chaos,
             chaos_seed,
             io_backend,
+            cores,
             host_budget: None,
             trace: trace_dump.as_ref().map(|(rec, _)| std::sync::Arc::clone(rec)),
         },
@@ -460,7 +467,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fediac::info!(
             "pkts={} jobs={} rounds={} dup={} spill={} spill_drop={} waves={} \
              stalls={} idle_rel={} reserve_sup={} spoof={} bad_aux={} err={} pooled={} \
-             pool_miss={} round_p50_us={} round_p99_us={}",
+             pool_miss={} steered={} round_p50_us={} round_p99_us={}",
             s.packets,
             s.jobs_created,
             s.rounds_completed,
@@ -476,6 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.decode_errors,
             s.frames_pooled,
             s.pool_misses,
+            s.steered_frames,
             s.hist_round_latency.quantile(0.50),
             s.hist_round_latency.quantile(0.99)
         );
@@ -587,9 +595,11 @@ fn cmd_bench_wire(args: &Args) -> Result<()> {
     let io = args.get_str("io", "both");
     if io != "both" {
         let backend = fediac::server::IoBackend::parse(&io)
-            .ok_or_else(|| anyhow::anyhow!("unknown --io '{io}' (both|threaded|reactor)"))?;
+            .ok_or_else(|| anyhow::anyhow!("unknown --io '{io}' (both|threaded|reactor|fleet)"))?;
         opts.backends = vec![backend];
     }
+    // --cores N sizes the fleet legs (0 = auto-size to the host).
+    opts.cores = args.get_usize("cores", opts.cores)?;
     // --swarm: also measure the single-thread swarm multiplexer hosting
     // the same fleet (reactor daemon, ≤ --swarm-sockets sockets).
     opts.swarm = args.get_flag("swarm");

@@ -23,6 +23,11 @@
 //!   syscall instead of one; elsewhere they degrade to single-datagram
 //!   loops with identical semantics (the batch is a throughput
 //!   optimisation, never a behaviour change).
+//! * [`bind_reuseport`] — bind a UDP socket with `SO_REUSEPORT` set
+//!   *before* the bind, so N sockets (one per fleet core) can share one
+//!   port and the kernel spreads inbound flows across them; elsewhere it
+//!   degrades to a plain bind (at most one socket per port — the fleet
+//!   backend collapses to a single core, see [`REUSEPORT_NATIVE`]).
 
 use std::io;
 use std::net::{SocketAddr, UdpSocket};
@@ -384,8 +389,9 @@ mod mmsg {
     use super::SOCKADDR_BUF;
 
     /// Serialise a SocketAddr into a C sockaddr buffer; returns the
-    /// meaningful length (sockaddr_in: 16, sockaddr_in6: 28).
-    fn write_sockaddr(addr: &SocketAddr, buf: &mut [u8; SOCKADDR_BUF]) -> u32 {
+    /// meaningful length (sockaddr_in: 16, sockaddr_in6: 28). Also used
+    /// by the sibling `reuseport` module's hand-rolled bind(2).
+    pub(super) fn write_sockaddr(addr: &SocketAddr, buf: &mut [u8; SOCKADDR_BUF]) -> u32 {
         *buf = [0; SOCKADDR_BUF];
         match addr {
             SocketAddr::V4(a) => {
@@ -532,6 +538,94 @@ mod mmsg {
             return Err(io::Error::last_os_error());
         }
         Ok(rc as usize)
+    }
+}
+
+/// True when [`bind_reuseport`] genuinely joins an `SO_REUSEPORT` group
+/// (Linux); false where it degrades to a plain bind, in which case at
+/// most ONE socket can own a port and the multi-core fleet backend
+/// collapses to a single reactor. Callers sizing a fleet consult this
+/// before deciding how many member sockets to create.
+pub const REUSEPORT_NATIVE: bool = cfg!(target_os = "linux");
+
+// ---------------------------------------------------------------------
+// Linux: hand-declared socket(2)/setsockopt(2)/bind(2)/close(2) so a
+// UDP socket can be created with SO_REUSEPORT set BEFORE the bind —
+// std's UdpSocket::bind offers no pre-bind option hook. Constants match
+// the Linux ABI (SOL_SOCKET=1, SO_REUSEPORT=15, SOCK_DGRAM=2).
+// ---------------------------------------------------------------------
+#[cfg(target_os = "linux")]
+mod reuseport {
+    use std::io;
+    use std::net::{SocketAddr, UdpSocket};
+    use std::os::unix::io::FromRawFd;
+
+    use super::SOCKADDR_BUF;
+
+    const AF_INET: i32 = 2;
+    const AF_INET6: i32 = 10;
+    const SOCK_DGRAM: i32 = 2;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEPORT: i32 = 15;
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, optname: i32, optval: *const u8, optlen: u32) -> i32;
+        fn bind(fd: i32, addr: *const u8, addrlen: u32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub(super) fn bind_reuseport(addr: SocketAddr) -> io::Result<UdpSocket> {
+        let domain = match addr {
+            SocketAddr::V4(_) => AF_INET,
+            SocketAddr::V6(_) => AF_INET6,
+        };
+        let fd = unsafe { socket(domain, SOCK_DGRAM, 0) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        // From here on the raw fd must not leak on any error path.
+        let fail = |fd: i32| -> io::Error {
+            let e = io::Error::last_os_error();
+            unsafe { close(fd) };
+            e
+        };
+        let one: i32 = 1;
+        let rc = unsafe {
+            setsockopt(fd, SOL_SOCKET, SO_REUSEPORT, (&one as *const i32).cast::<u8>(), 4)
+        };
+        if rc < 0 {
+            return Err(fail(fd));
+        }
+        let mut name = [0u8; SOCKADDR_BUF];
+        let len = super::mmsg::write_sockaddr(&addr, &mut name);
+        if unsafe { bind(fd, name.as_ptr(), len) } < 0 {
+            return Err(fail(fd));
+        }
+        Ok(unsafe { UdpSocket::from_raw_fd(fd) })
+    }
+}
+
+/// Bind a UDP socket to `addr` as a member of that port's
+/// `SO_REUSEPORT` group: every socket bound this way to the same
+/// address shares the port, and the kernel steers each inbound *flow*
+/// (source/destination 4-tuple hash) to one member. This is the fleet
+/// backend's substrate — one member socket per core. Note the steering
+/// unit is the flow, not anything protocol-aware: a job's frames land
+/// wherever its clients' flows hash, so fleet cores forward misdirected
+/// frames to the owner core themselves.
+///
+/// On platforms without `SO_REUSEPORT` plumbing this is a plain
+/// `UdpSocket::bind` — the first caller wins the port and subsequent
+/// binds fail, which [`REUSEPORT_NATIVE`] lets callers anticipate.
+pub fn bind_reuseport(addr: SocketAddr) -> io::Result<UdpSocket> {
+    #[cfg(target_os = "linux")]
+    {
+        reuseport::bind_reuseport(addr)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        UdpSocket::bind(addr)
     }
 }
 
@@ -791,6 +885,46 @@ mod tests {
         let mut buf = [0u8; 8];
         let (n, _) = b.recv_from(&mut buf).unwrap();
         assert_eq!(&buf[..n], b"x");
+    }
+
+    #[test]
+    fn bind_reuseport_members_share_one_port() {
+        let first = bind_reuseport("127.0.0.1:0".parse().unwrap()).unwrap();
+        let addr = first.local_addr().unwrap();
+        if REUSEPORT_NATIVE {
+            // A second member joins the same concrete port, and a
+            // datagram sent to the shared port lands on exactly one of
+            // the two members.
+            let second = bind_reuseport(addr).unwrap();
+            assert_eq!(second.local_addr().unwrap(), addr);
+            for s in [&first, &second] {
+                s.set_nonblocking(true).unwrap();
+            }
+            let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+            tx.send_to(b"fleet", addr).unwrap();
+            let mut ready = Vec::new();
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                let n = wait_readable_many(
+                    &[&first, &second],
+                    Some(Duration::from_millis(50)),
+                    &mut ready,
+                )
+                .unwrap();
+                if n > 0 {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "datagram never surfaced");
+            }
+            assert_eq!(ready.len(), 1, "one flow must land on exactly one member");
+            let member = if ready[0] == 0 { &first } else { &second };
+            let mut buf = [0u8; 16];
+            let (n, _) = member.recv_from(&mut buf).unwrap();
+            assert_eq!(&buf[..n], b"fleet");
+        } else {
+            // Fallback: a plain bind — the port is exclusively owned.
+            assert!(bind_reuseport(addr).is_err());
+        }
     }
 
     #[test]

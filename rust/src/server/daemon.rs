@@ -10,8 +10,13 @@
 //! * [`IoBackend::Reactor`] → [`crate::server::reactor`]: one thread,
 //!   zero per-job threads or channels — a nonblocking socket, readiness
 //!   polling and a coarse timer wheel multiplex every job.
+//! * [`IoBackend::Fleet`] → [`crate::server::fleet`]: N reactor cores
+//!   sharing one port through an `SO_REUSEPORT` socket group, jobs
+//!   partitioned across cores by id hash, misdirected datagrams
+//!   forwarded core-to-core, and one fair-share [`HostBudget`] Arc
+//!   shared by every core.
 //!
-//! Both backends drive the same sans-I/O [`crate::server::Job`] state
+//! All backends drive the same sans-I/O [`crate::server::Job`] state
 //! machine, so the choice is invisible on the wire (PROTOCOL.md) and
 //! bit-exact (`tests/wire_backend.rs`).
 
@@ -25,11 +30,11 @@ use std::time::{Duration, Instant};
 use crate::configx::PsProfile;
 use crate::net::chaos::{ChaosDirection, ChaosLane};
 use crate::server::job::{JobLimits, Outgoing, JOIN_UNKNOWN_JOB};
-use crate::server::{reactor, threaded, HostBudget, ServerStats, StatsSnapshot};
+use crate::server::{fleet, reactor, threaded, HostBudget, ServerStats, StatsSnapshot};
 use crate::telemetry::{FlightRecorder, TraceNote};
 use crate::wire::{encode_frame, Header, WireKind};
 
-/// Which event engine hosts the jobs. Both engines run the identical
+/// Which event engine hosts the jobs. Every engine runs the identical
 /// sans-I/O [`crate::server::Job`] core; they differ only in how
 /// datagrams and timer deadlines reach it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -42,14 +47,20 @@ pub enum IoBackend {
     /// ([`crate::net::poll`]) and a coarse timer wheel. The switch-class
     /// discipline — thousands of clients on a fixed compute budget.
     Reactor,
+    /// N reactor cores on one port (`SO_REUSEPORT` socket group), jobs
+    /// partitioned across cores by id hash with core-to-core forwarding
+    /// for flow-misdirected datagrams — the whole machine serves, one
+    /// reactor discipline per core ([`ServeOptions::cores`]).
+    Fleet,
 }
 
 impl IoBackend {
-    /// Parse a backend name (`"threaded"` / `"reactor"`).
+    /// Parse a backend name (`"threaded"` / `"reactor"` / `"fleet"`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "threaded" => Some(IoBackend::Threaded),
             "reactor" => Some(IoBackend::Reactor),
+            "fleet" => Some(IoBackend::Fleet),
             _ => None,
         }
     }
@@ -59,6 +70,7 @@ impl IoBackend {
         match self {
             IoBackend::Threaded => "threaded",
             IoBackend::Reactor => "reactor",
+            IoBackend::Fleet => "fleet",
         }
     }
 
@@ -69,8 +81,9 @@ impl IoBackend {
     /// value panics rather than silently running the wrong backend.
     pub fn from_env() -> Self {
         match std::env::var("FEDIAC_IO") {
-            Ok(v) => IoBackend::parse(&v)
-                .unwrap_or_else(|| panic!("FEDIAC_IO='{v}' is not 'threaded' or 'reactor'")),
+            Ok(v) => IoBackend::parse(&v).unwrap_or_else(|| {
+                panic!("FEDIAC_IO='{v}' is not 'threaded', 'reactor' or 'fleet'")
+            }),
             Err(_) => IoBackend::default(),
         }
     }
@@ -97,6 +110,11 @@ pub struct ServeOptions {
     /// Which I/O engine hosts the jobs (`--io` on the CLI; tests inherit
     /// the `FEDIAC_IO` environment variable through `Default`).
     pub io_backend: IoBackend,
+    /// Reactor cores for the [`IoBackend::Fleet`] backend (`--cores` on
+    /// the CLI). `0` (the default) sizes the fleet automatically:
+    /// `min(available cores, 8)` where `SO_REUSEPORT` is native, one
+    /// core elsewhere. Ignored by the single-socket backends.
+    pub cores: usize,
     /// Host-memory accountant to charge job reservations against.
     /// `None` (the default) gives the daemon a private accountant with
     /// [`JobLimits::host_bytes`] per tenant; [`serve_sharded`] injects
@@ -121,18 +139,24 @@ impl Default for ServeOptions {
             downlink_chaos: None,
             chaos_seed: 0,
             io_backend: IoBackend::from_env(),
+            cores: 0,
             host_budget: None,
             trace: None,
         }
     }
 }
 
-/// Running daemon handle: address, live stats, shutdown.
+/// Running daemon handle: address, live stats, shutdown. Single-socket
+/// backends own one event thread and one stats block; the fleet backend
+/// owns one of each per core, and [`ServerHandle::stats`] folds the
+/// per-core blocks into one deployment view.
 pub struct ServerHandle {
-    addr: SocketAddr,
-    stats: Arc<ServerStats>,
-    stop: Arc<AtomicBool>,
-    dispatch: Option<JoinHandle<()>>,
+    pub(crate) addr: SocketAddr,
+    /// One stats block per event thread (exactly one for the threaded
+    /// and reactor backends; one per core for the fleet).
+    pub(crate) per_core: Vec<Arc<ServerStats>>,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) threads: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -141,15 +165,35 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Point-in-time copy of the daemon's counters.
+    /// Point-in-time copy of the daemon's counters — the K-way
+    /// [`StatsSnapshot::merge`] of every core's block, so a fleet
+    /// reports one deployment-wide view exactly like a single reactor.
     pub fn stats(&self) -> StatsSnapshot {
-        self.stats.snapshot()
+        let mut merged = StatsSnapshot::default();
+        for s in &self.per_core {
+            merged.merge(&s.snapshot());
+        }
+        merged
+    }
+
+    /// Per-core snapshots, index = core id (a single-element vector for
+    /// the single-socket backends). This is the fleet's per-core
+    /// telemetry surface: each entry carries that core's counters AND
+    /// its own round-latency histograms, which `bench-wire` reports as
+    /// per-core rounds/s and p99.
+    pub fn per_core_stats(&self) -> Vec<StatsSnapshot> {
+        self.per_core.iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Event threads backing this daemon (1 except for the fleet).
+    pub fn cores(&self) -> usize {
+        self.per_core.len()
     }
 
     /// Stop the event loop and join every backend thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.dispatch.take() {
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -158,7 +202,7 @@ impl ServerHandle {
 impl Drop for ServerHandle {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.dispatch.take() {
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -283,10 +327,7 @@ pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<Server
     let port: u16 = port
         .parse()
         .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "bind port must be a u16"))?;
-    let budget = base
-        .host_budget
-        .clone()
-        .unwrap_or_else(|| Arc::new(HostBudget::new(base.limits.host_bytes)));
+    let budget = base.host_budget.clone().unwrap_or_else(|| Arc::new(default_budget(base)));
     let mut handles = Vec::with_capacity(n_shards as usize);
     for s in 0..n_shards {
         let bind = if port == 0 {
@@ -310,8 +351,26 @@ pub fn serve_sharded(base: &ServeOptions, n_shards: u8) -> io::Result<Vec<Server
     Ok(handles)
 }
 
+/// The accountant a deployment gets when the caller injects none: the
+/// fleet backend defaults to fair-share arbitration (many tenants on
+/// many cores must not be starved first-come); the single-socket
+/// backends keep first-come semantics.
+pub(crate) fn default_budget(opts: &ServeOptions) -> HostBudget {
+    if opts.io_backend == IoBackend::Fleet {
+        HostBudget::new_fair(opts.limits.host_bytes)
+    } else {
+        HostBudget::new(opts.limits.host_bytes)
+    }
+}
+
 /// Bind a socket and start the selected I/O backend.
 pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
+    if opts.io_backend == IoBackend::Fleet {
+        // The fleet binds its own SO_REUSEPORT socket group (the option
+        // must be set before any bind, so the plain bind below would
+        // poison the port for the member sockets).
+        return fleet::serve_fleet(opts);
+    }
     let socket = UdpSocket::bind(&opts.bind)?;
     let addr = socket.local_addr()?;
     let stats = Arc::new(ServerStats::default());
@@ -323,10 +382,7 @@ pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
         chaos_seed: opts.chaos_seed,
         stats: Arc::clone(&stats),
         stop: Arc::clone(&stop),
-        budget: opts
-            .host_budget
-            .clone()
-            .unwrap_or_else(|| Arc::new(HostBudget::new(opts.limits.host_bytes))),
+        budget: opts.host_budget.clone().unwrap_or_else(|| Arc::new(default_budget(opts))),
         recorder: opts.trace.clone(),
     };
     crate::debug!("bound {addr} backend={}", opts.io_backend.name());
@@ -343,9 +399,10 @@ pub fn serve(opts: &ServeOptions) -> io::Result<ServerHandle> {
                 .name("fediac-reactor".into())
                 .spawn(move || reactor::reactor_loop(socket, shared))?
         }
+        IoBackend::Fleet => unreachable!("handled above"),
     };
 
-    Ok(ServerHandle { addr, stats, stop, dispatch: Some(dispatch) })
+    Ok(ServerHandle { addr, per_core: vec![stats], stop, threads: vec![dispatch] })
 }
 
 #[cfg(test)]
@@ -440,7 +497,7 @@ mod tests {
         assert!(stats.downlink_spoofs >= 1);
         match backend {
             IoBackend::Threaded => assert_eq!(stats.workers_spawned, 2),
-            IoBackend::Reactor => assert_eq!(stats.workers_spawned, 0),
+            IoBackend::Reactor | IoBackend::Fleet => assert_eq!(stats.workers_spawned, 0),
         }
         handle.shutdown();
     }
@@ -453,6 +510,62 @@ mod tests {
     #[test]
     fn reactor_daemon_starts_acks_join_and_shuts_down() {
         daemon_smoke(IoBackend::Reactor);
+    }
+
+    #[test]
+    fn fleet_daemon_starts_acks_join_and_shuts_down() {
+        daemon_smoke(IoBackend::Fleet);
+    }
+
+    #[test]
+    fn fleet_daemon_shares_one_fair_budget_across_cores() {
+        // Without an injected accountant the fleet builds a fair-share
+        // one and shares the single Arc across every core: a tenant
+        // admitted once must be refused a second over-budget Join even
+        // when the two Joins land on (and are owned by) different cores.
+        let spec = JobSpec {
+            d: 10_000,
+            n_clients: 2,
+            threshold_a: 1,
+            payload_budget: 8,
+            shard: ShardPlan::single(),
+        };
+        let worst_fits_once =
+            spec.host_bytes_per_round() * crate::server::job::MAX_LIVE_ROUNDS + 1024;
+        let budget = Arc::new(HostBudget::new_fair(worst_fits_once));
+        let handle = serve(&ServeOptions {
+            limits: JobLimits { host_bytes: worst_fits_once, ..JobLimits::default() },
+            io_backend: IoBackend::Fleet,
+            cores: 4,
+            host_budget: Some(Arc::clone(&budget)),
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let client = UdpSocket::bind("127.0.0.1:0").unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut statuses = Vec::new();
+        // Job ids spread across owner cores; each is a separate tenant,
+        // so under the deployment-wide budget only the first fits.
+        for job in [40u32, 41] {
+            let join =
+                encode_frame(&Header::control(WireKind::Join, job, 0, 0, 0), &spec.encode());
+            client.send_to(&join, handle.local_addr()).unwrap();
+            let mut buf = [0u8; 256];
+            let (n, _) = client.recv_from(&mut buf).unwrap();
+            statuses.push(decode_frame(&buf[..n]).unwrap().header.aux);
+        }
+        assert_eq!(statuses[0], crate::server::JOIN_OK, "first tenant must admit");
+        assert_eq!(
+            statuses[1],
+            crate::server::JOIN_BAD_SPEC,
+            "second tenant must see the shared budget spent"
+        );
+        handle.shutdown();
+        // Post-shutdown the shared accountant returns to zero: every
+        // core released what its jobs reserved.
+        for job in [40u32, 41] {
+            assert_eq!(budget.reserved(job), 0, "job {job} leaked budget");
+        }
     }
 
     #[test]
@@ -567,6 +680,11 @@ mod tests {
         downlink_chaos_drop(IoBackend::Reactor);
     }
 
+    #[test]
+    fn downlink_chaos_lane_reaches_fleet_sends() {
+        downlink_chaos_drop(IoBackend::Fleet);
+    }
+
     fn idle_reclaim_without_traffic(backend: IoBackend) {
         // One vote block of a two-block round stalls a job with resident
         // registers; the backend must reclaim them off the job's OWN
@@ -639,5 +757,12 @@ mod tests {
     #[test]
     fn reactor_idle_reclaim_is_timer_driven() {
         idle_reclaim_without_traffic(IoBackend::Reactor);
+    }
+
+    #[test]
+    fn fleet_idle_reclaim_is_timer_driven() {
+        // Only the owning core arms the job's timer, so the wakeup
+        // budget holds even with several cores sleeping alongside.
+        idle_reclaim_without_traffic(IoBackend::Fleet);
     }
 }

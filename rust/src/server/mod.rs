@@ -28,12 +28,20 @@
 //!   readiness poll ([`crate::net::poll`]) and a coarse timer wheel
 //!   drive *every* job from one thread — zero per-job threads or
 //!   channels, the switch-class resource discipline the paper assumes.
+//! * [`fleet`] — the multi-core backend: N reactor cores, each owning a
+//!   member socket of one `SO_REUSEPORT` group on the shared port, with
+//!   jobs partitioned across cores by a `job_id` hash
+//!   ([`fleet::owner_core`]) so every job's state stays core-local.
+//!   Kernel REUSEPORT steering is per-flow, not per-job, so cores
+//!   forward misdirected datagrams to the owner core
+//!   ([`ServerStats::steered_frames`]) over per-core inboxes.
 //!
-//! Backend choice is wire-invisible: both drive the same [`Job`] state
+//! Backend choice is wire-invisible: all drive the same [`Job`] state
 //! machine, so their GIA/aggregate outputs are bit-identical
 //! (`tests/wire_backend.rs` enforces this against the simulator too).
 
 pub mod daemon;
+pub mod fleet;
 pub mod job;
 pub mod reactor;
 pub mod threaded;
@@ -51,22 +59,49 @@ use std::sync::Mutex;
 
 use crate::telemetry::{Hist, HistSummary};
 
+/// How a [`HostBudget`] arbitrates the shared cap between tenants.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BudgetMode {
+    /// Each tenant may reserve up to the whole cap — whoever asks first
+    /// wins, and a single tenant can starve every later arrival.
+    #[default]
+    FirstCome,
+    /// Equal split across *live* tenants (current holders plus the
+    /// requester), DSLab-style throughput sharing: with L live tenants no
+    /// single tenant may hold more than `cap / L`, and the sum of all
+    /// reservations is additionally bounded by the cap (holders admitted
+    /// under a smaller L keep what they hold — the split only governs new
+    /// reservations). Work-conserving: a lone tenant still gets the full
+    /// cap. The fleet backend defaults to this mode so many tenants
+    /// landing on many cores cannot be starved first-come.
+    FairShare,
+}
+
 /// Host-memory accountant: per-tenant (job-id-keyed) byte reservations
 /// against one cap. Each daemon normally owns a private accountant, but
 /// [`serve_sharded`] hands one `Arc<HostBudget>` to every shard daemon
 /// of a deployment so a tenant's [`JobLimits::host_bytes`] bounds its
 /// footprint across the *whole* shard set — previously each shard
-/// enforced the budget independently, quietly multiplying it by N.
+/// enforced the budget independently, quietly multiplying it by N. The
+/// fleet backend shares one accountant across all its cores the same
+/// way, in [`BudgetMode::FairShare`] by default.
 #[derive(Debug)]
 pub struct HostBudget {
     cap: usize,
+    mode: BudgetMode,
     by_job: Mutex<HashMap<u32, usize>>,
 }
 
 impl HostBudget {
-    /// Accountant allowing up to `cap` bytes per tenant.
+    /// Accountant allowing up to `cap` bytes per tenant (first-come).
     pub fn new(cap: usize) -> Self {
-        HostBudget { cap, by_job: Mutex::new(HashMap::new()) }
+        HostBudget { cap, mode: BudgetMode::FirstCome, by_job: Mutex::new(HashMap::new()) }
+    }
+
+    /// Accountant splitting `cap` equally across live tenants
+    /// ([`BudgetMode::FairShare`]).
+    pub fn new_fair(cap: usize) -> Self {
+        HostBudget { cap, mode: BudgetMode::FairShare, by_job: Mutex::new(HashMap::new()) }
     }
 
     /// The per-tenant byte cap.
@@ -74,26 +109,46 @@ impl HostBudget {
         self.cap
     }
 
+    /// The arbitration mode this accountant was built with.
+    pub fn mode(&self) -> BudgetMode {
+        self.mode
+    }
+
     /// Bytes currently reserved by tenant `job`.
     pub fn reserved(&self, job: u32) -> usize {
         self.by_job.lock().unwrap().get(&job).copied().unwrap_or(0)
     }
 
-    /// Reserve `bytes` for tenant `job`; false when the tenant's total
-    /// would exceed the cap (nothing is charged then). A refused or
-    /// zero-byte reservation leaves no map entry behind — unauthenticated
-    /// Join sprays with over-budget specs must not grow this table.
+    /// Reserve `bytes` for tenant `job`; false when the reservation would
+    /// break the arbitration rule (nothing is charged then). Under
+    /// [`BudgetMode::FirstCome`] the only rule is the tenant's own total
+    /// ≤ cap; under [`BudgetMode::FairShare`] the tenant's total must
+    /// also fit its equal share `cap / live` (live = current holders
+    /// plus this requester) and the sum over all tenants must fit the
+    /// cap. A refused or zero-byte reservation leaves no map entry
+    /// behind — unauthenticated Join sprays with over-budget specs must
+    /// not grow this table.
     pub fn try_reserve(&self, job: u32, bytes: usize) -> bool {
         let mut m = self.by_job.lock().unwrap();
         let cur = m.get(&job).copied().unwrap_or(0);
-        match cur.checked_add(bytes) {
-            Some(total) if total <= self.cap => {
-                if total > 0 {
-                    m.insert(job, total);
-                }
-                true
+        let Some(total) = cur.checked_add(bytes) else {
+            return false;
+        };
+        let allowed = match self.mode {
+            BudgetMode::FirstCome => total <= self.cap,
+            BudgetMode::FairShare => {
+                let live = m.len() + usize::from(!m.contains_key(&job));
+                let grand_total: usize = m.values().sum::<usize>().saturating_add(bytes);
+                total <= self.cap / live.max(1) && grand_total <= self.cap
             }
-            _ => false,
+        };
+        if allowed {
+            if total > 0 {
+                m.insert(job, total);
+            }
+            true
+        } else {
+            false
         }
     }
 
@@ -170,6 +225,11 @@ pub struct ServerStats {
     /// empty. Grows during warm-up only: steady-state rounds must hold
     /// this flat (`fediac bench-codec` / `bench-wire` assert it).
     pub pool_misses: AtomicU64,
+    /// Datagrams that landed on a non-owner fleet core (kernel
+    /// `SO_REUSEPORT` steering is per-flow, not per-job) and were
+    /// forwarded to their job's owner core. Always zero for the
+    /// single-socket backends.
+    pub steered_frames: AtomicU64,
     /// End-to-end round latency (first data frame of the round to the
     /// aggregate multicast), microseconds.
     pub hist_round_latency: Hist,
@@ -230,6 +290,8 @@ pub struct StatsSnapshot {
     pub frames_pooled: u64,
     /// See [`ServerStats::pool_misses`].
     pub pool_misses: u64,
+    /// See [`ServerStats::steered_frames`].
+    pub steered_frames: u64,
     /// See [`ServerStats::hist_round_latency`].
     pub hist_round_latency: HistSummary,
     /// See [`ServerStats::hist_vote_phase`].
@@ -267,6 +329,7 @@ impl StatsSnapshot {
         self.idle_wakeups += other.idle_wakeups;
         self.frames_pooled += other.frames_pooled;
         self.pool_misses += other.pool_misses;
+        self.steered_frames += other.steered_frames;
         self.hist_round_latency.merge(&other.hist_round_latency);
         self.hist_vote_phase.merge(&other.hist_vote_phase);
         self.hist_update_phase.merge(&other.hist_update_phase);
@@ -302,6 +365,7 @@ impl StatsSnapshot {
         counter("idle_wakeups", self.idle_wakeups);
         counter("frames_pooled", self.frames_pooled);
         counter("pool_misses", self.pool_misses);
+        counter("steered_frames", self.steered_frames);
         for (key, h) in [
             ("round_latency_us", &self.hist_round_latency),
             ("vote_phase_us", &self.hist_vote_phase),
@@ -361,6 +425,7 @@ impl ServerStats {
             idle_wakeups: self.idle_wakeups.load(Ordering::Relaxed),
             frames_pooled: self.frames_pooled.load(Ordering::Relaxed),
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            steered_frames: self.steered_frames.load(Ordering::Relaxed),
             hist_round_latency: self.hist_round_latency.summary(),
             hist_vote_phase: self.hist_vote_phase.summary(),
             hist_update_phase: self.hist_update_phase.summary(),
@@ -400,6 +465,7 @@ mod tests {
             &stats.idle_wakeups,
             &stats.frames_pooled,
             &stats.pool_misses,
+            &stats.steered_frames,
         ];
         for (i, c) in counters.iter().enumerate() {
             c.store(i as u64 + 1, Ordering::Relaxed);
@@ -446,6 +512,7 @@ mod tests {
             ("idle_wakeups", snap.idle_wakeups),
             ("frames_pooled", snap.frames_pooled),
             ("pool_misses", snap.pool_misses),
+            ("steered_frames", snap.steered_frames),
         ];
         for (i, (name, v)) in fields.iter().enumerate() {
             assert_eq!(*v, i as u64 + 1, "snapshot dropped or shuffled `{name}`");
@@ -490,6 +557,7 @@ mod tests {
                 doubled.idle_wakeups,
                 doubled.frames_pooled,
                 doubled.pool_misses,
+                doubled.steered_frames,
             ];
             assert_eq!(fields2[i], 2 * (i as u64 + 1), "merge dropped `{name}`");
         }
@@ -514,6 +582,7 @@ mod tests {
         let doc = json::parse(&line).unwrap();
         assert_eq!(doc.get("packets").unwrap().as_usize(), Some(1));
         assert_eq!(doc.get("pool_misses").unwrap().as_usize(), Some(20));
+        assert_eq!(doc.get("steered_frames").unwrap().as_usize(), Some(21));
         for key in [
             "round_latency_us",
             "vote_phase_us",
@@ -528,10 +597,10 @@ mod tests {
             }
         }
         let obj = doc.as_obj().unwrap();
-        assert_eq!(obj.len(), 25, "20 counters + 5 histograms");
+        assert_eq!(obj.len(), 26, "21 counters + 5 histograms");
     }
 
-    fn counter_refs(s: &ServerStats) -> [&AtomicU64; 20] {
+    fn counter_refs(s: &ServerStats) -> [&AtomicU64; 21] {
         [
             &s.packets,
             &s.decode_errors,
@@ -553,6 +622,7 @@ mod tests {
             &s.idle_wakeups,
             &s.frames_pooled,
             &s.pool_misses,
+            &s.steered_frames,
         ]
     }
 
@@ -606,5 +676,111 @@ mod tests {
             }
             assert_eq!(reverse, expected, "k={k}: merge must be fold-order independent");
         }
+    }
+
+    /// Per-core merge regression (ISSUE 9 bugfix satellite): N per-core
+    /// summaries that each saw the SAME global-max sample must merge to
+    /// exactly N samples at that value with the max itself unchanged —
+    /// an exact-max tracker that re-records or double-counts the shared
+    /// maximum would inflate the count or the tail quantiles. Pinned
+    /// N-way alongside the K-way union oracle above.
+    #[test]
+    fn n_way_merge_counts_a_shared_global_max_once_per_core() {
+        const MAX_US: u64 = 1 << 40; // deep bucket, far from the fillers
+        for n in [2usize, 4, 8] {
+            let mut merged = StatsSnapshot::default();
+            for core in 0..n {
+                let part = ServerStats::default();
+                // Every core saw the one global maximum exactly once,
+                // plus a few core-distinct small fillers.
+                part.hist_round_latency.record(MAX_US);
+                for _ in 0..core {
+                    part.hist_round_latency.record(7);
+                }
+                merged.merge(&part.snapshot());
+            }
+            let h = &merged.hist_round_latency;
+            assert_eq!(h.max, MAX_US, "n={n}: merged max must be the shared max");
+            let fillers = (n * (n - 1) / 2) as u64;
+            assert_eq!(
+                h.count(),
+                n as u64 + fillers,
+                "n={n}: shared max must count once per core, never more"
+            );
+            // The max's bucket holds exactly the n genuine sightings: the
+            // p99 of n maxima + tiny fillers still reports the max bucket,
+            // and dropping the fillers isolates the tracker itself.
+            let mut only_max = StatsSnapshot::default();
+            for _ in 0..n {
+                let part = ServerStats::default();
+                part.hist_round_latency.record(MAX_US);
+                only_max.merge(&part.snapshot());
+            }
+            assert_eq!(only_max.hist_round_latency.count(), n as u64);
+            assert_eq!(only_max.hist_round_latency.max, MAX_US);
+            assert_eq!(
+                only_max.hist_round_latency.quantile(1.0),
+                only_max.hist_round_latency.max,
+                "n={n}: top quantile must land in the max's bucket"
+            );
+        }
+    }
+
+    /// Fair-share arbitration: with L live tenants no tenant may grow
+    /// past cap/L, while a lone tenant still gets the whole cap
+    /// (work-conserving) and first-come mode keeps its old semantics.
+    #[test]
+    fn fair_share_budget_splits_the_cap_across_live_tenants() {
+        let fair = HostBudget::new_fair(1200);
+        assert_eq!(fair.mode(), BudgetMode::FairShare);
+        // Lone tenant: full cap available.
+        assert!(fair.try_reserve(1, 1200));
+        fair.release(1, 1200);
+        assert_eq!(fair.reserved(1), 0);
+
+        // Two live tenants: each is bounded by cap/2 = 600.
+        assert!(fair.try_reserve(1, 400));
+        assert!(fair.try_reserve(2, 400));
+        assert!(!fair.try_reserve(1, 300), "700 > 1200/2 must be refused");
+        assert!(fair.try_reserve(1, 200), "topping up to the 600 share is fine");
+        // First-come mode would have admitted the same 300-byte top-up.
+        let first_come = HostBudget::new(1200);
+        assert_eq!(first_come.mode(), BudgetMode::FirstCome);
+        assert!(first_come.try_reserve(1, 400));
+        assert!(first_come.try_reserve(2, 400));
+        assert!(first_come.try_reserve(1, 300));
+
+        // A newcomer shrinks the share: 1200/3 = 400, and the grand
+        // total stays bounded by the cap.
+        assert!(!fair.try_reserve(3, 401));
+        assert!(fair.try_reserve(3, 200));
+        assert_eq!(fair.reserved(1), 600);
+        assert_eq!(fair.reserved(2), 400);
+        assert_eq!(fair.reserved(3), 200);
+
+        // Releases revive the share: tenant 2 leaving returns to L=2.
+        fair.release(2, 400);
+        assert!(!fair.try_reserve(3, 401), "601 total > the cap/2 = 600 share");
+        assert!(fair.try_reserve(3, 400), "back to cap/2 = 600 per tenant");
+
+        // Refused and zero-byte reservations leave no entry behind.
+        assert!(!fair.try_reserve(9, usize::MAX));
+        assert!(fair.try_reserve(9, 0));
+        assert_eq!(fair.reserved(9), 0);
+    }
+
+    /// Fair-share never exceeds the deployment-wide cap even when the
+    /// live set grew after an earlier tenant grabbed a big share.
+    #[test]
+    fn fair_share_budget_grand_total_stays_under_the_cap() {
+        let fair = HostBudget::new_fair(1000);
+        assert!(fair.try_reserve(1, 1000), "lone tenant takes the cap");
+        // A newcomer's share is cap/2 = 500, but the cap is exhausted:
+        // nothing may be admitted until the incumbent releases.
+        assert!(!fair.try_reserve(2, 1));
+        fair.release(1, 600);
+        assert!(fair.try_reserve(2, 500));
+        assert!(!fair.try_reserve(2, 200), "700 total > the cap/2 = 500 share");
+        assert_eq!(fair.reserved(1) + fair.reserved(2), 900);
     }
 }

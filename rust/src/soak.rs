@@ -22,8 +22,8 @@
 //! the whole episode — preset pick, backend, chaos coin, client mix,
 //! chaos lanes — derives from the seed alone, so a failure reproduces
 //! from its ledger line. Episode scheduling stratifies seeds so a
-//! 4-episode smoke covers {threaded, reactor} × {clean, chaos} ×
-//! {1, N shards}.
+//! 4-episode smoke covers all three backends {threaded, reactor,
+//! fleet} plus {clean, chaos} × {1, N shards}.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -185,10 +185,10 @@ pub fn sample_episode(seed: u64, presets: &[String]) -> Result<EpisodePlan> {
     let pick = root.fork(1).below(presets.len());
     let preset_arg = presets[pick].clone();
     let preset = load_preset(&preset_arg).map_err(|e| anyhow!("preset '{preset_arg}': {e}"))?;
-    let backend = if root.fork(2).below(2) == 0 {
-        IoBackend::Threaded
-    } else {
-        IoBackend::Reactor
+    let backend = match root.fork(2).below(3) {
+        0 => IoBackend::Threaded,
+        1 => IoBackend::Reactor,
+        _ => IoBackend::Fleet,
     };
     // 3-in-4 chaos when the preset has knobs to apply; a clean preset
     // always runs clean.
@@ -226,15 +226,16 @@ pub fn sample_episode(seed: u64, presets: &[String]) -> Result<EpisodePlan> {
 /// Episode seed for slot `idx` of a soak run: a deterministic salt
 /// search over `mix64` candidates until the sampled episode lands in
 /// the stratum slot `idx` targets — preset `idx % presets`, backend
-/// alternating, chaos on a `[clean, chaos, chaos, clean]` cycle. Four
-/// episodes over the builtin presets therefore cover {threaded,
-/// reactor} × {clean, chaos} × {1, N shards}, while each returned seed
-/// alone still replays its episode.
+/// rotating through {threaded, reactor, fleet}, chaos on a
+/// `[clean, chaos, chaos, clean]` cycle. Four episodes over the builtin
+/// presets therefore cover every backend plus {clean, chaos} ×
+/// {1, N shards}, while each returned seed alone still replays its
+/// episode.
 pub fn schedule_seed(root: u64, idx: usize, presets: &[String]) -> Result<u64> {
     ensure!(!presets.is_empty(), "soak needs at least one preset");
     let target_preset = &presets[idx % presets.len()];
     let want_backend =
-        if idx % 2 == 0 { IoBackend::Threaded } else { IoBackend::Reactor };
+        [IoBackend::Threaded, IoBackend::Reactor, IoBackend::Fleet][idx % 3];
     let want_chaos = matches!(idx % 4, 1 | 2);
     let base = root ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     for salt in 0..4096u64 {
@@ -445,6 +446,11 @@ fn run_driver_episode(plan: &EpisodePlan, recorder: &Arc<FlightRecorder>) -> Res
             .then(|| preset.down.direction()),
         chaos_seed: plan.seed,
         io_backend: plan.backend,
+        // Auto-size fleet episodes to the host; single-socket backends
+        // ignore this. The injected budget Arc below is shared by every
+        // fleet core (and every shard), which the post-shutdown
+        // zero-reservation invariant exercises.
+        cores: 0,
         host_budget: Some(Arc::clone(&budget)),
         trace: Some(Arc::clone(recorder)),
     };
@@ -551,6 +557,7 @@ fn run_swarm_episode(plan: &EpisodePlan, recorder: &Arc<FlightRecorder>) -> Resu
             .then(|| preset.down.direction()),
         chaos_seed: plan.seed,
         io_backend: plan.backend,
+        cores: 0,
         host_budget: Some(Arc::clone(&budget)),
         trace: Some(Arc::clone(recorder)),
     };
@@ -941,6 +948,10 @@ mod tests {
             .collect();
         assert!(plans.iter().any(|p| p.backend == IoBackend::Threaded));
         assert!(plans.iter().any(|p| p.backend == IoBackend::Reactor));
+        assert!(
+            plans.iter().any(|p| p.backend == IoBackend::Fleet),
+            "no fleet episode scheduled"
+        );
         assert!(plans.iter().any(|p| p.chaos), "no chaos episode scheduled");
         assert!(plans.iter().any(|p| !p.chaos), "no clean episode scheduled");
         assert!(plans.iter().any(|p| p.shards == 1));

@@ -20,8 +20,8 @@ fn pick_corpus(rng: &mut Rng) -> &'static str {
 }
 
 /// Keys the preset schema types as numbers (targets for type swaps).
-const NUMERIC_KEYS: [&str; 6] =
-    ["shards", "d", "rounds", "payload", "clients_per_job", "host_bytes"];
+const NUMERIC_KEYS: [&str; 7] =
+    ["shards", "cores", "d", "rounds", "payload", "clients_per_job", "host_bytes"];
 
 /// Apply one random mutation to `text`, returning the mangled document.
 fn mutate(rng: &mut Rng, text: &str) -> String {

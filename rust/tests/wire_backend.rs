@@ -1,12 +1,16 @@
-//! I/O-backend equivalence tests: the threaded (thread-per-job) and
-//! reactor (single-thread event loop) backends must be **bit-exact**
-//! with each other and with the in-process `algorithms::fediac`
-//! simulation — single-server and N=2 sharded, clean and under
-//! both-direction chaos. Plus the reactor's whole point: ≥ 64 concurrent
-//! jobs served correctly from one thread with zero per-job spawns
-//! (asserted through `ServerStats::workers_spawned`) — and its client
-//! twin, the swarm multiplexer: bit-exact against the blocking driver
-//! and the simulation, clean and under chaos, 1k clients on one thread.
+//! I/O-backend equivalence tests: the threaded (thread-per-job),
+//! reactor (single-thread event loop) and fleet (SO_REUSEPORT
+//! multi-core) backends must be **bit-exact** with each other and with
+//! the in-process `algorithms::fediac` simulation — single-server and
+//! N=2 sharded, clean and under both-direction chaos. Plus each
+//! backend's whole point: the reactor serves ≥ 64 concurrent jobs from
+//! one thread with zero per-job spawns (asserted through
+//! `ServerStats::workers_spawned`); the fleet partitions jobs across
+//! cores exactly as `fleet::owner_core` predicts, with N reactor
+//! threads and nothing else (asserted through /proc and per-core
+//! stats); and the client twin, the swarm multiplexer, is bit-exact
+//! against the blocking driver and the simulation, clean and under
+//! chaos, 1k clients on one thread.
 
 use std::net::SocketAddr;
 use std::time::Duration;
@@ -25,7 +29,8 @@ use fediac::server::{serve, serve_sharded, IoBackend, ServeOptions};
 use fediac::util::{BitVec, Rng};
 
 const N_CLIENTS: usize = 4;
-const BACKENDS: [IoBackend; 2] = [IoBackend::Threaded, IoBackend::Reactor];
+const BACKENDS: [IoBackend; 3] =
+    [IoBackend::Threaded, IoBackend::Reactor, IoBackend::Fleet];
 
 // ---- simulation harness (the wire_loopback recipe) ------------------------
 
@@ -162,17 +167,20 @@ fn backends_bit_exact_single_server_vs_simulation() {
         let stats = handle.stats();
         assert_eq!(stats.jobs_created, 1);
         assert_eq!(stats.rounds_completed, 1, "{} backend", backend.name());
-        if backend == IoBackend::Reactor {
-            assert_eq!(stats.workers_spawned, 0, "reactor spawned a worker");
+        if backend != IoBackend::Threaded {
+            assert_eq!(stats.workers_spawned, 0, "{} spawned a worker", backend.name());
         }
         handle.shutdown();
         per_backend.push(outcomes);
     }
-    // Backend vs backend, client by client.
-    for (a, b) in per_backend[0].iter().zip(&per_backend[1]) {
-        assert_eq!(a.gia, b.gia, "threaded and reactor GIAs differ");
-        assert_eq!(a.aggregate, b.aggregate, "threaded and reactor aggregates differ");
-        assert_eq!(a.global_max, b.global_max);
+    // Backend vs backend, client by client: every adjacent pair (and by
+    // transitivity, every pair) must agree bit-for-bit.
+    for pair in per_backend.windows(2) {
+        for (a, b) in pair[0].iter().zip(&pair[1]) {
+            assert_eq!(a.gia, b.gia, "backend GIAs differ");
+            assert_eq!(a.aggregate, b.aggregate, "backend aggregates differ");
+            assert_eq!(a.global_max, b.global_max);
+        }
     }
 }
 
@@ -195,7 +203,7 @@ fn backends_bit_exact_sharded_n2_vs_simulation() {
         for (s, h) in handles.iter().enumerate() {
             let stats = h.stats();
             assert_eq!(stats.rounds_completed, 1, "shard {s} under {}", backend.name());
-            if backend == IoBackend::Reactor {
+            if backend != IoBackend::Threaded {
                 assert_eq!(stats.workers_spawned, 0, "shard {s} spawned a worker");
             }
         }
@@ -204,9 +212,11 @@ fn backends_bit_exact_sharded_n2_vs_simulation() {
         }
         per_backend.push(outcomes);
     }
-    for (a, b) in per_backend[0].iter().zip(&per_backend[1]) {
-        assert_eq!(a.gia, b.gia, "sharded: threaded and reactor GIAs differ");
-        assert_eq!(a.aggregate, b.aggregate, "sharded: aggregates differ");
+    for pair in per_backend.windows(2) {
+        for (a, b) in pair[0].iter().zip(&pair[1]) {
+            assert_eq!(a.gia, b.gia, "sharded: backend GIAs differ");
+            assert_eq!(a.aggregate, b.aggregate, "sharded: aggregates differ");
+        }
     }
 }
 
@@ -515,5 +525,80 @@ fn reactor_serves_64_jobs_from_one_thread() {
         stats.workers_spawned, 0,
         "the reactor must not spawn per-job workers"
     );
+    handle.shutdown();
+}
+
+// ---- fleet scale: 16 jobs partitioned across 4 cores ----------------------
+
+#[cfg(target_os = "linux")]
+#[test]
+fn fleet_partitions_16_jobs_across_4_cores() {
+    use fediac::server::fleet::owner_core;
+    const JOBS: usize = 16;
+    const CORES: usize = 4;
+    let d = 256;
+    let threads_before = thread_count();
+    let handle = serve(&ServeOptions {
+        io_backend: IoBackend::Fleet,
+        cores: CORES,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    assert_eq!(handle.cores(), CORES);
+    assert_eq!(
+        thread_count(),
+        threads_before + CORES,
+        "a fleet of N cores is exactly N reactor threads, nothing else"
+    );
+    let server = handle.local_addr();
+    std::thread::scope(|scope| {
+        for job in 0..JOBS {
+            scope.spawn(move || {
+                let seed = 2000 + job as u64;
+                let mut opts =
+                    ClientOptions::new(server.to_string(), 7100 + job as u32, 0, d, 1);
+                opts.threshold_a = 1;
+                opts.backend_seed = seed;
+                opts.payload_budget = 64;
+                opts.timeout = Duration::from_millis(300);
+                opts.max_retries = 100;
+                let k = opts.k;
+                let mut client = FediacClient::connect(opts).unwrap();
+                let update = synthetic_update(seed, d, 0, 1);
+                let out = client.run_round(1, &update).unwrap();
+                let votes = protocol::client_vote(&update, k, seed, 1, 0);
+                assert_eq!(out.gia, votes, "job {job}: wrong consensus");
+            });
+        }
+    });
+
+    // Aggregate view first: every job hosted, every round completed, no
+    // per-job workers on any core.
+    let stats = handle.stats();
+    assert_eq!(stats.jobs_created as usize, JOBS, "not every job was hosted");
+    assert_eq!(stats.rounds_completed as usize, JOBS, "not every round completed");
+    assert_eq!(stats.workers_spawned, 0, "fleet cores must not spawn per-job workers");
+
+    // Ownership: each job lives on exactly the core `owner_core` names,
+    // no matter which member socket the kernel's per-flow REUSEPORT
+    // hash delivered its datagrams to — misdirected flows were steered
+    // to the owner (counted in `steered_frames`), never served in
+    // place.
+    let per_core = handle.per_core_stats();
+    assert_eq!(per_core.len(), CORES);
+    let mut want = vec![0u64; CORES];
+    for job in 0..JOBS {
+        want[owner_core(7100 + job as u32, CORES)] += 1;
+    }
+    for (c, snap) in per_core.iter().enumerate() {
+        assert_eq!(
+            snap.jobs_created, want[c],
+            "core {c} hosts the wrong job set (steering failed?)"
+        );
+        assert!(
+            snap.steered_frames <= snap.packets,
+            "core {c}: steered more frames than it received"
+        );
+    }
     handle.shutdown();
 }
