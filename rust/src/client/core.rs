@@ -64,6 +64,12 @@ pub struct ClientStats {
     /// heavily replaying) server overflowed the bound, and the client
     /// may have paid a poll cycle to recover the dropped broadcast.
     pub pending_dropped: u64,
+    /// Timeout cycles where the wanted broadcast had already started
+    /// arriving — evidence the server quorum-closed the phase without
+    /// this client — so the core polled for the rest of the broadcast
+    /// instead of retransmitting an upload the server would only drop
+    /// (`ServerStats::late_after_close` on the other side).
+    pub quorum_resyncs: u64,
     /// Datagram bytes handed to the socket (after the loss lane) — the
     /// `fediac bench-wire` bytes/round numerator, uplink half.
     pub bytes_sent: u64,
@@ -88,6 +94,7 @@ impl ClientStats {
         self.rejoins += other.rejoins;
         self.stream_resets += other.stream_resets;
         self.pending_dropped += other.pending_dropped;
+        self.quorum_resyncs += other.quorum_resyncs;
         self.bytes_sent += other.bytes_sent;
         self.bytes_received += other.bytes_received;
         self.vote_rtt_us.merge(&other.vote_rtt_us);
@@ -119,6 +126,12 @@ pub struct CoreConfig {
     pub max_retries: usize,
     /// Which slice of a sharded deployment this endpoint talks to.
     pub shard: ShardPlan,
+    /// Round-closure quorum Q registered with the job (0 = legacy
+    /// all-N). Besides riding the spec, a nonzero quorum switches the
+    /// timeout path to broadcast re-sync: once any chunk of the wanted
+    /// broadcast has arrived, the phase evidently closed without this
+    /// client, so retransmitting the upload is pure reflection fodder.
+    pub quorum: u16,
 }
 
 impl CoreConfig {
@@ -130,6 +143,7 @@ impl CoreConfig {
             threshold_a: self.threshold_a,
             payload_budget: self.payload_budget as u16,
             shard: self.shard,
+            quorum: self.quorum,
         }
     }
 }
@@ -415,15 +429,22 @@ impl ClientCore {
         // actions below can borrow `self` freely.
         enum Due {
             Join,
-            Wait { round: u32, want: WireKind, rejoining: bool, n_frames: usize },
+            Wait { round: u32, want: WireKind, rejoining: bool, n_frames: usize, resync: bool },
         }
         let due = match &self.phase {
             Phase::Joining => Due::Join,
-            Phase::Waiting { round, want, rejoining, frames, .. } => Due::Wait {
+            Phase::Waiting { round, want, rejoining, frames, asm, .. } => Due::Wait {
                 round: *round,
                 want: *want,
                 rejoining: *rejoining,
                 n_frames: frames.len(),
+                // Quorum jobs: a partially-assembled wanted broadcast
+                // proves the phase closed server-side — the round went on
+                // without us, so re-uploading only feeds the server's
+                // late-after-close counter. Poll for the remaining
+                // chunks instead. (Legacy all-N jobs keep the historical
+                // retransmit-everything behaviour, bit for bit.)
+                resync: self.cfg.quorum > 0 && asm.is_some(),
             },
             _ => unreachable!("deadline armed outside a wait"),
         };
@@ -447,7 +468,7 @@ impl ClientCore {
                 self.stats.retransmissions += 1;
                 out_frames.push(self.join_datagram());
             }
-            Due::Wait { round, want, rejoining, n_frames } => {
+            Due::Wait { round, want, rejoining, n_frames, resync } => {
                 crate::debug!(
                     "job={} client={} round={round} timeout #{}: retransmitting {n_frames} \
                      frames and polling for {want:?}",
@@ -460,10 +481,14 @@ impl ClientCore {
                     self.stats.retransmissions += 1;
                     out_frames.push(self.join_datagram());
                 }
-                self.stats.retransmissions += n_frames as u64;
-                let Phase::Waiting { frames, .. } = &self.phase else { unreachable!() };
-                for f in frames.iter() {
-                    out_frames.push(self.scratch.copy(f));
+                if resync {
+                    self.stats.quorum_resyncs += 1;
+                } else {
+                    self.stats.retransmissions += n_frames as u64;
+                    let Phase::Waiting { frames, .. } = &self.phase else { unreachable!() };
+                    for f in frames.iter() {
+                        out_frames.push(self.scratch.copy(f));
+                    }
                 }
                 self.stats.polls += 1;
                 let poll_hdr = Header {

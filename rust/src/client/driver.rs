@@ -81,6 +81,10 @@ pub struct ClientOptions {
     /// sharded fan-out driver ([`crate::client::ShardedFediacClient`])
     /// sets it per endpoint, with `d` already narrowed to the sub-model.
     pub shard: ShardPlan,
+    /// Round-closure quorum Q registered with the job (0 = legacy
+    /// all-N rounds; see PROTOCOL.md §11). Must match across the job
+    /// like every other spec field.
+    pub quorum: u16,
 }
 
 impl ClientOptions {
@@ -102,6 +106,7 @@ impl ClientOptions {
             send_loss: 0.0,
             chaos: None,
             shard: ShardPlan::single(),
+            quorum: 0,
         }
     }
 
@@ -113,6 +118,7 @@ impl ClientOptions {
             threshold_a: self.threshold_a,
             payload_budget: self.payload_budget as u16,
             shard: self.shard,
+            quorum: self.quorum,
         }
     }
 
@@ -130,6 +136,7 @@ impl ClientOptions {
             timeout: self.timeout,
             max_retries: self.max_retries,
             shard: self.shard,
+            quorum: self.quorum,
         }
     }
 }

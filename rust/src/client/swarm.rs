@@ -29,6 +29,15 @@
 //! round it belongs to (reassembly is idempotent, duplicates are
 //! harmless). Uplink chaos is injected per socket through the same
 //! [`ChaosLane`] the blocking driver's `send_loss` alias uses.
+//!
+//! The swarm is also the vehicle for the client-churn fault plane
+//! (`net::churn`): a seeded [`ChurnPlan`] predetermines which clients
+//! die at a round boundary or right after their vote upload, which
+//! corpses rejoin stale (fresh core, same identity, old round counter —
+//! they re-sync from re-served broadcasts instead of contributing),
+//! which join late as a flash crowd, and which never come back. Quorum
+//! rounds (`SwarmOptions::quorum`, PROTOCOL.md §11) are what keeps the
+//! fleet making progress while all of that happens.
 
 use std::collections::HashMap;
 use std::net::UdpSocket;
@@ -42,6 +51,7 @@ use crate::client::driver::RoundOutcome;
 use crate::client::protocol;
 use crate::compress;
 use crate::net::chaos::{ChaosDirection, ChaosLane};
+use crate::net::churn::{ChurnConfig, ChurnPlan, ClientChurn};
 use crate::net::poll::{self, RecvBatch, TimerWheel};
 use crate::telemetry::HistSummary;
 use crate::util::{BitVec, Rng};
@@ -131,6 +141,14 @@ pub struct SwarmOptions {
     /// Costs memory (outcomes hold the GIA + lanes per round) — leave
     /// off for large fleets.
     pub collect_outcomes: bool,
+    /// Quorum Q stamped into every hosted job's spec (0 = legacy all-N
+    /// rounds; see PROTOCOL.md §11).
+    pub quorum: u16,
+    /// Client-churn plane: kills, stale rejoins, flash crowds,
+    /// permanent deaths. `None` (or a quiet config) leaves every client
+    /// immortal. The lifecycle plan derives from `chaos_seed`, so the
+    /// same `(chaos_seed, churn)` replays the same schedule.
+    pub churn: Option<ChurnConfig>,
 }
 
 impl SwarmOptions {
@@ -153,6 +171,8 @@ impl SwarmOptions {
             uplink_chaos: None,
             chaos_seed: 0,
             collect_outcomes: false,
+            quorum: 0,
+            churn: None,
         }
     }
 }
@@ -181,6 +201,24 @@ pub fn plan_fleet(total_clients: usize, clients_per_job: u16, seed: u64) -> Vec<
     plans
 }
 
+/// What the churn plane actually did during a run (all zero when the
+/// plane is off).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnSummary {
+    /// Clients killed by the plan (round-start and after-vote kills).
+    pub kills: usize,
+    /// Corpses that came back stale and resumed their run.
+    pub rejoins: usize,
+    /// Kills that never rejoined (their registration is the server's to
+    /// reclaim at the quorum close / idle reap).
+    pub permanent_deaths: usize,
+    /// Flash-crowd clients whose delayed first Join actually fired.
+    pub flash_joins: usize,
+    /// Churned clients that later exhausted retries and were written
+    /// off as casualties instead of failing the swarm.
+    pub stranded: usize,
+}
+
 /// What a completed swarm run measured.
 #[derive(Debug, Clone)]
 pub struct SwarmReport {
@@ -204,6 +242,8 @@ pub struct SwarmReport {
     /// Every client's round outcomes, indexed `[job][client][round-1]`
     /// — only when [`SwarmOptions::collect_outcomes`] was set.
     pub outcomes: Option<Vec<Vec<Vec<RoundOutcome>>>>,
+    /// What the churn plane did (zeros when it was off).
+    pub churn: ChurnSummary,
 }
 
 /// One hosted client: its protocol core plus the round math the
@@ -228,10 +268,20 @@ struct SwarmClient {
     round_started: Instant,
     /// An entry for this client is sitting in the timer wheel.
     armed: bool,
-    /// All rounds finished.
+    /// All rounds finished (or the client is permanently dead).
     done: bool,
     /// Collected outcomes (only with `collect_outcomes`).
     outcomes: Vec<RoundOutcome>,
+    /// This client's predetermined lifecycle (quiet without churn).
+    churn: ClientChurn,
+    /// Dark: killed, or a flash-crowd first Join still pending.
+    dead: bool,
+    /// When a dark client comes back (rejoin / delayed first join).
+    wake_at: Option<Instant>,
+    /// Died once and came back — planned kills never repeat.
+    revived: bool,
+    /// Stats banked from the core discarded at rejoin.
+    banked: ClientStats,
 }
 
 /// Phase-1 results a client needs to finish the round at aggregate time.
@@ -243,9 +293,27 @@ struct RoundCtx {
     residual_next: Vec<f32>,
 }
 
+/// What happened after a client digested an aggregate: the next round's
+/// first output, the natural end of its run, or a planned churn death.
+enum AfterRound {
+    Continue(ClientOutput),
+    Finished,
+    Dark,
+}
+
 impl SwarmClient {
+    /// The churn plan kills this client in its current round.
+    fn planned_kill(&self) -> bool {
+        !self.revived && self.churn.kill_at_round == Some(self.round as u32)
+    }
+
     /// Compute this round's update and votes and start phase 1.
-    fn begin_round(&mut self, opts: &SwarmOptions, now: Instant) -> Result<ClientOutput> {
+    /// `None` means the churn plan kills the client at this round's
+    /// start: it goes dark having sent nothing for the round.
+    fn begin_round(&mut self, opts: &SwarmOptions, now: Instant) -> Result<Option<ClientOutput>> {
+        if self.planned_kill() && !self.churn.after_vote {
+            return Ok(None);
+        }
         let plan = &opts.jobs[self.job_idx];
         let round = self.round;
         self.update = match &plan.updates {
@@ -288,7 +356,7 @@ impl SwarmClient {
         let local_max = compress::max_abs(&self.update);
         self.retx_at_round_start = self.core.stats.retransmissions;
         self.round_started = now;
-        Ok(self.core.start_vote(round as u32, &votes, local_max, now))
+        Ok(Some(self.core.start_vote(round as u32, &votes, local_max, now)))
     }
 
     /// Phase 1 done: quantise against the GIA and start phase 2 —
@@ -325,7 +393,7 @@ impl SwarmClient {
         latency: &mut HistSummary,
         rounds_completed: &mut u64,
         now: Instant,
-    ) -> Result<Option<ClientOutput>> {
+    ) -> Result<AfterRound> {
         let plan = &opts.jobs[self.job_idx];
         let ctx = self.ctx.take().expect("aggregate without a phase-1 context");
         latency.record_micros(now.duration_since(self.round_started));
@@ -347,10 +415,13 @@ impl SwarmClient {
         self.residual = ctx.residual_next;
         if self.round >= opts.rounds {
             self.done = true;
-            return Ok(None);
+            return Ok(AfterRound::Finished);
         }
         self.round += 1;
-        self.begin_round(opts, now).map(Some)
+        Ok(match self.begin_round(opts, now)? {
+            Some(out) => AfterRound::Continue(out),
+            None => AfterRound::Dark,
+        })
     }
 }
 
@@ -422,6 +493,21 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
         });
     }
 
+    // The churn plan covers the whole fleet by flat client index, so a
+    // seed pins every lifecycle regardless of job layout.
+    let total_clients: usize = opts.jobs.iter().map(|p| p.n_clients as usize).sum();
+    let churn_plan: Option<ChurnPlan> = match &opts.churn {
+        Some(cfg) if cfg.enabled() => {
+            anyhow::ensure!(
+                total_clients <= u16::MAX as usize,
+                "churn plane supports at most {} clients, swarm hosts {total_clients}",
+                u16::MAX
+            );
+            Some(ChurnPlan::new(cfg, opts.chaos_seed, total_clients as u16, opts.rounds as u32))
+        }
+        _ => None,
+    };
+
     // Build the fleet: job j lives on socket j % sockets_used; clients
     // are contiguous in one flat Vec, indexed by `base[job_idx] + cid`.
     let mut clients: Vec<SwarmClient> = Vec::new();
@@ -435,6 +521,10 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
             plan.job
         );
         for cid in 0..plan.n_clients {
+            let lifecycle = churn_plan
+                .as_ref()
+                .map(|p| *p.client(clients.len() as u16))
+                .unwrap_or_else(ClientChurn::quiet);
             clients.push(SwarmClient {
                 core: ClientCore::new(make_core_config(opts, plan, cid)),
                 job_idx,
@@ -449,6 +539,11 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
                 armed: false,
                 done: false,
                 outcomes: Vec::new(),
+                churn: lifecycle,
+                dead: false,
+                wake_at: None,
+                revived: false,
+                banked: ClientStats::default(),
             });
         }
     }
@@ -468,9 +563,19 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
     let mut io_bytes_received = 0u64;
     let mut io_bytes_sent = 0u64;
     let mut remaining = n_clients;
+    let mut churn_led = ChurnSummary::default();
 
-    // Kick every client's join.
+    // Kick every client's join; the flash crowd parks dark on the
+    // wheel instead and piles in `join_delay` later.
     for idx in 0..n_clients {
+        if !clients[idx].churn.join_delay.is_zero() {
+            let wake = started + clients[idx].churn.join_delay;
+            clients[idx].dead = true;
+            clients[idx].wake_at = Some(wake);
+            wheel.insert(wake, idx);
+            clients[idx].armed = true;
+            continue;
+        }
         let out = clients[idx].core.start_join(started);
         process_output(
             idx,
@@ -482,6 +587,7 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
             &mut latency,
             &mut rounds_completed,
             &mut remaining,
+            &mut churn_led,
             started,
         )?;
     }
@@ -491,13 +597,26 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
     while remaining > 0 {
         let now = Instant::now();
 
-        // 1. Fire due client timers (retransmit cycles / failures).
+        // 1. Fire due client timers (retransmit cycles / failures /
+        //    churn wake-ups).
         for idx in wheel.pop_due(now) {
             clients[idx].armed = false;
             if clients[idx].done || clients[idx].core.is_failed() {
                 continue; // stale entry of a finished client
             }
-            let out = clients[idx].core.on_tick(now);
+            let out = if clients[idx].dead {
+                let wake = clients[idx].wake_at.expect("dark client without a wake time");
+                if now < wake {
+                    // The dead core's old protocol deadline fired
+                    // first; park until the planned wake.
+                    wheel.insert(wake, idx);
+                    clients[idx].armed = true;
+                    continue;
+                }
+                revive(idx, &mut clients, opts, &mut churn_led, now)
+            } else {
+                clients[idx].core.on_tick(now)
+            };
             process_output(
                 idx,
                 out,
@@ -508,6 +627,7 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
                 &mut latency,
                 &mut rounds_completed,
                 &mut remaining,
+                &mut churn_led,
                 now,
             )?;
         }
@@ -532,6 +652,7 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
                 &mut latency,
                 &mut rounds_completed,
                 &mut remaining,
+                &mut churn_led,
                 &mut io_bytes_received,
             )?;
         }
@@ -559,6 +680,7 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
     let wall_s = started.elapsed().as_secs_f64().max(f64::EPSILON);
     let mut stats = ClientStats::default();
     for c in &clients {
+        stats.add(&c.banked);
         stats.add(&c.core.stats);
     }
     stats.bytes_sent = io_bytes_sent;
@@ -585,7 +707,68 @@ pub fn run(opts: &SwarmOptions) -> Result<SwarmReport> {
         round_latency: latency,
         stats,
         outcomes,
+        churn: churn_led,
     })
+}
+
+/// Take a client dark per its churn plan: it stops sending and
+/// receiving. A rejoinable corpse parks on the wheel until its wake
+/// time; a permanent death leaves the swarm for good — its server-side
+/// registration is the quorum close / idle reap's to reclaim.
+fn go_dark(
+    idx: usize,
+    clients: &mut [SwarmClient],
+    wheel: &mut TimerWheel<usize>,
+    churn: &mut ChurnSummary,
+    remaining: &mut usize,
+    now: Instant,
+) {
+    let c = &mut clients[idx];
+    c.dead = true;
+    c.ctx = None;
+    churn.kills += 1;
+    match c.churn.rejoin_after {
+        Some(delay) => {
+            let wake = now + delay;
+            c.wake_at = Some(wake);
+            if !c.armed {
+                wheel.insert(wake, idx);
+                c.armed = true;
+            }
+        }
+        None => {
+            churn.permanent_deaths += 1;
+            c.done = true;
+            *remaining -= 1;
+        }
+    }
+}
+
+/// Bring a dark client back: a flash-crowd client fires its delayed
+/// first Join; a corpse rejoins STALE — fresh protocol core, same
+/// identity, old round counter — so it re-enters the round it died in,
+/// discovers the fleet quorum-closed it, and re-syncs from the
+/// re-served broadcasts instead of contributing.
+fn revive(
+    idx: usize,
+    clients: &mut [SwarmClient],
+    opts: &SwarmOptions,
+    churn: &mut ChurnSummary,
+    now: Instant,
+) -> ClientOutput {
+    let c = &mut clients[idx];
+    if c.round == 0 {
+        churn.flash_joins += 1;
+    } else {
+        churn.rejoins += 1;
+        c.banked.add(&c.core.stats);
+        c.core = ClientCore::new(make_core_config(opts, &opts.jobs[c.job_idx], c.cid));
+        c.revived = true;
+    }
+    c.dead = false;
+    c.wake_at = None;
+    c.ctx = None;
+    c.core.start_join(now)
 }
 
 /// The core config for one hosted client.
@@ -600,6 +783,7 @@ fn make_core_config(opts: &SwarmOptions, plan: &SwarmJobPlan, cid: u16) -> CoreC
         timeout: opts.timeout,
         max_retries: opts.max_retries,
         shard: ShardPlan::single(),
+        quorum: opts.quorum,
     }
 }
 
@@ -618,6 +802,7 @@ fn drain_socket(
     latency: &mut HistSummary,
     rounds_completed: &mut u64,
     remaining: &mut usize,
+    churn: &mut ChurnSummary,
     io_bytes_received: &mut u64,
 ) -> Result<()> {
     // Indices to deliver to, computed per datagram (tiny: 1 for a
@@ -649,15 +834,19 @@ fn drain_socket(
                 let Some(&(_, base, n)) = jobs_by_id.get(&h.job) else { continue };
                 if h.client != u16::MAX {
                     // Directed (JoinAck / NotReady): exactly one owner.
-                    if h.client < n {
-                        targets.push(base + h.client as usize);
+                    // Dark clients hear nothing — their NIC is gone.
+                    let idx = base + h.client as usize;
+                    if h.client < n && !clients[idx].dead {
+                        targets.push(idx);
                     }
                 } else {
                     // Broadcast copy: every client of the job still
                     // waiting on this round can use it (the rest would
                     // ignore or re-stash a duplicate anyway).
                     for idx in base..base + n as usize {
-                        if clients[idx].core.waiting_round() == Some(h.round) {
+                        if !clients[idx].dead
+                            && clients[idx].core.waiting_round() == Some(h.round)
+                        {
                             targets.push(idx);
                         }
                     }
@@ -667,6 +856,9 @@ fn drain_socket(
                 h
             };
             for &idx in &targets {
+                if clients[idx].dead {
+                    continue; // went dark while this batch was handled
+                }
                 let out = clients[idx].core.handle_frame(&h, &payload_buf, now);
                 process_output(
                     idx,
@@ -678,6 +870,7 @@ fn drain_socket(
                     latency,
                     rounds_completed,
                     remaining,
+                    churn,
                     now,
                 )?;
             }
@@ -701,6 +894,7 @@ fn process_output(
     latency: &mut HistSummary,
     rounds_completed: &mut u64,
     remaining: &mut usize,
+    churn: &mut ChurnSummary,
     now: Instant,
 ) -> Result<()> {
     loop {
@@ -718,24 +912,61 @@ fn process_output(
             }
         }
         let Some(progress) = out.progress.take() else { return Ok(()) };
-        let c = &mut clients[idx];
         out = match progress {
             Progress::Joined => {
-                c.round = 1;
-                c.begin_round(opts, now)?
-            }
-            Progress::GiaReady { gia, global_max, .. } => c.on_gia(opts, gia, global_max, now),
-            Progress::AggregateReady { lanes, .. } => {
-                match c.on_aggregate(opts, lanes, latency, rounds_completed, now)? {
+                let c = &mut clients[idx];
+                // A stale rejoiner keeps its old round counter; a
+                // first-time join (flash crowd included) starts at 1.
+                c.round = c.round.max(1);
+                match c.begin_round(opts, now)? {
                     Some(next) => next,
                     None => {
+                        go_dark(idx, clients, wheel, churn, remaining, now);
+                        return Ok(());
+                    }
+                }
+            }
+            Progress::GiaReady { gia, global_max, .. } => {
+                let c = &clients[idx];
+                if c.planned_kill() && c.churn.after_vote {
+                    // Killed mid-upload: the votes went out, the
+                    // update never will.
+                    go_dark(idx, clients, wheel, churn, remaining, now);
+                    return Ok(());
+                }
+                clients[idx].on_gia(opts, gia, global_max, now)
+            }
+            Progress::AggregateReady { lanes, .. } => {
+                match clients[idx].on_aggregate(opts, lanes, latency, rounds_completed, now)? {
+                    AfterRound::Continue(next) => next,
+                    AfterRound::Finished => {
                         *remaining -= 1;
+                        return Ok(());
+                    }
+                    AfterRound::Dark => {
+                        go_dark(idx, clients, wheel, churn, remaining, now);
                         return Ok(());
                     }
                 }
             }
             Progress::Failed { reason } => {
+                let c = &mut clients[idx];
                 let plan = &opts.jobs[c.job_idx];
+                if c.revived || !c.churn.join_delay.is_zero() {
+                    // A churned client that fell too far behind the
+                    // fleet is a casualty of the fault plane, not a
+                    // harness bug: the quorum already closed its
+                    // rounds without it.
+                    crate::warn!(
+                        "swarm client {} of job {} stranded after churn: {reason}",
+                        c.cid,
+                        plan.job
+                    );
+                    churn.stranded += 1;
+                    c.done = true;
+                    *remaining -= 1;
+                    return Ok(());
+                }
                 bail!("swarm client {} of job {}: {reason}", c.cid, plan.job);
             }
         };

@@ -7,7 +7,9 @@
 pub mod preset;
 pub mod toml;
 
-pub use preset::{load_preset, ChaosKnobs, DeployPreset, PresetLimits, PresetMix, BUILTIN_PRESETS};
+pub use preset::{
+    load_preset, ChaosKnobs, ChurnKnobs, DeployPreset, PresetLimits, PresetMix, BUILTIN_PRESETS,
+};
 
 use crate::configx::toml::Table;
 

@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use crate::configx::toml::{self, Table, Value};
 use crate::configx::{ConfigError, PsProfile};
-use crate::net::ChaosDirection;
+use crate::net::{ChaosDirection, ChurnConfig};
 use crate::server::JobLimits;
 
 /// Names of the presets compiled into the binary, in listing order.
@@ -116,7 +116,7 @@ impl ChaosKnobs {
 }
 
 /// Per-job admission limits as plain preset data (mirrors
-/// [`JobLimits`], with the idle deadline expressed in ms).
+/// [`JobLimits`], with the deadlines expressed in ms).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PresetLimits {
     /// Host bytes one job may pin across its live rounds.
@@ -127,6 +127,9 @@ pub struct PresetLimits {
     pub idle_release_ms: u64,
     /// Full re-serves allowed per source address per round.
     pub reserve_budget: u32,
+    /// Quorum-round phase deadline, in milliseconds (PROTOCOL.md §11;
+    /// inert while `mix.quorum` is 0).
+    pub phase_deadline_ms: u64,
 }
 
 impl Default for PresetLimits {
@@ -137,6 +140,7 @@ impl Default for PresetLimits {
             spill_bytes: d.spill_bytes,
             idle_release_ms: d.idle_release_after.as_millis() as u64,
             reserve_budget: d.reserve_budget,
+            phase_deadline_ms: d.phase_deadline.as_millis() as u64,
         }
     }
 }
@@ -149,12 +153,13 @@ impl PresetLimits {
             spill_bytes: self.spill_bytes,
             idle_release_after: Duration::from_millis(self.idle_release_ms),
             reserve_budget: self.reserve_budget,
+            phase_deadline: Duration::from_millis(self.phase_deadline_ms),
         }
     }
 
     fn from_table(t: &Table) -> Result<Self, ConfigError> {
         let d = PresetLimits::default();
-        Ok(PresetLimits {
+        let limits = PresetLimits {
             host_bytes: get_usize(t, "limits.host_bytes", d.host_bytes)?,
             spill_bytes: get_usize(t, "limits.spill_bytes", d.spill_bytes)?,
             idle_release_ms: get_u64(t, "limits.idle_release_ms", d.idle_release_ms)?,
@@ -166,7 +171,73 @@ impl PresetLimits {
             .map_err(|_| {
                 ConfigError::Invalid("preset key 'limits.reserve_budget' out of range".into())
             })?,
-        })
+            phase_deadline_ms: get_u64(t, "limits.phase_deadline_ms", d.phase_deadline_ms)?,
+        };
+        if limits.phase_deadline_ms == 0 {
+            return Err(ConfigError::Invalid(
+                "preset key 'limits.phase_deadline_ms' must be >= 1".into(),
+            ));
+        }
+        Ok(limits)
+    }
+}
+
+/// Client-churn plane knobs as plain preset data (mirrors
+/// [`ChurnConfig`], with the rejoin delay expressed in ms). `Default`
+/// is a quiet plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnKnobs {
+    /// Probability a client is killed at any given round start.
+    pub kill_rate: f64,
+    /// Dark time before a corpse rejoins / a flash-crowd client's join
+    /// delay, in milliseconds (0 = every kill is permanent).
+    pub rejoin_delay_ms: u64,
+    /// Clients (highest ids) whose first Join is delayed.
+    pub flash_crowd: u16,
+}
+
+impl Default for ChurnKnobs {
+    fn default() -> Self {
+        let d = ChurnConfig::default();
+        ChurnKnobs {
+            kill_rate: d.kill_rate,
+            rejoin_delay_ms: d.rejoin_delay.as_millis() as u64,
+            flash_crowd: d.flash_crowd,
+        }
+    }
+}
+
+impl ChurnKnobs {
+    /// True when the plane would touch nobody.
+    pub fn is_quiet(&self) -> bool {
+        !self.config().enabled()
+    }
+
+    /// Convert to the runtime [`ChurnConfig`] (permanence rate keeps
+    /// its builtin default — it is not a preset knob).
+    pub fn config(&self) -> ChurnConfig {
+        ChurnConfig {
+            kill_rate: self.kill_rate,
+            rejoin_delay: Duration::from_millis(self.rejoin_delay_ms),
+            flash_crowd: self.flash_crowd,
+            ..ChurnConfig::default()
+        }
+    }
+
+    fn from_table(t: &Table) -> Result<Self, ConfigError> {
+        let d = ChurnKnobs::default();
+        let knobs = ChurnKnobs {
+            kill_rate: get_f64(t, "churn.kill_rate", d.kill_rate)?,
+            rejoin_delay_ms: get_u64(t, "churn.rejoin_delay_ms", d.rejoin_delay_ms)?,
+            flash_crowd: get_u16(t, "churn.flash_crowd", d.flash_crowd)?,
+        };
+        if !(0.0..=1.0).contains(&knobs.kill_rate) {
+            return Err(ConfigError::Invalid(format!(
+                "preset key 'churn.kill_rate' must be a probability in [0, 1], got {}",
+                knobs.kill_rate
+            )));
+        }
+        Ok(knobs)
     }
 }
 
@@ -200,6 +271,8 @@ pub struct PresetMix {
     pub swarm_clients: usize,
     /// Sockets the swarm spreads jobs over (1..=8).
     pub swarm_sockets: usize,
+    /// Quorum Q per job (0 = legacy all-N rounds; PROTOCOL.md §11).
+    pub quorum: u16,
 }
 
 impl Default for PresetMix {
@@ -218,6 +291,7 @@ impl Default for PresetMix {
             swarm: false,
             swarm_clients: 128,
             swarm_sockets: crate::client::swarm::MAX_SWARM_SOCKETS,
+            quorum: 0,
         }
     }
 }
@@ -239,6 +313,7 @@ impl PresetMix {
             swarm: get_bool(t, "mix.swarm", d.swarm)?,
             swarm_clients: get_usize(t, "mix.swarm_clients", d.swarm_clients)?,
             swarm_sockets: get_usize(t, "mix.swarm_sockets", d.swarm_sockets)?,
+            quorum: get_u16(t, "mix.quorum", d.quorum)?,
         };
         mix.validate()?;
         Ok(mix)
@@ -279,6 +354,12 @@ impl PresetMix {
         if self.swarm && self.swarm_clients == 0 {
             return bad("preset key 'mix.swarm_clients' must be >= 1".into());
         }
+        if self.quorum > self.clients_per_job {
+            return bad(format!(
+                "preset key 'mix.quorum' must be in [0, clients_per_job={}]",
+                self.clients_per_job
+            ));
+        }
         Ok(())
     }
 }
@@ -313,6 +394,8 @@ pub struct DeployPreset {
     pub down: ChaosKnobs,
     /// Client-fleet shape for soak/swarm.
     pub mix: PresetMix,
+    /// Client-churn plane knobs (quiet by default).
+    pub churn: ChurnKnobs,
 }
 
 /// Every dotted key a preset document may contain; anything else is a
@@ -329,6 +412,7 @@ const ALLOWED_KEYS: &[&str] = &[
     "limits.spill_bytes",
     "limits.idle_release_ms",
     "limits.reserve_budget",
+    "limits.phase_deadline_ms",
     "chaos.seed",
     "chaos.up.drop",
     "chaos.up.duplicate",
@@ -355,6 +439,10 @@ const ALLOWED_KEYS: &[&str] = &[
     "mix.swarm",
     "mix.swarm_clients",
     "mix.swarm_sockets",
+    "mix.quorum",
+    "churn.kill_rate",
+    "churn.rejoin_delay_ms",
+    "churn.flash_crowd",
 ];
 
 impl DeployPreset {
@@ -419,7 +507,17 @@ impl DeployPreset {
             up: ChaosKnobs::from_table(t, "chaos.up")?,
             down: ChaosKnobs::from_table(t, "chaos.down")?,
             mix: PresetMix::from_table(t)?,
+            churn: ChurnKnobs::from_table(t)?,
         };
+        // A churn plane that kills clients needs quorum rounds to keep
+        // closing; legacy all-N rounds would stall on the first corpse.
+        if preset.churn.kill_rate > 0.0 && preset.mix.quorum == 0 {
+            return Err(ConfigError::Invalid(
+                "preset churn: 'churn.kill_rate' > 0 requires 'mix.quorum' >= 1 \
+                 (all-N rounds cannot close without every client)"
+                    .into(),
+            ));
+        }
         // A sharded deployment needs every shard to own at least one
         // vote block, or the fan-out client has idle shards.
         let vote_blocks = preset.mix.d.div_ceil(8 * preset.mix.payload);
@@ -577,6 +675,13 @@ mod tests {
         let adv = by_name("adversarial");
         assert!(adv.down.corrupt > 0.0 || adv.up.corrupt > 0.0);
         assert!(adv.memory_bytes.unwrap() < 4096, "adversarial starves registers");
+        assert!(!adv.churn.is_quiet(), "adversarial must run the churn plane");
+        assert!(adv.mix.quorum >= 1, "churned rounds need a quorum to close");
+        assert!(adv.mix.quorum <= adv.mix.clients_per_job);
+        assert!(
+            adv.limits.limits().phase_deadline < adv.limits.limits().idle_release_after,
+            "phase deadline must close rounds before the idle reaper fires"
+        );
         let paper = by_name("paper");
         assert_eq!(paper.mix.clients_per_job, 20, "paper §V-A uses N=20");
         assert_eq!(paper.mix.threshold_a, 3);
@@ -611,6 +716,12 @@ mod tests {
             "[mix]\npayload = 7\n",
             "[mix]\nswarm_sockets = 9\n",
             "[limits]\nhost_bytes = -1\n",
+            "[limits]\nphase_deadline_ms = 0\n",
+            "[mix]\nquorum = 4\nclients_per_job = 3\n",
+            "[churn]\nkill_rate = 1.5\n",
+            "[churn]\nkill_rate = -0.1\n",
+            "[churn]\nkill_rate = 0.2\n", // kills without a quorum stall all-N rounds
+            "[churn]\nrejoin_delay_ms = -5\n",
         ];
         for doc in cases {
             assert!(

@@ -34,14 +34,14 @@
 //! fediac client [--server host:port | --shards host:p0,host:p1,…]
 //!               [--job 1] [--client-id 0]
 //!               [--clients 4] [--d 4096] [--rounds 2] [--a 3] [--b 12]
-//!               [--k-frac 0.05] [--seed 7] [--loss 0.0]
+//!               [--k-frac 0.05] [--seed 7] [--loss 0.0] [--quorum 0]
 //!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
 //!               [--chaos-corrupt 0.0] [--chaos-seed 1]
 //! fediac swarm  [--preset NAME] [--server host:port] [--clients 10000]
 //!               [--clients-per-job 64]
 //!               [--sockets 8] [--rounds 1] [--d 1024] [--a 3] [--b 12]
 //!               [--k-frac 0.05] [--payload 1408] [--timeout-ms 200]
-//!               [--max-retries 50] [--seed 7]
+//!               [--max-retries 50] [--seed 7] [--quorum 0]
 //!               [--chaos-drop 0.0] [--chaos-dup 0.0] [--chaos-reorder 0.0]
 //!               [--chaos-corrupt 0.0] [--chaos-seed SEED] [--json PATH]
 //! fediac soak   [--episodes 8] [--duration 300] [--seed 7]
@@ -709,6 +709,9 @@ fn cmd_client(args: &Args) -> Result<()> {
     opts.timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 200)?);
     opts.send_loss = args.get_f64("loss", 0.0)?;
     opts.k = protocol::votes_per_client(d, k_frac);
+    // --quorum Q: register a round-closure quorum (PROTOCOL.md §11).
+    // 0 (the default) keeps legacy all-N rounds and the 12-byte spec.
+    opts.quorum = args.get_u16("quorum", 0)?;
     // --chaos-*: run this client behind an in-process chaos proxy with
     // the same knobs applied to both directions.
     let chaos_dir = chaos_direction_from(args, "chaos")?;
@@ -854,6 +857,16 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         "chaos-seed",
         preset.as_ref().map(|p| p.chaos_seed).unwrap_or(seed),
     )?;
+    // --quorum Q (default: the preset's mix.quorum): quorum rounds per
+    // PROTOCOL.md §11. A preset with a live [churn] section also arms
+    // the client-churn plane — kills, stale rejoins, flash crowds —
+    // seeded from the same chaos seed, so one seed replays the run.
+    opts.quorum =
+        args.get_u16("quorum", mix.as_ref().map(|m| m.quorum).unwrap_or(0))?;
+    opts.churn = preset
+        .as_ref()
+        .filter(|p| !p.churn.is_quiet())
+        .map(|p| p.churn.config());
     opts.jobs = swarm::plan_fleet(clients, per_job, seed);
     let json_out = args.get_opt_str("json");
     args.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -877,6 +890,13 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         report.round_latency.quantile(0.99),
         report.round_latency.max
     );
+    if opts.churn.is_some() {
+        let c = &report.churn;
+        println!(
+            "# churn: kills={} rejoins={} permanent={} flash_joins={} stranded={}",
+            c.kills, c.rejoins, c.permanent_deaths, c.flash_joins, c.stranded
+        );
+    }
     if let Some(path) = json_out {
         let h = &report.round_latency;
         let json = format!(

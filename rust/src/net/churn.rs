@@ -1,0 +1,331 @@
+//! Deterministic client-churn plane: a seeded lifecycle injector that
+//! decides, ahead of time, which clients die mid-round, which corpses
+//! rejoin with stale state, which join late as a flash crowd, and which
+//! never come back at all.
+//!
+//! `net::chaos` attacks the *datagram* path (loss, dup, reorder,
+//! corruption); this module attacks the *client* path. Quorum rounds
+//! (`JobSpec::quorum`, PROTOCOL.md §11) exist precisely so a federation
+//! round survives these faults — the churn plane is the adversary the
+//! quorum close rule is measured against, driven by `client::swarm` and
+//! exercised end-to-end by the soak harness's `churn` episode class.
+//!
+//! **Determinism contract.** Mirrors [`crate::net::chaos::ChaosLane`]:
+//! every lifecycle decision comes from [`crate::util::Rng`] streams
+//! derived from a single seed. Each client forks its own stream
+//! (`seed ^ (cid << 16) ^ CHURN_SALT`) and consumes draws in a fixed
+//! order — one kill draw per round until the first kill lands, then one
+//! kill-point draw, then one permanence draw — so the same
+//! `(seed, config, n_clients, rounds)`
+//! always produces the identical [`ChurnPlan`], independent of packet
+//! timing or scheduling. Flash-crowd membership is structural (the last
+//! `flash_crowd` client ids), not drawn, so it cannot perturb the kill
+//! streams of other clients.
+//!
+//! **Fault classes** (all per client, all deterministic per seed):
+//!
+//! * *kill mid-round* — the client goes dark in round `kill_at_round`,
+//!   either at the round's start (nothing sent at all) or mid-phase,
+//!   right after its vote upload (`after_vote`: votes land, the update
+//!   never does); a quorum round closes without it at the phase
+//!   deadline either way;
+//! * *rejoin stale* — a killed client (unless permanently dead) comes
+//!   back `rejoin_delay` later with its old round counter, discovers the
+//!   round closed without it, and re-syncs from the broadcast instead of
+//!   retransmitting (`ClientStats::quorum_resyncs`);
+//! * *flash crowd* — the last `flash_crowd` clients delay their first
+//!   Join by `rejoin_delay`, piling in against rounds already in flight;
+//! * *permanent death* — a fraction `permanent_rate` of kills never
+//!   rejoin; their host-budget reservation and scoreboard slot are
+//!   reclaimed when the quorum round closes.
+
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Seed salt so a churn plan and a chaos lane built from the same base
+/// seed do not share streams.
+const CHURN_SALT: u64 = 0xC4C4_0B17;
+
+/// Churn knobs. `Default` is a quiet plane (nobody dies, nobody is
+/// late). Loaded from a preset's `[churn]` section (`configx`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnConfig {
+    /// Probability a live client is killed at the start of any given
+    /// round (drawn once per round until the first kill lands).
+    pub kill_rate: f64,
+    /// How long a killed client stays dark before rejoining, and how
+    /// long flash-crowd clients delay their first Join. Zero means
+    /// every kill is permanent.
+    pub rejoin_delay: Duration,
+    /// How many of the highest client ids join late (flash crowd).
+    pub flash_crowd: u16,
+    /// Fraction of kills that never rejoin regardless of
+    /// `rejoin_delay` (drawn once per killed client).
+    pub permanent_rate: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            kill_rate: 0.0,
+            rejoin_delay: Duration::from_millis(80),
+            flash_crowd: 0,
+            permanent_rate: 0.25,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// True when the plane will actually do anything.
+    pub fn enabled(&self) -> bool {
+        self.kill_rate > 0.0 || self.flash_crowd > 0
+    }
+}
+
+/// One client's predetermined lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientChurn {
+    /// Round in which the client goes dark (`None` = survives the
+    /// whole run). Kills land at protocol edges — the round's start or
+    /// right after the vote upload — so the set of full-round
+    /// contributors stays exactly predictable per seed.
+    pub kill_at_round: Option<u32>,
+    /// The kill lands after the phase-1 (vote) upload instead of at the
+    /// round's start: the victim's votes shape the GIA but its update
+    /// never reaches the aggregate (killed mid-upload).
+    pub after_vote: bool,
+    /// Dark time before the corpse rejoins with stale state. `None`
+    /// (with a kill) means permanent death.
+    pub rejoin_after: Option<Duration>,
+    /// Delay before the client's first Join (zero except for the flash
+    /// crowd).
+    pub join_delay: Duration,
+}
+
+impl ClientChurn {
+    /// A client untouched by the plane.
+    pub fn quiet() -> Self {
+        ClientChurn {
+            kill_at_round: None,
+            after_vote: false,
+            rejoin_after: None,
+            join_delay: Duration::ZERO,
+        }
+    }
+
+    /// True when this client is killed and never comes back.
+    pub fn permanent_death(&self) -> bool {
+        self.kill_at_round.is_some() && self.rejoin_after.is_none()
+    }
+
+    /// True when this client contributes to round `round` from its
+    /// start (it has joined on time and has not yet been killed).
+    /// Rejoined clients are *not* counted — they come back stale and
+    /// re-sync, so their contributions to post-rejoin rounds race the
+    /// quorum close and are not part of the guaranteed set.
+    pub fn full_participant(&self, round: u32) -> bool {
+        self.join_delay.is_zero() && self.kill_at_round.is_none_or(|k| round < k)
+    }
+
+    /// True when this client's votes are guaranteed to shape round
+    /// `round`'s GIA: every full participant, plus the victim of an
+    /// after-vote kill in that round (its votes went out before it
+    /// died).
+    pub fn guaranteed_voter(&self, round: u32) -> bool {
+        self.full_participant(round)
+            || (self.join_delay.is_zero() && self.after_vote && self.kill_at_round == Some(round))
+    }
+}
+
+/// The whole fleet's predetermined lifecycles plus summary counts.
+/// Built once per run from `(config, seed, n_clients, rounds)`; every
+/// consumer (swarm driver, soak oracle, tests) derives the same plan.
+#[derive(Debug, Clone)]
+pub struct ChurnPlan {
+    per_client: Vec<ClientChurn>,
+}
+
+impl ChurnPlan {
+    pub fn new(cfg: &ChurnConfig, seed: u64, n_clients: u16, rounds: u32) -> Self {
+        let flash_from = n_clients.saturating_sub(cfg.flash_crowd);
+        let per_client = (0..n_clients)
+            .map(|cid| {
+                let mut rng = Rng::new(seed ^ ((cid as u64) << 16) ^ CHURN_SALT);
+                let mut plan = ClientChurn::quiet();
+                if cid >= flash_from {
+                    plan.join_delay = cfg.rejoin_delay;
+                }
+                // Fixed draw order: one kill draw per round until the
+                // first kill, then one kill-point draw, then exactly
+                // one permanence draw.
+                for round in 1..=rounds {
+                    if rng.f64() < cfg.kill_rate {
+                        plan.kill_at_round = Some(round);
+                        plan.after_vote = rng.f64() < 0.5;
+                        let permanent =
+                            cfg.rejoin_delay.is_zero() || rng.f64() < cfg.permanent_rate;
+                        if !permanent {
+                            plan.rejoin_after = Some(cfg.rejoin_delay);
+                        }
+                        break;
+                    }
+                }
+                plan
+            })
+            .collect();
+        ChurnPlan { per_client }
+    }
+
+    /// A plan that touches nobody (churn disabled).
+    pub fn quiet(n_clients: u16) -> Self {
+        ChurnPlan { per_client: vec![ClientChurn::quiet(); n_clients as usize] }
+    }
+
+    pub fn client(&self, cid: u16) -> &ClientChurn {
+        &self.per_client[cid as usize]
+    }
+
+    pub fn n_clients(&self) -> u16 {
+        self.per_client.len() as u16
+    }
+
+    /// Clients guaranteed to contribute every frame of round `round`:
+    /// joined on time, not yet killed. This is the quorum-aware
+    /// reference set the soak oracle aggregates phase-2 updates over.
+    pub fn full_participants(&self, round: u32) -> Vec<u16> {
+        (0..self.per_client.len() as u16)
+            .filter(|&cid| self.per_client[cid as usize].full_participant(round))
+            .collect()
+    }
+
+    /// Clients whose votes are guaranteed in round `round`'s GIA: the
+    /// full participants plus that round's after-vote kill victims —
+    /// the quorum-aware reference set for the phase-1 consensus.
+    pub fn guaranteed_voters(&self, round: u32) -> Vec<u16> {
+        (0..self.per_client.len() as u16)
+            .filter(|&cid| self.per_client[cid as usize].guaranteed_voter(round))
+            .collect()
+    }
+
+    /// Number of clients killed at some point during the run.
+    pub fn kills(&self) -> usize {
+        self.per_client.iter().filter(|c| c.kill_at_round.is_some()).count()
+    }
+
+    /// Number of killed clients that never rejoin.
+    pub fn permanent_deaths(&self) -> usize {
+        self.per_client.iter().filter(|c| c.permanent_death()).count()
+    }
+
+    /// Number of clients whose first Join is delayed.
+    pub fn flash_crowd(&self) -> usize {
+        self.per_client.iter().filter(|c| !c.join_delay.is_zero()).count()
+    }
+
+    /// Largest quorum `q` such that at least `q` clients are full
+    /// participants of every round in `1..=rounds` — the tightest
+    /// quorum this plan can guarantee closes on data rather than on
+    /// zero-fill alone.
+    pub fn guaranteed_quorum(&self, rounds: u32) -> u16 {
+        (1..=rounds)
+            .map(|r| self.full_participants(r).len() as u16)
+            .min()
+            .unwrap_or(self.n_clients())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stormy() -> ChurnConfig {
+        ChurnConfig {
+            kill_rate: 0.3,
+            rejoin_delay: Duration::from_millis(50),
+            flash_crowd: 2,
+            permanent_rate: 0.25,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_plan_different_seed_different_plan() {
+        let cfg = stormy();
+        let a = ChurnPlan::new(&cfg, 0xFEED, 24, 8);
+        let b = ChurnPlan::new(&cfg, 0xFEED, 24, 8);
+        for cid in 0..24 {
+            assert_eq!(a.client(cid), b.client(cid), "client {cid} diverged across reruns");
+        }
+        // Across many seeds at kill_rate 0.3 some plan must differ.
+        let diverged = (0..32u64).any(|s| {
+            let c = ChurnPlan::new(&cfg, s, 24, 8);
+            (0..24).any(|cid| c.client(cid) != a.client(cid))
+        });
+        assert!(diverged, "32 distinct seeds all produced the 0xFEED plan");
+    }
+
+    #[test]
+    fn quiet_config_touches_nobody() {
+        let plan = ChurnPlan::new(&ChurnConfig::default(), 7, 16, 10);
+        for cid in 0..16 {
+            assert_eq!(*plan.client(cid), ClientChurn::quiet());
+        }
+        assert_eq!(plan.kills(), 0);
+        assert_eq!(plan.flash_crowd(), 0);
+        assert_eq!(plan.guaranteed_quorum(10), 16);
+    }
+
+    #[test]
+    fn flash_crowd_is_the_highest_ids_and_zero_rejoin_means_permanent() {
+        let cfg = ChurnConfig {
+            kill_rate: 1.0, // everyone dies in round 1
+            rejoin_delay: Duration::ZERO,
+            flash_crowd: 3,
+            permanent_rate: 0.0,
+        };
+        let plan = ChurnPlan::new(&cfg, 42, 8, 4);
+        for cid in 0..8 {
+            let c = plan.client(cid);
+            assert_eq!(c.kill_at_round, Some(1));
+            assert!(c.permanent_death(), "rejoin_delay=0 must make kills permanent");
+            assert_eq!(!c.join_delay.is_zero(), cid >= 5, "flash crowd is the top ids");
+        }
+        assert_eq!(plan.flash_crowd(), 3);
+        assert_eq!(plan.guaranteed_quorum(4), 0);
+    }
+
+    #[test]
+    fn full_participants_shrink_monotonically_and_bound_the_quorum() {
+        let cfg = ChurnConfig { kill_rate: 0.4, ..stormy() };
+        let plan = ChurnPlan::new(&cfg, 0xA5A5, 32, 6);
+        let mut prev = plan.full_participants(1).len();
+        for r in 2..=6 {
+            let cur = plan.full_participants(r).len();
+            assert!(cur <= prev, "kill-only lifecycle cannot grow the full-participant set");
+            prev = cur;
+        }
+        let q = plan.guaranteed_quorum(6);
+        for r in 1..=6 {
+            assert!(plan.full_participants(r).len() >= q as usize);
+        }
+        // Flash-crowd clients are never full participants of any round.
+        for cid in 30..32 {
+            assert!(!plan.client(cid).full_participant(1));
+        }
+    }
+
+    #[test]
+    fn draw_order_is_stable_under_flash_crowd_changes() {
+        // Flash membership is structural, so toggling it must not shift
+        // any client's kill stream.
+        let base = ChurnPlan::new(&ChurnConfig { flash_crowd: 0, ..stormy() }, 99, 16, 8);
+        let flashy = ChurnPlan::new(&ChurnConfig { flash_crowd: 4, ..stormy() }, 99, 16, 8);
+        for cid in 0..16 {
+            assert_eq!(
+                base.client(cid).kill_at_round,
+                flashy.client(cid).kill_at_round,
+                "flash-crowd membership perturbed client {cid}'s kill draw"
+            );
+        }
+    }
+}

@@ -1,9 +1,11 @@
 //! Network substrate: packets, Poisson arrivals, M/G/1 queues, the
 //! synthetic cellular traces that drive client upload rates (§V-A2), the
-//! deterministic chaos proxy for wire-path failure injection, and the
+//! deterministic chaos proxy for wire-path failure injection, the
+//! seeded client-churn plane behind quorum-round fault testing, and the
 //! readiness/timer primitives behind the reactor I/O backend.
 
 pub mod chaos;
+pub mod churn;
 pub mod mg1;
 pub mod packet;
 pub mod poisson;
@@ -14,6 +16,7 @@ pub use chaos::{
     chaos_proxy, ChaosConfig, ChaosDirection, ChaosHandle, ChaosLane, ChaosProxyOptions,
     ChaosSnapshot, LaneSnapshot, LaneStats,
 };
+pub use churn::{ChurnConfig, ChurnPlan, ClientChurn};
 pub use mg1::{pollaczek_khinchine, Mg1Queue};
 pub use packet::{elems_per_packet, frames_for_bits, packetize, Packet, Phase};
 pub use poisson::PoissonProcess;

@@ -421,6 +421,7 @@ mod tests {
             threshold_a: 1,
             payload_budget: 8,
             shard: ShardPlan::single(),
+            quorum: 0,
         }
     }
 
@@ -529,6 +530,7 @@ mod tests {
             threshold_a: 1,
             payload_budget: 8,
             shard: ShardPlan::single(),
+            quorum: 0,
         };
         let worst_fits_once =
             spec.host_bytes_per_round() * crate::server::job::MAX_LIVE_ROUNDS + 1024;
@@ -581,6 +583,7 @@ mod tests {
                 threshold_a: 1,
                 payload_budget: 8,
                 shard: ShardPlan { n_shards: 2, shard_id: s as u8 },
+                quorum: 0,
             };
             let join =
                 encode_frame(&Header::control(WireKind::Join, 11, 0, 0, 0), &spec.encode());
@@ -616,6 +619,7 @@ mod tests {
             threshold_a: 1,
             payload_budget: 8,
             shard: ShardPlan { n_shards: 2, shard_id: 0 },
+            quorum: 0,
         };
         let worst_fits_once =
             spec.host_bytes_per_round() * crate::server::job::MAX_LIVE_ROUNDS + 1024;
@@ -707,6 +711,7 @@ mod tests {
             threshold_a: 2,
             payload_budget: 8,
             shard: ShardPlan::single(),
+            quorum: 0,
         };
         let join = encode_frame(&Header::control(WireKind::Join, 9, 0, 0, 0), &spec.encode());
         client.send_to(&join, handle.local_addr()).unwrap();

@@ -198,11 +198,15 @@ impl Core {
                 let outp = slot.job.handle(&frame, from, now);
                 transmit(&self.member, &mut slot.lane, &outp.frames, now);
                 slot.job.recycle(outp.frames);
-                // One live wheel entry per job (None→Some edge only);
-                // deadlines never tighten, a fire re-arms fresh.
-                if let (None, Some(t)) = (slot.armed, outp.timer) {
-                    self.wheel.insert(t, job_id);
-                    slot.armed = Some(t);
+                // One live wheel entry per job, re-armed when the job's
+                // deadline moves earlier (a quorum phase deadline can
+                // tighten an idle-reclaim one); a superseded later entry
+                // fires as a harmless stale wakeup.
+                if let Some(t) = outp.timer {
+                    if slot.armed.is_none_or(|armed| t < armed) {
+                        self.wheel.insert(t, job_id);
+                        slot.armed = Some(t);
+                    }
                 }
             }
             Err(_) => {

@@ -108,6 +108,13 @@ pub struct JobLimits {
     /// default comfortably exceeds any sane retry policy while bounding
     /// the bytes one small spoofed frame can reflect at a victim.
     pub reserve_budget: u32,
+    /// Quorum phase deadline: once a round's phase has been open this
+    /// long *and* at least `JobSpec::quorum` clients have delivered
+    /// their full phase payload, the phase is force-closed with the
+    /// contributions at hand (missing ones count as zero). Armed from
+    /// the first data frame of each phase; irrelevant for `quorum = 0`
+    /// (legacy all-N) jobs, whose phases only ever close organically.
+    pub phase_deadline: Duration,
 }
 
 impl Default for JobLimits {
@@ -117,6 +124,7 @@ impl Default for JobLimits {
             spill_bytes: 4 << 20,
             idle_release_after: Duration::from_secs(30),
             reserve_budget: 128,
+            phase_deadline: Duration::from_secs(5),
         }
     }
 }
@@ -230,6 +238,41 @@ pub struct RoundTiming {
     pub total: Option<Duration>,
 }
 
+/// Per-client distinct-block arrival tally for one phase, driving
+/// quorum-based round closure. A client is a *participant* once every
+/// block of the phase has been seen from it at least once — spilled
+/// blocks count (they drain into the aggregate before any close), while
+/// duplicate and capacity-dropped deliveries never do, so the tally is
+/// exact under loss, reordering and retransmission.
+struct Participation {
+    n_blocks: usize,
+    /// One `n_blocks`-bit map per client id.
+    seen: Vec<BitVec>,
+    /// Clients whose map is full.
+    complete: u16,
+}
+
+impl Participation {
+    fn new(n_clients: usize, n_blocks: usize) -> Self {
+        Participation {
+            n_blocks,
+            seen: vec![BitVec::zeros(n_blocks.max(1)); n_clients],
+            complete: 0,
+        }
+    }
+
+    /// Record one validated, newly counted block from `client`.
+    fn record(&mut self, client: u16, block: usize) {
+        let map = &mut self.seen[client as usize];
+        if !map.get(block) {
+            map.set(block, true);
+            if map.count_ones() == self.n_blocks {
+                self.complete += 1;
+            }
+        }
+    }
+}
+
 /// One round's aggregation state.
 struct RoundState {
     // Phase 1: host-side counter mirror (retired waves land here) plus the
@@ -264,6 +307,17 @@ struct RoundState {
     /// round is stalled; drained into `hist_register_stall` when a wave
     /// next allocates.
     stall_since: Option<Instant>,
+    /// Phase-1 per-client participation (quorum close eligibility).
+    vote_part: Participation,
+    /// Phase-2 participation; geometry set when the GIA fixes `k_S`.
+    upd_part: Participation,
+    /// First validated `Update` frame of the round — arms the phase-2
+    /// quorum deadline (phase 1 arms from `started`).
+    upd_started: Option<Instant>,
+    /// Retry deadline for a quorum close that stalled on the register
+    /// file, so `next_timer` stays monotonic instead of re-returning an
+    /// already-elapsed phase deadline every tick.
+    close_retry_at: Option<Instant>,
 }
 
 impl RoundState {
@@ -290,6 +344,10 @@ impl RoundState {
             vote_done_at: None,
             timing: RoundTiming::default(),
             stall_since: None,
+            vote_part: Participation::new(spec.n_clients as usize, n_blocks),
+            upd_part: Participation::new(spec.n_clients as usize, 0),
+            upd_started: None,
+            close_retry_at: None,
         }
     }
 
@@ -417,6 +475,7 @@ impl RoundState {
                 ServerStats::bump(&stats.duplicates);
                 return PacketFate::Duplicate;
             }
+            self.vote_part.record(client, block);
         } else {
             // Beyond the register window (or the window is stalled on
             // memory): spill to host memory until the wave advances.
@@ -432,6 +491,7 @@ impl RoundState {
                 return PacketFate::SpillDropped;
             }
             self.vote_spill.insert(key, payload.to_vec());
+            self.vote_part.record(client, block);
             ServerStats::bump(&stats.spilled);
             return PacketFate::Spilled;
         }
@@ -544,6 +604,7 @@ impl RoundState {
         let window = window_blocks(memory_bytes, spec.payload_budget as usize).min(n_blocks);
         self.upd_acc = vec![0i32; k_s];
         self.upd_wave = Wave { n_blocks, window, start: 0 };
+        self.upd_part = Participation::new(spec.n_clients as usize, n_blocks);
         self.mark_vote_done(stats, now);
         if k_s == 0 {
             // Nothing passed the consensus threshold: the round's data
@@ -555,6 +616,123 @@ impl RoundState {
             ServerStats::bump(&stats.rounds_completed);
         }
         self.gia = Some(GiaReady { gia, encoded, global_max: self.local_max });
+    }
+
+    /// Forced phase-1 retirement (quorum met, deadline elapsed): retire
+    /// every remaining vote wave with whatever has arrived — a missing
+    /// contribution is implicitly a zero bitmap, which is exactly what an
+    /// abstaining client would have voted. Spill drains into each wave
+    /// before it retires, so every counted contribution lands in the
+    /// counters. Returns false when a wave cannot win registers right now
+    /// (the caller retries after a backoff).
+    fn force_votes(
+        &mut self,
+        spec: &JobSpec,
+        rf: &mut RegisterFile,
+        stats: &ServerStats,
+        now: Instant,
+    ) -> bool {
+        let d = spec.d as usize;
+        let epb = spec.vote_block_bits();
+        while !self.vote_wave.done() {
+            if self.vote_agg.is_none() {
+                let lo_dim = self.vote_wave.start * epb;
+                let wave_dims = (self.vote_wave.end() * epb).min(d) - lo_dim;
+                match VoteAggregator::new(
+                    rf,
+                    wave_dims,
+                    spec.n_clients as usize,
+                    spec.threshold_a as usize,
+                    epb,
+                ) {
+                    Ok(agg) => {
+                        if self.vote_wave.start > 0 {
+                            ServerStats::bump(&stats.waves);
+                        }
+                        self.end_stall(stats, now);
+                        self.vote_agg = Some(agg);
+                        self.drain_vote_spill(stats);
+                    }
+                    Err(_) => {
+                        ServerStats::bump(&stats.register_stalls);
+                        self.stall_since.get_or_insert(now);
+                        return false;
+                    }
+                }
+            }
+            let agg = self.vote_agg.take().unwrap();
+            let lo_dim = self.vote_wave.start * epb;
+            let wave_dims = agg.counters().len();
+            self.counters[lo_dim..lo_dim + wave_dims].copy_from_slice(agg.counters());
+            agg.release(rf);
+            self.vote_wave.start = self.vote_wave.end();
+        }
+        self.vote_spill.clear();
+        true
+    }
+
+    /// Forced phase-2 retirement — the update twin of
+    /// [`RoundState::force_votes`] (missing lanes are implicitly zero).
+    fn force_updates(
+        &mut self,
+        spec: &JobSpec,
+        rf: &mut RegisterFile,
+        stats: &ServerStats,
+        now: Instant,
+    ) -> bool {
+        let k_s = self.upd_acc.len();
+        let epb = spec.update_block_lanes();
+        while !self.upd_wave.done() {
+            if self.upd_agg.is_none() {
+                let lo_lane = self.upd_wave.start * epb;
+                let wave_lanes = (self.upd_wave.end() * epb).min(k_s) - lo_lane;
+                match UpdateAggregator::new(rf, wave_lanes, spec.n_clients as usize, epb) {
+                    Ok(agg) => {
+                        if self.upd_wave.start > 0 {
+                            ServerStats::bump(&stats.waves);
+                        }
+                        self.end_stall(stats, now);
+                        self.upd_agg = Some(agg);
+                        self.drain_update_spill(stats);
+                    }
+                    Err(_) => {
+                        ServerStats::bump(&stats.register_stalls);
+                        self.stall_since.get_or_insert(now);
+                        return false;
+                    }
+                }
+            }
+            let agg = self.upd_agg.take().unwrap();
+            let lo_lane = self.upd_wave.start * epb;
+            let wave_lanes = agg.aggregate().len();
+            self.upd_acc[lo_lane..lo_lane + wave_lanes].copy_from_slice(agg.aggregate());
+            ServerStats::add(&stats.overflow_lanes, agg.overflow_lanes());
+            agg.release(rf);
+            self.upd_wave.start = self.upd_wave.end();
+        }
+        self.upd_spill.clear();
+        true
+    }
+
+    /// The instant at which this round's open phase becomes eligible for
+    /// a quorum close, `None` when no such close is pending (legacy
+    /// all-N, quorum not yet met, or the phase already closed). After a
+    /// register-stalled close attempt this is the retry instant, which
+    /// keeps the job's timer from re-demanding an elapsed deadline.
+    fn quorum_deadline(&self, quorum: u16, phase_deadline: Duration) -> Option<Instant> {
+        if quorum == 0 {
+            return None;
+        }
+        if self.gia.is_none() {
+            (self.vote_part.complete >= quorum)
+                .then(|| self.close_retry_at.unwrap_or(self.started + phase_deadline))
+        } else if !self.agg_done {
+            let armed = self.upd_started?;
+            (self.upd_part.complete >= quorum)
+                .then(|| self.close_retry_at.unwrap_or(armed + phase_deadline))
+        } else {
+            None
+        }
     }
 
     // ---- phase 2 ---------------------------------------------------------
@@ -607,6 +785,7 @@ impl RoundState {
                 ServerStats::bump(&stats.duplicates);
                 return PacketFate::Duplicate;
             }
+            self.upd_part.record(client, block);
         } else {
             // Same dedup + cap discipline as the vote spill.
             let key = (block as u32, client);
@@ -619,6 +798,7 @@ impl RoundState {
             }
             let lanes: Vec<i32> = lanes_iter(payload).collect();
             self.upd_spill.insert(key, lanes);
+            self.upd_part.record(client, block);
             ServerStats::bump(&stats.spilled);
             return PacketFate::Spilled;
         }
@@ -834,19 +1014,25 @@ impl Job {
     pub fn handle(&mut self, frame: &Frame<'_>, from: SocketAddr, now: Instant) -> JobOutput {
         let mut frames = self.out_pool.pop().unwrap_or_default();
         self.handle_frames(frame, from, now, &mut frames);
+        self.quorum_close_due(now, &mut frames);
         self.sync_pool_stats();
         JobOutput { frames, timer: self.next_timer() }
     }
 
-    /// A timer deadline arrived: reclaim register aggregators from
-    /// rounds whose traffic went idle. Backends call this when the
-    /// `timer` of an earlier [`JobOutput`] expires — and only then, so
-    /// an idle job costs zero wakeups (see `ServerStats::idle_wakeups`).
+    /// A timer deadline arrived: force-close quorum-eligible phases whose
+    /// deadline elapsed (emitting their completion multicasts), then
+    /// reclaim register aggregators from rounds whose traffic went idle.
+    /// Backends call this when the `timer` of an earlier [`JobOutput`]
+    /// expires — and only then, so an idle job costs zero wakeups (see
+    /// `ServerStats::idle_wakeups`).
     pub fn on_tick(&mut self, now: Instant) -> JobOutput {
+        let mut frames = self.out_pool.pop().unwrap_or_default();
+        self.quorum_close_due(now, &mut frames);
         if let Some(st) = self.state.as_mut() {
             Self::reap_idle(st, None, now, &self.limits, &self.stats);
         }
-        JobOutput { frames: self.out_pool.pop().unwrap_or_default(), timer: self.next_timer() }
+        self.sync_pool_stats();
+        JobOutput { frames, timer: self.next_timer() }
     }
 
     /// Hand a transmitted [`JobOutput`]'s buffers back to the pool so
@@ -874,16 +1060,24 @@ impl Job {
         }
     }
 
-    /// Earliest idle-reclaim deadline across this job's rounds, `None`
-    /// when no round holds register aggregators (nothing to reclaim, so
-    /// nothing to wake for).
+    /// Earliest pending deadline across this job's rounds: idle register
+    /// reclamation for rounds holding aggregators, plus — for quorum jobs
+    /// — the phase deadline of any round whose quorum is already met
+    /// (when the quorum arrives *after* the deadline, the close happens
+    /// inline on that frame, so no wakeup is needed for it). `None` when
+    /// the job is quiescent and needs no wakeup at all.
     pub fn next_timer(&self) -> Option<Instant> {
         let st = self.state.as_ref()?;
-        st.rounds
+        let idle = st
+            .rounds
             .values()
             .filter(|rs| rs.vote_agg.is_some() || rs.upd_agg.is_some())
-            .map(|rs| rs.last_touch + self.limits.idle_release_after)
-            .min()
+            .map(|rs| rs.last_touch + self.limits.idle_release_after);
+        let quorum = st
+            .rounds
+            .values()
+            .filter_map(|rs| rs.quorum_deadline(st.spec.quorum, self.limits.phase_deadline));
+        idle.chain(quorum).min()
     }
 
     fn handle_frames(
@@ -1054,6 +1248,83 @@ impl Job {
         }
     }
 
+    /// Force-close every quorum-eligible phase whose deadline elapsed,
+    /// emitting the same completion multicasts as the organic close path
+    /// so surviving clients do not spend a poll cycle discovering the
+    /// result. Runs on every handled frame *and* every tick: the timer
+    /// covers quorums that were met before the deadline, the inline call
+    /// covers quorums completed by a frame arriving after it. A no-op
+    /// for `quorum = 0` jobs — legacy all-N deployments keep
+    /// bit-identical wire behaviour by construction.
+    fn quorum_close_due(&mut self, now: Instant, out: &mut Outgoing) {
+        let Some(st) = self.state.as_mut() else { return };
+        let quorum = st.spec.quorum;
+        if quorum == 0 {
+            return;
+        }
+        let JobState { spec, registers, rounds, clients } = st;
+        let spec = *spec;
+        for (&round, rs) in rounds.iter_mut() {
+            match rs.quorum_deadline(quorum, self.limits.phase_deadline) {
+                Some(t) if now >= t => {}
+                _ => continue,
+            }
+            if rs.gia.is_none() {
+                // Phase 1: threshold what arrived; absent votes are zero.
+                if !rs.force_votes(&spec, registers, &self.stats, now) {
+                    rs.close_retry_at = Some(now + self.limits.idle_release_after);
+                    continue;
+                }
+                rs.close_retry_at = None;
+                rs.finish_phase1(&spec, self.profile.memory_bytes, &self.stats, now);
+                ServerStats::bump(&self.stats.quorum_closes);
+                if let Some(rec) = self.recorder.as_deref() {
+                    rec.note(self.id, round, None, u16::MAX, None, TraceNote::QuorumClose, now);
+                }
+                Self::gia_templates(&mut self.scratch, &mut self.templates, self.id, round, rs, &spec);
+                if rs.agg_done {
+                    // Empty consensus under a forced close still answers
+                    // the aggregate wait in the same multicast.
+                    Self::agg_templates(
+                        &mut self.scratch,
+                        &mut self.lane_buf,
+                        &mut self.templates,
+                        self.id,
+                        round,
+                        rs,
+                        &spec,
+                    );
+                }
+            } else {
+                // Phase 2: sum what arrived; absent updates are zero.
+                if !rs.force_updates(&spec, registers, &self.stats, now) {
+                    rs.close_retry_at = Some(now + self.limits.idle_release_after);
+                    continue;
+                }
+                rs.close_retry_at = None;
+                rs.agg_done = true;
+                rs.mark_round_done(&self.stats, now);
+                ServerStats::bump(&self.stats.rounds_completed);
+                ServerStats::bump(&self.stats.quorum_closes);
+                if let Some(rec) = self.recorder.as_deref() {
+                    rec.note(self.id, round, None, u16::MAX, None, TraceNote::QuorumClose, now);
+                }
+                Self::agg_templates(
+                    &mut self.scratch,
+                    &mut self.lane_buf,
+                    &mut self.templates,
+                    self.id,
+                    round,
+                    rs,
+                    &spec,
+                );
+            }
+            self.dests.clear();
+            self.dests.extend(clients.values().copied());
+            Self::fan_out(&mut self.scratch, &mut self.templates, &self.dests, out);
+        }
+    }
+
     fn on_vote(
         &mut self,
         h: Header,
@@ -1085,12 +1356,14 @@ impl Job {
         let spec = *spec;
         let rs = rounds.get_mut(&h.round).unwrap();
         if rs.gia.is_some() {
-            // Phase 1 already closed: drop the straggler silently. The
-            // client's own Poll (sent on every timeout) re-serves the GIA
-            // under the per-source budget — answering every retransmitted
-            // data frame with the full set would be a reflection vector.
-            ServerStats::bump(&self.stats.duplicates);
-            trace(rec, self.id, &h, Some(from), TraceNote::Duplicate, now);
+            // Phase 1 already closed: count the straggler (under quorum
+            // close this is the diagnosable trail of a client the round
+            // went on without) and drop it. The client's own Poll (sent
+            // on every timeout) re-serves the GIA under the per-source
+            // budget — answering every retransmitted data frame with the
+            // full set would be a reflection vector.
+            ServerStats::bump(&self.stats.late_after_close);
+            trace(rec, self.id, &h, Some(from), TraceNote::LateAfterClose, now);
             return;
         }
         let fate = rs.vote_packet(
@@ -1165,10 +1438,13 @@ impl Job {
         if rs.agg_done {
             // Round already closed: as with late votes, recovery goes
             // through the budgeted Poll path, not data-frame echoes.
-            ServerStats::bump(&self.stats.duplicates);
-            trace(rec, self.id, &h, Some(from), TraceNote::Duplicate, now);
+            ServerStats::bump(&self.stats.late_after_close);
+            trace(rec, self.id, &h, Some(from), TraceNote::LateAfterClose, now);
             return;
         }
+        // First Update frame of the round arms the phase-2 quorum
+        // deadline (harmless for quorum = 0 jobs — never consulted).
+        rs.upd_started.get_or_insert(now);
         let fate = rs.update_packet(
             &spec,
             registers,
@@ -1364,7 +1640,7 @@ mod tests {
     }
 
     fn mkspec(d: u32, n_clients: u16, threshold_a: u16, payload_budget: u16) -> JobSpec {
-        JobSpec { d, n_clients, threshold_a, payload_budget, shard: ShardPlan::single() }
+        JobSpec { d, n_clients, threshold_a, payload_budget, shard: ShardPlan::single(), quorum: 0 }
     }
 
     fn profile(memory: usize) -> PsProfile {
@@ -1956,6 +2232,106 @@ mod tests {
             "steady-state rounds allocated fresh frame buffers"
         );
         assert!(stat(&job.stats.frames_pooled) > 0, "pool never served a frame");
+    }
+
+    #[test]
+    fn quorum_deadline_closes_both_phases_without_the_dead_client() {
+        // N = 3, Q = 2, a = 1: clients 0 and 1 deliver both phases;
+        // client 2 is dead. Each phase must close exactly at its quorum
+        // deadline via `on_tick`, with the aggregate bit-exact over the
+        // two survivors, and the dead client's late vote afterwards must
+        // only move `late_after_close`.
+        let spec = JobSpec { quorum: 2, ..mkspec(64, 3, 1, 8) };
+        let stats = Arc::new(ServerStats::default());
+        let limits =
+            JobLimits { phase_deadline: Duration::from_millis(40), ..JobLimits::default() };
+        let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
+        for c in 0..spec.n_clients {
+            feed(&mut job, &join_frame(9, c, &spec), addr(4000 + c));
+        }
+        let t0 = Instant::now();
+        let votes: Vec<BitVec> =
+            (0..2).map(|c| BitVec::from_indices(64, &[c, 7, 30])).collect();
+        for (c, v) in votes.iter().enumerate() {
+            let f = vote_frames(9, c as u16, 1, v, &spec).remove(0);
+            let out = job.handle(&decode_frame(&f).unwrap(), addr(4000 + c as u16), t0);
+            assert!(out.frames.is_empty(), "phase must stay open before the deadline");
+        }
+        // Quorum met ⇒ the timer demands a wakeup at exactly t0 + 40 ms.
+        let deadline = job.next_timer().expect("quorum met must arm the phase deadline");
+        assert_eq!(deadline, t0 + Duration::from_millis(40));
+        let out = job.on_tick(deadline);
+        let kinds: Vec<WireKind> =
+            out.frames.iter().map(|(b, _)| decode_frame(b).unwrap().header.kind).collect();
+        assert!(kinds.contains(&WireKind::Gia), "deadline tick must multicast the GIA");
+        assert_eq!(stat(&stats.quorum_closes), 1);
+        assert_eq!(job.round_gia(1), Some(&deduce_gia(&votes, 1)));
+        let k_s = job.round_gia(1).unwrap().count_ones();
+
+        // Phase 2: survivors upload; dead client still silent. The phase
+        // deadline arms from the first Update frame.
+        let t1 = t0 + Duration::from_millis(60);
+        let lanes: Vec<Vec<i32>> = (0..2)
+            .map(|c| (0..k_s as i32).map(|x| (c + 1) as i32 * x).collect())
+            .collect();
+        for (c, l) in lanes.iter().enumerate() {
+            for f in update_frames(9, c as u16, 1, l, &spec) {
+                job.handle(&decode_frame(&f).unwrap(), addr(4000 + c as u16), t1);
+            }
+        }
+        assert!(job.round_aggregate(1).is_none(), "round must stay open until the deadline");
+        let deadline = job.next_timer().expect("phase-2 quorum must arm its deadline");
+        assert_eq!(deadline, t1 + Duration::from_millis(40));
+        let out = job.on_tick(deadline);
+        let kinds: Vec<WireKind> =
+            out.frames.iter().map(|(b, _)| decode_frame(b).unwrap().header.kind).collect();
+        assert!(kinds.contains(&WireKind::Aggregate), "deadline tick must multicast the sum");
+        assert_eq!(stat(&stats.quorum_closes), 2);
+        let want: Vec<i32> = (0..k_s as i32).map(|x| 3 * x).collect();
+        assert_eq!(job.round_aggregate(1), Some(&want[..]), "survivor sum must be bit-exact");
+        // Registers fully reclaimed on the forced close.
+        assert_eq!(job.state.as_ref().unwrap().registers.used(), 0);
+
+        // The dead client wakes up late: counted, dropped, nothing else.
+        let late = vote_frames(9, 2, 1, &votes[0], &spec).remove(0);
+        let out = job.handle(&decode_frame(&late).unwrap(), addr(4002), deadline);
+        assert!(out.frames.is_empty());
+        assert_eq!(stat(&stats.late_after_close), 1);
+        assert_eq!(job.round_aggregate(1), Some(&want[..]), "late frame corrupted the sum");
+    }
+
+    #[test]
+    fn quorum_needs_deadline_and_deadline_needs_quorum() {
+        // Q = 2 of 3. Before the deadline a met quorum must not close the
+        // phase; past the deadline an unmet quorum must not either — but
+        // the first frame that completes the quorum after the deadline
+        // closes it inline, with no tick in between.
+        let spec = JobSpec { quorum: 2, ..mkspec(64, 3, 1, 8) };
+        let stats = Arc::new(ServerStats::default());
+        let limits =
+            JobLimits { phase_deadline: Duration::from_millis(40), ..JobLimits::default() };
+        let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
+        for c in 0..spec.n_clients {
+            feed(&mut job, &join_frame(9, c, &spec), addr(4000 + c));
+        }
+        let t0 = Instant::now();
+        let v = BitVec::from_indices(64, &[3, 9]);
+        let f0 = vote_frames(9, 0, 0, &v, &spec).remove(0);
+        job.handle(&decode_frame(&f0).unwrap(), addr(4000), t0);
+        // One vote in: past-deadline ticks are no-ops (quorum unmet), and
+        // no quorum timer is armed (only the idle-reclaim one).
+        let out = job.on_tick(t0 + Duration::from_millis(200));
+        assert!(out.frames.is_empty());
+        assert_eq!(stat(&stats.quorum_closes), 0);
+        assert!(job.round_gia(0).is_none());
+        // The second vote lands after the deadline: closes inline.
+        let f1 = vote_frames(9, 1, 0, &v, &spec).remove(0);
+        let out = job.handle(&decode_frame(&f1).unwrap(), addr(4001), t0 + Duration::from_millis(210));
+        let kinds: Vec<WireKind> =
+            out.frames.iter().map(|(b, _)| decode_frame(b).unwrap().header.kind).collect();
+        assert!(kinds.contains(&WireKind::Gia), "late quorum completion must close inline");
+        assert_eq!(stat(&stats.quorum_closes), 1);
+        assert_eq!(job.round_gia(0), Some(&deduce_gia(&[v.clone(), v], 1)));
     }
 
     #[test]

@@ -230,6 +230,14 @@ pub struct ServerStats {
     /// forwarded to their job's owner core. Always zero for the
     /// single-socket backends.
     pub steered_frames: AtomicU64,
+    /// Phases force-closed at their deadline with the quorum met but
+    /// fewer than all N clients complete (PROTOCOL.md §11). Always zero
+    /// for quorum-disabled (Q = 0) jobs.
+    pub quorum_closes: AtomicU64,
+    /// Straggler data frames arriving after their phase closed (quorum
+    /// close or normal completion); dropped without touching the
+    /// consensus bitmap or the aggregate.
+    pub late_after_close: AtomicU64,
     /// End-to-end round latency (first data frame of the round to the
     /// aggregate multicast), microseconds.
     pub hist_round_latency: Hist,
@@ -292,6 +300,10 @@ pub struct StatsSnapshot {
     pub pool_misses: u64,
     /// See [`ServerStats::steered_frames`].
     pub steered_frames: u64,
+    /// See [`ServerStats::quorum_closes`].
+    pub quorum_closes: u64,
+    /// See [`ServerStats::late_after_close`].
+    pub late_after_close: u64,
     /// See [`ServerStats::hist_round_latency`].
     pub hist_round_latency: HistSummary,
     /// See [`ServerStats::hist_vote_phase`].
@@ -330,6 +342,8 @@ impl StatsSnapshot {
         self.frames_pooled += other.frames_pooled;
         self.pool_misses += other.pool_misses;
         self.steered_frames += other.steered_frames;
+        self.quorum_closes += other.quorum_closes;
+        self.late_after_close += other.late_after_close;
         self.hist_round_latency.merge(&other.hist_round_latency);
         self.hist_vote_phase.merge(&other.hist_vote_phase);
         self.hist_update_phase.merge(&other.hist_update_phase);
@@ -366,6 +380,8 @@ impl StatsSnapshot {
         counter("frames_pooled", self.frames_pooled);
         counter("pool_misses", self.pool_misses);
         counter("steered_frames", self.steered_frames);
+        counter("quorum_closes", self.quorum_closes);
+        counter("late_after_close", self.late_after_close);
         for (key, h) in [
             ("round_latency_us", &self.hist_round_latency),
             ("vote_phase_us", &self.hist_vote_phase),
@@ -426,6 +442,8 @@ impl ServerStats {
             frames_pooled: self.frames_pooled.load(Ordering::Relaxed),
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
             steered_frames: self.steered_frames.load(Ordering::Relaxed),
+            quorum_closes: self.quorum_closes.load(Ordering::Relaxed),
+            late_after_close: self.late_after_close.load(Ordering::Relaxed),
             hist_round_latency: self.hist_round_latency.summary(),
             hist_vote_phase: self.hist_vote_phase.summary(),
             hist_update_phase: self.hist_update_phase.summary(),
@@ -466,6 +484,8 @@ mod tests {
             &stats.frames_pooled,
             &stats.pool_misses,
             &stats.steered_frames,
+            &stats.quorum_closes,
+            &stats.late_after_close,
         ];
         for (i, c) in counters.iter().enumerate() {
             c.store(i as u64 + 1, Ordering::Relaxed);
@@ -513,6 +533,8 @@ mod tests {
             ("frames_pooled", snap.frames_pooled),
             ("pool_misses", snap.pool_misses),
             ("steered_frames", snap.steered_frames),
+            ("quorum_closes", snap.quorum_closes),
+            ("late_after_close", snap.late_after_close),
         ];
         for (i, (name, v)) in fields.iter().enumerate() {
             assert_eq!(*v, i as u64 + 1, "snapshot dropped or shuffled `{name}`");
@@ -558,6 +580,8 @@ mod tests {
                 doubled.frames_pooled,
                 doubled.pool_misses,
                 doubled.steered_frames,
+                doubled.quorum_closes,
+                doubled.late_after_close,
             ];
             assert_eq!(fields2[i], 2 * (i as u64 + 1), "merge dropped `{name}`");
         }
@@ -583,6 +607,8 @@ mod tests {
         assert_eq!(doc.get("packets").unwrap().as_usize(), Some(1));
         assert_eq!(doc.get("pool_misses").unwrap().as_usize(), Some(20));
         assert_eq!(doc.get("steered_frames").unwrap().as_usize(), Some(21));
+        assert_eq!(doc.get("quorum_closes").unwrap().as_usize(), Some(22));
+        assert_eq!(doc.get("late_after_close").unwrap().as_usize(), Some(23));
         for key in [
             "round_latency_us",
             "vote_phase_us",
@@ -597,10 +623,10 @@ mod tests {
             }
         }
         let obj = doc.as_obj().unwrap();
-        assert_eq!(obj.len(), 26, "21 counters + 5 histograms");
+        assert_eq!(obj.len(), 28, "23 counters + 5 histograms");
     }
 
-    fn counter_refs(s: &ServerStats) -> [&AtomicU64; 21] {
+    fn counter_refs(s: &ServerStats) -> [&AtomicU64; 23] {
         [
             &s.packets,
             &s.decode_errors,
@@ -623,6 +649,8 @@ mod tests {
             &s.frames_pooled,
             &s.pool_misses,
             &s.steered_frames,
+            &s.quorum_closes,
+            &s.late_after_close,
         ]
     }
 

@@ -198,13 +198,18 @@ pub(crate) fn reactor_loop(socket: UdpSocket, shared: BackendShared) {
                             let outp = slot.job.handle(&frame, from, now);
                             transmit(&socket, &mut slot.lane, &outp.frames, now);
                             slot.job.recycle(outp.frames);
-                            // Arm the wheel only on the None→Some edge: job
-                            // deadlines never tighten (traffic only pushes
-                            // them out), so one live entry per job suffices
-                            // — a fire re-arms at the then-current deadline.
-                            if let (None, Some(t)) = (slot.armed, outp.timer) {
-                                wheel.insert(t, job_id);
-                                slot.armed = Some(t);
+                            // Arm the wheel on the None→Some edge, or when
+                            // the job's deadline moved EARLIER than the
+                            // armed entry — a quorum phase deadline can
+                            // tighten an idle-reclaim one. The superseded
+                            // later entry stays in the wheel and fires as a
+                            // harmless stale wakeup (`on_tick` is
+                            // idempotent and re-reports the real deadline).
+                            if let Some(t) = outp.timer {
+                                if slot.armed.is_none_or(|armed| t < armed) {
+                                    wheel.insert(t, job_id);
+                                    slot.armed = Some(t);
+                                }
                             }
                         }
                         Err(_) => {

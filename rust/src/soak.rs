@@ -17,6 +17,18 @@
 //! * and the episode's flight-recorder ring is dumped to
 //!   `SOAK_FAIL_ep<N>.trace.jsonl` on any failure.
 //!
+//! Presets that declare a churn plane (`[churn]` + `mix.quorum`) also
+//! schedule **churn episodes**: the fleet runs on the swarm multiplexer
+//! under the `net::churn` lifecycle injector in two legs. Leg A (clean
+//! wire, permanent kills only) proves quorum rounds stay **bit-exact
+//! for the surviving quorum** against a quorum-aware reference over the
+//! guaranteed voter/updater sets, close at the phase deadline instead
+//! of stalling (zero `idle_releases`), and drain the [`HostBudget`] to
+//! zero even though the dead clients never say goodbye. Leg B replays
+//! the preset's full fault plane — chaos, kills, stale rejoins, a flash
+//! crowd — and asserts liveness: every eventually-active client
+//! finishes all rounds and the lifecycle ledger matches the plan.
+//!
 //! Every episode appends one JSON line to the `SOAK.json` ledger whose
 //! `replay` field is a complete `fediac soak --episode-seed …` command:
 //! the whole episode — preset pick, backend, chaos coin, client mix,
@@ -34,7 +46,7 @@ use crate::client::swarm::{self, SwarmJobPlan, SwarmOptions, UpdateSource};
 use crate::client::{protocol, ClientOptions, FediacClient, ShardedFediacClient};
 use crate::compress::{self, deduce_gia};
 use crate::configx::{load_preset, DeployPreset, BUILTIN_PRESETS};
-use crate::net::{ChaosConfig, ChaosDirection};
+use crate::net::{ChaosConfig, ChaosDirection, ChurnConfig, ChurnPlan};
 use crate::server::{
     serve, serve_sharded, HostBudget, IoBackend, ServeOptions, ServerHandle, StatsSnapshot,
 };
@@ -91,6 +103,11 @@ pub struct EpisodePlan {
     /// Host the fleet on the swarm multiplexer instead of one thread
     /// per client (preset `mix.swarm`, single-shard deployments only).
     pub swarm: bool,
+    /// Run the client-churn fault plane this episode (presets with a
+    /// `[churn]` section, single-shard deployments only). Churn
+    /// episodes host the fleet on the swarm multiplexer regardless of
+    /// `mix.swarm` and stamp the preset's `mix.quorum` on every job.
+    pub churn: bool,
     /// Shard daemons (from the preset).
     pub shards: u8,
     /// Concurrent jobs (driver mode).
@@ -110,9 +127,13 @@ pub struct EpisodePlan {
 }
 
 impl EpisodePlan {
-    /// `driver` (one thread per client) or `swarm` (one thread total).
+    /// `driver` (one thread per client), `swarm` (one thread total) or
+    /// `churn` (swarm-hosted, quorum rounds under the lifecycle
+    /// injector).
     pub fn mode(&self) -> &'static str {
-        if self.swarm {
+        if self.churn {
+            "churn"
+        } else if self.swarm {
             "swarm"
         } else {
             "driver"
@@ -204,12 +225,19 @@ pub fn sample_episode(seed: u64, presets: &[String]) -> Result<EpisodePlan> {
         }
     }
     let k = protocol::votes_per_client(d, preset.mix.k_frac).max(1);
+    // Presets with a churn plane split their episodes 50/50 between the
+    // legacy all-N driver path (quorum=0, bit-identical wire) and the
+    // quorum + churn fault plane — both halves stay covered.
+    let churn = !preset.churn.is_quiet()
+        && preset.shards == 1
+        && root.fork(5).below(2) == 1;
     let plan = EpisodePlan {
         seed,
         preset_arg,
         backend,
         chaos,
         swarm: preset.mix.swarm && preset.shards == 1,
+        churn,
         shards: preset.shards,
         jobs: preset.mix.jobs,
         clients: preset.mix.clients_per_job,
@@ -237,6 +265,10 @@ pub fn schedule_seed(root: u64, idx: usize, presets: &[String]) -> Result<u64> {
     let want_backend =
         [IoBackend::Threaded, IoBackend::Reactor, IoBackend::Fleet][idx % 3];
     let want_chaos = matches!(idx % 4, 1 | 2);
+    // Presets with a churn plane alternate churn and legacy episodes
+    // across schedule slots, so a smoke that reaches such a preset once
+    // deterministically runs its fault plane.
+    let want_churn = idx % 2 == 0;
     let base = root ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     for salt in 0..4096u64 {
         let seed = mix64(base ^ salt.wrapping_mul(0xD1B5_4A32_D192_ED03));
@@ -246,7 +278,16 @@ pub fn schedule_seed(root: u64, idx: usize, presets: &[String]) -> Result<u64> {
         } else {
             plan.chaos == want_chaos
         };
-        if plan.preset_arg == *target_preset && plan.backend == want_backend && chaos_ok {
+        let churn_ok = if plan.preset.churn.is_quiet() || plan.shards > 1 {
+            !plan.churn
+        } else {
+            plan.churn == want_churn
+        };
+        if plan.preset_arg == *target_preset
+            && plan.backend == want_backend
+            && chaos_ok
+            && churn_ok
+        {
             return Ok(seed);
         }
     }
@@ -671,6 +712,359 @@ fn run_swarm_episode(plan: &EpisodePlan, recorder: &Arc<FlightRecorder>) -> Resu
     })
 }
 
+/// The quorum-aware variant of [`reference_round`]: GIA deduction and
+/// the shared scale fold over the guaranteed **voter** set (votes carry
+/// `local_max`, and after-vote kill victims still voted), lane sums
+/// fold over the guaranteed **updater** set. `n_clients` stays the
+/// job's spec N — the scale formula uses the advertised fleet size, not
+/// the survivor count, on both ends of the wire.
+#[allow(clippy::too_many_arguments)]
+fn reference_round_quorum(
+    updates: &[Vec<f32>],
+    voters: &[usize],
+    updaters: &[usize],
+    n_clients: usize,
+    job_seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+    bits_b: usize,
+) -> (Vec<usize>, Vec<i32>) {
+    let votes: Vec<BitVec> = voters
+        .iter()
+        .map(|&c| protocol::client_vote(&updates[c], k, job_seed, round, c))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = voters
+        .iter()
+        .map(|&c| compress::max_abs(&updates[c]))
+        .fold(f32::MIN_POSITIVE, f32::max);
+    let f = compress::scale_factor(bits_b, n_clients, m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    for &c in updaters {
+        let (q, _) = protocol::client_quantize(&updates[c], &mask, f, job_seed, round, c);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+    }
+    (indices, lanes)
+}
+
+/// Tightest safe quorum for a fleet-wide churn plan carved into `jobs`
+/// jobs of `per` clients: the minimum, over jobs and rounds, of the
+/// full-participant count — stamping a larger Q on some job would let a
+/// phase wait on a client the plan kills.
+fn job_quorum_floor(cplan: &ChurnPlan, jobs: usize, per: usize, rounds: usize) -> u16 {
+    let mut floor = per as u16;
+    for j in 0..jobs {
+        for round in 1..=rounds as u32 {
+            let full = (0..per)
+                .filter(|&c| cplan.client((j * per + c) as u16).full_participant(round))
+                .count() as u16;
+            floor = floor.min(full);
+        }
+    }
+    floor
+}
+
+/// Minimum, over jobs, of the eventually-active client count (everyone
+/// the plan does not kill permanently — survivors, rejoiners and the
+/// flash crowd all finish their rounds eventually).
+fn job_survivor_floor(cplan: &ChurnPlan, jobs: usize, per: usize) -> u16 {
+    (0..jobs)
+        .map(|j| {
+            (0..per)
+                .filter(|&c| !cplan.client((j * per + c) as u16).permanent_death())
+                .count() as u16
+        })
+        .min()
+        .unwrap_or(0)
+}
+
+/// Stand one deployment up and run one churn leg of the episode: the
+/// driver-shaped fleet (`jobs × clients_per_job`) hosted on the swarm
+/// multiplexer with quorum `quorum` stamped on every job and the
+/// lifecycle injector seeded with `churn_seed`. Asserts the HostBudget
+/// drains to zero despite dead clients never saying goodbye.
+#[allow(clippy::too_many_arguments)]
+fn run_churn_leg(
+    plan: &EpisodePlan,
+    recorder: &Arc<FlightRecorder>,
+    label: &str,
+    churn_cfg: ChurnConfig,
+    churn_seed: u64,
+    quorum: u16,
+    chaos: bool,
+) -> Result<(StatsSnapshot, swarm::SwarmReport, Vec<SwarmJobPlan>)> {
+    let preset = &plan.preset;
+    let limits = preset.limits.limits();
+    let budget = Arc::new(HostBudget::new(limits.host_bytes));
+    let base = ServeOptions {
+        bind: "127.0.0.1:0".to_string(),
+        profile: preset.ps_profile(),
+        limits,
+        downlink_chaos: (chaos && !preset.down.is_clean()).then(|| preset.down.direction()),
+        chaos_seed: churn_seed,
+        io_backend: plan.backend,
+        cores: 0,
+        host_budget: Some(Arc::clone(&budget)),
+        trace: Some(Arc::clone(recorder)),
+    };
+    let handle = serve(&base)?;
+
+    let per = plan.clients as usize;
+    let job_plans: Vec<SwarmJobPlan> = (0..plan.jobs)
+        .map(|j| {
+            let seed = job_seed(plan.seed, j);
+            let updates: Vec<Vec<Vec<f32>>> = (1..=plan.rounds)
+                .map(|round| {
+                    (0..per).map(|c| synthetic_update(seed, c, round, plan.d)).collect()
+                })
+                .collect();
+            SwarmJobPlan {
+                job: job_id(j),
+                n_clients: per as u16,
+                backend_seed: seed,
+                updates: UpdateSource::Explicit(updates),
+            }
+        })
+        .collect();
+
+    let mut sopts = SwarmOptions::new(handle.local_addr().to_string(), plan.d);
+    sopts.jobs = job_plans.clone();
+    sopts.threshold_a = plan.threshold_a;
+    sopts.k = plan.k;
+    sopts.bits_b = preset.mix.bits_b;
+    sopts.payload_budget = plan.payload;
+    sopts.rounds = plan.rounds;
+    sopts.sockets = preset.mix.swarm_sockets;
+    sopts.timeout = Duration::from_millis(preset.mix.timeout_ms);
+    sopts.max_retries = preset.mix.max_retries;
+    sopts.uplink_chaos = (chaos && !preset.up.is_clean()).then(|| preset.up.direction());
+    sopts.chaos_seed = churn_seed;
+    sopts.collect_outcomes = true;
+    sopts.quorum = quorum;
+    sopts.churn = Some(churn_cfg);
+
+    let report = swarm::run(&sopts)
+        .with_context(|| format!("churn leg {label} (churn seed {churn_seed})"))?;
+    let server = handle.stats();
+    handle.shutdown();
+
+    // Dead clients never send Goodbye; quorum close and job teardown
+    // must reclaim their reservations all the same.
+    for jp in &job_plans {
+        let held = budget.reserved(jp.job);
+        ensure!(
+            held == 0,
+            "churn leg {label}: HostBudget leak — job {} still holds {held} bytes \
+             after shutdown",
+            jp.job
+        );
+    }
+    Ok((server, report, job_plans))
+}
+
+/// Stand the deployment up twice and run the churn fault plane. Leg A
+/// (clean wire, permanent kills) proves quorum rounds are bit-exact for
+/// the surviving quorum and close at the phase deadline instead of
+/// stalling; leg B (preset chaos + rejoins + flash crowd) proves
+/// liveness and that the lifecycle ledger matches the sampled plan.
+fn run_churn_episode(plan: &EpisodePlan, recorder: &Arc<FlightRecorder>) -> Result<EpisodeCounters> {
+    let preset = &plan.preset;
+    let per = plan.clients as usize;
+    let rounds = plan.rounds;
+    let total = plan.jobs * per;
+    ensure!(total <= u16::MAX as usize, "churn episode fleet too large");
+    let total = total as u16;
+
+    // ---- Leg A: bit-exact quorum close under permanent kills. -------
+    // Rejoiners and flash crowds race the deadline-bound close on wall
+    // clock, so the deterministic leg pins every kill permanent; the
+    // plan's guaranteed voter/updater sets then ARE the wire's
+    // contributor sets. The seed is salt-searched so at least one
+    // client dies and every job keeps at least one full participant in
+    // every round.
+    let cfg_a = ChurnConfig {
+        kill_rate: preset.churn.kill_rate.clamp(0.2, 0.8),
+        rejoin_delay: Duration::ZERO,
+        flash_crowd: 0,
+        permanent_rate: 1.0,
+    };
+    let (seed_a, cplan_a, floor_a) = (0..4096u64)
+        .find_map(|salt| {
+            let seed =
+                mix64(plan.seed ^ 0xA11C_E55E ^ salt.wrapping_mul(0xA24B_AED4_963E_E407));
+            let cplan = ChurnPlan::new(&cfg_a, seed, total, rounds as u32);
+            let floor = job_quorum_floor(&cplan, plan.jobs, per, rounds);
+            (floor >= 1 && cplan.kills() >= 1).then_some((seed, cplan, floor))
+        })
+        .ok_or_else(|| anyhow!("no leg-A churn seed with kills and a live quorum"))?;
+    let (server_a, report_a, jobs_a) =
+        run_churn_leg(plan, recorder, "A", cfg_a, seed_a, floor_a, false)?;
+
+    ensure!(
+        report_a.churn.kills == cplan_a.kills()
+            && report_a.churn.permanent_deaths == cplan_a.kills()
+            && report_a.churn.rejoins == 0
+            && report_a.churn.flash_joins == 0
+            && report_a.churn.stranded == 0,
+        "leg A lifecycle ledger diverged from the plan: {:?} (plan: {} permanent \
+         kills)",
+        report_a.churn,
+        cplan_a.kills()
+    );
+    // A killed client leaves its round short of all-N completion in at
+    // least one phase, so the kill rounds can only retire through the
+    // quorum path — and on a clean wire they must do so at the phase
+    // deadline, never by idle reclamation.
+    ensure!(
+        server_a.quorum_closes >= 1,
+        "leg A killed {} client(s) yet no phase quorum-closed",
+        cplan_a.kills()
+    );
+    ensure!(
+        server_a.idle_releases == 0,
+        "leg A tripped idle reclamation {} time(s) — a quorum round stalled past \
+         its phase deadline",
+        server_a.idle_releases
+    );
+
+    let outcomes_a = report_a
+        .outcomes
+        .as_ref()
+        .ok_or_else(|| anyhow!("leg A did not collect outcomes"))?;
+    ensure!(outcomes_a.len() == jobs_a.len(), "leg A outcomes lost a job");
+    let mut expected_rounds_a = 0u64;
+    for (ji, jp) in jobs_a.iter().enumerate() {
+        let UpdateSource::Explicit(rounds_updates) = &jp.updates else {
+            unreachable!("churn legs build explicit streams only");
+        };
+        let base_cid = ji * per;
+        for c in 0..per {
+            let lc = cplan_a.client((base_cid + c) as u16);
+            let completed = lc.kill_at_round.map_or(rounds, |r| r as usize - 1);
+            expected_rounds_a += completed as u64;
+            ensure!(
+                outcomes_a[ji][c].len() == completed,
+                "leg A job {} client {c}: completed {} round(s), plan says {completed}",
+                jp.job,
+                outcomes_a[ji][c].len()
+            );
+        }
+        for round in 1..=rounds {
+            let updates = &rounds_updates[round - 1];
+            let voters: Vec<usize> = (0..per)
+                .filter(|&c| {
+                    cplan_a.client((base_cid + c) as u16).guaranteed_voter(round as u32)
+                })
+                .collect();
+            let updaters: Vec<usize> = (0..per)
+                .filter(|&c| {
+                    cplan_a.client((base_cid + c) as u16).full_participant(round as u32)
+                })
+                .collect();
+            let (exp_idx, exp_lanes) = reference_round_quorum(
+                updates,
+                &voters,
+                &updaters,
+                per,
+                jp.backend_seed,
+                round,
+                plan.k,
+                plan.threshold_a as usize,
+                preset.mix.bits_b,
+            );
+            for &c in &updaters {
+                let out = &outcomes_a[ji][c][round - 1];
+                ensure!(
+                    out.gia_indices == exp_idx,
+                    "leg A job {} client {c} round {round}: GIA diverged from the \
+                     quorum-aware reference",
+                    jp.job
+                );
+                ensure!(
+                    out.aggregate == exp_lanes,
+                    "leg A job {} client {c} round {round}: aggregate diverged from \
+                     the quorum-aware reference",
+                    jp.job
+                );
+            }
+        }
+    }
+    ensure!(
+        report_a.rounds_completed == expected_rounds_a,
+        "leg A completed {} client-rounds, plan says {expected_rounds_a}",
+        report_a.rounds_completed
+    );
+
+    // ---- Leg B: liveness under the preset's full fault plane. -------
+    // Kills, stale rejoins, a flash crowd and (on chaos episodes) both
+    // chaos directions at once. Aggregates here legitimately include
+    // catch-up contributors the close raced with, so the leg asserts
+    // liveness and lifecycle accounting, not bit-exactness.
+    let cfg_b = preset.churn.config();
+    let (seed_b, cplan_b, floor_b) = (0..4096u64)
+        .find_map(|salt| {
+            let seed =
+                mix64(plan.seed ^ 0xB1A5_7C20 ^ salt.wrapping_mul(0xA24B_AED4_963E_E407));
+            let cplan = ChurnPlan::new(&cfg_b, seed, total, rounds as u32);
+            let floor = job_survivor_floor(&cplan, plan.jobs, per);
+            (floor >= 1).then_some((seed, cplan, floor))
+        })
+        .ok_or_else(|| anyhow!("no leg-B churn seed keeps a client alive per job"))?;
+    let quorum_b = preset.mix.quorum.clamp(1, floor_b);
+    let (server_b, report_b, _) =
+        run_churn_leg(plan, recorder, "B", cfg_b, seed_b, quorum_b, plan.chaos)?;
+
+    ensure!(
+        report_b.churn.kills == cplan_b.kills()
+            && report_b.churn.permanent_deaths == cplan_b.permanent_deaths()
+            && report_b.churn.flash_joins == cplan_b.flash_crowd()
+            && report_b.churn.rejoins == cplan_b.kills() - cplan_b.permanent_deaths(),
+        "leg B lifecycle ledger diverged from the plan: {:?} (plan: {} kills, {} \
+         permanent, {} flash)",
+        report_b.churn,
+        cplan_b.kills(),
+        cplan_b.permanent_deaths(),
+        cplan_b.flash_crowd()
+    );
+    ensure!(
+        report_b.churn.stranded == 0,
+        "leg B stranded {} client(s) on loopback",
+        report_b.churn.stranded
+    );
+    // Every eventually-active client finishes all its rounds (rejoiners
+    // redo the round they died in); permanent deaths finish exactly the
+    // rounds before their kill.
+    let expected_rounds_b: u64 = (0..total)
+        .map(|cid| {
+            let lc = cplan_b.client(cid);
+            if lc.permanent_death() {
+                lc.kill_at_round.map_or(rounds as u64, |r| r as u64 - 1)
+            } else {
+                rounds as u64
+            }
+        })
+        .sum();
+    ensure!(
+        report_b.rounds_completed == expected_rounds_b,
+        "leg B completed {} client-rounds, the plan owes {expected_rounds_b}",
+        report_b.rounds_completed
+    );
+
+    let mut server = server_a;
+    server.merge(&server_b);
+    Ok(EpisodeCounters {
+        server,
+        client_retx: report_a.stats.retransmissions + report_b.stats.retransmissions,
+        client_rounds: report_a.rounds_completed + report_b.rounds_completed,
+        warm_pool_misses: server.pool_misses,
+    })
+}
+
 fn check_server_invariants(
     plan: &EpisodePlan,
     server: &StatsSnapshot,
@@ -723,7 +1117,9 @@ fn check_server_invariants_for(
 /// any invariant fails.
 fn run_episode(plan: &EpisodePlan, trace_path: &str) -> Result<EpisodeCounters> {
     let recorder = Arc::new(FlightRecorder::new(DEFAULT_EVENTS));
-    let result = if plan.swarm {
+    let result = if plan.churn {
+        run_churn_episode(plan, &recorder)
+    } else if plan.swarm {
         run_swarm_episode(plan, &recorder)
     } else {
         run_driver_episode(plan, &recorder)
@@ -769,6 +1165,7 @@ pub fn ledger_line(rec: &EpisodeRecord) -> String {
          \"wall_s\": {:.3}, \"client_rounds\": {}, \"rounds_completed\": {}, \
          \"retransmissions\": {}, \"frames_pooled\": {}, \"pool_misses\": {}, \
          \"warm_pool_misses\": {}, \"idle_releases\": {}, \"spilled\": {}, \
+         \"quorum_closes\": {}, \"late_after_close\": {}, \
          \"decode_errors\": {}, \"ok\": {}, \"failure\": {failure}, \
          \"replay\": \"{}\"}}\n",
         rec.episode,
@@ -792,6 +1189,8 @@ pub fn ledger_line(rec: &EpisodeRecord) -> String {
         rec.counters.warm_pool_misses,
         s.idle_releases,
         s.spilled,
+        s.quorum_closes,
+        s.late_after_close,
         s.decode_errors,
         rec.ok,
         json_escape(&p.replay_command()),
@@ -934,6 +1333,19 @@ mod tests {
             if plan.swarm {
                 assert_eq!(plan.shards, 1, "swarm episodes are single-shard");
             }
+            if plan.churn {
+                assert_eq!(plan.shards, 1, "churn episodes are single-shard");
+                assert!(
+                    !plan.preset.churn.is_quiet(),
+                    "{}: churn episode without a churn plane",
+                    plan.preset_arg
+                );
+                assert!(
+                    plan.preset.mix.quorum >= 1,
+                    "{}: churn episode with all-N rounds cannot close",
+                    plan.preset_arg
+                );
+            }
         }
     }
 
@@ -956,6 +1368,10 @@ mod tests {
         assert!(plans.iter().any(|p| !p.chaos), "no clean episode scheduled");
         assert!(plans.iter().any(|p| p.shards == 1));
         assert!(plans.iter().any(|p| p.shards >= 2));
+        // The adversarial preset sits in an even schedule slot, so the
+        // default smoke deterministically runs its churn fault plane.
+        assert!(plans.iter().any(|p| p.churn), "no churn episode scheduled");
+        assert!(plans.iter().any(|p| !p.churn), "no churn-free episode scheduled");
         // And the schedule is itself deterministic.
         let again = schedule_seed(7, 2, &presets).unwrap();
         assert_eq!(again, schedule_seed(7, 2, &presets).unwrap());
@@ -987,6 +1403,39 @@ mod tests {
         assert!(replay.contains(&seed.to_string()), "{replay}");
         let failure = json.get("failure").and_then(|v| v.as_str()).unwrap();
         assert!(failure.contains("diverged"), "{failure}");
+    }
+
+    #[test]
+    fn quorum_reference_over_everyone_matches_the_all_n_reference() {
+        // With voters == updaters == everyone, the quorum-aware oracle
+        // must reduce to the legacy one — the quorum=0 compatibility
+        // claim, restated over the reference itself.
+        let d = 256;
+        let updates: Vec<Vec<f32>> = (0..3).map(|c| synthetic_update(11, c, 2, d)).collect();
+        let everyone: Vec<usize> = (0..3).collect();
+        let (idx_all, lanes_all, _) = reference_round(&updates, 11, 2, 12, 2, 12);
+        let (idx_q, lanes_q) =
+            reference_round_quorum(&updates, &everyone, &everyone, 3, 11, 2, 12, 2, 12);
+        assert_eq!(idx_all, idx_q);
+        assert_eq!(lanes_all, lanes_q);
+    }
+
+    #[test]
+    fn churn_floors_bound_the_quorum_and_quiet_plans_are_full_strength() {
+        let quiet = ChurnPlan::quiet(6);
+        assert_eq!(job_quorum_floor(&quiet, 2, 3, 4), 3);
+        assert_eq!(job_survivor_floor(&quiet, 2, 3), 3);
+        let cfg = ChurnConfig {
+            kill_rate: 1.0,
+            rejoin_delay: Duration::ZERO,
+            flash_crowd: 0,
+            permanent_rate: 1.0,
+        };
+        let lethal = ChurnPlan::new(&cfg, 5, 6, 4);
+        // kill_rate 1.0 kills every client in round 1, so no round has a
+        // full participant and no quorum is safe.
+        assert_eq!(job_quorum_floor(&lethal, 2, 3, 4), 0);
+        assert_eq!(job_survivor_floor(&lethal, 2, 3), 0);
     }
 
     #[test]

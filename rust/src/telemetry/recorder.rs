@@ -72,6 +72,12 @@ pub enum TraceNote {
     DecodeError,
     /// Join refused because the daemon is at its job cap.
     CapRejected,
+    /// Straggler data frame for a phase the server already closed
+    /// (quorum close or normal completion); dropped without effect.
+    LateAfterClose,
+    /// A phase deadline expired with the quorum met and the server
+    /// force-closed the phase without the remaining clients.
+    QuorumClose,
 }
 
 impl TraceNote {
@@ -95,6 +101,8 @@ impl TraceNote {
             TraceNote::UnknownJob => "unknown_job",
             TraceNote::DecodeError => "decode_error",
             TraceNote::CapRejected => "cap_rejected",
+            TraceNote::LateAfterClose => "late_after_close",
+            TraceNote::QuorumClose => "quorum_close",
         }
     }
 }

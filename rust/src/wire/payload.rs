@@ -66,29 +66,58 @@ pub struct JobSpec {
     /// byte (every pre-shard encoder) decodes as the single-server plan,
     /// keeping old and new peers wire-compatible at n_shards = 1.
     pub shard: ShardPlan,
+    /// Quorum extension (PROTOCOL.md §11): the minimum number of
+    /// complete clients `Q` after which the server may close a phase at
+    /// its deadline instead of waiting for all N. `0` means legacy
+    /// all-N rounds — and encodes as the legacy 12-byte payload, so a
+    /// quorum-disabled deployment stays bit-identical on the wire.
+    pub quorum: u16,
 }
 
 impl JobSpec {
-    /// Wire size of an encoded spec (the `Join` payload).
+    /// Wire size of a legacy (quorum-disabled) encoded spec.
     pub const ENCODED_LEN: usize = 12;
+    /// Wire size of a quorum-extended encoded spec (§11): the legacy 12
+    /// bytes plus the little-endian `quorum` field at bytes 12..14.
+    pub const ENCODED_LEN_QUORUM: usize = 14;
 
-    /// Serialise to the fixed 12-byte `Join` payload.
-    pub fn encode(&self) -> [u8; Self::ENCODED_LEN] {
-        let mut out = [0u8; Self::ENCODED_LEN];
+    /// Serialise to the `Join` payload: 12 bytes when `quorum == 0`
+    /// (bit-identical to every pre-quorum encoder), 14 otherwise.
+    pub fn encode(&self) -> Vec<u8> {
+        let len =
+            if self.quorum == 0 { Self::ENCODED_LEN } else { Self::ENCODED_LEN_QUORUM };
+        let mut out = vec![0u8; len];
         out[0..4].copy_from_slice(&self.d.to_le_bytes());
         out[4..6].copy_from_slice(&self.n_clients.to_le_bytes());
         out[6..8].copy_from_slice(&self.threshold_a.to_le_bytes());
         out[8..10].copy_from_slice(&self.payload_budget.to_le_bytes());
         out[10] = self.shard.n_shards;
         out[11] = self.shard.shard_id;
+        if self.quorum != 0 {
+            out[12..14].copy_from_slice(&self.quorum.to_le_bytes());
+        }
         out
     }
 
-    /// Parse and validate a `Join` payload.
+    /// Parse and validate a `Join` payload (12- or 14-byte form).
     pub fn decode(payload: &[u8]) -> Result<Self, WireError> {
-        if payload.len() != Self::ENCODED_LEN {
-            return Err(WireError::BadPayload("job spec must be 12 bytes"));
+        if payload.len() != Self::ENCODED_LEN && payload.len() != Self::ENCODED_LEN_QUORUM {
+            return Err(WireError::BadPayload("job spec must be 12 or 14 bytes"));
         }
+        // Backward-compatible quorum decode, mirroring the shard plane:
+        // a 12-byte payload is a pre-quorum encoder and means Q = 0
+        // (all-N rounds). A 14-byte payload carrying quorum = 0 is
+        // malformed — the canonical zero form is the 12-byte one, and
+        // accepting both would break the decode→encode round-trip.
+        let quorum = if payload.len() == Self::ENCODED_LEN {
+            0
+        } else {
+            let q = u16::from_le_bytes(payload[12..14].try_into().unwrap());
+            if q == 0 {
+                return Err(WireError::BadPayload("extended spec with quorum = 0"));
+            }
+            q
+        };
         // Backward-compatible shard decode: encoders predating the shard
         // extension left bytes 10..12 zeroed, which means "unsharded".
         // Only the all-zero form is grandfathered — a zero shard count
@@ -109,6 +138,7 @@ impl JobSpec {
             threshold_a: u16::from_le_bytes(payload[6..8].try_into().unwrap()),
             payload_budget: u16::from_le_bytes(payload[8..10].try_into().unwrap()),
             shard,
+            quorum,
         };
         spec.validate()?;
         Ok(spec)
@@ -127,6 +157,9 @@ impl JobSpec {
         }
         if self.payload_budget < 4 || self.payload_budget % 4 != 0 {
             return Err(WireError::BadPayload("payload_budget must be a positive multiple of 4"));
+        }
+        if self.quorum > self.n_clients {
+            return Err(WireError::BadPayload("quorum must be in [0, N]"));
         }
         self.shard.validate()
     }
@@ -307,6 +340,7 @@ mod tests {
             threshold_a: 3,
             payload_budget: 256,
             shard: ShardPlan::single(),
+            quorum: 0,
         };
         assert_eq!(JobSpec::decode(&spec.encode()).unwrap(), spec);
         let bad = JobSpec { threshold_a: 9, ..spec };
@@ -317,6 +351,38 @@ mod tests {
     }
 
     #[test]
+    fn quorum_roundtrip_and_backward_compat() {
+        let legacy = JobSpec {
+            d: 512,
+            n_clients: 8,
+            threshold_a: 2,
+            payload_budget: 16,
+            shard: ShardPlan::single(),
+            quorum: 0,
+        };
+        // Q = 0 encodes to the legacy 12-byte form — bit-identical to a
+        // pre-quorum encoder.
+        assert_eq!(legacy.encode().len(), JobSpec::ENCODED_LEN);
+        assert_eq!(JobSpec::decode(&legacy.encode()).unwrap(), legacy);
+        // Q > 0 takes the 14-byte extended form and round-trips.
+        let quorate = JobSpec { quorum: 5, ..legacy };
+        assert_eq!(quorate.encode().len(), JobSpec::ENCODED_LEN_QUORUM);
+        assert_eq!(JobSpec::decode(&quorate.encode()).unwrap(), quorate);
+        // Quorum must not exceed N.
+        let bad = JobSpec { quorum: 9, ..legacy };
+        assert!(bad.validate().is_err());
+        assert!(JobSpec::decode(&bad.encode()).is_err());
+        // A 14-byte payload claiming quorum = 0 is malformed: the
+        // canonical Q = 0 form is the 12-byte one.
+        let mut mangled = quorate.encode();
+        mangled[12] = 0;
+        mangled[13] = 0;
+        assert!(JobSpec::decode(&mangled).is_err());
+        // Truncated extended form (13 bytes) is rejected.
+        assert!(JobSpec::decode(&quorate.encode()[..13]).is_err());
+    }
+
+    #[test]
     fn shard_plan_roundtrip_and_backward_compat() {
         let spec = JobSpec {
             d: 512,
@@ -324,6 +390,7 @@ mod tests {
             threshold_a: 2,
             payload_budget: 16,
             shard: ShardPlan { n_shards: 4, shard_id: 3 },
+            quorum: 0,
         };
         assert_eq!(JobSpec::decode(&spec.encode()).unwrap(), spec);
         // A pre-shard encoder leaves bytes 10..12 zeroed — that must
@@ -356,6 +423,7 @@ mod tests {
             threshold_a: 2,
             payload_budget: 8,
             shard: ShardPlan::single(),
+            quorum: 0,
         };
         assert_eq!(spec.vote_block_bits(), 64);
         assert_eq!(spec.vote_n_blocks(), 2); // 64 + 36 bits

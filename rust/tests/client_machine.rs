@@ -30,6 +30,25 @@ fn mk_core(d: usize, payload_budget: usize, max_retries: usize) -> ClientCore {
         timeout: TIMEOUT,
         max_retries,
         shard: ShardPlan::single(),
+        quorum: 0,
+    })
+}
+
+/// A core for a quorum job (PROTOCOL §11): same endpoint, but timeouts
+/// with a partially-assembled wanted broadcast re-sync instead of
+/// retransmitting.
+fn mk_quorum_core(d: usize, payload_budget: usize, max_retries: usize, quorum: u16) -> ClientCore {
+    ClientCore::new(CoreConfig {
+        job: JOB,
+        client_id: 0,
+        n_clients: 2,
+        d,
+        threshold_a: 1,
+        payload_budget,
+        timeout: TIMEOUT,
+        max_retries,
+        shard: ShardPlan::single(),
+        quorum,
     })
 }
 
@@ -340,6 +359,115 @@ fn empty_consensus_round_completes_without_an_aggregate_wait() {
         Some(Progress::AggregateReady { round, lanes }) => {
             assert_eq!(round, 1);
             assert!(lanes.is_empty());
+        }
+        other => panic!("expected AggregateReady, got {other:?}"),
+    }
+}
+
+#[test]
+fn quorum_timeout_with_partial_broadcast_resyncs_instead_of_retransmitting() {
+    // PROTOCOL §11: on a quorum job, a timeout while the wanted
+    // broadcast has already started arriving proves the phase closed
+    // without us — the round went on. Retransmitting the upload would
+    // only feed the server's late-after-close counter, so the core
+    // sends ONLY a Poll for the remaining chunks. A legacy all-N core
+    // in the identical state keeps the historical
+    // retransmit-everything behaviour, bit for bit.
+    let t0 = Instant::now();
+    let d = 512;
+    let budget = 8;
+    let gia = BitVec::from_indices(d, &(0..d).step_by(2).collect::<Vec<_>>());
+    let bcast = gia_frames(1, &gia, 2.0, budget);
+    assert!(bcast.len() >= 2, "test needs a multi-chunk GIA stream");
+
+    let run = |mut core: ClientCore| -> (Vec<WireKind>, u64, u64) {
+        joined(&mut core, t0);
+        let votes = BitVec::from_indices(d, &[0]);
+        core.start_vote(1, &votes, 1.0, t0);
+        // The first chunk of the re-served GIA lands, then silence: the
+        // quorum closed the phase and the rest of the broadcast was
+        // lost.
+        assert!(core.handle(&bcast[0], t0).progress.is_none());
+        let retx_before = core.stats.retransmissions;
+        let out = core.on_tick(t0 + TIMEOUT * 2);
+        assert!(out.progress.is_none(), "one timeout must not fail the wait");
+        (kinds(&out), core.stats.retransmissions - retx_before, core.stats.quorum_resyncs)
+    };
+
+    let (ks, retx, resyncs) = run(mk_quorum_core(d, budget, 3, 2));
+    assert_eq!(ks, [WireKind::Poll], "quorum re-sync sends the Poll and nothing else");
+    assert_eq!(retx, 0, "re-sync must not retransmit the vote upload");
+    assert_eq!(resyncs, 1);
+
+    let (ks, retx, resyncs) = run(mk_core(d, budget, 3));
+    assert_eq!(*ks.last().unwrap(), WireKind::Poll);
+    assert!(
+        ks.iter().filter(|k| **k == WireKind::Vote).count() > 0,
+        "legacy all-N timeout must keep retransmitting the upload"
+    );
+    assert_eq!(retx, ks.len() as u64 - 1, "every non-Poll frame is a retransmission");
+    assert_eq!(resyncs, 0, "quorum=0 must never take the re-sync path");
+}
+
+#[test]
+fn stale_rejoiner_catches_up_from_reserved_broadcasts() {
+    // The client-churn rejoin path, scripted at the core level: a fresh
+    // core (the corpse's replacement, same client id) joins a job whose
+    // round already quorum-closed without it. Its vote upload is dead
+    // weight server-side (late_after_close), but the re-served GIA
+    // broadcast completes the vote wait; the update wait then times out
+    // with a partial aggregate stream and must re-sync — Poll only —
+    // before the remaining chunks land the round.
+    let t0 = Instant::now();
+    let d = 64;
+    let budget = 8;
+    let mut core = mk_quorum_core(d, budget, 3, 2);
+    joined(&mut core, t0);
+
+    // Vote for the stale round; the server never counts it, but the
+    // GIA it already multicast (re-served from round history) arrives
+    // in full and completes the wait.
+    let votes = BitVec::from_indices(d, &[0, 9]);
+    core.start_vote(1, &votes, 1.0, t0);
+    let gia = BitVec::from_indices(d, &[4, 8, 12, 16, 20, 24]);
+    let mut got_gia = None;
+    for f in gia_frames(1, &gia, 2.0, budget) {
+        if let Some(p) = core.handle(&f, t0).progress {
+            got_gia = Some(p);
+        }
+    }
+    match got_gia {
+        Some(Progress::GiaReady { round, gia: got, .. }) => {
+            assert_eq!(round, 1);
+            assert_eq!(got, gia, "stale rejoiner must adopt the quorum's GIA");
+        }
+        other => panic!("expected GiaReady, got {other:?}"),
+    }
+
+    // Update phase: the closed round's aggregate stream arrives
+    // partially, the timeout re-syncs (no lane retransmission), and the
+    // remaining chunks complete the round.
+    let lanes: Vec<i32> = (0..gia.count_ones() as i32).collect();
+    core.start_update(1, &lanes, 1.0, t0);
+    let agg: Vec<i32> = lanes.iter().map(|x| 3 * x).collect();
+    let frames = agg_frames(1, &agg, budget);
+    assert!(frames.len() >= 2, "test needs a multi-chunk aggregate stream");
+    assert!(core.handle(&frames[0], t0).progress.is_none());
+    let retx_before = core.stats.retransmissions;
+    let out = core.on_tick(t0 + TIMEOUT * 2);
+    assert_eq!(kinds(&out), [WireKind::Poll], "re-sync polls for the rest of the sum");
+    assert_eq!(core.stats.retransmissions, retx_before);
+    assert_eq!(core.stats.quorum_resyncs, 1);
+    let mut done = None;
+    for f in &frames[1..] {
+        if let Some(p) = core.handle(f, t0 + TIMEOUT * 2).progress {
+            done = Some(p);
+        }
+    }
+    match done {
+        Some(Progress::AggregateReady { round, lanes: got }) => {
+            assert_eq!(round, 1);
+            assert_eq!(got, agg, "the rejoiner's aggregate is the quorum's, bit-exact");
         }
         other => panic!("expected AggregateReady, got {other:?}"),
     }

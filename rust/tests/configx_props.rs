@@ -20,8 +20,19 @@ fn pick_corpus(rng: &mut Rng) -> &'static str {
 }
 
 /// Keys the preset schema types as numbers (targets for type swaps).
-const NUMERIC_KEYS: [&str; 7] =
-    ["shards", "cores", "d", "rounds", "payload", "clients_per_job", "host_bytes"];
+const NUMERIC_KEYS: [&str; 11] = [
+    "shards",
+    "cores",
+    "d",
+    "rounds",
+    "payload",
+    "clients_per_job",
+    "host_bytes",
+    "quorum",
+    "phase_deadline_ms",
+    "kill_rate",
+    "rejoin_delay_ms",
+];
 
 /// Apply one random mutation to `text`, returning the mangled document.
 fn mutate(rng: &mut Rng, text: &str) -> String {

@@ -25,7 +25,7 @@ fn addr(port: u16) -> SocketAddr {
 }
 
 fn mkspec(d: u32, n_clients: u16, threshold_a: u16, payload_budget: u16) -> JobSpec {
-    JobSpec { d, n_clients, threshold_a, payload_budget, shard: ShardPlan::single() }
+    JobSpec { d, n_clients, threshold_a, payload_budget, shard: ShardPlan::single(), quorum: 0 }
 }
 
 fn profile(memory: usize) -> PsProfile {
@@ -185,7 +185,7 @@ fn empty_consensus_round_closes_at_phase_one() {
                 ]),
             },
             Step {
-                desc: "zero-lane update after the close is a duplicate",
+                desc: "zero-lane update after the close is a late straggler",
                 datagram: update_frame(9, 0, 0, &[], &spec, 0),
                 from: addr(4000),
                 expect: Expect::Silence,
@@ -201,7 +201,10 @@ fn empty_consensus_round_closes_at_phase_one() {
     assert_eq!(job.round_gia(0).unwrap().count_ones(), 0);
     assert_eq!(job.round_aggregate(0), Some(&[][..]), "round did not close");
     assert_eq!(stat(&stats.rounds_completed), 1);
-    assert_eq!(stat(&stats.duplicates), 1);
+    // Post-close data frames are stragglers, not duplicates — the
+    // distinction is what makes quorum-closed rounds diagnosable.
+    assert_eq!(stat(&stats.duplicates), 0);
+    assert_eq!(stat(&stats.late_after_close), 1);
 }
 
 #[test]
@@ -381,7 +384,7 @@ fn flight_recorder_captures_the_protocol_timeline_in_order() {
     feed_at(&mut job, t0, 0, &join_frame(9, 1, &spec), addr(4001));
     feed_at(&mut job, t0, 10, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
     feed_at(&mut job, t0, 30, &vote_frame(9, 1, 0, &v, &spec, 0), addr(4001));
-    // Retransmission after phase 1 closed: recorded as a duplicate.
+    // Retransmission after phase 1 closed: recorded as a late straggler.
     feed_at(&mut job, t0, 40, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
     feed_at(&mut job, t0, 50, &update_frame(9, 0, 0, &lanes, &spec, 0), addr(4000));
     feed_at(&mut job, t0, 70, &update_frame(9, 1, 0, &lanes, &spec, 0), addr(4001));
@@ -394,7 +397,7 @@ fn flight_recorder_captures_the_protocol_timeline_in_order() {
             TraceNote::JoinAccepted,
             TraceNote::Accepted,
             TraceNote::PhaseOneDone,
-            TraceNote::Duplicate,
+            TraceNote::LateAfterClose,
             TraceNote::Accepted,
             TraceNote::RoundDone,
             TraceNote::PollServed,
@@ -412,6 +415,107 @@ fn flight_recorder_captures_the_protocol_timeline_in_order() {
     assert_eq!(phase1.at_us, rec.stamp(t0 + Duration::from_millis(30)));
     let stamps: Vec<u64> = rec.events().iter().map(|e| e.at_us).collect();
     assert!(stamps.windows(2).all(|w| w[0] <= w[1]), "stamps monotone along the script");
+}
+
+#[test]
+fn quorum_round_closes_at_the_exact_deadline_and_counts_the_straggler() {
+    // PROTOCOL §11: N = 3, Q = 2. Two clients deliver both phases;
+    // client 2 never shows. Each phase must close exactly at
+    // `phase_deadline` (the armed timer says when, the tick multicast
+    // says what), the survivor aggregate must be bit-exact, and the
+    // dead client's post-close frames must move only
+    // `late_after_close` — recorded as QuorumClose/LateAfterClose
+    // verdicts on the flight recorder.
+    let spec = JobSpec { quorum: 2, ..mkspec(64, 3, 2, 8) };
+    let stats = Arc::new(ServerStats::default());
+    let rec = Arc::new(FlightRecorder::new(64));
+    let limits =
+        JobLimits { phase_deadline: Duration::from_millis(25), ..JobLimits::default() };
+    let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
+    job.attach_recorder(Arc::clone(&rec));
+    let t0 = Instant::now();
+    for c in 0..spec.n_clients {
+        feed_at(&mut job, t0, 0, &join_frame(9, c, &spec), addr(4000 + c));
+    }
+    let v = BitVec::from_indices(64, &[1, 2, 40]);
+    feed_at(&mut job, t0, 5, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
+    feed_at(&mut job, t0, 10, &vote_frame(9, 1, 0, &v, &spec, 0), addr(4001));
+    // Quorum met at +10 ms: the phase deadline arms at round creation
+    // (+5 ms), so the wakeup lands at exactly +30 ms.
+    let deadline = job.next_timer().expect("met quorum must arm the phase deadline");
+    assert_eq!(deadline, t0 + Duration::from_millis(5 + 25));
+    assert!(job.round_gia(0).is_none(), "phase 1 must stay open before the deadline");
+    let out = job.on_tick(deadline);
+    let kinds: Vec<WireKind> =
+        out.frames.iter().map(|(b, _)| decode_frame(b).unwrap().header.kind).collect();
+    assert!(kinds.contains(&WireKind::Gia), "deadline tick must multicast the GIA");
+    let gia = job.round_gia(0).expect("phase 1 closed").clone();
+    assert_eq!(gia, fediac::compress::deduce_gia(&[v.clone(), v.clone()], 2));
+    assert_eq!(stat(&stats.quorum_closes), 1);
+
+    // Phase 2: both survivors upload; the close again waits for the
+    // deadline armed by the first Update frame.
+    let k_s = gia.count_ones();
+    let lanes: Vec<i32> = (0..k_s as i32).map(|x| x + 1).collect();
+    let t1_ms = 40u64;
+    for c in 0..2u16 {
+        feed_at(&mut job, t0, t1_ms, &update_frame(9, c, 0, &lanes, &spec, 0), addr(4000 + c));
+    }
+    assert!(job.round_aggregate(0).is_none(), "phase 2 must stay open before the deadline");
+    let deadline2 = job.next_timer().expect("phase-2 quorum must arm its deadline");
+    assert_eq!(deadline2, t0 + Duration::from_millis(t1_ms + 25));
+    let out = job.on_tick(deadline2);
+    let kinds: Vec<WireKind> =
+        out.frames.iter().map(|(b, _)| decode_frame(b).unwrap().header.kind).collect();
+    assert!(kinds.contains(&WireKind::Aggregate), "deadline tick must multicast the sum");
+    let want: Vec<i32> = lanes.iter().map(|x| 2 * x).collect();
+    assert_eq!(job.round_aggregate(0), Some(&want[..]), "survivor sum must be bit-exact");
+    assert_eq!(stat(&stats.quorum_closes), 2);
+    assert_eq!(stat(&stats.rounds_completed), 1);
+
+    // The dead client finally speaks: a vote and an update for the
+    // closed round are counted and dropped — never folded, never
+    // reflected.
+    feed_at(&mut job, t0, 80, &vote_frame(9, 2, 0, &v, &spec, 0), addr(4002));
+    feed_at(&mut job, t0, 85, &update_frame(9, 2, 0, &lanes, &spec, 0), addr(4002));
+    assert_eq!(stat(&stats.late_after_close), 2);
+    assert_eq!(stat(&stats.duplicates), 0);
+    assert_eq!(job.round_aggregate(0), Some(&want[..]), "stragglers corrupted the sum");
+    let notes: Vec<TraceNote> = rec.events().iter().map(|e| e.note).collect();
+    assert_eq!(notes.iter().filter(|n| **n == TraceNote::QuorumClose).count(), 2);
+    assert_eq!(notes.iter().filter(|n| **n == TraceNote::LateAfterClose).count(), 2);
+}
+
+#[test]
+fn legacy_all_n_rounds_ignore_the_phase_deadline() {
+    // quorum = 0 (the pre-§11 wire): even with a phase deadline
+    // configured and long expired, an incomplete phase stays open —
+    // the round closes only when every client completes, exactly as
+    // before the extension. No quorum close, no forced GIA.
+    let spec = mkspec(64, 2, 2, 8);
+    let stats = Arc::new(ServerStats::default());
+    let limits =
+        JobLimits { phase_deadline: Duration::from_millis(10), ..JobLimits::default() };
+    let mut job = Job::with_limits(9, profile(1 << 20), limits, Arc::clone(&stats));
+    let t0 = Instant::now();
+    for c in 0..spec.n_clients {
+        feed_at(&mut job, t0, 0, &join_frame(9, c, &spec), addr(4000 + c));
+    }
+    let v = BitVec::from_indices(64, &[4, 9]);
+    feed_at(&mut job, t0, 1, &vote_frame(9, 0, 0, &v, &spec, 0), addr(4000));
+    // 1 of 2 votes in, deadline long gone: ticks must not force a close.
+    let out = job.on_tick(t0 + Duration::from_millis(500));
+    assert!(out.frames.is_empty(), "all-N round must never quorum-close");
+    assert!(job.round_gia(0).is_none(), "phase 1 closed without every client");
+    assert_eq!(stat(&stats.quorum_closes), 0);
+    // The last client completes the phase the legacy way.
+    feed_at(&mut job, t0, 600, &vote_frame(9, 1, 0, &v, &spec, 0), addr(4001));
+    assert_eq!(
+        job.round_gia(0),
+        Some(&fediac::compress::deduce_gia(&[v.clone(), v], 2)),
+        "all-N completion must close phase 1 exactly as before the extension"
+    );
+    assert_eq!(stat(&stats.quorum_closes), 0);
 }
 
 /// Recorded (job, round, kind, client, note) tuples, arrival order.
@@ -469,8 +573,12 @@ fn chaos_drop_dup_events_reach_the_recorder_deterministically() {
     assert!(duplicated > 0, "seed 42 must exercise the dup knob");
     let dup_notes =
         first.iter().filter(|(_, _, _, _, note)| *note == TraceNote::Duplicate).count();
+    let late_notes =
+        first.iter().filter(|(_, _, _, _, note)| *note == TraceNote::LateAfterClose).count();
     assert_eq!(
-        dup_notes as u64, duplicated,
-        "every lane duplicate must be recorded as a duplicate verdict"
+        (dup_notes + late_notes) as u64,
+        duplicated,
+        "every lane duplicate must surface as a duplicate (phase open) or a \
+         late-after-close straggler (phase closed) verdict"
     );
 }

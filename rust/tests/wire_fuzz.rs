@@ -41,6 +41,7 @@ fn corpus(rng: &mut Rng) -> Vec<Vec<u8>> {
         threshold_a: 3,
         payload_budget: 256,
         shard: ShardPlan::single(),
+        quorum: 0,
     };
 
     // Join + control kinds.

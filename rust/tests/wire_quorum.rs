@@ -1,0 +1,303 @@
+//! Quorum wire tests (PROTOCOL.md §11), the fault-plane acceptance
+//! criteria end to end on a real UDP socket:
+//!
+//! 1. A client that dies before a round cannot stall a quorum job past
+//!    its phase deadline — on any of the three I/O backends. Every
+//!    phase is force-closed by the deadline (never organically — the
+//!    dead client guarantees that), the surviving quorum's consensus
+//!    and aggregate are bit-exact against a quorum-aware reference
+//!    that folds votes, scale and lanes over the survivors only while
+//!    keeping the spec's full N in the quantisation scale, and the
+//!    round latency stays deadline-bound, far under idle reclamation
+//!    or the clients' retry budgets.
+//!
+//! 2. A `quorum = 0` deployment is bit-identical to the legacy all-N
+//!    protocol across all three backends, even with an absurdly short
+//!    phase deadline configured: legacy rounds never arm the deadline,
+//!    never quorum-close, and reproduce the all-N reference down to
+//!    delta and residual.
+
+use std::time::{Duration, Instant};
+
+use fediac::client::{protocol, ClientOptions, FediacClient, RoundOutcome};
+use fediac::compress::{self, deduce_gia};
+use fediac::server::{serve, IoBackend, JobLimits, ServeOptions};
+use fediac::util::{BitVec, Rng};
+
+const BACKENDS: [IoBackend; 3] =
+    [IoBackend::Threaded, IoBackend::Reactor, IoBackend::Fleet];
+
+/// Deterministic synthetic update for (seed, client, round) — the same
+/// recipe the chaos wire tests use.
+fn synthetic_update(seed: u64, d: usize, client: usize, round: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ (client as u64) << 16 ^ (round as u64) << 40);
+    (0..d).map(|_| (rng.gaussian() * 0.02) as f32).collect()
+}
+
+/// Quorum-aware pure reference: votes, the vote-frame max fold and the
+/// lane sums run over `contributors` (client id, update) only, but the
+/// quantisation scale keeps the *spec's* `n_clients` — survivors'
+/// contributions must land on the same grid the full fleet would have
+/// used. With `contributors` = everyone this reduces to the legacy
+/// all-N reference.
+fn quorum_reference(
+    contributors: &[(usize, Vec<f32>)],
+    seed: u64,
+    round: usize,
+    k: usize,
+    a: usize,
+    n_clients: usize,
+) -> (Vec<usize>, Vec<i32>, f32) {
+    let votes: Vec<BitVec> = contributors
+        .iter()
+        .map(|(c, u)| protocol::client_vote(u, k, seed, round, *c))
+        .collect();
+    let gia = deduce_gia(&votes, a);
+    let indices: Vec<usize> = gia.iter_ones().collect();
+    let m = contributors
+        .iter()
+        .map(|(_, u)| compress::max_abs(u))
+        .fold(f32::MIN_POSITIVE, f32::max);
+    let f = compress::scale_factor(12, n_clients, m);
+    let mask = gia.to_f32_mask();
+    let mut lanes = vec![0i32; indices.len()];
+    for (c, u) in contributors {
+        let (q, _) = protocol::client_quantize(u, &mask, f, seed, round, *c);
+        for (slot, &g) in indices.iter().enumerate() {
+            lanes[slot] += q[g];
+        }
+    }
+    (indices, lanes, m)
+}
+
+// ---- the chaos acceptance test: a dead client cannot stall the round ------
+
+#[test]
+fn dead_client_cannot_stall_a_quorum_round_past_its_deadline() {
+    // N = 3, Q = 2: clients 0 and 1 run three rounds; client 2 never
+    // even connects. Without the quorum plane every phase would wait
+    // on client 2 until the survivors exhausted their retry budgets.
+    const SURVIVORS: [usize; 2] = [0, 1];
+    const N: u16 = 3;
+    const Q: u16 = 2;
+    const ROUNDS: usize = 3;
+    let d = 600;
+    let seed = 77u64;
+    let k = protocol::votes_per_client(d, 0.05);
+    let deadline = Duration::from_millis(250);
+
+    for backend in BACKENDS {
+        let handle = serve(&ServeOptions {
+            io_backend: backend,
+            limits: JobLimits { phase_deadline: deadline, ..JobLimits::default() },
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let server = handle.local_addr();
+        let started = Instant::now();
+        let mut per_client: Vec<Option<Vec<RoundOutcome>>> = vec![None; SURVIVORS.len()];
+        std::thread::scope(|scope| {
+            for (slot, &client_id) in per_client.iter_mut().zip(&SURVIVORS) {
+                scope.spawn(move || {
+                    let mut opts =
+                        ClientOptions::new(server.to_string(), 801, client_id as u16, d, N);
+                    // a = 1 keeps the survivors' consensus non-empty for
+                    // any seed (the union of their votes).
+                    opts.threshold_a = 1;
+                    opts.k = k;
+                    opts.backend_seed = seed;
+                    opts.payload_budget = 64;
+                    // Longer than the phase deadline: the round must be
+                    // rescued by the server's forced close, not by
+                    // client retransmission.
+                    opts.timeout = Duration::from_millis(400);
+                    opts.max_retries = 200;
+                    opts.quorum = Q;
+                    let mut client = FediacClient::connect(opts).unwrap();
+                    *slot = Some(
+                        (1..=ROUNDS)
+                            .map(|round| {
+                                let update = synthetic_update(seed, d, client_id, round);
+                                client.run_round(round, &update).unwrap()
+                            })
+                            .collect(),
+                    );
+                });
+            }
+        });
+        let elapsed = started.elapsed();
+        // Liveness: three deadline-bound rounds (two 250 ms forced
+        // closes each) must land in seconds — nowhere near the 30 s
+        // idle-reclaim horizon or the clients' 200 × 400 ms retry
+        // budget a stalled phase would have burned through.
+        assert!(
+            elapsed < Duration::from_secs(15),
+            "{}: quorum rounds stalled ({elapsed:?} for {ROUNDS} rounds)",
+            backend.name()
+        );
+        let stats = handle.stats();
+        assert_eq!(
+            stats.rounds_completed as usize, ROUNDS,
+            "{}: not every round completed without client 2",
+            backend.name()
+        );
+        // The dead client makes organic closure impossible: both phases
+        // of every round must have been quorum closes.
+        assert_eq!(
+            stats.quorum_closes as usize,
+            2 * ROUNDS,
+            "{}: expected every phase to force-close at the deadline",
+            backend.name()
+        );
+        assert_eq!(
+            stats.idle_releases, 0,
+            "{}: a deadline-bound round sat idle long enough to be reclaimed",
+            backend.name()
+        );
+        handle.shutdown();
+
+        // Bit-exactness: both survivors decode the quorum reference —
+        // votes, scale fold and lanes over {0, 1}, spec N = 3.
+        let outs: Vec<Vec<RoundOutcome>> =
+            per_client.into_iter().map(|o| o.unwrap()).collect();
+        for round in 1..=ROUNDS {
+            let contributors: Vec<(usize, Vec<f32>)> = SURVIVORS
+                .iter()
+                .map(|&c| (c, synthetic_update(seed, d, c, round)))
+                .collect();
+            let (ref_idx, ref_lanes, ref_max) =
+                quorum_reference(&contributors, seed, round, k, 1, N as usize);
+            assert!(!ref_idx.is_empty(), "round {round}: degenerate reference");
+            for (out_rounds, &c) in outs.iter().zip(&SURVIVORS) {
+                let out = &out_rounds[round - 1];
+                assert_eq!(
+                    out.gia_indices, ref_idx,
+                    "{} survivor {c} round {round}: consensus diverged",
+                    backend.name()
+                );
+                assert_eq!(
+                    out.aggregate, ref_lanes,
+                    "{} survivor {c} round {round}: aggregate diverged",
+                    backend.name()
+                );
+                assert_eq!(
+                    out.global_max, ref_max,
+                    "{} survivor {c} round {round}: scale must fold over the \
+                     quorum's votes only",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+// ---- legacy equivalence: quorum = 0 is the pre-quorum protocol ------------
+
+#[test]
+fn quorum_zero_fleet_is_bit_identical_across_all_three_backends() {
+    const N: usize = 4;
+    const ROUNDS: usize = 2;
+    let d = 600;
+    let seed = 99u64;
+    let k = protocol::votes_per_client(d, 0.05);
+
+    let mut per_backend: Vec<Vec<Vec<RoundOutcome>>> = Vec::new();
+    for backend in BACKENDS {
+        let handle = serve(&ServeOptions {
+            io_backend: backend,
+            // A 1 ms deadline that must never fire: quorum = 0 rounds
+            // only ever close organically.
+            limits: JobLimits {
+                phase_deadline: Duration::from_millis(1),
+                ..JobLimits::default()
+            },
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let server = handle.local_addr();
+        let mut per_client: Vec<Option<Vec<RoundOutcome>>> = vec![None; N];
+        std::thread::scope(|scope| {
+            for (client_id, slot) in per_client.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    let mut opts = ClientOptions::new(
+                        server.to_string(),
+                        802,
+                        client_id as u16,
+                        d,
+                        N as u16,
+                    );
+                    opts.threshold_a = 2;
+                    opts.k = k;
+                    opts.backend_seed = seed;
+                    opts.payload_budget = 64;
+                    opts.timeout = Duration::from_millis(300);
+                    opts.max_retries = 200;
+                    // `quorum` stays at its default 0: the spec encodes
+                    // as the legacy 12-byte form.
+                    let mut client = FediacClient::connect(opts).unwrap();
+                    *slot = Some(
+                        (1..=ROUNDS)
+                            .map(|round| {
+                                let update = synthetic_update(seed, d, client_id, round);
+                                client.run_round(round, &update).unwrap()
+                            })
+                            .collect(),
+                    );
+                });
+            }
+        });
+        let stats = handle.stats();
+        assert_eq!(
+            stats.rounds_completed as usize, ROUNDS,
+            "{}: legacy rounds did not complete",
+            backend.name()
+        );
+        assert_eq!(
+            stats.quorum_closes, 0,
+            "{}: a quorum close fired on a quorum = 0 job",
+            backend.name()
+        );
+        handle.shutdown();
+        per_backend.push(per_client.into_iter().map(|o| o.unwrap()).collect());
+    }
+
+    // Every backend, every client, every round matches the all-N
+    // reference (the quorum reference over everyone)…
+    for round in 1..=ROUNDS {
+        let contributors: Vec<(usize, Vec<f32>)> =
+            (0..N).map(|c| (c, synthetic_update(seed, d, c, round))).collect();
+        let (ref_idx, ref_lanes, ref_max) =
+            quorum_reference(&contributors, seed, round, k, 2, N);
+        for (outcomes, backend) in per_backend.iter().zip(BACKENDS) {
+            for (c, rounds) in outcomes.iter().enumerate() {
+                let out = &rounds[round - 1];
+                assert_eq!(
+                    out.gia_indices,
+                    ref_idx,
+                    "{} client {c} round {round}: consensus diverged from all-N",
+                    backend.name()
+                );
+                assert_eq!(
+                    out.aggregate,
+                    ref_lanes,
+                    "{} client {c} round {round}: aggregate diverged from all-N",
+                    backend.name()
+                );
+                assert_eq!(out.global_max, ref_max, "{} client {c}", backend.name());
+            }
+        }
+    }
+    // …and the backends are bit-identical to each other, down to the
+    // applied delta and carried residual.
+    for pair in per_backend.windows(2) {
+        for (a, b) in pair[0].iter().zip(&pair[1]) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.gia, y.gia, "quorum = 0: backend GIAs differ");
+                assert_eq!(x.aggregate, y.aggregate, "quorum = 0: aggregates differ");
+                assert_eq!(x.global_max, y.global_max);
+                assert_eq!(x.delta, y.delta, "quorum = 0: deltas differ");
+                assert_eq!(x.residual, y.residual, "quorum = 0: residuals differ");
+            }
+        }
+    }
+}

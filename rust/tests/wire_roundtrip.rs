@@ -153,6 +153,7 @@ fn job_spec_survives_join_frame() {
         threshold_a: 3,
         payload_budget: 1408,
         shard: ShardPlan::single(),
+        quorum: 0,
     };
     let buf = encode_frame(&Header::control(WireKind::Join, 9, 4, 0, 0), &spec.encode());
     let frame = decode_frame(&buf).unwrap();
